@@ -1,0 +1,107 @@
+//! Micro-benchmarks of the query hot path stages (perf-pass baseline):
+//! dot kernel, LUT build, ADC scan, dedup, centroid scoring (CPU + PJRT),
+//! full single-query search.
+//!
+//! Run with: `cargo bench --bench bench_hotpath`
+
+use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+use soar_ann::coordinator::DedupSet;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::linalg::{dot, MatrixF32, Rng};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::bench::{black_box, Bencher};
+
+fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
+    let mut rng = Rng::new(seed);
+    let mut m = MatrixF32::zeros(n, d);
+    for i in 0..n {
+        rng.fill_gaussian(m.row_mut(i));
+    }
+    m
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    // -- linalg dot at index dims --------------------------------------
+    for d in [64usize, 128] {
+        let x = random(2, d, 1);
+        b.run(&format!("dot/d{d}"), || {
+            black_box(dot(black_box(x.row(0)), black_box(x.row(1))));
+        });
+    }
+
+    // -- index fixtures --------------------------------------------------
+    let ds = SyntheticConfig::glove_like(20_000, 64, 64, 42).generate();
+    let engine = Engine::cpu();
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let index = build_index(&engine, &ds.data, &cfg).expect("build");
+    let q = ds.queries.row(0).to_vec();
+
+    // -- PQ LUT build + ADC scan ----------------------------------------
+    let mut lut = Vec::new();
+    b.run("pq/build_lut/d64", || {
+        index.pq.build_lut(black_box(&q), &mut lut);
+    });
+    index.pq.build_lut(&q, &mut lut);
+    let list = index
+        .ivf
+        .postings
+        .iter()
+        .max_by_key(|p| p.len())
+        .expect("postings");
+    let cb = index.pq.code_bytes();
+    b.run(&format!("pq/adc_scan/{}pts", list.len()), || {
+        let mut acc = 0.0f32;
+        for i in 0..list.len() {
+            acc += index.pq.adc_score(&lut, list.code(i, cb));
+        }
+        black_box(acc);
+    });
+
+    // -- dedup ------------------------------------------------------------
+    let mut dedup = DedupSet::new(index.n);
+    b.run("dedup/insert_1k", || {
+        dedup.reset();
+        for i in 0..1000u32 {
+            black_box(dedup.insert(i));
+        }
+    });
+
+    // -- centroid scoring: CPU fallback vs PJRT ---------------------------
+    let queries64 = ds.queries.gather_rows(&(0..64).collect::<Vec<_>>());
+    b.run("centroid_scores/cpu/b64_c50_d64", || {
+        black_box(
+            engine
+                .centroid_scores(black_box(&queries64), &index.ivf.centroids)
+                .unwrap(),
+        );
+    });
+    let pjrt = Engine::auto(&default_artifact_dir());
+    if pjrt.backend_name() == "pjrt" {
+        // Bucket-sized problem so the artifact path is exercised.
+        let qb = random(64, 128, 3);
+        let cb_m = random(1024, 128, 4);
+        b.run("centroid_topk/pjrt/b64_c1024_d128", || {
+            black_box(pjrt.centroid_topk(black_box(&qb), &cb_m, 64).unwrap());
+        });
+        let cpu = Engine::cpu();
+        b.run("centroid_topk/cpu/b64_c1024_d128", || {
+            black_box(cpu.centroid_topk(black_box(&qb), &cb_m, 64).unwrap());
+        });
+    }
+
+    // -- full single-query search ----------------------------------------
+    let searcher = Searcher::new(&index, &engine);
+    let mut scratch = SearchScratch::new(&index);
+    for (tag, params) in [
+        ("t4", SearchParams { k: 10, top_t: 4, rerank_budget: 100 }),
+        ("t8", SearchParams { k: 10, top_t: 8, rerank_budget: 200 }),
+        ("t16", SearchParams { k: 10, top_t: 16, rerank_budget: 400 }),
+    ] {
+        b.run(&format!("search/single/{tag}"), || {
+            black_box(searcher.search(black_box(&q), &params, &mut scratch));
+        });
+    }
+}

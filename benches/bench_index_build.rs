@@ -1,0 +1,51 @@
+//! Indexing-cost bench (§3.5: SOAR "maintain[s] fast indexing times"):
+//! build throughput per spill mode, plus the SOAR assignment stage alone.
+//!
+//! Run with: `cargo bench --bench bench_index_build`
+
+use soar_ann::config::{IndexConfig, SpillMode};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, soar};
+use soar_ann::runtime::Engine;
+use soar_ann::util::bench::{black_box, Bencher};
+
+fn main() {
+    let n = 10_000;
+    let ds = SyntheticConfig::glove_like(n, 64, 16, 42).generate();
+    let engine = Engine::cpu();
+    let b = Bencher::with_budget(
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_millis(1500),
+    );
+
+    for (name, spill) in [
+        ("none", SpillMode::None),
+        ("nearest", SpillMode::Nearest),
+        ("soar_l1", SpillMode::Soar { lambda: 1.0 }),
+    ] {
+        let cfg = IndexConfig::for_dataset(n, spill);
+        b.run(&format!("build_index/{name}/n10k"), || {
+            black_box(build_index(&engine, &ds.data, &cfg).expect("build"));
+        });
+    }
+
+    // The marginal cost of the SOAR assignment stage alone.
+    let base = build_index(&engine, &ds.data, &IndexConfig::for_dataset(n, SpillMode::None))
+        .expect("build");
+    let primary: Vec<u32> = base.assignments.iter().map(|a| a[0]).collect();
+    for lam in [0.5f32, 1.0, 2.0] {
+        b.run(&format!("soar_assign_stage/lambda{lam}/n10k"), || {
+            black_box(
+                soar::assign_spills(
+                    &engine,
+                    &ds.data,
+                    &base.ivf.centroids,
+                    &primary,
+                    SpillMode::Soar { lambda: lam },
+                    1,
+                )
+                .expect("assign"),
+            );
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! Table 2 / Fig 6 regeneration bench: points-scanned-at-recall for the
+//! three index types, plus the KMR computation cost itself.
+//!
+//! Run with: `cargo bench --bench bench_kmr`
+
+use soar_ann::config::{IndexConfig, SpillMode};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::eval::plot::render_table;
+use soar_ann::index::{build_index, kmr::compute_kmr};
+use soar_ann::runtime::Engine;
+use soar_ann::util::bench::{black_box, Bencher};
+
+fn main() {
+    let n = 20_000;
+    let ds = SyntheticConfig::glove_like(n, 64, 128, 42).generate();
+    let engine = Engine::cpu();
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 100);
+    let b = Bencher::default();
+
+    let mut rows = Vec::new();
+    for (name, spill) in [
+        ("No Spilling", SpillMode::None),
+        ("Spilling, No SOAR", SpillMode::Nearest),
+        ("SOAR", SpillMode::Soar { lambda: 1.0 }),
+    ] {
+        let index = build_index(&engine, &ds.data, &IndexConfig::for_dataset(n, spill))
+            .expect("build");
+        let kmr = compute_kmr(&index, &ds.queries, &gt);
+        let mut row = vec![name.to_string()];
+        for target in [0.80, 0.85, 0.90, 0.95] {
+            row.push(kmr.points_needed(target).map_or("-".into(), |v| v.to_string()));
+        }
+        rows.push(row);
+        b.run(&format!("compute_kmr/{}", name.replace(' ', "_")), || {
+            black_box(compute_kmr(&index, &ds.queries, &gt));
+        });
+    }
+    println!("\nTable 2 (points scanned to reach recall target, R@100):");
+    println!(
+        "{}",
+        render_table(&["Index", "80%", "85%", "90%", "95%"], &rows)
+    );
+}

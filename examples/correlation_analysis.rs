@@ -1,0 +1,21 @@
+//! §3 / §5.2 analysis reproduction: Figs 1, 2, 4, 7, 8 — the residual
+//! angle statistics motivating the SOAR loss.
+//!
+//! Run with: `cargo run --release --example correlation_analysis`
+
+use soar_ann::eval::experiments::{fig1, fig2, fig4, fig7, fig8, ExpConfig};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::cli::Args;
+
+fn main() -> soar_ann::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["n", "dim", "queries", "lambda", "quick"])?;
+    let mut cfg = if args.get_bool("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.lambda = args.get_f32("lambda", cfg.lambda)?;
+    let engine = Engine::auto(&default_artifact_dir());
+    fig1(&cfg, &engine)?;
+    fig2(&cfg, &engine)?;
+    fig4(&cfg, &engine)?;
+    fig7(&cfg, &engine)?;
+    fig8(&cfg, &engine)
+}

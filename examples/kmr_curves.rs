@@ -1,0 +1,21 @@
+//! Fig 6 / Table 2 reproduction: KMR curves for the three index types
+//! (no spilling, naive spilling, SOAR).
+//!
+//! Run with: `cargo run --release --example kmr_curves [-- --n 50000]`
+
+use soar_ann::eval::experiments::{kmr_experiment, ExpConfig};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::cli::Args;
+
+fn main() -> soar_ann::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["n", "dim", "queries", "k", "lambda", "quick"])?;
+    let mut cfg = if args.get_bool("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.dim = args.get_usize("dim", cfg.dim)?;
+    cfg.num_queries = args.get_usize("queries", cfg.num_queries)?;
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.lambda = args.get_f32("lambda", cfg.lambda)?;
+    let engine = Engine::auto(&default_artifact_dir());
+    println!("engine backend: {}", engine.backend_name());
+    kmr_experiment(&cfg, &engine)
+}

@@ -1,0 +1,16 @@
+//! Fig 9 reproduction: the λ tradeoff — VQ distortion E‖r'‖² rises with λ
+//! while the quantized-score-error correlation ρ falls.
+//!
+//! Run with: `cargo run --release --example lambda_sweep`
+
+use soar_ann::eval::experiments::{fig9, ExpConfig};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::cli::Args;
+
+fn main() -> soar_ann::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["n", "dim", "quick"])?;
+    let mut cfg = if args.get_bool("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    cfg.n = args.get_usize("n", cfg.n)?;
+    let engine = Engine::auto(&default_artifact_dir());
+    fig9(&cfg, &engine)
+}

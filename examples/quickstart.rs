@@ -1,0 +1,56 @@
+//! Quickstart: build a SOAR index over a synthetic corpus and search it.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+
+fn main() -> soar_ann::Result<()> {
+    // 1. A 10k-point Glove-like synthetic corpus with 100 queries.
+    let ds = SyntheticConfig::glove_like(10_000, 64, 100, 42).generate();
+    println!("dataset: {} ({} x {})", ds.name, ds.n(), ds.dim());
+
+    // 2. The engine: PJRT artifacts when built (make artifacts), else the
+    //    identical CPU fallback.
+    let engine = Engine::auto(&default_artifact_dir());
+    println!("engine backend: {}", engine.backend_name());
+
+    // 3. Build a SOAR index (~400 points/partition, λ = 1).
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let index = build_index(&engine, &ds.data, &cfg)?;
+    println!(
+        "index: {} partitions, {} posting entries",
+        index.num_partitions(),
+        index.ivf.total_postings()
+    );
+
+    // 4. Search.
+    let params = SearchParams { k: 10, top_t: 6, rerank_budget: 200 };
+    let searcher = Searcher::new(&index, &engine);
+    let mut scratch = SearchScratch::new(&index);
+    let (hits, stats) = searcher.search(ds.queries.row(0), &params, &mut scratch);
+    println!("query 0 neighbors:");
+    for h in &hits {
+        println!("  id {:>6}  score {:.4}", h.id, h.score);
+    }
+    println!(
+        "scanned {} of {} postings across {} partitions ({} spilled duplicates skipped)",
+        stats.points_scanned,
+        index.ivf.total_postings(),
+        stats.partitions_probed,
+        stats.duplicates_skipped
+    );
+
+    // 5. Verify against exact ground truth.
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let mut results = Vec::new();
+    for qi in 0..ds.num_queries() {
+        let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+        results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+    }
+    println!("recall@10 over {} queries: {:.3}", ds.num_queries(), gt.mean_recall(&results));
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Fig 10 reproduction: SOAR's advantage grows with dataset size and
+//! recall target (fixed 400 points/partition across sizes).
+//!
+//! Run with: `cargo run --release --example scaling_law [-- --quick]`
+
+use soar_ann::eval::experiments::{fig10, ExpConfig};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::cli::Args;
+
+fn main() -> soar_ann::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["dim", "queries", "quick"])?;
+    let mut cfg = if args.get_bool("quick") { ExpConfig::quick() } else { ExpConfig::default() };
+    cfg.dim = args.get_usize("dim", cfg.dim)?;
+    let engine = Engine::auto(&default_artifact_dir());
+    fig10(&cfg, &engine)
+}

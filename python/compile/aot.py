@@ -1,0 +1,75 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text — NOT ``lowered.compile()`` output or a serialized HloModuleProto —
+is the interchange format. jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the ``xla`` crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the HLO text parser on the Rust side reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  * ``<name>.hlo.txt``   — one HLO module per entry point / shape bucket.
+  * ``manifest.json``    — machine-readable index the Rust runtime uses to
+    pick the right artifact for a given request shape.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(fn, example_args):
+    """jit → lower → stablehlo → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="artifact output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "version": 1, "entries": []}
+    for name, fn, example_args, meta in model.export_specs():
+        text = to_hlo_text(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update({
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+        })
+        manifest["entries"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

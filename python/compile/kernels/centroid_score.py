@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: batched query→centroid MIPS scoring (Q @ Cᵀ).
+
+This is the top of the SOAR query hot path: each incoming query batch is
+scored against every VQ partition center, and the top-t partitions are then
+searched. On the paper's CPU testbed this is ScaNN's AVX-512 cache-blocked
+matmul; on TPU we re-express it for the MXU:
+
+* the grid tiles the output ``[B, c]`` into ``(block_b, block_c)`` MXU-sized
+  blocks;
+* each grid step streams one ``[block_c, d]`` tile of the codebook from HBM
+  into VMEM (``BlockSpec`` below expresses that HBM↔VMEM schedule — the
+  analog of the CPU implementation's L2-cache blocking);
+* the contraction runs over the full ``d`` (≤ 512 in all our shape buckets,
+  so a query tile + codebook tile + output tile fit comfortably in VMEM;
+  see DESIGN.md §8 for the footprint arithmetic).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO. Correctness vs :func:`ref.centroid_score_ref` is enforced by
+pytest; TPU performance is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-friendly block shape. f32 VMEM footprint per grid step at
+# d=512: (128 + 256) * 512 * 4B + 128*256*4B ≈ 0.9 MB — leaves plenty of
+# VMEM for double-buffering the streamed codebook tiles.
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_C = 256
+
+
+def _score_kernel(q_ref, c_ref, o_ref):
+    """One (block_b, block_c) output tile: o = q @ cᵀ.
+
+    ``preferred_element_type=float32`` keeps the MXU accumulation in f32
+    even if inputs are later switched to bf16.
+    """
+    o_ref[...] = jax.lax.dot_general(
+        q_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c"))
+def centroid_score(q, c, *, block_b=DEFAULT_BLOCK_B, block_c=DEFAULT_BLOCK_C):
+    """Scores ``[B, c] = q @ cᵀ`` via the tiled Pallas kernel.
+
+    Shapes must tile exactly: ``B % block_b == 0`` and ``c % block_c == 0``
+    (the AOT shape buckets guarantee this; the Rust caller zero-pads).
+    """
+    bsz, d = q.shape
+    csz, d2 = c.shape
+    assert d == d2, f"dim mismatch: {d} vs {d2}"
+    bb = min(block_b, bsz)
+    bc = min(block_c, csz)
+    assert bsz % bb == 0 and csz % bc == 0, (
+        f"shapes ({bsz},{csz}) must tile by ({bb},{bc})"
+    )
+    grid = (bsz // bb, csz // bc)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            # Query tile: varies along grid axis 0 only.
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            # Codebook tile streamed from HBM: varies along grid axis 1.
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, csz), jnp.float32),
+        interpret=True,
+    )(q, c)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: batched PQ lookup-table construction.
+
+The ADC scan scores candidates as sums of per-subspace table lookups; the
+table for a query q is ``lut[j, c] = ⟨q[j·s:(j+1)·s], codebook[j, c]⟩``
+over m subspaces × 16 centers. For a query *batch* this is a block-diagonal
+batched matmul — ``einsum('bjs,jcs->bjc')`` — which maps cleanly onto the
+MXU when expressed per-subspace-block.
+
+The kernel tiles over the query batch; each grid step holds the full
+codebook tensor (m × 16 × s ≤ 64·16·2 f32 = 8 KB — VMEM-trivial) and one
+query tile, emitting the [bb, m, 16] LUT slab.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import PQ_CENTERS
+
+DEFAULT_BLOCK_B = 128
+
+
+def _lut_kernel(q_ref, cb_ref, o_ref):
+    """One query tile: lut[b, j, c] = Σ_s q[b, j, s]·cb[j, c, s]."""
+    bb = q_ref.shape[0]
+    m, centers, s = cb_ref.shape
+    q = q_ref[...].reshape(bb, m, s)
+    cb = cb_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        q,
+        cb,
+        # contract over s; batch over the subspace dim j
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)  # batched dot yields [j, b, c] → [b, j, c]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def pq_lut(q, codebooks, *, block_b=DEFAULT_BLOCK_B):
+    """LUT slab ``[B, m, 16]`` for a query batch.
+
+    Args:
+      q: ``[B, m*s]`` queries (dims grouped by subspace; ragged tails are
+         the caller's responsibility — pad to a multiple of s).
+      codebooks: ``[m, 16, s]`` per-subspace PQ centers.
+    """
+    bsz, d = q.shape
+    m, centers, s = codebooks.shape
+    assert centers == PQ_CENTERS, f"expected {PQ_CENTERS} centers, got {centers}"
+    assert d == m * s, f"query dim {d} != m*s = {m * s}"
+    bb = min(block_b, bsz)
+    assert bsz % bb == 0, f"batch {bsz} must tile by {bb}"
+    return pl.pallas_call(
+        _lut_kernel,
+        grid=(bsz // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, centers, s), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, m, centers), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, centers), jnp.float32),
+        interpret=True,
+    )(q, codebooks)

@@ -1,0 +1,80 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations of the two dense hot-spots of a
+SOAR index:
+
+* ``centroid_score_ref``   — batched query→centroid MIPS scoring Q @ Cᵀ.
+* ``soar_assign_ref``      — the Theorem 3.1 SOAR assignment loss
+                             ‖x−c‖² + λ‖proj_r (x−c)‖² for every centroid.
+
+The Pallas kernels in :mod:`centroid_score` and :mod:`soar_assign` must match
+these to float tolerance; pytest (``python/tests``) enforces that with
+hypothesis sweeps over shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+#: Centers per PQ subspace (4-bit codes; §3.5).
+PQ_CENTERS = 16
+
+
+def centroid_score_ref(q, c):
+    """MIPS scores of each query against each centroid.
+
+    Args:
+      q: ``[B, d]`` query batch.
+      c: ``[c, d]`` codebook.
+
+    Returns:
+      ``[B, c]`` inner-product scores.
+    """
+    return q @ c.T
+
+
+def soar_assign_ref(x, r_hat, c, lam):
+    """SOAR spilled-assignment loss for each (datapoint, centroid) pair.
+
+    Implements Theorem 3.1 of the paper:
+
+        L(r', r) ∝ ‖r'‖² + λ‖proj_r r'‖²,   r' = x − c.
+
+    ``r_hat`` is the *unit-normalized* primary residual r/‖r‖; rows whose
+    primary residual was exactly zero should be passed as zero vectors, which
+    gracefully degrades the loss to plain squared Euclidean distance.
+
+    Args:
+      x:     ``[B, d]`` datapoints to spill.
+      r_hat: ``[B, d]`` unit-normalized primary residuals.
+      c:     ``[c, d]`` codebook.
+      lam:   scalar λ ≥ 0 (python float or 0-d array).
+
+    Returns:
+      ``[B, c]`` loss values; argmin along axis 1 (excluding the primary
+      partition) is the SOAR spilled assignment.
+    """
+    # ‖x−c‖² expanded: ‖x‖² − 2⟨x,c⟩ + ‖c‖²
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)          # [B,1]
+    c_sq = jnp.sum(c * c, axis=1)[None, :]                # [1,c]
+    xc = x @ c.T                                          # [B,c]
+    l2 = x_sq - 2.0 * xc + c_sq
+    # ‖proj_r r'‖² = ⟨r̂, x−c⟩² = (⟨r̂,x⟩ − ⟨r̂,c⟩)²
+    rx = jnp.sum(r_hat * x, axis=1, keepdims=True)        # [B,1]
+    rc = r_hat @ c.T                                      # [B,c]
+    par = rx - rc
+    return l2 + lam * par * par
+
+
+def pq_lut_ref(q, codebooks):
+    """Oracle for the PQ LUT kernel: lut[b, j, c] = ⟨q_sub, center⟩.
+
+    Args:
+      q:         ``[B, m*s]`` queries.
+      codebooks: ``[m, 16, s]`` per-subspace centers.
+
+    Returns:
+      ``[B, m, 16]`` inner-product lookup tables.
+    """
+    bsz, d = q.shape
+    m, centers, s = codebooks.shape
+    qr = q.reshape(bsz, m, s)
+    return jnp.einsum("bjs,jcs->bjc", qr, codebooks)

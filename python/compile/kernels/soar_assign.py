@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: fused SOAR spilled-assignment loss (Theorem 3.1).
+
+For every (datapoint, centroid) pair the index builder needs
+
+    L(x, c) = ‖x − c‖² + λ⟨r̂, x − c⟩²
+            = ‖x‖² − 2⟨x,c⟩ + ‖c‖² + λ(⟨r̂,x⟩ − ⟨r̂,c⟩)²
+
+where r̂ is the unit-normalized primary residual of x. Expanding the loss
+this way turns the whole computation into *two* matmuls against the codebook
+tile (X·Cᵀ and R̂·Cᵀ) plus cheap rank-1 corrections — all fused into a single
+pass over each codebook tile while it is resident in VMEM. The naive form
+(materialize x−c for every pair) would be O(B·c·d) memory traffic; the fused
+form is the same two-matmul traffic as plain Euclidean assignment, which is
+how SOAR keeps indexing cost close to a standard VQ index (§3.5).
+
+λ enters as a (1,1) SMEM-style operand so one compiled artifact serves every
+λ (the λ-sweep of Fig 9 reuses a single executable).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_C = 256
+
+
+def _soar_kernel(lam_ref, x_ref, rhat_ref, c_ref, o_ref):
+    """One (block_b, block_c) loss tile, fully fused."""
+    x = x_ref[...]            # [bb, d]
+    rhat = rhat_ref[...]      # [bb, d]
+    c = c_ref[...]            # [bc, d]
+    lam = lam_ref[0, 0]
+
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xc = dot(x, c)                                  # [bb, bc] ⟨x,c⟩
+    rc = dot(rhat, c)                               # [bb, bc] ⟨r̂,c⟩
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)    # [bb, 1]
+    rx = jnp.sum(rhat * x, axis=1, keepdims=True)   # [bb, 1]
+    c_sq = jnp.sum(c * c, axis=1)[None, :]          # [1, bc]
+
+    par = rx - rc
+    o_ref[...] = x_sq - 2.0 * xc + c_sq + lam * par * par
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c"))
+def soar_assign(x, r_hat, c, lam,
+                *, block_b=DEFAULT_BLOCK_B, block_c=DEFAULT_BLOCK_C):
+    """Fused SOAR loss ``[B, c]`` for datapoints ``x`` vs codebook ``c``.
+
+    Args:
+      x:     ``[B, d]`` datapoints.
+      r_hat: ``[B, d]`` unit-normalized primary residuals (zero rows OK —
+             the loss then reduces to plain squared Euclidean distance).
+      c:     ``[c, d]`` codebook.
+      lam:   scalar λ (traced; one artifact serves all λ values).
+    """
+    bsz, d = x.shape
+    csz, d2 = c.shape
+    assert d == d2 and x.shape == r_hat.shape
+    bb = min(block_b, bsz)
+    bc = min(block_c, csz)
+    assert bsz % bb == 0 and csz % bc == 0, (
+        f"shapes ({bsz},{csz}) must tile by ({bb},{bc})"
+    )
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    grid = (bsz // bb, csz // bc)
+    return pl.pallas_call(
+        _soar_kernel,
+        grid=grid,
+        in_specs=[
+            # λ broadcast to every grid step.
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, csz), jnp.float32),
+        interpret=True,
+    )(lam_arr, x, r_hat, c)

@@ -1,0 +1,130 @@
+"""L2: build-time JAX compute graphs for the SOAR engine.
+
+Each entry point here is a pure JAX function that calls the L1 Pallas
+kernels (``kernels/``) and is AOT-lowered to HLO text by ``aot.py``. The
+Rust runtime (``rust/src/runtime``) loads the resulting artifacts and runs
+them via PJRT on the query/build hot paths; Python never runs at serve time.
+
+Entry points
+------------
+* ``centroid_topk``      — query-time: score a query batch against the
+  codebook (Pallas matmul) and return the top-t partitions per query
+  (scores + int32 indices). Fusing top-k into the same HLO module keeps the
+  PJRT→Rust transfer at O(B·t) instead of O(B·c).
+* ``centroid_score``     — same, without top-k (full score matrix). Used by
+  the KMR/statistics evaluators which need every partition's rank.
+* ``soar_assign_scores`` — build-time: the fused Theorem 3.1 loss matrix
+  for a datapoint batch. λ is a traced scalar, so a single artifact serves
+  every λ (Fig 9's sweep reuses one executable).
+
+Shape buckets
+-------------
+PJRT executables are shape-specialized, so ``aot.py`` exports each entry
+point at a small set of (B, c, d[, t]) *buckets*; the Rust caller zero-pads
+its actual shapes up to the nearest bucket and ignores padded rows/columns
+(padding d is exact: zero dims add zero to every inner product and norm;
+padded centroid columns are filtered out Rust-side).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.centroid_score import centroid_score as _centroid_score_kernel
+from compile.kernels.pq_lut import pq_lut as _pq_lut_kernel
+from compile.kernels.soar_assign import soar_assign as _soar_assign_kernel
+
+
+def centroid_score(q, c):
+    """Full MIPS score matrix ``[B, c]`` via the Pallas scoring kernel."""
+    return (_centroid_score_kernel(q, c),)
+
+
+def make_centroid_topk(t):
+    """Returns the top-t entry point specialized for a static ``t``.
+
+    Implemented as a full descending sort + slice rather than
+    ``jax.lax.top_k``: the latter lowers to the ``topk`` HLO instruction
+    (with the ``largest`` attribute), which the xla_extension 0.5.1 HLO
+    text parser used by the Rust runtime rejects. ``sort_key_val`` lowers
+    to a plain ``sort``, which round-trips fine; the extra O(c log c) vs
+    O(c log t) cost is negligible at our codebook sizes.
+    """
+
+    def centroid_topk(q, c):
+        scores = _centroid_score_kernel(q, c)
+        idx = jnp.broadcast_to(
+            jnp.arange(scores.shape[1], dtype=jnp.int32)[None, :], scores.shape
+        )
+        neg_sorted, idx_sorted = jax.lax.sort_key_val(-scores, idx, dimension=1)
+        return (-neg_sorted[:, :t], idx_sorted[:, :t])
+
+    return centroid_topk
+
+
+def soar_assign_scores(x, r_hat, c, lam):
+    """Fused SOAR loss matrix ``[B, c]``; λ traced (shape ``[1]``)."""
+    return (_soar_assign_kernel(x, r_hat, c, lam[0]),)
+
+
+def pq_lut_batch(q, codebooks):
+    """Per-query PQ lookup tables ``[B, m, 16]`` (ADC stage input)."""
+    return (_pq_lut_kernel(q, codebooks),)
+
+
+# ---------------------------------------------------------------------------
+# Export specs consumed by aot.py. Keep this list small: each entry is one
+# PJRT compile at Rust start-up. Buckets cover the scales exercised by the
+# examples, benches, and experiment drivers (see DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def export_specs():
+    """List of (name, fn, example_args, meta) to AOT-compile."""
+    specs = []
+    for (b, c, d, t) in [
+        (64, 1024, 128, 256),
+        (64, 4096, 128, 512),
+    ]:
+        specs.append((
+            f"centroid_topk_b{b}_c{c}_d{d}_t{t}",
+            make_centroid_topk(t),
+            (_s(b, d), _s(c, d)),
+            {"kind": "centroid_topk", "b": b, "c": c, "d": d, "t": t},
+        ))
+    for (b, c, d) in [
+        (64, 1024, 128),
+        (64, 4096, 128),
+    ]:
+        specs.append((
+            f"centroid_score_b{b}_c{c}_d{d}",
+            centroid_score,
+            (_s(b, d), _s(c, d)),
+            {"kind": "centroid_score", "b": b, "c": c, "d": d},
+        ))
+    for (b, c, d) in [
+        (256, 1024, 128),
+        (256, 4096, 128),
+    ]:
+        specs.append((
+            f"soar_assign_b{b}_c{c}_d{d}",
+            soar_assign_scores,
+            (_s(b, d), _s(b, d), _s(c, d), _s(1)),
+            {"kind": "soar_assign", "b": b, "c": c, "d": d},
+        ))
+    # PQ LUT construction (m = d/s subspaces, s = 2, 16 centers).
+    for (b, m, sdim) in [
+        (64, 64, 2),
+    ]:
+        specs.append((
+            f"pq_lut_b{b}_m{m}_s{sdim}",
+            pq_lut_batch,
+            (_s(b, m * sdim), _s(m, 16, sdim)),
+            {"kind": "pq_lut", "b": b, "c": m, "d": m * sdim, "t": 0},
+        ))
+    return specs

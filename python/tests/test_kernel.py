@@ -1,0 +1,218 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer. Hypothesis sweeps
+shapes (including non-default block tilings), value scales, and λ; every
+case must match ``ref.py`` to float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.centroid_score import centroid_score
+from compile.kernels.pq_lut import pq_lut
+from compile.kernels.soar_assign import soar_assign
+from compile.kernels.ref import centroid_score_ref, pq_lut_ref, soar_assign_ref
+
+# Shared tolerances: interpret-mode Pallas reduces in a different order than
+# XLA's fused matmul, so allow a few ULPs scaled by the contraction length.
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def _unit_rows(a):
+    n = np.linalg.norm(a, axis=1, keepdims=True)
+    n[n == 0] = 1.0
+    return (a / n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# centroid_score
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 4, 8, 16, 64, 128]),        # B
+    st.sampled_from([4, 16, 64, 256, 512, 1024]),      # c
+    st.sampled_from([1, 2, 3, 8, 32, 64, 128]),        # d
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([1e-3, 1.0, 1e3]))
+def test_centroid_score_matches_ref(shape, seed, scale):
+    b, c, d = shape
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, d, scale=scale)
+    cb = _rand(rng, c, d, scale=scale)
+    got = np.asarray(centroid_score(q, cb))
+    want = np.asarray(centroid_score_ref(q, cb))
+    np.testing.assert_allclose(
+        got, want, rtol=RTOL, atol=ATOL * scale * scale * max(d, 1))
+
+
+@pytest.mark.parametrize("block_b,block_c", [(1, 1), (2, 4), (8, 16),
+                                             (64, 64), (128, 256)])
+def test_centroid_score_block_shapes(block_b, block_c):
+    """Tiling must not change the numbers (block sweep used by perf pass)."""
+    rng = np.random.default_rng(7)
+    q = _rand(rng, 128, 64)
+    cb = _rand(rng, 256, 64)
+    got = np.asarray(centroid_score(q, cb, block_b=block_b, block_c=block_c))
+    want = np.asarray(centroid_score_ref(q, cb))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-2)
+
+
+def test_centroid_score_rejects_ragged():
+    rng = np.random.default_rng(0)
+    # 192 does not tile by the default 128-row block.
+    with pytest.raises(AssertionError):
+        centroid_score(_rand(rng, 192, 8), _rand(rng, 128, 8))
+
+
+def test_centroid_score_identity_rows():
+    """Orthonormal queries against themselves → identity score matrix."""
+    eye = np.eye(16, dtype=np.float32)
+    got = np.asarray(centroid_score(eye, eye))
+    np.testing.assert_allclose(got, eye, rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# soar_assign
+# ---------------------------------------------------------------------------
+
+soar_shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 8, 32, 128]),               # B
+    st.sampled_from([4, 16, 64, 256, 1024]),           # c
+    st.sampled_from([2, 3, 8, 32, 128]),               # d
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=soar_shape_strategy, seed=st.integers(0, 2**31 - 1),
+       lam=st.sampled_from([0.0, 0.5, 1.0, 1.5, 4.0, 100.0]))
+def test_soar_assign_matches_ref(shape, seed, lam):
+    b, c, d = shape
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    rhat = _unit_rows(_rand(rng, b, d))
+    cb = _rand(rng, c, d)
+    got = np.asarray(soar_assign(x, rhat, cb, lam))
+    want = np.asarray(soar_assign_ref(x, rhat, cb, lam))
+    np.testing.assert_allclose(got, want, rtol=RTOL,
+                               atol=ATOL * max(1.0, lam) * max(d, 1))
+
+
+def test_soar_lambda_zero_is_euclidean():
+    """Corollary 3.1.1: λ=0 ⇒ loss is plain squared Euclidean distance."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 8, 16)
+    rhat = _unit_rows(_rand(rng, 8, 16))
+    cb = _rand(rng, 32, 16)
+    got = np.asarray(soar_assign(x, rhat, cb, 0.0))
+    want = ((x[:, None, :] - cb[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_soar_orthogonal_residual_no_penalty():
+    """Corollary 3.1.2: r ⊥ r' ⇒ loss equals ‖r'‖² regardless of λ."""
+    d = 8
+    x = np.zeros((1, d), np.float32)
+    x[0, 0] = 2.0                      # x on axis 0
+    rhat = np.zeros((1, d), np.float32)
+    rhat[0, 1] = 1.0                   # primary residual on axis 1
+    cb = np.zeros((4, d), np.float32)  # candidate residuals x−c stay on axis 0
+    cb[1, 0] = 1.0
+    cb[2, 0] = -1.0
+    cb[3, 0] = 3.0
+    for lam in (0.0, 1.0, 10.0):
+        got = np.asarray(soar_assign(x, rhat, cb, lam))[0]
+        want = ((x[0, 0] - cb[:, 0]) ** 2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_soar_parallel_residual_full_penalty():
+    """Collinear case of Fig 3: r ∥ r' ⇒ loss = (1+λ)‖r'‖²."""
+    d = 4
+    x = np.zeros((1, d), np.float32)
+    x[0, 0] = 2.0
+    rhat = np.zeros((1, d), np.float32)
+    rhat[0, 0] = 1.0                   # residual parallel to x−c below
+    cb = np.zeros((2, d), np.float32)  # c at origin ⇒ r' = x, parallel to r̂
+    for lam in (0.0, 1.0, 2.5):
+        got = np.asarray(soar_assign(x, rhat, cb, lam))[0, 0]
+        want = (1.0 + lam) * 4.0
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_soar_monotone_in_lambda():
+    """Loss is non-decreasing in λ for every pair (penalty term ≥ 0)."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 16, 32)
+    rhat = _unit_rows(_rand(rng, 16, 32))
+    cb = _rand(rng, 64, 32)
+    prev = np.asarray(soar_assign(x, rhat, cb, 0.0))
+    for lam in (0.5, 1.0, 2.0, 8.0):
+        cur = np.asarray(soar_assign(x, rhat, cb, lam))
+        assert (cur >= prev - 1e-4).all()
+        prev = cur
+
+
+def test_soar_zero_rhat_degrades_to_euclidean():
+    """Zero primary residual rows must not produce NaNs."""
+    rng = np.random.default_rng(5)
+    x = _rand(rng, 4, 8)
+    rhat = np.zeros((4, 8), np.float32)
+    cb = _rand(rng, 16, 8)
+    got = np.asarray(soar_assign(x, rhat, cb, 2.0))
+    want = ((x[:, None, :] - cb[None, :, :]) ** 2).sum(-1)
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pq_lut
+# ---------------------------------------------------------------------------
+
+lut_shape_strategy = st.tuples(
+    st.sampled_from([1, 2, 8, 64, 128]),    # B
+    st.sampled_from([1, 2, 8, 32, 64]),     # m subspaces
+    st.sampled_from([1, 2, 4]),             # s dims per subspace
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=lut_shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_pq_lut_matches_ref(shape, seed):
+    b, m, s = shape
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, m * s)
+    cb = _rand(rng, m, 16, s)
+    got = np.asarray(pq_lut(q, cb))
+    want = np.asarray(pq_lut_ref(q, cb))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL * s)
+
+
+def test_pq_lut_block_identity():
+    """Each LUT row must equal the scalar per-subspace inner products."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, 4, 8)      # m=4, s=2
+    cb = _rand(rng, 4, 16, 2)
+    got = np.asarray(pq_lut(q, cb))
+    for b in range(4):
+        for j in range(4):
+            for c in range(16):
+                want = q[b, 2 * j: 2 * j + 2] @ cb[j, c]
+                assert abs(got[b, j, c] - want) < 1e-4
+
+
+def test_pq_lut_rejects_bad_shapes():
+    rng = np.random.default_rng(2)
+    with pytest.raises(AssertionError):
+        pq_lut(_rand(rng, 2, 9), _rand(rng, 4, 16, 2))   # 9 != 4*2
+    with pytest.raises(AssertionError):
+        pq_lut(_rand(rng, 2, 8), _rand(rng, 4, 8, 2))    # 8 centers

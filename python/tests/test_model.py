@@ -1,0 +1,108 @@
+"""L2 shape/semantics tests: model entry points + AOT export specs."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import centroid_score_ref, soar_assign_ref
+
+
+def test_centroid_score_entry_shape():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(64, 128)).astype(np.float32)
+    c = rng.normal(size=(1024, 128)).astype(np.float32)
+    (out,) = model.centroid_score(q, c)
+    assert out.shape == (64, 1024)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(centroid_score_ref(q, c)),
+                               rtol=2e-4, atol=2e-2)
+
+
+@pytest.mark.parametrize("t", [1, 16, 256])
+def test_centroid_topk_matches_numpy(t):
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(64, 128)).astype(np.float32)
+    c = rng.normal(size=(1024, 128)).astype(np.float32)
+    vals, idx = model.make_centroid_topk(t)(q, c)
+    assert vals.shape == (64, t) and idx.shape == (64, t)
+    assert idx.dtype == jnp.int32
+    scores = q @ c.T
+    want_idx = np.argsort(-scores, axis=1, kind="stable")[:, :t]
+    want_vals = np.take_along_axis(scores, want_idx, axis=1)
+    np.testing.assert_allclose(np.asarray(vals), want_vals,
+                               rtol=2e-4, atol=2e-2)
+    # indices may differ on exact ties; values are the real contract, but
+    # with continuous random data ties are measure-zero:
+    assert (np.asarray(idx) == want_idx).mean() > 0.999
+
+
+def test_topk_values_sorted_descending():
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(64, 128)).astype(np.float32)
+    c = rng.normal(size=(1024, 128)).astype(np.float32)
+    vals, _ = model.make_centroid_topk(64)(q, c)
+    v = np.asarray(vals)
+    assert (np.diff(v, axis=1) <= 1e-6).all()
+
+
+def test_soar_assign_scores_entry():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(256, 128)).astype(np.float32)
+    r = rng.normal(size=(256, 128)).astype(np.float32)
+    r /= np.linalg.norm(r, axis=1, keepdims=True)
+    c = rng.normal(size=(1024, 128)).astype(np.float32)
+    lam = np.array([1.5], np.float32)
+    (out,) = model.soar_assign_scores(x, r, c, lam)
+    assert out.shape == (256, 1024)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(soar_assign_ref(x, r, c, 1.5)),
+                               rtol=2e-4, atol=5e-2)
+
+
+def test_export_specs_consistent():
+    """Every export spec: callable runs at its example shapes, names unique."""
+    specs = model.export_specs()
+    assert len(specs) >= 4
+    names = [s[0] for s in specs]
+    assert len(set(names)) == len(names)
+    for name, fn, example_args, meta in specs:
+        assert meta["kind"] in ("centroid_topk", "centroid_score",
+                                "soar_assign", "pq_lut")
+        args = [np.zeros(a.shape, np.float32) for a in example_args]
+        outs = fn(*args)
+        assert isinstance(outs, tuple) and len(outs) >= 1
+        if meta["kind"] == "centroid_topk":
+            assert outs[0].shape == (meta["b"], meta["t"])
+            assert outs[1].shape == (meta["b"], meta["t"])
+        elif meta["kind"] == "pq_lut":
+            assert outs[0].shape == (meta["b"], meta["c"], 16)
+        else:
+            assert outs[0].shape == (meta["b"], meta["c"])
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_specs():
+    """manifest.json must describe exactly the current export specs."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    for name, _fn, example_args, meta in model.export_specs():
+        assert name in by_name, f"stale artifacts: {name} missing; re-run make artifacts"
+        entry = by_name[name]
+        assert entry["kind"] == meta["kind"]
+        got_shapes = [tuple(i["shape"]) for i in entry["inputs"]]
+        want_shapes = [tuple(a.shape) for a in example_args]
+        assert got_shapes == want_shapes
+        path = os.path.join(ARTIFACTS, entry["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert "HloModule" in text

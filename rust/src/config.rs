@@ -1,0 +1,364 @@
+//! Configuration types for index construction, search, and serving.
+//!
+//! All configs round-trip through JSON (`util::json`) so experiment
+//! drivers and the CLI can persist/load them alongside results.
+
+use crate::error::{Error, Result};
+use crate::quant::{KMeansConfig, PqConfig};
+use crate::util::json::Value;
+
+/// How datapoints spill into additional partitions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpillMode {
+    /// Standard VQ: one partition per datapoint.
+    None,
+    /// Naive spilling: next-closest centroids by Euclidean distance
+    /// (the Fig 3/4a strawman).
+    Nearest,
+    /// Spilling with Orthogonality-Amplified Residuals (the paper):
+    /// assignment loss ‖r'‖² + λ‖proj_r r'‖².
+    Soar {
+        /// The λ of Theorem 3.1.
+        lambda: f32,
+    },
+}
+
+impl SpillMode {
+    /// Short tag used in reports.
+    pub fn tag(&self) -> String {
+        match self {
+            SpillMode::None => "none".into(),
+            SpillMode::Nearest => "nearest".into(),
+            SpillMode::Soar { lambda } => format!("soar(λ={lambda})"),
+        }
+    }
+}
+
+/// Index construction parameters.
+#[derive(Clone, Debug)]
+pub struct IndexConfig {
+    /// Number of VQ partitions (c).
+    pub num_partitions: usize,
+    /// Spilling policy.
+    pub spill: SpillMode,
+    /// Number of *additional* assignments per datapoint (§3.5.1; the
+    /// paper's experiments use 1). Ignored when `spill == None`.
+    pub num_spills: usize,
+    /// VQ (k-means) training parameters; `k` is overridden by
+    /// `num_partitions`.
+    pub kmeans: KMeansConfig,
+    /// PQ parameters for the residual codes.
+    pub pq: PqConfig,
+    /// Keep int8 rerank vectors (the "highest-bitrate representation").
+    pub store_int8: bool,
+    pub seed: u64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            num_partitions: 64,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            num_spills: 1,
+            kmeans: KMeansConfig::default(),
+            pq: PqConfig::default(),
+            store_int8: true,
+            seed: 42,
+        }
+    }
+}
+
+impl IndexConfig {
+    /// Partitions sized for ~400 points each — the paper's Fig 10 ratio.
+    pub fn for_dataset(n: usize, spill: SpillMode) -> IndexConfig {
+        IndexConfig {
+            num_partitions: (n / 400).max(4),
+            spill,
+            ..Default::default()
+        }
+    }
+
+    /// Validate against a dataset shape.
+    pub fn validate(&self, n: usize, dim: usize) -> Result<()> {
+        if self.num_partitions == 0 {
+            return Err(Error::Config("num_partitions must be > 0".into()));
+        }
+        if self.num_partitions > n {
+            return Err(Error::Config(format!(
+                "num_partitions {} > dataset size {n}",
+                self.num_partitions
+            )));
+        }
+        if self.pq.dims_per_subspace == 0 || self.pq.dims_per_subspace > dim {
+            return Err(Error::Config(format!(
+                "pq.dims_per_subspace {} invalid for dim {dim}",
+                self.pq.dims_per_subspace
+            )));
+        }
+        if self.spill != SpillMode::None && self.num_spills == 0 {
+            return Err(Error::Config(
+                "num_spills must be ≥ 1 when spilling is enabled".into(),
+            ));
+        }
+        if self.num_spills >= self.num_partitions {
+            return Err(Error::Config(format!(
+                "num_spills {} must be < num_partitions {}",
+                self.num_spills, self.num_partitions
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total assignments per datapoint.
+    pub fn assignments_per_point(&self) -> usize {
+        match self.spill {
+            SpillMode::None => 1,
+            _ => 1 + self.num_spills,
+        }
+    }
+
+    /// JSON encoding (persisted inside the binary index format and next to
+    /// experiment reports).
+    pub fn to_json(&self) -> Value {
+        let spill = match self.spill {
+            SpillMode::None => Value::str("none"),
+            SpillMode::Nearest => Value::str("nearest"),
+            SpillMode::Soar { lambda } => Value::obj(vec![
+                ("mode", Value::str("soar")),
+                ("lambda", Value::num(lambda as f64)),
+            ]),
+        };
+        Value::obj(vec![
+            ("num_partitions", Value::num(self.num_partitions as f64)),
+            ("spill", spill),
+            ("num_spills", Value::num(self.num_spills as f64)),
+            (
+                "kmeans",
+                Value::obj(vec![
+                    ("k", Value::num(self.kmeans.k as f64)),
+                    ("iters", Value::num(self.kmeans.iters as f64)),
+                    ("seed", Value::num(self.kmeans.seed as f64)),
+                    ("train_sample", Value::num(self.kmeans.train_sample as f64)),
+                    (
+                        "anisotropic_eta",
+                        Value::num(self.kmeans.anisotropic_eta as f64),
+                    ),
+                ]),
+            ),
+            (
+                "pq",
+                Value::obj(vec![
+                    (
+                        "dims_per_subspace",
+                        Value::num(self.pq.dims_per_subspace as f64),
+                    ),
+                    ("train_iters", Value::num(self.pq.train_iters as f64)),
+                    ("seed", Value::num(self.pq.seed as f64)),
+                    ("train_sample", Value::num(self.pq.train_sample as f64)),
+                ]),
+            ),
+            ("store_int8", Value::Bool(self.store_int8)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+
+    /// Inverse of [`IndexConfig::to_json`].
+    pub fn from_json(v: &Value) -> Result<IndexConfig> {
+        let field = |obj: &Value, key: &str| -> Result<f64> {
+            obj.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| Error::Config(format!("missing numeric field {key}")))
+        };
+        let spill = match v.get("spill") {
+            Some(Value::Str(s)) if s == "none" => SpillMode::None,
+            Some(Value::Str(s)) if s == "nearest" => SpillMode::Nearest,
+            Some(obj @ Value::Obj(_)) if obj.get("mode").and_then(|m| m.as_str()) == Some("soar") => {
+                SpillMode::Soar {
+                    lambda: field(obj, "lambda")? as f32,
+                }
+            }
+            other => {
+                return Err(Error::Config(format!("bad spill mode: {other:?}")));
+            }
+        };
+        let km = v
+            .get("kmeans")
+            .ok_or_else(|| Error::Config("missing kmeans".into()))?;
+        let pq = v
+            .get("pq")
+            .ok_or_else(|| Error::Config("missing pq".into()))?;
+        Ok(IndexConfig {
+            num_partitions: field(v, "num_partitions")? as usize,
+            spill,
+            num_spills: field(v, "num_spills")? as usize,
+            kmeans: KMeansConfig {
+                k: field(km, "k")? as usize,
+                iters: field(km, "iters")? as usize,
+                seed: field(km, "seed")? as u64,
+                train_sample: field(km, "train_sample")? as usize,
+                anisotropic_eta: field(km, "anisotropic_eta")? as f32,
+            },
+            pq: PqConfig {
+                dims_per_subspace: field(pq, "dims_per_subspace")? as usize,
+                train_iters: field(pq, "train_iters")? as usize,
+                seed: field(pq, "seed")? as u64,
+                train_sample: field(pq, "train_sample")? as usize,
+            },
+            store_int8: v
+                .get("store_int8")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| Error::Config("missing store_int8".into()))?,
+            seed: field(v, "seed")? as u64,
+        })
+    }
+}
+
+/// Per-query search parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchParams {
+    /// Neighbors to return.
+    pub k: usize,
+    /// Partitions to probe (t in the KMR analysis).
+    pub top_t: usize,
+    /// Candidates kept from the ADC stage for exact rerank.
+    pub rerank_budget: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams {
+            k: 10,
+            top_t: 8,
+            rerank_budget: 200,
+        }
+    }
+}
+
+impl SearchParams {
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            return Err(Error::Config("k must be > 0".into()));
+        }
+        if self.top_t == 0 {
+            return Err(Error::Config("top_t must be > 0".into()));
+        }
+        if self.rerank_budget < self.k {
+            return Err(Error::Config(format!(
+                "rerank_budget {} < k {}",
+                self.rerank_budget, self.k
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Serving-stack parameters (coordinator layer).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Max queries fused into one scoring batch.
+    pub max_batch: usize,
+    /// Max time a query waits for batch-mates before the batch is flushed.
+    pub max_wait_us: u64,
+    /// Worker tasks draining the batch queue.
+    pub workers: usize,
+    /// Bounded queue depth before callers see backpressure.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_wait_us: 200,
+            workers: 4,
+            queue_depth: 4096,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        IndexConfig::default().validate(10_000, 64).unwrap();
+        SearchParams::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut c = IndexConfig::default();
+        c.num_partitions = 0;
+        assert!(c.validate(100, 8).is_err());
+        c.num_partitions = 200;
+        assert!(c.validate(100, 8).is_err());
+        c.num_partitions = 50;
+        c.pq.dims_per_subspace = 9;
+        assert!(c.validate(100, 8).is_err());
+        c.pq.dims_per_subspace = 2;
+        c.num_spills = 0;
+        assert!(c.validate(100, 8).is_err());
+        c.spill = SpillMode::None;
+        assert!(c.validate(100, 8).is_ok());
+    }
+
+    #[test]
+    fn search_params_validation() {
+        let mut p = SearchParams::default();
+        p.rerank_budget = 5;
+        p.k = 10;
+        assert!(p.validate().is_err());
+        p.k = 0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn assignments_per_point() {
+        let mut c = IndexConfig::default();
+        assert_eq!(c.assignments_per_point(), 2);
+        c.num_spills = 3;
+        assert_eq!(c.assignments_per_point(), 4);
+        c.spill = SpillMode::None;
+        assert_eq!(c.assignments_per_point(), 1);
+    }
+
+    #[test]
+    fn spill_tags() {
+        assert_eq!(SpillMode::None.tag(), "none");
+        assert_eq!(SpillMode::Nearest.tag(), "nearest");
+        assert!(SpillMode::Soar { lambda: 1.5 }.tag().contains("1.5"));
+    }
+
+    #[test]
+    fn config_json_round_trip() {
+        let mut c = IndexConfig::default();
+        c.spill = SpillMode::Soar { lambda: 2.25 };
+        c.num_spills = 3;
+        c.kmeans.anisotropic_eta = 1.5;
+        c.pq.dims_per_subspace = 4;
+        c.store_int8 = false;
+        let s = c.to_json().to_json_pretty();
+        let back = IndexConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.num_partitions, c.num_partitions);
+        assert_eq!(back.spill, c.spill);
+        assert_eq!(back.num_spills, 3);
+        assert_eq!(back.kmeans.anisotropic_eta, 1.5);
+        assert_eq!(back.pq.dims_per_subspace, 4);
+        assert!(!back.store_int8);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        let v = crate::util::json::Value::parse("{\"spill\": \"bogus\"}").unwrap();
+        assert!(IndexConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn for_dataset_partition_ratio() {
+        let c = IndexConfig::for_dataset(100_000, SpillMode::None);
+        assert_eq!(c.num_partitions, 250); // 400 points per partition
+        let tiny = IndexConfig::for_dataset(100, SpillMode::None);
+        assert_eq!(tiny.num_partitions, 4);
+    }
+}

@@ -1,0 +1,156 @@
+//! Dynamic batching: fuse single-query requests into scoring batches.
+//!
+//! The centroid-scoring stage is a matmul whose PJRT dispatch cost is
+//! amortized across a batch (the AOT buckets are compiled at B=64); the
+//! batcher trades a bounded queueing delay (`max_wait_us`) for that
+//! amortization, exactly like vLLM's request batcher. Policy:
+//!
+//! * a batch is flushed when it reaches `max_batch`, or
+//! * when the *first* request in it has waited `max_wait_us` since the
+//!   batch opened.
+//!
+//! Built on `std::sync::mpsc` (this repo's offline vendor set has no
+//! async runtime); the serving stack in `server.rs` runs the loop on a
+//! dedicated thread.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::linalg::topk::Scored;
+
+/// Single-use response channel (oneshot stand-in).
+pub type ResponseTx = std::sync::mpsc::SyncSender<Vec<Scored>>;
+
+/// One in-flight query.
+#[derive(Debug)]
+pub struct QueryRequest {
+    pub query: Vec<f32>,
+    /// Overrides the engine-default k when `Some`.
+    pub k: Option<usize>,
+    pub enqueued: Instant,
+    pub respond: ResponseTx,
+}
+
+/// Collect the next batch from `rx`.
+///
+/// Blocks for the first request indefinitely (returns `None` when the
+/// channel is closed and drained — shutdown), then gathers more until
+/// `max_batch` or the deadline.
+pub fn collect_batch(
+    rx: &Receiver<QueryRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<QueryRequest>> {
+    let first = rx.recv().ok()?;
+    Some(collect_batch_with_first(first, rx, max_batch, max_wait))
+}
+
+/// Assemble a batch around an already-received first request. Used by the
+/// server's intake loop, which polls with a timeout so it can observe a
+/// shutdown flag (a bare `recv()` would block forever while client handles
+/// keep the channel open).
+pub fn collect_batch_with_first(
+    first: QueryRequest,
+    rx: &Receiver<QueryRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Vec<QueryRequest> {
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break, // flush remainder
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(v: f32) -> (QueryRequest, std::sync::mpsc::Receiver<Vec<Scored>>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (
+            QueryRequest {
+                query: vec![v],
+                k: None,
+                enqueued: Instant::now(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        let mut keeps = Vec::new();
+        for i in 0..5 {
+            let (r, keep) = req(i as f32);
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let batch = collect_batch(&rx, 3, Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch = collect_batch(&rx, 3, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn flushes_at_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _keep) = req(1.0);
+        tx.send(r).unwrap();
+        let start = Instant::now();
+        let batch = collect_batch(&rx, 64, Duration::from_millis(20)).unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = start.elapsed();
+        assert!(waited >= Duration::from_millis(15), "waited {waited:?}");
+        assert!(waited < Duration::from_secs(2), "waited {waited:?}");
+    }
+
+    #[test]
+    fn returns_none_on_shutdown() {
+        let (tx, rx) = mpsc::channel::<QueryRequest>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn batch_preserves_arrival_order() {
+        let (tx, rx) = mpsc::channel();
+        let mut keeps = Vec::new();
+        for i in 0..4 {
+            let (r, keep) = req(i as f32);
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let batch = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
+        let vals: Vec<f32> = batch.iter().map(|r| r.query[0]).collect();
+        assert_eq!(vals, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn late_arrivals_join_open_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _keep) = req(0.0);
+        tx.send(r).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let (r, keep) = req(1.0);
+            std::mem::forget(keep);
+            tx.send(r).unwrap();
+        });
+        let batch = collect_batch(&rx, 8, Duration::from_millis(200)).unwrap();
+        sender.join().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+}

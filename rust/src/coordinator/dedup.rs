@@ -1,0 +1,116 @@
+//! Epoch-stamped visited set for spilled-candidate deduplication.
+//!
+//! With spilling, a datapoint can appear in several probed partitions;
+//! §3.5 notes the search must deduplicate. A per-query `HashSet` would
+//! allocate on the hot path; instead we keep one `u32` stamp per datapoint
+//! and bump an epoch counter per query — `reset()` is O(1) and `insert()`
+//! is a single indexed load/store.
+
+/// O(1)-reset visited set over ids `0..capacity`.
+#[derive(Clone, Debug)]
+pub struct DedupSet {
+    stamps: Vec<u32>,
+    epoch: u32,
+}
+
+impl DedupSet {
+    /// Set over ids `0..capacity`.
+    pub fn new(capacity: usize) -> DedupSet {
+        DedupSet {
+            stamps: vec![0; capacity],
+            epoch: 1,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// Grow to cover at least `capacity` ids (existing marks preserved).
+    pub fn ensure_capacity(&mut self, capacity: usize) {
+        if capacity > self.stamps.len() {
+            self.stamps.resize(capacity, 0);
+        }
+    }
+
+    /// Forget all marks. O(1) except once every 2³²−1 resets.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Wrapped: stale stamps could collide; do the rare full clear.
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    /// Mark `id`; returns `true` iff it was not already marked.
+    #[inline]
+    pub fn insert(&mut self, id: u32) -> bool {
+        let slot = &mut self.stamps[id as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    /// Is `id` marked in the current epoch?
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.stamps[id as usize] == self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_semantics() {
+        let mut s = DedupSet::new(10);
+        assert!(s.insert(3));
+        assert!(!s.insert(3));
+        assert!(s.contains(3));
+        assert!(!s.contains(4));
+        assert!(s.insert(4));
+    }
+
+    #[test]
+    fn reset_clears_in_o1() {
+        let mut s = DedupSet::new(5);
+        for i in 0..5 {
+            assert!(s.insert(i));
+        }
+        s.reset();
+        for i in 0..5 {
+            assert!(!s.contains(i));
+            assert!(s.insert(i));
+        }
+    }
+
+    #[test]
+    fn epoch_wrap_is_safe() {
+        let mut s = DedupSet::new(3);
+        s.insert(0);
+        // Force the wrap path.
+        s.epoch = u32::MAX;
+        s.insert(1);
+        assert!(s.contains(1));
+        s.reset(); // wraps to 0 → full clear → epoch 1
+        assert!(!s.contains(0));
+        assert!(!s.contains(1));
+        assert!(s.insert(1));
+    }
+
+    #[test]
+    fn ensure_capacity_grows() {
+        let mut s = DedupSet::new(2);
+        s.insert(1);
+        s.ensure_capacity(10);
+        assert!(s.contains(1));
+        assert!(s.insert(9));
+        assert_eq!(s.capacity(), 10);
+    }
+}

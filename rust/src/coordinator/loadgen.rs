@@ -1,0 +1,175 @@
+//! Open-loop (Poisson-arrival) load generation.
+//!
+//! Closed-loop clients (`server::closed_loop_load`) measure peak
+//! throughput but hide queueing delay: clients slow down when the system
+//! does. Serving systems are evaluated under *open-loop* load — requests
+//! arrive at a fixed offered rate regardless of completion — which is what
+//! exposes the latency-vs-load curve behind the paper's QPS-at-recall
+//! operating points.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::server::ServeHandle;
+use crate::linalg::{MatrixF32, Rng};
+
+/// Result of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub offered_qps: f64,
+    pub achieved_qps: f64,
+    pub completed: u64,
+    /// Requests rejected by backpressure (dropped, not retried).
+    pub rejected: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+/// Drive `handle` with Poisson arrivals at `offered_qps` for `duration`.
+///
+/// `concurrency` dispatcher threads share the arrival schedule; each
+/// dispatched request blocks one thread until completion, so choose
+/// `concurrency` comfortably above `offered_qps × expected latency`.
+pub fn open_loop_load(
+    handle: &ServeHandle,
+    queries: &MatrixF32,
+    offered_qps: f64,
+    duration: Duration,
+    concurrency: usize,
+    seed: u64,
+) -> OpenLoopReport {
+    assert!(offered_qps > 0.0);
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let issued = AtomicU64::new(0);
+    let hist = std::sync::Mutex::new(LatencyHistogram::default());
+    let start = Instant::now();
+    let deadline = start + duration;
+
+    // Pre-draw the Poisson schedule (absolute send times).
+    let mut rng = Rng::new(seed);
+    let mut schedule = Vec::new();
+    let mut t = 0.0f64;
+    while t < duration.as_secs_f64() {
+        // exponential inter-arrival
+        let u = (1.0 - rng.next_f32() as f64).max(1e-12);
+        t += -u.ln() / offered_qps;
+        schedule.push(start + Duration::from_secs_f64(t));
+    }
+    let schedule = Arc::new(schedule);
+    let next_idx = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..concurrency.max(1) {
+            let handle = handle.clone();
+            let schedule = schedule.clone();
+            let next_idx = &next_idx;
+            let completed = &completed;
+            let rejected = &rejected;
+            let issued = &issued;
+            let hist = &hist;
+            s.spawn(move || loop {
+                let i = next_idx.fetch_add(1, Ordering::Relaxed) as usize;
+                if i >= schedule.len() {
+                    break;
+                }
+                let send_at = schedule[i];
+                if send_at > deadline {
+                    break;
+                }
+                let now = Instant::now();
+                if send_at > now {
+                    std::thread::sleep(send_at - now);
+                }
+                let qi = i % queries.rows();
+                issued.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                match handle.search(queries.row(qi).to_vec()) {
+                    Ok(_) => {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        hist.lock()
+                            .unwrap()
+                            .record(t0.elapsed().as_micros() as u64);
+                    }
+                    Err(_) => {
+                        // Open loop: drop on backpressure, do not retry.
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    let elapsed = start.elapsed().as_secs_f64();
+    let h = hist.into_inner().unwrap();
+    OpenLoopReport {
+        offered_qps,
+        achieved_qps: completed.load(Ordering::Relaxed) as f64 / elapsed.max(1e-9),
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        p50_us: h.quantile_us(0.5),
+        p99_us: h.quantile_us(0.99),
+        mean_us: h.mean_us(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SearchParams, ServeConfig, SpillMode};
+    use crate::coordinator::server::ServeEngine;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::runtime::Engine;
+
+    #[test]
+    fn open_loop_under_capacity_completes_everything() {
+        let ds = SyntheticConfig::glove_like(2000, 16, 16, 3).generate();
+        let engine = Arc::new(Engine::cpu());
+        let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+        let index = Arc::new(build_index(&engine, &ds.data, &cfg).unwrap());
+        let server = ServeEngine::start(
+            index,
+            engine,
+            SearchParams::default(),
+            ServeConfig::default(),
+        );
+        let handle = server.handle();
+        let report = open_loop_load(
+            &handle,
+            &ds.queries,
+            200.0, // far under capacity for a 2k index
+            Duration::from_millis(400),
+            8,
+            1,
+        );
+        assert!(report.completed > 20, "completed {}", report.completed);
+        assert_eq!(report.rejected, 0);
+        assert!(report.achieved_qps > 50.0, "{}", report.achieved_qps);
+        assert!(report.p99_us > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn poisson_schedule_is_roughly_offered_rate() {
+        // Statistical sanity on the arrival process itself.
+        let mut rng = Rng::new(9);
+        let rate = 1000.0f64;
+        let horizon = 2.0f64;
+        let mut t = 0.0;
+        let mut count = 0usize;
+        while t < horizon {
+            let u = (1.0 - rng.next_f32() as f64).max(1e-12);
+            t += -u.ln() / rate;
+            count += 1;
+        }
+        let expected = rate * horizon;
+        assert!(
+            (count as f64 - expected).abs() < 0.15 * expected,
+            "count {count} vs expected {expected}"
+        );
+    }
+}

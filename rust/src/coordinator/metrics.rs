@@ -1,0 +1,222 @@
+//! Serving metrics: lock-free counters + a log-bucketed latency histogram.
+//!
+//! The Fig 11/12 benchmarks report recall-vs-QPS and tail latency; this is
+//! the instrumentation that produces those numbers from the live serving
+//! stack.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log₂-bucketed latency histogram over microseconds.
+///
+/// 64 buckets: bucket i holds samples with `floor(log2(us)) == i`
+/// (bucket 0 also catches 0µs). Quantiles are estimated at bucket
+/// midpoints — ±50% resolution, plenty for p50/p99 reporting.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [0; 64],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, us: u64) {
+        let b = if us == 0 { 0 } else { 63 - us.leading_zeros() as usize };
+        self.buckets[b.min(63)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Quantile estimate (bucket midpoint), q in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // midpoint of [2^b, 2^(b+1))
+                return (1u64 << b) + (1u64 << b) / 2;
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Shared serving metrics.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    batch_size_sum: AtomicU64,
+    rejected: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+    started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHistogram::default()),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn record_batch(&self, batch_size: usize, per_query_latency_us: &[u64]) {
+        self.queries.fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        let mut h = self.latency.lock().unwrap();
+        for &us in per_query_latency_us {
+            h.record(us);
+        }
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let h = self.latency.lock().unwrap();
+        let queries = self.queries.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let elapsed = self.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            queries,
+            batches,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                self.batch_size_sum.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            qps: if elapsed > 0.0 {
+                queries as f64 / elapsed
+            } else {
+                0.0
+            },
+            mean_us: h.mean_us(),
+            p50_us: h.quantile_us(0.5),
+            p99_us: h.quantile_us(0.99),
+            max_us: h.max_us(),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_batch: f64,
+    pub qps: f64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_rough() {
+        let mut h = LatencyHistogram::default();
+        for us in 1..=1000u64 {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        // true p50 = 500; bucket resolution gives [256, 768]
+        assert!((256..=768).contains(&p50), "p50={p50}");
+        let p99 = h.quantile_us(0.99);
+        assert!(p99 >= 512, "p99={p99}");
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+        assert_eq!(h.max_us(), 1000);
+    }
+
+    #[test]
+    fn histogram_zero_and_empty() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), 0);
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_us(0.5) <= 2);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 1000);
+    }
+
+    #[test]
+    fn serve_metrics_snapshot() {
+        let m = ServeMetrics::default();
+        m.record_batch(3, &[100, 200, 300]);
+        m.record_batch(1, &[50]);
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.queries, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        assert!(s.mean_us > 0.0);
+        assert!(s.qps > 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator: router → dynamic batcher → search workers.
+//!
+//! The paper's system is a serving engine (ScaNN / big-ann-benchmarks
+//! Track 3); this module provides the vLLM-router-shaped runtime around
+//! the index: a tokio stack that accepts single-query requests, fuses them
+//! into scoring batches (amortizing the PJRT centroid-scoring call),
+//! fans out across index shards, deduplicates spilled candidates, and
+//! reports latency/throughput metrics.
+
+pub mod batcher;
+pub mod dedup;
+pub mod loadgen;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use dedup::DedupSet;
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ServeMetrics};
+pub use loadgen::{open_loop_load, OpenLoopReport};
+pub use server::{ServeEngine, ServeHandle};

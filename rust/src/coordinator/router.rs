@@ -1,0 +1,176 @@
+//! Shard router: data-parallel sharding with fan-out/merge search.
+//!
+//! At billion scale the paper's index is served from multiple replicas /
+//! shards (Appendix A.4 discusses replica counts); this router implements
+//! the standard data-parallel layout: the corpus is split across S shards,
+//! each holding its own SOAR index over its slice; a query fans out to
+//! every shard and the per-shard top-k lists are merged by score.
+
+use crate::config::{IndexConfig, SearchParams};
+use crate::error::Result;
+use crate::index::{build_index, SearchScratch, Searcher, SoarIndex};
+use crate::linalg::topk::{Scored, TopK};
+use crate::linalg::MatrixF32;
+use crate::runtime::Engine;
+use crate::util::parallel::par_map;
+
+/// A corpus split across shards, each with its own index.
+pub struct ShardedIndex {
+    pub shards: Vec<SoarIndex>,
+    /// Global id of shard s's local id 0.
+    pub offsets: Vec<u32>,
+}
+
+impl ShardedIndex {
+    /// Split `data` into `num_shards` contiguous slices and build one
+    /// index per shard (in parallel).
+    pub fn build(
+        engine: &Engine,
+        data: &MatrixF32,
+        config: &IndexConfig,
+        num_shards: usize,
+    ) -> Result<ShardedIndex> {
+        assert!(num_shards >= 1);
+        let n = data.rows();
+        let per = n.div_ceil(num_shards);
+        let mut slices = Vec::new();
+        let mut offsets = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let stop = (start + per).min(n);
+            offsets.push(start as u32);
+            slices.push((start, stop));
+            start = stop;
+        }
+        // Partition count scales with shard size to keep pts/partition.
+        let shards: Result<Vec<SoarIndex>> = par_map(slices.len(), |si| {
+            let (lo, hi) = slices[si];
+            let rows: Vec<usize> = (lo..hi).collect();
+            let slice = data.gather_rows(&rows);
+            let mut cfg = config.clone();
+            cfg.num_partitions = ((hi - lo) * config.num_partitions / n).max(2);
+            build_index(engine, &slice, &cfg)
+        })
+        .into_iter()
+        .collect();
+        Ok(ShardedIndex {
+            shards: shards?,
+            offsets,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.shards.iter().map(|s| s.n).sum()
+    }
+
+    /// Fan out to all shards and merge by score. Returned ids are
+    /// *global* (shard offset applied).
+    pub fn search(
+        &self,
+        engine: &Engine,
+        q: &[f32],
+        params: &SearchParams,
+        scratches: &mut [SearchScratch],
+    ) -> Vec<Scored> {
+        assert_eq!(scratches.len(), self.shards.len());
+        let mut merged = TopK::new(params.k);
+        for (s, (shard, scratch)) in
+            self.shards.iter().zip(scratches.iter_mut()).enumerate()
+        {
+            let searcher = Searcher::new(shard, engine);
+            let (results, _) = searcher.search(q, params, scratch);
+            let off = self.offsets[s];
+            for r in results {
+                merged.push(r.id + off, r.score);
+            }
+        }
+        merged.into_sorted()
+    }
+
+    /// Fresh per-shard scratch set.
+    pub fn make_scratches(&self) -> Vec<SearchScratch> {
+        self.shards.iter().map(SearchScratch::new).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpillMode;
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+
+    #[test]
+    fn sharded_covers_all_points() {
+        let ds = SyntheticConfig::glove_like(900, 16, 8, 55).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 18,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 3).unwrap();
+        assert_eq!(sharded.num_shards(), 3);
+        assert_eq!(sharded.total_points(), 900);
+        assert_eq!(sharded.offsets, vec![0, 300, 600]);
+    }
+
+    #[test]
+    fn sharded_search_matches_ground_truth_at_full_probe() {
+        let ds = SyntheticConfig::glove_like(1200, 16, 10, 56).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 24,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 4).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let params = SearchParams {
+            k: 10,
+            top_t: 1000, // probe everything in each shard
+            rerank_budget: 300,
+        };
+        let mut scratches = sharded.make_scratches();
+        let mut results = Vec::new();
+        for qi in 0..ds.num_queries() {
+            let res = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+            assert!(res.len() <= 10);
+            // global ids must be in range
+            for r in &res {
+                assert!((r.id as usize) < 1200);
+            }
+            results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+        let recall = gt.mean_recall(&results);
+        assert!(recall > 0.85, "sharded full-probe recall {recall}");
+    }
+
+    #[test]
+    fn single_shard_equivalent_to_unsharded() {
+        let ds = SyntheticConfig::glove_like(500, 16, 5, 57).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 10,
+            spill: SpillMode::None,
+            ..Default::default()
+        };
+        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 1).unwrap();
+        let direct = build_index(&engine, &ds.data, &cfg).unwrap();
+        let params = SearchParams::default();
+        let mut scratches = sharded.make_scratches();
+        let mut scratch = SearchScratch::new(&direct);
+        for qi in 0..5 {
+            let a = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+            let searcher = Searcher::new(&direct, &engine);
+            let (b, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            let ids_a: Vec<u32> = a.iter().map(|s| s.id).collect();
+            let ids_b: Vec<u32> = b.iter().map(|s| s.id).collect();
+            assert_eq!(ids_a, ids_b);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! fvecs / ivecs readers and writers.
+//!
+//! The de-facto interchange format of the ANN benchmark ecosystem
+//! (TEXMEX, ann-benchmarks): each vector is stored as a little-endian
+//! `i32` dimension count followed by that many 4-byte elements (`f32` for
+//! fvecs, `i32` for ivecs). Real corpora (Glove, DEEP, SIFT…) drop into
+//! the engine through these functions.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::linalg::MatrixF32;
+
+/// Read an entire `.fvecs` file into a matrix.
+pub fn read_fvecs(path: &Path) -> Result<MatrixF32> {
+    let mut reader = BufReader::new(File::open(path)?);
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    let mut dim: Option<usize> = None;
+    loop {
+        let mut len_buf = [0u8; 4];
+        match reader.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(len_buf);
+        if d <= 0 {
+            return Err(Error::Serialize(format!("bad fvecs dim {d}")));
+        }
+        let d = d as usize;
+        match dim {
+            None => dim = Some(d),
+            Some(expect) if expect != d => {
+                return Err(Error::Serialize(format!(
+                    "inconsistent fvecs dims: {expect} vs {d}"
+                )))
+            }
+            _ => {}
+        }
+        let mut buf = vec![0u8; d * 4];
+        reader.read_exact(&mut buf)?;
+        for chunk in buf.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        rows += 1;
+    }
+    MatrixF32::from_vec(rows, dim.unwrap_or(0), data)
+}
+
+/// Write a matrix as `.fvecs`.
+pub fn write_fvecs(path: &Path, m: &MatrixF32) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let d = m.cols() as i32;
+    for row in m.iter_rows() {
+        w.write_all(&d.to_le_bytes())?;
+        for &v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an `.ivecs` file (e.g. ground-truth neighbor ids).
+pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<i32>>> {
+    let mut reader = BufReader::new(File::open(path)?);
+    let mut out = Vec::new();
+    loop {
+        let mut len_buf = [0u8; 4];
+        match reader.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(len_buf);
+        if d < 0 {
+            return Err(Error::Serialize(format!("bad ivecs dim {d}")));
+        }
+        let mut buf = vec![0u8; d as usize * 4];
+        reader.read_exact(&mut buf)?;
+        out.push(
+            buf.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+/// Write `.ivecs`.
+pub fn write_ivecs(path: &Path, rows: &[Vec<i32>]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for &v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn fvecs_round_trip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.fvecs");
+        let m = MatrixF32::from_rows(&[&[1.0, -2.5, 3.25], &[0.0, 7.0, -0.125]])
+            .unwrap();
+        write_fvecs(&path, &m).unwrap();
+        let back = read_fvecs(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn ivecs_round_trip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("t.ivecs");
+        let rows = vec![vec![1, 2, 3], vec![-7, 0, 42]];
+        write_ivecs(&path, &rows).unwrap();
+        assert_eq!(read_ivecs(&path).unwrap(), rows);
+    }
+
+    #[test]
+    fn empty_file_is_empty_matrix() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("e.fvecs");
+        std::fs::File::create(&path).unwrap();
+        let m = read_fvecs(&path).unwrap();
+        assert_eq!(m.rows(), 0);
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("bad.fvecs");
+        // dim=4 but only 2 floats present
+        let mut bytes = 4i32.to_le_bytes().to_vec();
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert!(read_fvecs(&path).is_err());
+    }
+
+    #[test]
+    fn inconsistent_dims_error() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("mix.fvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(1i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2i32.to_le_bytes());
+        bytes.extend(1.0f32.to_le_bytes());
+        bytes.extend(2.0f32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert!(read_fvecs(&path).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Exact (brute-force) MIPS ground truth, rayon-parallel over queries.
+//!
+//! Every experiment that reports recall or KMR needs the true
+//! `MIPS_k(q, X)` sets; this is the O(n·d) scan the index exists to avoid,
+//! run once per experiment and cached by the drivers.
+
+use crate::linalg::{dot, MatrixF32, TopK};
+use crate::util::parallel::par_map;
+
+/// Exact top-k neighbor ids (descending score) for each query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroundTruth {
+    pub k: usize,
+    /// `neighbors[q]` = ids sorted by descending inner product.
+    pub neighbors: Vec<Vec<u32>>,
+}
+
+impl GroundTruth {
+    /// The true neighbor set of query `q` as a slice.
+    pub fn of(&self, q: usize) -> &[u32] {
+        &self.neighbors[q]
+    }
+
+    /// recall@k of a candidate list against this truth (set semantics).
+    pub fn recall(&self, q: usize, candidates: &[u32]) -> f64 {
+        let truth: std::collections::HashSet<u32> =
+            self.neighbors[q].iter().copied().collect();
+        if truth.is_empty() {
+            return 1.0;
+        }
+        let hit = candidates
+            .iter()
+            .take(self.k)
+            .filter(|c| truth.contains(c))
+            .count();
+        hit as f64 / truth.len() as f64
+    }
+
+    /// Mean recall@k over all queries.
+    pub fn mean_recall(&self, results: &[Vec<u32>]) -> f64 {
+        assert_eq!(results.len(), self.neighbors.len());
+        let total: f64 = (0..results.len())
+            .map(|q| self.recall(q, &results[q]))
+            .sum();
+        total / results.len().max(1) as f64
+    }
+}
+
+/// Compute exact MIPS ground truth with a parallel linear scan.
+pub fn ground_truth_mips(data: &MatrixF32, queries: &MatrixF32, k: usize) -> GroundTruth {
+    assert_eq!(data.cols(), queries.cols(), "dim mismatch");
+    let k = k.min(data.rows());
+    let neighbors: Vec<Vec<u32>> = par_map(queries.rows(), |qi| {
+        let q = queries.row(qi);
+        let mut tk = TopK::new(k.max(1));
+        for (i, row) in data.iter_rows().enumerate() {
+            tk.push(i as u32, dot(q, row));
+        }
+        tk.into_sorted().into_iter().map(|s| s.id).collect()
+    });
+    GroundTruth { k, neighbors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    #[test]
+    fn orthonormal_identity() {
+        // data = I4; query along axis 2 → neighbor order starts with 2.
+        let data = MatrixF32::from_rows(&[
+            &[1., 0., 0., 0.],
+            &[0., 1., 0., 0.],
+            &[0., 0., 1., 0.],
+            &[0., 0., 0., 1.],
+        ])
+        .unwrap();
+        let queries = MatrixF32::from_rows(&[&[0.1, 0.2, 0.9, 0.3]]).unwrap();
+        let gt = ground_truth_mips(&data, &queries, 2);
+        assert_eq!(gt.neighbors[0], vec![2, 3]);
+    }
+
+    #[test]
+    fn matches_naive_sort() {
+        let ds = SyntheticConfig::glove_like(300, 16, 8, 3).generate();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        for qi in 0..ds.num_queries() {
+            let q = ds.queries.row(qi);
+            let mut scored: Vec<(u32, f32)> = (0..ds.n())
+                .map(|i| (i as u32, dot(q, ds.data.row(i))))
+                .collect();
+            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            let want: Vec<u32> = scored.iter().take(10).map(|s| s.0).collect();
+            assert_eq!(gt.neighbors[qi], want, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn recall_math() {
+        let gt = GroundTruth {
+            k: 4,
+            neighbors: vec![vec![0, 1, 2, 3]],
+        };
+        assert_eq!(gt.recall(0, &[0, 1, 2, 3]), 1.0);
+        assert_eq!(gt.recall(0, &[0, 1, 9, 8]), 0.5);
+        assert_eq!(gt.recall(0, &[9, 8, 7, 6]), 0.0);
+        // only first k candidates count
+        assert_eq!(gt.recall(0, &[9, 8, 7, 6, 0, 1, 2, 3]), 0.0);
+        assert_eq!(gt.mean_recall(&[vec![0, 1, 2, 3]]), 1.0);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = MatrixF32::from_rows(&[&[1.0f32, 0.0], &[0.0, 1.0]]).unwrap();
+        let queries = MatrixF32::from_rows(&[&[1.0f32, 0.0]]).unwrap();
+        let gt = ground_truth_mips(&data, &queries, 10);
+        assert_eq!(gt.k, 2);
+        assert_eq!(gt.neighbors[0].len(), 2);
+    }
+}

@@ -1,0 +1,43 @@
+//! Datasets: synthetic generators, on-disk vector formats, ground truth.
+//!
+//! The paper evaluates on Glove-1M, DEEP, Microsoft SPACEV and Turing-ANNS.
+//! None of those corpora ship with this repo, so `synthetic` provides
+//! generators that reproduce the *structural* properties SOAR exploits
+//! (clusterability + heavy-tailed residual alignment); see DESIGN.md §3 for
+//! the substitution argument. `fvecs` implements the standard
+//! fvecs/ivecs interchange formats so real corpora drop in unchanged.
+
+pub mod fvecs;
+pub mod ground_truth;
+pub mod synthetic;
+pub mod transforms;
+
+pub use ground_truth::{ground_truth_mips, GroundTruth};
+pub use synthetic::{SyntheticConfig, SyntheticKind};
+
+use crate::linalg::MatrixF32;
+
+/// A dataset plus its query workload.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Corpus vectors, one per row.
+    pub data: MatrixF32,
+    /// Query vectors, one per row (same dimensionality).
+    pub queries: MatrixF32,
+    /// Human-readable provenance tag ("glove-like-100k", "deep-like-10k"…)
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.data.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.cols()
+    }
+
+    pub fn num_queries(&self) -> usize {
+        self.queries.rows()
+    }
+}

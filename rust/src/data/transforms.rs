@@ -1,0 +1,172 @@
+//! Metric conversions into MIPS space (§2.1).
+//!
+//! "A number of conversions exist from other commonly used ANN search
+//! metrics, such as Euclidean and cosine distance, to MIPS, and vice
+//! versa" — this module implements the standard ones so Euclidean / cosine
+//! corpora can be indexed by the MIPS engine:
+//!
+//! * **Cosine → MIPS**: L2-normalize rows; inner product = cosine.
+//! * **Euclidean → MIPS**: append `−‖x‖²/2` to datapoints and `1` to
+//!   queries; the MIPS order equals the L2 order.
+//! * **MIPS → Euclidean** (the XBOX reduction, Bachrach et al. [4]):
+//!   append `√(M² − ‖x‖²)` so every augmented row has norm M; the
+//!   L2-nearest augmented point is the MIPS argmax.
+
+use crate::error::{Error, Result};
+use crate::linalg::MatrixF32;
+
+/// L2-normalize rows (cosine → MIPS). Zero rows are left unchanged.
+pub fn cosine_to_mips(data: &MatrixF32) -> MatrixF32 {
+    let mut out = data.clone();
+    out.normalize_rows();
+    out
+}
+
+/// Euclidean NN → MIPS datapoint transform.
+///
+/// `argmin_x ‖q−x‖² = argmax_x (⟨q,x⟩ − ‖x‖²/2)`, so augmenting
+/// datapoints with `−‖x‖²/2` and queries with `1` turns an L2 problem
+/// into MIPS over `[n, d+1]` vectors:
+/// `⟨(q,1), (x, −‖x‖²/2)⟩ = ⟨q,x⟩ − ‖x‖²/2`.
+pub fn euclidean_to_mips(data: &MatrixF32) -> MatrixF32 {
+    let d = data.cols();
+    let mut out = MatrixF32::zeros(data.rows(), d + 1);
+    for i in 0..data.rows() {
+        let row = data.row(i);
+        let dst = out.row_mut(i);
+        dst[..d].copy_from_slice(row);
+        dst[d] = -0.5 * crate::linalg::dot(row, row);
+    }
+    out
+}
+
+/// Query side of [`euclidean_to_mips`]: append `1`.
+pub fn euclidean_query_to_mips(q: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(q.len() + 1);
+    out.extend_from_slice(q);
+    out.push(1.0);
+    out
+}
+
+/// MIPS → Euclidean (the XBOX reduction, Bachrach et al. [4]): augment
+/// datapoints with `√(M² − ‖x‖²)` (M = max corpus norm) so all augmented
+/// rows share norm M, and queries with `0` (after normalizing — query
+/// scale does not change the MIPS order). Then
+/// `‖(q̂,0) − (x, √(M²−‖x‖²))‖² = 1 + M² − 2⟨q̂,x⟩`, so the L2-nearest
+/// augmented point is the MIPS argmax.
+pub fn mips_to_euclidean(
+    data: &MatrixF32,
+    queries: &MatrixF32,
+) -> Result<(MatrixF32, MatrixF32)> {
+    if data.cols() != queries.cols() {
+        return Err(Error::Shape("dim mismatch".into()));
+    }
+    let d = data.cols();
+    let max_sq = data
+        .iter_rows()
+        .map(|r| crate::linalg::dot(r, r))
+        .fold(0.0f32, f32::max);
+    let mut aug_data = MatrixF32::zeros(data.rows(), d + 1);
+    for i in 0..data.rows() {
+        let row = data.row(i);
+        let dst = aug_data.row_mut(i);
+        dst[..d].copy_from_slice(row);
+        dst[d] = (max_sq - crate::linalg::dot(row, row)).max(0.0).sqrt();
+    }
+    let mut aug_q = MatrixF32::zeros(queries.rows(), d + 1);
+    for i in 0..queries.rows() {
+        let src = queries.row(i);
+        let dst = aug_q.row_mut(i);
+        dst[..d].copy_from_slice(src);
+        // normalize query (scaling does not change MIPS order)
+        crate::linalg::normalize(&mut dst[..d]);
+        dst[d] = 0.0;
+    }
+    Ok((aug_data, aug_q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::{SyntheticConfig, SyntheticKind};
+    use crate::linalg::{dot, squared_l2};
+
+    fn unnormalized_fixture() -> crate::data::Dataset {
+        SyntheticConfig {
+            kind: SyntheticKind::GaussianSphereQueries,
+            n: 400,
+            dim: 12,
+            num_queries: 20,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    #[test]
+    fn cosine_rows_unit_norm() {
+        let ds = unnormalized_fixture();
+        let t = cosine_to_mips(&ds.data);
+        for r in t.iter_rows() {
+            assert!((crate::linalg::norm(r) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn xbox_preserves_euclidean_order() {
+        let ds = unnormalized_fixture();
+        let aug = euclidean_to_mips(&ds.data);
+        assert_eq!(aug.cols(), ds.dim() + 1);
+        for qi in 0..ds.num_queries() {
+            let q = ds.queries.row(qi);
+            let aq = euclidean_query_to_mips(q);
+            // exact L2 nearest neighbor
+            let mut best_l2 = (0usize, f32::INFINITY);
+            for i in 0..ds.n() {
+                let d = squared_l2(q, ds.data.row(i));
+                if d < best_l2.1 {
+                    best_l2 = (i, d);
+                }
+            }
+            // exact MIPS in augmented space
+            let mut best_ip = (0usize, f32::NEG_INFINITY);
+            for i in 0..ds.n() {
+                let s = dot(&aq, aug.row(i));
+                if s > best_ip.1 {
+                    best_ip = (i, s);
+                }
+            }
+            assert_eq!(best_l2.0, best_ip.0, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn mips_to_euclidean_preserves_mips_order() {
+        let ds = unnormalized_fixture();
+        let (aug_data, aug_q) = mips_to_euclidean(&ds.data, &ds.queries).unwrap();
+        // augmented corpus rows all share norm M
+        let norms: Vec<f32> = aug_data.iter_rows().map(|r| dot(r, r)).collect();
+        for &n in &norms {
+            assert!((n - norms[0]).abs() < 1e-2);
+        }
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 1);
+        for qi in 0..ds.num_queries() {
+            // L2-nearest in augmented space must equal the MIPS argmax.
+            let mut best = (0usize, f32::INFINITY);
+            for i in 0..ds.n() {
+                let d = squared_l2(aug_q.row(qi), aug_data.row(i));
+                if d < best.1 {
+                    best = (i, d);
+                }
+            }
+            assert_eq!(best.0 as u32, gt.neighbors[qi][0], "query {qi}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = MatrixF32::zeros(3, 4);
+        let b = MatrixF32::zeros(2, 5);
+        assert!(mips_to_euclidean(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Library-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the SOAR engine.
+#[derive(Debug)]
+pub enum Error {
+    /// Configuration was internally inconsistent (bad dims, k > n, ...).
+    Config(String),
+    /// Dataset / index shape mismatch at an API boundary.
+    Shape(String),
+    /// Binary (de)serialization failure for index files.
+    Serialize(String),
+    /// Filesystem IO.
+    Io(std::io::Error),
+    /// PJRT runtime failure (artifact load / compile / execute).
+    Runtime(String),
+    /// The serving coordinator was shut down or a worker died.
+    Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Serialize(m) => write!(f, "serialize error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_variants() {
+        let cases: Vec<(Error, &str)> = vec![
+            (Error::Config("x".into()), "config"),
+            (Error::Shape("x".into()), "shape"),
+            (Error::Serialize("x".into()), "serialize"),
+            (
+                Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")),
+                "io",
+            ),
+            (Error::Runtime("x".into()), "runtime"),
+            (Error::Coordinator("x".into()), "coordinator"),
+        ];
+        for (e, frag) in cases {
+            assert!(e.to_string().contains(frag), "{e}");
+        }
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn failing() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        assert!(matches!(failing(), Err(Error::Io(_))));
+    }
+}

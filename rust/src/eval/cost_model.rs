@@ -1,0 +1,201 @@
+//! The Appendix A.4 cost model: throughput-per-capex (Fig 12a) and
+//! throughput-per-cloud-bill (Fig 12b) re-tabulation.
+//!
+//! The competing submissions' throughputs and hardware costs are taken
+//! verbatim from the paper's tables (they came from the
+//! big-ann-benchmarks leaderboard and vendor pricing); "Ours" plugs in a
+//! *measured* QPS from this repo's serving stack, scaled by the paper's
+//! machine cost. Because our testbed and corpus scale differ wildly from
+//! the paper's, the absolute "Ours" row is labelled as such in the report
+//! — the *computation* is the reproduction target here (see DESIGN.md §3).
+
+/// Google Compute Engine on-demand monthly prices (USD) used by the paper
+/// (us-central1, accessed 2023-03) — Appendix A.4.3.
+pub mod gce {
+    pub const VCPU_MONTH: f64 = 24.81;
+    pub const GB_RAM_MONTH: f64 = 3.33;
+    pub const GB_SSD_MONTH: f64 = 0.08;
+    pub const A100_80GB_MONTH: f64 = 2868.90;
+    pub const V100_16GB_MONTH: f64 = 1267.28;
+}
+
+/// One benchmark submission (paper-reported or ours).
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub name: String,
+    /// QPS at 90% recall@10 on MS-SPACEV.
+    pub qps_spacev: f64,
+    /// QPS at 90% recall@10 on MS-Turing.
+    pub qps_turing: f64,
+    /// Hardware purchase cost (USD); None if not priceable.
+    pub capex_usd: Option<f64>,
+    /// Monthly cloud bill (USD); None if hardware isn't cloud-available.
+    pub cloud_usd_month: Option<f64>,
+}
+
+/// Monthly cloud bill for a CPU server shape.
+pub fn cloud_cost_cpu(vcpus: f64, ram_gb: f64, ssd_gb: f64) -> f64 {
+    vcpus * gce::VCPU_MONTH + ram_gb * gce::GB_RAM_MONTH + ssd_gb * gce::GB_SSD_MONTH
+}
+
+/// The paper's Appendix A.4 table, reproduced.
+pub fn paper_submissions() -> Vec<Submission> {
+    vec![
+        Submission {
+            name: "FAISS Baseline".into(),
+            qps_spacev: 3265.0,
+            qps_turing: 2845.0,
+            capex_usd: Some(22_021.90),
+            // 32 vCPU, 768 GB, 1× V100
+            cloud_usd_month: Some(
+                cloud_cost_cpu(32.0, 768.0, 0.0) + gce::V100_16GB_MONTH,
+            ),
+        },
+        Submission {
+            name: "DiskANN".into(),
+            qps_spacev: 6503.0,
+            qps_turing: 17201.0,
+            capex_usd: Some(11_742.0),
+            // 72 vCPU, 64 GB, 3276.8 GB SSD
+            cloud_usd_month: Some(cloud_cost_cpu(72.0, 64.0, 3276.8)),
+        },
+        Submission {
+            name: "Gemini".into(),
+            qps_spacev: 16_422.0,
+            qps_turing: 21_780.0,
+            capex_usd: Some(55_726.66),
+            cloud_usd_month: None, // proprietary hardware
+        },
+        Submission {
+            name: "CuANNS-IVFPQ".into(),
+            qps_spacev: 108_302.0,
+            qps_turing: 109_745.0,
+            capex_usd: Some(150_000.0),
+            // 256 vCPU, 2048 GB, 1× A100 (only one GPU used)
+            cloud_usd_month: Some(
+                cloud_cost_cpu(256.0, 2048.0, 0.0) + gce::A100_80GB_MONTH,
+            ),
+        },
+        Submission {
+            name: "CuANNS-Multi".into(),
+            qps_spacev: 839_749.0,
+            qps_turing: 584_293.0,
+            capex_usd: Some(150_000.0),
+            cloud_usd_month: Some(
+                cloud_cost_cpu(256.0, 2048.0, 0.0) + 8.0 * gce::A100_80GB_MONTH,
+            ),
+        },
+        Submission {
+            name: "OptANNe GraphANN".into(),
+            qps_spacev: 157_828.0,
+            qps_turing: 161_463.0,
+            capex_usd: Some(14_664.20),
+            cloud_usd_month: None, // Optane discontinued; not cloud-priceable
+        },
+    ]
+}
+
+/// The paper's "Ours" hardware shape: 32 vCPU / 150 GB, Supermicro capex.
+pub fn ours_submission(qps_spacev: f64, qps_turing: f64) -> Submission {
+    Submission {
+        name: "Ours (SOAR)".into(),
+        qps_spacev,
+        qps_turing,
+        capex_usd: Some(2740.60),
+        cloud_usd_month: Some(cloud_cost_cpu(32.0, 150.0, 0.0)),
+    }
+}
+
+/// The paper's reported "Ours" numbers for reference.
+pub fn paper_ours() -> Submission {
+    ours_submission(46_712.0, 32_608.0)
+}
+
+/// QPS-per-cost ratio rows (Fig 12a when `capex`, Fig 12b otherwise).
+/// Returns `(name, spacev_ratio, turing_ratio)` skipping unpriceable rows.
+pub fn ratio_table(subs: &[Submission], capex: bool) -> Vec<(String, f64, f64)> {
+    subs.iter()
+        .filter_map(|s| {
+            let cost = if capex { s.capex_usd } else { s.cloud_usd_month }?;
+            Some((
+                s.name.clone(),
+                s.qps_spacev / cost,
+                s.qps_turing / cost,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_costs_match_paper_appendix() {
+        // Paper: DiskANN = $2261.18/month.
+        let diskann = cloud_cost_cpu(72.0, 64.0, 3276.8);
+        assert!((diskann - 2261.18).abs() < 1.0, "{diskann}");
+        // Paper: FAISS = $4617.57/month (±$2: the paper's table carries
+        // its own rounding; our exact sum is 4618.64).
+        let faiss = cloud_cost_cpu(32.0, 768.0, 0.0) + gce::V100_16GB_MONTH;
+        assert!((faiss - 4617.57).abs() < 2.0, "{faiss}");
+        // Paper: CuANNS-IVFPQ = $16036.46 (±$5 paper-side rounding).
+        let cuanns = cloud_cost_cpu(256.0, 2048.0, 0.0) + gce::A100_80GB_MONTH;
+        assert!((cuanns - 16_036.46).abs() < 5.0, "{cuanns}");
+        // Paper: CuANNS-Multi = $36118.76.
+        let multi = cloud_cost_cpu(256.0, 2048.0, 0.0) + 8.0 * gce::A100_80GB_MONTH;
+        assert!((multi - 36_118.76).abs() < 5.0, "{multi}");
+        // Paper: Ours = $1293.09.
+        let ours = cloud_cost_cpu(32.0, 150.0, 0.0);
+        assert!((ours - 1293.09).abs() < 1.0, "{ours}");
+    }
+
+    #[test]
+    fn cloud_ratio_table_matches_paper() {
+        // Appendix A.4.3 table: throughput / monthly cloud cost.
+        let mut subs = paper_submissions();
+        subs.push(paper_ours());
+        let rows = ratio_table(&subs, false);
+        let find = |n: &str| rows.iter().find(|r| r.0.contains(n)).unwrap().clone();
+        let faiss = find("FAISS");
+        assert!((faiss.1 - 0.707).abs() < 0.01, "{}", faiss.1);
+        assert!((faiss.2 - 0.616).abs() < 0.01, "{}", faiss.2);
+        let diskann = find("DiskANN");
+        assert!((diskann.1 - 2.876).abs() < 0.01);
+        assert!((diskann.2 - 7.607).abs() < 0.01);
+        let ours = find("Ours");
+        assert!((ours.1 - 36.12).abs() < 0.1, "{}", ours.1);
+        assert!((ours.2 - 25.22).abs() < 0.1, "{}", ours.2);
+        // the paper's headline: Ours leads the cloud-cost ranking
+        for r in &rows {
+            if !r.0.contains("Ours") {
+                assert!(ours.1 > r.1, "{} beats us on spacev", r.0);
+                assert!(ours.2 > r.2, "{} beats us on turing", r.0);
+            }
+        }
+    }
+
+    #[test]
+    fn capex_ratio_ranking_matches_fig12a() {
+        let mut subs = paper_submissions();
+        subs.push(paper_ours());
+        let rows = ratio_table(&subs, true);
+        // All 7 rows priceable by capex.
+        assert_eq!(rows.len(), 7);
+        let ours = rows.iter().find(|r| r.0.contains("Ours")).unwrap();
+        // Paper: ours leads both capex rankings.
+        for r in &rows {
+            if !r.0.contains("Ours") {
+                assert!(ours.1 > r.1, "{} beats us (spacev capex)", r.0);
+                assert!(ours.2 > r.2, "{} beats us (turing capex)", r.0);
+            }
+        }
+    }
+
+    #[test]
+    fn unpriceable_rows_skipped_in_cloud_table() {
+        let rows = ratio_table(&paper_submissions(), false);
+        assert!(rows.iter().all(|r| !r.0.contains("Gemini")));
+        assert!(rows.iter().all(|r| !r.0.contains("OptANNe")));
+    }
+}

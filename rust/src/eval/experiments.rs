@@ -1,0 +1,885 @@
+//! Experiment drivers: one function per paper figure/table.
+//!
+//! Every driver prints its figure (ASCII chart / table) and writes the raw
+//! series to `reports/<id>.json`. DESIGN.md §4 maps ids to paper
+//! artifacts; EXPERIMENTS.md records the measured-vs-paper comparison.
+
+use std::path::PathBuf;
+
+use crate::config::{IndexConfig, SpillMode};
+use crate::data::ground_truth::{ground_truth_mips, GroundTruth};
+use crate::data::synthetic::SyntheticConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::eval::plot::{render_table, series_json, write_report, AsciiChart};
+use crate::eval::recall::{pareto_frontier, qps_at_recall, recall_curve};
+use crate::index::stats::{binned_means, collect_pair_stats, rank_binned_means};
+use crate::index::{build_index, kmr::compute_kmr, soar, SoarIndex};
+use crate::linalg::pearson;
+use crate::runtime::Engine;
+use crate::util::json::Value;
+
+/// Shared experiment environment.
+pub struct ExpConfig {
+    /// Corpus size.
+    pub n: usize,
+    pub dim: usize,
+    pub num_queries: usize,
+    /// Neighbors per query in ground truth (paper uses k=100 for KMR,
+    /// k=10 for end-to-end benchmarks).
+    pub k: usize,
+    pub seed: u64,
+    /// SOAR λ for the default SOAR index.
+    pub lambda: f32,
+    /// Query perturbation scale. The paper's workloads (real query logs
+    /// against web-scale corpora) are *hard*: many true neighbors live in
+    /// poorly-ranked partitions. 0.25 gives trivially easy queries where
+    /// spilling can't pay for its duplication; ≥0.5 reproduces the heavy
+    /// tail of Fig 1.
+    pub query_noise: f32,
+    /// Within-cluster noise of the generator. Larger values put more
+    /// points near partition boundaries → heavier tail of badly-ranked
+    /// primary partitions (the regime where spilling pays; §5.3).
+    pub data_noise: f32,
+    /// Anisotropic VQ-training weight ratio η (0 disables). The paper
+    /// trains every VQ stage with ScaNN's anisotropic loss (App. A.2).
+    pub anisotropic_eta: f32,
+    pub reports_dir: PathBuf,
+    /// Shrink workloads for CI/smoke runs.
+    pub quick: bool,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            n: 20_000,
+            dim: 64,
+            num_queries: 200,
+            k: 10,
+            seed: 42,
+            lambda: 1.0,
+            query_noise: 0.6,
+            data_noise: 0.55,
+            anisotropic_eta: 0.0,
+            reports_dir: PathBuf::from("reports"),
+            quick: false,
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn quick() -> Self {
+        ExpConfig {
+            n: 4000,
+            num_queries: 50,
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    fn dataset(&self) -> Dataset {
+        let mut cfg =
+            SyntheticConfig::glove_like(self.n, self.dim, self.num_queries, self.seed);
+        cfg.query_noise = self.query_noise;
+        cfg.noise = self.data_noise;
+        cfg.generate()
+    }
+
+    fn index_config(&self, spill: SpillMode) -> IndexConfig {
+        let mut cfg = IndexConfig::for_dataset(self.n, spill);
+        cfg.kmeans.anisotropic_eta = self.anisotropic_eta;
+        cfg
+    }
+
+    fn soar_mode(&self) -> SpillMode {
+        SpillMode::Soar {
+            lambda: self.lambda,
+        }
+    }
+}
+
+struct Env {
+    ds: Dataset,
+    gt: GroundTruth,
+}
+
+fn env(cfg: &ExpConfig, engine: &Engine, spill: SpillMode) -> Result<(Env, SoarIndex)> {
+    let ds = cfg.dataset();
+    let index = build_index(engine, &ds.data, &cfg.index_config(spill))?;
+    let gt = ground_truth_mips(&ds.data, &ds.queries, cfg.k);
+    Ok((Env { ds, gt }, index))
+}
+
+// ---------------------------------------------------------------------
+// Fig 1: mean ⟨q,r⟩ vs RANK of the primary partition
+// ---------------------------------------------------------------------
+
+pub fn fig1(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 1: search difficulty vs quantized score error ==");
+    let (e, index) = env(cfg, engine, SpillMode::None)?;
+    let stats = collect_pair_stats(&index, &e.ds.data, &e.ds.queries, &e.gt);
+    let ranks: Vec<u32> = stats.iter().map(|s| s.primary_rank).collect();
+    let qr: Vec<f32> = stats.iter().map(|s| s.qr).collect();
+    let bins = rank_binned_means(&ranks, &qr);
+    let pts: Vec<(f64, f64)> = bins.iter().map(|&(r, m, _)| (r as f64, m)).collect();
+    let chart = AsciiChart::new(
+        "Fig 1: mean ⟨q,r⟩ vs RANK(q, C_π(x), C)",
+        "RANK (log)",
+        "mean ⟨q,r⟩",
+    )
+    .log_x()
+    .series('o', "no-spill VQ index", pts.clone());
+    println!("{}", chart.render());
+    // Shape check: the highest-rank bucket must sit above the lowest.
+    if let (Some(first), Some(last)) = (bins.first(), bins.last()) {
+        let rising = last.1 > first.1;
+        println!(
+            "  shape: mean ⟨q,r⟩ rises from {:.4} (rank {}) to {:.4} (rank {}): {}",
+            first.1,
+            first.0,
+            last.1,
+            last.0,
+            if rising { "OK (matches paper)" } else { "MISMATCH" }
+        );
+    }
+    write_report(
+        &cfg.reports_dir,
+        "fig1",
+        &Value::obj(vec![
+            ("series", series_json(&pts)),
+            ("pairs", Value::num(stats.len() as f64)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 2: cosθ vs ‖r‖ as predictors of ⟨q,r⟩
+// ---------------------------------------------------------------------
+
+pub fn fig2(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 2: ⟨q,r⟩ correlation with cosθ vs ‖r‖ ==");
+    let (e, index) = env(cfg, engine, SpillMode::None)?;
+    let stats = collect_pair_stats(&index, &e.ds.data, &e.ds.queries, &e.gt);
+    let qr: Vec<f32> = stats.iter().map(|s| s.qr).collect();
+    let cos: Vec<f32> = stats.iter().map(|s| s.cos_theta).collect();
+    let rn: Vec<f32> = stats.iter().map(|s| s.r_norm).collect();
+    let rho_cos = pearson(&cos, &qr);
+    let rho_norm = pearson(&rn, &qr);
+    let cos_bins = binned_means(&cos, &qr, 24);
+    let norm_bins = binned_means(&rn, &qr, 24);
+    let left = AsciiChart::new("Fig 2 (left): ⟨q,r⟩ vs cos θ", "cos θ", "mean ⟨q,r⟩")
+        .series('o', "binned mean", cos_bins.iter().map(|&(x, y, _)| (x, y)).collect());
+    let right = AsciiChart::new("Fig 2 (right): ⟨q,r⟩ vs ‖r‖", "‖r‖", "mean ⟨q,r⟩")
+        .series('x', "binned mean", norm_bins.iter().map(|&(x, y, _)| (x, y)).collect());
+    println!("{}", left.render());
+    println!("{}", right.render());
+    println!("  pearson(cosθ, ⟨q,r⟩)  = {rho_cos:.3}");
+    println!("  pearson(‖r‖,  ⟨q,r⟩)  = {rho_norm:.3}");
+    println!(
+        "  shape: cosθ dominates: {}",
+        if rho_cos > rho_norm.abs() {
+            "OK (matches paper)"
+        } else {
+            "MISMATCH"
+        }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "fig2",
+        &Value::obj(vec![
+            ("rho_cos", Value::num(rho_cos as f64)),
+            ("rho_norm", Value::num(rho_norm as f64)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 4: angle correlation under naive spilling / two-seed VQ
+// Fig 7: same with SOAR
+// ---------------------------------------------------------------------
+
+fn angle_correlation(
+    index: &SoarIndex,
+    ds: &Dataset,
+    gt: &GroundTruth,
+) -> (f32, Vec<(f64, f64)>) {
+    let stats = collect_pair_stats(index, &ds.data, &ds.queries, gt);
+    let a: Vec<f32> = stats.iter().map(|s| s.cos_theta).collect();
+    let b: Vec<f32> = stats.iter().map(|s| s.spill_cos).collect();
+    let sample: Vec<(f64, f64)> = stats
+        .iter()
+        .take(600)
+        .map(|s| (s.cos_theta as f64, s.spill_cos as f64))
+        .collect();
+    (pearson(&a, &b), sample)
+}
+
+pub fn fig4(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 4: naive spilled assignment angle correlation ==");
+    // (a) top-2 Euclidean assignment within one index.
+    let (e, idx_naive) = env(cfg, engine, SpillMode::Nearest)?;
+    let (rho_naive, scatter_a) = angle_correlation(&idx_naive, &e.ds, &e.gt);
+
+    // (b) two separately-seeded VQ indices: θ1/θ2 from each index's
+    // *primary* residual.
+    let mut cfg2 = cfg.index_config(SpillMode::None);
+    cfg2.seed = cfg.seed.wrapping_add(1000);
+    cfg2.kmeans.seed = cfg.seed.wrapping_add(1000);
+    let idx_a = build_index(engine, &e.ds.data, &cfg.index_config(SpillMode::None))?;
+    let idx_b = build_index(engine, &e.ds.data, &cfg2)?;
+    let st_a = collect_pair_stats(&idx_a, &e.ds.data, &e.ds.queries, &e.gt);
+    let st_b = collect_pair_stats(&idx_b, &e.ds.data, &e.ds.queries, &e.gt);
+    let cos_a: Vec<f32> = st_a.iter().map(|s| s.cos_theta).collect();
+    let cos_b: Vec<f32> = st_b.iter().map(|s| s.cos_theta).collect();
+    let rho_two_seed = pearson(&cos_a, &cos_b);
+
+    let chart = AsciiChart::new(
+        "Fig 4a: cos θ vs cos θ' (naive top-2 spill)",
+        "cos θ (primary)",
+        "cos θ' (spill)",
+    )
+    .series('.', "pair", scatter_a);
+    println!("{}", chart.render());
+    println!("  4a pearson(cosθ, cosθ')      = {rho_naive:.3} (naive top-2)");
+    println!("  4b pearson(cosθ₁, cosθ₂)     = {rho_two_seed:.3} (two seeds)");
+    println!(
+        "  shape: positive correlations: {}",
+        if rho_naive > 0.0 && rho_two_seed > 0.0 {
+            "OK (matches paper)"
+        } else {
+            "PARTIAL (small synthetic set)"
+        }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "fig4",
+        &Value::obj(vec![
+            ("rho_naive_top2", Value::num(rho_naive as f64)),
+            ("rho_two_seed", Value::num(rho_two_seed as f64)),
+        ]),
+    )
+}
+
+pub fn fig7(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 7: SOAR spilled assignment angle correlation ==");
+    let (e, idx_soar) = env(cfg, engine, cfg.soar_mode())?;
+    let (rho_soar, scatter) = angle_correlation(&idx_soar, &e.ds, &e.gt);
+    let idx_naive = build_index(engine, &e.ds.data, &cfg.index_config(SpillMode::Nearest))?;
+    let (rho_naive, _) = angle_correlation(&idx_naive, &e.ds, &e.gt);
+    let chart = AsciiChart::new(
+        "Fig 7: cos θ vs cos θ' (SOAR spill)",
+        "cos θ (primary)",
+        "cos θ' (SOAR spill)",
+    )
+    .series('.', "pair", scatter);
+    println!("{}", chart.render());
+    println!("  pearson with SOAR  = {rho_soar:.3}");
+    println!("  pearson naive      = {rho_naive:.3}");
+    println!(
+        "  shape: SOAR decorrelates: {}",
+        if rho_soar < rho_naive {
+            "OK (matches paper)"
+        } else {
+            "MISMATCH"
+        }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "fig7",
+        &Value::obj(vec![
+            ("rho_soar", Value::num(rho_soar as f64)),
+            ("rho_naive", Value::num(rho_naive as f64)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 8: spilled-partition rank vs primary rank, SOAR vs naive
+// ---------------------------------------------------------------------
+
+pub fn fig8(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 8: spilled rank vs primary rank ==");
+    let (e, idx_naive) = env(cfg, engine, SpillMode::Nearest)?;
+    let idx_soar = build_index(engine, &e.ds.data, &cfg.index_config(cfg.soar_mode()))?;
+    let curve = |idx: &SoarIndex| -> Vec<(f64, f64)> {
+        let stats = collect_pair_stats(idx, &e.ds.data, &e.ds.queries, &e.gt);
+        let pr: Vec<u32> = stats.iter().map(|s| s.primary_rank).collect();
+        let sr: Vec<f32> = stats.iter().map(|s| s.spill_rank as f32).collect();
+        rank_binned_means(&pr, &sr)
+            .into_iter()
+            .map(|(r, m, _)| (r as f64, m))
+            .collect()
+    };
+    let naive = curve(&idx_naive);
+    let soar_pts = curve(&idx_soar);
+    let chart = AsciiChart::new(
+        "Fig 8: mean RANK(q,C_π'(x),C) vs RANK(q,C_π(x),C)",
+        "primary rank (log)",
+        "mean spilled rank",
+    )
+    .log_x()
+    .series('x', "no SOAR (naive spill)", naive.clone())
+    .series('o', "SOAR", soar_pts.clone());
+    println!("{}", chart.render());
+    // Shape: at the highest primary ranks, SOAR's spilled rank is lower.
+    let tail = |pts: &[(f64, f64)]| pts.last().map(|p| p.1).unwrap_or(0.0);
+    println!(
+        "  tail spilled rank: naive {:.1} vs SOAR {:.1}: {}",
+        tail(&naive),
+        tail(&soar_pts),
+        if tail(&soar_pts) < tail(&naive) {
+            "OK (matches paper)"
+        } else {
+            "MISMATCH"
+        }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "fig8",
+        &Value::obj(vec![
+            ("naive", series_json(&naive)),
+            ("soar", series_json(&soar_pts)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 9: λ sweep — distortion vs score correlation
+// ---------------------------------------------------------------------
+
+pub fn fig9(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 9: λ sweep (distortion vs score correlation) ==");
+    let ds = cfg.dataset();
+    // One fixed VQ index; only the spilled assignment varies with λ.
+    let base = build_index(engine, &ds.data, &cfg.index_config(SpillMode::None))?;
+    let centroids = &base.ivf.centroids;
+    let primary: Vec<u32> = base.assignments.iter().map(|a| a[0]).collect();
+    let lambdas: &[f32] = if cfg.quick {
+        &[0.0, 1.0, 4.0]
+    } else {
+        &[0.0, 0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0]
+    };
+    let mut distortion_pts = Vec::new();
+    let mut corr_pts = Vec::new();
+    let mut rows = Vec::new();
+    for &lam in lambdas {
+        let assigns = soar::assign_spills(
+            engine,
+            &ds.data,
+            centroids,
+            &primary,
+            SpillMode::Soar { lambda: lam },
+            1,
+        )?;
+        // E‖r'‖² and mean residual cosine (Lemma 3.2: ρ over uniform
+        // sphere queries = ⟨r̂, r̂'⟩).
+        let mut dist = 0.0f64;
+        let mut rho = 0.0f64;
+        for (i, a) in assigns.iter().enumerate() {
+            let r = crate::index::residual(ds.data.row(i), centroids, a[0]);
+            let r2 = crate::index::residual(ds.data.row(i), centroids, a[1]);
+            dist += crate::linalg::dot(&r2, &r2) as f64;
+            rho += crate::linalg::cosine(&r, &r2) as f64;
+        }
+        dist /= ds.n() as f64;
+        rho /= ds.n() as f64;
+        distortion_pts.push((lam as f64, dist));
+        corr_pts.push((lam as f64, rho));
+        rows.push(vec![
+            format!("{lam}"),
+            format!("{dist:.5}"),
+            format!("{rho:.4}"),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["λ", "E‖r'‖² (distortion)", "ρ_{⟨q,r⟩,⟨q,r'⟩} (Lemma 3.2)"], &rows)
+    );
+    let rising_dist = distortion_pts.last().unwrap().1 >= distortion_pts[0].1;
+    let falling_rho = corr_pts.last().unwrap().1 <= corr_pts[0].1;
+    println!(
+        "  shape: distortion rises with λ: {} | correlation falls with λ: {}",
+        if rising_dist { "OK" } else { "MISMATCH" },
+        if falling_rho { "OK" } else { "MISMATCH" }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "fig9",
+        &Value::obj(vec![
+            ("distortion", series_json(&distortion_pts)),
+            ("score_correlation", series_json(&corr_pts)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 6 + Table 2: KMR curves
+// ---------------------------------------------------------------------
+
+pub fn kmr_experiment(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    // The paper's Table 2 reports R@100; deep neighbor lists are exactly
+    // where the hard pairs live.
+    let k = if cfg.quick { 20 } else { cfg.k.max(100) };
+    println!("== Fig 6 / Table 2: KMR curves (R@{k}) ==");
+    let ds = cfg.dataset();
+    let gt = ground_truth_mips(&ds.data, &ds.queries, k);
+    let modes = [
+        ("No Spilling", SpillMode::None),
+        ("Spilling, No SOAR", SpillMode::Nearest),
+        ("SOAR", cfg.soar_mode()),
+    ];
+    let mut curves = Vec::new();
+    let mut results = Vec::new();
+    for (name, mode) in &modes {
+        let idx = build_index(engine, &ds.data, &cfg.index_config(*mode))?;
+        let kmr = compute_kmr(&idx, &ds.queries, &gt);
+        curves.push((
+            *name,
+            kmr.curve(40)
+                .into_iter()
+                .map(|(c, r)| (c as f64, r))
+                .collect::<Vec<_>>(),
+        ));
+        results.push((*name, kmr));
+    }
+    let chart = AsciiChart::new(
+        "Fig 6: KMR recall vs datapoints scanned",
+        "datapoints scanned (log)",
+        "recall of true neighbors",
+    )
+    .log_x()
+    .series('n', curves[0].0, curves[0].1.clone())
+    .series('s', curves[1].0, curves[1].1.clone())
+    .series('O', curves[2].0, curves[2].1.clone());
+    println!("{}", chart.render());
+
+    let targets = [0.80, 0.85, 0.90, 0.95];
+    let mut rows = Vec::new();
+    let mut rank_rows = Vec::new();
+    let mut report_rows = Vec::new();
+    for &t in &targets {
+        let needed: Vec<Option<u64>> = results.iter().map(|(_, k)| k.points_needed(t)).collect();
+        let gain = match (needed[0], needed[2]) {
+            (Some(a), Some(b)) if b > 0 => Some(a as f64 / b as f64),
+            _ => None,
+        };
+        // Mechanism-level: partitions probed (t), scale-free.
+        let t_needed: Vec<Option<u32>> =
+            results.iter().map(|(_, k)| k.partitions_needed(t)).collect();
+        let t_gain = match (t_needed[0], t_needed[2]) {
+            (Some(a), Some(b)) if b > 0 => Some(a as f64 / b as f64),
+            _ => None,
+        };
+        rank_rows.push(vec![
+            format!("{:.0}%", t * 100.0),
+            t_needed[0].map_or("-".into(), |v| v.to_string()),
+            t_needed[1].map_or("-".into(), |v| v.to_string()),
+            t_needed[2].map_or("-".into(), |v| v.to_string()),
+            t_gain.map_or("-".into(), |g| format!("{g:.2}x")),
+        ]);
+        rows.push(vec![
+            format!("{:.0}%", t * 100.0),
+            needed[0].map_or("-".into(), |v| v.to_string()),
+            needed[1].map_or("-".into(), |v| v.to_string()),
+            needed[2].map_or("-".into(), |v| v.to_string()),
+            gain.map_or("-".into(), |g| format!("{g:.2}x")),
+        ]);
+        report_rows.push(Value::obj(vec![
+            ("target", Value::num(t)),
+            (
+                "no_spill",
+                needed[0].map_or(Value::Null, |v| Value::num(v as f64)),
+            ),
+            (
+                "nearest",
+                needed[1].map_or(Value::Null, |v| Value::num(v as f64)),
+            ),
+            (
+                "soar",
+                needed[2].map_or(Value::Null, |v| Value::num(v as f64)),
+            ),
+            ("gain", gain.map_or(Value::Null, Value::num)),
+        ]));
+    }
+    println!(
+        "{}",
+        render_table(
+            &[
+                "Recall target",
+                "No Spilling",
+                "Spilling, No SOAR",
+                "SOAR",
+                "KMR gain (SOAR/none)"
+            ],
+            &rows
+        )
+    );
+    println!("Mechanism view — partitions probed (t) to reach target (scale-free):");
+    println!(
+        "{}",
+        render_table(
+            &[
+                "Recall target",
+                "No Spilling",
+                "Spilling, No SOAR",
+                "SOAR",
+                "rank gain (SOAR/none)"
+            ],
+            &rank_rows
+        )
+    );
+    println!(
+        "  NOTE: the paper's weighted gains >1 appear at ≥1M-point scale (its\n\
+         smallest Table 2 corpus); at laptop scale the 2x partition-size\n\
+         penalty of spilling outweighs the rank improvement (Fig 10 trend).\n\
+         The rank gain above isolates the §3.4 mechanism itself."
+    );
+    write_report(
+        &cfg.reports_dir,
+        "kmr_table2",
+        &Value::obj(vec![("rows", Value::Arr(report_rows))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig 10: gain vs dataset size and recall target
+// ---------------------------------------------------------------------
+
+pub fn fig10(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 10: SOAR gain vs dataset size / recall target ==");
+    let sizes: Vec<usize> = if cfg.quick {
+        vec![2000, 8000]
+    } else {
+        vec![2000, 5000, 10_000, 20_000, 50_000]
+    };
+    let targets = [0.80, 0.90, 0.95];
+    let mut series: Vec<(f64, Vec<(f64, f64)>)> =
+        targets.iter().map(|&t| (t, Vec::new())).collect();
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        // Fixed 400 points/partition, per the paper's protocol.
+        let sub = ExpConfig {
+            n,
+            num_queries: cfg.num_queries.min(n / 20).max(30),
+            ..ExpConfig {
+                reports_dir: cfg.reports_dir.clone(),
+                ..*cfg
+            }
+        };
+        let ds = sub.dataset();
+        let kk = if cfg.quick { 20 } else { sub.k.max(100) };
+        let gt = ground_truth_mips(&ds.data, &ds.queries, kk);
+        let idx_none = build_index(engine, &ds.data, &sub.index_config(SpillMode::None))?;
+        let idx_soar = build_index(engine, &ds.data, &sub.index_config(sub.soar_mode()))?;
+        let kmr_none = compute_kmr(&idx_none, &ds.queries, &gt);
+        let kmr_soar = compute_kmr(&idx_soar, &ds.queries, &gt);
+        let mut row = vec![n.to_string()];
+        for (i, &t) in targets.iter().enumerate() {
+            let ratio = match (kmr_none.points_needed(t), kmr_soar.points_needed(t)) {
+                (Some(a), Some(b)) if b > 0 => a as f64 / b as f64,
+                _ => f64::NAN,
+            };
+            series[i].1.push((n as f64, ratio));
+            row.push(format!("{ratio:.2}x"));
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        render_table(&["n", "gain @80%", "gain @90%", "gain @95%"], &rows)
+    );
+    let chart = AsciiChart::new(
+        "Fig 10: points-scanned ratio (no-SOAR / SOAR)",
+        "dataset size (log)",
+        "ratio (higher = SOAR better)",
+    )
+    .log_x()
+    .series('8', "recall 80%", series[0].1.clone())
+    .series('9', "recall 90%", series[1].1.clone())
+    .series('5', "recall 95%", series[2].1.clone());
+    println!("{}", chart.render());
+    let report = Value::obj(
+        series
+            .iter()
+            .map(|(t, pts)| {
+                (
+                    match *t {
+                        x if x == 0.80 => "gain_at_80",
+                        x if x == 0.90 => "gain_at_90",
+                        _ => "gain_at_95",
+                    },
+                    series_json(pts),
+                )
+            })
+            .collect(),
+    );
+    write_report(&cfg.reports_dir, "fig10", &report)
+}
+
+// ---------------------------------------------------------------------
+// Fig 11: end-to-end recall–QPS curves
+// ---------------------------------------------------------------------
+
+pub fn fig11(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    println!("== Fig 11: recall@10 vs QPS (single thread) ==");
+    let ds = cfg.dataset();
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let top_ts: Vec<usize> = if cfg.quick {
+        vec![1, 2, 4, 8, 16]
+    } else {
+        vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32]
+    };
+    let rbs: Vec<usize> = vec![50, 150, 400];
+    let mut all = Vec::new();
+    for (name, mode) in [
+        ("no-spill VQ", SpillMode::None),
+        ("spill no-SOAR", SpillMode::Nearest),
+        ("SOAR", cfg.soar_mode()),
+    ] {
+        let idx = build_index(engine, &ds.data, &cfg.index_config(mode))?;
+        let pts = recall_curve(&idx, engine, &ds.queries, &gt, 10, &top_ts, &rbs);
+        let frontier = pareto_frontier(&pts);
+        all.push((name, frontier));
+    }
+    let chart_series: Vec<(char, &str, Vec<(f64, f64)>)> = all
+        .iter()
+        .zip(['n', 's', 'O'])
+        .map(|((name, frontier), glyph)| {
+            (
+                glyph,
+                *name,
+                frontier.iter().map(|p| (p.recall, p.qps)).collect(),
+            )
+        })
+        .collect();
+    let mut chart = AsciiChart::new(
+        "Fig 11: recall@10 vs QPS pareto frontier",
+        "recall@10",
+        "QPS (single thread)",
+    );
+    for (g, name, pts) in &chart_series {
+        chart = chart.series(*g, name, pts.clone());
+    }
+    println!("{}", chart.render());
+    let mut rows = Vec::new();
+    for target in [0.8, 0.9, 0.95] {
+        let mut row = vec![format!("{:.0}%", target * 100.0)];
+        for (_, frontier) in &all {
+            row.push(
+                qps_at_recall(frontier, target)
+                    .map_or("-".into(), |q| format!("{q:.0}")),
+            );
+        }
+        rows.push(row);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["recall@10 target", "no-spill QPS", "no-SOAR spill QPS", "SOAR QPS"],
+            &rows
+        )
+    );
+    let report = Value::obj(
+        all.iter()
+            .map(|(name, frontier)| {
+                (
+                    *name,
+                    series_json(
+                        &frontier
+                            .iter()
+                            .map(|p| (p.recall, p.qps))
+                            .collect::<Vec<_>>(),
+                    ),
+                )
+            })
+            .collect(),
+    );
+    write_report(&cfg.reports_dir, "fig11", &report)
+}
+
+// ---------------------------------------------------------------------
+// Fig 12: cost-normalized throughput comparison
+// ---------------------------------------------------------------------
+
+pub fn fig12(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    use crate::eval::cost_model::{paper_ours, paper_submissions, ratio_table};
+    println!("== Fig 12: throughput per dollar (Appendix A.4 re-tabulation) ==");
+    // Measure our SOAR engine's QPS at 90% recall@10 on the synthetic
+    // corpus; reported alongside the paper's own billion-scale number.
+    let ds = cfg.dataset();
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let idx = build_index(engine, &ds.data, &cfg.index_config(cfg.soar_mode()))?;
+    let pts = recall_curve(
+        &idx,
+        engine,
+        &ds.queries,
+        &gt,
+        10,
+        &[1, 2, 4, 8, 16, 32],
+        &[100, 400],
+    );
+    let frontier = pareto_frontier(&pts);
+    let measured = qps_at_recall(&frontier, 0.9).unwrap_or(0.0);
+    println!(
+        "  measured single-thread QPS @90% recall@10 on {}: {measured:.0}",
+        ds.name
+    );
+    println!("  (paper 'Ours' rows below use the paper's reported billion-scale QPS)");
+
+    let mut subs = paper_submissions();
+    subs.push(paper_ours());
+    for (title, capex) in [("Fig 12a: QPS per capex $", true), ("Fig 12b: QPS per cloud $/mo", false)]
+    {
+        let rows_raw = ratio_table(&subs, capex);
+        let rows: Vec<Vec<String>> = rows_raw
+            .iter()
+            .map(|(n, s, t)| vec![n.clone(), format!("{s:.3}"), format!("{t:.3}")])
+            .collect();
+        println!("{title}");
+        println!(
+            "{}",
+            render_table(&["Algorithm", "MS-SPACEV", "MS-Turing"], &rows)
+        );
+        let ours = rows_raw.iter().find(|r| r.0.contains("Ours")).unwrap();
+        let leads = rows_raw
+            .iter()
+            .all(|r| r.0.contains("Ours") || (ours.1 > r.1 && ours.2 > r.2));
+        println!(
+            "  shape: SOAR leads the ranking: {}",
+            if leads { "OK (matches paper)" } else { "MISMATCH" }
+        );
+    }
+    write_report(
+        &cfg.reports_dir,
+        "fig12",
+        &Value::obj(vec![
+            ("measured_qps_at_90", Value::num(measured)),
+            (
+                "capex_rows",
+                Value::Arr(
+                    ratio_table(&subs, true)
+                        .into_iter()
+                        .map(|(n, s, t)| {
+                            Value::obj(vec![
+                                ("name", Value::str(n)),
+                                ("spacev", Value::num(s)),
+                                ("turing", Value::num(t)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Table 1: memory consumption
+// ---------------------------------------------------------------------
+
+pub fn table1(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    use crate::index::serialize::memory_report;
+    println!("== Table 1: index memory, no-SOAR vs SOAR ==");
+    let ds = cfg.dataset();
+    let idx_none = build_index(engine, &ds.data, &cfg.index_config(SpillMode::None))?;
+    let idx_soar = build_index(engine, &ds.data, &cfg.index_config(cfg.soar_mode()))?;
+    let m_none = memory_report(&idx_none);
+    let m_soar = memory_report(&idx_soar);
+    let delta = (m_soar.total_bytes as f64 - m_none.total_bytes as f64)
+        / m_none.total_bytes as f64;
+    let rows = vec![
+        vec![
+            ds.name.clone(),
+            format!("{:.2} MB", m_none.total_bytes as f64 / 1e6),
+            format!(
+                "{:.2} MB (+{:.1}%)",
+                m_soar.total_bytes as f64 / 1e6,
+                delta * 100.0
+            ),
+            format!("{:.1}%", m_soar.analytic_overhead_int8 * 100.0),
+        ],
+    ];
+    println!(
+        "{}",
+        render_table(
+            &["Dataset", "No SOAR", "With SOAR", "analytic §3.5 estimate"],
+            &rows
+        )
+    );
+    println!(
+        "  breakdown (SOAR): centroids {}K ids {}K codes {}K codebooks {}K int8 {}K",
+        m_soar.centroids_bytes / 1024,
+        m_soar.posting_id_bytes / 1024,
+        m_soar.pq_code_bytes / 1024,
+        m_soar.pq_codebook_bytes / 1024,
+        m_soar.int8_bytes / 1024
+    );
+    println!(
+        "  shape: overhead small & near analytic: {}",
+        if delta < 0.35 { "OK (matches paper)" } else { "MISMATCH" }
+    );
+    write_report(
+        &cfg.reports_dir,
+        "table1",
+        &Value::obj(vec![
+            ("no_soar_bytes", Value::num(m_none.total_bytes as f64)),
+            ("soar_bytes", Value::num(m_soar.total_bytes as f64)),
+            ("relative_increase", Value::num(delta)),
+            (
+                "analytic_estimate",
+                Value::num(m_soar.analytic_overhead_int8),
+            ),
+        ]),
+    )
+}
+
+/// Run every experiment in DESIGN.md §4 order.
+pub fn run_all(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
+    fig1(cfg, engine)?;
+    fig2(cfg, engine)?;
+    fig4(cfg, engine)?;
+    fig7(cfg, engine)?;
+    fig8(cfg, engine)?;
+    fig9(cfg, engine)?;
+    kmr_experiment(cfg, engine)?;
+    fig10(cfg, engine)?;
+    fig11(cfg, engine)?;
+    fig12(cfg, engine)?;
+    table1(cfg, engine)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny(dir: &TempDir) -> ExpConfig {
+        ExpConfig {
+            n: 1200,
+            dim: 16,
+            num_queries: 20,
+            k: 5,
+            reports_dir: dir.path().to_path_buf(),
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_experiments_run_and_emit_reports() {
+        let dir = TempDir::new().unwrap();
+        let cfg = tiny(&dir);
+        let engine = Engine::cpu();
+        run_all(&cfg, &engine).unwrap();
+        for name in [
+            "fig1", "fig2", "fig4", "fig7", "fig8", "fig9", "kmr_table2", "fig10",
+            "fig11", "fig12", "table1",
+        ] {
+            let path = dir.join(&format!("{name}.json"));
+            assert!(path.exists(), "{name}.json missing");
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(Value::parse(&text).is_ok(), "{name}.json unparseable");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Evaluation drivers that regenerate every table and figure of the paper.
+//!
+//! Each submodule produces one family of artifacts; the CLI
+//! (`soar experiments <id>`) and the `examples/` binaries call into these.
+//! DESIGN.md §4 maps experiment ids to paper figures/tables:
+//!
+//! * [`experiments`] — one driver per figure/table (Figs 1–12, Tables 1–2),
+//! * [`recall`]      — recall–QPS sweeps + Pareto reduction (Fig 11),
+//! * [`cost_model`]  — Appendix A.4 pricing tables (Fig 12),
+//! * [`plot`]        — ASCII charts, table rendering, JSON reports.
+
+pub mod cost_model;
+pub mod experiments;
+pub mod plot;
+pub mod recall;
+
+pub use experiments::ExpConfig;
+pub use recall::{pareto_frontier, qps_at_recall, recall_curve, RecallPoint};

@@ -1,0 +1,242 @@
+//! Terminal plotting + report emission for the experiment drivers.
+//!
+//! Each driver renders its figure as an ASCII chart (the repo has no
+//! display dependencies) and dumps the raw series as JSON under
+//! `reports/` so the numbers can be re-plotted elsewhere.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::Value;
+
+/// An ASCII scatter/line chart over f64 points.
+pub struct AsciiChart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    /// (legend glyph, points)
+    pub series: Vec<(char, Vec<(f64, f64)>)>,
+    pub legend: Vec<String>,
+}
+
+impl AsciiChart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> AsciiChart {
+        AsciiChart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 20,
+            log_x: false,
+            series: Vec::new(),
+            legend: Vec::new(),
+        }
+    }
+
+    pub fn log_x(mut self) -> Self {
+        self.log_x = true;
+        self
+    }
+
+    pub fn series(mut self, glyph: char, label: &str, points: Vec<(f64, f64)>) -> Self {
+        self.series.push((glyph, points));
+        self.legend.push(format!("{glyph} = {label}"));
+        self
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        if self.log_x {
+            x.max(1e-12).log10()
+        } else {
+            x
+        }
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for (_, s) in &self.series {
+            for &(x, y) in s {
+                pts.push((self.tx(x), y));
+            }
+        }
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (glyph, s) in &self.series {
+            for &(x, y) in s {
+                let gx = ((self.tx(x) - x0) / (x1 - x0) * (self.width - 1) as f64).round()
+                    as usize;
+                let gy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - gy.min(self.height - 1);
+                grid[row][gx.min(self.width - 1)] = *glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("  {}\n", self.title));
+        out.push_str(&format!(
+            "  {} (y: {:.4} .. {:.4})\n",
+            self.y_label, y0, y1
+        ));
+        for row in &grid {
+            out.push_str("  |");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str("  +");
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        let x_desc = if self.log_x {
+            format!(
+                "  {} (x, log10: {:.2} .. {:.2})\n",
+                self.x_label, x0, x1
+            )
+        } else {
+            format!("  {} (x: {:.4} .. {:.4})\n", self.x_label, x0, x1)
+        };
+        out.push_str(&x_desc);
+        for l in &self.legend {
+            out.push_str(&format!("  {l}\n"));
+        }
+        out
+    }
+}
+
+/// Fixed-width table rendering.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| format!("+{}", "-".repeat(w + 2)))
+        .collect::<String>()
+        + "+";
+    let fmt_row = |cells: &[String]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("| {:<w$} ", c, w = widths[i]));
+        }
+        line.push('|');
+        line
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('\n');
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    out
+}
+
+/// Write a JSON report under `dir` (created if needed).
+pub fn write_report(dir: &Path, name: &str, value: &Value) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_json_pretty())?;
+    println!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// Series of (x, y) pairs as a JSON array.
+pub fn series_json(points: &[(f64, f64)]) -> Value {
+    Value::Arr(
+        points
+            .iter()
+            .map(|&(x, y)| Value::Arr(vec![Value::num(x), Value::num(y)]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn chart_renders_points() {
+        let chart = AsciiChart::new("t", "x", "y")
+            .series('o', "a", vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)])
+            .series('x', "b", vec![(0.0, 4.0), (2.0, 0.0)]);
+        let s = chart.render();
+        assert!(s.contains('o'));
+        assert!(s.contains('x'));
+        assert!(s.contains("o = a"));
+        assert!(s.lines().count() > 10);
+    }
+
+    #[test]
+    fn chart_log_x_and_degenerate() {
+        let c = AsciiChart::new("t", "x", "y").log_x().series(
+            '*',
+            "s",
+            vec![(1.0, 1.0), (10.0, 1.0), (100.0, 1.0)],
+        );
+        let s = c.render();
+        assert!(s.contains("log10"));
+        let empty = AsciiChart::new("e", "x", "y").render();
+        assert!(empty.contains("no data"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "1234567".into()],
+            ],
+        );
+        assert!(t.contains("| a         |"));
+        assert!(t.contains("| long-name |"));
+    }
+
+    #[test]
+    fn report_round_trips() {
+        let dir = TempDir::new().unwrap();
+        let v = Value::obj(vec![("x", Value::num(1.5))]);
+        write_report(dir.path(), "test", &v).unwrap();
+        let text = std::fs::read_to_string(dir.join("test.json")).unwrap();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn series_json_shape() {
+        let v = series_json(&[(1.0, 2.0), (3.0, 4.0)]);
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].as_arr().unwrap()[0].as_f64().unwrap(), 3.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Recall–throughput sweeps (the ann-benchmarks-style measurement behind
+//! Fig 11 / Fig 12).
+//!
+//! A sweep runs the searcher over a grid of `(top_t, rerank_budget)`
+//! operating points, measuring recall@k against exact ground truth and
+//! single-thread query throughput, then reduces to the Pareto frontier.
+
+use std::time::Instant;
+
+use crate::config::SearchParams;
+use crate::data::ground_truth::GroundTruth;
+use crate::index::{SearchScratch, Searcher, SoarIndex};
+use crate::linalg::MatrixF32;
+use crate::runtime::Engine;
+
+/// One measured operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct RecallPoint {
+    pub top_t: usize,
+    pub rerank_budget: usize,
+    pub recall: f64,
+    /// Single-thread queries/second.
+    pub qps: f64,
+    /// Mean posting entries scanned per query.
+    pub mean_points_scanned: f64,
+}
+
+/// Sweep the operating grid. `k` is the recall@k target.
+pub fn recall_curve(
+    index: &SoarIndex,
+    engine: &Engine,
+    queries: &MatrixF32,
+    gt: &GroundTruth,
+    k: usize,
+    top_ts: &[usize],
+    rerank_budgets: &[usize],
+) -> Vec<RecallPoint> {
+    let searcher = Searcher::new(index, engine);
+    let mut scratch = SearchScratch::new(index);
+    let mut out = Vec::new();
+    for &top_t in top_ts {
+        for &rb in rerank_budgets {
+            let params = SearchParams {
+                k,
+                top_t,
+                rerank_budget: rb.max(k),
+            };
+            let mut results = Vec::with_capacity(queries.rows());
+            let mut scanned = 0u64;
+            let start = Instant::now();
+            for qi in 0..queries.rows() {
+                let (res, stats) = searcher.search(queries.row(qi), &params, &mut scratch);
+                scanned += stats.points_scanned as u64;
+                results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+            }
+            let elapsed = start.elapsed().as_secs_f64();
+            out.push(RecallPoint {
+                top_t,
+                rerank_budget: params.rerank_budget,
+                recall: gt.mean_recall(&results),
+                qps: queries.rows() as f64 / elapsed.max(1e-9),
+                mean_points_scanned: scanned as f64 / queries.rows() as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Reduce to the Pareto frontier (max QPS at each recall level),
+/// sorted by ascending recall.
+pub fn pareto_frontier(points: &[RecallPoint]) -> Vec<RecallPoint> {
+    let mut sorted: Vec<RecallPoint> = points.to_vec();
+    // Sort by descending recall, then descending qps; sweep keeping the
+    // running max qps.
+    sorted.sort_by(|a, b| {
+        b.recall
+            .partial_cmp(&a.recall)
+            .unwrap()
+            .then(b.qps.partial_cmp(&a.qps).unwrap())
+    });
+    let mut frontier: Vec<RecallPoint> = Vec::new();
+    let mut best_qps = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.qps > best_qps {
+            best_qps = p.qps;
+            frontier.push(p);
+        }
+    }
+    frontier.reverse();
+    frontier
+}
+
+/// Interpolate the QPS achievable at a given recall target from a
+/// frontier (None if the target is unreachable).
+pub fn qps_at_recall(frontier: &[RecallPoint], target: f64) -> Option<f64> {
+    frontier
+        .iter()
+        .filter(|p| p.recall >= target)
+        .map(|p| p.qps)
+        .fold(None, |acc, q| Some(acc.map_or(q, |a: f64| a.max(q))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SpillMode};
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+
+    fn fixture() -> (crate::data::Dataset, SoarIndex, GroundTruth, Engine) {
+        let ds = SyntheticConfig::glove_like(1500, 16, 16, 91).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 30,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        (ds, idx, gt, engine)
+    }
+
+    #[test]
+    fn sweep_produces_monotone_scan_counts() {
+        let (ds, idx, gt, engine) = fixture();
+        let pts = recall_curve(&idx, &engine, &ds.queries, &gt, 10, &[1, 5, 30], &[100]);
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].mean_points_scanned < pts[2].mean_points_scanned);
+        // probing everything should give high recall
+        assert!(pts[2].recall > 0.8, "recall {}", pts[2].recall);
+        for p in &pts {
+            assert!(p.qps > 0.0);
+        }
+    }
+
+    #[test]
+    fn pareto_frontier_is_monotone() {
+        let (ds, idx, gt, engine) = fixture();
+        let pts = recall_curve(
+            &idx,
+            &engine,
+            &ds.queries,
+            &gt,
+            10,
+            &[1, 2, 5, 10, 30],
+            &[50, 200],
+        );
+        let f = pareto_frontier(&pts);
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[1].recall >= w[0].recall);
+            assert!(w[1].qps <= w[0].qps + 1e-9);
+        }
+    }
+
+    #[test]
+    fn qps_at_recall_interpolation() {
+        let mk = |recall, qps| RecallPoint {
+            top_t: 1,
+            rerank_budget: 10,
+            recall,
+            qps,
+            mean_points_scanned: 0.0,
+        };
+        let frontier = vec![mk(0.5, 1000.0), mk(0.9, 100.0)];
+        assert_eq!(qps_at_recall(&frontier, 0.4), Some(1000.0));
+        assert_eq!(qps_at_recall(&frontier, 0.8), Some(100.0));
+        assert_eq!(qps_at_recall(&frontier, 0.95), None);
+    }
+}

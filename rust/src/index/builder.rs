@@ -1,0 +1,260 @@
+//! The indexing pipeline (§3.5):
+//!
+//! 1. train a standard VQ index (k-means, optionally anisotropic),
+//! 2. primary-assign every datapoint (batched engine matmuls),
+//! 3. compute partitioning residuals,
+//! 4. SOAR-assign spilled partitions (Theorem 3.1 loss via the engine),
+//! 5. train the residual PQ and encode every (point, partition) pair,
+//! 6. encode int8 rerank vectors.
+//!
+//! "Creating a SOAR-enabled index first requires training a standard,
+//! non-spilled VQ index as usual" — the pipeline below is exactly that,
+//! plus step 4; all other stages are shared with the baseline.
+
+use crate::config::IndexConfig;
+use crate::error::Result;
+use crate::index::{ivf::IvfIndex, soar, SoarIndex};
+use crate::linalg::MatrixF32;
+use crate::quant::{Int8Quantizer, KMeans, KMeansConfig, ProductQuantizer};
+use crate::runtime::Engine;
+use crate::util::parallel::{par_chunks_mut, par_map};
+
+/// Batch size for engine scoring calls during assignment.
+const ASSIGN_BATCH: usize = 256;
+
+/// Build an index over `data` with `config`, using `engine` for the
+/// dense scoring stages (PJRT artifacts or CPU fallback).
+pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> Result<SoarIndex> {
+    config.validate(data.rows(), data.cols())?;
+    let n = data.rows();
+    let dim = data.cols();
+
+    // 1. VQ codebook.
+    let km = KMeans::train(
+        data,
+        &KMeansConfig {
+            k: config.num_partitions,
+            seed: config.seed,
+            ..config.kmeans.clone()
+        },
+    )?;
+    let centroids = km.centroids;
+
+    // 2. Primary assignment: argmin ‖x−c‖² via the engine's loss matmuls.
+    let primary = primary_assignments(engine, data, &centroids)?;
+
+    // 3+4. Spilled assignments (no-op for SpillMode::None).
+    let assignments = soar::assign_spills(
+        engine,
+        data,
+        &centroids,
+        &primary,
+        config.spill,
+        config.num_spills,
+    )?;
+
+    // 5. Residual PQ: train on primary residuals (subsampled inside
+    // KMeans::train), then encode one code per (point, partition) pair.
+    let residuals = primary_residuals(data, &centroids, &primary);
+    let pq = ProductQuantizer::train(&residuals, &config.pq)?;
+    drop(residuals);
+
+    let mut ivf = IvfIndex::new(centroids);
+    let code_bytes = pq.code_bytes();
+    // Encode in parallel, then scatter into posting lists sequentially.
+    let encoded: Vec<Vec<(u32, Vec<u8>)>> = par_map(n, |i| {
+        assignments[i]
+            .iter()
+            .map(|&p| {
+                let r = crate::index::residual(data.row(i), &ivf.centroids, p);
+                (p, pq.encode(&r).0)
+            })
+            .collect()
+    });
+    for (i, codes) in encoded.into_iter().enumerate() {
+        for (p, code) in codes {
+            ivf.postings[p as usize].push(i as u32, &code);
+        }
+    }
+    debug_assert_eq!(
+        ivf.total_postings(),
+        n * config.assignments_per_point(),
+        "every point must appear once per assignment"
+    );
+    let _ = code_bytes;
+
+    // 6. int8 rerank storage.
+    let (int8, raw_int8) = if config.store_int8 {
+        let q8 = Int8Quantizer::train(data)?;
+        let mut raw = vec![0i8; n * dim];
+        par_chunks_mut(&mut raw, dim, |i, chunk| {
+            chunk.copy_from_slice(&q8.encode(data.row(i)));
+        });
+        (Some(q8), raw)
+    } else {
+        (None, Vec::new())
+    };
+
+    let index = SoarIndex {
+        config: config.clone(),
+        n,
+        dim,
+        ivf,
+        pq,
+        int8,
+        raw_int8,
+        assignments,
+    };
+    index.check_invariants()?;
+    Ok(index)
+}
+
+/// Argmin-ℓ₂ primary assignment, batched through the engine.
+fn primary_assignments(
+    engine: &Engine,
+    data: &MatrixF32,
+    centroids: &MatrixF32,
+) -> Result<Vec<u32>> {
+    let n = data.rows();
+    let d = data.cols();
+    let mut primary = vec![0u32; n];
+    let mut start = 0usize;
+    while start < n {
+        let stop = (start + ASSIGN_BATCH).min(n);
+        let rows: Vec<usize> = (start..stop).collect();
+        let x = data.gather_rows(&rows);
+        let zeros = MatrixF32::zeros(x.rows(), d);
+        // λ=0 SOAR loss ≡ squared Euclidean distance matrix.
+        let loss = engine.soar_loss(&x, &zeros, centroids, 0.0)?;
+        for (local, gi) in (start..stop).enumerate() {
+            primary[gi] = crate::linalg::argmin(loss.row(local)) as u32;
+        }
+        start = stop;
+    }
+    Ok(primary)
+}
+
+/// Residuals of every point w.r.t. its primary centroid.
+fn primary_residuals(data: &MatrixF32, centroids: &MatrixF32, primary: &[u32]) -> MatrixF32 {
+    let n = data.rows();
+    let d = data.cols();
+    let mut out = MatrixF32::zeros(n, d);
+    par_chunks_mut(out.as_mut_slice(), d, |i, dst| {
+        let c = centroids.row(primary[i] as usize);
+        let x = data.row(i);
+        for j in 0..d {
+            dst[j] = x[j] - c[j];
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpillMode;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn small_config(spill: SpillMode) -> IndexConfig {
+        IndexConfig {
+            num_partitions: 16,
+            spill,
+            num_spills: 1,
+            kmeans: KMeansConfig {
+                iters: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn build_no_spill_counts() {
+        let ds = SyntheticConfig::glove_like(1000, 16, 4, 1).generate();
+        let engine = Engine::cpu();
+        let idx = build_index(&engine, &ds.data, &small_config(SpillMode::None)).unwrap();
+        assert_eq!(idx.n, 1000);
+        assert_eq!(idx.ivf.total_postings(), 1000);
+        assert_eq!(idx.num_partitions(), 16);
+        for a in &idx.assignments {
+            assert_eq!(a.len(), 1);
+        }
+        idx.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn build_soar_duplicates_postings() {
+        let ds = SyntheticConfig::glove_like(800, 16, 4, 2).generate();
+        let engine = Engine::cpu();
+        let idx = build_index(
+            &engine,
+            &ds.data,
+            &small_config(SpillMode::Soar { lambda: 1.0 }),
+        )
+        .unwrap();
+        assert_eq!(idx.ivf.total_postings(), 1600); // 2 assignments/point
+        for a in &idx.assignments {
+            assert_eq!(a.len(), 2);
+            assert_ne!(a[0], a[1]);
+        }
+    }
+
+    #[test]
+    fn primary_assignment_is_closest_centroid() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 3).generate();
+        let engine = Engine::cpu();
+        let idx = build_index(&engine, &ds.data, &small_config(SpillMode::None)).unwrap();
+        for i in 0..300usize {
+            let x = ds.data.row(i);
+            let mut best = 0u32;
+            let mut bd = f32::INFINITY;
+            for (c, row) in idx.ivf.centroids.iter_rows().enumerate() {
+                let d = crate::linalg::squared_l2(x, row);
+                if d < bd {
+                    bd = d;
+                    best = c as u32;
+                }
+            }
+            assert_eq!(idx.assignments[i][0], best, "point {i}");
+        }
+    }
+
+    #[test]
+    fn int8_storage_toggle() {
+        let ds = SyntheticConfig::glove_like(400, 8, 4, 4).generate();
+        let engine = Engine::cpu();
+        let mut cfg = small_config(SpillMode::None);
+        cfg.store_int8 = false;
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        assert!(idx.int8.is_none());
+        assert!(idx.raw_int8.is_empty());
+        cfg.store_int8 = true;
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        assert_eq!(idx.raw_int8.len(), 400 * 8);
+        // int8 record decodes close to the original
+        let rec = idx.int8_record(7);
+        let dec = idx.int8.as_ref().unwrap().decode(rec);
+        let err = crate::linalg::squared_l2(&dec, ds.data.row(7));
+        assert!(err < 0.01, "int8 reconstruction error {err}");
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let ds = SyntheticConfig::glove_like(100, 8, 2, 5).generate();
+        let engine = Engine::cpu();
+        let mut cfg = small_config(SpillMode::None);
+        cfg.num_partitions = 0;
+        assert!(build_index(&engine, &ds.data, &cfg).is_err());
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let ds = SyntheticConfig::glove_like(500, 8, 2, 6).generate();
+        let engine = Engine::cpu();
+        let cfg = small_config(SpillMode::Soar { lambda: 1.0 });
+        let a = build_index(&engine, &ds.data, &cfg).unwrap();
+        let b = build_index(&engine, &ds.data, &cfg).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.ivf.centroids, b.ivf.centroids);
+    }
+}

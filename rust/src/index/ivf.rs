@@ -1,0 +1,118 @@
+//! Inverted-file (IVF) structure: codebook + per-partition posting lists.
+//!
+//! Each posting entry is a datapoint id plus its packed PQ code (of the
+//! partitioning residual *relative to this partition's centroid* — with
+//! spilling, the same datapoint carries a different code in each partition
+//! it appears in, which is exactly the duplicated dark-blue block of the
+//! paper's Fig 5 memory layout).
+
+use crate::linalg::MatrixF32;
+
+/// One partition's postings. Ids and codes are parallel arrays; codes are
+/// flattened `code_bytes`-wide records so the ADC scan streams a single
+/// contiguous buffer.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PostingList {
+    pub ids: Vec<u32>,
+    /// `ids.len() * code_bytes` packed PQ bytes.
+    pub codes: Vec<u8>,
+}
+
+impl PostingList {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, id: u32, code: &[u8]) {
+        self.ids.push(id);
+        self.codes.extend_from_slice(code);
+    }
+
+    /// The packed code of entry `i`.
+    #[inline]
+    pub fn code(&self, i: usize, code_bytes: usize) -> &[u8] {
+        &self.codes[i * code_bytes..(i + 1) * code_bytes]
+    }
+
+    /// Heap bytes: 4 per id + code bytes (the §3.5 "4 + d/(2s)" model).
+    pub fn memory_bytes(&self) -> usize {
+        self.ids.len() * 4 + self.codes.len()
+    }
+}
+
+/// Codebook + posting lists.
+#[derive(Clone, Debug)]
+pub struct IvfIndex {
+    /// `[c, d]` partition centers.
+    pub centroids: MatrixF32,
+    /// One posting list per partition.
+    pub postings: Vec<PostingList>,
+}
+
+impl IvfIndex {
+    pub fn new(centroids: MatrixF32) -> IvfIndex {
+        let c = centroids.rows();
+        IvfIndex {
+            centroids,
+            postings: vec![PostingList::default(); c],
+        }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.centroids.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    /// Posting sizes per partition (the KMR weighting in §5.1 uses these).
+    pub fn partition_sizes(&self) -> Vec<usize> {
+        self.postings.iter().map(|p| p.len()).collect()
+    }
+
+    /// Total posting entries (n × assignments-per-point).
+    pub fn total_postings(&self) -> usize {
+        self.postings.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.centroids.memory_bytes()
+            + self.postings.iter().map(|p| p.memory_bytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posting_list_push_and_code() {
+        let mut pl = PostingList::default();
+        pl.push(5, &[0xab, 0xcd]);
+        pl.push(9, &[0x12, 0x34]);
+        assert_eq!(pl.len(), 2);
+        assert_eq!(pl.code(0, 2), &[0xab, 0xcd]);
+        assert_eq!(pl.code(1, 2), &[0x12, 0x34]);
+        assert_eq!(pl.memory_bytes(), 2 * 4 + 4);
+    }
+
+    #[test]
+    fn ivf_bookkeeping() {
+        let centroids = MatrixF32::zeros(4, 8);
+        let mut ivf = IvfIndex::new(centroids);
+        assert_eq!(ivf.num_partitions(), 4);
+        assert_eq!(ivf.dim(), 8);
+        ivf.postings[1].push(0, &[0]);
+        ivf.postings[1].push(1, &[1]);
+        ivf.postings[3].push(2, &[2]);
+        assert_eq!(ivf.partition_sizes(), vec![0, 2, 0, 1]);
+        assert_eq!(ivf.total_postings(), 3);
+        assert!(ivf.memory_bytes() > 4 * 8 * 4);
+    }
+}

@@ -1,0 +1,250 @@
+//! K-means-recall (KMR) curves — §2.2.1, Eq. 1 — and the size-weighted
+//! variant used in §5.1 / Fig 6 / Table 2.
+//!
+//! For every (query, true-neighbor) pair we compute the *cost* of finding
+//! that neighbor: the number of posting entries that must be scanned
+//! before the first partition containing the neighbor has been probed,
+//! when partitions are probed in descending ⟨q, c⟩ order. The spilled
+//! variants have larger partitions (duplicated points), which this
+//! weighting charges for — exactly the paper's "sum of the sizes of the t
+//! top-ranked partitions" x-axis.
+
+use crate::data::ground_truth::GroundTruth;
+use crate::index::SoarIndex;
+use crate::linalg::{dot, MatrixF32};
+use crate::util::parallel::par_map;
+
+/// Cost distribution over all (query, neighbor) pairs.
+#[derive(Clone, Debug)]
+pub struct KmrResult {
+    /// Points-scanned-until-found per pair, sorted ascending.
+    pub pair_costs: Vec<u64>,
+    /// Partition-rank-until-found per pair (1-based t), sorted ascending.
+    pub pair_ranks: Vec<u32>,
+    /// Total posting entries in the index (cost of probing everything).
+    pub total_postings: u64,
+    /// Number of partitions.
+    pub num_partitions: usize,
+}
+
+impl KmrResult {
+    /// Fraction of pairs found within a scan budget — the (weighted) KMR
+    /// value at `budget` points.
+    pub fn recall_at(&self, budget: u64) -> f64 {
+        let found = self.pair_costs.partition_point(|&c| c <= budget);
+        found as f64 / self.pair_costs.len().max(1) as f64
+    }
+
+    /// Eq. 1 KMR_k(t): fraction of pairs whose partition ranks ≤ t.
+    pub fn kmr_at_t(&self, t: u32) -> f64 {
+        let found = self.pair_ranks.partition_point(|&r| r <= t);
+        found as f64 / self.pair_ranks.len().max(1) as f64
+    }
+
+    /// Minimum number of partitions probed (t) achieving `recall_target`.
+    /// This is the *mechanism-level* metric: it isolates how much spilling
+    /// improves partition ranks, independent of the duplicated-partition
+    /// size penalty that dominates at small corpus scales.
+    pub fn partitions_needed(&self, recall_target: f64) -> Option<u32> {
+        if self.pair_ranks.is_empty() || !(0.0..=1.0).contains(&recall_target) {
+            return None;
+        }
+        let need = (recall_target * self.pair_ranks.len() as f64).ceil() as usize;
+        if need == 0 {
+            return Some(0);
+        }
+        self.pair_ranks.get(need - 1).copied()
+    }
+
+    /// Minimum scan budget achieving `recall_target` (None if > 1.0).
+    pub fn points_needed(&self, recall_target: f64) -> Option<u64> {
+        if self.pair_costs.is_empty() || !(0.0..=1.0).contains(&recall_target) {
+            return None;
+        }
+        let need = (recall_target * self.pair_costs.len() as f64).ceil() as usize;
+        if need == 0 {
+            return Some(0);
+        }
+        self.pair_costs.get(need - 1).copied()
+    }
+
+    /// Sampled (budget, recall) curve with `num_points` points.
+    pub fn curve(&self, num_points: usize) -> Vec<(u64, f64)> {
+        let n = self.pair_costs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(num_points);
+        for i in 1..=num_points {
+            let q = i as f64 / num_points as f64;
+            let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+            let cost = self.pair_costs[idx];
+            out.push((cost, self.recall_at(cost)));
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Compute the KMR cost distribution for `index` over a query workload.
+pub fn compute_kmr(index: &SoarIndex, queries: &MatrixF32, gt: &GroundTruth) -> KmrResult {
+    let centroids = &index.ivf.centroids;
+    let c = centroids.rows();
+    let sizes: Vec<u64> = index.ivf.partition_sizes().iter().map(|&s| s as u64).collect();
+
+    let per_query: Vec<(Vec<u64>, Vec<u32>)> = par_map(queries.rows(), |qi| {
+            let q = queries.row(qi);
+            // Rank partitions by descending ⟨q, c⟩.
+            let mut order: Vec<u32> = (0..c as u32).collect();
+            let scores: Vec<f32> = centroids.iter_rows().map(|row| dot(q, row)).collect();
+            order.sort_by(|&a, &b| {
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            // pos[p] = 0-based rank of partition p; cum[r] = points scanned
+            // after probing ranks 0..=r.
+            let mut pos = vec![0u32; c];
+            for (r, &p) in order.iter().enumerate() {
+                pos[p as usize] = r as u32;
+            }
+            let mut cum = vec![0u64; c];
+            let mut acc = 0u64;
+            for (r, &p) in order.iter().enumerate() {
+                acc += sizes[p as usize];
+                cum[r] = acc;
+            }
+            let mut costs = Vec::with_capacity(gt.neighbors[qi].len());
+            let mut ranks = Vec::with_capacity(gt.neighbors[qi].len());
+            for &nb in &gt.neighbors[qi] {
+                let best = index.assignments[nb as usize]
+                    .iter()
+                    .map(|&a| pos[a as usize])
+                    .min()
+                    .expect("point must have ≥1 assignment");
+                costs.push(cum[best as usize]);
+                ranks.push(best + 1); // 1-based RANK
+            }
+            (costs, ranks)
+    });
+
+    let mut pair_costs = Vec::new();
+    let mut pair_ranks = Vec::new();
+    for (c_, r_) in per_query {
+        pair_costs.extend(c_);
+        pair_ranks.extend(r_);
+    }
+    pair_costs.sort_unstable();
+    pair_ranks.sort_unstable();
+    KmrResult {
+        pair_costs,
+        pair_ranks,
+        total_postings: index.ivf.total_postings() as u64,
+        num_partitions: c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SpillMode};
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::runtime::Engine;
+
+    fn setup(spill: SpillMode) -> (crate::data::Dataset, SoarIndex, GroundTruth) {
+        let ds = SyntheticConfig::glove_like(2000, 16, 20, 21).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 32,
+            spill,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        (ds, idx, gt)
+    }
+
+    #[test]
+    fn kmr_monotone_and_terminal() {
+        let (ds, idx, gt) = setup(SpillMode::None);
+        let kmr = compute_kmr(&idx, &ds.queries, &gt);
+        assert_eq!(kmr.pair_costs.len(), 20 * 10);
+        // monotone non-decreasing in budget
+        let mut last = 0.0;
+        for b in [0u64, 100, 500, 1000, 2000] {
+            let r = kmr.recall_at(b);
+            assert!(r >= last);
+            last = r;
+        }
+        // probing everything finds everything
+        assert_eq!(kmr.recall_at(kmr.total_postings), 1.0);
+        assert_eq!(kmr.kmr_at_t(idx.num_partitions() as u32), 1.0);
+        assert_eq!(kmr.kmr_at_t(0), 0.0);
+    }
+
+    #[test]
+    fn points_needed_quantiles() {
+        let (ds, idx, gt) = setup(SpillMode::None);
+        let kmr = compute_kmr(&idx, &ds.queries, &gt);
+        let p80 = kmr.points_needed(0.8).unwrap();
+        let p95 = kmr.points_needed(0.95).unwrap();
+        assert!(p95 >= p80);
+        // achieving the target really takes that budget
+        assert!(kmr.recall_at(p80) >= 0.8);
+        assert!(p80 > 0);
+        // beyond-1.0 target impossible
+        assert!(kmr.points_needed(1.5).is_none());
+    }
+
+    #[test]
+    fn soar_improves_partition_ranks() {
+        // The scale-free mechanism claim (Table 2 / §3.4): SOAR reaches
+        // each recall target probing no more *partitions* than either
+        // baseline. (The points-scanned gain >1 additionally requires
+        // ≥1M-scale corpora — see EXPERIMENTS.md E7 — so tiny fixtures
+        // assert the rank metric, which is what the loss actually moves.)
+        let (ds, idx_none, gt) = setup(SpillMode::None);
+        let engine = Engine::cpu();
+        let mk = |spill| {
+            let cfg = IndexConfig {
+                num_partitions: 32,
+                spill,
+                ..Default::default()
+            };
+            build_index(&engine, &ds.data, &cfg).unwrap()
+        };
+        let idx_naive = mk(SpillMode::Nearest);
+        let idx_soar = mk(SpillMode::Soar { lambda: 1.0 });
+        let kmr_none = compute_kmr(&idx_none, &ds.queries, &gt);
+        let kmr_naive = compute_kmr(&idx_naive, &ds.queries, &gt);
+        let kmr_soar = compute_kmr(&idx_soar, &ds.queries, &gt);
+        for target in [0.85, 0.95] {
+            let t_none = kmr_none.partitions_needed(target).unwrap();
+            let t_naive = kmr_naive.partitions_needed(target).unwrap();
+            let t_soar = kmr_soar.partitions_needed(target).unwrap();
+            assert!(
+                t_soar <= t_none,
+                "{target}: SOAR t={t_soar} must be <= no-spill t={t_none}"
+            );
+            assert!(
+                t_soar <= t_naive + 1,
+                "{target}: SOAR t={t_soar} must not lose to naive t={t_naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn curve_is_monotone() {
+        let (ds, idx, gt) = setup(SpillMode::Soar { lambda: 1.0 });
+        let kmr = compute_kmr(&idx, &ds.queries, &gt);
+        let curve = kmr.curve(20);
+        assert!(!curve.is_empty());
+        for w in curve.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! The SOAR index: VQ partitioning + spilled assignments + PQ residual
+//! codes + int8 rerank storage.
+//!
+//! Module map:
+//! * [`ivf`]        — codebook + posting lists substrate.
+//! * [`soar`]       — the paper's contribution: Theorem 3.1 spilled
+//!                    assignment.
+//! * [`builder`]    — the indexing pipeline (§3.5: train VQ → primary
+//!                    assign → residuals → SOAR spill → PQ encode).
+//! * [`searcher`]   — multi-stage query path (centroid top-t → ADC scan
+//!                    with dedup → int8 rerank).
+//! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
+//! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
+//! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
+//! * [`serialize`]  — binary index format + Table 1 memory accounting.
+
+pub mod builder;
+pub mod ivf;
+pub mod kmr;
+pub mod multilevel;
+pub mod searcher;
+pub mod serialize;
+pub mod soar;
+pub mod stats;
+
+pub use builder::build_index;
+pub use ivf::{IvfIndex, PostingList};
+pub use searcher::{SearchScratch, SearchStats, Searcher};
+
+use crate::config::IndexConfig;
+use crate::linalg::MatrixF32;
+use crate::quant::{Int8Quantizer, ProductQuantizer};
+
+/// A fully built SOAR (or baseline VQ) index.
+#[derive(Clone, Debug)]
+pub struct SoarIndex {
+    pub config: IndexConfig,
+    /// Dataset size the index was built over.
+    pub n: usize,
+    pub dim: usize,
+    /// Codebook + posting lists (ids + packed PQ codes).
+    pub ivf: IvfIndex,
+    /// Residual product quantizer shared by all partitions.
+    pub pq: ProductQuantizer,
+    /// Optional int8 rerank stage ("highest-bitrate representation").
+    pub int8: Option<Int8Quantizer>,
+    /// `n * dim` int8 codes when `int8` is present.
+    pub raw_int8: Vec<i8>,
+    /// Per-point partition assignments; `assignments[i][0]` is primary.
+    pub assignments: Vec<Vec<u32>>,
+}
+
+impl SoarIndex {
+    pub fn num_partitions(&self) -> usize {
+        self.ivf.num_partitions()
+    }
+
+    /// The int8 record of point `id` (panics if int8 storage disabled).
+    #[inline]
+    pub fn int8_record(&self, id: u32) -> &[i8] {
+        let d = self.dim;
+        &self.raw_int8[id as usize * d..(id as usize + 1) * d]
+    }
+
+    /// Primary assignment of point `id`.
+    pub fn primary_assignment(&self, id: u32) -> u32 {
+        self.assignments[id as usize][0]
+    }
+
+    /// Basic invariant check used by tests and after deserialization.
+    pub fn check_invariants(&self) -> crate::error::Result<()> {
+        use crate::error::Error;
+        let per_point = self.config.assignments_per_point();
+        if self.assignments.len() != self.n {
+            return Err(Error::Serialize("assignment count != n".into()));
+        }
+        let total: usize = self.ivf.total_postings();
+        if total != self.n * per_point {
+            return Err(Error::Serialize(format!(
+                "posting entries {total} != n*assignments {}",
+                self.n * per_point
+            )));
+        }
+        let cb = self.pq.code_bytes();
+        for (p, list) in self.ivf.postings.iter().enumerate() {
+            if list.codes.len() != list.ids.len() * cb {
+                return Err(Error::Serialize(format!(
+                    "partition {p}: code bytes misaligned"
+                )));
+            }
+            for &id in &list.ids {
+                if id as usize >= self.n {
+                    return Err(Error::Serialize(format!(
+                        "partition {p}: id {id} out of range"
+                    )));
+                }
+            }
+        }
+        if self.int8.is_some() && self.raw_int8.len() != self.n * self.dim {
+            return Err(Error::Serialize("raw int8 storage size mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Compute a point's residual w.r.t. a given partition center.
+pub fn residual(data_row: &[f32], centroids: &MatrixF32, partition: u32) -> Vec<f32> {
+    let mut r = vec![0.0f32; data_row.len()];
+    crate::linalg::sub(data_row, centroids.row(partition as usize), &mut r);
+    r
+}

@@ -1,0 +1,185 @@
+//! Two-level VQ partition selection (Appendix A.4.1).
+//!
+//! The paper's big-ann-benchmarks submission uses a *multilayer* VQ index:
+//! ~7.2M leaf partitions whose centers are themselves vector-quantized
+//! into 40k top-level partitions. Query-time partition selection then
+//! scores the query against the small top-level codebook, descends into
+//! the best top-level cells, and only scores the leaf centroids inside
+//! them — O(√c)-ish instead of O(c) when the codebook is large.
+//!
+//! This module adds that selection structure on top of a built
+//! [`SoarIndex`]: the leaf codebook is clustered once, and
+//! [`MultiLevelSelector::select`] replaces the flat top-t scoring stage.
+//! Recall is configurable through `top_groups` (how many top-level cells
+//! to descend into).
+
+use crate::error::Result;
+use crate::index::SoarIndex;
+use crate::linalg::{dot, MatrixF32, TopK};
+use crate::quant::{KMeans, KMeansConfig};
+use crate::runtime::Engine;
+
+/// Top-level quantization of a leaf codebook.
+pub struct MultiLevelSelector {
+    /// `[g, d]` top-level centers.
+    pub top_centroids: MatrixF32,
+    /// Leaf partition ids per top-level cell.
+    pub groups: Vec<Vec<u32>>,
+}
+
+impl MultiLevelSelector {
+    /// Cluster the index's leaf centroids into `num_groups` cells.
+    pub fn build(engine: &Engine, index: &SoarIndex, num_groups: usize, seed: u64) -> Result<Self> {
+        let leaves = &index.ivf.centroids;
+        let g = num_groups.clamp(1, leaves.rows());
+        let km = KMeans::train(
+            leaves,
+            &KMeansConfig {
+                k: g,
+                iters: 10,
+                seed,
+                train_sample: 0,
+                anisotropic_eta: 0.0,
+            },
+        )?;
+        // Assign each leaf to its closest top-level center (batched
+        // through the engine's λ=0 loss matmuls).
+        let zeros = MatrixF32::zeros(leaves.rows(), leaves.cols());
+        let loss = engine.soar_loss(leaves, &zeros, &km.centroids, 0.0)?;
+        let mut groups = vec![Vec::new(); g];
+        for leaf in 0..leaves.rows() {
+            let cell = crate::linalg::argmin(loss.row(leaf));
+            groups[cell].push(leaf as u32);
+        }
+        Ok(MultiLevelSelector {
+            top_centroids: km.centroids,
+            groups,
+        })
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Select the top-t leaf partitions by descending into the
+    /// `top_groups` best top-level cells. Returns `(leaf id, score)`
+    /// descending, plus the number of leaf centroids actually scored
+    /// (the work saved vs. flat selection).
+    pub fn select(
+        &self,
+        index: &SoarIndex,
+        q: &[f32],
+        top_groups: usize,
+        top_t: usize,
+    ) -> (Vec<(u32, f32)>, usize) {
+        let g = self.groups.len();
+        let mut top = TopK::new(top_groups.clamp(1, g));
+        for (i, row) in self.top_centroids.iter_rows().enumerate() {
+            top.push(i as u32, dot(q, row));
+        }
+        let mut leaves = TopK::new(top_t.max(1));
+        let mut scored = 0usize;
+        for cell in top.into_sorted() {
+            for &leaf in &self.groups[cell.id as usize] {
+                let s = dot(q, index.ivf.centroids.row(leaf as usize));
+                leaves.push(leaf, s);
+                scored += 1;
+            }
+        }
+        (
+            leaves
+                .into_sorted()
+                .into_iter()
+                .map(|s| (s.id, s.score))
+                .collect(),
+            scored,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SearchParams, SpillMode};
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::{build_index, SearchScratch, Searcher};
+
+    fn fixture() -> (crate::data::Dataset, SoarIndex, Engine) {
+        let ds = SyntheticConfig::glove_like(8000, 32, 24, 77).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 64,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        (ds, idx, engine)
+    }
+
+    #[test]
+    fn groups_partition_the_leaves() {
+        let (_, idx, engine) = fixture();
+        let ml = MultiLevelSelector::build(&engine, &idx, 8, 1).unwrap();
+        assert_eq!(ml.num_groups(), 8);
+        let mut seen = std::collections::HashSet::new();
+        for g in &ml.groups {
+            for &leaf in g {
+                assert!(seen.insert(leaf), "leaf {leaf} in two groups");
+                assert!((leaf as usize) < idx.num_partitions());
+            }
+        }
+        assert_eq!(seen.len(), idx.num_partitions());
+    }
+
+    #[test]
+    fn descending_all_groups_equals_flat_selection() {
+        let (ds, idx, engine) = fixture();
+        let ml = MultiLevelSelector::build(&engine, &idx, 8, 1).unwrap();
+        let q = ds.queries.row(0);
+        let (ml_sel, scored) = ml.select(&idx, q, 8, 16);
+        assert_eq!(scored, idx.num_partitions());
+        // flat top-16
+        let flat = engine
+            .centroid_topk(
+                &MatrixF32::from_rows(&[q]).unwrap(),
+                &idx.ivf.centroids,
+                16,
+            )
+            .unwrap();
+        let flat_ids: Vec<u32> = flat[0].iter().map(|x| x.0).collect();
+        let ml_ids: Vec<u32> = ml_sel.iter().map(|x| x.0).collect();
+        assert_eq!(ml_ids, flat_ids);
+    }
+
+    #[test]
+    fn partial_descent_scores_fewer_and_stays_accurate() {
+        let (ds, idx, engine) = fixture();
+        let ml = MultiLevelSelector::build(&engine, &idx, 16, 2).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let params = SearchParams {
+            k: 10,
+            top_t: 8,
+            rerank_budget: 300,
+        };
+        let searcher = Searcher::new(&idx, &engine);
+        let mut scratch = SearchScratch::new(&idx);
+        let mut results = Vec::new();
+        let mut total_scored = 0usize;
+        for qi in 0..ds.num_queries() {
+            let (partitions, scored) = ml.select(&idx, ds.queries.row(qi), 6, params.top_t);
+            total_scored += scored;
+            let (res, _) =
+                searcher.search_partitions(ds.queries.row(qi), &partitions, &params, &mut scratch);
+            results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+        // Must score well under the full 64 leaves per query…
+        assert!(
+            total_scored < ds.num_queries() * idx.num_partitions() * 2 / 3,
+            "scored {total_scored}"
+        );
+        // …and keep recall close to flat selection.
+        let recall = gt.mean_recall(&results);
+        assert!(recall > 0.7, "multilevel recall {recall}");
+    }
+}

@@ -1,0 +1,349 @@
+//! The multi-stage query path.
+//!
+//! 1. **Partition selection** — score the query against the codebook
+//!    (PJRT artifact in the batch path, CPU scan in the single-query
+//!    path) and take the top-t partitions.
+//! 2. **ADC scan** — stream each probed partition's posting list,
+//!    deduplicate spilled candidates (§3.5), and score approximately as
+//!    `⟨q, c_p⟩ + LUT(residual code)`.
+//! 3. **Rerank** — rescore the best `rerank_budget` candidates against
+//!    the int8 highest-bitrate representation and return the top k.
+
+use crate::config::SearchParams;
+use crate::coordinator::DedupSet;
+use crate::error::Result;
+use crate::index::SoarIndex;
+use crate::linalg::topk::Scored;
+use crate::linalg::{dot, MatrixF32, TopK};
+use crate::runtime::Engine;
+use crate::util::parallel::par_map;
+
+/// Reusable per-thread scratch; avoids all hot-path allocation except the
+/// final result vector.
+#[derive(Debug)]
+pub struct SearchScratch {
+    lut: Vec<f32>,
+    visited: DedupSet,
+    q_scaled: Vec<f32>,
+}
+
+impl SearchScratch {
+    pub fn new(index: &SoarIndex) -> SearchScratch {
+        SearchScratch {
+            lut: Vec::new(),
+            visited: DedupSet::new(index.n),
+            q_scaled: Vec::new(),
+        }
+    }
+}
+
+/// Per-query observability counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Partitions probed (= effective t).
+    pub partitions_probed: usize,
+    /// Posting entries scanned, *including* spilled duplicates — the
+    /// memory-bandwidth cost the paper's Fig 6 x-axis measures.
+    pub points_scanned: usize,
+    /// Entries skipped by dedup.
+    pub duplicates_skipped: usize,
+    /// Candidates rescored in the rerank stage.
+    pub candidates_reranked: usize,
+}
+
+/// Read-only searcher over an index; cheap to construct, `Sync`.
+pub struct Searcher<'a> {
+    pub index: &'a SoarIndex,
+    pub engine: &'a Engine,
+}
+
+impl<'a> Searcher<'a> {
+    pub fn new(index: &'a SoarIndex, engine: &'a Engine) -> Searcher<'a> {
+        Searcher { index, engine }
+    }
+
+    /// Single-query search. Partition selection is a CPU scan (a single
+    /// query cannot amortize a PJRT dispatch — that is the batcher's job).
+    pub fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        debug_assert_eq!(q.len(), self.index.dim);
+        let c = self.index.ivf.centroids.rows();
+        let t = params.top_t.min(c);
+        let mut tk = TopK::new(t.max(1));
+        for (j, row) in self.index.ivf.centroids.iter_rows().enumerate() {
+            tk.push(j as u32, dot(q, row));
+        }
+        let partitions: Vec<(u32, f32)> = tk
+            .into_sorted()
+            .into_iter()
+            .map(|s| (s.id, s.score))
+            .collect();
+        self.search_partitions(q, &partitions, params, scratch)
+    }
+
+    /// Batched search: one engine call selects partitions for the whole
+    /// batch (the PJRT hot path), then per-query scans run in parallel.
+    pub fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let t = params.top_t.min(self.index.num_partitions());
+        let partitions = self
+            .engine
+            .centroid_topk(queries, &self.index.ivf.centroids, t)?;
+        // One scratch per worker chunk (not per query): DedupSet::new is an
+        // O(n) zeroed allocation, which at small batch sizes would dominate
+        // the scan itself (perf pass: −28% batch latency vs per-query
+        // scratch). Small batches run serially — thread spawn costs more
+        // than the work they'd parallelize.
+        let nq = queries.rows();
+        if nq <= 8 {
+            let mut scratch = SearchScratch::new(self.index);
+            return Ok((0..nq)
+                .map(|qi| {
+                    self.search_partitions(
+                        queries.row(qi),
+                        &partitions[qi],
+                        params,
+                        &mut scratch,
+                    )
+                })
+                .collect());
+        }
+        let threads = crate::util::parallel::num_threads().min(nq);
+        let chunk = nq.div_ceil(threads);
+        let chunk_results: Vec<Vec<(Vec<Scored>, SearchStats)>> =
+            par_map(threads, |t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(nq);
+                let mut scratch = SearchScratch::new(self.index);
+                (lo..hi)
+                    .map(|qi| {
+                        self.search_partitions(
+                            queries.row(qi),
+                            &partitions[qi],
+                            params,
+                            &mut scratch,
+                        )
+                    })
+                    .collect()
+            });
+        Ok(chunk_results.into_iter().flatten().collect())
+    }
+
+    /// Stages 2+3 given an already-selected partition list.
+    pub fn search_partitions(
+        &self,
+        q: &[f32],
+        partitions: &[(u32, f32)],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        let index = self.index;
+        let code_bytes = index.pq.code_bytes();
+        let mut stats = SearchStats::default();
+
+        index.pq.build_lut(q, &mut scratch.lut);
+        scratch.visited.ensure_capacity(index.n);
+        scratch.visited.reset();
+
+        // Stage 2: ADC scan with dedup.
+        let mut approx = TopK::new(params.rerank_budget.max(params.k));
+        for &(p, cscore) in partitions.iter().take(params.top_t) {
+            let list = &index.ivf.postings[p as usize];
+            stats.partitions_probed += 1;
+            stats.points_scanned += list.len();
+            for (i, &id) in list.ids.iter().enumerate() {
+                if !scratch.visited.insert(id) {
+                    stats.duplicates_skipped += 1;
+                    continue;
+                }
+                let code = list.code(i, code_bytes);
+                let score = cscore + index.pq.adc_score(&scratch.lut, code);
+                approx.push(id, score);
+            }
+        }
+
+        // Stage 3: exact-ish rerank on the int8 representation.
+        let result = match &index.int8 {
+            Some(q8) => {
+                scratch.q_scaled.clear();
+                scratch.q_scaled.extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
+                let mut exact = TopK::new(params.k);
+                for cand in approx.into_sorted() {
+                    stats.candidates_reranked += 1;
+                    let rec = index.int8_record(cand.id);
+                    let mut acc = 0.0f32;
+                    for j in 0..rec.len() {
+                        acc += scratch.q_scaled[j] * rec[j] as f32;
+                    }
+                    exact.push(cand.id, acc);
+                }
+                exact.into_sorted()
+            }
+            None => {
+                let mut v = approx.into_sorted();
+                v.truncate(params.k);
+                v
+            }
+        };
+        (result, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SpillMode};
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::quant::KMeansConfig;
+
+    fn build(spill: SpillMode, n: usize) -> (crate::data::Dataset, SoarIndex) {
+        let ds = SyntheticConfig::glove_like(n, 16, 16, 11).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: (n / 50).max(4),
+            spill,
+            kmeans: KMeansConfig {
+                iters: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        (ds, idx)
+    }
+
+    #[test]
+    fn full_probe_reaches_high_recall() {
+        let (ds, idx) = build(SpillMode::None, 2000);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let params = SearchParams {
+            k: 10,
+            top_t: idx.num_partitions(), // probe everything
+            rerank_budget: 400,
+        };
+        let mut scratch = SearchScratch::new(&idx);
+        let mut results = Vec::new();
+        for qi in 0..ds.num_queries() {
+            let (res, stats) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            assert_eq!(stats.partitions_probed, idx.num_partitions());
+            assert_eq!(stats.points_scanned, idx.ivf.total_postings());
+            results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+        let recall = gt.mean_recall(&results);
+        assert!(recall > 0.9, "full-probe recall {recall}");
+    }
+
+    #[test]
+    fn partial_probe_recall_increases_with_t() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 3000);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let mut scratch = SearchScratch::new(&idx);
+        let mut last = 0.0;
+        for t in [1usize, 4, 16, 60] {
+            let params = SearchParams {
+                k: 10,
+                top_t: t,
+                rerank_budget: 300,
+            };
+            let mut results = Vec::new();
+            for qi in 0..ds.num_queries() {
+                let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+                results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+            }
+            let recall = gt.mean_recall(&results);
+            assert!(
+                recall >= last - 0.05,
+                "recall should not collapse as t grows: {recall} after {last}"
+            );
+            last = last.max(recall);
+        }
+        assert!(last > 0.7, "best recall {last}");
+    }
+
+    #[test]
+    fn dedup_skips_spilled_duplicates() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 1000);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 10,
+            top_t: idx.num_partitions(),
+            rerank_budget: 100,
+        };
+        let mut scratch = SearchScratch::new(&idx);
+        let (_, stats) = searcher.search(ds.queries.row(0), &params, &mut scratch);
+        // probing everything must visit each point exactly once + skip
+        // exactly one duplicate per point (2 assignments each)
+        assert_eq!(stats.points_scanned, 2000);
+        assert_eq!(stats.duplicates_skipped, 1000);
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 1000);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams::default();
+        let mut scratch = SearchScratch::new(&idx);
+        for qi in 0..4 {
+            let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            for w in res.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            let ids: std::collections::HashSet<_> = res.iter().map(|s| s.id).collect();
+            assert_eq!(ids.len(), res.len(), "duplicate ids in results");
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 1500);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 5,
+            top_t: 6,
+            rerank_budget: 100,
+        };
+        let batch = searcher.search_batch(&ds.queries, &params).unwrap();
+        let mut scratch = SearchScratch::new(&idx);
+        for qi in 0..ds.num_queries() {
+            let (single, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            let ids_single: Vec<u32> = single.iter().map(|s| s.id).collect();
+            let ids_batch: Vec<u32> = batch[qi].0.iter().map(|s| s.id).collect();
+            assert_eq!(ids_single, ids_batch, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn no_int8_returns_approx_scores() {
+        let ds = SyntheticConfig::glove_like(500, 16, 4, 12).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 8,
+            spill: SpillMode::None,
+            store_int8: false,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let searcher = Searcher::new(&idx, &engine);
+        let mut scratch = SearchScratch::new(&idx);
+        let (res, stats) =
+            searcher.search(ds.queries.row(0), &SearchParams::default(), &mut scratch);
+        assert!(!res.is_empty());
+        assert_eq!(stats.candidates_reranked, 0);
+    }
+}

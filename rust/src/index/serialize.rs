@@ -1,0 +1,369 @@
+//! Binary index format + the Table 1 memory accounting.
+//!
+//! Format (little-endian throughout):
+//! ```text
+//!   magic "SOAR" | version u32 | config-json (len u64 + bytes)
+//!   n u64 | dim u64 | centroids | postings | pq codebooks
+//!   int8 flag + scales + raw codes | assignments
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::config::IndexConfig;
+use crate::error::{Error, Result};
+use crate::index::{IvfIndex, PostingList, SoarIndex};
+use crate::linalg::MatrixF32;
+use crate::quant::{Int8Quantizer, ProductQuantizer};
+
+const MAGIC: &[u8; 4] = b"SOAR";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
+    w_u64(w, vs.len() as u64)?;
+    for &v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn w_matrix(w: &mut impl Write, m: &MatrixF32) -> Result<()> {
+    w_u64(w, m.rows() as u64)?;
+    w_u64(w, m.cols() as u64)?;
+    w_f32s(w, m.as_slice())
+}
+
+fn r_matrix(r: &mut impl Read) -> Result<MatrixF32> {
+    let rows = r_u64(r)? as usize;
+    let cols = r_u64(r)? as usize;
+    let data = r_f32s(r)?;
+    MatrixF32::from_vec(rows, cols, data)
+}
+
+fn w_bytes(w: &mut impl Write, b: &[u8]) -> Result<()> {
+    w_u64(w, b.len() as u64)?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+    let n = r_u64(r)? as usize;
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------
+// save / load
+// ---------------------------------------------------------------------
+
+/// Save an index to `path`.
+pub fn save_index(index: &SoarIndex, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    let cfg = index.config.to_json().to_json();
+    w_bytes(&mut w, cfg.as_bytes())?;
+    w_u64(&mut w, index.n as u64)?;
+    w_u64(&mut w, index.dim as u64)?;
+
+    w_matrix(&mut w, &index.ivf.centroids)?;
+    w_u64(&mut w, index.ivf.postings.len() as u64)?;
+    for list in &index.ivf.postings {
+        w_u64(&mut w, list.ids.len() as u64)?;
+        for &id in &list.ids {
+            w_u32(&mut w, id)?;
+        }
+        w_bytes(&mut w, &list.codes)?;
+    }
+
+    w_u64(&mut w, index.pq.dims_per_subspace() as u64)?;
+    w_u64(&mut w, index.pq.codebooks().len() as u64)?;
+    for cb in index.pq.codebooks() {
+        w_matrix(&mut w, cb)?;
+    }
+
+    match &index.int8 {
+        Some(q8) => {
+            w_u32(&mut w, 1)?;
+            w_f32s(&mut w, &q8.scales)?;
+            let raw: Vec<u8> = index.raw_int8.iter().map(|&v| v as u8).collect();
+            w_bytes(&mut w, &raw)?;
+        }
+        None => w_u32(&mut w, 0)?,
+    }
+
+    w_u64(&mut w, index.assignments.len() as u64)?;
+    for a in &index.assignments {
+        w_u32(&mut w, a.len() as u32)?;
+        for &p in a {
+            w_u32(&mut w, p)?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an index from `path` and verify its invariants.
+pub fn load_index(path: &Path) -> Result<SoarIndex> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Serialize("bad magic".into()));
+    }
+    let version = r_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::Serialize(format!("unsupported version {version}")));
+    }
+    let cfg_bytes = r_bytes(&mut r)?;
+    let cfg_text = std::str::from_utf8(&cfg_bytes)
+        .map_err(|e| Error::Serialize(format!("config utf8: {e}")))?;
+    let config = IndexConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
+        .map_err(|e| Error::Serialize(format!("config json: {e}")))?;
+    let n = r_u64(&mut r)? as usize;
+    let dim = r_u64(&mut r)? as usize;
+
+    let centroids = r_matrix(&mut r)?;
+    let num_lists = r_u64(&mut r)? as usize;
+    let mut ivf = IvfIndex::new(centroids);
+    if num_lists != ivf.postings.len() {
+        return Err(Error::Serialize("posting list count mismatch".into()));
+    }
+    for p in 0..num_lists {
+        let len = r_u64(&mut r)? as usize;
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(r_u32(&mut r)?);
+        }
+        let codes = r_bytes(&mut r)?;
+        ivf.postings[p] = PostingList { ids, codes };
+    }
+
+    let s = r_u64(&mut r)? as usize;
+    let ncb = r_u64(&mut r)? as usize;
+    let mut codebooks = Vec::with_capacity(ncb);
+    for _ in 0..ncb {
+        codebooks.push(r_matrix(&mut r)?);
+    }
+    let pq = ProductQuantizer::from_parts(dim, s, codebooks)?;
+
+    let has_int8 = r_u32(&mut r)? == 1;
+    let (int8, raw_int8) = if has_int8 {
+        let scales = r_f32s(&mut r)?;
+        let raw = r_bytes(&mut r)?;
+        (
+            Some(Int8Quantizer { scales }),
+            raw.into_iter().map(|v| v as i8).collect(),
+        )
+    } else {
+        (None, Vec::new())
+    };
+
+    let na = r_u64(&mut r)? as usize;
+    let mut assignments = Vec::with_capacity(na);
+    for _ in 0..na {
+        let len = r_u32(&mut r)? as usize;
+        let mut a = Vec::with_capacity(len);
+        for _ in 0..len {
+            a.push(r_u32(&mut r)?);
+        }
+        assignments.push(a);
+    }
+
+    let index = SoarIndex {
+        config,
+        n,
+        dim,
+        ivf,
+        pq,
+        int8,
+        raw_int8,
+        assignments,
+    };
+    index.check_invariants()?;
+    Ok(index)
+}
+
+// ---------------------------------------------------------------------
+// memory accounting (Table 1 / §3.5)
+// ---------------------------------------------------------------------
+
+/// Byte-level breakdown of a built index.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryReport {
+    pub centroids_bytes: usize,
+    /// Posting ids: 4 bytes per (point, assignment).
+    pub posting_id_bytes: usize,
+    /// Packed PQ codes across all assignments.
+    pub pq_code_bytes: usize,
+    pub pq_codebook_bytes: usize,
+    pub int8_bytes: usize,
+    pub assignment_bytes: usize,
+    pub total_bytes: usize,
+    /// Bytes attributable to spilling (extra posting entries).
+    pub spill_overhead_bytes: usize,
+    /// §3.5 analytic estimate of the relative growth for int8 storage:
+    /// (4 + d/(2s)) / (d + 4 + d/(2s)), which the paper approximates as
+    /// 1/(2s+1) for large d.
+    pub analytic_overhead_int8: f64,
+}
+
+/// Compute the Table 1 memory breakdown.
+pub fn memory_report(index: &SoarIndex) -> MemoryReport {
+    let centroids_bytes = index.ivf.centroids.memory_bytes();
+    let total_postings = index.ivf.total_postings();
+    let posting_id_bytes = total_postings * 4;
+    let pq_code_bytes: usize = index.ivf.postings.iter().map(|p| p.codes.len()).sum();
+    let pq_codebook_bytes = index.pq.memory_bytes();
+    let int8_bytes = index.raw_int8.len() + index.int8.as_ref().map_or(0, |q| q.scales.len() * 4);
+    let assignment_bytes: usize = index.assignments.iter().map(|a| a.len() * 4).sum();
+    let total_bytes = centroids_bytes
+        + posting_id_bytes
+        + pq_code_bytes
+        + pq_codebook_bytes
+        + int8_bytes
+        + assignment_bytes;
+    // Extra assignments beyond the first.
+    let extra = total_postings.saturating_sub(index.n);
+    let per_entry = 4 + index.pq.code_bytes();
+    let d = index.dim as f64;
+    MemoryReport {
+        centroids_bytes,
+        posting_id_bytes,
+        pq_code_bytes,
+        pq_codebook_bytes,
+        int8_bytes,
+        assignment_bytes,
+        total_bytes,
+        spill_overhead_bytes: extra * per_entry,
+        analytic_overhead_int8: per_entry as f64 / (d + per_entry as f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpillMode;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::runtime::Engine;
+
+    fn build(spill: SpillMode) -> (crate::data::Dataset, SoarIndex) {
+        let ds = SyntheticConfig::glove_like(600, 16, 4, 44).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 12,
+            spill,
+            ..Default::default()
+        };
+        (ds.clone(), build_index(&engine, &ds.data, &cfg).unwrap())
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let (_, idx) = build(SpillMode::Soar { lambda: 1.0 });
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.join("index.soar");
+        save_index(&idx, &path).unwrap();
+        let back = load_index(&path).unwrap();
+        assert_eq!(back.n, idx.n);
+        assert_eq!(back.dim, idx.dim);
+        assert_eq!(back.ivf.centroids, idx.ivf.centroids);
+        assert_eq!(back.ivf.postings, idx.ivf.postings);
+        assert_eq!(back.assignments, idx.assignments);
+        assert_eq!(back.raw_int8, idx.raw_int8);
+        assert_eq!(back.int8, idx.int8);
+        assert_eq!(back.config.spill, idx.config.spill);
+        assert_eq!(back.pq.codebooks(), idx.pq.codebooks());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.join("garbage");
+        std::fs::write(&path, b"NOPE____").unwrap();
+        assert!(load_index(&path).is_err());
+    }
+
+    #[test]
+    fn memory_report_spill_overhead_matches_paper_model() {
+        // §3.5: SOAR adds 4 + d/(2s) bytes per datapoint; relative growth
+        // vs an int8 index ≈ 1/(2s+1).
+        let (_, idx_none) = build(SpillMode::None);
+        let (_, idx_soar) = build(SpillMode::Soar { lambda: 1.0 });
+        let m_none = memory_report(&idx_none);
+        let m_soar = memory_report(&idx_soar);
+        assert!(m_soar.total_bytes > m_none.total_bytes);
+        let d = idx_soar.dim;
+        let s = idx_soar.pq.dims_per_subspace();
+        let per_point = 4 + d.div_ceil(2 * s);
+        assert_eq!(m_soar.spill_overhead_bytes, idx_soar.n * per_point);
+        // measured relative growth of the *data* structures (ids + codes +
+        // int8), vs the analytic 1/(2s+1)
+        let data_none = m_none.posting_id_bytes + m_none.pq_code_bytes + m_none.int8_bytes;
+        let data_soar = m_soar.posting_id_bytes + m_soar.pq_code_bytes + m_soar.int8_bytes;
+        let measured = (data_soar - data_none) as f64 / data_none as f64;
+        let analytic = m_soar.analytic_overhead_int8;
+        assert!(
+            (measured - analytic).abs() / analytic < 0.15,
+            "measured {measured} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn no_int8_round_trip() {
+        let ds = SyntheticConfig::glove_like(300, 8, 2, 5).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 6,
+            spill: SpillMode::None,
+            store_int8: false,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.join("x.soar");
+        save_index(&idx, &path).unwrap();
+        let back = load_index(&path).unwrap();
+        assert!(back.int8.is_none());
+        assert!(back.raw_int8.is_empty());
+    }
+}

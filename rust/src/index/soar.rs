@@ -1,0 +1,300 @@
+//! SOAR spilled assignment (§3.4, Theorem 3.1).
+//!
+//! Given fixed centroids and primary assignments, choose each datapoint's
+//! spilled partition(s) by minimizing
+//!
+//! ```text
+//!   L(r', {r_j}) = ‖r'‖² + λ Σ_j ⟨r̂_j, r'⟩²
+//! ```
+//!
+//! over all centroids not yet assigned, where the sum ranges over the
+//! residuals of all *prior* assignments (§3.5.1 generalization; with one
+//! spill this is exactly Theorem 3.1). `SpillMode::Nearest` is the λ=0
+//! strawman of Fig 3/4a, included as the paper's baseline.
+
+use crate::config::SpillMode;
+use crate::error::Result;
+use crate::linalg::MatrixF32;
+use crate::runtime::Engine;
+
+/// Batch size for engine loss calls (matches the AOT bucket batch).
+const ASSIGN_BATCH: usize = 256;
+
+/// Compute spilled assignments for all points.
+///
+/// * `data` — `[n, d]` datapoints.
+/// * `centroids` — `[c, d]` fixed VQ codebook.
+/// * `primary` — primary assignment of each point.
+/// * `num_spills` — additional assignments per point.
+///
+/// Returns `assignments[i]` = `[primary, spill_1, ..., spill_num_spills]`.
+pub fn assign_spills(
+    engine: &Engine,
+    data: &MatrixF32,
+    centroids: &MatrixF32,
+    primary: &[u32],
+    mode: SpillMode,
+    num_spills: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let n = data.rows();
+    let d = data.cols();
+    assert_eq!(primary.len(), n);
+    let mut assignments: Vec<Vec<u32>> = primary.iter().map(|&p| vec![p]).collect();
+    if mode == SpillMode::None || num_spills == 0 {
+        return Ok(assignments);
+    }
+    let lambda = match mode {
+        SpillMode::Soar { lambda } => lambda,
+        _ => 0.0,
+    };
+
+    for round in 0..num_spills {
+        let mut start = 0usize;
+        while start < n {
+            let stop = (start + ASSIGN_BATCH).min(n);
+            let rows: Vec<usize> = (start..stop).collect();
+            let x = data.gather_rows(&rows);
+
+            // Total loss = ℓ₂ + λ Σ_j penalty_j. Each engine call returns
+            // ℓ₂ + λ·penalty_j for one prior residual r̂_j, so summing J
+            // calls over-counts ℓ₂ by (J−1)×; subtract it back out using a
+            // zero-r̂ call (which is exactly the ℓ₂ matrix). For the common
+            // round-0 SOAR case (J = 1) a single call suffices.
+            let priors = round + 1; // assignments so far per point
+            let mut total: Option<MatrixF32> = None;
+            if lambda == 0.0 {
+                // Nearest mode: plain ℓ₂ regardless of priors.
+                let zeros = MatrixF32::zeros(x.rows(), d);
+                total = Some(engine.soar_loss(&x, &zeros, centroids, 0.0)?);
+            } else {
+                for j in 0..priors {
+                    let rhat = residual_hat_batch(&x, centroids, &assignments, &rows, j);
+                    let loss = engine.soar_loss(&x, &rhat, centroids, lambda)?;
+                    total = Some(match total {
+                        None => loss,
+                        Some(mut acc) => {
+                            for (a, l) in
+                                acc.as_mut_slice().iter_mut().zip(loss.as_slice())
+                            {
+                                *a += l;
+                            }
+                            acc
+                        }
+                    });
+                }
+                if priors > 1 {
+                    let zeros = MatrixF32::zeros(x.rows(), d);
+                    let l2 = engine.soar_loss(&x, &zeros, centroids, 0.0)?;
+                    let acc = total.as_mut().unwrap();
+                    let scale = (priors - 1) as f32;
+                    for (a, l) in acc.as_mut_slice().iter_mut().zip(l2.as_slice()) {
+                        *a -= scale * l;
+                    }
+                }
+            }
+            let total = total.unwrap();
+
+            // Argmin over centroids not already assigned.
+            for (local, &gi) in rows.iter().enumerate() {
+                let row = total.row(local);
+                let taken = &assignments[gi];
+                let mut best = u32::MAX;
+                let mut best_loss = f32::INFINITY;
+                for (cidx, &loss) in row.iter().enumerate() {
+                    if loss < best_loss && !taken.contains(&(cidx as u32)) {
+                        best_loss = loss;
+                        best = cidx as u32;
+                    }
+                }
+                debug_assert_ne!(best, u32::MAX, "no spill candidate found");
+                assignments[gi].push(best);
+            }
+            start = stop;
+        }
+    }
+    Ok(assignments)
+}
+
+/// Unit-normalized residuals of assignment round `j` for the given rows.
+fn residual_hat_batch(
+    x: &MatrixF32,
+    centroids: &MatrixF32,
+    assignments: &[Vec<u32>],
+    rows: &[usize],
+    j: usize,
+) -> MatrixF32 {
+    let d = x.cols();
+    let mut out = MatrixF32::zeros(rows.len(), d);
+    for (local, &gi) in rows.iter().enumerate() {
+        let c = assignments[gi][j] as usize;
+        let dst = out.row_mut(local);
+        let xi = x.row(local);
+        let ci = centroids.row(c);
+        for k in 0..d {
+            dst[k] = xi[k] - ci[k];
+        }
+        crate::linalg::normalize(dst);
+    }
+    out
+}
+
+/// Direct (scalar) SOAR loss — used by tests and the λ-sweep statistics.
+pub fn soar_loss_scalar(x: &[f32], r_hat: &[f32], center: &[f32], lambda: f32) -> f32 {
+    let mut r_prime = vec![0.0f32; x.len()];
+    crate::linalg::sub(x, center, &mut r_prime);
+    crate::linalg::dot(&r_prime, &r_prime)
+        + lambda * crate::linalg::parallel_component_sq(r_hat, &r_prime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatrixF32::zeros(n, d);
+        for i in 0..n {
+            rng.fill_gaussian(m.row_mut(i));
+        }
+        m
+    }
+
+    fn primary_assign(data: &MatrixF32, centroids: &MatrixF32) -> Vec<u32> {
+        (0..data.rows())
+            .map(|i| {
+                let mut best = 0u32;
+                let mut bd = f32::INFINITY;
+                for (c, row) in centroids.iter_rows().enumerate() {
+                    let d = crate::linalg::squared_l2(data.row(i), row);
+                    if d < bd {
+                        bd = d;
+                        best = c as u32;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    #[test]
+    fn none_mode_is_primary_only() {
+        let data = random(20, 8, 1);
+        let centroids = random(5, 8, 2);
+        let primary = primary_assign(&data, &centroids);
+        let engine = Engine::cpu();
+        let a = assign_spills(&engine, &data, &centroids, &primary, SpillMode::None, 1)
+            .unwrap();
+        for (i, v) in a.iter().enumerate() {
+            assert_eq!(v, &vec![primary[i]]);
+        }
+    }
+
+    #[test]
+    fn spill_differs_from_primary_and_is_valid() {
+        let data = random(50, 8, 3);
+        let centroids = random(8, 8, 4);
+        let primary = primary_assign(&data, &centroids);
+        let engine = Engine::cpu();
+        for mode in [SpillMode::Nearest, SpillMode::Soar { lambda: 1.0 }] {
+            let a = assign_spills(&engine, &data, &centroids, &primary, mode, 1).unwrap();
+            for (i, v) in a.iter().enumerate() {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[0], primary[i]);
+                assert_ne!(v[0], v[1], "spill must differ from primary");
+                assert!((v[1] as usize) < 8);
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_mode_picks_second_closest() {
+        let data = random(30, 6, 5);
+        let centroids = random(7, 6, 6);
+        let primary = primary_assign(&data, &centroids);
+        let engine = Engine::cpu();
+        let a = assign_spills(&engine, &data, &centroids, &primary, SpillMode::Nearest, 1)
+            .unwrap();
+        for i in 0..30 {
+            // second-closest by ℓ₂
+            let mut dists: Vec<(u32, f32)> = centroids
+                .iter_rows()
+                .enumerate()
+                .map(|(c, row)| (c as u32, crate::linalg::squared_l2(data.row(i), row)))
+                .collect();
+            dists.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+            assert_eq!(a[i][1], dists[1].0, "point {i}");
+        }
+    }
+
+    #[test]
+    fn fig3_collinear_case_soar_avoids_collinear_centroid() {
+        // Reproduce Fig 3: x on the x-axis, C1 slightly left of x (primary),
+        // C2 collinear just beyond C1 (the trap), C3 off-axis, slightly
+        // farther than C2 but with an orthogonal-ish residual.
+        let x = MatrixF32::from_rows(&[&[2.0, 0.0]]).unwrap();
+        let centroids = MatrixF32::from_rows(&[
+            &[1.5, 0.0],   // C1: primary, r = (0.5, 0)
+            &[1.3, 0.0],   // C2: collinear, r' = (0.7, 0) — parallel to r
+            &[2.0, -0.8],  // C3: r' = (0, 0.8) — orthogonal to r
+        ])
+        .unwrap();
+        let primary = vec![0u32];
+        let engine = Engine::cpu();
+        // Euclidean spill takes the trap C2…
+        let naive =
+            assign_spills(&engine, &x, &centroids, &primary, SpillMode::Nearest, 1).unwrap();
+        assert_eq!(naive[0][1], 1);
+        // …SOAR (λ big enough) takes the orthogonal C3.
+        let soar = assign_spills(
+            &engine,
+            &x,
+            &centroids,
+            &primary,
+            SpillMode::Soar { lambda: 2.0 },
+            1,
+        )
+        .unwrap();
+        assert_eq!(soar[0][1], 2);
+    }
+
+    #[test]
+    fn multi_spill_all_distinct() {
+        let data = random(25, 8, 7);
+        let centroids = random(10, 8, 8);
+        let primary = primary_assign(&data, &centroids);
+        let engine = Engine::cpu();
+        let a = assign_spills(
+            &engine,
+            &data,
+            &centroids,
+            &primary,
+            SpillMode::Soar { lambda: 1.5 },
+            3,
+        )
+        .unwrap();
+        for v in &a {
+            assert_eq!(v.len(), 4);
+            let set: std::collections::HashSet<_> = v.iter().collect();
+            assert_eq!(set.len(), 4, "assignments must be distinct: {v:?}");
+        }
+    }
+
+    #[test]
+    fn scalar_loss_consistency() {
+        // soar_loss_scalar must agree with the engine matrix.
+        let data = random(10, 8, 9);
+        let centroids = random(4, 8, 10);
+        let mut rhat = random(10, 8, 11);
+        rhat.normalize_rows();
+        let engine = Engine::cpu();
+        let m = engine.soar_loss(&data, &rhat, &centroids, 2.5).unwrap();
+        for i in 0..10 {
+            for j in 0..4 {
+                let s =
+                    soar_loss_scalar(data.row(i), rhat.row(i), centroids.row(j), 2.5);
+                assert!((m.row(i)[j] - s).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Residual/angle/rank statistics behind the paper's analysis figures.
+//!
+//! For every (query, true-neighbor) pair we record the quantities §3
+//! reasons about: the quantized score error ⟨q, r⟩, the query-residual
+//! angle cos θ, the residual norm ‖r‖, and the partition RANKs — for the
+//! primary assignment and (when present) the first spilled assignment.
+//! These feed Figs 1, 2, 4, 7, 8 and the λ-sweep of Fig 9.
+
+use crate::data::ground_truth::GroundTruth;
+use crate::index::SoarIndex;
+use crate::linalg::{dot, norm, MatrixF32};
+use crate::util::parallel::par_map;
+
+/// All per-pair quantities used by the analysis experiments.
+#[derive(Clone, Copy, Debug)]
+pub struct PairStats {
+    pub query: u32,
+    pub neighbor: u32,
+    /// ⟨q, r⟩ — quantized score error of the primary assignment.
+    pub qr: f32,
+    /// cos θ — angle between query and primary residual.
+    pub cos_theta: f32,
+    /// ‖r‖.
+    pub r_norm: f32,
+    /// RANK(q, C_π(x), C), 1-based.
+    pub primary_rank: u32,
+    /// ⟨q, r'⟩ of the first spilled assignment, if spilled.
+    pub spill_qr: f32,
+    /// cos θ' of the first spilled assignment.
+    pub spill_cos: f32,
+    /// RANK(q, C_π'(x), C), 1-based.
+    pub spill_rank: u32,
+    /// ⟨r̂, r̂'⟩ — by Lemma 3.2, the correlation ρ_{⟨q,r⟩,⟨q,r'⟩} over a
+    /// uniform hypersphere query distribution.
+    pub resid_cos: f32,
+    /// Whether the spill_* fields are populated.
+    pub has_spill: bool,
+}
+
+/// Collect [`PairStats`] for every (query, ground-truth neighbor) pair.
+///
+/// `data` must be the corpus the index was built over.
+pub fn collect_pair_stats(
+    index: &SoarIndex,
+    data: &MatrixF32,
+    queries: &MatrixF32,
+    gt: &GroundTruth,
+) -> Vec<PairStats> {
+    let centroids = &index.ivf.centroids;
+    let c = centroids.rows();
+    let per_query: Vec<Vec<PairStats>> = par_map(queries.rows(), |qi| {
+            let q = queries.row(qi).to_vec();
+            let qn = norm(&q).max(1e-20);
+            // Dense 1-based rank of every partition for this query.
+            let scores: Vec<f32> = centroids.iter_rows().map(|row| dot(&q, row)).collect();
+            let mut order: Vec<u32> = (0..c as u32).collect();
+            order.sort_by(|&a, &b| {
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut rank = vec![0u32; c];
+            for (r, &p) in order.iter().enumerate() {
+                rank[p as usize] = r as u32 + 1;
+            }
+            let gt_row: Vec<u32> = gt.neighbors[qi].clone();
+            let index_ref = index;
+            let data_ref = data;
+            gt_row.into_iter().map(|nb| {
+                let x = data_ref.row(nb as usize);
+                let assigns = &index_ref.assignments[nb as usize];
+                let p0 = assigns[0];
+                let r = crate::index::residual(x, centroids, p0);
+                let rn = norm(&r);
+                let qr = dot(&q, &r);
+                let cos_theta = if rn > 0.0 { qr / (qn * rn) } else { 0.0 };
+                let mut st = PairStats {
+                    query: qi as u32,
+                    neighbor: nb,
+                    qr,
+                    cos_theta,
+                    r_norm: rn,
+                    primary_rank: rank[p0 as usize],
+                    spill_qr: 0.0,
+                    spill_cos: 0.0,
+                    spill_rank: 0,
+                    resid_cos: 0.0,
+                    has_spill: false,
+                };
+                if assigns.len() > 1 {
+                    let p1 = assigns[1];
+                    let r2 = crate::index::residual(x, centroids, p1);
+                    let rn2 = norm(&r2);
+                    let qr2 = dot(&q, &r2);
+                    st.spill_qr = qr2;
+                    st.spill_cos = if rn2 > 0.0 { qr2 / (qn * rn2) } else { 0.0 };
+                    st.spill_rank = rank[p1 as usize];
+                    st.resid_cos = if rn > 0.0 && rn2 > 0.0 {
+                        dot(&r, &r2) / (rn * rn2)
+                    } else {
+                        0.0
+                    };
+                    st.has_spill = true;
+                }
+                st
+            }).collect()
+    });
+    per_query.into_iter().flatten().collect()
+}
+
+/// Mean of `values` grouped into `num_bins` equal-width bins of `keys`.
+/// Returns `(bin_center, mean, count)` for non-empty bins.
+pub fn binned_means(keys: &[f32], values: &[f32], num_bins: usize) -> Vec<(f64, f64, usize)> {
+    assert_eq!(keys.len(), values.len());
+    if keys.is_empty() || num_bins == 0 {
+        return Vec::new();
+    }
+    let lo = keys.iter().copied().fold(f32::INFINITY, f32::min) as f64;
+    let hi = keys.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let width = ((hi - lo) / num_bins as f64).max(f64::MIN_POSITIVE);
+    let mut sums = vec![0.0f64; num_bins];
+    let mut counts = vec![0usize; num_bins];
+    for (&k, &v) in keys.iter().zip(values) {
+        let b = (((k as f64 - lo) / width) as usize).min(num_bins - 1);
+        sums[b] += v as f64;
+        counts[b] += 1;
+    }
+    (0..num_bins)
+        .filter(|&b| counts[b] > 0)
+        .map(|b| {
+            (
+                lo + (b as f64 + 0.5) * width,
+                sums[b] / counts[b] as f64,
+                counts[b],
+            )
+        })
+        .collect()
+}
+
+/// Mean of `values` grouped by geometric (log-spaced) rank buckets —
+/// Figs 1 and 8 plot against RANK on a log axis.
+pub fn rank_binned_means(ranks: &[u32], values: &[f32]) -> Vec<(u32, f64, usize)> {
+    assert_eq!(ranks.len(), values.len());
+    let max_rank = ranks.iter().copied().max().unwrap_or(1);
+    let mut edges = vec![1u32];
+    let mut e = 1u32;
+    while e < max_rank {
+        e = (e * 2).max(e + 1);
+        edges.push(e.min(max_rank));
+    }
+    edges.dedup();
+    let mut out = Vec::new();
+    for w in edges.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        for (&r, &v) in ranks.iter().zip(values) {
+            if r >= lo && r < hi.max(lo + 1) {
+                sum += v as f64;
+                count += 1;
+            }
+        }
+        if count > 0 {
+            out.push((lo, sum / count as f64, count));
+        }
+    }
+    // Last bucket includes max_rank itself.
+    let lo = *edges.last().unwrap();
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for (&r, &v) in ranks.iter().zip(values) {
+        if r >= lo {
+            sum += v as f64;
+            count += 1;
+        }
+    }
+    if count > 0 {
+        out.push((lo, sum / count as f64, count));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SpillMode};
+    use crate::data::ground_truth::ground_truth_mips;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::linalg::pearson;
+    use crate::runtime::Engine;
+
+    fn setup(spill: SpillMode) -> (crate::data::Dataset, SoarIndex, GroundTruth) {
+        let ds = SyntheticConfig::glove_like(2000, 16, 30, 33).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 32,
+            spill,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        (ds, idx, gt)
+    }
+
+    #[test]
+    fn pair_stats_shapes_and_ranges() {
+        let (ds, idx, gt) = setup(SpillMode::Soar { lambda: 1.0 });
+        let stats = collect_pair_stats(&idx, &ds.data, &ds.queries, &gt);
+        assert_eq!(stats.len(), 30 * 10);
+        for s in &stats {
+            assert!((-1.0..=1.0).contains(&(s.cos_theta / 1.0001)));
+            assert!(s.primary_rank >= 1 && s.primary_rank <= 32);
+            assert!(s.has_spill);
+            assert!(s.spill_rank >= 1 && s.spill_rank <= 32);
+            assert!((-1.0001..=1.0001).contains(&s.resid_cos));
+            assert!(s.r_norm >= 0.0);
+        }
+    }
+
+    #[test]
+    fn fig2_cos_theta_more_correlated_than_norm() {
+        // The paper's Fig 2: corr(cosθ, ⟨q,r⟩) ≫ corr(‖r‖, ⟨q,r⟩).
+        let (ds, idx, gt) = setup(SpillMode::None);
+        let stats = collect_pair_stats(&idx, &ds.data, &ds.queries, &gt);
+        let qr: Vec<f32> = stats.iter().map(|s| s.qr).collect();
+        let cos: Vec<f32> = stats.iter().map(|s| s.cos_theta).collect();
+        let rn: Vec<f32> = stats.iter().map(|s| s.r_norm).collect();
+        let c_cos = pearson(&cos, &qr);
+        let c_norm = pearson(&rn, &qr);
+        assert!(
+            c_cos > c_norm.abs() + 0.2,
+            "cosθ corr {c_cos} must dominate ‖r‖ corr {c_norm}"
+        );
+    }
+
+    #[test]
+    fn soar_decorrelates_residuals_vs_naive() {
+        // Fig 4a vs Fig 7 mechanism: SOAR's residual pairs must be closer
+        // to orthogonal than naive nearest-neighbor spilling's. We assert
+        // on ⟨r̂, r̂'⟩ (by Lemma 3.2, exactly the quantized-score-error
+        // correlation over the hypersphere query model), which is the
+        // quantity the Theorem 3.1 loss optimizes — the per-query-sample
+        // cosθ correlation estimate is too noisy at a 2k-point fixture.
+        let (ds, idx_naive, gt) = setup(SpillMode::Nearest);
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 32,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx_soar = build_index(&engine, &ds.data, &cfg).unwrap();
+        let mean_resid_cos = |idx: &SoarIndex| {
+            let stats = collect_pair_stats(idx, &ds.data, &ds.queries, &gt);
+            stats.iter().map(|s| s.resid_cos as f64).sum::<f64>() / stats.len() as f64
+        };
+        let c_naive = mean_resid_cos(&idx_naive);
+        let c_soar = mean_resid_cos(&idx_soar);
+        assert!(
+            c_soar < c_naive,
+            "SOAR mean ⟨r̂,r̂'⟩ {c_soar} must be below naive {c_naive}"
+        );
+    }
+
+    #[test]
+    fn binned_means_basic() {
+        let keys = [0.0f32, 0.1, 0.9, 1.0];
+        let vals = [1.0f32, 3.0, 10.0, 20.0];
+        let bins = binned_means(&keys, &vals, 2);
+        assert_eq!(bins.len(), 2);
+        assert!((bins[0].1 - 2.0).abs() < 1e-9);
+        assert!((bins[1].1 - 15.0).abs() < 1e-9);
+        assert_eq!(bins[0].2, 2);
+        assert!(binned_means(&[], &[], 4).is_empty());
+    }
+
+    #[test]
+    fn rank_binned_means_cover_all() {
+        let ranks: Vec<u32> = (1..=100).collect();
+        let vals = vec![1.0f32; 100];
+        let bins = rank_binned_means(&ranks, &vals);
+        let total: usize = bins.iter().map(|b| b.2).sum();
+        assert_eq!(total, 100);
+        for b in &bins {
+            assert!((b.1 - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! # soar-ann
+//!
+//! A production-grade reproduction of **SOAR: Improved Indexing for
+//! Approximate Nearest Neighbor Search** (Sun, Simcha, Dopson, Guo,
+//! Kumar — NeurIPS 2023), built as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the dense
+//!   scoring hot-spots (centroid MIPS scoring, Theorem 3.1 SOAR loss),
+//! * **L2** — JAX compute graphs (`python/compile/model.py`) AOT-lowered
+//!   to HLO text artifacts,
+//! * **L3** — this crate: the full indexing pipeline, multi-stage
+//!   searcher, PJRT runtime that executes the artifacts, and a tokio
+//!   serving coordinator (router → dynamic batcher → workers). Python
+//!   never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+//! use soar_ann::data::synthetic::SyntheticConfig;
+//! use soar_ann::index::{build_index, SearchScratch, Searcher};
+//! use soar_ann::runtime::Engine;
+//!
+//! let ds = SyntheticConfig::glove_like(10_000, 64, 100, 42).generate();
+//! let engine = Engine::auto(&soar_ann::runtime::default_artifact_dir());
+//! let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+//! let index = build_index(&engine, &ds.data, &cfg).unwrap();
+//! let searcher = Searcher::new(&index, &engine);
+//! let mut scratch = SearchScratch::new(&index);
+//! let (hits, stats) =
+//!     searcher.search(ds.queries.row(0), &SearchParams::default(), &mut scratch);
+//! println!("top hit {} (scanned {} points)", hits[0].id, stats.points_scanned);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod index;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use config::{IndexConfig, SearchParams, ServeConfig, SpillMode};
+pub use error::{Error, Result};
+pub use index::{build_index, SearchScratch, Searcher, SoarIndex};
+pub use runtime::Engine;

@@ -1,0 +1,189 @@
+//! Row-major `f32` matrix — the storage type for datasets, codebooks, and
+//! residuals. Contiguous storage keeps the scan loops prefetcher-friendly.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatrixF32 {
+    /// Zero-initialized `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatrixF32 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Wrap an existing buffer; `data.len()` must equal `rows * cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(MatrixF32 { rows, cols, data })
+    }
+
+    /// Build from row slices (all must share a length).
+    pub fn from_rows(rows: &[&[f32]]) -> Result<Self> {
+        if rows.is_empty() {
+            return Ok(MatrixF32::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            if r.len() != cols {
+                return Err(Error::Shape("ragged rows".into()));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(MatrixF32 {
+            rows: rows.len(),
+            cols,
+            data,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Whole backing buffer (row-major).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Iterate rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols.max(1))
+    }
+
+    /// Copy of the selected rows, in the given order.
+    pub fn gather_rows(&self, indices: &[usize]) -> MatrixF32 {
+        let mut out = MatrixF32::zeros(indices.len(), self.cols);
+        for (dst, &src) in indices.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Append a row.
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        if row.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "row len {} != cols {}",
+                row.len(),
+                self.cols
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// L2-normalize every row in place (zero rows untouched).
+    pub fn normalize_rows(&mut self) {
+        let cols = self.cols;
+        for chunk in self.data.chunks_exact_mut(cols.max(1)) {
+            super::normalize(chunk);
+        }
+    }
+
+    /// Approximate heap size in bytes (used by the Table 1 memory report).
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = MatrixF32::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert!(MatrixF32::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn from_rows_and_ragged() {
+        let m = MatrixF32::from_rows(&[&[1., 2.], &[3., 4.]]).unwrap();
+        assert_eq!(m.row(0), &[1., 2.]);
+        assert!(MatrixF32::from_rows(&[&[1., 2.], &[3.]]).is_err());
+        let empty = MatrixF32::from_rows(&[]).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn gather_and_push() {
+        let m = MatrixF32::from_rows(&[&[1., 1.], &[2., 2.], &[3., 3.]]).unwrap();
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.row(0), &[3., 3.]);
+        assert_eq!(g.row(1), &[1., 1.]);
+        let mut m2 = MatrixF32::zeros(0, 0);
+        m2.push_row(&[7., 8.]).unwrap();
+        m2.push_row(&[9., 10.]).unwrap();
+        assert_eq!(m2.rows(), 2);
+        assert!(m2.push_row(&[1.]).is_err());
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut m = MatrixF32::from_rows(&[&[3., 4.], &[0., 0.]]).unwrap();
+        m.normalize_rows();
+        assert!((crate::linalg::norm(m.row(0)) - 1.0).abs() < 1e-6);
+        assert_eq!(m.row(1), &[0., 0.]); // zero row untouched
+    }
+
+    #[test]
+    fn iter_rows_count() {
+        let m = MatrixF32::zeros(4, 2);
+        assert_eq!(m.iter_rows().count(), 4);
+        assert_eq!(m.memory_bytes(), 4 * 2 * 4);
+    }
+}

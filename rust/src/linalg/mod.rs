@@ -1,0 +1,254 @@
+//! Small dense linear-algebra kernels used throughout the engine.
+//!
+//! Everything here is deliberately allocation-free on the hot path and
+//! written so LLVM auto-vectorizes the inner loops (the ADC scan and the
+//! scoring fallback live downstream of these).
+
+pub mod matrix;
+pub mod rng;
+pub mod topk;
+
+pub use matrix::MatrixF32;
+pub use rng::Rng;
+pub use topk::TopK;
+
+/// Inner product ⟨a, b⟩. Panics in debug builds on length mismatch.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: breaks the fp dependency chain so LLVM
+    // emits vectorized fma loops even at default `-C opt-level=3`.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Squared Euclidean distance ‖a − b‖².
+#[inline]
+pub fn squared_l2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean norm ‖a‖.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `out = a - b`, elementwise.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// `a += alpha * b`.
+#[inline]
+pub fn axpy(alpha: f32, b: &[f32], a: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += alpha * b[i];
+    }
+}
+
+/// Scale `a` in place.
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    for v in a.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Normalize `a` to unit norm in place; zero vectors are left untouched.
+/// Returns the original norm.
+#[inline]
+pub fn normalize(a: &mut [f32]) -> f32 {
+    let n = norm(a);
+    if n > 0.0 {
+        scale(a, 1.0 / n);
+    }
+    n
+}
+
+/// Cosine of the angle between `a` and `b`; 0.0 if either is zero.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// Index of the minimum value. Panics on empty input.
+#[inline]
+pub fn argmin(values: &[f32]) -> usize {
+    assert!(!values.is_empty());
+    let mut best = 0usize;
+    let mut bv = values[0];
+    for (i, &v) in values.iter().enumerate().skip(1) {
+        if v < bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the maximum value. Panics on empty input.
+#[inline]
+pub fn argmax(values: &[f32]) -> usize {
+    assert!(!values.is_empty());
+    let mut best = 0usize;
+    let mut bv = values[0];
+    for (i, &v) in values.iter().enumerate().skip(1) {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Pearson correlation coefficient between two equal-length samples.
+/// Returns 0.0 when either sample has zero variance.
+pub fn pearson(xs: &[f32], ys: &[f32]) -> f32 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mx = xs.iter().map(|&v| v as f64).sum::<f64>() / nf;
+    let my = ys.iter().map(|&v| v as f64).sum::<f64>() / nf;
+    let (mut sxy, mut sxx, mut syy) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let dx = xs[i] as f64 - mx;
+        let dy = ys[i] as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    (sxy / (sxx.sqrt() * syy.sqrt())) as f32
+}
+
+/// ‖proj_r r'‖² = ⟨r̂, r'⟩² — the Theorem 3.1 parallelism penalty term.
+#[inline]
+pub fn parallel_component_sq(r_hat: &[f32], r_prime: &[f32]) -> f32 {
+    let p = dot(r_hat, r_prime);
+    p * p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        // length > unroll factor
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b = vec![2.0f32; 13];
+        assert_eq!(dot(&a, &b), 2.0 * (0..13).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn squared_l2_matches_dot_expansion() {
+        let a = [1.0f32, -2.0, 0.5, 3.0, 1.0];
+        let b = [0.0f32, 1.0, 0.5, -1.0, 2.0];
+        let direct = squared_l2(&a, &b);
+        let expanded = dot(&a, &a) - 2.0 * dot(&a, &b) + dot(&b, &b);
+        assert!((direct - expanded).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalize_and_cosine() {
+        let mut v = vec![3.0f32, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 2.0])).abs() < 1e-6);
+        assert!((cosine(&[1.0, 1.0], &[2.0, 2.0]) - 1.0).abs() < 1e-6);
+        // zero vector stays zero, cosine defined as 0
+        let mut z = vec![0.0f32; 3];
+        assert_eq!(normalize(&mut z), 0.0);
+        assert_eq!(cosine(&z, &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn argminmax() {
+        let v = [3.0f32, -1.0, 7.0, -1.0, 2.0];
+        assert_eq!(argmin(&v), 1); // first min wins
+        assert_eq!(argmax(&v), 2);
+    }
+
+    #[test]
+    fn pearson_limits() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let y: Vec<f32> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-6);
+        let yneg: Vec<f32> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-6);
+        let flat = vec![1.0f32; 100];
+        assert_eq!(pearson(&x, &flat), 0.0);
+    }
+
+    #[test]
+    fn axpy_sub_scale() {
+        let mut a = vec![1.0f32, 2.0];
+        axpy(0.5, &[2.0, 4.0], &mut a);
+        assert_eq!(a, vec![2.0, 4.0]);
+        let mut out = vec![0.0f32; 2];
+        sub(&[3.0, 3.0], &[1.0, 2.0], &mut out);
+        assert_eq!(out, vec![2.0, 1.0]);
+        scale(&mut out, 2.0);
+        assert_eq!(out, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn parallel_component() {
+        let r_hat = [1.0f32, 0.0];
+        assert_eq!(parallel_component_sq(&r_hat, &[3.0, 4.0]), 9.0);
+        assert_eq!(parallel_component_sq(&r_hat, &[0.0, 4.0]), 0.0);
+    }
+}

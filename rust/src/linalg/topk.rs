@@ -1,0 +1,175 @@
+//! Streaming top-k selection — the final stage of every search.
+//!
+//! A fixed-capacity binary min-heap on score: the root is the current k-th
+//! best, so the common case (candidate worse than the k-th best) is a single
+//! branch with no allocation. Used by both the ADC scan and the exact
+//! rerank.
+
+/// One scored candidate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Fixed-capacity top-k accumulator (max scores kept).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    // min-heap on score: heap[0] is the weakest of the kept candidates.
+    heap: Vec<Scored>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        TopK {
+            k,
+            heap: Vec::with_capacity(k),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission threshold: candidates with score ≤ this are
+    /// rejected once the heap is full. `-inf` while not yet full.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::NEG_INFINITY
+        } else {
+            self.heap[0].score
+        }
+    }
+
+    /// Offer a candidate; O(1) when rejected, O(log k) when admitted.
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        if self.heap.len() < self.k {
+            self.heap.push(Scored { id, score });
+            self.sift_up(self.heap.len() - 1);
+        } else if score > self.heap[0].score {
+            self.heap[0] = Scored { id, score };
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].score < self.heap[parent].score {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = l + 1;
+            let mut smallest = i;
+            if l < n && self.heap[l].score < self.heap[smallest].score {
+                smallest = l;
+            }
+            if r < n && self.heap[r].score < self.heap[smallest].score {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Drain into a `Vec` sorted by descending score (ties by ascending id
+    /// for determinism).
+    pub fn into_sorted(mut self) -> Vec<Scored> {
+        self.heap.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        self.heap
+    }
+
+    /// Clear for reuse without deallocating.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn brute_topk(scores: &[(u32, f32)], k: usize) -> Vec<Scored> {
+        let mut v: Vec<Scored> = scores
+            .iter()
+            .map(|&(id, score)| Scored { id, score })
+            .collect();
+        v.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        v.truncate(k);
+        v
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(9);
+        for &(n, k) in &[(1usize, 1usize), (5, 3), (100, 10), (1000, 100), (50, 50), (10, 20)] {
+            let scores: Vec<(u32, f32)> = (0..n)
+                .map(|i| (i as u32, rng.next_gaussian()))
+                .collect();
+            let mut tk = TopK::new(k);
+            for &(id, s) in &scores {
+                tk.push(id, s);
+            }
+            assert_eq!(tk.into_sorted(), brute_topk(&scores, k));
+        }
+    }
+
+    #[test]
+    fn threshold_semantics() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.threshold(), f32::NEG_INFINITY);
+        tk.push(0, 1.0);
+        assert_eq!(tk.threshold(), f32::NEG_INFINITY);
+        tk.push(1, 3.0);
+        assert_eq!(tk.threshold(), 1.0);
+        tk.push(2, 2.0); // evicts score 1.0
+        assert_eq!(tk.threshold(), 2.0);
+        tk.push(3, 0.5); // rejected
+        let out = tk.into_sorted();
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[1].id, 2);
+    }
+
+    #[test]
+    fn clear_reuses() {
+        let mut tk = TopK::new(4);
+        tk.push(1, 1.0);
+        tk.clear();
+        assert!(tk.is_empty());
+        tk.push(2, 2.0);
+        assert_eq!(tk.into_sorted()[0].id, 2);
+    }
+}

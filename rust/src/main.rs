@@ -1,0 +1,348 @@
+//! `soar` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   gen-data      generate a synthetic corpus (+ queries) as fvecs
+//!   build         build a (SOAR) index over an fvecs corpus or synthetic data
+//!   search        query a saved index from an fvecs query file
+//!   serve         start the serving stack and drive a load test against it
+//!   experiments   regenerate the paper's figures/tables (see DESIGN.md §4)
+//!   info          print index / artifact / engine information
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use soar_ann::config::{IndexConfig, SearchParams, ServeConfig, SpillMode};
+use soar_ann::coordinator::server::{closed_loop_load, ServeEngine};
+use soar_ann::data::fvecs;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::error::{Error, Result};
+use soar_ann::eval::experiments::{self, ExpConfig};
+use soar_ann::index::serialize::{load_index, memory_report, save_index};
+use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::cli::Args;
+
+const USAGE: &str = "\
+soar — SOAR approximate nearest neighbor engine (NeurIPS 2023 reproduction)
+
+USAGE: soar <command> [flags]
+
+COMMANDS
+  gen-data     --n 20000 --dim 64 --queries 200 --seed 42 --out data/
+  build        --data data/corpus.fvecs | --n 20000 --dim 64
+               --partitions (n/400) --spill soar|nearest|none --lambda 1.0
+               --out index.soar
+  search       --index index.soar --queries data/queries.fvecs
+               --k 10 --top-t 8 --rerank 200
+  serve        --n 20000 --dim 64 (or --index/--data) --clients 8
+               --requests 64 --max-batch 64 --max-wait-us 200 --workers 4
+  experiments  <fig1|fig2|fig4|fig7|fig8|fig9|kmr|fig10|fig11|fig12|table1|all>
+               --n 20000 --dim 64 --queries 200 --lambda 1.0 --quick
+  info         --index index.soar | (artifact summary with no flags)
+
+Engine selection: artifacts are loaded from $SOAR_ARTIFACTS (default
+./artifacts) when present; otherwise the CPU fallback backend is used.
+Pass --cpu to force the fallback.
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match run(raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const KNOWN_FLAGS: &[&str] = &[
+    "n", "dim", "queries", "seed", "out", "data", "partitions", "spill", "lambda",
+    "index", "k", "top-t", "rerank", "clients", "requests", "max-batch",
+    "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
+];
+
+fn engine_from(args: &Args) -> Engine {
+    if args.get_bool("cpu") {
+        Engine::cpu()
+    } else {
+        let engine = Engine::auto(&default_artifact_dir());
+        eprintln!("engine backend: {}", engine.backend_name());
+        engine
+    }
+}
+
+fn spill_from(args: &Args) -> Result<SpillMode> {
+    let lambda = args.get_f32("lambda", 1.0)?;
+    match args.get_str("spill", "soar") {
+        "soar" => Ok(SpillMode::Soar { lambda }),
+        "nearest" => Ok(SpillMode::Nearest),
+        "none" => Ok(SpillMode::None),
+        other => Err(Error::Config(format!("unknown spill mode {other:?}"))),
+    }
+}
+
+fn load_or_generate(args: &Args) -> Result<soar_ann::data::Dataset> {
+    match args.get("data") {
+        Some(path) => {
+            let data = fvecs::read_fvecs(Path::new(path))?;
+            let queries = match args.get("queries") {
+                Some(q) => fvecs::read_fvecs(Path::new(q))?,
+                None => {
+                    // default: first 100 corpus rows as queries
+                    let rows: Vec<usize> = (0..data.rows().min(100)).collect();
+                    data.gather_rows(&rows)
+                }
+            };
+            Ok(soar_ann::data::Dataset {
+                data,
+                queries,
+                name: path.to_string(),
+            })
+        }
+        None => {
+            let n = args.get_usize("n", 20_000)?;
+            let dim = args.get_usize("dim", 64)?;
+            let nq = args.get_usize("queries", 200)?;
+            let seed = args.get_u64("seed", 42)?;
+            Ok(SyntheticConfig::glove_like(n, dim, nq, seed).generate())
+        }
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, KNOWN_FLAGS)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "build" => cmd_build(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "experiments" => cmd_experiments(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command {other:?}"))),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_str("out", "data"));
+    std::fs::create_dir_all(&out)?;
+    let n = args.get_usize("n", 20_000)?;
+    let dim = args.get_usize("dim", 64)?;
+    let nq = args.get_usize("queries", 200)?;
+    let seed = args.get_u64("seed", 42)?;
+    let ds = SyntheticConfig::glove_like(n, dim, nq, seed).generate();
+    fvecs::write_fvecs(&out.join("corpus.fvecs"), &ds.data)?;
+    fvecs::write_fvecs(&out.join("queries.fvecs"), &ds.queries)?;
+    println!(
+        "wrote {} ({} x {}) and queries ({} x {})",
+        out.join("corpus.fvecs").display(),
+        n,
+        dim,
+        nq,
+        dim
+    );
+    Ok(())
+}
+
+fn cmd_build(args: &Args) -> Result<()> {
+    let engine = engine_from(args);
+    let ds = load_or_generate(args)?;
+    let mut cfg = IndexConfig::for_dataset(ds.n(), spill_from(args)?);
+    cfg.num_partitions = args.get_usize("partitions", cfg.num_partitions)?;
+    cfg.num_spills = args.get_usize("spills", cfg.num_spills)?;
+    let t0 = std::time::Instant::now();
+    let index = build_index(&engine, &ds.data, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let mem = memory_report(&index);
+    println!(
+        "built index: n={} dim={} partitions={} spill={} in {dt:.2}s ({:.2} MB)",
+        index.n,
+        index.dim,
+        index.num_partitions(),
+        index.config.spill.tag(),
+        mem.total_bytes as f64 / 1e6
+    );
+    let out = PathBuf::from(args.get_str("out", "index.soar"));
+    save_index(&index, &out)?;
+    println!("saved to {}", out.display());
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let engine = engine_from(args);
+    let index_path = args
+        .get("index")
+        .ok_or_else(|| Error::Config("--index required".into()))?;
+    let index = load_index(Path::new(index_path))?;
+    let queries = match args.get("queries") {
+        Some(q) => fvecs::read_fvecs(Path::new(q))?,
+        None => return Err(Error::Config("--queries required".into())),
+    };
+    let params = SearchParams {
+        k: args.get_usize("k", 10)?,
+        top_t: args.get_usize("top-t", 8)?,
+        rerank_budget: args.get_usize("rerank", 200)?,
+    };
+    params.validate()?;
+    let searcher = Searcher::new(&index, &engine);
+    let mut scratch = SearchScratch::new(&index);
+    let t0 = std::time::Instant::now();
+    for qi in 0..queries.rows() {
+        let (hits, stats) = searcher.search(queries.row(qi), &params, &mut scratch);
+        let ids: Vec<String> = hits
+            .iter()
+            .map(|s| format!("{}:{:.4}", s.id, s.score))
+            .collect();
+        println!(
+            "query {qi}: [{}] (scanned {} pts, {} partitions)",
+            ids.join(", "),
+            stats.points_scanned,
+            stats.partitions_probed
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} queries in {dt:.3}s ({:.0} QPS single-thread)",
+        queries.rows(),
+        queries.rows() as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = Arc::new(engine_from(args));
+    let index = match args.get("index") {
+        Some(p) => Arc::new(load_index(Path::new(p))?),
+        None => {
+            let ds = load_or_generate(args)?;
+            let cfg = IndexConfig::for_dataset(ds.n(), spill_from(args)?);
+            Arc::new(build_index(&engine, &ds.data, &cfg)?)
+        }
+    };
+    let ds = load_or_generate(args)?;
+    let params = SearchParams {
+        k: args.get_usize("k", 10)?,
+        top_t: args.get_usize("top-t", 8)?,
+        rerank_budget: args.get_usize("rerank", 200)?,
+    };
+    let serve_cfg = ServeConfig {
+        max_batch: args.get_usize("max-batch", 64)?,
+        max_wait_us: args.get_u64("max-wait-us", 200)?,
+        workers: args.get_usize("workers", 4)?,
+        queue_depth: 4096,
+    };
+    let clients = args.get_usize("clients", 8)?;
+    let per_client = args.get_usize("requests", 64)?;
+    println!(
+        "serving: n={} partitions={} | {clients} clients x {per_client} reqs",
+        index.n,
+        index.num_partitions()
+    );
+    let server = ServeEngine::start(index, engine, params, serve_cfg);
+    let handle = server.handle();
+    let elapsed = closed_loop_load(&handle, &ds.queries, clients, per_client);
+    let snap = server.metrics().snapshot();
+    println!(
+        "served {} queries in {elapsed:.3}s: {:.0} QPS | mean {:.0}µs p50 {}µs p99 {}µs | mean batch {:.1}",
+        snap.queries,
+        snap.queries as f64 / elapsed,
+        snap.mean_us,
+        snap.p50_us,
+        snap.p99_us,
+        snap.mean_batch
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let engine = engine_from(args);
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut cfg = if args.get_bool("quick") {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::default()
+    };
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.dim = args.get_usize("dim", cfg.dim)?;
+    cfg.num_queries = args.get_usize("queries", cfg.num_queries)?;
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.lambda = args.get_f32("lambda", cfg.lambda)?;
+    cfg.query_noise = args.get_f32("query-noise", cfg.query_noise)?;
+    cfg.data_noise = args.get_f32("data-noise", cfg.data_noise)?;
+    cfg.anisotropic_eta = args.get_f32("eta", cfg.anisotropic_eta)?;
+    match which {
+        "fig1" => experiments::fig1(&cfg, &engine),
+        "fig2" => experiments::fig2(&cfg, &engine),
+        "fig4" => experiments::fig4(&cfg, &engine),
+        "fig7" => experiments::fig7(&cfg, &engine),
+        "fig8" => experiments::fig8(&cfg, &engine),
+        "fig9" => experiments::fig9(&cfg, &engine),
+        "kmr" | "fig6" | "table2" => experiments::kmr_experiment(&cfg, &engine),
+        "fig10" => experiments::fig10(&cfg, &engine),
+        "fig11" => experiments::fig11(&cfg, &engine),
+        "fig12" => experiments::fig12(&cfg, &engine),
+        "table1" => experiments::table1(&cfg, &engine),
+        "all" => experiments::run_all(&cfg, &engine),
+        other => Err(Error::Config(format!("unknown experiment {other:?}"))),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    match args.get("index") {
+        Some(path) => {
+            let index = load_index(Path::new(path))?;
+            let mem = memory_report(&index);
+            println!("index {path}");
+            println!(
+                "  n={} dim={} partitions={}",
+                index.n,
+                index.dim,
+                index.num_partitions()
+            );
+            println!("  spill: {}", index.config.spill.tag());
+            println!("  postings: {}", index.ivf.total_postings());
+            println!("  memory: {:.2} MB total", mem.total_bytes as f64 / 1e6);
+            println!(
+                "    centroids {:.2} MB | ids {:.2} MB | pq codes {:.2} MB | int8 {:.2} MB",
+                mem.centroids_bytes as f64 / 1e6,
+                mem.posting_id_bytes as f64 / 1e6,
+                mem.pq_code_bytes as f64 / 1e6,
+                mem.int8_bytes as f64 / 1e6
+            );
+        }
+        None => {
+            let dir = default_artifact_dir();
+            println!("artifact dir: {}", dir.display());
+            match soar_ann::runtime::Manifest::load(&dir) {
+                Ok(m) => {
+                    for e in &m.entries {
+                        println!(
+                            "  {} kind={} b={} c={} d={} t={}",
+                            e.name, e.kind, e.b, e.c, e.d, e.t
+                        );
+                    }
+                    let engine = Engine::auto(&dir);
+                    println!("engine backend: {}", engine.backend_name());
+                }
+                Err(e) => println!("  no artifacts ({e}); CPU fallback will be used"),
+            }
+        }
+    }
+    Ok(())
+}

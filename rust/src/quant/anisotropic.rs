@@ -1,0 +1,122 @@
+//! Anisotropic quantization loss weighting (ScaNN, Guo et al. 2020 [8]).
+//!
+//! The paper trains all of its VQ/PQ stages "on an anisotropic loss"
+//! (Appendix A.2/A.4). For MIPS, the error component of a residual that is
+//! *parallel* to the datapoint matters more than the orthogonal component,
+//! because queries that score a datapoint highly point roughly along it.
+//! The loss is
+//!
+//! ```text
+//!     L(x, x̃) = h_par · ‖r_par‖² + h_perp · ‖r_perp‖²,   r = x − x̃,
+//! ```
+//!
+//! with `r_par` the component of r along x. We parameterize the weight
+//! ratio `h_par / h_perp = η` directly (η=1 ⇒ plain ℓ₂; the ScaNN paper's
+//! threshold-T parameterization maps to an η(T, d), which callers can
+//! compute with [`AnisotropicWeights::eta_for_threshold`]).
+
+use crate::linalg::dot;
+
+/// Precomputed anisotropic loss weights for one dimensionality.
+#[derive(Clone, Copy, Debug)]
+pub struct AnisotropicWeights {
+    /// Weight on the parallel residual component.
+    pub h_par: f32,
+    /// Weight on the orthogonal residual component.
+    pub h_perp: f32,
+}
+
+impl AnisotropicWeights {
+    /// Weights with ratio η = h_par / h_perp, normalized so that the
+    /// expected loss for an isotropic residual matches ℓ₂ (keeps
+    /// distortion values comparable across η).
+    pub fn from_eta(dim: usize, eta: f32) -> Self {
+        assert!(eta > 0.0, "eta must be positive");
+        let d = dim.max(1) as f32;
+        // isotropic residual puts 1/d of its energy parallel: normalize
+        // h_par/d + h_perp*(d-1)/d = 1 with h_par = eta*h_perp.
+        let h_perp = d / (eta + (d - 1.0));
+        AnisotropicWeights {
+            h_par: eta * h_perp,
+            h_perp,
+        }
+    }
+
+    /// ScaNN's threshold parameterization: residual directions that keep
+    /// ⟨q, x̃⟩ within a fraction `t = T/‖x‖` of the true score are "free".
+    /// Theorem 3.2 of [8] gives η = (d−1)·t²/(1−t²).
+    pub fn eta_for_threshold(dim: usize, t: f32) -> f32 {
+        let t2 = (t * t).clamp(0.0, 0.999);
+        ((dim.max(2) - 1) as f32) * t2 / (1.0 - t2)
+    }
+
+    /// The anisotropic loss L(x, x̃) for candidate quantization `center`.
+    #[inline]
+    pub fn loss(&self, x: &[f32], center: &[f32]) -> f32 {
+        let x_sq = dot(x, x);
+        if x_sq == 0.0 {
+            // Degenerate datapoint: fall back to ℓ₂.
+            return crate::linalg::squared_l2(x, center) * self.h_perp;
+        }
+        // r = x − c; r_par = ⟨r, x̂⟩ x̂.
+        let rx = x_sq - dot(center, x); // ⟨r, x⟩
+        let par_sq = rx * rx / x_sq;
+        let r_sq = crate::linalg::squared_l2(x, center);
+        let perp_sq = (r_sq - par_sq).max(0.0);
+        self.h_par * par_sq + self.h_perp * perp_sq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_one_is_l2() {
+        let w = AnisotropicWeights::from_eta(8, 1.0);
+        assert!((w.h_par - 1.0).abs() < 1e-6);
+        assert!((w.h_perp - 1.0).abs() < 1e-6);
+        let x = [1.0f32, 2.0, 0.0, -1.0, 0.5, 0.0, 0.0, 1.0];
+        let c = [0.5f32, 1.5, 0.5, -0.5, 0.0, 0.0, 1.0, 0.0];
+        let l = w.loss(&x, &c);
+        assert!((l - crate::linalg::squared_l2(&x, &c)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn parallel_error_weighted_more() {
+        let w = AnisotropicWeights::from_eta(4, 4.0);
+        assert!(w.h_par > w.h_perp);
+        let x = [2.0f32, 0.0, 0.0, 0.0];
+        // Parallel-error candidate: residual along x.
+        let c_par = [1.0f32, 0.0, 0.0, 0.0];
+        // Orthogonal-error candidate: same ‖r‖, orthogonal to x.
+        let c_perp = [2.0f32, 1.0, 0.0, 0.0];
+        assert!(w.loss(&x, &c_par) > w.loss(&x, &c_perp));
+    }
+
+    #[test]
+    fn threshold_parameterization_monotone() {
+        let e1 = AnisotropicWeights::eta_for_threshold(100, 0.1);
+        let e2 = AnisotropicWeights::eta_for_threshold(100, 0.2);
+        assert!(e2 > e1);
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn zero_datapoint_falls_back() {
+        let w = AnisotropicWeights::from_eta(3, 5.0);
+        let x = [0.0f32; 3];
+        let c = [1.0f32, 0.0, 0.0];
+        assert!(w.loss(&x, &c).is_finite());
+    }
+
+    #[test]
+    fn decomposition_sums_to_l2_when_equal_weights() {
+        // parallel² + orthogonal² must equal total ‖r‖² (Pythagoras); with
+        // h_par=h_perp=1 the loss equals ℓ₂ for arbitrary vectors.
+        let w = AnisotropicWeights { h_par: 1.0, h_perp: 1.0 };
+        let x = [0.3f32, -1.2, 2.2, 0.7];
+        let c = [1.1f32, 0.4, -0.9, 2.0];
+        assert!((w.loss(&x, &c) - crate::linalg::squared_l2(&x, &c)).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,158 @@
+//! Int8 quantization — the "highest-bitrate representation" of the index.
+//!
+//! The paper's big-ann-benchmarks configuration stores datapoints as
+//! INT8-quantized vectors (Appendix A.4.1) used for the final exact-ish
+//! rerank stage; §3.5's memory analysis assumes `d` bytes per datapoint
+//! for it. Per-dimension symmetric scaling: `x[j] ≈ code[j] * scale[j]`.
+
+use crate::error::{Error, Result};
+use crate::linalg::MatrixF32;
+
+/// Per-dimension symmetric int8 quantizer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Int8Quantizer {
+    /// `scale[j]` maps code −127..=127 back to floats for dimension j.
+    pub scales: Vec<f32>,
+}
+
+impl Int8Quantizer {
+    /// Fit scales from the per-dimension max |x| of `data`.
+    pub fn train(data: &MatrixF32) -> Result<Int8Quantizer> {
+        if data.rows() == 0 {
+            return Err(Error::Config("cannot train int8 on empty data".into()));
+        }
+        let d = data.cols();
+        let mut max_abs = vec![0.0f32; d];
+        for row in data.iter_rows() {
+            for j in 0..d {
+                let a = row[j].abs();
+                if a > max_abs[j] {
+                    max_abs[j] = a;
+                }
+            }
+        }
+        let scales = max_abs
+            .into_iter()
+            .map(|m| if m > 0.0 { m / 127.0 } else { 1.0 })
+            .collect();
+        Ok(Int8Quantizer { scales })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Quantize one vector.
+    pub fn encode(&self, x: &[f32]) -> Vec<i8> {
+        debug_assert_eq!(x.len(), self.scales.len());
+        x.iter()
+            .zip(&self.scales)
+            .map(|(&v, &s)| (v / s).round().clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    /// Dequantize.
+    pub fn decode(&self, code: &[i8]) -> Vec<f32> {
+        code.iter()
+            .zip(&self.scales)
+            .map(|(&c, &s)| c as f32 * s)
+            .collect()
+    }
+
+    /// ⟨q, decode(code)⟩ without materializing the decoded vector.
+    /// `q_scaled` must be `q[j] * scale[j]` (precompute once per query via
+    /// [`Int8Quantizer::scale_query`]).
+    #[inline]
+    pub fn dot_prescaled(q_scaled: &[f32], code: &[i8]) -> f32 {
+        debug_assert_eq!(q_scaled.len(), code.len());
+        let mut acc = 0.0f32;
+        for j in 0..code.len() {
+            acc += q_scaled[j] * code[j] as f32;
+        }
+        acc
+    }
+
+    /// Precompute the query-side scaling for [`Self::dot_prescaled`].
+    pub fn scale_query(&self, q: &[f32]) -> Vec<f32> {
+        q.iter().zip(&self.scales).map(|(&v, &s)| v * s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, Rng};
+
+    fn random_data(n: usize, d: usize) -> MatrixF32 {
+        let mut rng = Rng::new(11);
+        let mut m = MatrixF32::zeros(n, d);
+        for i in 0..n {
+            rng.fill_gaussian(m.row_mut(i));
+        }
+        m
+    }
+
+    #[test]
+    fn round_trip_error_small() {
+        let data = random_data(200, 32);
+        let q8 = Int8Quantizer::train(&data).unwrap();
+        for i in 0..50 {
+            let x = data.row(i);
+            let back = q8.decode(&q8.encode(x));
+            for j in 0..32 {
+                assert!((x[j] - back[j]).abs() <= q8.scales[j] * 0.51 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prescaled_dot_matches_decode_dot() {
+        let data = random_data(100, 16);
+        let q8 = Int8Quantizer::train(&data).unwrap();
+        let mut rng = Rng::new(3);
+        let mut q = vec![0.0f32; 16];
+        rng.fill_gaussian(&mut q);
+        let qs = q8.scale_query(&q);
+        for i in 0..20 {
+            let code = q8.encode(data.row(i));
+            let fast = Int8Quantizer::dot_prescaled(&qs, &code);
+            let slow = dot(&q, &q8.decode(&code));
+            assert!((fast - slow).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_error_bounded() {
+        let data = random_data(300, 64);
+        let q8 = Int8Quantizer::train(&data).unwrap();
+        let mut rng = Rng::new(5);
+        let mut q = vec![0.0f32; 64];
+        rng.fill_gaussian(&mut q);
+        let qs = q8.scale_query(&q);
+        let mut rel_err_acc = 0.0f64;
+        for i in 0..100 {
+            let x = data.row(i);
+            let exact = dot(&q, x);
+            let approx = Int8Quantizer::dot_prescaled(&qs, &q8.encode(x));
+            rel_err_acc += ((exact - approx).abs() / (exact.abs() + 1.0)) as f64;
+        }
+        assert!(rel_err_acc / 100.0 < 0.05, "mean rel err {}", rel_err_acc / 100.0);
+    }
+
+    #[test]
+    fn constant_zero_dimension_ok() {
+        let mut data = random_data(50, 4);
+        for i in 0..50 {
+            data.row_mut(i)[2] = 0.0;
+        }
+        let q8 = Int8Quantizer::train(&data).unwrap();
+        assert_eq!(q8.scales[2], 1.0);
+        let code = q8.encode(data.row(0));
+        assert_eq!(code[2], 0);
+    }
+
+    #[test]
+    fn empty_data_rejected() {
+        assert!(Int8Quantizer::train(&MatrixF32::zeros(0, 4)).is_err());
+    }
+}

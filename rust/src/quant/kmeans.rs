@@ -1,0 +1,339 @@
+//! Lloyd's k-means with k-means++ seeding — the VQ trainer (§2.2).
+//!
+//! Assignment steps are rayon-parallel over points; centroid updates are a
+//! single sequential accumulation pass (cheap relative to assignment).
+//! Supports optional anisotropic assignment weighting (see
+//! `anisotropic.rs`) to mirror the paper's training setup (Appendix A.2:
+//! "trained on an anisotropic loss").
+
+use crate::error::{Error, Result};
+use crate::linalg::{squared_l2, MatrixF32, Rng};
+use crate::quant::anisotropic::AnisotropicWeights;
+use crate::util::parallel::par_map;
+
+/// k-means hyperparameters.
+#[derive(Clone, Debug)]
+pub struct KMeansConfig {
+    /// Number of centroids (partitions).
+    pub k: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// RNG seed for seeding/restarts.
+    pub seed: u64,
+    /// Train on a subsample of at most this many points (0 = use all).
+    /// Matches production VQ practice at billion scale.
+    pub train_sample: usize,
+    /// Optional anisotropic assignment loss parameter η (0 = plain ℓ₂).
+    pub anisotropic_eta: f32,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig {
+            k: 16,
+            iters: 10,
+            seed: 42,
+            train_sample: 100_000,
+            anisotropic_eta: 0.0,
+        }
+    }
+}
+
+/// A trained VQ codebook.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: MatrixF32,
+    /// Mean squared distance to assigned centroid on the training set —
+    /// E‖r‖², the VQ distortion.
+    pub distortion: f32,
+}
+
+impl KMeans {
+    /// Train on `data` with `config`.
+    pub fn train(data: &MatrixF32, config: &KMeansConfig) -> Result<KMeans> {
+        if config.k == 0 {
+            return Err(Error::Config("k must be > 0".into()));
+        }
+        if data.rows() < config.k {
+            return Err(Error::Config(format!(
+                "need at least k={} points, got {}",
+                config.k,
+                data.rows()
+            )));
+        }
+        let mut rng = Rng::new(config.seed);
+
+        // Optional subsample for training speed.
+        let train: MatrixF32 = if config.train_sample > 0 && data.rows() > config.train_sample
+        {
+            let idx = rng.sample_indices(data.rows(), config.train_sample);
+            data.gather_rows(&idx)
+        } else {
+            data.clone()
+        };
+
+        let mut centroids = kmeanspp_init(&train, config.k, &mut rng);
+        let weights = if config.anisotropic_eta > 0.0 {
+            Some(AnisotropicWeights::from_eta(
+                train.cols(),
+                config.anisotropic_eta,
+            ))
+        } else {
+            None
+        };
+
+        let n = train.rows();
+        let d = train.cols();
+        let mut assignments = vec![0u32; n];
+        let mut distortion = 0.0f32;
+        for _iter in 0..config.iters.max(1) {
+            // Assignment step (parallel).
+            let assign: Vec<(u32, f32)> = par_map(n, |i| {
+                let x = train.row(i);
+                assign_point(x, &centroids, weights.as_ref())
+            });
+            let mut changed = false;
+            distortion = 0.0;
+            for (i, &(a, dist)) in assign.iter().enumerate() {
+                if assignments[i] != a {
+                    changed = true;
+                    assignments[i] = a;
+                }
+                distortion += dist;
+            }
+            distortion /= n as f32;
+
+            // Update step.
+            let mut sums = MatrixF32::zeros(config.k, d);
+            let mut counts = vec![0usize; config.k];
+            for i in 0..n {
+                let a = assignments[i] as usize;
+                counts[a] += 1;
+                let row = sums.row_mut(a);
+                let x = train.row(i);
+                for j in 0..d {
+                    row[j] += x[j];
+                }
+            }
+            for c in 0..config.k {
+                if counts[c] > 0 {
+                    let inv = 1.0 / counts[c] as f32;
+                    let src = sums.row(c).to_vec();
+                    let dst = centroids.row_mut(c);
+                    for j in 0..d {
+                        dst[j] = src[j] * inv;
+                    }
+                } else {
+                    // Dead centroid: respawn at a random training point.
+                    let pick = rng.next_below(n as u32) as usize;
+                    centroids.row_mut(c).copy_from_slice(train.row(pick));
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        Ok(KMeans {
+            centroids,
+            distortion,
+        })
+    }
+
+    /// Closest centroid (plain ℓ₂) for a point; returns (index, ‖r‖²).
+    pub fn assign(&self, x: &[f32]) -> (u32, f32) {
+        assign_point(x, &self.centroids, None)
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.rows()
+    }
+}
+
+/// Best centroid for `x` under ℓ₂ or the anisotropic loss.
+fn assign_point(
+    x: &[f32],
+    centroids: &MatrixF32,
+    weights: Option<&AnisotropicWeights>,
+) -> (u32, f32) {
+    let mut best = 0u32;
+    let mut best_loss = f32::INFINITY;
+    let mut best_dist = f32::INFINITY;
+    for (c, center) in centroids.iter_rows().enumerate() {
+        let loss = match weights {
+            None => squared_l2(x, center),
+            Some(w) => w.loss(x, center),
+        };
+        if loss < best_loss {
+            best_loss = loss;
+            best = c as u32;
+            best_dist = squared_l2(x, center);
+        }
+    }
+    (best, best_dist)
+}
+
+/// k-means++ seeding: D²-weighted sampling, numerically simple version.
+fn kmeanspp_init(data: &MatrixF32, k: usize, rng: &mut Rng) -> MatrixF32 {
+    let n = data.rows();
+    let d = data.cols();
+    let mut centroids = MatrixF32::zeros(k, d);
+    let first = rng.next_below(n as u32) as usize;
+    centroids.row_mut(0).copy_from_slice(data.row(first));
+
+    // Min squared distance to any chosen centroid so far.
+    let mut min_d2: Vec<f32> = par_map(n, |i| squared_l2(data.row(i), data.row(first)));
+
+    for c in 1..k {
+        let total: f64 = min_d2.iter().map(|&v| v as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.next_below(n as u32) as usize
+        } else {
+            let mut target = rng.next_f32() as f64 * total;
+            let mut chosen = n - 1;
+            for (i, &v) in min_d2.iter().enumerate() {
+                target -= v as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centroids.row_mut(c).copy_from_slice(data.row(pick));
+        let new_center: Vec<f32> = data.row(pick).to_vec();
+        let updates: Vec<f32> = par_map(n, |i| squared_l2(data.row(i), &new_center));
+        for (v, nd) in min_d2.iter_mut().zip(updates) {
+            if nd < *v {
+                *v = nd;
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn two_blob_data() -> MatrixF32 {
+        let mut rng = Rng::new(1);
+        let mut m = MatrixF32::zeros(200, 4);
+        for i in 0..200 {
+            let base = if i % 2 == 0 { 10.0 } else { -10.0 };
+            let row = m.row_mut(i);
+            for v in row.iter_mut() {
+                *v = base + 0.1 * rng.next_gaussian();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let data = two_blob_data();
+        let km = KMeans::train(
+            &data,
+            &KMeansConfig {
+                k: 2,
+                iters: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let c0 = km.centroids.row(0)[0];
+        let c1 = km.centroids.row(1)[0];
+        assert!(
+            (c0 - 10.0).abs() < 1.0 && (c1 + 10.0).abs() < 1.0
+                || (c0 + 10.0).abs() < 1.0 && (c1 - 10.0).abs() < 1.0,
+            "centroids {c0} {c1}"
+        );
+        assert!(km.distortion < 1.0);
+        // assignment maps each blob to one centroid
+        let (a, _) = km.assign(data.row(0));
+        let (b, _) = km.assign(data.row(1));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn distortion_decreases_with_k() {
+        let ds = SyntheticConfig::glove_like(800, 16, 4, 5).generate();
+        let d4 = KMeans::train(
+            &ds.data,
+            &KMeansConfig {
+                k: 4,
+                iters: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .distortion;
+        let d32 = KMeans::train(
+            &ds.data,
+            &KMeansConfig {
+                k: 32,
+                iters: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .distortion;
+        assert!(d32 < d4, "{d32} !< {d4}");
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let data = MatrixF32::zeros(3, 2);
+        assert!(KMeans::train(&data, &KMeansConfig { k: 0, ..Default::default() }).is_err());
+        assert!(KMeans::train(&data, &KMeansConfig { k: 5, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 9).generate();
+        let cfg = KMeansConfig {
+            k: 8,
+            iters: 5,
+            seed: 123,
+            ..Default::default()
+        };
+        let a = KMeans::train(&ds.data, &cfg).unwrap();
+        let b = KMeans::train(&ds.data, &cfg).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn anisotropic_training_runs() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 9).generate();
+        let km = KMeans::train(
+            &ds.data,
+            &KMeansConfig {
+                k: 8,
+                iters: 5,
+                anisotropic_eta: 2.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(km.k(), 8);
+        assert!(km.distortion.is_finite());
+    }
+
+    #[test]
+    fn train_sample_subsampling() {
+        let ds = SyntheticConfig::glove_like(1000, 8, 4, 2).generate();
+        let km = KMeans::train(
+            &ds.data,
+            &KMeansConfig {
+                k: 8,
+                iters: 4,
+                train_sample: 200,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(km.k(), 8);
+    }
+}

@@ -1,0 +1,17 @@
+//! Quantization substrates: k-means VQ, product quantization, int8.
+//!
+//! These are the building blocks the paper's index stack assumes (§2.2,
+//! §3.5, Appendix A.4): a VQ codebook trained by k-means (optionally with
+//! ScaNN's anisotropic loss), PQ codes over the partitioning residuals for
+//! the in-partition approximate scoring stage, and an int8 highest-bitrate
+//! representation for the final rerank.
+
+pub mod anisotropic;
+pub mod int8;
+pub mod kmeans;
+pub mod pq;
+
+pub use anisotropic::AnisotropicWeights;
+pub use int8::Int8Quantizer;
+pub use kmeans::{KMeans, KMeansConfig};
+pub use pq::{PqCode, PqConfig, ProductQuantizer};

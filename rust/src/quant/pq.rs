@@ -1,0 +1,381 @@
+//! Product quantization (Jégou et al. [9]) with 16 centers per subspace.
+//!
+//! The in-partition approximate scoring stage of the index: partitioning
+//! residuals are PQ-encoded, and at query time a per-query lookup table
+//! (LUT) turns candidate scoring into `m` table lookups — the ADC scan.
+//!
+//! 16 centers per subspace ⇒ 4-bit codes, two subspaces packed per byte.
+//! This matches the paper's memory model (§3.5: "4 + d/(2s) bytes per
+//! datapoint, assuming 16 centers per subspace, usually chosen for
+//! amenability to SIMD") and is exactly what makes SOAR's duplication
+//! cheap: only these packed codes are duplicated per spilled assignment.
+
+use crate::error::{Error, Result};
+use crate::linalg::{dot, MatrixF32};
+use crate::quant::kmeans::{KMeans, KMeansConfig};
+use crate::util::parallel::par_map;
+
+/// Number of centers per subspace (fixed: 4-bit codes).
+pub const PQ_CENTERS: usize = 16;
+
+/// PQ hyperparameters.
+#[derive(Clone, Debug)]
+pub struct PqConfig {
+    /// Dimensions per subspace (`s` in the paper's §3.5 analysis).
+    pub dims_per_subspace: usize,
+    /// k-means iterations per subspace codebook.
+    pub train_iters: usize,
+    pub seed: u64,
+    /// Subsample size for codebook training (0 = all).
+    pub train_sample: usize,
+}
+
+impl Default for PqConfig {
+    fn default() -> Self {
+        PqConfig {
+            dims_per_subspace: 2,
+            train_iters: 8,
+            seed: 7,
+            train_sample: 50_000,
+        }
+    }
+}
+
+/// A packed 4-bit PQ code; `bytes.len() == ceil(m/2)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PqCode(pub Vec<u8>);
+
+/// Trained product quantizer.
+#[derive(Clone, Debug)]
+pub struct ProductQuantizer {
+    dim: usize,
+    s: usize,
+    /// Number of subspaces (last may be ragged if `dim % s != 0`).
+    m: usize,
+    /// `m` codebooks, each `PQ_CENTERS × s_m`.
+    codebooks: Vec<MatrixF32>,
+}
+
+impl ProductQuantizer {
+    /// Train per-subspace codebooks on `data` (typically residuals).
+    pub fn train(data: &MatrixF32, config: &PqConfig) -> Result<ProductQuantizer> {
+        let dim = data.cols();
+        let s = config.dims_per_subspace;
+        if s == 0 || s > dim {
+            return Err(Error::Config(format!(
+                "dims_per_subspace {s} invalid for dim {dim}"
+            )));
+        }
+        if data.rows() < PQ_CENTERS {
+            return Err(Error::Config(format!(
+                "need at least {PQ_CENTERS} training points, got {}",
+                data.rows()
+            )));
+        }
+        let m = dim.div_ceil(s);
+        let codebooks: Vec<MatrixF32> = par_map(m, |sub| {
+                let lo = sub * s;
+                let hi = ((sub + 1) * s).min(dim);
+                let width = hi - lo;
+                let mut subdata = MatrixF32::zeros(data.rows(), width);
+                for i in 0..data.rows() {
+                    subdata
+                        .row_mut(i)
+                        .copy_from_slice(&data.row(i)[lo..hi]);
+                }
+                let km = KMeans::train(
+                    &subdata,
+                    &KMeansConfig {
+                        k: PQ_CENTERS,
+                        iters: config.train_iters,
+                        seed: config.seed.wrapping_add(sub as u64),
+                        train_sample: config.train_sample,
+                        anisotropic_eta: 0.0,
+                    },
+                )
+                .expect("subspace kmeans");
+                km.centroids
+            });
+        Ok(ProductQuantizer {
+            dim,
+            s,
+            m,
+            codebooks,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Dimensions per subspace.
+    pub fn dims_per_subspace(&self) -> usize {
+        self.s
+    }
+
+    /// Codebook accessor (serialization).
+    pub fn codebooks(&self) -> &[MatrixF32] {
+        &self.codebooks
+    }
+
+    /// Rebuild from previously serialized parts.
+    pub fn from_parts(dim: usize, s: usize, codebooks: Vec<MatrixF32>) -> Result<Self> {
+        if s == 0 || s > dim {
+            return Err(Error::Config(format!("bad subspace width {s} for dim {dim}")));
+        }
+        let m = dim.div_ceil(s);
+        if codebooks.len() != m {
+            return Err(Error::Config(format!(
+                "expected {m} codebooks, got {}",
+                codebooks.len()
+            )));
+        }
+        for (i, cb) in codebooks.iter().enumerate() {
+            let lo = i * s;
+            let hi = ((i + 1) * s).min(dim);
+            if cb.rows() != PQ_CENTERS || cb.cols() != hi - lo {
+                return Err(Error::Config(format!(
+                    "codebook {i} has shape {}x{}, want {}x{}",
+                    cb.rows(),
+                    cb.cols(),
+                    PQ_CENTERS,
+                    hi - lo
+                )));
+            }
+        }
+        Ok(ProductQuantizer {
+            dim,
+            s,
+            m,
+            codebooks,
+        })
+    }
+
+    /// Number of subspaces.
+    pub fn num_subspaces(&self) -> usize {
+        self.m
+    }
+
+    /// Packed code size in bytes: ceil(m/2) — the `d/(2s)` of §3.5.
+    pub fn code_bytes(&self) -> usize {
+        self.m.div_ceil(2)
+    }
+
+    fn sub_range(&self, sub: usize) -> (usize, usize) {
+        (sub * self.s, ((sub + 1) * self.s).min(self.dim))
+    }
+
+    /// Encode a vector into a packed 4-bit code.
+    pub fn encode(&self, x: &[f32]) -> PqCode {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut bytes = vec![0u8; self.code_bytes()];
+        for sub in 0..self.m {
+            let (lo, hi) = self.sub_range(sub);
+            let xs = &x[lo..hi];
+            let cb = &self.codebooks[sub];
+            let mut best = 0u8;
+            let mut best_d = f32::INFINITY;
+            for c in 0..PQ_CENTERS {
+                let d = crate::linalg::squared_l2(xs, cb.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c as u8;
+                }
+            }
+            if sub % 2 == 0 {
+                bytes[sub / 2] |= best;
+            } else {
+                bytes[sub / 2] |= best << 4;
+            }
+        }
+        PqCode(bytes)
+    }
+
+    /// Reconstruct the quantized vector from a code.
+    pub fn decode(&self, code: &PqCode) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for sub in 0..self.m {
+            let idx = self.code_at(code, sub) as usize;
+            let (lo, hi) = self.sub_range(sub);
+            out[lo..hi].copy_from_slice(self.codebooks[sub].row(idx));
+        }
+        out
+    }
+
+    #[inline]
+    fn code_at(&self, code: &PqCode, sub: usize) -> u8 {
+        let b = code.0[sub / 2];
+        if sub % 2 == 0 {
+            b & 0x0f
+        } else {
+            b >> 4
+        }
+    }
+
+    /// Build the per-query inner-product LUT: `lut[sub * 16 + c] =
+    /// ⟨q_sub, codebook[sub][c]⟩`. ADC then scores a candidate residual as
+    /// the sum of `m` lookups.
+    pub fn build_lut(&self, q: &[f32], lut: &mut Vec<f32>) {
+        debug_assert_eq!(q.len(), self.dim);
+        lut.clear();
+        lut.reserve(self.m * PQ_CENTERS);
+        for sub in 0..self.m {
+            let (lo, hi) = self.sub_range(sub);
+            let qs = &q[lo..hi];
+            let cb = &self.codebooks[sub];
+            for c in 0..PQ_CENTERS {
+                lut.push(dot(qs, cb.row(c)));
+            }
+        }
+    }
+
+    /// ADC score of one packed code against a prebuilt LUT.
+    #[inline]
+    pub fn adc_score(&self, lut: &[f32], code_bytes: &[u8]) -> f32 {
+        debug_assert_eq!(lut.len(), self.m * PQ_CENTERS);
+        let mut acc = 0.0f32;
+        let full_pairs = self.m / 2;
+        for p in 0..full_pairs {
+            let b = code_bytes[p];
+            // Two subspaces per byte: low nibble = subspace 2p, high = 2p+1.
+            acc += lut[(2 * p) * PQ_CENTERS + (b & 0x0f) as usize];
+            acc += lut[(2 * p + 1) * PQ_CENTERS + (b >> 4) as usize];
+        }
+        if self.m % 2 == 1 {
+            let b = code_bytes[self.m / 2];
+            acc += lut[(self.m - 1) * PQ_CENTERS + (b & 0x0f) as usize];
+        }
+        acc
+    }
+
+    /// Approximate heap bytes of the codebooks (for memory accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.codebooks.iter().map(|c| c.memory_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn random_data(n: usize, d: usize, seed: u64) -> MatrixF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatrixF32::zeros(n, d);
+        for i in 0..n {
+            rng.fill_gaussian(m.row_mut(i));
+        }
+        m
+    }
+
+    #[test]
+    fn code_size_matches_paper_model() {
+        let data = random_data(200, 16, 1);
+        let pq = ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // d=16, s=2 → m=8 subspaces → 4 bytes (= d/(2s)).
+        assert_eq!(pq.num_subspaces(), 8);
+        assert_eq!(pq.code_bytes(), 4);
+    }
+
+    #[test]
+    fn encode_decode_reduces_error() {
+        let data = random_data(500, 16, 2);
+        let pq = ProductQuantizer::train(&data, &PqConfig::default()).unwrap();
+        let mut err = 0.0f64;
+        let mut base = 0.0f64;
+        for i in 0..100 {
+            let x = data.row(i);
+            let dec = pq.decode(&pq.encode(x));
+            err += crate::linalg::squared_l2(x, &dec) as f64;
+            base += crate::linalg::dot(x, x) as f64;
+        }
+        assert!(err < 0.5 * base, "PQ must remove most energy: {err} vs {base}");
+    }
+
+    #[test]
+    fn adc_equals_dot_with_decoded() {
+        let data = random_data(300, 12, 3);
+        let pq = ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(4);
+        let mut q = vec![0.0f32; 12];
+        rng.fill_gaussian(&mut q);
+        let mut lut = Vec::new();
+        pq.build_lut(&q, &mut lut);
+        for i in 0..50 {
+            let code = pq.encode(data.row(i));
+            let adc = pq.adc_score(&lut, &code.0);
+            let exact = dot(&q, &pq.decode(&code));
+            assert!((adc - exact).abs() < 1e-4, "{adc} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn ragged_last_subspace() {
+        let data = random_data(200, 7, 5);
+        let pq = ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(pq.num_subspaces(), 4); // 2+2+2+1
+        assert_eq!(pq.code_bytes(), 2);
+        let code = pq.encode(data.row(0));
+        assert_eq!(pq.decode(&code).len(), 7);
+        let mut lut = Vec::new();
+        let mut q = vec![0.5f32; 7];
+        q[6] = -1.0;
+        pq.build_lut(&q, &mut lut);
+        let adc = pq.adc_score(&lut, &code.0);
+        assert!((adc - dot(&q, &pq.decode(&code))).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let data = random_data(100, 8, 6);
+        assert!(ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 0,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        assert!(ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 9,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        let tiny = random_data(8, 8, 6);
+        assert!(ProductQuantizer::train(&tiny, &PqConfig::default()).is_err());
+    }
+
+    #[test]
+    fn codes_are_4bit() {
+        let data = random_data(200, 8, 7);
+        let pq = ProductQuantizer::train(&data, &PqConfig::default()).unwrap();
+        for i in 0..20 {
+            let code = pq.encode(data.row(i));
+            assert_eq!(code.0.len(), pq.code_bytes());
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! exported HLO module (entry-point kind + shape bucket). The runtime uses
+//! it to pick which executable serves a given request shape.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One exported HLO module.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    /// "centroid_topk" | "centroid_score" | "soar_assign"
+    pub kind: String,
+    /// Batch bucket.
+    pub b: usize,
+    /// Codebook-size bucket.
+    pub c: usize,
+    /// Dimensionality bucket.
+    pub d: usize,
+    /// Top-k width (centroid_topk only; 0 otherwise).
+    pub t: usize,
+    pub sha256: String,
+}
+
+/// Parsed manifest + its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("cannot read {}: {e}", path.display())))?;
+        let v = Value::parse(&text).map_err(|e| Error::Runtime(format!("bad manifest: {e}")))?;
+        if v.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            return Err(Error::Runtime(format!(
+                "unsupported artifact format {:?}",
+                v.get("format")
+            )));
+        }
+        let raw_entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| Error::Runtime("manifest missing entries".into()))?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for e in raw_entries {
+            let s = |key: &str| -> Result<String> {
+                e.get(key)
+                    .and_then(|x| x.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Runtime(format!("entry missing field {key}")))
+            };
+            let u = |key: &str| -> Result<usize> {
+                e.get(key)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| Error::Runtime(format!("entry missing field {key}")))
+            };
+            entries.push(ManifestEntry {
+                name: s("name")?,
+                file: s("file")?,
+                kind: s("kind")?,
+                b: u("b")?,
+                c: u("c")?,
+                d: u("d")?,
+                t: e.get("t").and_then(|x| x.as_usize()).unwrap_or(0),
+                sha256: e
+                    .get("sha256")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ManifestEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Entries of a given kind.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ManifestEntry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Smallest bucket of `kind` that fits (the batch dim is chunked by
+    /// the engine, so only c and d must fit; for topk, `t` must also cover
+    /// the request).
+    pub fn pick<'a>(
+        &'a self,
+        kind: &str,
+        c: usize,
+        d: usize,
+        t: usize,
+    ) -> Option<&'a ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.c >= c && e.d >= d && (t == 0 || e.t >= t))
+            .min_by_key(|e| (e.c, e.d, e.t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "entries": [
+        {"name": "a", "file": "a.hlo.txt", "kind": "centroid_topk",
+         "b": 64, "c": 1024, "d": 128, "t": 256},
+        {"name": "b", "file": "b.hlo.txt", "kind": "centroid_topk",
+         "b": 64, "c": 4096, "d": 128, "t": 512},
+        {"name": "c", "file": "c.hlo.txt", "kind": "soar_assign",
+         "b": 256, "c": 1024, "d": 128}
+      ]
+    }"#;
+
+    #[test]
+    fn load_and_pick() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SAMPLE);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.of_kind("centroid_topk").count(), 2);
+        // exact fit
+        let e = m.pick("centroid_topk", 1024, 128, 256).unwrap();
+        assert_eq!(e.name, "a");
+        // needs the bigger bucket
+        let e = m.pick("centroid_topk", 2000, 128, 100).unwrap();
+        assert_eq!(e.name, "b");
+        // too big → none
+        assert!(m.pick("centroid_topk", 8192, 128, 10).is_none());
+        assert!(m.pick("centroid_topk", 1024, 256, 10).is_none());
+        // t=0 wildcard for kinds without topk
+        let e = m.pick("soar_assign", 500, 100, 0).unwrap();
+        assert_eq!(e.name, "c");
+        assert!(m.path_of(e).ends_with("c.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(
+            dir.path(),
+            r#"{"format": "proto", "version": 1, "entries": []}"#,
+        );
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = TempDir::new().unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_required_field_errors() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(
+            dir.path(),
+            r#"{"format": "hlo-text", "version": 1,
+                "entries": [{"name": "x", "file": "x", "kind": "centroid_topk"}]}"#,
+        );
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Pure-Rust scoring backend.
+//!
+//! Functionally identical to the PJRT artifacts (same contracts as the L1
+//! Pallas kernels); used (a) as the fallback when artifacts are not built
+//! or a request shape exceeds every bucket, and (b) as the reference the
+//! runtime integration tests compare the PJRT path against.
+
+use crate::linalg::{dot, MatrixF32};
+use crate::util::parallel::par_chunks_mut;
+
+/// Full MIPS score matrix `q @ cᵀ` — CPU analog of the `centroid_score`
+/// Pallas kernel.
+pub fn centroid_scores(q: &MatrixF32, c: &MatrixF32) -> MatrixF32 {
+    assert_eq!(q.cols(), c.cols(), "dim mismatch");
+    let rows = q.rows();
+    let cols = c.rows();
+    let mut out = MatrixF32::zeros(rows, cols);
+    // Parallelize over queries; each row is an independent scan over C.
+    par_chunks_mut(out.as_mut_slice(), cols.max(1), |i, row| {
+        let qi = q.row(i);
+        for (j, cj) in c.iter_rows().enumerate() {
+            row[j] = dot(qi, cj);
+        }
+    });
+    out
+}
+
+/// SOAR assignment loss matrix — CPU analog of the `soar_assign` kernel:
+/// `‖x−c‖² + λ(⟨r̂,x⟩ − ⟨r̂,c⟩)²` for every (point, centroid) pair.
+pub fn soar_loss_matrix(
+    x: &MatrixF32,
+    r_hat: &MatrixF32,
+    c: &MatrixF32,
+    lambda: f32,
+) -> MatrixF32 {
+    assert_eq!(x.cols(), c.cols());
+    assert_eq!(x.rows(), r_hat.rows());
+    assert_eq!(x.cols(), r_hat.cols());
+    let rows = x.rows();
+    let cols = c.rows();
+    // Precompute per-centroid squared norms once.
+    let c_sq: Vec<f32> = c.iter_rows().map(|cj| dot(cj, cj)).collect();
+    let mut out = MatrixF32::zeros(rows, cols);
+    par_chunks_mut(out.as_mut_slice(), cols.max(1), |i, row| {
+        let xi = x.row(i);
+        let ri = r_hat.row(i);
+        let x_sq = dot(xi, xi);
+        let rx = dot(ri, xi);
+        for (j, cj) in c.iter_rows().enumerate() {
+            let xc = dot(xi, cj);
+            let rc = dot(ri, cj);
+            let par = rx - rc;
+            row[j] = x_sq - 2.0 * xc + c_sq[j] + lambda * par * par;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{squared_l2, Rng};
+
+    fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatrixF32::zeros(n, d);
+        for i in 0..n {
+            rng.fill_gaussian(m.row_mut(i));
+        }
+        m
+    }
+
+    #[test]
+    fn scores_match_naive() {
+        let q = random(7, 12, 1);
+        let c = random(19, 12, 2);
+        let s = centroid_scores(&q, &c);
+        for i in 0..7 {
+            for j in 0..19 {
+                assert!((s.row(i)[j] - dot(q.row(i), c.row(j))).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn soar_loss_matches_direct_formula() {
+        let x = random(5, 8, 3);
+        let mut r = random(5, 8, 4);
+        r.normalize_rows();
+        let c = random(11, 8, 5);
+        let lam = 1.5f32;
+        let loss = soar_loss_matrix(&x, &r, &c, lam);
+        for i in 0..5 {
+            for j in 0..11 {
+                // direct: ‖x−c‖² + λ⟨r̂, x−c⟩²
+                let mut rp = vec![0.0f32; 8];
+                crate::linalg::sub(x.row(i), c.row(j), &mut rp);
+                let want = squared_l2(x.row(i), c.row(j))
+                    + lam * crate::linalg::parallel_component_sq(r.row(i), &rp);
+                assert!(
+                    (loss.row(i)[j] - want).abs() < 1e-3,
+                    "({i},{j}): {} vs {want}",
+                    loss.row(i)[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_zero_is_squared_l2() {
+        let x = random(4, 6, 6);
+        let r = random(4, 6, 7);
+        let c = random(9, 6, 8);
+        let loss = soar_loss_matrix(&x, &r, &c, 0.0);
+        for i in 0..4 {
+            for j in 0..9 {
+                assert!((loss.row(i)[j] - squared_l2(x.row(i), c.row(j))).abs() < 1e-3);
+            }
+        }
+    }
+}

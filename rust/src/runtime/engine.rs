@@ -1,0 +1,490 @@
+//! The scoring engine: PJRT-compiled artifacts with a CPU fallback.
+//!
+//! At start-up the engine loads `artifacts/manifest.json`, compiles every
+//! HLO module on the PJRT CPU client (one `PjRtLoadedExecutable` per shape
+//! bucket), and thereafter serves three operations on the hot paths:
+//!
+//! * `centroid_scores`   — query-time partition scoring (full matrix),
+//! * `centroid_topk`     — query-time partition scoring fused with top-k,
+//! * `soar_loss`         — build-time Theorem 3.1 assignment loss.
+//!
+//! Requests are padded up to the chosen bucket (zero rows/dims are exact
+//! no-ops for these computations; padded centroid *columns* are stripped
+//! before returning). Shapes that exceed every bucket fall back to the
+//! pure-Rust implementation in [`super::cpu`], which is semantically
+//! identical — so the engine is total regardless of which artifacts were
+//! exported.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::linalg::MatrixF32;
+use crate::runtime::artifact::{Manifest, ManifestEntry};
+use crate::runtime::cpu;
+
+/// Which backend actually served a request (observable for tests/metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    CpuFallback,
+}
+
+/// Thread-mobility wrapper for the xla crate's executable handle.
+///
+/// SAFETY: `PjRtLoadedExecutable` is `!Send`/`!Sync` only because it holds
+/// an `Rc<PjRtClientInternal>` and raw C pointers. The PJRT C API itself is
+/// thread-safe for `Execute`, and this engine additionally serializes every
+/// execution behind `PjrtState::lock`. The `Rc` refcount is only touched at
+/// construction (single-threaded, in `Engine::pjrt`) and at drop (the
+/// engine is dropped from one thread); no clones cross threads.
+struct SendExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+unsafe impl Sync for SendExec {}
+
+/// One compiled executable + its bucket metadata.
+struct LoadedExec {
+    entry: ManifestEntry,
+    exe: SendExec,
+}
+
+/// PJRT-backed engine state.
+struct PjrtState {
+    /// Executables by kind ("centroid_topk" | "centroid_score" |
+    /// "soar_assign"), each sorted by bucket size ascending.
+    execs: HashMap<String, Vec<LoadedExec>>,
+    /// PJRT executions are serialized: the CPU client is not guaranteed
+    /// re-entrant under concurrent `execute` calls from many threads.
+    lock: Mutex<()>,
+}
+
+/// The scoring engine. Cheap to share behind an `Arc`.
+pub struct Engine {
+    pjrt: Option<PjrtState>,
+    /// Observability counters.
+    stats: Mutex<EngineStats>,
+}
+
+/// Execution counters (how often each backend served a call).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub pjrt_calls: u64,
+    pub fallback_calls: u64,
+}
+
+impl Engine {
+    /// Pure-CPU engine (no artifacts needed).
+    pub fn cpu() -> Engine {
+        Engine {
+            pjrt: None,
+            stats: Mutex::new(EngineStats::default()),
+        }
+    }
+
+    /// Load + compile all artifacts in `dir`. Errors if the manifest is
+    /// missing or any module fails to compile.
+    pub fn pjrt(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut execs: HashMap<String, Vec<LoadedExec>> = HashMap::new();
+        for entry in &manifest.entries {
+            let path = manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                Error::Runtime(format!("parse {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", entry.name)))?;
+            execs.entry(entry.kind.clone()).or_default().push(LoadedExec {
+                entry: entry.clone(),
+                exe: SendExec(exe),
+            });
+        }
+        for v in execs.values_mut() {
+            v.sort_by_key(|l| (l.entry.c, l.entry.d, l.entry.t));
+        }
+        Ok(Engine {
+            pjrt: Some(PjrtState {
+                execs,
+                lock: Mutex::new(()),
+            }),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    /// PJRT if artifacts are present and loadable, else CPU.
+    pub fn auto(dir: &Path) -> Engine {
+        match Engine::pjrt(dir) {
+            Ok(e) => e,
+            Err(_) => Engine::cpu(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        if self.pjrt.is_some() {
+            "pjrt"
+        } else {
+            "cpu"
+        }
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn note(&self, backend: Backend) {
+        let mut s = self.stats.lock().unwrap();
+        match backend {
+            Backend::Pjrt => s.pjrt_calls += 1,
+            Backend::CpuFallback => s.fallback_calls += 1,
+        }
+    }
+
+    /// Pick the smallest loaded bucket of `kind` that covers (c, d, t).
+    fn pick<'a>(&'a self, kind: &str, c: usize, d: usize, t: usize) -> Option<&'a LoadedExec> {
+        let state = self.pjrt.as_ref()?;
+        state
+            .execs
+            .get(kind)?
+            .iter()
+            .find(|l| l.entry.c >= c && l.entry.d >= d && (t == 0 || l.entry.t >= t))
+    }
+
+    // ------------------------------------------------------------------
+    // centroid scoring
+    // ------------------------------------------------------------------
+
+    /// Full MIPS score matrix `[B, c] = q @ centroidsᵀ`.
+    pub fn centroid_scores(&self, q: &MatrixF32, centroids: &MatrixF32) -> Result<MatrixF32> {
+        if q.cols() != centroids.cols() {
+            return Err(Error::Shape(format!(
+                "query dim {} != centroid dim {}",
+                q.cols(),
+                centroids.cols()
+            )));
+        }
+        if let Some(loaded) = self.pick("centroid_score", centroids.rows(), centroids.cols(), 0)
+        {
+            match self.run_score(loaded, q, centroids) {
+                Ok(m) => {
+                    self.note(Backend::Pjrt);
+                    return Ok(m);
+                }
+                Err(e) => {
+                    // PJRT failure is survivable: fall back.
+                    eprintln!("warning: pjrt centroid_scores failed ({e}); falling back");
+                }
+            }
+        }
+        self.note(Backend::CpuFallback);
+        Ok(cpu::centroid_scores(q, centroids))
+    }
+
+    /// Top-t partitions per query: `(ids, scores)`, descending score.
+    ///
+    /// Preferred path: full score matrix (PJRT matmul artifact when a
+    /// bucket fits, else the CPU kernel) + Rust-side top-k selection.
+    /// The fused score+sort artifact is kept only for shapes covered by a
+    /// `centroid_topk` bucket but no `centroid_score` bucket: perf-pass
+    /// measurement (EXPERIMENTS.md §Perf) showed the sort-based lowering
+    /// at 13.8ms vs 2.4ms for score+Rust-top-k at (64, 1024, 128) —
+    /// XLA-CPU executes the full `sort`, while the Rust heap selection is
+    /// O(c log t).
+    pub fn centroid_topk(
+        &self,
+        q: &MatrixF32,
+        centroids: &MatrixF32,
+        t: usize,
+    ) -> Result<Vec<Vec<(u32, f32)>>> {
+        let t = t.min(centroids.rows());
+        let have_score = self
+            .pick("centroid_score", centroids.rows(), centroids.cols(), 0)
+            .is_some();
+        if !have_score {
+            if let Some(loaded) =
+                self.pick("centroid_topk", centroids.rows(), centroids.cols(), t)
+            {
+                if loaded.entry.c == centroids.rows() {
+                    match self.run_topk(loaded, q, centroids, t) {
+                        Ok(v) => {
+                            self.note(Backend::Pjrt);
+                            return Ok(v);
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "warning: pjrt centroid_topk failed ({e}); falling back"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Score fully (possibly via PJRT centroid_score), select in Rust.
+        let scores = self.centroid_scores(q, centroids)?;
+        let mut out = Vec::with_capacity(q.rows());
+        for i in 0..q.rows() {
+            let mut tk = crate::linalg::TopK::new(t.max(1));
+            for (j, &s) in scores.row(i).iter().enumerate() {
+                tk.push(j as u32, s);
+            }
+            out.push(tk.into_sorted().into_iter().map(|s| (s.id, s.score)).collect());
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // SOAR assignment loss
+    // ------------------------------------------------------------------
+
+    /// Theorem 3.1 loss matrix `[B, c]` (see `cpu::soar_loss_matrix`).
+    pub fn soar_loss(
+        &self,
+        x: &MatrixF32,
+        r_hat: &MatrixF32,
+        centroids: &MatrixF32,
+        lambda: f32,
+    ) -> Result<MatrixF32> {
+        if x.rows() != r_hat.rows() || x.cols() != r_hat.cols() {
+            return Err(Error::Shape("x and r_hat must match".into()));
+        }
+        if x.cols() != centroids.cols() {
+            return Err(Error::Shape(format!(
+                "point dim {} != centroid dim {}",
+                x.cols(),
+                centroids.cols()
+            )));
+        }
+        if let Some(loaded) = self.pick("soar_assign", centroids.rows(), centroids.cols(), 0) {
+            match self.run_soar(loaded, x, r_hat, centroids, lambda) {
+                Ok(m) => {
+                    self.note(Backend::Pjrt);
+                    return Ok(m);
+                }
+                Err(e) => {
+                    eprintln!("warning: pjrt soar_loss failed ({e}); falling back");
+                }
+            }
+        }
+        self.note(Backend::CpuFallback);
+        Ok(cpu::soar_loss_matrix(x, r_hat, centroids, lambda))
+    }
+
+    // ------------------------------------------------------------------
+    // PJRT execution plumbing
+    // ------------------------------------------------------------------
+
+    /// Zero-pad a matrix into a `[rows, cols]` literal.
+    fn literal_padded(m: &MatrixF32, rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert!(m.rows() <= rows && m.cols() <= cols);
+        let mut buf = vec![0.0f32; rows * cols];
+        for i in 0..m.rows() {
+            buf[i * cols..i * cols + m.cols()].copy_from_slice(m.row(i));
+        }
+        xla::Literal::vec1(&buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))
+    }
+
+    fn exec(
+        state: &PjrtState,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let _guard = state.lock.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| Error::Runtime(format!("pjrt execute: {e}")))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))
+    }
+
+    /// Run a `centroid_score` artifact, chunking over the batch dim.
+    fn run_score(
+        &self,
+        loaded: &LoadedExec,
+        q: &MatrixF32,
+        centroids: &MatrixF32,
+    ) -> Result<MatrixF32> {
+        let state = self.pjrt.as_ref().unwrap();
+        let (bb, bc, bd) = (loaded.entry.b, loaded.entry.c, loaded.entry.d);
+        let c_lit = Self::literal_padded(centroids, bc, bd)?;
+        let mut out = MatrixF32::zeros(q.rows(), centroids.rows());
+        let mut start = 0usize;
+        while start < q.rows() {
+            let stop = (start + bb).min(q.rows());
+            let chunk = q.gather_rows(&(start..stop).collect::<Vec<_>>());
+            let q_lit = Self::literal_padded(&chunk, bb, bd)?;
+            let result = Self::exec(state, &loaded.exe.0, &[q_lit, c_lit.clone()])?;
+            let scores = result
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("tuple1: {e}")))?;
+            let vals: Vec<f32> = scores
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            // strip padding
+            for (local, row) in (start..stop).enumerate() {
+                let src = &vals[local * bc..local * bc + centroids.rows()];
+                out.row_mut(row).copy_from_slice(src);
+            }
+            start = stop;
+        }
+        Ok(out)
+    }
+
+    /// Run a fused `centroid_topk` artifact (exact c match enforced by the
+    /// caller), chunking over the batch dim.
+    fn run_topk(
+        &self,
+        loaded: &LoadedExec,
+        q: &MatrixF32,
+        centroids: &MatrixF32,
+        t: usize,
+    ) -> Result<Vec<Vec<(u32, f32)>>> {
+        let state = self.pjrt.as_ref().unwrap();
+        let (bb, bc, bd, bt) = (
+            loaded.entry.b,
+            loaded.entry.c,
+            loaded.entry.d,
+            loaded.entry.t,
+        );
+        debug_assert_eq!(bc, centroids.rows());
+        let c_lit = Self::literal_padded(centroids, bc, bd)?;
+        let mut out = Vec::with_capacity(q.rows());
+        let mut start = 0usize;
+        while start < q.rows() {
+            let stop = (start + bb).min(q.rows());
+            let chunk = q.gather_rows(&(start..stop).collect::<Vec<_>>());
+            let q_lit = Self::literal_padded(&chunk, bb, bd)?;
+            let result = Self::exec(state, &loaded.exe.0, &[q_lit, c_lit.clone()])?;
+            let (vals_lit, idx_lit) = result
+                .to_tuple2()
+                .map_err(|e| Error::Runtime(format!("tuple2: {e}")))?;
+            let vals: Vec<f32> = vals_lit
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("vals to_vec: {e}")))?;
+            let idx: Vec<i32> = idx_lit
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("idx to_vec: {e}")))?;
+            for local in 0..(stop - start) {
+                let row: Vec<(u32, f32)> = (0..t)
+                    .map(|j| {
+                        (
+                            idx[local * bt + j] as u32,
+                            vals[local * bt + j],
+                        )
+                    })
+                    .collect();
+                out.push(row);
+            }
+            start = stop;
+        }
+        Ok(out)
+    }
+
+    /// Run a `soar_assign` artifact, chunking over the batch dim.
+    fn run_soar(
+        &self,
+        loaded: &LoadedExec,
+        x: &MatrixF32,
+        r_hat: &MatrixF32,
+        centroids: &MatrixF32,
+        lambda: f32,
+    ) -> Result<MatrixF32> {
+        let state = self.pjrt.as_ref().unwrap();
+        let (bb, bc, bd) = (loaded.entry.b, loaded.entry.c, loaded.entry.d);
+        let c_lit = Self::literal_padded(centroids, bc, bd)?;
+        let lam_lit = xla::Literal::vec1(&[lambda]);
+        let mut out = MatrixF32::zeros(x.rows(), centroids.rows());
+        let mut start = 0usize;
+        while start < x.rows() {
+            let stop = (start + bb).min(x.rows());
+            let rows: Vec<usize> = (start..stop).collect();
+            let x_lit = Self::literal_padded(&x.gather_rows(&rows), bb, bd)?;
+            let r_lit = Self::literal_padded(&r_hat.gather_rows(&rows), bb, bd)?;
+            let result = Self::exec(
+                state,
+                &loaded.exe.0,
+                &[x_lit, r_lit, c_lit.clone(), lam_lit.clone()],
+            )?;
+            let loss = result
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("tuple1: {e}")))?;
+            let vals: Vec<f32> = loss
+                .to_vec()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            for (local, row) in (start..stop).enumerate() {
+                out.row_mut(row)
+                    .copy_from_slice(&vals[local * bc..local * bc + centroids.rows()]);
+            }
+            start = stop;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatrixF32::zeros(n, d);
+        for i in 0..n {
+            rng.fill_gaussian(m.row_mut(i));
+        }
+        m
+    }
+
+    #[test]
+    fn cpu_engine_scores() {
+        let e = Engine::cpu();
+        assert_eq!(e.backend_name(), "cpu");
+        let q = random(3, 8, 1);
+        let c = random(10, 8, 2);
+        let s = e.centroid_scores(&q, &c).unwrap();
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 10);
+        assert_eq!(e.stats().fallback_calls, 1);
+    }
+
+    #[test]
+    fn cpu_engine_topk_sorted() {
+        let e = Engine::cpu();
+        let q = random(2, 8, 3);
+        let c = random(30, 8, 4);
+        let tk = e.centroid_topk(&q, &c, 5).unwrap();
+        assert_eq!(tk.len(), 2);
+        for row in &tk {
+            assert_eq!(row.len(), 5);
+            for w in row.windows(2) {
+                assert!(w[0].1 >= w[1].1);
+            }
+        }
+        // t clamps to number of centroids
+        let tk = e.centroid_topk(&q, &c, 100).unwrap();
+        assert_eq!(tk[0].len(), 30);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let e = Engine::cpu();
+        let q = random(2, 8, 1);
+        let c = random(4, 9, 1);
+        assert!(e.centroid_scores(&q, &c).is_err());
+        let x = random(2, 8, 1);
+        let r = random(3, 8, 1);
+        assert!(e.soar_loss(&x, &r, &q, 1.0).is_err());
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_cpu() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let e = Engine::auto(dir.path());
+        assert_eq!(e.backend_name(), "cpu");
+    }
+}

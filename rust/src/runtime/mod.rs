@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the Rust hot paths (python never runs at serve time).
+//!
+//! `Engine::pjrt(dir)` compiles every module listed in
+//! `artifacts/manifest.json` on the PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → `compile`);
+//! `Engine::cpu()` is the semantically identical pure-Rust fallback used in
+//! artifact-free test environments and for shapes exceeding every bucket.
+
+pub mod artifact;
+pub mod cpu;
+pub mod engine;
+
+pub use artifact::{Manifest, ManifestEntry};
+pub use engine::{Backend, Engine, EngineStats};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$SOAR_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("SOAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

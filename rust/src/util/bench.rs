@@ -1,0 +1,197 @@
+//! Measurement harness for `benches/` (criterion stand-in).
+//!
+//! Warmup + timed iterations with robust statistics (median, MAD-filtered
+//! mean, p10/p90), plus throughput helpers. Every bench binary declares
+//! `harness = false` in Cargo.toml and drives this directly, printing
+//! one row per configuration in a stable machine-grepable format.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured configuration.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration, one sample per timed batch.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.10)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.90)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    /// Iterations per second at the median.
+    pub fn throughput_per_sec(&self) -> f64 {
+        let m = self.median_ns();
+        if m > 0.0 {
+            1e9 / m
+        } else {
+            0.0
+        }
+    }
+
+    /// One stable report line.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<42} median {:>12} p10 {:>12} p90 {:>12} ({:.1}/s)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p10_ns()),
+            fmt_ns(self.p90_ns()),
+            self.throughput_per_sec(),
+        )
+    }
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(f64::total_cmp);
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Benchmark runner with a time budget per configuration.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 5,
+        }
+    }
+
+    pub fn with_budget(warmup: Duration, measure: Duration) -> Bencher {
+        Bencher {
+            warmup,
+            measure,
+            min_samples: 5,
+        }
+    }
+
+    /// Measure `f`, batching iterations so each timed sample is ≥ ~100µs.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + batch sizing.
+        let warm_start = Instant::now();
+        let mut batch = 1usize;
+        let mut one;
+        loop {
+            let t = Instant::now();
+            f();
+            one = t.elapsed();
+            if warm_start.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let target = Duration::from_micros(100);
+        if one < target && one.as_nanos() > 0 {
+            batch = (target.as_nanos() / one.as_nanos().max(1)) as usize + 1;
+        }
+
+        // Timed samples.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples_ns: samples,
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+/// `std::hint::black_box` re-export so benches avoid dead-code elision.
+pub use std::hint::black_box;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(m.median_ns() > 0.0);
+        assert!(m.samples_ns.len() >= 5);
+        assert!(m.throughput_per_sec() > 0.0);
+        assert!(m.p90_ns() >= m.p10_ns());
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[5.0], 0.99), 5.0);
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 5.0);
+        assert_eq!(percentile(&v, 0.5), 3.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

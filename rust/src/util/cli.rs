@@ -1,0 +1,142 @@
+//! Tiny CLI flag parser for the `soar` binary (clap stand-in).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: positionals + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]). `known_flags` lists every
+    /// accepted `--name`; anything else errors.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args {
+            known: known_flags.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !out.known.iter().any(|k| k == &key) {
+                    return Err(Error::Config(format!("unknown flag --{key}")));
+                }
+                let value = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Boolean flag if next token is another flag / EOF.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.flags.insert(key, value);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], known: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), known)
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare boolean flag greedily consumes a following bare token,
+        // so positionals go before boolean flags (or use --flag=true).
+        let a = parse(
+            &["build", "out.idx", "--n", "100", "--lambda=1.5", "--verbose"],
+            &["n", "lambda", "verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["build", "out.idx"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_f32("lambda", 0.0).unwrap(), 1.5);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parse(&["--nope"], &["yes"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &["k"]).unwrap();
+        assert_eq!(a.get_usize("k", 7).unwrap(), 7);
+        assert_eq!(a.get_str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--k", "abc"], &["k"]).unwrap();
+        assert!(a.get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["--flag", "--k", "3"], &["flag", "k"]).unwrap();
+        assert!(a.get_bool("flag"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,21 @@
+//! In-tree substrates that a networked build would pull from crates.io.
+//!
+//! This repository builds fully offline, so the supporting infrastructure
+//! is implemented here from scratch:
+//!
+//! * [`parallel`] — scoped-thread data-parallel executor (rayon stand-in),
+//! * [`json`]     — minimal JSON parser/emitter (serde_json stand-in) for
+//!                  the artifact manifest, configs, and experiment reports,
+//! * [`cli`]      — flag parser for the `soar` binary (clap stand-in),
+//! * [`bench`]    — measurement harness with warmup + robust statistics
+//!                  (criterion stand-in) used by `benches/`,
+//! * [`prop`]     — property-testing driver with seeded case generation
+//!                  and failure reporting (proptest stand-in),
+//! * [`tempdir`]  — self-deleting temp directories for tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod prop;
+pub mod tempdir;

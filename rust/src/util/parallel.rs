@@ -1,0 +1,157 @@
+//! Data-parallel primitives on scoped std threads (rayon stand-in).
+//!
+//! The engine's parallel workloads are all embarrassingly parallel maps
+//! over dense index ranges (per-query scans, per-point assignments), so a
+//! static-chunked scoped-thread pool covers them with negligible overhead.
+//! Threads are spawned per call; for the multi-millisecond workloads these
+//! helpers serve, spawn cost (<20µs/thread) is noise — and keeping the
+//! helpers stateless avoids global-pool lifecycle hazards in tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `SOAR_THREADS` override or the machine's parallelism.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("SOAR_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Parallel `(0..n).map(f).collect()` preserving order.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut parts: Vec<Vec<T>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
+            })
+            .collect();
+        parts.extend(handles.into_iter().map(|h| h.join().expect("worker panicked")));
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Parallel for-each over `chunk_size`-wide mutable chunks of `data`;
+/// `f(chunk_index, chunk)`. Work-stealing via a shared iterator, so ragged
+/// per-chunk costs still balance.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_size > 0);
+    let n_chunks = data.len().div_ceil(chunk_size.max(1));
+    let threads = num_threads().min(n_chunks.max(1));
+    if threads <= 1 || n_chunks < 2 {
+        for (i, c) in data.chunks_mut(chunk_size).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let queue = Mutex::new(data.chunks_mut(chunk_size).enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Parallel for-each over shared items (no results).
+pub fn par_for_each<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let _ = par_map(n, |i| {
+        f(i);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_matches_serial() {
+        for n in [0usize, 1, 2, 7, 100, 1001] {
+            let got = par_map(n, |i| i * i);
+            let want: Vec<usize> = (0..n).map(|i| i * i).collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_transforms_all() {
+        let mut data: Vec<u32> = (0..1000).collect();
+        par_chunks_mut(&mut data, 64, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v *= 2;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32 * 2);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_indices_correct() {
+        let mut data = vec![0usize; 100];
+        par_chunks_mut(&mut data, 7, |ci, chunk| {
+            for v in chunk.iter_mut() {
+                *v = ci;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i / 7);
+        }
+    }
+
+    #[test]
+    fn par_for_each_runs_all() {
+        let counter = AtomicU64::new(0);
+        par_for_each(500, |i| {
+            counter.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), (0..500u64).sum());
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,164 @@
+//! Property-testing driver (proptest stand-in).
+//!
+//! Runs a property over many seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use soar_ann::util::prop::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_f32(0..100, -1.0, 1.0);
+//!     v.sort_by(f32::total_cmp);
+//!     let once = v.clone();
+//!     v.sort_by(f32::total_cmp);
+//!     assert_eq!(v, once);
+//! });
+//! ```
+
+use std::ops::Range;
+
+use crate::linalg::Rng;
+
+/// Random case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case (for failure replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.next_below((range.end - range.start) as u32) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f32 {
+        self.rng.next_gaussian()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Random-length Vec<f32> with uniform entries.
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Random-length Vec of standard normals.
+    pub fn vec_gaussian(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.gaussian()).collect()
+    }
+
+    /// Pick an element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0..items.len())]
+    }
+
+    /// Access the underlying RNG for custom sampling.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `property` over `cases` seeded cases. Panics (preserving the inner
+/// panic message) with the failing seed on the first failure.
+///
+/// Set `SOAR_PROP_SEED` to replay one specific case.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    if let Ok(seed) = std::env::var("SOAR_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("SOAR_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        property(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        // Stable per-(name, case) seed so adding properties elsewhere
+        // doesn't shift seeds.
+        let seed = fnv1a(name) ^ (case.wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            property(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with SOAR_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static RUNS: AtomicU64 = AtomicU64::new(0);
+        check("always true", 50, |g| {
+            let _ = g.f32_in(0.0, 1.0);
+            RUNS.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(RUNS.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always false", 10, |_g| {
+                panic!("boom");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("SOAR_PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let u = g.usize_in(3..10);
+            assert!((3..10).contains(&u));
+            let f = g.f32_in(-2.0, 5.0);
+            assert!((-2.0..5.0).contains(&f));
+        }
+        let v = g.vec_f32(5..6, 0.0, 1.0);
+        assert_eq!(v.len(), 5);
+    }
+}

@@ -1,0 +1,202 @@
+//! Integration: the full pipeline — synthesize → build → save/load →
+//! serve → recall — across index types, plus the SOAR-vs-baseline
+//! quality invariants at matched scan budgets.
+
+use std::sync::Arc;
+
+use soar_ann::config::{IndexConfig, SearchParams, ServeConfig, SpillMode};
+use soar_ann::coordinator::server::{closed_loop_load, ServeEngine};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::serialize::{load_index, save_index};
+use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::runtime::Engine;
+use soar_ann::util::tempdir::TempDir;
+
+#[test]
+fn pipeline_synthesize_build_save_load_search() {
+    let ds = SyntheticConfig::glove_like(5000, 32, 32, 7).generate();
+    let engine = Engine::cpu();
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let index = build_index(&engine, &ds.data, &cfg).unwrap();
+
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("idx.soar");
+    save_index(&index, &path).unwrap();
+    let loaded = load_index(&path).unwrap();
+
+    // Loaded index must search identically to the in-memory one.
+    let params = SearchParams {
+        k: 10,
+        top_t: 4,
+        rerank_budget: 150,
+    };
+    let s1 = Searcher::new(&index, &engine);
+    let s2 = Searcher::new(&loaded, &engine);
+    let mut sc1 = SearchScratch::new(&index);
+    let mut sc2 = SearchScratch::new(&loaded);
+    for qi in 0..ds.num_queries() {
+        let (a, st_a) = s1.search(ds.queries.row(qi), &params, &mut sc1);
+        let (b, st_b) = s2.search(ds.queries.row(qi), &params, &mut sc2);
+        let ids_a: Vec<u32> = a.iter().map(|s| s.id).collect();
+        let ids_b: Vec<u32> = b.iter().map(|s| s.id).collect();
+        assert_eq!(ids_a, ids_b, "query {qi}");
+        assert_eq!(st_a, st_b);
+    }
+}
+
+#[test]
+fn soar_recall_at_equal_budget_not_worse_than_baselines() {
+    // At a fixed (top_t, rerank) operating point, SOAR must not lose to
+    // the naive-spill baseline, and should beat no-spill at tight budgets
+    // (the Fig 6 / Fig 11 shape).
+    let ds = SyntheticConfig::glove_like(12_000, 32, 64, 11).generate();
+    let engine = Engine::cpu();
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let recall_for = |spill: SpillMode| -> f64 {
+        let cfg = IndexConfig::for_dataset(ds.n(), spill);
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 10,
+            top_t: 3,
+            rerank_budget: 150,
+        };
+        let results = searcher.search_batch(&ds.queries, &params).unwrap();
+        let ids: Vec<Vec<u32>> = results
+            .iter()
+            .map(|(r, _)| r.iter().map(|s| s.id).collect())
+            .collect();
+        gt.mean_recall(&ids)
+    };
+    let r_none = recall_for(SpillMode::None);
+    let r_naive = recall_for(SpillMode::Nearest);
+    let r_soar = recall_for(SpillMode::Soar { lambda: 1.0 });
+    println!("recall@t=3: none={r_none:.3} naive={r_naive:.3} soar={r_soar:.3}");
+    assert!(
+        r_soar >= r_naive - 0.02,
+        "SOAR {r_soar} must not lose to naive spill {r_naive}"
+    );
+    assert!(
+        r_soar >= r_none - 0.02,
+        "SOAR {r_soar} must not lose to no-spill {r_none} at tight budgets"
+    );
+}
+
+#[test]
+fn served_engine_end_to_end_recall() {
+    let ds = SyntheticConfig::glove_like(8000, 32, 48, 23).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let index = Arc::new(build_index(&engine, &ds.data, &cfg).unwrap());
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let server = ServeEngine::start(
+        index,
+        engine,
+        SearchParams {
+            k: 10,
+            top_t: 8,
+            rerank_budget: 300,
+        },
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 500,
+            workers: 2,
+            queue_depth: 512,
+        },
+    );
+    let handle = server.handle();
+    // Serve every query once through the concurrent stack.
+    let mut results = vec![Vec::new(); ds.num_queries()];
+    std::thread::scope(|s| {
+        let chunks: Vec<Vec<usize>> = (0..4)
+            .map(|t| (0..ds.num_queries()).filter(|q| q % 4 == t).collect())
+            .collect();
+        let mut handles = Vec::new();
+        for chunk in chunks {
+            let h = handle.clone();
+            let ds = &ds;
+            handles.push(s.spawn(move || {
+                chunk
+                    .into_iter()
+                    .map(|qi| {
+                        let res = h.search(ds.queries.row(qi).to_vec()).unwrap();
+                        (qi, res.into_iter().map(|x| x.id).collect::<Vec<u32>>())
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            for (qi, ids) in h.join().unwrap() {
+                results[qi] = ids;
+            }
+        }
+    });
+    let recall = gt.mean_recall(&results);
+    assert!(recall > 0.7, "served recall {recall}");
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.queries, ds.num_queries() as u64);
+    server.shutdown();
+}
+
+#[test]
+fn sharded_router_recall_close_to_single_index() {
+    use soar_ann::coordinator::router::ShardedIndex;
+    let ds = SyntheticConfig::glove_like(6000, 32, 40, 31).generate();
+    let engine = Engine::cpu();
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let params = SearchParams {
+        k: 10,
+        top_t: 6,
+        rerank_budget: 200,
+    };
+
+    let single = build_index(&engine, &ds.data, &cfg).unwrap();
+    let searcher = Searcher::new(&single, &engine);
+    let mut scratch = SearchScratch::new(&single);
+    let mut single_results = Vec::new();
+    for qi in 0..ds.num_queries() {
+        let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+        single_results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+    }
+    let single_recall = gt.mean_recall(&single_results);
+
+    let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 3).unwrap();
+    let mut scratches = sharded.make_scratches();
+    let mut sharded_results = Vec::new();
+    for qi in 0..ds.num_queries() {
+        let res = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+        sharded_results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+    }
+    let sharded_recall = gt.mean_recall(&sharded_results);
+    println!("single {single_recall:.3} vs sharded {sharded_recall:.3}");
+    // Sharded probes t partitions per shard → strictly more work, recall
+    // should be at least comparable.
+    assert!(sharded_recall >= single_recall - 0.05);
+}
+
+#[test]
+fn closed_loop_load_completes_under_backpressure() {
+    let ds = SyntheticConfig::glove_like(3000, 16, 32, 41).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
+    let index = Arc::new(build_index(&engine, &ds.data, &cfg).unwrap());
+    let server = ServeEngine::start(
+        index,
+        engine,
+        SearchParams::default(),
+        ServeConfig {
+            max_batch: 4,
+            max_wait_us: 100,
+            workers: 1,
+            queue_depth: 8, // tiny: forces rejection + retry inside the loop
+        },
+    );
+    let handle = server.handle();
+    let elapsed = closed_loop_load(&handle, &ds.queries, 6, 20);
+    let snap = server.metrics().snapshot();
+    assert!(elapsed > 0.0);
+    assert_eq!(snap.queries, 120, "all queries must eventually complete");
+    server.shutdown();
+}

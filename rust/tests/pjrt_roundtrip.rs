@@ -1,0 +1,166 @@
+//! Integration: the PJRT engine must load the AOT artifacts and agree
+//! numerically with the CPU fallback on every entry point.
+//!
+//! Requires `make artifacts` to have been run; tests are skipped (with a
+//! loud message) when the artifact directory is absent so `cargo test`
+//! stays runnable in artifact-free checkouts.
+
+use std::path::PathBuf;
+
+use soar_ann::linalg::{MatrixF32, Rng};
+use soar_ann::runtime::Engine;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = soar_ann::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
+    let mut rng = Rng::new(seed);
+    let mut m = MatrixF32::zeros(n, d);
+    for i in 0..n {
+        rng.fill_gaussian(m.row_mut(i));
+    }
+    m
+}
+
+fn assert_matrices_close(a: &MatrixF32, b: &MatrixF32, tol: f32, what: &str) {
+    assert_eq!(a.rows(), b.rows(), "{what}: row mismatch");
+    assert_eq!(a.cols(), b.cols(), "{what}: col mismatch");
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let (x, y) = (a.row(i)[j], b.row(i)[j]);
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}: ({i},{j}) {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_loads_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::pjrt(&dir).expect("engine must load all artifacts");
+    assert_eq!(engine.backend_name(), "pjrt");
+}
+
+#[test]
+fn centroid_scores_match_cpu_exact_bucket() {
+    let Some(dir) = artifact_dir() else { return };
+    let pjrt = Engine::pjrt(&dir).unwrap();
+    let cpu = Engine::cpu();
+    // Exact bucket shape: c=1024, d=128.
+    let q = random(64, 128, 1);
+    let c = random(1024, 128, 2);
+    let a = pjrt.centroid_scores(&q, &c).unwrap();
+    let b = cpu.centroid_scores(&q, &c).unwrap();
+    assert_matrices_close(&a, &b, 1e-4, "centroid_scores exact bucket");
+    assert!(pjrt.stats().pjrt_calls > 0, "must actually use PJRT");
+}
+
+#[test]
+fn centroid_scores_match_cpu_padded_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let pjrt = Engine::pjrt(&dir).unwrap();
+    let cpu = Engine::cpu();
+    // Odd shapes: pad rows, columns, dims; chunk the batch.
+    for (b_, c_, d_) in [(3usize, 250usize, 33usize), (129, 1000, 100), (1, 17, 128)] {
+        let q = random(b_, d_, 3);
+        let c = random(c_, d_, 4);
+        let a = pjrt.centroid_scores(&q, &c).unwrap();
+        let b = cpu.centroid_scores(&q, &c).unwrap();
+        assert_matrices_close(&a, &b, 1e-4, &format!("scores {b_}x{c_}x{d_}"));
+    }
+}
+
+#[test]
+fn centroid_topk_matches_cpu() {
+    let Some(dir) = artifact_dir() else { return };
+    let pjrt = Engine::pjrt(&dir).unwrap();
+    let cpu = Engine::cpu();
+    // Exact bucket (c=1024) exercises the fused top-k artifact.
+    let q = random(70, 128, 5); // chunks over the b=64 bucket
+    let c = random(1024, 128, 6);
+    let a = pjrt.centroid_topk(&q, &c, 32).unwrap();
+    let b = cpu.centroid_topk(&q, &c, 32).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (qa, qb) in a.iter().zip(&b) {
+        assert_eq!(qa.len(), 32);
+        let ids_a: Vec<u32> = qa.iter().map(|x| x.0).collect();
+        let ids_b: Vec<u32> = qb.iter().map(|x| x.0).collect();
+        assert_eq!(ids_a, ids_b);
+        for (x, y) in qa.iter().zip(qb) {
+            assert!((x.1 - y.1).abs() < 1e-3, "{} vs {}", x.1, y.1);
+        }
+    }
+}
+
+#[test]
+fn soar_loss_matches_cpu() {
+    let Some(dir) = artifact_dir() else { return };
+    let pjrt = Engine::pjrt(&dir).unwrap();
+    let cpu = Engine::cpu();
+    for lambda in [0.0f32, 1.0, 1.5, 8.0] {
+        let x = random(300, 96, 7); // chunks over b=256, pads d 96→128
+        let mut rhat = random(300, 96, 8);
+        rhat.normalize_rows();
+        let c = random(700, 96, 9);
+        let a = pjrt.soar_loss(&x, &rhat, &c, lambda).unwrap();
+        let b = cpu.soar_loss(&x, &rhat, &c, lambda).unwrap();
+        assert_matrices_close(&a, &b, 2e-4, &format!("soar_loss λ={lambda}"));
+    }
+}
+
+#[test]
+fn full_build_and_search_with_pjrt_engine() {
+    use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+    use soar_ann::data::ground_truth::ground_truth_mips;
+    use soar_ann::data::synthetic::SyntheticConfig;
+    use soar_ann::index::{build_index, Searcher};
+
+    let Some(dir) = artifact_dir() else { return };
+    let pjrt = Engine::pjrt(&dir).unwrap();
+    let cpu = Engine::cpu();
+    let ds = SyntheticConfig::glove_like(3000, 128, 16, 99).generate();
+    let cfg = IndexConfig {
+        num_partitions: 32,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    // Builds must agree between backends (identical assignments).
+    let idx_pjrt = build_index(&pjrt, &ds.data, &cfg).unwrap();
+    let idx_cpu = build_index(&cpu, &ds.data, &cfg).unwrap();
+    let mut mismatches = 0usize;
+    for i in 0..idx_pjrt.assignments.len() {
+        if idx_pjrt.assignments[i] != idx_cpu.assignments[i] {
+            mismatches += 1;
+        }
+    }
+    // A few boundary flips from fp reassociation are acceptable.
+    assert!(
+        mismatches * 1000 < idx_pjrt.assignments.len(),
+        "too many assignment mismatches: {mismatches}"
+    );
+
+    // Batch search through the PJRT engine must reach decent recall.
+    let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+    let searcher = Searcher::new(&idx_pjrt, &pjrt);
+    let params = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 300,
+    };
+    let results = searcher.search_batch(&ds.queries, &params).unwrap();
+    let ids: Vec<Vec<u32>> = results
+        .iter()
+        .map(|(r, _)| r.iter().map(|s| s.id).collect())
+        .collect();
+    let recall = gt.mean_recall(&ids);
+    assert!(recall > 0.6, "pjrt-engine recall {recall}");
+}

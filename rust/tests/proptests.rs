@@ -1,0 +1,318 @@
+//! Property-based tests over the engine's core invariants, driven by the
+//! in-tree `util::prop` harness (seeded, replayable via SOAR_PROP_SEED).
+
+use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, soar, SearchScratch, Searcher};
+use soar_ann::linalg::{dot, MatrixF32, TopK};
+use soar_ann::quant::{Int8Quantizer, PqConfig, ProductQuantizer};
+use soar_ann::runtime::{cpu, Engine};
+use soar_ann::util::prop::{check, Gen};
+
+fn gen_matrix(g: &mut Gen, rows: usize, cols: usize) -> MatrixF32 {
+    let mut m = MatrixF32::zeros(rows, cols);
+    for i in 0..rows {
+        for v in m.row_mut(i).iter_mut() {
+            *v = g.gaussian();
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_topk_matches_full_sort() {
+    check("topk == sorted truncation", 150, |g| {
+        let n = g.usize_in(1..400);
+        let k = g.usize_in(1..64);
+        let scores: Vec<f32> = (0..n).map(|_| g.gaussian()).collect();
+        let mut tk = TopK::new(k);
+        for (i, &s) in scores.iter().enumerate() {
+            tk.push(i as u32, s);
+        }
+        let got = tk.into_sorted();
+        let mut want: Vec<(u32, f32)> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (i as u32, s))
+            .collect();
+        want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        want.truncate(k);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.id, b.0);
+        }
+    });
+}
+
+#[test]
+fn prop_soar_loss_geq_l2_with_equality_conditions() {
+    // Theorem 3.1 structure: L(λ) ≥ ℓ₂ always; equality iff λ=0 or r ⊥ r'.
+    check("soar loss >= l2", 100, |g| {
+        let d = g.usize_in(2..24);
+        let x = gen_matrix(g, 4, d);
+        let mut rhat = gen_matrix(g, 4, d);
+        rhat.normalize_rows();
+        let c = gen_matrix(g, 8, d);
+        let lam = g.f32_in(0.0, 8.0);
+        let l2 = cpu::soar_loss_matrix(&x, &MatrixF32::zeros(4, d), &c, 0.0);
+        let l = cpu::soar_loss_matrix(&x, &rhat, &c, lam);
+        for i in 0..4 {
+            for j in 0..8 {
+                assert!(
+                    l.row(i)[j] >= l2.row(i)[j] - 1e-3,
+                    "loss {} < l2 {}",
+                    l.row(i)[j],
+                    l2.row(i)[j]
+                );
+            }
+        }
+        // λ = 0 ⇒ exactly ℓ₂.
+        let l0 = cpu::soar_loss_matrix(&x, &rhat, &c, 0.0);
+        for i in 0..4 {
+            for j in 0..8 {
+                assert!((l0.row(i)[j] - l2.row(i)[j]).abs() < 1e-3);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spill_assignments_always_distinct_and_in_range() {
+    check("spills distinct", 25, |g| {
+        let d = g.usize_in(4..16);
+        let n = g.usize_in(20..80);
+        let c = g.usize_in(4..12);
+        let data = gen_matrix(g, n, d);
+        let centroids = gen_matrix(g, c, d);
+        let primary: Vec<u32> = (0..n)
+            .map(|i| {
+                let mut best = (0u32, f32::INFINITY);
+                for (ci, row) in centroids.iter_rows().enumerate() {
+                    let dist = soar_ann::linalg::squared_l2(data.row(i), row);
+                    if dist < best.1 {
+                        best = (ci as u32, dist);
+                    }
+                }
+                best.0
+            })
+            .collect();
+        let engine = Engine::cpu();
+        let spills = g.usize_in(1..3.min(c - 1).max(2));
+        let mode = if g.bool() {
+            SpillMode::Soar {
+                lambda: g.f32_in(0.0, 4.0),
+            }
+        } else {
+            SpillMode::Nearest
+        };
+        let assigns =
+            soar::assign_spills(&engine, &data, &centroids, &primary, mode, spills).unwrap();
+        for (i, a) in assigns.iter().enumerate() {
+            assert_eq!(a.len(), 1 + spills);
+            assert_eq!(a[0], primary[i]);
+            let set: std::collections::HashSet<_> = a.iter().collect();
+            assert_eq!(set.len(), a.len(), "duplicate assignment {a:?}");
+            assert!(a.iter().all(|&p| (p as usize) < c));
+        }
+    });
+}
+
+#[test]
+fn prop_pq_adc_consistent_with_decode() {
+    check("adc == dot(q, decode)", 40, |g| {
+        let s = g.usize_in(1..4);
+        let d = g.usize_in(s..17.max(s + 1));
+        let n = 80;
+        let data = gen_matrix(g, n, d);
+        let pq = ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: s,
+                train_iters: 3,
+                seed: g.seed,
+                train_sample: 0,
+            },
+        )
+        .unwrap();
+        let q: Vec<f32> = (0..d).map(|_| g.gaussian()).collect();
+        let mut lut = Vec::new();
+        pq.build_lut(&q, &mut lut);
+        for i in 0..10 {
+            let code = pq.encode(data.row(i));
+            let adc = pq.adc_score(&lut, &code.0);
+            let exact = dot(&q, &pq.decode(&code));
+            assert!((adc - exact).abs() < 1e-3, "{adc} vs {exact}");
+        }
+    });
+}
+
+#[test]
+fn prop_int8_dot_error_bounded() {
+    check("int8 dot error bounded by scale sum", 60, |g| {
+        let d = g.usize_in(2..48);
+        let data = gen_matrix(g, 30, d);
+        let q8 = Int8Quantizer::train(&data).unwrap();
+        let q: Vec<f32> = (0..d).map(|_| g.gaussian()).collect();
+        let qs = q8.scale_query(&q);
+        for i in 0..10 {
+            let x = data.row(i);
+            let exact = dot(&q, x);
+            let approx = Int8Quantizer::dot_prescaled(&qs, &q8.encode(x));
+            // Per-dim rounding error ≤ scale/2 ⇒ |err| ≤ Σ|q_j|·scale_j/2.
+            let bound: f32 = q
+                .iter()
+                .zip(&q8.scales)
+                .map(|(&qq, &sc)| qq.abs() * sc * 0.5)
+                .sum::<f32>()
+                + 1e-4;
+            assert!(
+                (exact - approx).abs() <= bound,
+                "err {} > bound {bound}",
+                (exact - approx).abs()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_search_results_sorted_unique_and_within_k() {
+    check("search output invariants", 8, |g| {
+        let n = g.usize_in(500..1500);
+        let ds = SyntheticConfig::glove_like(n, 16, 4, g.seed).generate();
+        let engine = Engine::cpu();
+        let spill = *g.choose(&[
+            SpillMode::None,
+            SpillMode::Nearest,
+            SpillMode::Soar { lambda: 1.0 },
+        ]);
+        let cfg = IndexConfig {
+            num_partitions: g.usize_in(4..20),
+            spill,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let searcher = Searcher::new(&idx, &engine);
+        let mut scratch = SearchScratch::new(&idx);
+        let params = SearchParams {
+            k: g.usize_in(1..20),
+            top_t: g.usize_in(1..25),
+            rerank_budget: g.usize_in(20..200),
+        };
+        for qi in 0..ds.num_queries() {
+            let (res, stats) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            assert!(res.len() <= params.k);
+            for w in res.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            let ids: std::collections::HashSet<_> = res.iter().map(|r| r.id).collect();
+            assert_eq!(ids.len(), res.len());
+            assert!(res.iter().all(|r| (r.id as usize) < n));
+            assert!(stats.partitions_probed <= params.top_t.min(idx.num_partitions()));
+        }
+    });
+}
+
+#[test]
+fn prop_json_round_trip_arbitrary_values() {
+    use soar_ann::util::json::Value;
+    fn gen_value(g: &mut Gen, depth: usize) -> Value {
+        let pick = if depth >= 3 {
+            g.usize_in(0..4)
+        } else {
+            g.usize_in(0..6)
+        };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.gaussian() * 1000.0).round() as f64 / 16.0),
+            3 => {
+                let len = g.usize_in(0..8);
+                let s: String = (0..len)
+                    .map(|_| {
+                        *g.choose(&['a', 'β', '"', '\\', '\n', '7', ' ', '\t'])
+                    })
+                    .collect();
+                Value::Str(s)
+            }
+            4 => {
+                let len = g.usize_in(0..4);
+                Value::Arr((0..len).map(|_| gen_value(g, depth + 1)).collect())
+            }
+            _ => {
+                let len = g.usize_in(0..4);
+                Value::Obj(
+                    (0..len)
+                        .map(|i| (format!("k{i}"), gen_value(g, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check("json round trip", 200, |g| {
+        let v = gen_value(g, 0);
+        let text = v.to_json();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back, v, "compact: {text}");
+        let pretty = v.to_json_pretty();
+        assert_eq!(Value::parse(&pretty).unwrap(), v, "pretty: {pretty}");
+    });
+}
+
+#[test]
+fn prop_kmr_recall_monotone_in_budget() {
+    use soar_ann::data::ground_truth::ground_truth_mips;
+    use soar_ann::index::kmr::compute_kmr;
+    check("kmr monotone", 6, |g| {
+        let n = g.usize_in(600..1500);
+        let ds = SyntheticConfig::glove_like(n, 16, 8, g.seed).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: g.usize_in(4..24),
+            spill: SpillMode::Soar { lambda: g.f32_in(0.0, 3.0) },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 5);
+        let kmr = compute_kmr(&idx, &ds.queries, &gt);
+        let mut last = -1.0f64;
+        let total = kmr.total_postings;
+        for step in 0..10 {
+            let budget = total * step / 9;
+            let r = kmr.recall_at(budget);
+            assert!(r >= last, "recall decreased: {r} < {last}");
+            assert!((0.0..=1.0).contains(&r));
+            last = r;
+        }
+        assert_eq!(kmr.recall_at(total), 1.0);
+        // points_needed must actually achieve its target.
+        for target in [0.5, 0.8, 0.99] {
+            if let Some(b) = kmr.points_needed(target) {
+                assert!(kmr.recall_at(b) >= target);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dedup_set_behaves_like_hashset() {
+    use soar_ann::coordinator::DedupSet;
+    check("dedup == hashset", 100, |g| {
+        let cap = g.usize_in(1..200);
+        let mut dd = DedupSet::new(cap);
+        let mut hs = std::collections::HashSet::new();
+        for _ in 0..g.usize_in(0..400) {
+            if g.bool() || hs.is_empty() {
+                let id = g.usize_in(0..cap) as u32;
+                assert_eq!(dd.insert(id), hs.insert(id), "insert {id}");
+            } else {
+                let id = g.usize_in(0..cap) as u32;
+                assert_eq!(dd.contains(id), hs.contains(&id), "contains {id}");
+            }
+        }
+        dd.reset();
+        hs.clear();
+        for id in 0..cap.min(20) as u32 {
+            assert_eq!(dd.insert(id), hs.insert(id));
+        }
+    });
+}
