@@ -1,0 +1,158 @@
+//! Mutation-path benchmark: upsert / delete throughput, compaction time,
+//! and search latency (p50/p99) under ~20% steady-state churn.
+//!
+//! Emits `BENCH_mutation.json` so successive PRs can track the perf
+//! trajectory of the mutable index.
+//!
+//! Run with: `cargo bench --bench bench_mutation [-- --quick]`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use soar_ann::config::{IndexConfig, MutableConfig, SearchParams, SpillMode};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, MutableIndex, SearchScratch, SnapshotSearcher};
+use soar_ann::linalg::Rng;
+use soar_ann::runtime::Engine;
+use soar_ann::util::json::Value;
+
+fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 5_000 } else { 20_000 };
+    let dim = 32;
+    let ops = if quick { 1_000 } else { 4_000 };
+    let search_iters = if quick { 400 } else { 2_000 };
+
+    let ds = SyntheticConfig::glove_like(n, dim, 64, 42).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig::for_dataset(n, SpillMode::Soar { lambda: 1.0 });
+    println!("building base index: n={n} dim={dim}…");
+    let base = build_index(&engine, &ds.data, &cfg).expect("build");
+    let mutable = Arc::new(
+        MutableIndex::from_index(
+            base,
+            engine.clone(),
+            MutableConfig {
+                delta_capacity: usize::MAX >> 1, // measure compaction explicitly
+                auto_compact: false,
+                ..Default::default()
+            },
+        )
+        .expect("mutable"),
+    );
+
+    // --- upsert throughput (fresh ids) -------------------------------
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    for i in 0..ops {
+        let src = rng.next_below(n as u32) as usize;
+        let mut v = ds.data.row(src).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.05 * rng.next_gaussian();
+        }
+        soar_ann::linalg::normalize(&mut v);
+        mutable.upsert((n + i) as u32, &v).expect("upsert");
+    }
+    let upsert_secs = t0.elapsed().as_secs_f64();
+    let upserts_per_sec = ops as f64 / upsert_secs;
+    println!("bench mutation/upsert      {upserts_per_sec:>10.0} ops/s  ({ops} ops in {upsert_secs:.2}s)");
+
+    // --- delete throughput --------------------------------------------
+    let t0 = Instant::now();
+    for i in 0..ops {
+        mutable.delete((i % n) as u32).expect("delete");
+    }
+    let delete_secs = t0.elapsed().as_secs_f64();
+    let deletes_per_sec = ops as f64 / delete_secs;
+    println!("bench mutation/delete      {deletes_per_sec:>10.0} ops/s  ({ops} ops in {delete_secs:.2}s)");
+
+    // --- compaction ----------------------------------------------------
+    let pre = mutable.stats();
+    let t0 = Instant::now();
+    let post = mutable.compact().expect("compact");
+    let compact_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "bench mutation/compact     {compact_secs:>10.3} s      ({} sealed rows + {} delta rows − {} tombstones → {} rows)",
+        pre.sealed_rows, pre.delta_rows, pre.tombstones, post.sealed_rows
+    );
+
+    // --- search latency under steady 20% churn -------------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let churner = {
+        let mutable = mutable.clone();
+        let stop = stop.clone();
+        let data = ds.data.clone();
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(13);
+            let mut next_id = (2 * n) as u32;
+            let mut ops_done = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                if rng.next_f32() < 0.5 {
+                    let src = rng.next_below(n as u32) as usize;
+                    let mut v = data.row(src).to_vec();
+                    for x in v.iter_mut() {
+                        *x += 0.05 * rng.next_gaussian();
+                    }
+                    soar_ann::linalg::normalize(&mut v);
+                    mutable.upsert(next_id, &v).expect("churn upsert");
+                    next_id += 1;
+                } else {
+                    let _ = mutable.delete(rng.next_below(next_id)).expect("churn delete");
+                }
+                ops_done += 1;
+            }
+            ops_done
+        })
+    };
+
+    let params = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 200,
+    };
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(search_iters);
+    let mut scratch = SearchScratch::for_snapshot(&mutable.snapshot());
+    for i in 0..search_iters {
+        let q = ds.queries.row(i % ds.num_queries());
+        let snap = mutable.snapshot();
+        let searcher = SnapshotSearcher::new(&snap, &engine);
+        let t0 = Instant::now();
+        let (res, _) = searcher.search(q, &params, &mut scratch);
+        latencies_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        assert!(!res.is_empty());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let churn_ops = churner.join().expect("churner");
+    latencies_us.sort_by(f64::total_cmp);
+    let p50 = percentile_us(&latencies_us, 0.50);
+    let p99 = percentile_us(&latencies_us, 0.99);
+    println!(
+        "bench mutation/search@churn p50 {p50:>8.1}µs  p99 {p99:>8.1}µs  ({search_iters} queries, {churn_ops} concurrent churn ops)"
+    );
+
+    // --- report ---------------------------------------------------------
+    let report = Value::obj(vec![
+        ("bench", Value::str("mutation")),
+        ("n", Value::num(n as f64)),
+        ("dim", Value::num(dim as f64)),
+        ("ops", Value::num(ops as f64)),
+        ("upserts_per_sec", Value::num(upserts_per_sec)),
+        ("deletes_per_sec", Value::num(deletes_per_sec)),
+        ("compact_secs", Value::num(compact_secs)),
+        ("search_p50_us", Value::num(p50)),
+        ("search_p99_us", Value::num(p99)),
+        ("churn_ops_during_search", Value::num(churn_ops as f64)),
+        ("quick", Value::Bool(quick)),
+    ]);
+    std::fs::write("BENCH_mutation.json", report.to_json_pretty()).expect("write report");
+    println!("wrote BENCH_mutation.json");
+}

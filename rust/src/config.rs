@@ -213,6 +213,80 @@ impl IndexConfig {
     }
 }
 
+/// Mutation / compaction policy for the segmented mutable index
+/// (`index::MutableIndex`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MutableConfig {
+    /// Live rows the delta segment may hold before a mutation triggers an
+    /// automatic compaction (delta merged into the sealed segments).
+    pub delta_capacity: usize,
+    /// Tombstone pressure that triggers compaction: compact when
+    /// `tombstones > tombstone_ratio * sealed_rows`.
+    pub tombstone_ratio: f32,
+    /// Run the compaction triggers above automatically inside
+    /// `upsert`/`delete`. When `false`, compaction only happens via an
+    /// explicit `compact()` call.
+    pub auto_compact: bool,
+}
+
+impl Default for MutableConfig {
+    fn default() -> Self {
+        MutableConfig {
+            delta_capacity: 4096,
+            tombstone_ratio: 0.25,
+            auto_compact: true,
+        }
+    }
+}
+
+impl MutableConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.delta_capacity == 0 {
+            return Err(Error::Config("delta_capacity must be ≥ 1".into()));
+        }
+        if self.tombstone_ratio.is_nan() || self.tombstone_ratio <= 0.0 {
+            return Err(Error::Config(format!(
+                "tombstone_ratio must be > 0, got {}",
+                self.tombstone_ratio
+            )));
+        }
+        Ok(())
+    }
+
+    /// JSON encoding (persisted next to snapshots and experiment reports).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("delta_capacity", Value::num(self.delta_capacity as f64)),
+            ("tombstone_ratio", Value::num(self.tombstone_ratio as f64)),
+            ("auto_compact", Value::Bool(self.auto_compact)),
+        ])
+    }
+
+    /// Inverse of [`MutableConfig::to_json`].
+    pub fn from_json(v: &Value) -> Result<MutableConfig> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| Error::Config(format!("missing numeric field {key}")))
+        };
+        let cfg = MutableConfig {
+            delta_capacity: v
+                .get("delta_capacity")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| {
+                    Error::Config("delta_capacity must be a non-negative integer".into())
+                })?,
+            tombstone_ratio: num("tombstone_ratio")? as f32,
+            auto_compact: v
+                .get("auto_compact")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| Error::Config("missing auto_compact".into()))?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Per-query search parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct SearchParams {
@@ -346,6 +420,29 @@ mod tests {
         assert_eq!(back.kmeans.anisotropic_eta, 1.5);
         assert_eq!(back.pq.dims_per_subspace, 4);
         assert!(!back.store_int8);
+    }
+
+    #[test]
+    fn mutable_config_round_trip_and_validation() {
+        let mut m = MutableConfig::default();
+        m.validate().unwrap();
+        m.delta_capacity = 100;
+        m.tombstone_ratio = 0.5;
+        m.auto_compact = false;
+        let s = m.to_json().to_json();
+        let back = MutableConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, m);
+        m.delta_capacity = 0;
+        assert!(m.validate().is_err());
+        m.delta_capacity = 1;
+        m.tombstone_ratio = 0.0;
+        assert!(m.validate().is_err());
+        // from_json rejects configs validate() would reject
+        let bad = crate::util::json::Value::parse(
+            "{\"delta_capacity\": 0.5, \"tombstone_ratio\": 0.25, \"auto_compact\": true}",
+        )
+        .unwrap();
+        assert!(MutableConfig::from_json(&bad).is_err());
     }
 
     #[test]

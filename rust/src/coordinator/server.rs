@@ -3,9 +3,17 @@
 //! Topology: callers hold a cheap cloneable [`ServeHandle`]; requests flow
 //! through a bounded mpsc into a batcher thread that forms batches
 //! (`collect_batch`) and dispatches them to a pool of worker threads
-//! running the parallel `Searcher::search_batch`. Bounded channels give
-//! backpressure end-to-end: when workers fall behind, `try_send` fails and
-//! callers see `Error::Coordinator` instead of unbounded queue growth.
+//! running the parallel `SnapshotSearcher::search_batch`. Bounded channels
+//! give backpressure end-to-end: when workers fall behind, `try_send`
+//! fails and callers see `Error::Coordinator` instead of unbounded queue
+//! growth.
+//!
+//! Workers read the index through a [`SnapshotCell`] (epoch-style `Arc`
+//! swap): each batch loads the current [`IndexSnapshot`], so
+//! [`ServeEngine::swap_snapshot`] — or a `MutableIndex` publishing into a
+//! shared cell (see [`ServeEngine::start_shared`]) — takes effect at batch
+//! granularity without blocking, erroring, or even synchronizing with
+//! in-flight queries: they finish on the snapshot they started with.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{RecvTimeoutError, SyncSender, TrySendError};
@@ -17,7 +25,7 @@ use crate::config::{SearchParams, ServeConfig};
 use crate::coordinator::batcher::{collect_batch_with_first, QueryRequest};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::error::{Error, Result};
-use crate::index::{Searcher, SoarIndex};
+use crate::index::{IndexSnapshot, SnapshotCell, SnapshotSearcher, SoarIndex};
 use crate::linalg::topk::Scored;
 use crate::linalg::MatrixF32;
 use crate::runtime::Engine;
@@ -28,6 +36,7 @@ pub struct ServeEngine {
     handle: Option<ServeHandle>,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    snapshots: Arc<SnapshotCell>,
 }
 
 /// Cheap, cloneable client handle (blocking API).
@@ -39,17 +48,32 @@ pub struct ServeHandle {
 }
 
 impl ServeEngine {
-    /// Start the stack. `index` and `engine` are shared immutably across
-    /// workers.
+    /// Start the stack over a frozen index (wrapped as a single-segment
+    /// snapshot in a private cell; use [`ServeEngine::swap_snapshot`] to
+    /// replace it later).
     pub fn start(
         index: Arc<SoarIndex>,
         engine: Arc<Engine>,
         params: SearchParams,
         config: ServeConfig,
     ) -> ServeEngine {
+        let cell = Arc::new(SnapshotCell::new(Arc::new(IndexSnapshot::from_index(index))));
+        ServeEngine::start_shared(cell, engine, params, config)
+    }
+
+    /// Start the stack over a shared [`SnapshotCell`] — pass
+    /// `MutableIndex::cell()` and every published mutation becomes
+    /// visible to the next batch, with zero coordination on the query
+    /// path.
+    pub fn start_shared(
+        snapshots: Arc<SnapshotCell>,
+        engine: Arc<Engine>,
+        params: SearchParams,
+        config: ServeConfig,
+    ) -> ServeEngine {
         let (tx, rx) = std::sync::mpsc::sync_channel::<QueryRequest>(config.queue_depth.max(1));
         let metrics = Arc::new(ServeMetrics::default());
-        let dim = index.dim;
+        let dim = snapshots.load().dim();
 
         // Batch channel: batcher → workers; small bound so the batcher
         // itself backs off instead of queueing unboundedly.
@@ -88,10 +112,11 @@ impl ServeEngine {
                     .expect("spawn batcher"),
             );
         }
-        // Worker threads.
+        // Worker threads. Each batch loads the snapshot current at batch
+        // start; a concurrent swap never blocks or fails a request.
         for w in 0..config.workers.max(1) {
             let brx = brx.clone();
-            let index = index.clone();
+            let snapshots = snapshots.clone();
             let engine = engine.clone();
             let metrics = metrics.clone();
             threads.push(
@@ -103,7 +128,10 @@ impl ServeEngine {
                             guard.recv()
                         };
                         match batch {
-                            Ok(batch) => run_batch(&index, &engine, &params, batch, &metrics),
+                            Ok(batch) => {
+                                let snapshot = snapshots.load();
+                                run_batch(&snapshot, &engine, &params, batch, &metrics)
+                            }
                             Err(_) => break, // batcher shut down
                         }
                     })
@@ -115,7 +143,34 @@ impl ServeEngine {
             handle: Some(ServeHandle { tx, metrics, dim }),
             threads,
             stop,
+            snapshots,
         }
+    }
+
+    /// Publish a new snapshot to the workers (epoch-style `Arc` swap).
+    /// In-flight batches finish on their current snapshot; subsequent
+    /// batches read the new one. Fails only on a dimensionality mismatch.
+    pub fn swap_snapshot(&self, snapshot: Arc<IndexSnapshot>) -> Result<()> {
+        let current = self.snapshots.load();
+        if snapshot.dim() != current.dim() {
+            return Err(Error::Shape(format!(
+                "snapshot dim {} != serving dim {}",
+                snapshot.dim(),
+                current.dim()
+            )));
+        }
+        self.snapshots.store(snapshot);
+        Ok(())
+    }
+
+    /// The snapshot workers currently read.
+    pub fn current_snapshot(&self) -> Arc<IndexSnapshot> {
+        self.snapshots.load()
+    }
+
+    /// The serving cell (for wiring a `MutableIndex` up after start).
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        self.snapshots.clone()
     }
 
     pub fn handle(&self) -> ServeHandle {
@@ -149,18 +204,18 @@ impl Drop for ServeEngine {
 
 /// Execute one batch on a worker thread.
 fn run_batch(
-    index: &SoarIndex,
+    snapshot: &IndexSnapshot,
     engine: &Engine,
     params: &SearchParams,
     batch: Vec<QueryRequest>,
     metrics: &ServeMetrics,
 ) {
-    let dim = index.dim;
+    let dim = snapshot.dim();
     let mut queries = MatrixF32::zeros(batch.len(), dim);
     for (i, req) in batch.iter().enumerate() {
         queries.row_mut(i).copy_from_slice(&req.query);
     }
-    let searcher = Searcher::new(index, engine);
+    let searcher = SnapshotSearcher::new(snapshot, engine);
     let results = match searcher.search_batch(&queries, params) {
         Ok(r) => r,
         Err(e) => {
@@ -353,6 +408,50 @@ mod tests {
         server.shutdown();
         let err = handle.search(ds.queries.row(0).to_vec());
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn swap_snapshot_changes_results_without_errors() {
+        let (ds, idx, engine) = serve_fixture();
+        let server = ServeEngine::start(
+            idx.clone(),
+            engine.clone(),
+            SearchParams::default(),
+            ServeConfig::default(),
+        );
+        let handle = server.handle();
+        let before = handle.search(ds.queries.row(0).to_vec()).unwrap();
+        assert!(!before.is_empty());
+
+        // Swap in a snapshot that tombstones the current top hit.
+        let top = before[0].id;
+        let base = server.current_snapshot();
+        let mut tombs = (*base.tombstones).clone();
+        tombs.insert(top);
+        let swapped = Arc::new(crate::index::IndexSnapshot::new(
+            base.sealed.clone(),
+            base.delta.clone(),
+            Arc::new(tombs),
+            base.epoch + 1,
+        ));
+        server.swap_snapshot(swapped).unwrap();
+        let after = handle.search(ds.queries.row(0).to_vec()).unwrap();
+        assert!(
+            after.iter().all(|s| s.id != top),
+            "tombstoned id {top} must vanish after the swap"
+        );
+
+        // Dim mismatch is rejected.
+        let ds2 = SyntheticConfig::glove_like(300, 8, 2, 9).generate();
+        let cfg2 = IndexConfig {
+            num_partitions: 6,
+            spill: SpillMode::None,
+            ..Default::default()
+        };
+        let idx2 = Arc::new(build_index(&engine, &ds2.data, &cfg2).unwrap());
+        let bad = Arc::new(crate::index::IndexSnapshot::from_index(idx2));
+        assert!(server.swap_snapshot(bad).is_err());
+        server.shutdown();
     }
 
     #[test]

@@ -109,8 +109,10 @@ pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> R
     Ok(index)
 }
 
-/// Argmin-ℓ₂ primary assignment, batched through the engine.
-fn primary_assignments(
+/// Argmin-ℓ₂ primary assignment, batched through the engine. Public so
+/// the mutable-index upsert path can assign new points against an
+/// existing codebook.
+pub fn primary_assignments(
     engine: &Engine,
     data: &MatrixF32,
     centroids: &MatrixF32,

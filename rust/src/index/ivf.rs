@@ -39,6 +39,26 @@ impl PostingList {
         &self.codes[i * code_bytes..(i + 1) * code_bytes]
     }
 
+    /// Position of the entry carrying `id`, if present (linear scan — used
+    /// by the mutable delta path, not the hot scan).
+    pub fn position_of(&self, id: u32) -> Option<usize> {
+        self.ids.iter().position(|&x| x == id)
+    }
+
+    /// Remove the entry for `id` (first occurrence) together with its
+    /// packed code, preserving the order of the remaining entries. Returns
+    /// whether an entry was removed.
+    pub fn remove_id(&mut self, id: u32, code_bytes: usize) -> bool {
+        match self.position_of(id) {
+            Some(pos) => {
+                self.ids.remove(pos);
+                self.codes.drain(pos * code_bytes..(pos + 1) * code_bytes);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Heap bytes: 4 per id + code bytes (the §3.5 "4 + d/(2s)" model).
     pub fn memory_bytes(&self) -> usize {
         self.ids.len() * 4 + self.codes.len()
@@ -100,6 +120,21 @@ mod tests {
         assert_eq!(pl.code(0, 2), &[0xab, 0xcd]);
         assert_eq!(pl.code(1, 2), &[0x12, 0x34]);
         assert_eq!(pl.memory_bytes(), 2 * 4 + 4);
+    }
+
+    #[test]
+    fn remove_id_preserves_order_and_codes() {
+        let mut pl = PostingList::default();
+        pl.push(1, &[0x11, 0x11]);
+        pl.push(2, &[0x22, 0x22]);
+        pl.push(3, &[0x33, 0x33]);
+        assert!(pl.remove_id(2, 2));
+        assert!(!pl.remove_id(2, 2));
+        assert_eq!(pl.ids, vec![1, 3]);
+        assert_eq!(pl.code(0, 2), &[0x11, 0x11]);
+        assert_eq!(pl.code(1, 2), &[0x33, 0x33]);
+        assert_eq!(pl.position_of(3), Some(1));
+        assert_eq!(pl.position_of(9), None);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! The SOAR index: VQ partitioning + spilled assignments + PQ residual
-//! codes + int8 rerank storage.
+//! codes + int8 rerank storage — plus the segmented mutable layer that
+//! turns the build-once index into a living one.
 //!
 //! Module map:
 //! * [`ivf`]        — codebook + posting lists substrate.
@@ -8,24 +9,45 @@
 //! * [`builder`]    — the indexing pipeline (§3.5: train VQ → primary
 //!                    assign → residuals → SOAR spill → PQ encode).
 //! * [`searcher`]   — multi-stage query path (centroid top-t → ADC scan
-//!                    with dedup → int8 rerank).
+//!                    with dedup → int8 rerank): [`Searcher`] over one
+//!                    monolithic index, [`SnapshotSearcher`] over a
+//!                    segmented snapshot (tombstone/shadow filtering +
+//!                    per-segment top-k merge).
+//! * [`segment`]    — segmented architecture: immutable
+//!                    [`SealedSegment`]s, the frozen [`DeltaSegment`],
+//!                    the [`IndexSnapshot`] queries run against, and the
+//!                    [`SnapshotCell`] epoch-style `Arc` swap point.
+//! * [`mutable`]    — the write path: [`MutableIndex`] with online
+//!                    `upsert`/`delete` (new points spill-assigned via
+//!                    Theorem 3.1 against the fixed codebook), delta
+//!                    sealing, and tombstone-purging compaction.
 //! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
 //! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
 //! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
-//! * [`serialize`]  — binary index format + Table 1 memory accounting.
+//! * [`serialize`]  — versioned binary formats (v1 single index,
+//!                    v2 segments + delta + tombstones, with v1
+//!                    backward-compat reads) + Table 1 memory accounting.
+//!
+//! Invariant checking is layered the same way: [`SoarIndex::check_invariants`]
+//! covers one segment; [`segment::IndexSnapshot::check_invariants`] extends it
+//! across sealed segments, the delta, and the tombstone set.
 
 pub mod builder;
 pub mod ivf;
 pub mod kmr;
 pub mod multilevel;
+pub mod mutable;
 pub mod searcher;
+pub mod segment;
 pub mod serialize;
 pub mod soar;
 pub mod stats;
 
 pub use builder::build_index;
 pub use ivf::{IvfIndex, PostingList};
-pub use searcher::{SearchScratch, SearchStats, Searcher};
+pub use mutable::{MutableIndex, MutableStats};
+pub use searcher::{SearchScratch, SearchStats, Searcher, SnapshotSearcher};
+pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 
 use crate::config::IndexConfig;
 use crate::linalg::MatrixF32;

@@ -8,10 +8,19 @@
 //!    `⟨q, c_p⟩ + LUT(residual code)`.
 //! 3. **Rerank** — rescore the best `rerank_budget` candidates against
 //!    the int8 highest-bitrate representation and return the top k.
+//!
+//! Two searchers share this pipeline: [`Searcher`] over a single
+//! monolithic [`SoarIndex`] (the original read-only fast path), and
+//! [`SnapshotSearcher`] over a segmented [`IndexSnapshot`] — it scans the
+//! delta first, then sealed segments newest → oldest, filters tombstoned
+//! and shadowed rows, and merges the per-segment top-k by score (all
+//! segments share one codebook, so ADC and rerank scores are directly
+//! comparable).
 
 use crate::config::SearchParams;
 use crate::coordinator::DedupSet;
 use crate::error::Result;
+use crate::index::segment::IndexSnapshot;
 use crate::index::SoarIndex;
 use crate::linalg::topk::Scored;
 use crate::linalg::{dot, MatrixF32, TopK};
@@ -35,6 +44,15 @@ impl SearchScratch {
             q_scaled: Vec::new(),
         }
     }
+
+    /// Scratch sized for a segmented snapshot (dedup over global ids).
+    pub fn for_snapshot(snapshot: &IndexSnapshot) -> SearchScratch {
+        SearchScratch {
+            lut: Vec::new(),
+            visited: DedupSet::new(snapshot.id_space()),
+            q_scaled: Vec::new(),
+        }
+    }
 }
 
 /// Per-query observability counters.
@@ -49,6 +67,12 @@ pub struct SearchStats {
     pub duplicates_skipped: usize,
     /// Candidates rescored in the rerank stage.
     pub candidates_reranked: usize,
+    /// Entries skipped because their id was tombstoned or shadowed by a
+    /// newer segment (snapshot path only).
+    pub tombstones_skipped: usize,
+    /// Segments (delta counts as one) actually scanned (snapshot path;
+    /// the monolithic path leaves this 0).
+    pub segments_scanned: usize,
 }
 
 /// Read-only searcher over an index; cheap to construct, `Sync`.
@@ -196,6 +220,206 @@ impl<'a> Searcher<'a> {
     }
 }
 
+/// Read-only searcher over a segmented [`IndexSnapshot`]; cheap to
+/// construct, `Sync`. Scans delta → sealed (newest → oldest); per-segment
+/// candidates are reranked against the shared int8 representation and
+/// merged into one top-k. `rerank_budget` applies per segment.
+pub struct SnapshotSearcher<'a> {
+    pub snapshot: &'a IndexSnapshot,
+    pub engine: &'a Engine,
+}
+
+impl<'a> SnapshotSearcher<'a> {
+    pub fn new(snapshot: &'a IndexSnapshot, engine: &'a Engine) -> SnapshotSearcher<'a> {
+        SnapshotSearcher { snapshot, engine }
+    }
+
+    /// Single-query search (CPU partition selection, like
+    /// [`Searcher::search`]).
+    pub fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        let centroids = &self.snapshot.base().ivf.centroids;
+        debug_assert_eq!(q.len(), self.snapshot.dim());
+        let t = params.top_t.min(centroids.rows());
+        let mut tk = TopK::new(t.max(1));
+        for (j, row) in centroids.iter_rows().enumerate() {
+            tk.push(j as u32, dot(q, row));
+        }
+        let partitions: Vec<(u32, f32)> = tk
+            .into_sorted()
+            .into_iter()
+            .map(|s| (s.id, s.score))
+            .collect();
+        self.search_partitions(q, &partitions, params, scratch)
+    }
+
+    /// Batched search: one engine call selects partitions for the whole
+    /// batch, then per-query scans run in parallel (mirrors
+    /// [`Searcher::search_batch`]).
+    pub fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let base = self.snapshot.base();
+        let t = params.top_t.min(base.num_partitions());
+        let partitions = self.engine.centroid_topk(queries, &base.ivf.centroids, t)?;
+        let nq = queries.rows();
+        if nq <= 8 {
+            let mut scratch = SearchScratch::for_snapshot(self.snapshot);
+            return Ok((0..nq)
+                .map(|qi| {
+                    self.search_partitions(
+                        queries.row(qi),
+                        &partitions[qi],
+                        params,
+                        &mut scratch,
+                    )
+                })
+                .collect());
+        }
+        let threads = crate::util::parallel::num_threads().min(nq);
+        let chunk = nq.div_ceil(threads);
+        let chunk_results: Vec<Vec<(Vec<Scored>, SearchStats)>> =
+            par_map(threads, |t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(nq);
+                let mut scratch = SearchScratch::for_snapshot(self.snapshot);
+                (lo..hi)
+                    .map(|qi| {
+                        self.search_partitions(
+                            queries.row(qi),
+                            &partitions[qi],
+                            params,
+                            &mut scratch,
+                        )
+                    })
+                    .collect()
+            });
+        Ok(chunk_results.into_iter().flatten().collect())
+    }
+
+    /// Stages 2+3 across all segments, given selected partitions.
+    pub fn search_partitions(
+        &self,
+        q: &[f32],
+        partitions: &[(u32, f32)],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        let snap = self.snapshot;
+        let base = snap.base();
+        let code_bytes = base.pq.code_bytes();
+        let mut stats = SearchStats::default();
+
+        base.pq.build_lut(q, &mut scratch.lut);
+        scratch.visited.ensure_capacity(snap.id_space());
+        scratch.visited.reset();
+        if let Some(q8) = &base.int8 {
+            scratch.q_scaled.clear();
+            scratch
+                .q_scaled
+                .extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
+        }
+        let use_int8 = base.int8.is_some();
+        let tombs = &*snap.tombstones;
+        let delta = &*snap.delta;
+        let probe: Vec<(u32, f32)> = partitions.iter().take(params.top_t).copied().collect();
+        stats.partitions_probed = probe.len();
+        let budget = params.rerank_budget.max(params.k).max(1);
+        let mut merged = TopK::new(params.k.max(1));
+
+        // Newest first: the delta segment. Posting ids are global; per-id
+        // records live in slots.
+        if !delta.is_empty() {
+            stats.segments_scanned += 1;
+            let mut approx = TopK::new(budget);
+            for &(p, cscore) in &probe {
+                let list = &delta.postings[p as usize];
+                stats.points_scanned += list.len();
+                for (i, &gid) in list.ids.iter().enumerate() {
+                    if !scratch.visited.insert(gid) {
+                        stats.duplicates_skipped += 1;
+                        continue;
+                    }
+                    let score = cscore + base.pq.adc_score(&scratch.lut, list.code(i, code_bytes));
+                    approx.push(delta.slot_of[&gid] as u32, score);
+                }
+            }
+            if use_int8 {
+                for cand in approx.into_sorted() {
+                    stats.candidates_reranked += 1;
+                    let rec = delta.int8_record(cand.id as usize);
+                    let mut acc = 0.0f32;
+                    for j in 0..rec.len() {
+                        acc += scratch.q_scaled[j] * rec[j] as f32;
+                    }
+                    merged.push(delta.slot_ids[cand.id as usize], acc);
+                }
+            } else {
+                for cand in approx.into_sorted().into_iter().take(params.k) {
+                    merged.push(delta.slot_ids[cand.id as usize], cand.score);
+                }
+            }
+        }
+
+        // Sealed segments, newest → oldest. Posting ids are local.
+        for seg in snap.sealed.iter().rev() {
+            let idx = &*seg.index;
+            if idx.n == 0 {
+                continue;
+            }
+            stats.segments_scanned += 1;
+            // Hoist the filter probe: with no tombstones, no newer sealed
+            // segment, and an empty delta, the scan is filter-free.
+            let filtered = !tombs.is_empty() || !seg.shadow.is_empty() || !delta.is_empty();
+            let mut approx = TopK::new(budget);
+            for &(p, cscore) in &probe {
+                let list = &idx.ivf.postings[p as usize];
+                stats.points_scanned += list.len();
+                for (i, &local) in list.ids.iter().enumerate() {
+                    let gid = seg.global_ids[local as usize];
+                    if !scratch.visited.insert(gid) {
+                        stats.duplicates_skipped += 1;
+                        continue;
+                    }
+                    if filtered
+                        && (tombs.contains(&gid)
+                            || seg.shadow.contains(&gid)
+                            || delta.contains(gid))
+                    {
+                        stats.tombstones_skipped += 1;
+                        continue;
+                    }
+                    let score = cscore + base.pq.adc_score(&scratch.lut, list.code(i, code_bytes));
+                    approx.push(local, score);
+                }
+            }
+            if use_int8 {
+                for cand in approx.into_sorted() {
+                    stats.candidates_reranked += 1;
+                    let rec = idx.int8_record(cand.id);
+                    let mut acc = 0.0f32;
+                    for j in 0..rec.len() {
+                        acc += scratch.q_scaled[j] * rec[j] as f32;
+                    }
+                    merged.push(seg.global_ids[cand.id as usize], acc);
+                }
+            } else {
+                for cand in approx.into_sorted().into_iter().take(params.k) {
+                    merged.push(seg.global_ids[cand.id as usize], cand.score);
+                }
+            }
+        }
+
+        (merged.into_sorted(), stats)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +549,49 @@ mod tests {
             let ids_single: Vec<u32> = single.iter().map(|s| s.id).collect();
             let ids_batch: Vec<u32> = batch[qi].0.iter().map(|s| s.id).collect();
             assert_eq!(ids_single, ids_batch, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn snapshot_searcher_matches_monolithic_on_single_segment() {
+        use crate::index::segment::IndexSnapshot;
+        use std::sync::Arc;
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 1200);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let snap = IndexSnapshot::from_index(Arc::new(idx.clone()));
+        let snap_searcher = SnapshotSearcher::new(&snap, &engine);
+        for params in [
+            SearchParams::default(),
+            SearchParams {
+                k: 7,
+                top_t: idx.num_partitions(),
+                rerank_budget: 300,
+            },
+        ] {
+            let mut s1 = SearchScratch::new(&idx);
+            let mut s2 = SearchScratch::for_snapshot(&snap);
+            for qi in 0..ds.num_queries() {
+                let (a, st_a) = searcher.search(ds.queries.row(qi), &params, &mut s1);
+                let (b, st_b) = snap_searcher.search(ds.queries.row(qi), &params, &mut s2);
+                assert_eq!(a, b, "query {qi}");
+                assert_eq!(st_a.points_scanned, st_b.points_scanned);
+                assert_eq!(st_a.duplicates_skipped, st_b.duplicates_skipped);
+                assert_eq!(st_b.tombstones_skipped, 0);
+                assert_eq!(st_b.segments_scanned, 1);
+            }
+        }
+        // Batch path agrees with the single path.
+        let params = SearchParams {
+            k: 5,
+            top_t: 6,
+            rerank_budget: 100,
+        };
+        let batch = snap_searcher.search_batch(&ds.queries, &params).unwrap();
+        let mut s2 = SearchScratch::for_snapshot(&snap);
+        for qi in 0..ds.num_queries() {
+            let (single, _) = snap_searcher.search(ds.queries.row(qi), &params, &mut s2);
+            assert_eq!(single, batch[qi].0, "query {qi}");
         }
     }
 

@@ -1,0 +1,546 @@
+//! Segmented index structures: sealed segments, the delta segment, and the
+//! immutable [`IndexSnapshot`] that the serving stack reads.
+//!
+//! Architecture (LSM-flavored, adapted to the SOAR layout):
+//!
+//! * a **sealed segment** is an immutable [`SoarIndex`] (local ids
+//!   `0..n`) plus a `local → global` id map. The initial build is the
+//!   first sealed segment with an identity map.
+//! * the **delta segment** holds recently upserted rows, encoded against
+//!   the *base* codebook (centroids, PQ, int8 scales stay fixed between
+//!   retrains — SOAR's Theorem 3.1 spill loss extends directly to
+//!   incrementally assigned points).
+//! * **tombstones** are a global-id set consulted while scanning sealed
+//!   segments; the delta never contains tombstoned ids by construction.
+//! * an [`IndexSnapshot`] is a fully immutable view of
+//!   `(sealed segments, frozen delta, tombstones)`. Queries never lock:
+//!   they clone an `Arc<IndexSnapshot>` out of a [`SnapshotCell`] and scan
+//!   it; writers publish whole new snapshots into the cell (epoch-style
+//!   `Arc` swap), so in-flight queries keep their snapshot alive and are
+//!   never blocked.
+//!
+//! Shadowing rule: an id present in a *newer* segment (delta counts as
+//! newest) masks any older version of that id. Each sealed segment carries
+//! the precomputed id-set of strictly newer sealed segments (`shadow`);
+//! the delta's live set is checked dynamically.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, RwLock};
+
+use crate::config::IndexConfig;
+use crate::error::{Error, Result};
+use crate::index::ivf::PostingList;
+use crate::index::SoarIndex;
+
+/// An immutable sealed segment: a [`SoarIndex`] whose posting-list ids are
+/// segment-local, plus the mapping from local ids to global ids.
+#[derive(Clone, Debug)]
+pub struct SealedSegment {
+    /// The underlying index (local ids `0..index.n`).
+    pub index: Arc<SoarIndex>,
+    /// `global_ids[local]` = global id of local row `local`.
+    pub global_ids: Vec<u32>,
+    /// Global-id membership for O(1) `contains_global`.
+    pub id_set: Arc<HashSet<u32>>,
+    /// Global ids present in strictly *newer* sealed segments — rows whose
+    /// id is in here are stale and must be skipped during the scan.
+    pub shadow: Arc<HashSet<u32>>,
+    /// `max(global id) + 1` (0 when empty) — sizes the query dedup set.
+    pub id_space: usize,
+}
+
+impl SealedSegment {
+    /// Wrap an index with an explicit id map; validates id uniqueness.
+    pub fn new(
+        index: Arc<SoarIndex>,
+        global_ids: Vec<u32>,
+        shadow: Arc<HashSet<u32>>,
+    ) -> Result<SealedSegment> {
+        if global_ids.len() != index.n {
+            return Err(Error::Serialize(format!(
+                "segment id map has {} entries for {} rows",
+                global_ids.len(),
+                index.n
+            )));
+        }
+        let id_set: HashSet<u32> = global_ids.iter().copied().collect();
+        if id_set.len() != global_ids.len() {
+            return Err(Error::Serialize(
+                "segment id map contains duplicate global ids".into(),
+            ));
+        }
+        let id_space = global_ids
+            .iter()
+            .map(|&g| g as usize + 1)
+            .max()
+            .unwrap_or(0);
+        Ok(SealedSegment {
+            index,
+            global_ids,
+            id_set: Arc::new(id_set),
+            shadow,
+            id_space,
+        })
+    }
+
+    /// Wrap a freshly built (or legacy-loaded) index: identity id map,
+    /// nothing newer to shadow it.
+    pub fn from_index(index: Arc<SoarIndex>) -> SealedSegment {
+        let n = index.n;
+        SealedSegment::new(index, (0..n as u32).collect(), Arc::new(HashSet::new()))
+            .expect("identity id map is always valid")
+    }
+
+    /// Same segment with a replacement shadow set (used when a newer
+    /// segment is sealed on top of this one).
+    pub fn with_shadow(&self, shadow: Arc<HashSet<u32>>) -> SealedSegment {
+        SealedSegment {
+            index: self.index.clone(),
+            global_ids: self.global_ids.clone(),
+            id_set: self.id_set.clone(),
+            shadow,
+            id_space: self.id_space,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.n == 0
+    }
+
+    /// Global id of a local row.
+    #[inline]
+    pub fn global_of(&self, local: u32) -> u32 {
+        self.global_ids[local as usize]
+    }
+
+    /// Does this segment hold a row for `id`?
+    pub fn contains_global(&self, id: u32) -> bool {
+        self.id_set.contains(&id)
+    }
+
+    /// Per-segment invariants: inner index invariants + id map shape.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.index.check_invariants()?;
+        if self.global_ids.len() != self.index.n {
+            return Err(Error::Serialize("segment id map length mismatch".into()));
+        }
+        if self.id_set.len() != self.global_ids.len() {
+            return Err(Error::Serialize("segment id set out of sync".into()));
+        }
+        Ok(())
+    }
+}
+
+/// An immutable (frozen) view of the mutable delta segment.
+///
+/// Rows live in dense *slots*; posting lists carry **global** ids (the
+/// delta has no meaningful local id space of its own). All codes are
+/// produced with the base segment's codebook, PQ, and int8 scales, so
+/// delta scores merge directly with sealed-segment scores.
+#[derive(Clone, Debug)]
+pub struct DeltaSegment {
+    pub dim: usize,
+    /// Packed PQ code width, mirrored from the base PQ.
+    pub code_bytes: usize,
+    /// Posting lists over global ids, one per partition.
+    pub postings: Vec<PostingList>,
+    /// Slot-major raw rows (`len = slots * dim`) — kept for compaction,
+    /// serialization, and (when int8 is disabled) exact access.
+    pub raw: Vec<f32>,
+    /// Slot-major int8 codes (`len = slots * dim`), empty when the base
+    /// index stores no int8 representation.
+    pub int8_codes: Vec<i8>,
+    /// `slot_ids[slot]` = global id of the row in `slot`.
+    pub slot_ids: Vec<u32>,
+    /// Per-slot partition assignments (`assignments[slot][0]` is primary).
+    pub assignments: Vec<Vec<u32>>,
+    /// Global id → slot.
+    pub slot_of: HashMap<u32, usize>,
+    /// `max(global id) + 1` over live rows (0 when empty).
+    pub id_space: usize,
+}
+
+impl DeltaSegment {
+    /// An empty delta over `num_partitions` partitions.
+    pub fn empty(dim: usize, num_partitions: usize, code_bytes: usize) -> DeltaSegment {
+        DeltaSegment {
+            dim,
+            code_bytes,
+            postings: vec![PostingList::default(); num_partitions],
+            raw: Vec::new(),
+            int8_codes: Vec::new(),
+            slot_ids: Vec::new(),
+            assignments: Vec::new(),
+            slot_of: HashMap::new(),
+            id_space: 0,
+        }
+    }
+
+    /// Build a frozen delta from `(global id, raw row, assignments)`
+    /// triples, encoding PQ codes and int8 records against `base`'s
+    /// codebook. Row order is preserved (slot = input position), which is
+    /// what makes serialization round-trips byte-stable.
+    pub fn from_rows(
+        base: &SoarIndex,
+        rows: &[(u32, Vec<f32>, Vec<u32>)],
+    ) -> Result<DeltaSegment> {
+        let dim = base.dim;
+        let mut d = DeltaSegment::empty(dim, base.num_partitions(), base.pq.code_bytes());
+        for (id, raw, assignment) in rows {
+            if raw.len() != dim {
+                return Err(Error::Shape(format!(
+                    "delta row for id {id} has dim {}, index dim {dim}",
+                    raw.len()
+                )));
+            }
+            let slot = d.slot_ids.len();
+            if d.slot_of.insert(*id, slot).is_some() {
+                return Err(Error::Serialize(format!("duplicate delta id {id}")));
+            }
+            d.slot_ids.push(*id);
+            d.raw.extend_from_slice(raw);
+            if let Some(q8) = &base.int8 {
+                d.int8_codes.extend(q8.encode(raw));
+            }
+            for &p in assignment {
+                if p as usize >= d.postings.len() {
+                    return Err(Error::Serialize(format!(
+                        "delta assignment {p} out of range"
+                    )));
+                }
+                let r = crate::index::residual(raw, &base.ivf.centroids, p);
+                d.postings[p as usize].push(*id, &base.pq.encode(&r).0);
+            }
+            d.assignments.push(assignment.clone());
+            d.id_space = d.id_space.max(*id as usize + 1);
+        }
+        Ok(d)
+    }
+
+    /// Number of live rows.
+    pub fn len(&self) -> usize {
+        self.slot_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot_ids.is_empty()
+    }
+
+    /// Does the delta hold a (current) row for `id`?
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.slot_of.contains_key(&id)
+    }
+
+    /// Raw row of `slot`.
+    #[inline]
+    pub fn raw_row(&self, slot: usize) -> &[f32] {
+        &self.raw[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    /// Int8 record of `slot` (panics when int8 storage is disabled).
+    #[inline]
+    pub fn int8_record(&self, slot: usize) -> &[i8] {
+        &self.int8_codes[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    /// Total posting entries across partitions.
+    pub fn total_postings(&self) -> usize {
+        self.postings.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// A fully immutable, point-in-time view of the segmented index:
+/// sealed segments (oldest → newest), the frozen delta, and tombstones.
+#[derive(Clone, Debug)]
+pub struct IndexSnapshot {
+    /// Sealed segments, oldest first. Never empty; `sealed[0]` carries the
+    /// codebook (centroids / PQ / int8 scales) every segment shares.
+    pub sealed: Vec<Arc<SealedSegment>>,
+    /// Frozen delta (possibly empty).
+    pub delta: Arc<DeltaSegment>,
+    /// Deleted global ids, consulted while scanning sealed segments.
+    pub tombstones: Arc<HashSet<u32>>,
+    /// Monotonic publish counter (diagnostics / tests).
+    pub epoch: u64,
+    id_space: usize,
+}
+
+impl IndexSnapshot {
+    /// Assemble a snapshot from parts, computing the id space bound.
+    pub fn new(
+        sealed: Vec<Arc<SealedSegment>>,
+        delta: Arc<DeltaSegment>,
+        tombstones: Arc<HashSet<u32>>,
+        epoch: u64,
+    ) -> IndexSnapshot {
+        let mut id_space = delta.id_space;
+        for seg in &sealed {
+            id_space = id_space.max(seg.id_space);
+        }
+        IndexSnapshot {
+            sealed,
+            delta,
+            tombstones,
+            epoch,
+            id_space,
+        }
+    }
+
+    /// Wrap a monolithic index (fresh build or legacy v1 load) as a
+    /// single-sealed-segment snapshot with an empty delta.
+    pub fn from_index(index: Arc<SoarIndex>) -> IndexSnapshot {
+        let dim = index.dim;
+        let parts = index.num_partitions();
+        let cb = index.pq.code_bytes();
+        IndexSnapshot::new(
+            vec![Arc::new(SealedSegment::from_index(index))],
+            Arc::new(DeltaSegment::empty(dim, parts, cb)),
+            Arc::new(HashSet::new()),
+            0,
+        )
+    }
+
+    /// The base segment's index — the source of the shared codebook.
+    pub fn base(&self) -> &SoarIndex {
+        &self.sealed[0].index
+    }
+
+    pub fn dim(&self) -> usize {
+        self.base().dim
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.base().num_partitions()
+    }
+
+    pub fn config(&self) -> &IndexConfig {
+        &self.base().config
+    }
+
+    /// Upper bound on `global id + 1` across every segment — the query
+    /// dedup set is sized to this.
+    pub fn id_space(&self) -> usize {
+        self.id_space
+    }
+
+    /// Rows a full scan would surface: sealed rows that are neither
+    /// tombstoned nor shadowed, plus delta rows. O(total rows).
+    pub fn live_count(&self) -> usize {
+        let mut live = self.delta.len();
+        for seg in &self.sealed {
+            for &g in &seg.global_ids {
+                if !self.tombstones.contains(&g)
+                    && !seg.shadow.contains(&g)
+                    && !self.delta.contains(g)
+                {
+                    live += 1;
+                }
+            }
+        }
+        live
+    }
+
+    /// Sum of rows stored across sealed segments (including stale and
+    /// tombstoned rows awaiting compaction).
+    pub fn sealed_rows(&self) -> usize {
+        self.sealed.iter().map(|s| s.len()).sum()
+    }
+
+    /// Structural invariants across all segments, the delta, and the
+    /// tombstone set (the segmented extension of
+    /// [`SoarIndex::check_invariants`]).
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.sealed.is_empty() {
+            return Err(Error::Serialize(
+                "snapshot must contain at least one sealed segment".into(),
+            ));
+        }
+        let base = self.base();
+        let cb = base.pq.code_bytes();
+        for seg in &self.sealed {
+            seg.check_invariants()?;
+            if seg.index.dim != base.dim {
+                return Err(Error::Serialize("segment dim mismatch".into()));
+            }
+            if seg.index.num_partitions() != base.num_partitions() {
+                return Err(Error::Serialize("segment partition count mismatch".into()));
+            }
+            if seg.index.pq.code_bytes() != cb {
+                return Err(Error::Serialize("segment PQ code width mismatch".into()));
+            }
+            if seg.index.int8.is_some() != base.int8.is_some() {
+                return Err(Error::Serialize("segment int8 storage mismatch".into()));
+            }
+        }
+        let d = &self.delta;
+        if d.dim != base.dim {
+            return Err(Error::Serialize("delta dim mismatch".into()));
+        }
+        if d.postings.len() != base.num_partitions() {
+            return Err(Error::Serialize("delta partition count mismatch".into()));
+        }
+        if d.code_bytes != cb {
+            return Err(Error::Serialize("delta PQ code width mismatch".into()));
+        }
+        if d.slot_ids.len() != d.assignments.len() || d.slot_of.len() != d.slot_ids.len() {
+            return Err(Error::Serialize("delta slot bookkeeping mismatch".into()));
+        }
+        if d.raw.len() != d.len() * d.dim {
+            return Err(Error::Serialize("delta raw storage mismatch".into()));
+        }
+        if base.int8.is_some() && d.int8_codes.len() != d.len() * d.dim {
+            return Err(Error::Serialize("delta int8 storage mismatch".into()));
+        }
+        let per_point = base.config.assignments_per_point();
+        if d.total_postings() != d.len() * per_point {
+            return Err(Error::Serialize(format!(
+                "delta posting entries {} != rows * assignments {}",
+                d.total_postings(),
+                d.len() * per_point
+            )));
+        }
+        for list in &d.postings {
+            if list.codes.len() != list.ids.len() * cb {
+                return Err(Error::Serialize("delta code bytes misaligned".into()));
+            }
+            for &gid in &list.ids {
+                if !d.contains(gid) {
+                    return Err(Error::Serialize(format!(
+                        "delta posting references dead id {gid}"
+                    )));
+                }
+            }
+        }
+        for (&gid, &slot) in &d.slot_of {
+            if slot >= d.len() || d.slot_ids[slot] != gid {
+                return Err(Error::Serialize("delta slot map corrupt".into()));
+            }
+            if d.assignments[slot].len() != per_point {
+                return Err(Error::Serialize(format!(
+                    "delta id {gid} has {} assignments, expected {per_point}",
+                    d.assignments[slot].len()
+                )));
+            }
+            if self.tombstones.contains(&gid) {
+                return Err(Error::Serialize(format!(
+                    "tombstoned id {gid} is live in the delta"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared, swappable snapshot slot — the epoch-style `Arc` swap point
+/// between writers ([`crate::index::MutableIndex`]) and the serving stack.
+///
+/// Readers only hold the lock long enough to clone the `Arc` (no query
+/// work happens under it), so publishing a new snapshot never waits on, or
+/// blocks, an in-flight query.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    inner: RwLock<Arc<IndexSnapshot>>,
+}
+
+impl SnapshotCell {
+    pub fn new(snapshot: Arc<IndexSnapshot>) -> SnapshotCell {
+        SnapshotCell {
+            inner: RwLock::new(snapshot),
+        }
+    }
+
+    /// Current snapshot (cheap: one `Arc` clone).
+    pub fn load(&self) -> Arc<IndexSnapshot> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Publish a new snapshot. In-flight readers keep the old `Arc`.
+    pub fn store(&self, snapshot: Arc<IndexSnapshot>) {
+        *self.inner.write().unwrap() = snapshot;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IndexConfig, SpillMode};
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::runtime::Engine;
+
+    fn small_index(n: usize) -> SoarIndex {
+        let ds = SyntheticConfig::glove_like(n, 8, 2, 3).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 8,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        build_index(&engine, &ds.data, &cfg).unwrap()
+    }
+
+    #[test]
+    fn snapshot_from_index_invariants() {
+        let idx = small_index(300);
+        let snap = IndexSnapshot::from_index(Arc::new(idx));
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.sealed.len(), 1);
+        assert_eq!(snap.live_count(), 300);
+        assert_eq!(snap.id_space(), 300);
+        assert!(snap.delta.is_empty());
+        assert!(snap.sealed[0].contains_global(299));
+        assert!(!snap.sealed[0].contains_global(300));
+        assert_eq!(snap.sealed[0].global_of(7), 7);
+    }
+
+    #[test]
+    fn sealed_segment_rejects_bad_id_maps() {
+        let idx = Arc::new(small_index(100));
+        assert!(SealedSegment::new(idx.clone(), vec![0; 99], Arc::new(HashSet::new())).is_err());
+        assert!(SealedSegment::new(idx, vec![5; 100], Arc::new(HashSet::new())).is_err());
+    }
+
+    #[test]
+    fn delta_from_rows_encodes_against_base() {
+        let idx = small_index(200);
+        let row = idx.ivf.centroids.row(0).to_vec();
+        let d = DeltaSegment::from_rows(&idx, &[(1000, row, vec![0, 3])]).unwrap();
+        assert_eq!(d.len(), 1);
+        assert!(d.contains(1000));
+        assert_eq!(d.id_space, 1001);
+        assert_eq!(d.postings[0].ids, vec![1000]);
+        assert_eq!(d.postings[3].ids, vec![1000]);
+        assert_eq!(d.total_postings(), 2);
+        assert_eq!(d.raw_row(0).len(), 8);
+        assert_eq!(d.int8_record(0).len(), 8);
+        // duplicate ids rejected
+        let row2 = idx.ivf.centroids.row(0).to_vec();
+        assert!(DeltaSegment::from_rows(
+            &idx,
+            &[(7, row2.clone(), vec![0]), (7, row2, vec![1])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn snapshot_cell_swaps_without_invalidating_readers() {
+        let a = Arc::new(IndexSnapshot::from_index(Arc::new(small_index(100))));
+        let b = Arc::new(IndexSnapshot::new(
+            a.sealed.clone(),
+            a.delta.clone(),
+            a.tombstones.clone(),
+            1,
+        ));
+        let cell = SnapshotCell::new(a.clone());
+        let held = cell.load();
+        cell.store(b.clone());
+        assert_eq!(held.epoch, 0); // reader's view is unchanged
+        assert_eq!(cell.load().epoch, 1);
+        assert!(Arc::strong_count(&a) >= 2);
+    }
+}

@@ -1,24 +1,42 @@
-//! Binary index format + the Table 1 memory accounting.
+//! Versioned binary index formats + the Table 1 memory accounting.
 //!
-//! Format (little-endian throughout):
+//! v1 — a single monolithic index (the legacy format, still written by
+//! [`save_index`] and read by both [`load_index`] and [`load_snapshot`]):
 //! ```text
-//!   magic "SOAR" | version u32 | config-json (len u64 + bytes)
+//!   magic "SOAR" | version=1 u32 | config-json (len u64 + bytes)
 //!   n u64 | dim u64 | centroids | postings | pq codebooks
 //!   int8 flag + scales + raw codes | assignments
 //! ```
+//!
+//! v2 — a segmented snapshot ([`save_snapshot`] / [`load_snapshot`]):
+//! ```text
+//!   magic "SOAR" | version=2 u32
+//!   num_sealed u64 | per segment: v1 body + global-id map
+//!   delta rows u64 | per row: id u32 | raw f32s | assignment u32s
+//!   tombstone count u64 | tombstone ids
+//! ```
+//! Delta PQ codes and int8 records are *not* stored: they re-encode
+//! deterministically from the raw rows against the base codebook on load,
+//! so v2 stays compact and byte-order-stable.
+//!
+//! All integers little-endian throughout.
 
+use std::collections::HashSet;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::config::IndexConfig;
 use crate::error::{Error, Result};
+use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment};
 use crate::index::{IvfIndex, PostingList, SoarIndex};
 use crate::linalg::MatrixF32;
 use crate::quant::{Int8Quantizer, ProductQuantizer};
 
 const MAGIC: &[u8; 4] = b"SOAR";
 const VERSION: u32 = 1;
+const VERSION_SEGMENTED: u32 = 2;
 
 // ---------------------------------------------------------------------
 // primitives
@@ -94,49 +112,55 @@ fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
 // save / load
 // ---------------------------------------------------------------------
 
-/// Save an index to `path`.
-pub fn save_index(index: &SoarIndex, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w_u32(&mut w, VERSION)?;
+/// Write the v1 index body (everything after magic + version).
+fn write_index_body(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
     let cfg = index.config.to_json().to_json();
-    w_bytes(&mut w, cfg.as_bytes())?;
-    w_u64(&mut w, index.n as u64)?;
-    w_u64(&mut w, index.dim as u64)?;
+    w_bytes(w, cfg.as_bytes())?;
+    w_u64(w, index.n as u64)?;
+    w_u64(w, index.dim as u64)?;
 
-    w_matrix(&mut w, &index.ivf.centroids)?;
-    w_u64(&mut w, index.ivf.postings.len() as u64)?;
+    w_matrix(w, &index.ivf.centroids)?;
+    w_u64(w, index.ivf.postings.len() as u64)?;
     for list in &index.ivf.postings {
-        w_u64(&mut w, list.ids.len() as u64)?;
+        w_u64(w, list.ids.len() as u64)?;
         for &id in &list.ids {
-            w_u32(&mut w, id)?;
+            w_u32(w, id)?;
         }
-        w_bytes(&mut w, &list.codes)?;
+        w_bytes(w, &list.codes)?;
     }
 
-    w_u64(&mut w, index.pq.dims_per_subspace() as u64)?;
-    w_u64(&mut w, index.pq.codebooks().len() as u64)?;
+    w_u64(w, index.pq.dims_per_subspace() as u64)?;
+    w_u64(w, index.pq.codebooks().len() as u64)?;
     for cb in index.pq.codebooks() {
-        w_matrix(&mut w, cb)?;
+        w_matrix(w, cb)?;
     }
 
     match &index.int8 {
         Some(q8) => {
-            w_u32(&mut w, 1)?;
-            w_f32s(&mut w, &q8.scales)?;
+            w_u32(w, 1)?;
+            w_f32s(w, &q8.scales)?;
             let raw: Vec<u8> = index.raw_int8.iter().map(|&v| v as u8).collect();
-            w_bytes(&mut w, &raw)?;
+            w_bytes(w, &raw)?;
         }
-        None => w_u32(&mut w, 0)?,
+        None => w_u32(w, 0)?,
     }
 
-    w_u64(&mut w, index.assignments.len() as u64)?;
+    w_u64(w, index.assignments.len() as u64)?;
     for a in &index.assignments {
-        w_u32(&mut w, a.len() as u32)?;
+        w_u32(w, a.len() as u32)?;
         for &p in a {
-            w_u32(&mut w, p)?;
+            w_u32(w, p)?;
         }
     }
+    Ok(())
+}
+
+/// Save an index to `path` (v1 format, unchanged on disk).
+pub fn save_index(index: &SoarIndex, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    write_index_body(&mut w, index)?;
     w.flush()?;
     Ok(())
 }
@@ -151,9 +175,16 @@ pub fn load_index(path: &Path) -> Result<SoarIndex> {
     }
     let version = r_u32(&mut r)?;
     if version != VERSION {
-        return Err(Error::Serialize(format!("unsupported version {version}")));
+        return Err(Error::Serialize(format!(
+            "unsupported version {version} (segmented snapshots load via load_snapshot)"
+        )));
     }
-    let cfg_bytes = r_bytes(&mut r)?;
+    read_index_body(&mut r)
+}
+
+/// Read a v1 index body and verify its invariants.
+fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
+    let cfg_bytes = r_bytes(r)?;
     let cfg_text = std::str::from_utf8(&cfg_bytes)
         .map_err(|e| Error::Serialize(format!("config utf8: {e}")))?;
     let config = IndexConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
@@ -220,6 +251,131 @@ pub fn load_index(path: &Path) -> Result<SoarIndex> {
     };
     index.check_invariants()?;
     Ok(index)
+}
+
+// ---------------------------------------------------------------------
+// v2: segmented snapshots
+// ---------------------------------------------------------------------
+
+/// Save a segmented snapshot to `path` (v2 format).
+pub fn save_snapshot(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
+    snapshot.check_invariants()?;
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION_SEGMENTED)?;
+
+    w_u64(&mut w, snapshot.sealed.len() as u64)?;
+    for seg in &snapshot.sealed {
+        write_index_body(&mut w, &seg.index)?;
+        w_u64(&mut w, seg.global_ids.len() as u64)?;
+        for &g in &seg.global_ids {
+            w_u32(&mut w, g)?;
+        }
+    }
+
+    let d = &snapshot.delta;
+    w_u64(&mut w, d.len() as u64)?;
+    for slot in 0..d.len() {
+        w_u32(&mut w, d.slot_ids[slot])?;
+        w_f32s(&mut w, d.raw_row(slot))?;
+        let a = &d.assignments[slot];
+        w_u32(&mut w, a.len() as u32)?;
+        for &p in a {
+            w_u32(&mut w, p)?;
+        }
+    }
+
+    w_u64(&mut w, snapshot.tombstones.len() as u64)?;
+    let mut tombs: Vec<u32> = snapshot.tombstones.iter().copied().collect();
+    tombs.sort_unstable(); // deterministic bytes
+    for t in tombs {
+        w_u32(&mut w, t)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a snapshot from `path`. Reads both formats: a legacy v1 file
+/// becomes a single-sealed-segment snapshot (identity id map, empty delta,
+/// no tombstones) that searches identically to [`load_index`]; a v2 file
+/// restores segments + delta + tombstones, recomputing shadow sets and
+/// re-encoding delta codes against the base codebook.
+pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Serialize("bad magic".into()));
+    }
+    let version = r_u32(&mut r)?;
+    if version == VERSION {
+        let index = read_index_body(&mut r)?;
+        return Ok(IndexSnapshot::from_index(Arc::new(index)));
+    }
+    if version != VERSION_SEGMENTED {
+        return Err(Error::Serialize(format!("unsupported version {version}")));
+    }
+
+    let num_sealed = r_u64(&mut r)? as usize;
+    if num_sealed == 0 {
+        return Err(Error::Serialize("snapshot has no sealed segments".into()));
+    }
+    let mut bodies = Vec::with_capacity(num_sealed);
+    let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
+    for _ in 0..num_sealed {
+        let index = read_index_body(&mut r)?;
+        let len = r_u64(&mut r)? as usize;
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(r_u32(&mut r)?);
+        }
+        bodies.push(index);
+        id_maps.push(ids);
+    }
+    // Shadow sets: ids of strictly newer sealed segments.
+    let mut shadows: Vec<HashSet<u32>> = vec![HashSet::new(); num_sealed];
+    let mut acc: HashSet<u32> = HashSet::new();
+    for i in (0..num_sealed).rev() {
+        shadows[i] = acc.clone();
+        acc.extend(id_maps[i].iter().copied());
+    }
+    let mut sealed = Vec::with_capacity(num_sealed);
+    for ((index, ids), shadow) in bodies.into_iter().zip(id_maps).zip(shadows) {
+        sealed.push(Arc::new(SealedSegment::new(
+            Arc::new(index),
+            ids,
+            Arc::new(shadow),
+        )?));
+    }
+
+    let rows = r_u64(&mut r)? as usize;
+    let mut delta_rows = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let id = r_u32(&mut r)?;
+        let raw = r_f32s(&mut r)?;
+        let na = r_u32(&mut r)? as usize;
+        let mut assignment = Vec::with_capacity(na);
+        for _ in 0..na {
+            assignment.push(r_u32(&mut r)?);
+        }
+        delta_rows.push((id, raw, assignment));
+    }
+    let delta = DeltaSegment::from_rows(&sealed[0].index, &delta_rows)?;
+
+    let nt = r_u64(&mut r)? as usize;
+    let mut tombstones = HashSet::with_capacity(nt);
+    for _ in 0..nt {
+        tombstones.insert(r_u32(&mut r)?);
+    }
+
+    let snapshot = IndexSnapshot::new(
+        sealed,
+        Arc::new(delta),
+        Arc::new(tombstones),
+        0,
+    );
+    snapshot.check_invariants()?;
+    Ok(snapshot)
 }
 
 // ---------------------------------------------------------------------
@@ -346,6 +502,111 @@ mod tests {
             (measured - analytic).abs() / analytic < 0.15,
             "measured {measured} vs analytic {analytic}"
         );
+    }
+
+    #[test]
+    fn v1_file_loads_as_snapshot_identically() {
+        let (_, idx) = build(SpillMode::Soar { lambda: 1.0 });
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.join("legacy.soar");
+        save_index(&idx, &path).unwrap();
+        let snap = load_snapshot(&path).unwrap();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.sealed.len(), 1);
+        assert!(snap.delta.is_empty());
+        assert!(snap.tombstones.is_empty());
+        let base = snap.base();
+        assert_eq!(base.n, idx.n);
+        assert_eq!(base.ivf.postings, idx.ivf.postings);
+        assert_eq!(base.assignments, idx.assignments);
+        assert_eq!(base.raw_int8, idx.raw_int8);
+        // and a v2 file is rejected by the legacy loader with a clear error
+        let snap_path = dir.join("segmented.soar");
+        save_snapshot(&snap, &snap_path).unwrap();
+        let err = load_index(&snap_path).unwrap_err();
+        assert!(err.to_string().contains("load_snapshot"), "{err}");
+    }
+
+    #[test]
+    fn v2_snapshot_round_trip_with_delta_and_tombstones() {
+        use crate::config::{MutableConfig, SearchParams};
+        use crate::index::{MutableIndex, SearchScratch, SnapshotSearcher};
+        use crate::linalg::Rng;
+        use std::sync::Arc;
+
+        let ds = SyntheticConfig::glove_like(500, 16, 6, 46).generate();
+        let engine = Arc::new(Engine::cpu());
+        let cfg = IndexConfig {
+            num_partitions: 10,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let m = MutableIndex::from_index(
+            idx,
+            engine.clone(),
+            MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(47);
+        for i in 0..12u32 {
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            m.upsert(600 + i, &v).unwrap();
+        }
+        m.seal_delta().unwrap();
+        for i in 0..6u32 {
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            m.upsert(i * 5, &v).unwrap(); // updates shadowing sealed rows
+        }
+        for id in [3u32, 99, 604] {
+            m.delete(id).unwrap();
+        }
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.sealed.len(), 2);
+        assert!(!snap.delta.is_empty());
+        assert!(!snap.tombstones.is_empty());
+
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.join("segmented.soar");
+        save_snapshot(&snap, &path).unwrap();
+        let back = load_snapshot(&path).unwrap();
+        assert_eq!(back.sealed.len(), snap.sealed.len());
+        assert_eq!(back.delta.slot_ids, snap.delta.slot_ids);
+        assert_eq!(back.delta.postings, snap.delta.postings);
+        assert_eq!(back.delta.int8_codes, snap.delta.int8_codes);
+        assert_eq!(*back.tombstones, *snap.tombstones);
+        for (a, b) in back.sealed.iter().zip(&snap.sealed) {
+            assert_eq!(a.global_ids, b.global_ids);
+            assert_eq!(*a.shadow, *b.shadow);
+            assert_eq!(a.index.ivf.postings, b.index.ivf.postings);
+        }
+
+        // Search identically on both, full and partial probe.
+        for top_t in [3usize, 10] {
+            let params = SearchParams {
+                k: 10,
+                top_t,
+                rerank_budget: 200,
+            };
+            let s1 = SnapshotSearcher::new(&snap, &engine);
+            let s2 = SnapshotSearcher::new(&back, &engine);
+            let mut sc1 = SearchScratch::for_snapshot(&snap);
+            let mut sc2 = SearchScratch::for_snapshot(&back);
+            for qi in 0..ds.num_queries() {
+                let (a, st_a) = s1.search(ds.queries.row(qi), &params, &mut sc1);
+                let (b, st_b) = s2.search(ds.queries.row(qi), &params, &mut sc2);
+                assert_eq!(a, b, "query {qi} at top_t {top_t}");
+                assert_eq!(st_a, st_b);
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,15 @@
 //! println!("top hit {} (scanned {} points)", hits[0].id, stats.points_scanned);
 //! ```
 
+// Kernel-style numeric code: explicit index loops are kept where they
+// mirror the math or keep multi-array access patterns obvious.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::field_reassign_with_default
+)]
+
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -44,7 +53,10 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-pub use config::{IndexConfig, SearchParams, ServeConfig, SpillMode};
+pub use config::{IndexConfig, MutableConfig, SearchParams, ServeConfig, SpillMode};
 pub use error::{Error, Result};
-pub use index::{build_index, SearchScratch, Searcher, SoarIndex};
+pub use index::{
+    build_index, IndexSnapshot, MutableIndex, SearchScratch, Searcher, SnapshotCell,
+    SnapshotSearcher, SoarIndex,
+};
 pub use runtime::Engine;

@@ -5,6 +5,7 @@
 //!   build         build a (SOAR) index over an fvecs corpus or synthetic data
 //!   search        query a saved index from an fvecs query file
 //!   serve         start the serving stack and drive a load test against it
+//!   churn         serve live traffic while upserting/deleting (mutable index)
 //!   experiments   regenerate the paper's figures/tables (see DESIGN.md §4)
 //!   info          print index / artifact / engine information
 
@@ -36,6 +37,8 @@ COMMANDS
                --k 10 --top-t 8 --rerank 200
   serve        --n 20000 --dim 64 (or --index/--data) --clients 8
                --requests 64 --max-batch 64 --max-wait-us 200 --workers 4
+  churn        --n 20000 --dim 64 --ops (n/5) --clients 4 --requests 64
+               --delta-cap 4096 — serve while upserting/deleting 20%
   experiments  <fig1|fig2|fig4|fig7|fig8|fig9|kmr|fig10|fig11|fig12|table1|all>
                --n 20000 --dim 64 --queries 200 --lambda 1.0 --quick
   info         --index index.soar | (artifact summary with no flags)
@@ -61,6 +64,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "n", "dim", "queries", "seed", "out", "data", "partitions", "spill", "lambda",
     "index", "k", "top-t", "rerank", "clients", "requests", "max-batch",
     "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
+    "ops", "delta-cap",
 ];
 
 fn engine_from(args: &Args) -> Engine {
@@ -123,6 +127,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "build" => cmd_build(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "churn" => cmd_churn(&args),
         "experiments" => cmd_experiments(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -260,6 +265,117 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.p50_us,
         snap.p99_us,
         snap.mean_batch
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// Serve live traffic from a mutable index while a writer thread churns
+/// 20%-of-corpus upserts/deletes through it, then compact and report.
+fn cmd_churn(args: &Args) -> Result<()> {
+    use soar_ann::config::MutableConfig;
+    use soar_ann::index::MutableIndex;
+    use soar_ann::linalg::Rng;
+
+    let engine = Arc::new(engine_from(args));
+    let ds = load_or_generate(args)?;
+    let n = ds.n();
+    let dim = ds.dim();
+    let cfg = IndexConfig::for_dataset(n, spill_from(args)?);
+    println!("building base index over {n} x {dim}…");
+    let t0 = std::time::Instant::now();
+    let base = build_index(&engine, &ds.data, &cfg)?;
+    println!("built in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let mcfg = MutableConfig {
+        delta_capacity: args.get_usize("delta-cap", 4096)?,
+        ..Default::default()
+    };
+    let mutable = Arc::new(MutableIndex::from_index(base, engine.clone(), mcfg)?);
+    let params = SearchParams {
+        k: args.get_usize("k", 10)?,
+        top_t: args.get_usize("top-t", 8)?,
+        rerank_budget: args.get_usize("rerank", 200)?,
+    };
+    let server = ServeEngine::start_shared(
+        mutable.cell(),
+        engine.clone(),
+        params,
+        ServeConfig::default(),
+    );
+    let handle = server.handle();
+
+    let ops = args.get_usize("ops", (n / 5).max(1))?;
+    let clients = args.get_usize("clients", 4)?;
+    let per_client = args.get_usize("requests", 64)?;
+    let seed = args.get_u64("seed", 42)?;
+
+    let t0 = std::time::Instant::now();
+    let writer = {
+        let mutable = mutable.clone();
+        let data = ds.data.clone();
+        std::thread::spawn(move || -> Result<(usize, usize)> {
+            let mut rng = Rng::new(seed ^ 0xc0ffee);
+            let mut next_id = n as u32;
+            let (mut upserts, mut deletes) = (0usize, 0usize);
+            for _ in 0..ops {
+                if rng.next_f32() < 0.5 {
+                    // Upsert: a perturbed copy of a random corpus row.
+                    let src = rng.next_below(n as u32) as usize;
+                    let mut v = data.row(src).to_vec();
+                    for x in v.iter_mut() {
+                        *x += 0.05 * rng.next_gaussian();
+                    }
+                    soar_ann::linalg::normalize(&mut v);
+                    mutable.upsert(next_id, &v)?;
+                    next_id += 1;
+                    upserts += 1;
+                } else {
+                    mutable.delete(rng.next_below(next_id))?;
+                    deletes += 1;
+                }
+            }
+            Ok((upserts, deletes))
+        })
+    };
+    let elapsed_load = closed_loop_load(&handle, &ds.queries, clients, per_client);
+    let (upserts, deletes) = writer
+        .join()
+        .map_err(|_| Error::Coordinator("writer thread panicked".into()))??;
+    let churn_secs = t0.elapsed().as_secs_f64();
+
+    let snap_metrics = server.metrics().snapshot();
+    let stats = mutable.stats();
+    println!(
+        "churned {ops} ops ({upserts} upserts, {deletes} deletes) in {churn_secs:.2}s \
+         ({:.0} ops/s) while serving",
+        ops as f64 / churn_secs
+    );
+    println!(
+        "served {} queries in {elapsed_load:.2}s: {:.0} QPS | p50 {}µs p99 {}µs | mean batch {:.1}",
+        snap_metrics.queries,
+        snap_metrics.queries as f64 / elapsed_load,
+        snap_metrics.p50_us,
+        snap_metrics.p99_us,
+        snap_metrics.mean_batch
+    );
+    println!(
+        "index: {} sealed segment(s), {} sealed rows, {} delta rows, {} tombstones, epoch {}, {} compaction(s)",
+        stats.sealed_segments,
+        stats.sealed_rows,
+        stats.delta_rows,
+        stats.tombstones,
+        stats.epoch,
+        stats.compactions
+    );
+    let t0 = std::time::Instant::now();
+    let after = mutable.compact()?;
+    println!(
+        "compacted in {:.3}s → {} rows in {} segment(s), {} tombstones",
+        t0.elapsed().as_secs_f64(),
+        after.sealed_rows,
+        after.sealed_segments,
+        after.tombstones
     );
     server.shutdown();
     Ok(())

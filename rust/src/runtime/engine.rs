@@ -23,6 +23,10 @@ use crate::error::{Error, Result};
 use crate::linalg::MatrixF32;
 use crate::runtime::artifact::{Manifest, ManifestEntry};
 use crate::runtime::cpu;
+// Offline builds link the API-compatible stub (every call errors, so
+// `Engine::auto` falls back to CPU). To use the real PJRT bindings, add
+// the `xla` crate and change this alias to `use xla;` — see `xla_stub.rs`.
+use crate::runtime::xla_stub as xla;
 
 /// Which backend actually served a request (observable for tests/metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

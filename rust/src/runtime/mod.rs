@@ -10,6 +10,7 @@
 pub mod artifact;
 pub mod cpu;
 pub mod engine;
+pub(crate) mod xla_stub;
 
 pub use artifact::{Manifest, ManifestEntry};
 pub use engine::{Backend, Engine, EngineStats};

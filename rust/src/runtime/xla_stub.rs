@@ -1,0 +1,116 @@
+//! Offline stand-in for the `xla` (PJRT) bindings.
+//!
+//! The repo's offline vendor set does not include the `xla` crate, so this
+//! module provides API-compatible stub types that let `engine.rs` compile
+//! unchanged. Every entry point returns [`Unsupported`], which makes
+//! [`crate::runtime::Engine::pjrt`] fail cleanly and `Engine::auto` fall
+//! back to the pure-Rust CPU backend (semantically identical — see
+//! `runtime/cpu.rs`).
+//!
+//! To link the real PJRT backend, add the `xla` crate to `Cargo.toml` and
+//! replace the `use crate::runtime::xla_stub as xla;` alias at the top of
+//! `engine.rs` with `use xla;`. No other code changes are required: the
+//! stub mirrors the exact subset of the `xla` API the engine consumes.
+
+#![allow(dead_code)]
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+
+/// Error returned by every stubbed entry point.
+#[derive(Clone, Copy, Debug)]
+pub struct Unsupported;
+
+impl fmt::Display for Unsupported {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla/PJRT bindings not linked in this build (offline stub); \
+             using the CPU fallback backend"
+        )
+    }
+}
+
+impl std::error::Error for Unsupported {}
+
+type XlaResult<T> = std::result::Result<T, Unsupported>;
+
+/// Stub PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        Err(Unsupported)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(Unsupported)
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> XlaResult<HloModuleProto> {
+        Err(Unsupported)
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable. Deliberately `!Send`/`!Sync` (like the real
+/// `PjRtLoadedExecutable`, which holds an `Rc` + raw C pointers) so the
+/// engine's `SendExec` wrapper and its `unsafe impl Send/Sync` stay valid.
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<*const ()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Unsupported)
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(Unsupported)
+    }
+}
+
+/// Stub host literal.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> XlaResult<Literal> {
+        Err(Unsupported)
+    }
+
+    pub fn to_tuple1(self) -> XlaResult<Literal> {
+        Err(Unsupported)
+    }
+
+    pub fn to_tuple2(self) -> XlaResult<(Literal, Literal)> {
+        Err(Unsupported)
+    }
+
+    pub fn to_vec<T>(&self) -> XlaResult<Vec<T>> {
+        Err(Unsupported)
+    }
+}

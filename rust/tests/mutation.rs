@@ -1,0 +1,403 @@
+//! Integration: mutation semantics of the segmented index.
+//!
+//! * Churn property: interleaved upserts/deletes (≥ 20% of the corpus)
+//!   across every `SpillMode` — full-probe search must never return a
+//!   deleted id, and recall@10 must stay within 0.02 of a from-scratch
+//!   rebuild at the same search parameters (before AND after compaction).
+//! * Serving: queries keep succeeding while snapshots are swapped under
+//!   the serving stack (writers never block in-flight queries).
+//! * Formats: legacy v1 index files load through the snapshot path and
+//!   search identically.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use soar_ann::config::{
+    IndexConfig, MutableConfig, SearchParams, ServeConfig, SpillMode,
+};
+use soar_ann::coordinator::server::ServeEngine;
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::serialize::{load_index, load_snapshot, save_index};
+use soar_ann::index::{
+    build_index, MutableIndex, SearchScratch, Searcher, SnapshotSearcher,
+};
+use soar_ann::linalg::{MatrixF32, Rng};
+use soar_ann::runtime::Engine;
+use soar_ann::util::tempdir::TempDir;
+
+/// A unit-norm perturbation of a random corpus row — keeps synthetic
+/// upserts on the data manifold (and inside the base int8 scale range),
+/// like a real ingestion workload.
+fn perturbed(rng: &mut Rng, data: &MatrixF32, noise: f32) -> Vec<f32> {
+    let src = rng.next_below(data.rows() as u32) as usize;
+    let mut v = data.row(src).to_vec();
+    for x in v.iter_mut() {
+        *x += noise * rng.next_gaussian();
+    }
+    soar_ann::linalg::normalize(&mut v);
+    v
+}
+
+fn random_live(rng: &mut Rng, expected: &HashMap<u32, Vec<f32>>, bound: u32) -> u32 {
+    loop {
+        let id = rng.next_below(bound);
+        if expected.contains_key(&id) {
+            return id;
+        }
+    }
+}
+
+/// Full-probe results from a snapshot, asserting no dead ids surface, and
+/// mapped onto `pos_of` (live-row positions) for recall computation.
+fn snapshot_results(
+    m: &MutableIndex,
+    engine: &Engine,
+    queries: &MatrixF32,
+    params: &SearchParams,
+    expected: &HashMap<u32, Vec<f32>>,
+    pos_of: &HashMap<u32, u32>,
+    label: &str,
+) -> Vec<Vec<u32>> {
+    let snap = m.snapshot();
+    snap.check_invariants().unwrap();
+    let searcher = SnapshotSearcher::new(&snap, engine);
+    let mut scratch = SearchScratch::for_snapshot(&snap);
+    let mut out = Vec::new();
+    for qi in 0..queries.rows() {
+        let (res, _) = searcher.search(queries.row(qi), params, &mut scratch);
+        for s in &res {
+            assert!(
+                expected.contains_key(&s.id),
+                "{label}: deleted or unknown id {} returned for query {qi}",
+                s.id
+            );
+        }
+        out.push(res.iter().map(|s| pos_of[&s.id]).collect());
+    }
+    out
+}
+
+fn churn_scenario(spill: SpillMode, seed: u64) {
+    let n = 3000usize;
+    let dim = 16usize;
+    let ds = SyntheticConfig::glove_like(n, dim, 24, seed).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig {
+        num_partitions: 30,
+        spill,
+        ..Default::default()
+    };
+    let base = build_index(&engine, &ds.data, &cfg).unwrap();
+    let m = MutableIndex::from_index(
+        base,
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false, // exercise the delta/tombstone scan path
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // Mirror of what the index should contain.
+    let mut expected: HashMap<u32, Vec<f32>> = (0..n)
+        .map(|i| (i as u32, ds.data.row(i).to_vec()))
+        .collect();
+    let mut rng = Rng::new(seed.wrapping_mul(31) ^ 0xc0de);
+    let mut next_id = n as u32;
+
+    // ≥ 20% churn: 700 ops over a 3000-point corpus.
+    let total_ops = 700usize;
+    for op in 0..total_ops {
+        let r = rng.next_f32();
+        if r < 0.4 {
+            // Insert a brand-new id.
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(next_id, &v).unwrap();
+            expected.insert(next_id, v);
+            next_id += 1;
+        } else if r < 0.7 {
+            // Update an existing id in place.
+            let id = random_live(&mut rng, &expected, next_id);
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(id, &v).unwrap();
+            expected.insert(id, v);
+        } else {
+            // Delete an existing id.
+            let id = random_live(&mut rng, &expected, next_id);
+            assert!(m.delete(id).unwrap(), "delete of live id {id} must hit");
+            expected.remove(&id);
+        }
+        if op == total_ops / 2 {
+            // Seal mid-way so the scan crosses multiple sealed segments.
+            assert!(m.seal_delta().unwrap());
+        }
+    }
+
+    // Live rows in sorted-id order → rebuild corpus + position map.
+    let mut live_ids: Vec<u32> = expected.keys().copied().collect();
+    live_ids.sort_unstable();
+    let mut live = MatrixF32::zeros(live_ids.len(), dim);
+    for (row, id) in live_ids.iter().enumerate() {
+        live.row_mut(row).copy_from_slice(&expected[id]);
+    }
+    let pos_of: HashMap<u32, u32> = live_ids
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| (id, i as u32))
+        .collect();
+
+    let gt = ground_truth_mips(&live, &ds.queries, 10);
+    // Full probe + a budget above the live count: recall is then limited
+    // only by the int8 representation, identically for the segmented
+    // index and the rebuild, so the 0.02 band is tight in both directions.
+    let params = SearchParams {
+        k: 10,
+        top_t: 30,
+        rerank_budget: 4000,
+    };
+
+    let seg_results = snapshot_results(
+        &m, &engine, &ds.queries, &params, &expected, &pos_of, "pre-compaction",
+    );
+    let recall_seg = gt.mean_recall(&seg_results);
+
+    // From-scratch rebuild over the surviving rows, same search params.
+    let rebuilt = build_index(&engine, &live, &cfg).unwrap();
+    let rb = Searcher::new(&rebuilt, &engine);
+    let mut rb_scratch = SearchScratch::new(&rebuilt);
+    let mut rb_results = Vec::new();
+    for qi in 0..ds.num_queries() {
+        let (res, _) = rb.search(ds.queries.row(qi), &params, &mut rb_scratch);
+        rb_results.push(res.iter().map(|s| s.id).collect::<Vec<u32>>());
+    }
+    let recall_rb = gt.mean_recall(&rb_results);
+
+    assert!(
+        (recall_seg - recall_rb).abs() <= 0.02,
+        "{spill:?}: churned recall {recall_seg:.3} vs rebuild {recall_rb:.3}"
+    );
+    assert!(recall_seg > 0.85, "{spill:?}: churned recall {recall_seg:.3}");
+
+    // Compact and re-verify the same guarantees on the merged segment.
+    let stats = m.compact().unwrap();
+    assert_eq!(stats.sealed_segments, 1);
+    assert_eq!(stats.tombstones, 0);
+    assert_eq!(stats.delta_rows, 0);
+    let compacted_results = snapshot_results(
+        &m, &engine, &ds.queries, &params, &expected, &pos_of, "post-compaction",
+    );
+    let recall_compacted = gt.mean_recall(&compacted_results);
+    assert!(
+        (recall_compacted - recall_rb).abs() <= 0.02,
+        "{spill:?}: compacted recall {recall_compacted:.3} vs rebuild {recall_rb:.3}"
+    );
+    assert_eq!(
+        m.snapshot().live_count(),
+        expected.len(),
+        "{spill:?}: live count after compaction"
+    );
+}
+
+#[test]
+fn churn_soar() {
+    churn_scenario(SpillMode::Soar { lambda: 1.0 }, 101);
+}
+
+#[test]
+fn churn_nearest() {
+    churn_scenario(SpillMode::Nearest, 202);
+}
+
+#[test]
+fn churn_no_spill() {
+    churn_scenario(SpillMode::None, 303);
+}
+
+#[test]
+fn serving_continues_across_snapshot_swaps() {
+    let ds = SyntheticConfig::glove_like(2000, 16, 16, 55).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig {
+        num_partitions: 20,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let base = build_index(&engine, &ds.data, &cfg).unwrap();
+    let m = MutableIndex::from_index(
+        base,
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Probe everything so freshly inserted rows are always reachable.
+    let params = SearchParams {
+        k: 10,
+        top_t: 20,
+        rerank_budget: 300,
+    };
+    let server = ServeEngine::start_shared(
+        m.cell(),
+        engine.clone(),
+        params,
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 200,
+            workers: 2,
+            queue_depth: 4096,
+        },
+    );
+    let handle = server.handle();
+
+    let per_client = 60usize;
+    let clients = 4usize;
+    let mut last_vec = Vec::new();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for t in 0..clients {
+            let h = handle.clone();
+            let ds = &ds;
+            joins.push(s.spawn(move || {
+                for i in 0..per_client {
+                    let qi = (t * per_client + i) % ds.num_queries();
+                    let res = h.search(ds.queries.row(qi).to_vec());
+                    assert!(
+                        res.is_ok(),
+                        "query must not fail during swaps: {:?}",
+                        res.err()
+                    );
+                }
+            }));
+        }
+        // Writer: publish mutations into the shared cell while clients
+        // run, and exercise the explicit swap path too.
+        let mut rng = Rng::new(77);
+        for i in 0..40u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(5000 + i, &v).unwrap();
+            last_vec = v;
+            if i % 8 == 0 {
+                server.swap_snapshot(m.snapshot()).unwrap();
+            }
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    });
+
+    let snap = server.metrics().snapshot();
+    assert_eq!(
+        snap.queries,
+        (clients * per_client) as u64,
+        "every request must be answered"
+    );
+    assert_eq!(snap.rejected, 0);
+    // The served index reflects the writes that were published mid-load.
+    let res = handle.search(last_vec.clone()).unwrap();
+    assert_eq!(res[0].id, 5039, "last upsert must be servable");
+    server.shutdown();
+}
+
+#[test]
+fn legacy_v1_file_searches_identically_via_snapshot_path() {
+    let ds = SyntheticConfig::glove_like(1500, 16, 12, 66).generate();
+    let engine = Engine::cpu();
+    let cfg = IndexConfig {
+        num_partitions: 15,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("legacy.soar");
+    save_index(&idx, &path).unwrap();
+
+    let legacy = load_index(&path).unwrap();
+    let snap = load_snapshot(&path).unwrap();
+    snap.check_invariants().unwrap();
+
+    for params in [
+        SearchParams::default(),
+        SearchParams {
+            k: 10,
+            top_t: 15,
+            rerank_budget: 400,
+        },
+    ] {
+        let s1 = Searcher::new(&legacy, &engine);
+        let s2 = SnapshotSearcher::new(&snap, &engine);
+        let mut sc1 = SearchScratch::new(&legacy);
+        let mut sc2 = SearchScratch::for_snapshot(&snap);
+        for qi in 0..ds.num_queries() {
+            let (a, _) = s1.search(ds.queries.row(qi), &params, &mut sc1);
+            let (b, _) = s2.search(ds.queries.row(qi), &params, &mut sc2);
+            assert_eq!(a, b, "query {qi}: v1 file must search identically");
+        }
+    }
+}
+
+#[test]
+fn mutable_index_resumes_from_loaded_snapshot() {
+    use soar_ann::index::serialize::save_snapshot;
+    let ds = SyntheticConfig::glove_like(800, 16, 6, 88).generate();
+    let engine = Arc::new(Engine::cpu());
+    let cfg = IndexConfig {
+        num_partitions: 12,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let base = build_index(&engine, &ds.data, &cfg).unwrap();
+    let m = MutableIndex::from_index(
+        base,
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(99);
+    for i in 0..20u32 {
+        let v = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(900 + i, &v).unwrap();
+    }
+    m.delete(7).unwrap();
+    let dir = TempDir::new().unwrap();
+    let path = dir.join("resume.soar");
+    save_snapshot(&m.snapshot(), &path).unwrap();
+
+    let loaded = load_snapshot(&path).unwrap();
+    let resumed = MutableIndex::from_snapshot(
+        Arc::new(loaded),
+        engine.clone(),
+        MutableConfig::default(),
+    )
+    .unwrap();
+    // Mutation continues: replace one of the restored delta rows and add
+    // a new one.
+    let v = perturbed(&mut rng, &ds.data, 0.15);
+    resumed.upsert(905, &v).unwrap();
+    let w = perturbed(&mut rng, &ds.data, 0.15);
+    resumed.upsert(2000, &w).unwrap();
+    resumed.delete(11).unwrap();
+    let snap = resumed.snapshot();
+    snap.check_invariants().unwrap();
+    assert!(snap.delta.contains(2000));
+    assert!(snap.tombstones.contains(&7)); // restored tombstone survives
+    assert!(snap.tombstones.contains(&11));
+    let searcher = SnapshotSearcher::new(&snap, &engine);
+    let mut scratch = SearchScratch::for_snapshot(&snap);
+    let (res, _) = searcher.search(
+        &v,
+        &SearchParams {
+            k: 5,
+            top_t: 12,
+            rerank_budget: 200,
+        },
+        &mut scratch,
+    );
+    assert_eq!(res[0].id, 905, "replaced row must be served at its new location");
+}
