@@ -1,16 +1,24 @@
 //! Micro-benchmarks of the query hot path stages (perf-pass baseline):
-//! dot kernel, LUT build, ADC scan, dedup, centroid scoring (CPU + PJRT),
-//! full single-query search.
+//! dot kernel, LUT build, scalar vs blocked LUT16 ADC scan, dedup,
+//! centroid scoring (CPU + PJRT), full single-query search.
 //!
-//! Run with: `cargo bench --bench bench_hotpath`
+//! Emits `BENCH_hotpath.json` (points-scanned/sec and ns/candidate for the
+//! scalar baseline, the dispatched blocked kernel, and the portable
+//! blocked fallback at several list lengths) so successive PRs can track
+//! the scan-throughput trajectory.
+//!
+//! Run with: `cargo bench --bench bench_hotpath [-- --quick]`
 
 use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
 use soar_ann::coordinator::DedupSet;
 use soar_ann::data::synthetic::SyntheticConfig;
 use soar_ann::index::{build_index, SearchScratch, Searcher};
 use soar_ann::linalg::{dot, MatrixF32, Rng};
+use soar_ann::quant::lut16::{self, KernelKind};
+use soar_ann::quant::{BlockedCodes, QueryLut};
 use soar_ann::runtime::{default_artifact_dir, Engine};
 use soar_ann::util::bench::{black_box, Bencher};
+use soar_ann::util::json::Value;
 
 fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
     let mut rng = Rng::new(seed);
@@ -22,7 +30,12 @@ fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
 }
 
 fn main() {
-    let b = Bencher::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
 
     // -- linalg dot at index dims --------------------------------------
     for d in [64usize, 128] {
@@ -38,20 +51,29 @@ fn main() {
     let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
     let index = build_index(&engine, &ds.data, &cfg).expect("build");
     let q = ds.queries.row(0).to_vec();
+    let m = index.pq.num_subspaces();
+    let cb = index.pq.code_bytes();
 
-    // -- PQ LUT build + ADC scan ----------------------------------------
+    // -- PQ LUT build ----------------------------------------------------
     let mut lut = Vec::new();
     b.run("pq/build_lut/d64", || {
         index.pq.build_lut(black_box(&q), &mut lut);
     });
+    let mut qlut = QueryLut::sized(m);
+    b.run("pq/build_query_lut/d64", || {
+        index.pq.build_query_lut(black_box(&q), &mut qlut);
+    });
     index.pq.build_lut(&q, &mut lut);
+    index.pq.build_query_lut(&q, &mut qlut);
+    assert!(qlut.quantized, "fixture LUT must quantize");
+
+    // -- scalar ADC on the largest real posting list ---------------------
     let list = index
         .ivf
         .postings
         .iter()
         .max_by_key(|p| p.len())
         .expect("postings");
-    let cb = index.pq.code_bytes();
     b.run(&format!("pq/adc_scan/{}pts", list.len()), || {
         let mut acc = 0.0f32;
         for i in 0..list.len() {
@@ -59,6 +81,65 @@ fn main() {
         }
         black_box(acc);
     });
+
+    // -- scalar vs blocked LUT16 scan at several list lengths ------------
+    let kernel = lut16::detect_kernel();
+    println!("adc kernel: {}", kernel.name());
+    let lens: &[usize] = if quick {
+        &[1_000, 8_000]
+    } else {
+        &[1_000, 8_000, 64_000]
+    };
+    let mut rng = Rng::new(7);
+    let mut entries: Vec<Value> = Vec::new();
+    let mut min_blocked_speedup = f64::INFINITY;
+    let mut min_portable_speedup = f64::INFINITY;
+    for &len in lens {
+        let codes: Vec<u8> = (0..len * cb).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+        let blocked = BlockedCodes::from_codes(&codes, len, cb, m);
+
+        let scalar = b.run(&format!("adc/scalar/{len}"), || {
+            let mut acc = 0.0f32;
+            for i in 0..len {
+                acc += index.pq.adc_score(&qlut.f32_lut, &codes[i * cb..(i + 1) * cb]);
+            }
+            black_box(acc);
+        });
+        let mut out: Vec<f32> = Vec::with_capacity(len);
+        let dispatched = b.run(&format!("adc/blocked-{}/{len}", kernel.name()), || {
+            lut16::score_all(black_box(&blocked), &qlut, 0.0, &mut out);
+            black_box(out.last().copied());
+        });
+        let portable = b.run(&format!("adc/blocked-portable/{len}"), || {
+            let blk = black_box(&blocked);
+            lut16::score_all_with(KernelKind::Portable, blk, &qlut, 0.0, &mut out);
+            black_box(out.last().copied());
+        });
+
+        let scalar_ns = scalar.median_ns();
+        let blocked_ns = dispatched.median_ns();
+        let portable_ns = portable.median_ns();
+        let blocked_speedup = scalar_ns / blocked_ns;
+        let portable_speedup = scalar_ns / portable_ns;
+        min_blocked_speedup = min_blocked_speedup.min(blocked_speedup);
+        min_portable_speedup = min_portable_speedup.min(portable_speedup);
+        println!(
+            "adc speedup @{len}: blocked-{} {blocked_speedup:.2}x, portable {portable_speedup:.2}x",
+            kernel.name()
+        );
+        let lf = len as f64;
+        entries.push(Value::obj(vec![
+            ("list_len", Value::num(lf)),
+            ("scalar_ns_per_candidate", Value::num(scalar_ns / lf)),
+            ("blocked_ns_per_candidate", Value::num(blocked_ns / lf)),
+            ("portable_ns_per_candidate", Value::num(portable_ns / lf)),
+            ("scalar_points_per_sec", Value::num(lf * 1e9 / scalar_ns)),
+            ("blocked_points_per_sec", Value::num(lf * 1e9 / blocked_ns)),
+            ("portable_points_per_sec", Value::num(lf * 1e9 / portable_ns)),
+            ("speedup_blocked_vs_scalar", Value::num(blocked_speedup)),
+            ("speedup_portable_vs_scalar", Value::num(portable_speedup)),
+        ]));
+    }
 
     // -- dedup ------------------------------------------------------------
     let mut dedup = DedupSet::new(index.n);
@@ -95,13 +176,33 @@ fn main() {
     // -- full single-query search ----------------------------------------
     let searcher = Searcher::new(&index, &engine);
     let mut scratch = SearchScratch::new(&index);
+    let mut search_medians: Vec<Value> = Vec::new();
     for (tag, params) in [
         ("t4", SearchParams { k: 10, top_t: 4, rerank_budget: 100 }),
         ("t8", SearchParams { k: 10, top_t: 8, rerank_budget: 200 }),
         ("t16", SearchParams { k: 10, top_t: 16, rerank_budget: 400 }),
     ] {
-        b.run(&format!("search/single/{tag}"), || {
+        let meas = b.run(&format!("search/single/{tag}"), || {
             black_box(searcher.search(black_box(&q), &params, &mut scratch));
         });
+        search_medians.push(Value::obj(vec![
+            ("config", Value::str(tag)),
+            ("median_ns", Value::num(meas.median_ns())),
+        ]));
     }
+
+    // -- report ----------------------------------------------------------
+    let report = Value::obj(vec![
+        ("bench", Value::str("hotpath")),
+        ("kernel", Value::str(kernel.name())),
+        ("subspaces", Value::num(m as f64)),
+        ("code_bytes", Value::num(cb as f64)),
+        ("adc_scan", Value::Arr(entries)),
+        ("min_speedup_blocked_vs_scalar", Value::num(min_blocked_speedup)),
+        ("min_speedup_portable_vs_scalar", Value::num(min_portable_speedup)),
+        ("search_single", Value::Arr(search_medians)),
+        ("quick", Value::Bool(quick)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", report.to_json_pretty()).expect("write report");
+    println!("wrote BENCH_hotpath.json");
 }

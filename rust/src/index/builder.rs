@@ -95,7 +95,7 @@ pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> R
         (None, Vec::new())
     };
 
-    let index = SoarIndex {
+    let mut index = SoarIndex {
         config: config.clone(),
         n,
         dim,
@@ -104,7 +104,9 @@ pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> R
         int8,
         raw_int8,
         assignments,
+        blocked: Vec::new(),
     };
+    index.rebuild_blocked();
     index.check_invariants()?;
     Ok(index)
 }

@@ -51,7 +51,7 @@ pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 
 use crate::config::IndexConfig;
 use crate::linalg::MatrixF32;
-use crate::quant::{Int8Quantizer, ProductQuantizer};
+use crate::quant::{BlockedCodes, Int8Quantizer, ProductQuantizer};
 
 /// A fully built SOAR (or baseline VQ) index.
 #[derive(Clone, Debug)]
@@ -70,6 +70,10 @@ pub struct SoarIndex {
     pub raw_int8: Vec<i8>,
     /// Per-point partition assignments; `assignments[i][0]` is primary.
     pub assignments: Vec<Vec<u32>>,
+    /// Blockwise LUT16 scan layout, one per partition — derived from
+    /// `ivf.postings` via [`SoarIndex::rebuild_blocked`] (never
+    /// serialized; re-derived on load).
+    pub blocked: Vec<BlockedCodes>,
 }
 
 impl SoarIndex {
@@ -87,6 +91,19 @@ impl SoarIndex {
     /// Primary assignment of point `id`.
     pub fn primary_assignment(&self, id: u32) -> u32 {
         self.assignments[id as usize][0]
+    }
+
+    /// (Re)derive the blocked LUT16 scan layout from the posting lists.
+    /// Every constructor must call this after the postings are final.
+    pub fn rebuild_blocked(&mut self) {
+        let m = self.pq.num_subspaces();
+        let cb = self.pq.code_bytes();
+        self.blocked = self
+            .ivf
+            .postings
+            .iter()
+            .map(|list| BlockedCodes::from_codes(&list.codes, list.len(), cb, m))
+            .collect();
     }
 
     /// Basic invariant check used by tests and after deserialization.
@@ -120,6 +137,20 @@ impl SoarIndex {
         }
         if self.int8.is_some() && self.raw_int8.len() != self.n * self.dim {
             return Err(Error::Serialize("raw int8 storage size mismatch".into()));
+        }
+        if self.blocked.len() != self.ivf.postings.len() {
+            return Err(Error::Serialize(
+                "blocked layout partition count mismatch (rebuild_blocked not called?)".into(),
+            ));
+        }
+        for (p, (b, list)) in self.blocked.iter().zip(&self.ivf.postings).enumerate() {
+            if b.len() != list.len() {
+                return Err(Error::Serialize(format!(
+                    "partition {p}: blocked layout has {} entries for {} postings",
+                    b.len(),
+                    list.len()
+                )));
+            }
         }
         Ok(())
     }

@@ -62,6 +62,8 @@ pub struct MutableStats {
 struct DeltaBuilder {
     dim: usize,
     code_bytes: usize,
+    /// PQ subspace count (for rebuilding the frozen delta's blocked layout).
+    m: usize,
     postings: Vec<PostingList>,
     slot_ids: Vec<u32>,
     slot_live: Vec<bool>,
@@ -73,10 +75,11 @@ struct DeltaBuilder {
 }
 
 impl DeltaBuilder {
-    fn new(dim: usize, num_partitions: usize, code_bytes: usize) -> DeltaBuilder {
+    fn new(dim: usize, num_partitions: usize, code_bytes: usize, m: usize) -> DeltaBuilder {
         DeltaBuilder {
             dim,
             code_bytes,
+            m,
             postings: vec![PostingList::default(); num_partitions],
             slot_ids: Vec::new(),
             slot_live: Vec::new(),
@@ -200,11 +203,12 @@ impl DeltaBuilder {
             d.assignments.push(self.assignments[slot].clone());
             d.id_space = d.id_space.max(id as usize + 1);
         }
+        d.rebuild_blocked(self.m);
         d
     }
 
     fn reset(&mut self) {
-        *self = DeltaBuilder::new(self.dim, self.postings.len(), self.code_bytes);
+        *self = DeltaBuilder::new(self.dim, self.postings.len(), self.code_bytes, self.m);
     }
 }
 
@@ -253,7 +257,12 @@ impl MutableIndex {
         config.validate()?;
         snapshot.check_invariants()?;
         let base = snapshot.base();
-        let mut delta = DeltaBuilder::new(base.dim, base.num_partitions(), base.pq.code_bytes());
+        let mut delta = DeltaBuilder::new(
+            base.dim,
+            base.num_partitions(),
+            base.pq.code_bytes(),
+            base.pq.num_subspaces(),
+        );
         // Rehydrate the builder from the frozen delta, slot order preserved.
         let frozen = &snapshot.delta;
         for slot in 0..frozen.len() {
@@ -472,7 +481,7 @@ impl MutableIndex {
             &mut assignments,
             &mut raw_int8,
         )?;
-        let index = SoarIndex {
+        let mut index = SoarIndex {
             config: base.config.clone(),
             n: global_ids.len(),
             dim: base.dim,
@@ -484,7 +493,9 @@ impl MutableIndex {
             int8: base.int8.clone(),
             raw_int8,
             assignments,
+            blocked: Vec::new(),
         };
+        index.rebuild_blocked();
         index.check_invariants()?;
         SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))
     }
@@ -550,7 +561,7 @@ impl MutableIndex {
             &mut raw_int8,
         )?;
 
-        let merged = SoarIndex {
+        let mut merged = SoarIndex {
             config: base.config.clone(),
             n: global_ids.len(),
             dim: base.dim,
@@ -562,7 +573,9 @@ impl MutableIndex {
             int8: base.int8.clone(),
             raw_int8,
             assignments,
+            blocked: Vec::new(),
         };
+        merged.rebuild_blocked();
         merged.check_invariants()?;
         let seg = SealedSegment::new(Arc::new(merged), global_ids, Arc::new(HashSet::new()))?;
         inner.sealed = vec![Arc::new(seg)];

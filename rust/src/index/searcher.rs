@@ -3,54 +3,86 @@
 //! 1. **Partition selection** — score the query against the codebook
 //!    (PJRT artifact in the batch path, CPU scan in the single-query
 //!    path) and take the top-t partitions.
-//! 2. **ADC scan** — stream each probed partition's posting list,
-//!    deduplicate spilled candidates (§3.5), and score approximately as
-//!    `⟨q, c_p⟩ + LUT(residual code)`.
+//! 2. **ADC scan** — stream each probed partition's posting list through
+//!    the blockwise LUT16 kernel ([`crate::quant::lut16`]): scores for 32
+//!    candidates at a time land in a scratch arena, then a dedup +
+//!    threshold-pruned emit pass feeds survivors to the top-k heap. The
+//!    per-query LUT is u8-quantized (`score ≈ ⟨q, c_p⟩ + bias + scale·Σu8`);
+//!    an exact f32 fallback covers the rare unquantizable case.
 //! 3. **Rerank** — rescore the best `rerank_budget` candidates against
-//!    the int8 highest-bitrate representation and return the top k.
+//!    the int8 highest-bitrate representation ([`crate::linalg::dot_i8`])
+//!    and return the top k.
 //!
 //! Two searchers share this pipeline: [`Searcher`] over a single
 //! monolithic [`SoarIndex`] (the original read-only fast path), and
 //! [`SnapshotSearcher`] over a segmented [`IndexSnapshot`] — it scans the
 //! delta first, then sealed segments newest → oldest, filters tombstoned
-//! and shadowed rows, and merges the per-segment top-k by score (all
-//! segments share one codebook, so ADC and rerank scores are directly
-//! comparable).
+//! and shadowed rows (two bitmap tests per row: the segment's
+//! `shadow_bits` over local ids and the snapshot's `dead` map over global
+//! ids), and merges the per-segment top-k by score (all segments share one
+//! codebook, so ADC and rerank scores are directly comparable).
 
 use crate::config::SearchParams;
 use crate::coordinator::DedupSet;
 use crate::error::Result;
+use crate::index::ivf::PostingList;
 use crate::index::segment::IndexSnapshot;
 use crate::index::SoarIndex;
 use crate::linalg::topk::Scored;
-use crate::linalg::{dot, MatrixF32, TopK};
+use crate::linalg::{dot, dot_i8, MatrixF32, TopK};
+use crate::quant::{lut16, BlockedCodes, ProductQuantizer, QueryLut};
 use crate::runtime::Engine;
 use crate::util::parallel::par_map;
 
 /// Reusable per-thread scratch; avoids all hot-path allocation except the
-/// final result vector.
+/// final result vector. The LUT buffers and score arena are sized at
+/// construction, so steady-state queries never touch the allocator.
 #[derive(Debug)]
 pub struct SearchScratch {
-    lut: Vec<f32>,
+    lut: QueryLut,
     visited: DedupSet,
     q_scaled: Vec<f32>,
+    /// Blocked-scan score arena: one f32 per posting entry of the list
+    /// currently being scanned.
+    scores: Vec<f32>,
+    /// Force the exact f32 LUT path (recall-parity tests / debugging);
+    /// the quantized u8 kernel is the default.
+    pub force_f32_lut: bool,
 }
 
 impl SearchScratch {
     pub fn new(index: &SoarIndex) -> SearchScratch {
+        let max_list = index.ivf.postings.iter().map(|l| l.len()).max().unwrap_or(0);
         SearchScratch {
-            lut: Vec::new(),
+            lut: QueryLut::sized(index.pq.num_subspaces()),
             visited: DedupSet::new(index.n),
-            q_scaled: Vec::new(),
+            q_scaled: Vec::with_capacity(index.dim),
+            scores: Vec::with_capacity(max_list),
+            force_f32_lut: false,
         }
     }
 
     /// Scratch sized for a segmented snapshot (dedup over global ids).
     pub fn for_snapshot(snapshot: &IndexSnapshot) -> SearchScratch {
+        let base = snapshot.base();
+        let mut max_list = snapshot
+            .delta
+            .postings
+            .iter()
+            .map(|l| l.len())
+            .max()
+            .unwrap_or(0);
+        for seg in &snapshot.sealed {
+            for l in &seg.index.ivf.postings {
+                max_list = max_list.max(l.len());
+            }
+        }
         SearchScratch {
-            lut: Vec::new(),
+            lut: QueryLut::sized(base.pq.num_subspaces()),
             visited: DedupSet::new(snapshot.id_space()),
-            q_scaled: Vec::new(),
+            q_scaled: Vec::with_capacity(base.dim),
+            scores: Vec::with_capacity(max_list),
+            force_f32_lut: false,
         }
     }
 }
@@ -73,6 +105,62 @@ pub struct SearchStats {
     /// Segments (delta counts as one) actually scanned (snapshot path;
     /// the monolithic path leaves this 0).
     pub segments_scanned: usize,
+}
+
+/// Score every entry of one posting list into the `scores` arena: the
+/// blocked u8 kernel by default, the exact per-candidate f32 walk when
+/// quantization is off.
+fn score_list(
+    pq: &ProductQuantizer,
+    list: &PostingList,
+    blocked: &BlockedCodes,
+    lut: &QueryLut,
+    cscore: f32,
+    use_f32: bool,
+    scores: &mut Vec<f32>,
+) {
+    if use_f32 {
+        let cb = pq.code_bytes();
+        scores.resize(list.len(), 0.0);
+        for i in 0..list.len() {
+            scores[i] = cscore + pq.adc_score(&lut.f32_lut, list.code(i, cb));
+        }
+    } else {
+        lut16::score_all(blocked, lut, cscore, scores);
+    }
+}
+
+/// Shared batched-scan driver for both searchers. One scratch per worker
+/// chunk (not per query): `DedupSet::new` is an O(n) zeroed allocation,
+/// which at small batch sizes would dominate the scan itself (perf pass:
+/// −28% batch latency vs per-query scratch). Small batches run serially —
+/// thread spawn costs more than the work they'd parallelize.
+fn batched_search<MS, SO>(
+    nq: usize,
+    make_scratch: MS,
+    search_one: SO,
+) -> Vec<(Vec<Scored>, SearchStats)>
+where
+    MS: Fn() -> SearchScratch + Sync,
+    SO: Fn(usize, &mut SearchScratch) -> (Vec<Scored>, SearchStats) + Sync,
+{
+    if nq <= 8 {
+        let mut scratch = make_scratch();
+        return (0..nq).map(|qi| search_one(qi, &mut scratch)).collect();
+    }
+    let threads = crate::util::parallel::num_threads().min(nq);
+    let chunk = nq.div_ceil(threads);
+    par_map(threads, |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(nq);
+        let mut scratch = make_scratch();
+        (lo..hi)
+            .map(|qi| search_one(qi, &mut scratch))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Read-only searcher over an index; cheap to construct, `Sync`.
@@ -120,44 +208,11 @@ impl<'a> Searcher<'a> {
         let partitions = self
             .engine
             .centroid_topk(queries, &self.index.ivf.centroids, t)?;
-        // One scratch per worker chunk (not per query): DedupSet::new is an
-        // O(n) zeroed allocation, which at small batch sizes would dominate
-        // the scan itself (perf pass: −28% batch latency vs per-query
-        // scratch). Small batches run serially — thread spawn costs more
-        // than the work they'd parallelize.
-        let nq = queries.rows();
-        if nq <= 8 {
-            let mut scratch = SearchScratch::new(self.index);
-            return Ok((0..nq)
-                .map(|qi| {
-                    self.search_partitions(
-                        queries.row(qi),
-                        &partitions[qi],
-                        params,
-                        &mut scratch,
-                    )
-                })
-                .collect());
-        }
-        let threads = crate::util::parallel::num_threads().min(nq);
-        let chunk = nq.div_ceil(threads);
-        let chunk_results: Vec<Vec<(Vec<Scored>, SearchStats)>> =
-            par_map(threads, |t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(nq);
-                let mut scratch = SearchScratch::new(self.index);
-                (lo..hi)
-                    .map(|qi| {
-                        self.search_partitions(
-                            queries.row(qi),
-                            &partitions[qi],
-                            params,
-                            &mut scratch,
-                        )
-                    })
-                    .collect()
-            });
-        Ok(chunk_results.into_iter().flatten().collect())
+        Ok(batched_search(
+            queries.rows(),
+            || SearchScratch::new(self.index),
+            |qi, scratch| self.search_partitions(queries.row(qi), &partitions[qi], params, scratch),
+        ))
     }
 
     /// Stages 2+3 given an already-selected partition list.
@@ -169,27 +224,42 @@ impl<'a> Searcher<'a> {
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
         let index = self.index;
-        let code_bytes = index.pq.code_bytes();
         let mut stats = SearchStats::default();
 
-        index.pq.build_lut(q, &mut scratch.lut);
+        index.pq.build_query_lut(q, &mut scratch.lut);
+        let use_f32 = scratch.force_f32_lut || !scratch.lut.quantized;
         scratch.visited.ensure_capacity(index.n);
         scratch.visited.reset();
 
-        // Stage 2: ADC scan with dedup.
+        // Stage 2: blocked ADC scan → arena → dedup + threshold-pruned emit.
         let mut approx = TopK::new(params.rerank_budget.max(params.k));
         for &(p, cscore) in partitions.iter().take(params.top_t) {
             let list = &index.ivf.postings[p as usize];
             stats.partitions_probed += 1;
             stats.points_scanned += list.len();
+            if list.is_empty() {
+                continue;
+            }
+            score_list(
+                &index.pq,
+                list,
+                &index.blocked[p as usize],
+                &scratch.lut,
+                cscore,
+                use_f32,
+                &mut scratch.scores,
+            );
+            let mut thresh = approx.threshold();
             for (i, &id) in list.ids.iter().enumerate() {
                 if !scratch.visited.insert(id) {
                     stats.duplicates_skipped += 1;
                     continue;
                 }
-                let code = list.code(i, code_bytes);
-                let score = cscore + index.pq.adc_score(&scratch.lut, code);
-                approx.push(id, score);
+                let score = scratch.scores[i];
+                if score > thresh {
+                    approx.push(id, score);
+                    thresh = approx.threshold();
+                }
             }
         }
 
@@ -197,16 +267,13 @@ impl<'a> Searcher<'a> {
         let result = match &index.int8 {
             Some(q8) => {
                 scratch.q_scaled.clear();
-                scratch.q_scaled.extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
+                scratch
+                    .q_scaled
+                    .extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
                 let mut exact = TopK::new(params.k);
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    let rec = index.int8_record(cand.id);
-                    let mut acc = 0.0f32;
-                    for j in 0..rec.len() {
-                        acc += scratch.q_scaled[j] * rec[j] as f32;
-                    }
-                    exact.push(cand.id, acc);
+                    exact.push(cand.id, dot_i8(&scratch.q_scaled, index.int8_record(cand.id)));
                 }
                 exact.into_sorted()
             }
@@ -258,8 +325,8 @@ impl<'a> SnapshotSearcher<'a> {
     }
 
     /// Batched search: one engine call selects partitions for the whole
-    /// batch, then per-query scans run in parallel (mirrors
-    /// [`Searcher::search_batch`]).
+    /// batch, then per-query scans run in parallel (shares
+    /// [`Searcher::search_batch`]'s driver).
     pub fn search_batch(
         &self,
         queries: &MatrixF32,
@@ -268,39 +335,11 @@ impl<'a> SnapshotSearcher<'a> {
         let base = self.snapshot.base();
         let t = params.top_t.min(base.num_partitions());
         let partitions = self.engine.centroid_topk(queries, &base.ivf.centroids, t)?;
-        let nq = queries.rows();
-        if nq <= 8 {
-            let mut scratch = SearchScratch::for_snapshot(self.snapshot);
-            return Ok((0..nq)
-                .map(|qi| {
-                    self.search_partitions(
-                        queries.row(qi),
-                        &partitions[qi],
-                        params,
-                        &mut scratch,
-                    )
-                })
-                .collect());
-        }
-        let threads = crate::util::parallel::num_threads().min(nq);
-        let chunk = nq.div_ceil(threads);
-        let chunk_results: Vec<Vec<(Vec<Scored>, SearchStats)>> =
-            par_map(threads, |t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(nq);
-                let mut scratch = SearchScratch::for_snapshot(self.snapshot);
-                (lo..hi)
-                    .map(|qi| {
-                        self.search_partitions(
-                            queries.row(qi),
-                            &partitions[qi],
-                            params,
-                            &mut scratch,
-                        )
-                    })
-                    .collect()
-            });
-        Ok(chunk_results.into_iter().flatten().collect())
+        Ok(batched_search(
+            queries.rows(),
+            || SearchScratch::for_snapshot(self.snapshot),
+            |qi, scratch| self.search_partitions(queries.row(qi), &partitions[qi], params, scratch),
+        ))
     }
 
     /// Stages 2+3 across all segments, given selected partitions.
@@ -313,10 +352,10 @@ impl<'a> SnapshotSearcher<'a> {
     ) -> (Vec<Scored>, SearchStats) {
         let snap = self.snapshot;
         let base = snap.base();
-        let code_bytes = base.pq.code_bytes();
         let mut stats = SearchStats::default();
 
-        base.pq.build_lut(q, &mut scratch.lut);
+        base.pq.build_query_lut(q, &mut scratch.lut);
+        let use_f32 = scratch.force_f32_lut || !scratch.lut.quantized;
         scratch.visited.ensure_capacity(snap.id_space());
         scratch.visited.reset();
         if let Some(q8) = &base.int8 {
@@ -341,24 +380,36 @@ impl<'a> SnapshotSearcher<'a> {
             for &(p, cscore) in &probe {
                 let list = &delta.postings[p as usize];
                 stats.points_scanned += list.len();
+                if list.is_empty() {
+                    continue;
+                }
+                score_list(
+                    &base.pq,
+                    list,
+                    &delta.blocked[p as usize],
+                    &scratch.lut,
+                    cscore,
+                    use_f32,
+                    &mut scratch.scores,
+                );
+                let mut thresh = approx.threshold();
                 for (i, &gid) in list.ids.iter().enumerate() {
                     if !scratch.visited.insert(gid) {
                         stats.duplicates_skipped += 1;
                         continue;
                     }
-                    let score = cscore + base.pq.adc_score(&scratch.lut, list.code(i, code_bytes));
-                    approx.push(delta.slot_of[&gid] as u32, score);
+                    let score = scratch.scores[i];
+                    if score > thresh {
+                        approx.push(delta.slot_of[&gid] as u32, score);
+                        thresh = approx.threshold();
+                    }
                 }
             }
             if use_int8 {
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    let rec = delta.int8_record(cand.id as usize);
-                    let mut acc = 0.0f32;
-                    for j in 0..rec.len() {
-                        acc += scratch.q_scaled[j] * rec[j] as f32;
-                    }
-                    merged.push(delta.slot_ids[cand.id as usize], acc);
+                    let score = dot_i8(&scratch.q_scaled, delta.int8_record(cand.id as usize));
+                    merged.push(delta.slot_ids[cand.id as usize], score);
                 }
             } else {
                 for cand in approx.into_sorted().into_iter().take(params.k) {
@@ -381,33 +432,45 @@ impl<'a> SnapshotSearcher<'a> {
             for &(p, cscore) in &probe {
                 let list = &idx.ivf.postings[p as usize];
                 stats.points_scanned += list.len();
+                if list.is_empty() {
+                    continue;
+                }
+                score_list(
+                    &base.pq,
+                    list,
+                    &idx.blocked[p as usize],
+                    &scratch.lut,
+                    cscore,
+                    use_f32,
+                    &mut scratch.scores,
+                );
+                let mut thresh = approx.threshold();
                 for (i, &local) in list.ids.iter().enumerate() {
                     let gid = seg.global_ids[local as usize];
                     if !scratch.visited.insert(gid) {
                         stats.duplicates_skipped += 1;
                         continue;
                     }
+                    // One bit test per set (local shadow + global dead)
+                    // instead of three hash probes.
                     if filtered
-                        && (tombs.contains(&gid)
-                            || seg.shadow.contains(&gid)
-                            || delta.contains(gid))
+                        && (seg.shadow_bits.get(local as usize) || snap.dead.get(gid as usize))
                     {
                         stats.tombstones_skipped += 1;
                         continue;
                     }
-                    let score = cscore + base.pq.adc_score(&scratch.lut, list.code(i, code_bytes));
-                    approx.push(local, score);
+                    let score = scratch.scores[i];
+                    if score > thresh {
+                        approx.push(local, score);
+                        thresh = approx.threshold();
+                    }
                 }
             }
             if use_int8 {
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    let rec = idx.int8_record(cand.id);
-                    let mut acc = 0.0f32;
-                    for j in 0..rec.len() {
-                        acc += scratch.q_scaled[j] * rec[j] as f32;
-                    }
-                    merged.push(seg.global_ids[cand.id as usize], acc);
+                    let score = dot_i8(&scratch.q_scaled, idx.int8_record(cand.id));
+                    merged.push(seg.global_ids[cand.id as usize], score);
                 }
             } else {
                 for cand in approx.into_sorted().into_iter().take(params.k) {
@@ -549,6 +612,30 @@ mod tests {
             let ids_single: Vec<u32> = single.iter().map(|s| s.id).collect();
             let ids_batch: Vec<u32> = batch[qi].0.iter().map(|s| s.id).collect();
             assert_eq!(ids_single, ids_batch, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn quantized_and_f32_lut_agree_after_full_rerank() {
+        // With a full probe and a rerank budget above the corpus size, the
+        // candidate set is every point in both LUT modes, so the reranked
+        // results must be identical — LUT quantization only reorders the
+        // pre-rerank candidate stream.
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 800);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 10,
+            top_t: idx.num_partitions(),
+            rerank_budget: 2000,
+        };
+        let mut sq = SearchScratch::new(&idx);
+        let mut sf = SearchScratch::new(&idx);
+        sf.force_f32_lut = true;
+        for qi in 0..ds.num_queries() {
+            let (a, _) = searcher.search(ds.queries.row(qi), &params, &mut sq);
+            let (b, _) = searcher.search(ds.queries.row(qi), &params, &mut sf);
+            assert_eq!(a, b, "query {qi}");
         }
     }
 

@@ -31,6 +31,8 @@ use crate::config::IndexConfig;
 use crate::error::{Error, Result};
 use crate::index::ivf::PostingList;
 use crate::index::SoarIndex;
+use crate::quant::BlockedCodes;
+use crate::util::bitmap::Bitmap;
 
 /// An immutable sealed segment: a [`SoarIndex`] whose posting-list ids are
 /// segment-local, plus the mapping from local ids to global ids.
@@ -45,8 +47,25 @@ pub struct SealedSegment {
     /// Global ids present in strictly *newer* sealed segments — rows whose
     /// id is in here are stale and must be skipped during the scan.
     pub shadow: Arc<HashSet<u32>>,
+    /// `shadow` memory-indexed over *local* ids: bit `local` set iff
+    /// `shadow` contains `global_ids[local]`. The scan tests this bit
+    /// instead of hashing into the set.
+    pub shadow_bits: Bitmap,
     /// `max(global id) + 1` (0 when empty) — sizes the query dedup set.
     pub id_space: usize,
+}
+
+/// Bitmap over local ids marking rows whose global id is shadowed.
+fn shadow_bitmap(global_ids: &[u32], shadow: &HashSet<u32>) -> Bitmap {
+    let mut bits = Bitmap::new(global_ids.len());
+    if !shadow.is_empty() {
+        for (local, g) in global_ids.iter().enumerate() {
+            if shadow.contains(g) {
+                bits.set(local);
+            }
+        }
+    }
+    bits
 }
 
 impl SealedSegment {
@@ -74,11 +93,13 @@ impl SealedSegment {
             .map(|&g| g as usize + 1)
             .max()
             .unwrap_or(0);
+        let shadow_bits = shadow_bitmap(&global_ids, &shadow);
         Ok(SealedSegment {
             index,
             global_ids,
             id_set: Arc::new(id_set),
             shadow,
+            shadow_bits,
             id_space,
         })
     }
@@ -94,11 +115,13 @@ impl SealedSegment {
     /// Same segment with a replacement shadow set (used when a newer
     /// segment is sealed on top of this one).
     pub fn with_shadow(&self, shadow: Arc<HashSet<u32>>) -> SealedSegment {
+        let shadow_bits = shadow_bitmap(&self.global_ids, &shadow);
         SealedSegment {
             index: self.index.clone(),
             global_ids: self.global_ids.clone(),
             id_set: self.id_set.clone(),
             shadow,
+            shadow_bits,
             id_space: self.id_space,
         }
     }
@@ -131,6 +154,16 @@ impl SealedSegment {
         if self.id_set.len() != self.global_ids.len() {
             return Err(Error::Serialize("segment id set out of sync".into()));
         }
+        if self.shadow_bits.len() != self.global_ids.len()
+            || self.shadow_bits.count_ones()
+                != self
+                    .global_ids
+                    .iter()
+                    .filter(|&g| self.shadow.contains(g))
+                    .count()
+        {
+            return Err(Error::Serialize("segment shadow bitmap out of sync".into()));
+        }
         Ok(())
     }
 }
@@ -162,6 +195,9 @@ pub struct DeltaSegment {
     pub slot_of: HashMap<u32, usize>,
     /// `max(global id) + 1` over live rows (0 when empty).
     pub id_space: usize,
+    /// Blockwise LUT16 scan layout, one per partition — derived from
+    /// `postings` via [`DeltaSegment::rebuild_blocked`].
+    pub blocked: Vec<BlockedCodes>,
 }
 
 impl DeltaSegment {
@@ -177,7 +213,20 @@ impl DeltaSegment {
             assignments: Vec::new(),
             slot_of: HashMap::new(),
             id_space: 0,
+            blocked: vec![BlockedCodes::default(); num_partitions],
         }
+    }
+
+    /// (Re)derive the blocked LUT16 layout from the posting lists; `m` is
+    /// the base PQ's subspace count. Must run after the postings are final
+    /// (called by [`DeltaSegment::from_rows`] and the delta freeze in
+    /// [`crate::index::MutableIndex`]).
+    pub fn rebuild_blocked(&mut self, m: usize) {
+        self.blocked = self
+            .postings
+            .iter()
+            .map(|list| BlockedCodes::from_codes(&list.codes, list.len(), self.code_bytes, m))
+            .collect();
     }
 
     /// Build a frozen delta from `(global id, raw row, assignments)`
@@ -218,6 +267,7 @@ impl DeltaSegment {
             d.assignments.push(assignment.clone());
             d.id_space = d.id_space.max(*id as usize + 1);
         }
+        d.rebuild_blocked(base.pq.num_subspaces());
         Ok(d)
     }
 
@@ -265,6 +315,11 @@ pub struct IndexSnapshot {
     pub delta: Arc<DeltaSegment>,
     /// Deleted global ids, consulted while scanning sealed segments.
     pub tombstones: Arc<HashSet<u32>>,
+    /// `tombstones ∪ delta` memory-indexed over global ids: a sealed row
+    /// whose bit is set is stale (deleted, or superseded by a delta row).
+    /// Together with [`SealedSegment::shadow_bits`] this replaces the three
+    /// per-row hash probes of the scan filter with two bit tests.
+    pub dead: Bitmap,
     /// Monotonic publish counter (diagnostics / tests).
     pub epoch: u64,
     id_space: usize,
@@ -282,10 +337,22 @@ impl IndexSnapshot {
         for seg in &sealed {
             id_space = id_space.max(seg.id_space);
         }
+        let mut dead = Bitmap::new(id_space);
+        for &t in tombstones.iter() {
+            // A tombstone outside the id space can never match a scanned
+            // row; guard rather than panic on odd deserialized states.
+            if (t as usize) < id_space {
+                dead.set(t as usize);
+            }
+        }
+        for &id in &delta.slot_ids {
+            dead.set(id as usize);
+        }
         IndexSnapshot {
             sealed,
             delta,
             tombstones,
+            dead,
             epoch,
             id_space,
         }
@@ -403,6 +470,16 @@ impl IndexSnapshot {
                 d.total_postings(),
                 d.len() * per_point
             )));
+        }
+        if d.blocked.len() != d.postings.len() {
+            return Err(Error::Serialize(
+                "delta blocked layout partition count mismatch".into(),
+            ));
+        }
+        for (b, list) in d.blocked.iter().zip(&d.postings) {
+            if b.len() != list.len() {
+                return Err(Error::Serialize("delta blocked layout out of sync".into()));
+            }
         }
         for list in &d.postings {
             if list.codes.len() != list.ids.len() * cb {

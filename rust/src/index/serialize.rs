@@ -239,7 +239,7 @@ fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
         assignments.push(a);
     }
 
-    let index = SoarIndex {
+    let mut index = SoarIndex {
         config,
         n,
         dim,
@@ -248,7 +248,11 @@ fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
         int8,
         raw_int8,
         assignments,
+        blocked: Vec::new(),
     };
+    // The blocked LUT16 layout is not stored on disk (it is a pure
+    // function of the postings); re-derive it on every load.
+    index.rebuild_blocked();
     index.check_invariants()?;
     Ok(index)
 }

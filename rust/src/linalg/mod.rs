@@ -35,6 +35,29 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Mixed inner product ⟨q, rec⟩ with an int8 right-hand side — the rerank
+/// inner loop shared by both searchers. `q` is the query pre-multiplied by
+/// the per-dimension int8 scales, so the product is directly a score.
+#[inline]
+pub fn dot_i8(q: &[f32], rec: &[i8]) -> f32 {
+    debug_assert_eq!(q.len(), rec.len());
+    let n = q.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += q[j] * rec[j] as f32;
+        s1 += q[j + 1] * rec[j + 1] as f32;
+        s2 += q[j + 2] * rec[j + 2] as f32;
+        s3 += q[j + 3] * rec[j + 3] as f32;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += q[j] * rec[j] as f32;
+    }
+    s
+}
+
 /// Squared Euclidean distance ‖a − b‖².
 #[inline]
 pub fn squared_l2(a: &[f32], b: &[f32]) -> f32 {
@@ -190,6 +213,15 @@ mod tests {
         let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
         let b = vec![2.0f32; 13];
         assert_eq!(dot(&a, &b), 2.0 * (0..13).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn dot_i8_matches_widened_dot() {
+        let q: Vec<f32> = (0..13).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let rec: Vec<i8> = (0..13).map(|i| (i * 17 % 255) as u8 as i8).collect();
+        let widened: Vec<f32> = rec.iter().map(|&v| v as f32).collect();
+        assert!((dot_i8(&q, &rec) - dot(&q, &widened)).abs() < 1e-4);
+        assert_eq!(dot_i8(&[], &[]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,493 @@
+//! Blockwise LUT16 ADC scan: SIMD-friendly posting layout + quantized
+//! lookup kernel.
+//!
+//! The row-major packed codes in [`crate::index::PostingList`] force the
+//! scalar ADC scan ([`super::ProductQuantizer::adc_score`]) through two
+//! dependent loads per byte — one for the code, one for the f32 LUT entry —
+//! which caps throughput far below memory bandwidth. Production PQ systems
+//! (ScaNN's LUT16 being the canonical example) fix this with two changes
+//! implemented here:
+//!
+//! 1. **Blocked transposed codes** ([`BlockedCodes`]): posting-list codes
+//!    are regrouped into blocks of [`BLOCK`] = 32 candidates. Within a
+//!    block, each subspace owns one 16-byte *nibble plane*: byte `j` holds
+//!    candidate `j`'s 4-bit code in its low nibble and candidate `16+j`'s
+//!    in its high nibble. A 16-byte load therefore fetches one subspace of
+//!    all 32 candidates.
+//! 2. **Quantized LUT** ([`QueryLut`]): the per-query f32 LUT is affinely
+//!    quantized to u8 (`value ≈ bias_sub + scale · u8`, one shared `scale`,
+//!    per-subspace biases folded into one `bias`). A 16-entry u8 LUT fits
+//!    a SIMD register, so `pshufb` performs 16 table lookups per
+//!    instruction, and per-candidate sums accumulate in u16 lanes.
+//!
+//! Kernels: an AVX2 path (two subspaces per iteration), an SSSE3 path, and
+//! a portable scalar-blocked path. All three produce **bit-identical**
+//! scores: they compute the same exact integer sums (u16 accumulation
+//! cannot overflow — [`QueryLut`] refuses to quantize when `m > 257`) and
+//! share one float reconstruction expression. Dispatch is by runtime
+//! feature detection, cached process-wide.
+
+use crate::quant::pq::PQ_CENTERS;
+
+/// Candidates per block (two 16-lane SIMD halves).
+pub const BLOCK: usize = 32;
+
+/// Bytes per nibble plane (= [`PQ_CENTERS`]).
+const PLANE: usize = PQ_CENTERS;
+
+// ---------------------------------------------------------------------
+// Per-query LUT with u8 quantization
+// ---------------------------------------------------------------------
+
+/// Per-query lookup table: the exact f32 LUT plus its u8 quantization.
+///
+/// Built by [`super::ProductQuantizer::build_query_lut`]. All buffers are
+/// reused across queries — steady-state rebuilds never touch the
+/// allocator (the vectors are sized once, at scratch construction).
+#[derive(Clone, Debug, Default)]
+pub struct QueryLut {
+    /// Exact LUT, `m * 16` entries: `f32_lut[sub * 16 + c] = ⟨q_sub, cb[c]⟩`.
+    pub f32_lut: Vec<f32>,
+    /// Quantized planes, `m * 16` bytes; plane `sub` is bytes
+    /// `sub*16 .. sub*16+16`.
+    pub u8_lut: Vec<u8>,
+    /// Shared dequantization step: `value ≈ bias + scale · Σ u8`.
+    pub scale: f32,
+    /// Sum of per-subspace minima.
+    pub bias: f32,
+    /// False when quantization is unavailable (u16 accumulators would
+    /// overflow at `m > 257`, or the LUT is non-finite); scoring then falls
+    /// back to the exact f32 path.
+    pub quantized: bool,
+}
+
+impl QueryLut {
+    pub fn new() -> QueryLut {
+        QueryLut::default()
+    }
+
+    /// A LUT with buffers pre-sized for `m` subspaces.
+    pub fn sized(m: usize) -> QueryLut {
+        QueryLut {
+            f32_lut: vec![0.0; m * PQ_CENTERS],
+            u8_lut: vec![0; m * PQ_CENTERS],
+            scale: 0.0,
+            bias: 0.0,
+            quantized: false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked code layout
+// ---------------------------------------------------------------------
+
+/// Posting-list PQ codes transposed into SIMD-friendly 32-candidate
+/// blocks of 16-byte nibble planes (one plane per subspace; ragged tail
+/// zero-padded). Derived from the row-major codes at build/seal/load time
+/// and never serialized.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BlockedCodes {
+    m: usize,
+    len: usize,
+    /// `num_blocks * m * 16` bytes.
+    data: Vec<u8>,
+}
+
+impl BlockedCodes {
+    /// Transpose `len` row-major packed codes (`code_bytes` each) into the
+    /// blocked layout for `m` subspaces.
+    pub fn from_codes(codes: &[u8], len: usize, code_bytes: usize, m: usize) -> BlockedCodes {
+        debug_assert_eq!(codes.len(), len * code_bytes);
+        debug_assert!(len == 0 || m.div_ceil(2) == code_bytes);
+        let num_blocks = len.div_ceil(BLOCK);
+        let mut data = vec![0u8; num_blocks * m * PLANE];
+        for i in 0..len {
+            let row = &codes[i * code_bytes..(i + 1) * code_bytes];
+            let base = (i / BLOCK) * m * PLANE + (i % BLOCK) % PLANE;
+            let high_half = (i % BLOCK) >= PLANE;
+            for sub in 0..m {
+                let nib = if sub % 2 == 0 {
+                    row[sub / 2] & 0x0f
+                } else {
+                    row[sub / 2] >> 4
+                };
+                data[base + sub * PLANE] |= if high_half { nib << 4 } else { nib };
+            }
+        }
+        BlockedCodes { m, len, data }
+    }
+
+    /// Candidates stored (excluding padding).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Subspace count the layout was built for.
+    pub fn num_subspaces(&self) -> usize {
+        self.m
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.len.div_ceil(BLOCK)
+    }
+
+    /// The `m * 16` plane bytes of block `b`.
+    #[inline]
+    pub fn block_planes(&self, b: usize) -> &[u8] {
+        &self.data[b * self.m * PLANE..(b + 1) * self.m * PLANE]
+    }
+
+    /// Heap bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------
+
+/// Which accumulation kernel scores a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Scalar-blocked fallback (bit-identical to the SIMD paths).
+    Portable,
+    /// 128-bit `pshufb` path.
+    Ssse3,
+    /// 256-bit path, two subspaces per iteration.
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Portable => "portable",
+            KernelKind::Ssse3 => "ssse3",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    /// Can this CPU execute the kernel?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelKind::Portable => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Ssse3 => std::arch::is_x86_feature_detected!("ssse3"),
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+/// Best kernel supported by this CPU (cached after the first call).
+pub fn detect_kernel() -> KernelKind {
+    static CACHE: std::sync::OnceLock<KernelKind> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return KernelKind::Avx2;
+            }
+            if std::arch::is_x86_feature_detected!("ssse3") {
+                return KernelKind::Ssse3;
+            }
+        }
+        KernelKind::Portable
+    })
+}
+
+/// Every kernel runnable on this CPU (for parity tests and benches).
+pub fn available_kernels() -> Vec<KernelKind> {
+    let mut kinds = vec![KernelKind::Portable];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("ssse3") {
+            kinds.push(KernelKind::Ssse3);
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            kinds.push(KernelKind::Avx2);
+        }
+    }
+    kinds
+}
+
+/// Scalar-blocked accumulation: `acc[j] = Σ_sub lut[sub][code(j, sub)]`.
+fn accumulate_block_portable(planes: &[u8], lut: &[u8], m: usize, acc: &mut [u16; BLOCK]) {
+    acc.fill(0);
+    for sub in 0..m {
+        let plane = &planes[sub * PLANE..(sub + 1) * PLANE];
+        let table = &lut[sub * PLANE..(sub + 1) * PLANE];
+        for j in 0..PLANE {
+            let b = plane[j];
+            acc[j] += table[(b & 0x0f) as usize] as u16;
+            acc[j + PLANE] += table[(b >> 4) as usize] as u16;
+        }
+    }
+}
+
+/// # Safety
+/// Requires SSSE3; `planes` and `lut` must hold at least `m * 16` bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn accumulate_block_ssse3(planes: &[u8], lut: &[u8], m: usize, acc: &mut [u16; BLOCK]) {
+    use core::arch::x86_64::*;
+    let zero = _mm_setzero_si128();
+    let low_mask = _mm_set1_epi8(0x0f);
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    for sub in 0..m {
+        let table = _mm_loadu_si128(lut.as_ptr().add(sub * PLANE) as *const __m128i);
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, low_mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), low_mask);
+        let vlo = _mm_shuffle_epi8(table, lo);
+        let vhi = _mm_shuffle_epi8(table, hi);
+        a0 = _mm_add_epi16(a0, _mm_unpacklo_epi8(vlo, zero));
+        a1 = _mm_add_epi16(a1, _mm_unpackhi_epi8(vlo, zero));
+        a2 = _mm_add_epi16(a2, _mm_unpacklo_epi8(vhi, zero));
+        a3 = _mm_add_epi16(a3, _mm_unpackhi_epi8(vhi, zero));
+    }
+    let out = acc.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out, a0);
+    _mm_storeu_si128(out.add(1), a1);
+    _mm_storeu_si128(out.add(2), a2);
+    _mm_storeu_si128(out.add(3), a3);
+}
+
+/// # Safety
+/// Requires AVX2; `planes` and `lut` must hold at least `m * 16` bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_block_avx2(planes: &[u8], lut: &[u8], m: usize, acc: &mut [u16; BLOCK]) {
+    use core::arch::x86_64::*;
+    let zero = _mm256_setzero_si256();
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    // Two subspaces per iteration: lane 0 accumulates the even subspace,
+    // lane 1 the odd one; the lanes are folded together afterwards.
+    for p in 0..m / 2 {
+        let table = _mm256_loadu_si256(lut.as_ptr().add(p * 2 * PLANE) as *const __m256i);
+        let plane = _mm256_loadu_si256(planes.as_ptr().add(p * 2 * PLANE) as *const __m256i);
+        let lo = _mm256_and_si256(plane, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(plane, 4), low_mask);
+        let vlo = _mm256_shuffle_epi8(table, lo);
+        let vhi = _mm256_shuffle_epi8(table, hi);
+        a0 = _mm256_add_epi16(a0, _mm256_unpacklo_epi8(vlo, zero));
+        a1 = _mm256_add_epi16(a1, _mm256_unpackhi_epi8(vlo, zero));
+        a2 = _mm256_add_epi16(a2, _mm256_unpacklo_epi8(vhi, zero));
+        a3 = _mm256_add_epi16(a3, _mm256_unpackhi_epi8(vhi, zero));
+    }
+    let mut s0 = _mm_add_epi16(_mm256_castsi256_si128(a0), _mm256_extracti128_si256(a0, 1));
+    let mut s1 = _mm_add_epi16(_mm256_castsi256_si128(a1), _mm256_extracti128_si256(a1, 1));
+    let mut s2 = _mm_add_epi16(_mm256_castsi256_si128(a2), _mm256_extracti128_si256(a2, 1));
+    let mut s3 = _mm_add_epi16(_mm256_castsi256_si128(a3), _mm256_extracti128_si256(a3, 1));
+    if m % 2 == 1 {
+        let sub = m - 1;
+        let zero128 = _mm_setzero_si128();
+        let mask128 = _mm_set1_epi8(0x0f);
+        let table = _mm_loadu_si128(lut.as_ptr().add(sub * PLANE) as *const __m128i);
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, mask128);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), mask128);
+        let vlo = _mm_shuffle_epi8(table, lo);
+        let vhi = _mm_shuffle_epi8(table, hi);
+        s0 = _mm_add_epi16(s0, _mm_unpacklo_epi8(vlo, zero128));
+        s1 = _mm_add_epi16(s1, _mm_unpackhi_epi8(vlo, zero128));
+        s2 = _mm_add_epi16(s2, _mm_unpacklo_epi8(vhi, zero128));
+        s3 = _mm_add_epi16(s3, _mm_unpackhi_epi8(vhi, zero128));
+    }
+    let out = acc.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out, s0);
+    _mm_storeu_si128(out.add(1), s1);
+    _mm_storeu_si128(out.add(2), s2);
+    _mm_storeu_si128(out.add(3), s3);
+}
+
+#[inline]
+fn accumulate_block(
+    kind: KernelKind,
+    planes: &[u8],
+    lut: &[u8],
+    m: usize,
+    acc: &mut [u16; BLOCK],
+) {
+    debug_assert!(planes.len() >= m * PLANE && lut.len() >= m * PLANE);
+    match kind {
+        KernelKind::Portable => accumulate_block_portable(planes, lut, m, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: score_all_with asserts `kind.supported()` (runtime
+        // feature detection) and the slice bounds before dispatching here.
+        KernelKind::Ssse3 => unsafe { accumulate_block_ssse3(planes, lut, m, acc) },
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => unsafe { accumulate_block_avx2(planes, lut, m, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => accumulate_block_portable(planes, lut, m, acc),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-list scoring
+// ---------------------------------------------------------------------
+
+/// Score every candidate of a blocked posting list against a quantized
+/// LUT, writing `cscore + bias + scale · Σ u8` per candidate into `out`
+/// (resized to `blocked.len()`; the Vec is an arena — steady-state calls
+/// never reallocate). Uses the best kernel for this CPU.
+pub fn score_all(blocked: &BlockedCodes, lut: &QueryLut, cscore: f32, out: &mut Vec<f32>) {
+    score_all_with(detect_kernel(), blocked, lut, cscore, out);
+}
+
+/// [`score_all`] with an explicit kernel (parity tests and benches).
+pub fn score_all_with(
+    kind: KernelKind,
+    blocked: &BlockedCodes,
+    lut: &QueryLut,
+    cscore: f32,
+    out: &mut Vec<f32>,
+) {
+    assert!(lut.quantized, "score_all requires a quantized LUT");
+    // Keep the unsafe SIMD entry points unreachable with an unsupported
+    // kind — executing them on a CPU without the feature is UB.
+    assert!(kind.supported(), "kernel {} unsupported on this CPU", kind.name());
+    out.resize(blocked.len, 0.0);
+    if blocked.len == 0 {
+        return;
+    }
+    let m = blocked.m;
+    assert!(lut.u8_lut.len() >= m * PLANE, "LUT/{m}-subspace mismatch");
+    // The quantization guard in build_query_lut keeps m ≤ 257; enforce it
+    // here too so hand-built LUTs cannot overflow the u16 accumulators.
+    assert!(m * (u8::MAX as usize) <= u16::MAX as usize);
+    let mut acc = [0u16; BLOCK];
+    for b in 0..blocked.num_blocks() {
+        accumulate_block(kind, blocked.block_planes(b), &lut.u8_lut, m, &mut acc);
+        let base = b * BLOCK;
+        let lanes = BLOCK.min(blocked.len - base);
+        // One canonical reconstruction expression — every kernel (and the
+        // scalar reference `adc_score_quantized`) must match it bit-for-bit.
+        for j in 0..lanes {
+            out[base + j] = cscore + (lut.bias + lut.scale * acc[j] as f32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn random_codes(rng: &mut Rng, len: usize, code_bytes: usize) -> Vec<u8> {
+        (0..len * code_bytes)
+            .map(|_| (rng.next_u32() & 0xff) as u8)
+            .collect()
+    }
+
+    fn random_lut(rng: &mut Rng, m: usize) -> QueryLut {
+        QueryLut {
+            f32_lut: Vec::new(),
+            u8_lut: (0..m * PLANE)
+                .map(|_| (rng.next_u32() & 0xff) as u8)
+                .collect(),
+            scale: 0.01 + rng.next_f32() * 0.05,
+            bias: rng.next_f32() - 0.5,
+            quantized: true,
+        }
+    }
+
+    fn nibble(codes: &[u8], code_bytes: usize, i: usize, sub: usize) -> u8 {
+        let b = codes[i * code_bytes + sub / 2];
+        if sub % 2 == 0 {
+            b & 0x0f
+        } else {
+            b >> 4
+        }
+    }
+
+    #[test]
+    fn blocked_layout_round_trips_nibbles() {
+        let mut rng = Rng::new(1);
+        for &(m, len) in &[(1usize, 1usize), (3, 17), (8, 32), (5, 33), (32, 100)] {
+            let cb = m.div_ceil(2);
+            let codes = random_codes(&mut rng, len, cb);
+            let blocked = BlockedCodes::from_codes(&codes, len, cb, m);
+            assert_eq!(blocked.len(), len);
+            assert_eq!(blocked.num_blocks(), len.div_ceil(BLOCK));
+            for i in 0..len {
+                let planes = blocked.block_planes(i / BLOCK);
+                let lane = i % BLOCK;
+                for sub in 0..m {
+                    let byte = planes[sub * PLANE + lane % PLANE];
+                    let got = if lane < PLANE { byte & 0x0f } else { byte >> 4 };
+                    assert_eq!(got, nibble(&codes, cb, i, sub), "i={i} sub={sub}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_agree_bitwise() {
+        let mut rng = Rng::new(2);
+        for &(m, len) in &[(1usize, 5usize), (7, 64), (16, 95), (33, 200)] {
+            let cb = m.div_ceil(2);
+            let codes = random_codes(&mut rng, len, cb);
+            let lut = random_lut(&mut rng, m);
+            let blocked = BlockedCodes::from_codes(&codes, len, cb, m);
+            let mut reference = Vec::new();
+            score_all_with(KernelKind::Portable, &blocked, &lut, 0.25, &mut reference);
+            // Scalar recomputation from the row-major codes.
+            for i in 0..len {
+                let mut total = 0u32;
+                for sub in 0..m {
+                    let nib = nibble(&codes, cb, i, sub) as usize;
+                    total += lut.u8_lut[sub * PLANE + nib] as u32;
+                }
+                let want = 0.25 + (lut.bias + lut.scale * total as f32);
+                assert_eq!(want.to_bits(), reference[i].to_bits(), "m={m} i={i}");
+            }
+            for kind in available_kernels() {
+                let mut out = Vec::new();
+                score_all_with(kind, &blocked, &lut, 0.25, &mut out);
+                assert_eq!(out.len(), reference.len());
+                for i in 0..len {
+                    assert_eq!(
+                        reference[i].to_bits(),
+                        out[i].to_bits(),
+                        "kernel {} m={m} i={i}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_list_scores_nothing() {
+        let blocked = BlockedCodes::from_codes(&[], 0, 4, 8);
+        let mut lut = QueryLut::sized(8);
+        lut.quantized = true;
+        let mut out = vec![1.0f32; 3];
+        score_all(&blocked, &lut, 0.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "quantized")]
+    fn unquantized_lut_rejected() {
+        let blocked = BlockedCodes::from_codes(&[0u8; 4], 1, 4, 8);
+        let lut = QueryLut::sized(8);
+        let mut out = Vec::new();
+        score_all(&blocked, &lut, 0.0, &mut out);
+    }
+}

@@ -3,15 +3,18 @@
 //! These are the building blocks the paper's index stack assumes (§2.2,
 //! §3.5, Appendix A.4): a VQ codebook trained by k-means (optionally with
 //! ScaNN's anisotropic loss), PQ codes over the partitioning residuals for
-//! the in-partition approximate scoring stage, and an int8 highest-bitrate
-//! representation for the final rerank.
+//! the in-partition approximate scoring stage, an int8 highest-bitrate
+//! representation for the final rerank, and the blockwise LUT16 layout +
+//! kernels ([`lut16`]) that make the ADC scan SIMD-friendly.
 
 pub mod anisotropic;
 pub mod int8;
 pub mod kmeans;
+pub mod lut16;
 pub mod pq;
 
 pub use anisotropic::AnisotropicWeights;
 pub use int8::Int8Quantizer;
 pub use kmeans::{KMeans, KMeansConfig};
+pub use lut16::{BlockedCodes, QueryLut};
 pub use pq::{PqCode, PqConfig, ProductQuantizer};

@@ -13,6 +13,7 @@
 use crate::error::{Error, Result};
 use crate::linalg::{dot, MatrixF32};
 use crate::quant::kmeans::{KMeans, KMeansConfig};
+use crate::quant::lut16::QueryLut;
 use crate::util::parallel::par_map;
 
 /// Number of centers per subspace (fixed: 4-bit codes).
@@ -214,19 +215,87 @@ impl ProductQuantizer {
 
     /// Build the per-query inner-product LUT: `lut[sub * 16 + c] =
     /// ⟨q_sub, codebook[sub][c]⟩`. ADC then scores a candidate residual as
-    /// the sum of `m` lookups.
+    /// the sum of `m` lookups. The Vec is resized in place, so a reused
+    /// scratch buffer settles at its final capacity after the first query.
     pub fn build_lut(&self, q: &[f32], lut: &mut Vec<f32>) {
         debug_assert_eq!(q.len(), self.dim);
-        lut.clear();
-        lut.reserve(self.m * PQ_CENTERS);
+        lut.resize(self.m * PQ_CENTERS, 0.0);
+        self.fill_f32_lut(q, lut);
+    }
+
+    fn fill_f32_lut(&self, q: &[f32], lut: &mut [f32]) {
         for sub in 0..self.m {
             let (lo, hi) = self.sub_range(sub);
             let qs = &q[lo..hi];
             let cb = &self.codebooks[sub];
             for c in 0..PQ_CENTERS {
-                lut.push(dot(qs, cb.row(c)));
+                lut[sub * PQ_CENTERS + c] = dot(qs, cb.row(c));
             }
         }
+    }
+
+    /// Build the full per-query LUT — exact f32 entries plus the u8
+    /// quantization the blocked LUT16 kernel consumes (`value ≈ bias_sub +
+    /// scale · u8` with one shared `scale`; per-subspace biases fold into
+    /// `lut.bias`). All buffers are reused in place; a scratch-held
+    /// [`QueryLut`] sized via [`QueryLut::sized`] never reallocates.
+    ///
+    /// Quantization is skipped (`lut.quantized = false`) when u16 block
+    /// accumulators could overflow (`m > 257`) or the LUT is non-finite;
+    /// callers then score with `lut.f32_lut` and [`Self::adc_score`].
+    pub fn build_query_lut(&self, q: &[f32], lut: &mut QueryLut) {
+        debug_assert_eq!(q.len(), self.dim);
+        let total = self.m * PQ_CENTERS;
+        lut.f32_lut.resize(total, 0.0);
+        lut.u8_lut.resize(total, 0);
+        self.fill_f32_lut(q, &mut lut.f32_lut);
+
+        let mut bias = 0.0f32;
+        let mut span = 0.0f32;
+        for sub in 0..self.m {
+            let plane = &lut.f32_lut[sub * PQ_CENTERS..(sub + 1) * PQ_CENTERS];
+            let mn = plane.iter().copied().fold(f32::INFINITY, f32::min);
+            let mx = plane.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            bias += mn;
+            span = span.max(mx - mn);
+        }
+        lut.bias = bias;
+        lut.quantized = self.m * (u8::MAX as usize) <= u16::MAX as usize
+            && bias.is_finite()
+            && span.is_finite();
+        if !lut.quantized {
+            lut.scale = 0.0;
+            return;
+        }
+        if span <= 0.0 {
+            // Degenerate (constant) LUT: every score is exactly `bias`.
+            lut.scale = 0.0;
+            lut.u8_lut.fill(0);
+            return;
+        }
+        lut.scale = span / 255.0;
+        let inv = 255.0 / span;
+        for sub in 0..self.m {
+            let plane = &lut.f32_lut[sub * PQ_CENTERS..(sub + 1) * PQ_CENTERS];
+            let mn = plane.iter().copied().fold(f32::INFINITY, f32::min);
+            for c in 0..PQ_CENTERS {
+                lut.u8_lut[sub * PQ_CENTERS + c] =
+                    ((plane[c] - mn) * inv).round().clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+
+    /// Scalar ADC score of one packed code against the *quantized* LUT —
+    /// the reference the blocked kernels must match bit-for-bit.
+    pub fn adc_score_quantized(&self, lut: &QueryLut, code_bytes: &[u8]) -> f32 {
+        debug_assert!(lut.quantized);
+        let mut total = 0u32;
+        for sub in 0..self.m {
+            let b = code_bytes[sub / 2];
+            let nib = if sub % 2 == 0 { b & 0x0f } else { b >> 4 };
+            total += lut.u8_lut[sub * PQ_CENTERS + nib as usize] as u32;
+        }
+        lut.bias + lut.scale * total as f32
     }
 
     /// ADC score of one packed code against a prebuilt LUT.
@@ -344,6 +413,43 @@ mod tests {
         pq.build_lut(&q, &mut lut);
         let adc = pq.adc_score(&lut, &code.0);
         assert!((adc - dot(&q, &pq.decode(&code))).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantized_lut_tracks_f32_lut() {
+        let data = random_data(400, 16, 8);
+        let pq = ProductQuantizer::train(&data, &PqConfig::default()).unwrap();
+        let mut rng = Rng::new(9);
+        let mut q = vec![0.0f32; 16];
+        let mut lut = QueryLut::sized(pq.num_subspaces());
+        for _ in 0..5 {
+            rng.fill_gaussian(&mut q);
+            pq.build_query_lut(&q, &mut lut);
+            assert!(lut.quantized);
+            assert_eq!(lut.f32_lut.len(), pq.num_subspaces() * PQ_CENTERS);
+            // Per-subspace rounding error is ≤ scale/2, so the total ADC
+            // error is bounded by m·scale/2.
+            let bound = pq.num_subspaces() as f32 * lut.scale * 0.5 + 1e-3;
+            for i in 0..40 {
+                let code = pq.encode(data.row(i));
+                let exact = pq.adc_score(&lut.f32_lut, &code.0);
+                let quant = pq.adc_score_quantized(&lut, &code.0);
+                assert!((exact - quant).abs() <= bound, "{exact} vs {quant} (±{bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_lut_is_exact() {
+        let data = random_data(200, 8, 10);
+        let pq = ProductQuantizer::train(&data, &PqConfig::default()).unwrap();
+        let mut lut = QueryLut::new();
+        pq.build_query_lut(&[0.0; 8], &mut lut); // zero query → constant-0 LUT
+        assert!(lut.quantized);
+        assert_eq!(lut.scale, 0.0);
+        let code = pq.encode(data.row(0));
+        assert_eq!(pq.adc_score_quantized(&lut, &code.0), lut.bias);
+        assert_eq!(pq.adc_score(&lut.f32_lut, &code.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Dense bitset over a contiguous id range.
+//!
+//! The snapshot scan path tests every scanned row against the tombstone,
+//! shadow, and delta-membership sets; hashing three `HashSet`s per row
+//! dominates the filter cost once corpora get large. A `Bitmap` turns each
+//! probe into one indexed load + mask (see
+//! [`crate::index::IndexSnapshot::dead`] and
+//! [`crate::index::SealedSegment::shadow_bits`]).
+
+/// Fixed-capacity bitset over ids `0..len`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    /// All-zero bitmap covering ids `0..len`.
+    pub fn new(len: usize) -> Bitmap {
+        Bitmap {
+            words: vec![0u64; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Number of ids covered.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`. Panics when `i >= len` in debug builds.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len, "bit {i} out of range {}", self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Test bit `i`. Panics when `i >= len` in debug builds.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len, "bit {i} out of range {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Heap bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut b = Bitmap::new(130);
+        assert_eq!(b.len(), 130);
+        assert!(!b.is_empty());
+        for i in [0usize, 63, 64, 65, 129] {
+            assert!(!b.get(i));
+            b.set(i);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count_ones(), 5);
+        b.set(64); // idempotent
+        assert_eq!(b.count_ones(), 5);
+        assert_eq!(b.memory_bytes(), 3 * 8);
+    }
+
+    #[test]
+    fn empty_bitmap() {
+        let b = Bitmap::new(0);
+        assert!(b.is_empty());
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn out_of_range_panics() {
+        let b = Bitmap::new(10);
+        b.get(10);
+    }
+}

@@ -7,6 +7,7 @@
 //! * [`json`]     — minimal JSON parser/emitter (serde_json stand-in) for
 //!                  the artifact manifest, configs, and experiment reports,
 //! * [`cli`]      — flag parser for the `soar` binary (clap stand-in),
+//! * [`bitmap`]   — dense bitset backing the snapshot scan filters,
 //! * [`bench`]    — measurement harness with warmup + robust statistics
 //!                  (criterion stand-in) used by `benches/`,
 //! * [`prop`]     — property-testing driver with seeded case generation
@@ -14,6 +15,7 @@
 //! * [`tempdir`]  — self-deleting temp directories for tests.
 
 pub mod bench;
+pub mod bitmap;
 pub mod cli;
 pub mod json;
 pub mod parallel;

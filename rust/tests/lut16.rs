@@ -1,0 +1,174 @@
+//! Parity tests for the blockwise LUT16 ADC scan: every kernel must score
+//! bit-identically to the scalar reference, and the u8 LUT quantization
+//! must cost essentially no recall.
+
+use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::quant::lut16::{self, KernelKind, BLOCK};
+use soar_ann::quant::{BlockedCodes, KMeansConfig, QueryLut};
+use soar_ann::runtime::Engine;
+use soar_ann::util::prop::{check, Gen};
+
+fn nibble(codes: &[u8], code_bytes: usize, i: usize, sub: usize) -> u8 {
+    let b = codes[i * code_bytes + sub / 2];
+    if sub % 2 == 0 {
+        b & 0x0f
+    } else {
+        b >> 4
+    }
+}
+
+/// Blocked kernels (portable and every SIMD path this CPU supports) must
+/// return scores bit-identical to a scalar walk of the same quantized LUT,
+/// across random subspace counts and list lengths including ragged tails.
+#[test]
+fn prop_blocked_kernels_match_scalar_reference() {
+    check("blocked LUT16 == scalar ADC", 80, |g: &mut Gen| {
+        let m = g.usize_in(1..48);
+        let code_bytes = m.div_ceil(2);
+        // Cover empty lists, sub-block lists, exact multiples of the block
+        // size, and ragged tails.
+        let len = match g.usize_in(0..4) {
+            0 => g.usize_in(0..BLOCK),
+            1 => BLOCK * g.usize_in(1..4),
+            _ => g.usize_in(1..200),
+        };
+        let codes: Vec<u8> = (0..len * code_bytes)
+            .map(|_| g.usize_in(0..256) as u8)
+            .collect();
+        let lut = QueryLut {
+            f32_lut: Vec::new(),
+            u8_lut: (0..m * 16).map(|_| g.usize_in(0..256) as u8).collect(),
+            scale: g.f32_in(0.001, 0.1),
+            bias: g.f32_in(-1.0, 1.0),
+            quantized: true,
+        };
+        let cscore = g.f32_in(-1.0, 1.0);
+        let blocked = BlockedCodes::from_codes(&codes, len, code_bytes, m);
+        assert_eq!(blocked.len(), len);
+
+        let mut portable = Vec::new();
+        lut16::score_all_with(KernelKind::Portable, &blocked, &lut, cscore, &mut portable);
+        assert_eq!(portable.len(), len);
+        for i in 0..len {
+            let mut total = 0u32;
+            for sub in 0..m {
+                let nib = nibble(&codes, code_bytes, i, sub) as usize;
+                total += lut.u8_lut[sub * 16 + nib] as u32;
+            }
+            let want = cscore + (lut.bias + lut.scale * total as f32);
+            assert_eq!(
+                want.to_bits(),
+                portable[i].to_bits(),
+                "portable m={m} len={len} i={i}: {want} vs {}",
+                portable[i]
+            );
+        }
+        for kind in lut16::available_kernels() {
+            let mut out = Vec::new();
+            lut16::score_all_with(kind, &blocked, &lut, cscore, &mut out);
+            assert_eq!(out.len(), portable.len());
+            for i in 0..len {
+                assert_eq!(
+                    portable[i].to_bits(),
+                    out[i].to_bits(),
+                    "kernel {} m={m} len={len} i={i}",
+                    kind.name()
+                );
+            }
+        }
+    });
+}
+
+/// The dispatched kernel (whatever this CPU selects) agrees with the
+/// quantized scalar reference exposed by the product quantizer itself,
+/// on real codes from a trained PQ.
+#[test]
+fn dispatched_kernel_matches_pq_reference() {
+    use soar_ann::linalg::{MatrixF32, Rng};
+    use soar_ann::quant::{PqConfig, ProductQuantizer};
+    let mut rng = Rng::new(21);
+    for dim in [7usize, 12, 16] {
+        let mut data = MatrixF32::zeros(300, dim);
+        for i in 0..300 {
+            rng.fill_gaussian(data.row_mut(i));
+        }
+        let pq = ProductQuantizer::train(
+            &data,
+            &PqConfig {
+                dims_per_subspace: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let cb = pq.code_bytes();
+        let mut codes = Vec::new();
+        for i in 0..150 {
+            codes.extend(pq.encode(data.row(i)).0);
+        }
+        let blocked = BlockedCodes::from_codes(&codes, 150, cb, pq.num_subspaces());
+        let mut q = vec![0.0f32; dim];
+        rng.fill_gaussian(&mut q);
+        let mut lut = QueryLut::new();
+        pq.build_query_lut(&q, &mut lut);
+        assert!(lut.quantized);
+        let mut out = Vec::new();
+        lut16::score_all(&blocked, &lut, 0.5, &mut out);
+        for i in 0..150 {
+            let want = 0.5 + pq.adc_score_quantized(&lut, &codes[i * cb..(i + 1) * cb]);
+            assert_eq!(want.to_bits(), out[i].to_bits(), "dim={dim} i={i}");
+        }
+    }
+}
+
+/// u8 LUT quantization must cost at most 0.01 recall vs the exact f32 LUT,
+/// across every spill mode.
+#[test]
+fn quantized_lut_recall_within_a_point_of_f32() {
+    let engine = Engine::cpu();
+    for spill in [
+        SpillMode::None,
+        SpillMode::Nearest,
+        SpillMode::Soar { lambda: 1.0 },
+    ] {
+        let ds = SyntheticConfig::glove_like(2000, 16, 50, 77).generate();
+        let cfg = IndexConfig {
+            num_partitions: 40,
+            spill,
+            kmeans: KMeansConfig {
+                iters: 6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let searcher = Searcher::new(&idx, &engine);
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        // Partial probe + tight budget so the pre-rerank ADC ordering is
+        // actually load-bearing.
+        let params = SearchParams {
+            k: 10,
+            top_t: 8,
+            rerank_budget: 80,
+        };
+        let mut recalls = [0.0f64; 2];
+        for (pass, recall) in recalls.iter_mut().enumerate() {
+            let mut scratch = SearchScratch::new(&idx);
+            scratch.force_f32_lut = pass == 1;
+            let mut results = Vec::new();
+            for qi in 0..ds.num_queries() {
+                let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+                results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+            }
+            *recall = gt.mean_recall(&results);
+        }
+        let (r_u8, r_f32) = (recalls[0], recalls[1]);
+        println!("spill {spill:?}: u8 {r_u8:.4} vs f32 {r_f32:.4}");
+        assert!(
+            (r_u8 - r_f32).abs() <= 0.01,
+            "{spill:?}: quantized recall {r_u8} vs f32 {r_f32}"
+        );
+    }
+}
