@@ -1,0 +1,161 @@
+//! Collection benchmark: fan-out search throughput (single-query and
+//! batched) and upsert latency (p50/p99) as a function of shard count,
+//! plus the group-commit (`publish_coalesce`) upsert win.
+//!
+//! Emits `BENCH_collection.json` so successive PRs can track the perf
+//! trajectory of the sharded facade.
+//!
+//! Run with: `cargo bench --bench bench_collection [-- --quick]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use soar_ann::config::{
+    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting, SpillMode,
+};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::data::Dataset;
+use soar_ann::index::{Collection, CollectionSearcher, Search};
+use soar_ann::linalg::Rng;
+use soar_ann::runtime::Engine;
+use soar_ann::util::json::Value;
+
+fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn build_collection(
+    engine: &Arc<Engine>,
+    data: &soar_ann::linalg::MatrixF32,
+    shards: usize,
+    coalesce: usize,
+) -> Collection {
+    let icfg = IndexConfig::for_dataset(data.rows(), SpillMode::Soar { lambda: 1.0 });
+    let ccfg = CollectionConfig {
+        num_shards: shards,
+        routing: ShardRouting::Hash,
+        mutable: MutableConfig {
+            delta_capacity: usize::MAX >> 1, // measure steady-state, not compaction
+            auto_compact: false,
+            publish_coalesce: coalesce,
+            ..Default::default()
+        },
+        background_compact: false,
+    };
+    Collection::build(engine.clone(), data, &icfg, ccfg).expect("build collection")
+}
+
+/// Measure per-op upsert latencies (µs, sorted ascending).
+fn upsert_latencies(c: &Collection, ds: &Dataset, ops: usize, seed: u64) -> Vec<f64> {
+    let n = ds.n();
+    let mut rng = Rng::new(seed);
+    let mut lat = Vec::with_capacity(ops);
+    for i in 0..ops {
+        let src = rng.next_below(n as u32) as usize;
+        let mut v = ds.data.row(src).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.05 * rng.next_gaussian();
+        }
+        soar_ann::linalg::normalize(&mut v);
+        let t0 = Instant::now();
+        c.upsert((n + i) as u32, &v).expect("upsert");
+        lat.push(t0.elapsed().as_nanos() as f64 / 1e3);
+    }
+    lat.sort_by(f64::total_cmp);
+    lat
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 6_000 } else { 20_000 };
+    let dim = 32;
+    let search_iters = if quick { 400 } else { 2_000 };
+    let batch_rounds = if quick { 10 } else { 40 };
+    let ops = if quick { 500 } else { 2_000 };
+
+    let ds = SyntheticConfig::glove_like(n, dim, 64, 42).generate();
+    let engine = Arc::new(Engine::cpu());
+    let params = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 200,
+    };
+
+    let mut per_shard_reports = Vec::new();
+    for shards in [1usize, 2, 4] {
+        println!("building {shards}-shard collection: n={n} dim={dim}…");
+        let c = build_collection(&engine, &ds.data, shards, 1);
+
+        // --- single-query fan-out throughput -------------------------
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let mut scratch = searcher.new_scratch();
+        let t0 = Instant::now();
+        for i in 0..search_iters {
+            let q = ds.queries.row(i % ds.num_queries());
+            let (res, _) = searcher.search(q, &params, &mut scratch);
+            assert!(!res.is_empty());
+        }
+        let search_secs = t0.elapsed().as_secs_f64();
+        let search_qps = search_iters as f64 / search_secs;
+
+        // --- batched fan-out throughput ------------------------------
+        let t0 = Instant::now();
+        for _ in 0..batch_rounds {
+            let results = searcher.search_batch(&ds.queries, &params).expect("batch");
+            assert_eq!(results.len(), ds.num_queries());
+        }
+        let batch_secs = t0.elapsed().as_secs_f64();
+        let batch_qps = (batch_rounds * ds.num_queries()) as f64 / batch_secs;
+
+        // --- upsert latency distribution -----------------------------
+        let lat = upsert_latencies(&c, &ds, ops, 7);
+        let p50 = percentile_us(&lat, 0.50);
+        let p99 = percentile_us(&lat, 0.99);
+
+        println!(
+            "bench collection/shards={shards} search {search_qps:>8.0} qps | batch {batch_qps:>8.0} qps | upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
+        );
+        per_shard_reports.push(Value::obj(vec![
+            ("shards", Value::num(shards as f64)),
+            ("search_qps", Value::num(search_qps)),
+            ("batch_qps", Value::num(batch_qps)),
+            ("upsert_p50_us", Value::num(p50)),
+            ("upsert_p99_us", Value::num(p99)),
+        ]));
+    }
+
+    // --- group-commit window: publish cost amortization --------------
+    let mut coalesce_reports = Vec::new();
+    for coalesce in [1usize, 32] {
+        let c = build_collection(&engine, &ds.data, 1, coalesce);
+        let lat = upsert_latencies(&c, &ds, ops, 13);
+        let p50 = percentile_us(&lat, 0.50);
+        let p99 = percentile_us(&lat, 0.99);
+        println!(
+            "bench collection/coalesce={coalesce} upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
+        );
+        coalesce_reports.push(Value::obj(vec![
+            ("publish_coalesce", Value::num(coalesce as f64)),
+            ("upsert_p50_us", Value::num(p50)),
+            ("upsert_p99_us", Value::num(p99)),
+        ]));
+    }
+
+    let report = Value::obj(vec![
+        ("bench", Value::str("collection")),
+        ("n", Value::num(n as f64)),
+        ("dim", Value::num(dim as f64)),
+        ("search_iters", Value::num(search_iters as f64)),
+        ("upsert_ops", Value::num(ops as f64)),
+        ("per_shard", Value::Arr(per_shard_reports)),
+        ("coalesce", Value::Arr(coalesce_reports)),
+        ("quick", Value::Bool(quick)),
+    ]);
+    std::fs::write("BENCH_collection.json", report.to_json_pretty()).expect("write report");
+    println!("wrote BENCH_collection.json");
+}

@@ -227,6 +227,13 @@ pub struct MutableConfig {
     /// `upsert`/`delete`. When `false`, compaction only happens via an
     /// explicit `compact()` call.
     pub auto_compact: bool,
+    /// Group-commit window: publish a fresh snapshot only after this many
+    /// mutations have accumulated (1 = publish per mutation, today's
+    /// behavior). Single-row upsert streams amortize the
+    /// O(delta + id_space/64) publish cost across the window; call
+    /// `MutableIndex::flush` for read-your-writes before the window
+    /// fills. Sealing and compaction always publish immediately.
+    pub publish_coalesce: usize,
 }
 
 impl Default for MutableConfig {
@@ -235,6 +242,7 @@ impl Default for MutableConfig {
             delta_capacity: 4096,
             tombstone_ratio: 0.25,
             auto_compact: true,
+            publish_coalesce: 1,
         }
     }
 }
@@ -250,6 +258,9 @@ impl MutableConfig {
                 self.tombstone_ratio
             )));
         }
+        if self.publish_coalesce == 0 {
+            return Err(Error::Config("publish_coalesce must be ≥ 1".into()));
+        }
         Ok(())
     }
 
@@ -259,10 +270,13 @@ impl MutableConfig {
             ("delta_capacity", Value::num(self.delta_capacity as f64)),
             ("tombstone_ratio", Value::num(self.tombstone_ratio as f64)),
             ("auto_compact", Value::Bool(self.auto_compact)),
+            ("publish_coalesce", Value::num(self.publish_coalesce as f64)),
         ])
     }
 
-    /// Inverse of [`MutableConfig::to_json`].
+    /// Inverse of [`MutableConfig::to_json`]. `publish_coalesce` is
+    /// optional (configs persisted before the group-commit window default
+    /// to 1, the old publish-per-mutation behavior).
     pub fn from_json(v: &Value) -> Result<MutableConfig> {
         let num = |key: &str| -> Result<f64> {
             v.get(key)
@@ -281,6 +295,147 @@ impl MutableConfig {
                 .get("auto_compact")
                 .and_then(|b| b.as_bool())
                 .ok_or_else(|| Error::Config("missing auto_compact".into()))?,
+            publish_coalesce: match v.get("publish_coalesce") {
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config("publish_coalesce must be a positive integer".into())
+                })?,
+                None => 1,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// How a [`crate::index::Collection`] maps a global id to one of its
+/// shards. The policy is persisted in the v3 collection manifest so a
+/// reloaded collection keeps routing upserts to the shard that already
+/// holds each id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardRouting {
+    /// SplitMix64 hash of the id — uniform spread regardless of how ids
+    /// were allocated (the default).
+    Hash,
+    /// `id % num_shards` — keeps consecutive ids on rotating shards;
+    /// useful when the id space is already uniform and debuggability
+    /// matters.
+    Modulo,
+}
+
+impl ShardRouting {
+    /// Shard index for `id` among `num_shards` shards.
+    #[inline]
+    pub fn shard_of(&self, id: u32, num_shards: usize) -> usize {
+        debug_assert!(num_shards >= 1);
+        if num_shards <= 1 {
+            return 0;
+        }
+        match self {
+            ShardRouting::Hash => {
+                // SplitMix64 finalizer: stable across runs and platforms.
+                let mut z = (id as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                z ^= z >> 31;
+                (z % num_shards as u64) as usize
+            }
+            ShardRouting::Modulo => id as usize % num_shards,
+        }
+    }
+
+    /// Short tag used in reports and the manifest.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ShardRouting::Hash => "hash",
+            ShardRouting::Modulo => "modulo",
+        }
+    }
+
+    /// Inverse of [`ShardRouting::tag`].
+    pub fn from_tag(tag: &str) -> Result<ShardRouting> {
+        match tag {
+            "hash" => Ok(ShardRouting::Hash),
+            "modulo" => Ok(ShardRouting::Modulo),
+            other => Err(Error::Config(format!("unknown shard routing {other:?}"))),
+        }
+    }
+}
+
+/// Shape of a [`crate::index::Collection`]: how many shards, how ids route
+/// to them, and the per-shard mutation policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectionConfig {
+    /// Number of independently mutable shards (≥ 1).
+    pub num_shards: usize,
+    /// Id → shard routing policy.
+    pub routing: ShardRouting,
+    /// Mutation / compaction policy applied to every shard.
+    pub mutable: MutableConfig,
+    /// Spawn one background compaction worker per shard: delta seals and
+    /// sealed-segment merges run off the write path (copy-then-swap), so
+    /// writers stall only for the final snapshot publish. Disables the
+    /// shards' inline `auto_compact` (the worker owns the triggers).
+    pub background_compact: bool,
+}
+
+impl Default for CollectionConfig {
+    fn default() -> Self {
+        CollectionConfig {
+            num_shards: 1,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig::default(),
+            background_compact: false,
+        }
+    }
+}
+
+impl CollectionConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.num_shards == 0 {
+            return Err(Error::Config("num_shards must be ≥ 1".into()));
+        }
+        self.mutable.validate()
+    }
+
+    /// Per-shard mutation config actually handed to the shards: inline
+    /// auto-compaction is owned by the background workers when they run.
+    pub fn shard_mutable(&self) -> MutableConfig {
+        MutableConfig {
+            auto_compact: self.mutable.auto_compact && !self.background_compact,
+            ..self.mutable
+        }
+    }
+
+    /// JSON encoding (persisted inside the v3 collection manifest).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("num_shards", Value::num(self.num_shards as f64)),
+            ("routing", Value::str(self.routing.tag())),
+            ("mutable", self.mutable.to_json()),
+            ("background_compact", Value::Bool(self.background_compact)),
+        ])
+    }
+
+    /// Inverse of [`CollectionConfig::to_json`].
+    pub fn from_json(v: &Value) -> Result<CollectionConfig> {
+        let cfg = CollectionConfig {
+            num_shards: v
+                .get("num_shards")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| Error::Config("num_shards must be a positive integer".into()))?,
+            routing: ShardRouting::from_tag(
+                v.get("routing")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| Error::Config("missing routing".into()))?,
+            )?,
+            mutable: MutableConfig::from_json(
+                v.get("mutable")
+                    .ok_or_else(|| Error::Config("missing mutable".into()))?,
+            )?,
+            background_compact: v
+                .get("background_compact")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| Error::Config("missing background_compact".into()))?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -443,6 +598,71 @@ mod tests {
         )
         .unwrap();
         assert!(MutableConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn publish_coalesce_validation_and_default() {
+        let mut m = MutableConfig::default();
+        assert_eq!(m.publish_coalesce, 1);
+        m.publish_coalesce = 0;
+        assert!(m.validate().is_err());
+        // Configs persisted before the group-commit window still parse.
+        let legacy = crate::util::json::Value::parse(
+            "{\"delta_capacity\": 64, \"tombstone_ratio\": 0.25, \"auto_compact\": true}",
+        )
+        .unwrap();
+        let back = MutableConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.publish_coalesce, 1);
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_in_range() {
+        for routing in [ShardRouting::Hash, ShardRouting::Modulo] {
+            for shards in [1usize, 2, 3, 8] {
+                for id in [0u32, 1, 7, 1000, u32::MAX] {
+                    let s = routing.shard_of(id, shards);
+                    assert!(s < shards);
+                    assert_eq!(s, routing.shard_of(id, shards), "routing must be pure");
+                }
+            }
+            assert_eq!(routing.shard_of(12345, 1), 0);
+            assert_eq!(ShardRouting::from_tag(routing.tag()).unwrap(), routing);
+        }
+        assert_eq!(ShardRouting::Modulo.shard_of(7, 3), 1);
+        assert!(ShardRouting::from_tag("bogus").is_err());
+        // Hash routing spreads a contiguous id range across all shards.
+        let mut counts = [0usize; 4];
+        for id in 0..1000u32 {
+            counts[ShardRouting::Hash.shard_of(id, 4)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(c > 150, "shard {s} got only {c}/1000 ids");
+        }
+    }
+
+    #[test]
+    fn collection_config_round_trip_and_validation() {
+        let mut c = CollectionConfig {
+            num_shards: 4,
+            routing: ShardRouting::Modulo,
+            mutable: MutableConfig {
+                delta_capacity: 128,
+                publish_coalesce: 8,
+                ..Default::default()
+            },
+            background_compact: true,
+        };
+        c.validate().unwrap();
+        // Background workers own the compaction triggers.
+        assert!(!c.shard_mutable().auto_compact);
+        c.background_compact = false;
+        assert!(c.shard_mutable().auto_compact);
+        let s = c.to_json().to_json_pretty();
+        let back =
+            CollectionConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, c);
+        c.num_shards = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

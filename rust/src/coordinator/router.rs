@@ -1,99 +1,81 @@
-//! Shard router: data-parallel sharding with fan-out/merge search.
+//! Shard router: the legacy data-parallel fan-out API, now a thin frozen
+//! view over [`Collection`].
 //!
 //! At billion scale the paper's index is served from multiple replicas /
-//! shards (Appendix A.4 discusses replica counts); this router implements
-//! the standard data-parallel layout: the corpus is split across S shards,
-//! each holding its own SOAR index over its slice; a query fans out to
-//! every shard and the per-shard top-k lists are merged by score.
+//! shards (Appendix A.4 discusses replica counts). The original
+//! `ShardedIndex` was a static fan-out that rebuilt a `Searcher` per
+//! query and could not be mutated, served, or serialized; it is now a
+//! facade over the unified `Collection` stack, so the same shards are
+//! independently mutable (unfreeze via [`ShardedIndex::into_collection`]),
+//! servable (`ServeEngine::start_collection`), and serializable (v3
+//! manifests) — while this type keeps the frozen build-then-query shape
+//! for read-only workloads.
 
-use crate::config::{IndexConfig, SearchParams};
+use std::sync::Arc;
+
+use crate::config::{CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting};
 use crate::error::Result;
-use crate::index::{build_index, SearchScratch, Searcher, SoarIndex};
-use crate::linalg::topk::{Scored, TopK};
+use crate::index::searcher::SearchStats;
+use crate::index::Collection;
+use crate::linalg::topk::Scored;
 use crate::linalg::MatrixF32;
 use crate::runtime::Engine;
-use crate::util::parallel::par_map;
 
-/// A corpus split across shards, each with its own index.
+/// A corpus split across shards, each with its own index — frozen at
+/// build time. Ids returned by [`ShardedIndex::search`] are global row
+/// indexes of the build corpus.
 pub struct ShardedIndex {
-    pub shards: Vec<SoarIndex>,
-    /// Global id of shard s's local id 0.
-    pub offsets: Vec<u32>,
+    collection: Collection,
 }
 
 impl ShardedIndex {
-    /// Split `data` into `num_shards` contiguous slices and build one
-    /// index per shard (in parallel).
+    /// Route `data`'s rows across `num_shards` shards by id hash and
+    /// build one index per shard (in parallel). Partition counts scale
+    /// with each shard's share of the corpus; one int8 quantizer spans
+    /// all shards so merged scores are exactly comparable.
     pub fn build(
-        engine: &Engine,
+        engine: Arc<Engine>,
         data: &MatrixF32,
         config: &IndexConfig,
         num_shards: usize,
     ) -> Result<ShardedIndex> {
-        assert!(num_shards >= 1);
-        let n = data.rows();
-        let per = n.div_ceil(num_shards);
-        let mut slices = Vec::new();
-        let mut offsets = Vec::new();
-        let mut start = 0usize;
-        while start < n {
-            let stop = (start + per).min(n);
-            offsets.push(start as u32);
-            slices.push((start, stop));
-            start = stop;
-        }
-        // Partition count scales with shard size to keep pts/partition.
-        let shards: Result<Vec<SoarIndex>> = par_map(slices.len(), |si| {
-            let (lo, hi) = slices[si];
-            let rows: Vec<usize> = (lo..hi).collect();
-            let slice = data.gather_rows(&rows);
-            let mut cfg = config.clone();
-            cfg.num_partitions = ((hi - lo) * config.num_partitions / n).max(2);
-            build_index(engine, &slice, &cfg)
-        })
-        .into_iter()
-        .collect();
+        // Default mutation policy: the frozen view never mutates, and if
+        // the caller unfreezes via `into_collection` the shards keep the
+        // normal inline auto-compaction triggers.
+        let ccfg = CollectionConfig {
+            num_shards,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig::default(),
+            background_compact: false,
+        };
         Ok(ShardedIndex {
-            shards: shards?,
-            offsets,
+            collection: Collection::build(engine, data, config, ccfg)?,
         })
     }
 
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.collection.num_shards()
     }
 
     pub fn total_points(&self) -> usize {
-        self.shards.iter().map(|s| s.n).sum()
+        self.collection.snapshot().live_count()
     }
 
-    /// Fan out to all shards and merge by score. Returned ids are
-    /// *global* (shard offset applied).
-    pub fn search(
-        &self,
-        engine: &Engine,
-        q: &[f32],
-        params: &SearchParams,
-        scratches: &mut [SearchScratch],
-    ) -> Vec<Scored> {
-        assert_eq!(scratches.len(), self.shards.len());
-        let mut merged = TopK::new(params.k);
-        for (s, (shard, scratch)) in
-            self.shards.iter().zip(scratches.iter_mut()).enumerate()
-        {
-            let searcher = Searcher::new(shard, engine);
-            let (results, _) = searcher.search(q, params, scratch);
-            let off = self.offsets[s];
-            for r in results {
-                merged.push(r.id + off, r.score);
-            }
-        }
-        merged.into_sorted()
+    /// Fan out to all shards in parallel and merge by score. Returned ids
+    /// are global row indexes.
+    pub fn search(&self, q: &[f32], params: &SearchParams) -> (Vec<Scored>, SearchStats) {
+        self.collection.search(q, params)
     }
 
-    /// Fresh per-shard scratch set.
-    pub fn make_scratches(&self) -> Vec<SearchScratch> {
-        self.shards.iter().map(SearchScratch::new).collect()
+    /// The backing collection (read access: snapshots, cells, stats).
+    pub fn collection(&self) -> &Collection {
+        &self.collection
+    }
+
+    /// Unfreeze: hand the shards over as a mutable, servable
+    /// [`Collection`].
+    pub fn into_collection(self) -> Collection {
+        self.collection
     }
 }
 
@@ -103,46 +85,58 @@ mod tests {
     use crate::config::SpillMode;
     use crate::data::ground_truth::ground_truth_mips;
     use crate::data::synthetic::SyntheticConfig;
+    use crate::index::{build_index, SearchScratch, Searcher};
 
     #[test]
     fn sharded_covers_all_points() {
         let ds = SyntheticConfig::glove_like(900, 16, 8, 55).generate();
-        let engine = Engine::cpu();
+        let engine = Arc::new(Engine::cpu());
         let cfg = IndexConfig {
             num_partitions: 18,
             spill: SpillMode::Soar { lambda: 1.0 },
             ..Default::default()
         };
-        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 3).unwrap();
+        let sharded = ShardedIndex::build(engine, &ds.data, &cfg, 3).unwrap();
         assert_eq!(sharded.num_shards(), 3);
         assert_eq!(sharded.total_points(), 900);
-        assert_eq!(sharded.offsets, vec![0, 300, 600]);
+        // Every row landed on exactly one shard, where its id routes.
+        let snap = sharded.collection().snapshot();
+        let mut seen = 0usize;
+        for (s, shard) in snap.shards.iter().enumerate() {
+            for seg in &shard.sealed {
+                for &g in &seg.global_ids {
+                    assert_eq!(sharded.collection().shard_of(g), s);
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, 900);
     }
 
     #[test]
     fn sharded_search_matches_ground_truth_at_full_probe() {
         let ds = SyntheticConfig::glove_like(1200, 16, 10, 56).generate();
-        let engine = Engine::cpu();
+        let engine = Arc::new(Engine::cpu());
         let cfg = IndexConfig {
             num_partitions: 24,
             spill: SpillMode::Soar { lambda: 1.0 },
             ..Default::default()
         };
-        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 4).unwrap();
+        let sharded = ShardedIndex::build(engine, &ds.data, &cfg, 4).unwrap();
         let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
         let params = SearchParams {
             k: 10,
             top_t: 1000, // probe everything in each shard
             rerank_budget: 300,
         };
-        let mut scratches = sharded.make_scratches();
         let mut results = Vec::new();
         for qi in 0..ds.num_queries() {
-            let res = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+            let (res, stats) = sharded.search(ds.queries.row(qi), &params);
             assert!(res.len() <= 10);
-            // global ids must be in range
+            // every shard contributed to the scan
+            assert!(stats.segments_scanned >= 4);
             for r in &res {
-                assert!((r.id as usize) < 1200);
+                assert!((r.id as usize) < 1200, "global id in range");
             }
             results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
         }
@@ -153,24 +147,25 @@ mod tests {
     #[test]
     fn single_shard_equivalent_to_unsharded() {
         let ds = SyntheticConfig::glove_like(500, 16, 5, 57).generate();
-        let engine = Engine::cpu();
+        let engine = Arc::new(Engine::cpu());
         let cfg = IndexConfig {
             num_partitions: 10,
             spill: SpillMode::None,
             ..Default::default()
         };
-        let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 1).unwrap();
+        let sharded = ShardedIndex::build(engine.clone(), &ds.data, &cfg, 1).unwrap();
         let direct = build_index(&engine, &ds.data, &cfg).unwrap();
         let params = SearchParams::default();
-        let mut scratches = sharded.make_scratches();
         let mut scratch = SearchScratch::new(&direct);
         for qi in 0..5 {
-            let a = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+            let (a, _) = sharded.search(ds.queries.row(qi), &params);
             let searcher = Searcher::new(&direct, &engine);
             let (b, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
-            let ids_a: Vec<u32> = a.iter().map(|s| s.id).collect();
-            let ids_b: Vec<u32> = b.iter().map(|s| s.id).collect();
-            assert_eq!(ids_a, ids_b);
+            assert_eq!(a, b, "1-shard results must be identical, scores included");
         }
+        // Unfreezing keeps the data and makes it mutable.
+        let collection = sharded.into_collection();
+        collection.upsert(600, ds.data.row(0)).unwrap();
+        assert_eq!(collection.snapshot().live_count(), 501);
     }
 }

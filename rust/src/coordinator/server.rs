@@ -3,17 +3,20 @@
 //! Topology: callers hold a cheap cloneable [`ServeHandle`]; requests flow
 //! through a bounded mpsc into a batcher thread that forms batches
 //! (`collect_batch`) and dispatches them to a pool of worker threads
-//! running the parallel `SnapshotSearcher::search_batch`. Bounded channels
-//! give backpressure end-to-end: when workers fall behind, `try_send`
-//! fails and callers see `Error::Coordinator` instead of unbounded queue
-//! growth.
+//! running the parallel fan-out `CollectionSearcher::search_batch`.
+//! Bounded channels give backpressure end-to-end: when workers fall
+//! behind, `try_send` fails and callers see `Error::Coordinator` instead
+//! of unbounded queue growth.
 //!
-//! Workers read the index through a [`SnapshotCell`] (epoch-style `Arc`
-//! swap): each batch loads the current [`IndexSnapshot`], so
-//! [`ServeEngine::swap_snapshot`] — or a `MutableIndex` publishing into a
-//! shared cell (see [`ServeEngine::start_shared`]) — takes effect at batch
+//! Workers read the index through one [`SnapshotCell`] **per shard**
+//! (epoch-style `Arc` swaps): each batch loads every shard's current
+//! [`IndexSnapshot`], so a `Collection` publishing per-shard mutations
+//! (see [`ServeEngine::start_collection`]), a `MutableIndex` publishing
+//! into a shared cell ([`ServeEngine::start_shared`]), or an explicit
+//! [`ServeEngine::swap_shard_snapshot`] all take effect at batch
 //! granularity without blocking, erroring, or even synchronizing with
-//! in-flight queries: they finish on the snapshot they started with.
+//! in-flight queries: they finish on the snapshots they started with. A
+//! single-shard engine behaves exactly like the pre-collection stack.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{RecvTimeoutError, SyncSender, TrySendError};
@@ -25,7 +28,10 @@ use crate::config::{SearchParams, ServeConfig};
 use crate::coordinator::batcher::{collect_batch_with_first, QueryRequest};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::error::{Error, Result};
-use crate::index::{IndexSnapshot, SnapshotCell, SnapshotSearcher, SoarIndex};
+use crate::index::{
+    Collection, CollectionSearcher, CollectionSnapshot, IndexSnapshot, Search, SnapshotCell,
+    SoarIndex,
+};
 use crate::linalg::topk::Scored;
 use crate::linalg::MatrixF32;
 use crate::runtime::Engine;
@@ -36,7 +42,8 @@ pub struct ServeEngine {
     handle: Option<ServeHandle>,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
-    snapshots: Arc<SnapshotCell>,
+    /// One snapshot cell per shard, in shard order.
+    cells: Arc<Vec<Arc<SnapshotCell>>>,
 }
 
 /// Cheap, cloneable client handle (blocking API).
@@ -71,9 +78,34 @@ impl ServeEngine {
         params: SearchParams,
         config: ServeConfig,
     ) -> ServeEngine {
+        ServeEngine::start_cells(vec![snapshots], engine, params, config)
+    }
+
+    /// Start the stack over a [`Collection`]: workers read every shard's
+    /// cell per batch and fan out, so each shard's published mutations —
+    /// including background-compaction swaps — become visible at batch
+    /// granularity, per shard, with no global swap.
+    pub fn start_collection(
+        collection: &Collection,
+        params: SearchParams,
+        config: ServeConfig,
+    ) -> ServeEngine {
+        ServeEngine::start_cells(collection.cells(), collection.engine().clone(), params, config)
+    }
+
+    /// Start the stack over explicit per-shard cells (the primitive the
+    /// other constructors reduce to).
+    pub fn start_cells(
+        cells: Vec<Arc<SnapshotCell>>,
+        engine: Arc<Engine>,
+        params: SearchParams,
+        config: ServeConfig,
+    ) -> ServeEngine {
+        assert!(!cells.is_empty(), "serving needs at least one shard cell");
+        let cells = Arc::new(cells);
         let (tx, rx) = std::sync::mpsc::sync_channel::<QueryRequest>(config.queue_depth.max(1));
         let metrics = Arc::new(ServeMetrics::default());
-        let dim = snapshots.load().dim();
+        let dim = cells[0].load().dim();
 
         // Batch channel: batcher → workers; small bound so the batcher
         // itself backs off instead of queueing unboundedly.
@@ -112,11 +144,12 @@ impl ServeEngine {
                     .expect("spawn batcher"),
             );
         }
-        // Worker threads. Each batch loads the snapshot current at batch
-        // start; a concurrent swap never blocks or fails a request.
+        // Worker threads. Each batch loads every shard's snapshot current
+        // at batch start; a concurrent swap never blocks or fails a
+        // request.
         for w in 0..config.workers.max(1) {
             let brx = brx.clone();
-            let snapshots = snapshots.clone();
+            let cells = cells.clone();
             let engine = engine.clone();
             let metrics = metrics.clone();
             threads.push(
@@ -129,7 +162,9 @@ impl ServeEngine {
                         };
                         match batch {
                             Ok(batch) => {
-                                let snapshot = snapshots.load();
+                                let snapshot = CollectionSnapshot {
+                                    shards: cells.iter().map(|c| c.load()).collect(),
+                                };
                                 run_batch(&snapshot, &engine, &params, batch, &metrics)
                             }
                             Err(_) => break, // batcher shut down
@@ -143,15 +178,39 @@ impl ServeEngine {
             handle: Some(ServeHandle { tx, metrics, dim }),
             threads,
             stop,
-            snapshots,
+            cells,
         }
     }
 
-    /// Publish a new snapshot to the workers (epoch-style `Arc` swap).
-    /// In-flight batches finish on their current snapshot; subsequent
-    /// batches read the new one. Fails only on a dimensionality mismatch.
+    /// Shards this engine serves.
+    pub fn num_shards(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Publish a new snapshot to a single-shard engine (epoch-style `Arc`
+    /// swap). In-flight batches finish on their current snapshot;
+    /// subsequent batches read the new one. Multi-shard engines must use
+    /// [`ServeEngine::swap_shard_snapshot`].
     pub fn swap_snapshot(&self, snapshot: Arc<IndexSnapshot>) -> Result<()> {
-        let current = self.snapshots.load();
+        if self.cells.len() != 1 {
+            return Err(Error::Coordinator(format!(
+                "swap_snapshot on a {}-shard engine; use swap_shard_snapshot",
+                self.cells.len()
+            )));
+        }
+        self.swap_shard_snapshot(0, snapshot)
+    }
+
+    /// Publish a new snapshot for one shard. The other shards keep
+    /// serving their current snapshots — the swap unit is the shard.
+    pub fn swap_shard_snapshot(&self, shard: usize, snapshot: Arc<IndexSnapshot>) -> Result<()> {
+        let cell = self.cells.get(shard).ok_or_else(|| {
+            Error::Coordinator(format!(
+                "shard {shard} out of range ({} shards)",
+                self.cells.len()
+            ))
+        })?;
+        let current = cell.load();
         if snapshot.dim() != current.dim() {
             return Err(Error::Shape(format!(
                 "snapshot dim {} != serving dim {}",
@@ -159,18 +218,40 @@ impl ServeEngine {
                 current.dim()
             )));
         }
-        self.snapshots.store(snapshot);
+        cell.store(snapshot);
         Ok(())
     }
 
-    /// The snapshot workers currently read.
+    /// The snapshot the workers currently read. Single-shard engines
+    /// only — a multi-shard engine has no "the" snapshot (panics; use
+    /// [`ServeEngine::current_collection_snapshot`]), matching the
+    /// [`ServeEngine::swap_snapshot`] guard so legacy callers can't
+    /// silently operate on one shard of a collection.
     pub fn current_snapshot(&self) -> Arc<IndexSnapshot> {
-        self.snapshots.load()
+        assert_eq!(
+            self.cells.len(),
+            1,
+            "current_snapshot on a multi-shard engine; use current_collection_snapshot"
+        );
+        self.cells[0].load()
+    }
+
+    /// A point-in-time view across every served shard.
+    pub fn current_collection_snapshot(&self) -> CollectionSnapshot {
+        CollectionSnapshot {
+            shards: self.cells.iter().map(|c| c.load()).collect(),
+        }
     }
 
     /// The serving cell (for wiring a `MutableIndex` up after start).
+    /// Single-shard engines only, like [`ServeEngine::current_snapshot`].
     pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
-        self.snapshots.clone()
+        assert_eq!(
+            self.cells.len(),
+            1,
+            "snapshot_cell on a multi-shard engine; collections own their cells"
+        );
+        self.cells[0].clone()
     }
 
     pub fn handle(&self) -> ServeHandle {
@@ -202,20 +283,22 @@ impl Drop for ServeEngine {
     }
 }
 
-/// Execute one batch on a worker thread.
+/// Execute one batch on a worker thread: per-shard fan-out through the
+/// shared [`Search`] trait (a 1-shard snapshot delegates straight to the
+/// plain `SnapshotSearcher` path).
 fn run_batch(
-    snapshot: &IndexSnapshot,
+    snapshot: &CollectionSnapshot,
     engine: &Engine,
     params: &SearchParams,
     batch: Vec<QueryRequest>,
     metrics: &ServeMetrics,
 ) {
-    let dim = snapshot.dim();
+    let searcher = CollectionSearcher::new(snapshot, engine);
+    let dim = searcher.dim();
     let mut queries = MatrixF32::zeros(batch.len(), dim);
     for (i, req) in batch.iter().enumerate() {
         queries.row_mut(i).copy_from_slice(&req.query);
     }
-    let searcher = SnapshotSearcher::new(snapshot, engine);
     let results = match searcher.search_batch(&queries, params) {
         Ok(r) => r,
         Err(e) => {
@@ -451,6 +534,70 @@ mod tests {
         let idx2 = Arc::new(build_index(&engine, &ds2.data, &cfg2).unwrap());
         let bad = Arc::new(crate::index::IndexSnapshot::from_index(idx2));
         assert!(server.swap_snapshot(bad).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_a_sharded_collection_with_per_shard_swaps() {
+        use crate::config::{CollectionConfig, MutableConfig, ShardRouting};
+        use crate::index::Collection;
+        use crate::linalg::Rng;
+
+        let ds = SyntheticConfig::glove_like(1500, 16, 24, 73).generate();
+        let engine = Arc::new(Engine::cpu());
+        let icfg = IndexConfig {
+            num_partitions: 30,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let ccfg = CollectionConfig {
+            num_shards: 3,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        let params = SearchParams {
+            k: 10,
+            top_t: 30, // full probe in every shard
+            rerank_budget: 300,
+        };
+        let server = ServeEngine::start_collection(&c, params, ServeConfig::default());
+        assert_eq!(server.num_shards(), 3);
+        let handle = server.handle();
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let mut results = Vec::new();
+        for qi in 0..ds.num_queries() {
+            let res = handle.search(ds.queries.row(qi).to_vec()).unwrap();
+            assert!(res.len() <= 10);
+            results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+        let recall = gt.mean_recall(&results);
+        assert!(recall > 0.6, "collection-served recall {recall}");
+
+        // A mutation published by the collection reaches the next batch —
+        // only its own shard's cell swapped.
+        let mut rng = Rng::new(74);
+        let mut v = ds.data.row(3).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.1 * rng.next_gaussian();
+        }
+        crate::linalg::normalize(&mut v);
+        c.upsert(9000, &v).unwrap();
+        let res = handle.search(v.clone()).unwrap();
+        assert_eq!(res[0].id, 9000, "published upsert must be servable");
+
+        // Swap granularity is the shard.
+        assert!(
+            server.swap_snapshot(c.shard(0).snapshot()).is_err(),
+            "whole-engine swap is a single-shard API"
+        );
+        assert!(server.swap_shard_snapshot(7, c.shard(0).snapshot()).is_err());
+        server.swap_shard_snapshot(1, c.shard(1).snapshot()).unwrap();
+        assert_eq!(server.current_collection_snapshot().num_shards(), 3);
         server.shutdown();
     }
 

@@ -15,4 +15,4 @@ pub mod plot;
 pub mod recall;
 
 pub use experiments::ExpConfig;
-pub use recall::{pareto_frontier, qps_at_recall, recall_curve, RecallPoint};
+pub use recall::{pareto_frontier, qps_at_recall, recall_curve, recall_curve_with, RecallPoint};

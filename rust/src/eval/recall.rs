@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use crate::config::SearchParams;
 use crate::data::ground_truth::GroundTruth;
-use crate::index::{SearchScratch, Searcher, SoarIndex};
+use crate::index::{Search, Searcher, SoarIndex};
 use crate::linalg::MatrixF32;
 use crate::runtime::Engine;
 
@@ -25,7 +25,8 @@ pub struct RecallPoint {
     pub mean_points_scanned: f64,
 }
 
-/// Sweep the operating grid. `k` is the recall@k target.
+/// Sweep the operating grid over a monolithic index. `k` is the recall@k
+/// target.
 pub fn recall_curve(
     index: &SoarIndex,
     engine: &Engine,
@@ -35,8 +36,21 @@ pub fn recall_curve(
     top_ts: &[usize],
     rerank_budgets: &[usize],
 ) -> Vec<RecallPoint> {
-    let searcher = Searcher::new(index, engine);
-    let mut scratch = SearchScratch::new(index);
+    recall_curve_with(&Searcher::new(index, engine), queries, gt, k, top_ts, rerank_budgets)
+}
+
+/// Sweep the operating grid over *any* [`Search`] implementation —
+/// monolithic [`Searcher`], segmented `SnapshotSearcher`, or a sharded
+/// `CollectionSearcher` — so eval drivers share one measurement loop.
+pub fn recall_curve_with<S: Search>(
+    searcher: &S,
+    queries: &MatrixF32,
+    gt: &GroundTruth,
+    k: usize,
+    top_ts: &[usize],
+    rerank_budgets: &[usize],
+) -> Vec<RecallPoint> {
+    let mut scratch = searcher.new_scratch();
     let mut out = Vec::new();
     for &top_t in top_ts {
         for &rb in rerank_budgets {
@@ -152,6 +166,36 @@ mod tests {
             assert!(w[1].recall >= w[0].recall);
             assert!(w[1].qps <= w[0].qps + 1e-9);
         }
+    }
+
+    #[test]
+    fn recall_curve_with_spans_searcher_shapes() {
+        use crate::config::CollectionConfig;
+        use crate::index::{Collection, CollectionSearcher};
+        use std::sync::Arc;
+        let (ds, idx, gt, engine) = fixture();
+        let direct = recall_curve(&idx, &engine, &ds.queries, &gt, 10, &[30], &[400]);
+        // The same sweep through a 1-shard collection measures the same
+        // recall and scan counts (QPS is wall-clock, so only recall and
+        // points-scanned are comparable).
+        let engine = Arc::new(engine);
+        let c = Collection::build(
+            engine.clone(),
+            &ds.data,
+            &crate::config::IndexConfig {
+                num_partitions: 30,
+                spill: crate::config::SpillMode::Soar { lambda: 1.0 },
+                ..Default::default()
+            },
+            CollectionConfig::default(),
+        )
+        .unwrap();
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let via_collection = recall_curve_with(&searcher, &ds.queries, &gt, 10, &[30], &[400]);
+        assert_eq!(direct.len(), via_collection.len());
+        assert!((direct[0].recall - via_collection[0].recall).abs() < 1e-9);
+        assert_eq!(direct[0].mean_points_scanned, via_collection[0].mean_points_scanned);
     }
 
     #[test]

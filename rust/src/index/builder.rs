@@ -25,7 +25,31 @@ const ASSIGN_BATCH: usize = 256;
 /// Build an index over `data` with `config`, using `engine` for the
 /// dense scoring stages (PJRT artifacts or CPU fallback).
 pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> Result<SoarIndex> {
+    build_index_with_int8(engine, data, config, None)
+}
+
+/// [`build_index`] with an optional pre-trained int8 quantizer. A
+/// [`crate::index::Collection`] trains one quantizer over the *whole*
+/// corpus and hands it to every per-shard build, so rerank scores are
+/// exactly comparable across shards during the fan-out merge (per-shard
+/// scales would skew the global top-k at shard boundaries). Ignored when
+/// `config.store_int8` is false; `None` trains on `data` as before.
+pub fn build_index_with_int8(
+    engine: &Engine,
+    data: &MatrixF32,
+    config: &IndexConfig,
+    int8: Option<Int8Quantizer>,
+) -> Result<SoarIndex> {
     config.validate(data.rows(), data.cols())?;
+    if let Some(q8) = &int8 {
+        if q8.dim() != data.cols() {
+            return Err(crate::error::Error::Shape(format!(
+                "int8 quantizer dim {} != data dim {}",
+                q8.dim(),
+                data.cols()
+            )));
+        }
+    }
     let n = data.rows();
     let dim = data.cols();
 
@@ -85,7 +109,10 @@ pub fn build_index(engine: &Engine, data: &MatrixF32, config: &IndexConfig) -> R
 
     // 6. int8 rerank storage.
     let (int8, raw_int8) = if config.store_int8 {
-        let q8 = Int8Quantizer::train(data)?;
+        let q8 = match int8 {
+            Some(q8) => q8,
+            None => Int8Quantizer::train(data)?,
+        };
         let mut raw = vec![0i8; n * dim];
         par_chunks_mut(&mut raw, dim, |i, chunk| {
             chunk.copy_from_slice(&q8.encode(data.row(i)));
@@ -240,6 +267,31 @@ mod tests {
         let dec = idx.int8.as_ref().unwrap().decode(rec);
         let err = crate::linalg::squared_l2(&dec, ds.data.row(7));
         assert!(err < 0.01, "int8 reconstruction error {err}");
+    }
+
+    #[test]
+    fn shared_int8_quantizer_is_adopted() {
+        let ds = SyntheticConfig::glove_like(600, 8, 4, 9).generate();
+        let engine = Engine::cpu();
+        let mut cfg = small_config(SpillMode::None);
+        cfg.num_partitions = 8;
+        // Quantizer trained on the full corpus, index built over a slice —
+        // the shard-build pattern used by Collection.
+        let q8 = Int8Quantizer::train(&ds.data).unwrap();
+        let rows: Vec<usize> = (0..300).collect();
+        let slice = ds.data.gather_rows(&rows);
+        let idx = build_index_with_int8(&engine, &slice, &cfg, Some(q8.clone())).unwrap();
+        assert_eq!(idx.int8.as_ref().unwrap().scales, q8.scales);
+        idx.check_invariants().unwrap();
+        // Dimension mismatch is rejected.
+        let bad = Int8Quantizer {
+            scales: vec![1.0; 4],
+        };
+        assert!(build_index_with_int8(&engine, &slice, &cfg, Some(bad)).is_err());
+        // Without int8 storage the quantizer is ignored.
+        cfg.store_int8 = false;
+        let idx = build_index_with_int8(&engine, &slice, &cfg, Some(q8)).unwrap();
+        assert!(idx.int8.is_none());
     }
 
     #[test]

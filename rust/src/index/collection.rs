@@ -1,0 +1,935 @@
+//! The `Collection` facade: S independently mutable shards behind one
+//! unified API — the architecture seam the serving, serialization, and
+//! CLI layers build on.
+//!
+//! Topology (per shard): `MutableIndex` → `SnapshotCell` →
+//! `IndexSnapshot` → `SnapshotSearcher`. A [`Collection`] owns the S
+//! cells; writes route by id ([`crate::config::ShardRouting`]), reads
+//! capture a [`CollectionSnapshot`] (one `Arc<IndexSnapshot>` per shard)
+//! and fan out in parallel with a global top-k merge.
+//!
+//! Guarantees:
+//!
+//! * `num_shards = 1` reproduces the single-index stack bit-for-bit:
+//!   building routes every row to shard 0 with the full partition budget,
+//!   and [`CollectionSearcher`] delegates straight to the shard's
+//!   [`SnapshotSearcher`] (no merge pass).
+//! * Cross-shard scores merge exactly: the build trains **one** int8
+//!   quantizer over the whole corpus and shares it with every shard
+//!   ([`crate::index::builder::build_index_with_int8`]), so rerank scores
+//!   are the same function of (query, id) regardless of which shard holds
+//!   the row. (VQ codebooks and PQ stay per-shard — only the pre-rerank
+//!   candidate stream is shard-local. As within a single index, an
+//!   *exact* score tie at the k boundary is broken by scan order.)
+//! * With `background_compact`, each shard gets a compaction worker:
+//!   delta seals and sealed-segment merges run off the write path via the
+//!   staged [`MutableIndex::begin_compaction`] →
+//!   [`crate::index::mutable::CompactionJob::merge`] →
+//!   [`MutableIndex::install_compaction`] protocol, so writers stall only
+//!   for the final snapshot publish.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::{CollectionConfig, IndexConfig, SearchParams};
+use crate::error::{Error, Result};
+use crate::index::builder::build_index_with_int8;
+use crate::index::mutable::{MutableIndex, MutableStats};
+use crate::index::searcher::{Search, SearchScratch, SearchStats, SnapshotSearcher};
+use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
+use crate::index::SoarIndex;
+use crate::linalg::topk::{Scored, TopK};
+use crate::linalg::MatrixF32;
+use crate::quant::Int8Quantizer;
+use crate::runtime::Engine;
+use crate::util::parallel::{par_chunks_mut, par_map};
+
+/// A point-in-time view of every shard: one immutable `IndexSnapshot`
+/// each, captured lock-free from the shards' `SnapshotCell`s. Queries run
+/// against this; concurrent mutations publish into the cells without
+/// touching captured views.
+#[derive(Clone, Debug)]
+pub struct CollectionSnapshot {
+    /// Per-shard snapshots, indexed by shard.
+    pub shards: Vec<Arc<IndexSnapshot>>,
+}
+
+impl CollectionSnapshot {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.shards[0].dim()
+    }
+
+    /// Rows a full scan would surface, across all shards.
+    pub fn live_count(&self) -> usize {
+        self.shards.iter().map(|s| s.live_count()).sum()
+    }
+
+    /// Structural invariants of every shard snapshot.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.shards.is_empty() {
+            return Err(Error::Serialize(
+                "collection snapshot has no shards".into(),
+            ));
+        }
+        let dim = self.dim();
+        for (s, snap) in self.shards.iter().enumerate() {
+            snap.check_invariants()?;
+            if snap.dim() != dim {
+                return Err(Error::Serialize(format!(
+                    "shard {s} dim {} != shard 0 dim {dim}",
+                    snap.dim()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fan-out searcher over a [`CollectionSnapshot`]; cheap to construct,
+/// `Sync`. One shard delegates straight to [`SnapshotSearcher`]
+/// (bit-for-bit the single-index behavior); several shards run in
+/// parallel and merge per-query top-k lists by score (comparable across
+/// shards thanks to the shared int8 quantizer; on an *exact* score tie at
+/// the k boundary the kept id can depend on scan order, as it already
+/// does within one index). Shards hold disjoint id sets, so the merge
+/// needs no dedup. Per-shard scratches are pooled inside the searcher, so
+/// repeated single-query fan-outs stop allocating after the first query.
+pub struct CollectionSearcher<'a> {
+    pub snapshot: &'a CollectionSnapshot,
+    pub engine: &'a Engine,
+    /// Lazily built per-shard scratches, taken out for the duration of a
+    /// fan-out and returned afterwards (uncontended lock for the usual
+    /// one-caller-per-searcher pattern).
+    fan_out_scratches: Mutex<Option<Vec<SearchScratch>>>,
+}
+
+impl<'a> CollectionSearcher<'a> {
+    pub fn new(snapshot: &'a CollectionSnapshot, engine: &'a Engine) -> CollectionSearcher<'a> {
+        CollectionSearcher {
+            snapshot,
+            engine,
+            fan_out_scratches: Mutex::new(None),
+        }
+    }
+
+    /// Merge per-shard `(results, stats)` into one global top-k.
+    fn merge_results(
+        per_shard: Vec<(Vec<Scored>, SearchStats)>,
+        k: usize,
+    ) -> (Vec<Scored>, SearchStats) {
+        let mut merged = TopK::new(k.max(1));
+        let mut stats = SearchStats::default();
+        for (results, st) in per_shard {
+            stats.accumulate(&st);
+            for r in results {
+                merged.push(r.id, r.score);
+            }
+        }
+        (merged.into_sorted(), stats)
+    }
+
+    /// Parallel fan-out across all shards (no caller scratch involved —
+    /// each shard scans with a pooled scratch of its own). The S > 1 half
+    /// of [`Search::search`], also used by `Collection::search` so the
+    /// multi-shard convenience path never allocates an unused scratch.
+    fn fan_out(&self, q: &[f32], params: &SearchParams) -> (Vec<Scored>, SearchStats) {
+        let shards = &self.snapshot.shards;
+        let pooled = self.fan_out_scratches.lock().unwrap().take();
+        let scratches = match pooled {
+            Some(v) if v.len() == shards.len() => v,
+            _ => shards
+                .iter()
+                .map(|sn| SearchScratch::for_snapshot(sn))
+                .collect(),
+        };
+        // Pair each scratch with a result slot so the work-stealing
+        // `par_chunks_mut` hands every shard exclusive &mut access.
+        let mut work: Vec<(SearchScratch, Option<(Vec<Scored>, SearchStats)>)> =
+            scratches.into_iter().map(|sc| (sc, None)).collect();
+        par_chunks_mut(&mut work, 1, |s, chunk| {
+            let (scratch, out) = &mut chunk[0];
+            let searcher = SnapshotSearcher::new(&shards[s], self.engine);
+            *out = Some(searcher.search(q, params, scratch));
+        });
+        let mut per_shard = Vec::with_capacity(work.len());
+        let mut scratches = Vec::with_capacity(work.len());
+        for (sc, out) in work {
+            scratches.push(sc);
+            per_shard.push(out.expect("fan-out worker ran for every shard"));
+        }
+        *self.fan_out_scratches.lock().unwrap() = Some(scratches);
+        Self::merge_results(per_shard, params.k)
+    }
+}
+
+impl Search for CollectionSearcher<'_> {
+    fn dim(&self) -> usize {
+        self.snapshot.dim()
+    }
+
+    fn new_scratch(&self) -> SearchScratch {
+        SearchScratch::for_snapshot(&self.snapshot.shards[0])
+    }
+
+    /// Single-query fan-out. The caller's scratch serves the 1-shard fast
+    /// path; the parallel path gives each shard its own scratch.
+    fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        let shards = &self.snapshot.shards;
+        if shards.len() == 1 {
+            return SnapshotSearcher::new(&shards[0], self.engine).search(q, params, scratch);
+        }
+        self.fan_out(q, params)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let shards = &self.snapshot.shards;
+        if shards.len() == 1 {
+            return SnapshotSearcher::new(&shards[0], self.engine).search_batch(queries, params);
+        }
+        // One level of parallelism, never two: small batches run serially
+        // inside each shard's `search_batch` (its ≤ 8 cutoff), so the
+        // shard fan-out is the parallel axis; large batches parallelize
+        // across queries inside the shard, so the shards run in sequence
+        // — otherwise every batch would spawn shards × workers threads
+        // and oversubscribe the cores.
+        let mut per_shard: Vec<Vec<(Vec<Scored>, SearchStats)>> = if queries.rows() <= 8 {
+            par_map(shards.len(), |s| {
+                SnapshotSearcher::new(&shards[s], self.engine).search_batch(queries, params)
+            })
+            .into_iter()
+            .collect::<Result<_>>()?
+        } else {
+            let mut v = Vec::with_capacity(shards.len());
+            for shard in shards.iter() {
+                v.push(SnapshotSearcher::new(shard, self.engine).search_batch(queries, params)?);
+            }
+            v
+        };
+        let nq = queries.rows();
+        let mut out = Vec::with_capacity(nq);
+        for qi in 0..nq {
+            let per_query: Vec<(Vec<Scored>, SearchStats)> = per_shard
+                .iter_mut()
+                .map(|shard_results| std::mem::take(&mut shard_results[qi]))
+                .collect();
+            out.push(Self::merge_results(per_query, params.k));
+        }
+        Ok(out)
+    }
+}
+
+/// Signal block shared with one shard's background compaction worker.
+#[derive(Debug)]
+struct WorkerShared {
+    /// Set by mutators to request an immediate pressure check.
+    kick: Mutex<bool>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// One background compaction worker (thread + signal block).
+#[derive(Debug)]
+struct CompactionWorker {
+    shared: Arc<WorkerShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// How long a worker sleeps between unsolicited pressure checks.
+const WORKER_TICK: Duration = Duration::from_millis(50);
+
+fn spawn_compaction_worker(shard: Arc<MutableIndex>, shard_id: usize) -> CompactionWorker {
+    let shared = Arc::new(WorkerShared {
+        kick: Mutex::new(false),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+    });
+    let thread = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("soar-compactor-{shard_id}"))
+            .spawn(move || {
+                // A deterministic failure (corrupt segment state) would
+                // otherwise re-run the full merge every tick forever; give
+                // up after a few consecutive failures instead of burning a
+                // core (writers and readers are unaffected either way).
+                let mut consecutive_failures = 0u32;
+                loop {
+                    {
+                        let guard = shared.kick.lock().unwrap();
+                        let (mut guard, _) = shared
+                            .cv
+                            .wait_timeout_while(guard, WORKER_TICK, |kicked| {
+                                !*kicked && !shared.stop.load(Ordering::Relaxed)
+                            })
+                            .unwrap();
+                        *guard = false;
+                    }
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Seal a full delta (brief writer stall, O(delta)),
+                    // then merge sealed segments off the write path:
+                    // writers only stall again for the install's final
+                    // snapshot store.
+                    let (seal, merge) = shard.compaction_pressure();
+                    if !(seal || merge) {
+                        continue;
+                    }
+                    let attempt = || -> Result<()> {
+                        if seal {
+                            shard.seal_delta()?;
+                        }
+                        shard.compact_concurrent()?;
+                        Ok(())
+                    };
+                    match attempt() {
+                        Ok(()) => consecutive_failures = 0,
+                        Err(e) => {
+                            consecutive_failures += 1;
+                            eprintln!(
+                                "shard {shard_id} background compaction failed \
+                                 ({consecutive_failures}x): {e}"
+                            );
+                            if consecutive_failures >= 3 {
+                                eprintln!(
+                                    "shard {shard_id}: disabling background compaction \
+                                     after repeated failures"
+                                );
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn compaction worker")
+    };
+    CompactionWorker {
+        shared,
+        thread: Some(thread),
+    }
+}
+
+/// Per-shard + aggregate bookkeeping for a [`Collection`].
+#[derive(Clone, Debug)]
+pub struct CollectionStats {
+    /// One entry per shard.
+    pub shards: Vec<MutableStats>,
+}
+
+impl CollectionStats {
+    pub fn sealed_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.sealed_rows).sum()
+    }
+
+    pub fn delta_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.delta_rows).sum()
+    }
+
+    pub fn tombstones(&self) -> usize {
+        self.shards.iter().map(|s| s.tombstones).sum()
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.shards.iter().map(|s| s.compactions).sum()
+    }
+
+    pub fn max_sealed_segments(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.sealed_segments)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// S independently mutable, snapshot-served shards behind one facade:
+/// upserts and deletes route by id, reads capture a
+/// [`CollectionSnapshot`] and fan out, and each shard publishes through
+/// its own [`SnapshotCell`] so the serving stack swaps per shard.
+pub struct Collection {
+    engine: Arc<Engine>,
+    config: CollectionConfig,
+    shards: Vec<Arc<MutableIndex>>,
+    workers: Vec<CompactionWorker>,
+}
+
+impl Collection {
+    /// Split `data` across shards by routing each row's id (= row index)
+    /// and build one index per shard in parallel. Per-shard partition
+    /// counts scale with the shard's share of the corpus; one int8
+    /// quantizer is trained over the whole corpus so rerank scores merge
+    /// exactly across shards. `num_shards = 1` builds bit-for-bit what
+    /// [`crate::index::build_index`] would.
+    pub fn build(
+        engine: Arc<Engine>,
+        data: &MatrixF32,
+        index_config: &IndexConfig,
+        config: CollectionConfig,
+    ) -> Result<Collection> {
+        config.validate()?;
+        let n = data.rows();
+        let num_shards = config.num_shards;
+        let mut shard_rows: Vec<Vec<usize>> = vec![Vec::new(); num_shards];
+        for i in 0..n {
+            shard_rows[config.routing.shard_of(i as u32, num_shards)].push(i);
+        }
+        // Every shard needs enough rows to host `num_spills + 1` distinct
+        // partitions (IndexConfig::validate requires it); catching it here
+        // names the real problem instead of surfacing a per-shard
+        // partition-count error.
+        let min_rows = index_config.num_spills + 1;
+        for (s, rows) in shard_rows.iter().enumerate() {
+            if rows.is_empty() {
+                return Err(Error::Config(format!(
+                    "shard {s} would be empty: {n} rows cannot fill {num_shards} shards"
+                )));
+            }
+            if rows.len() < min_rows {
+                return Err(Error::Config(format!(
+                    "shard {s} would get only {} row(s) — too small for {} assignments \
+                     per point; reduce num_shards",
+                    rows.len(),
+                    index_config.assignments_per_point()
+                )));
+            }
+        }
+        let int8 = if index_config.store_int8 {
+            Some(Int8Quantizer::train(data)?)
+        } else {
+            None
+        };
+        let built: Result<Vec<MutableIndex>> = par_map(num_shards, |s| {
+            let rows = &shard_rows[s];
+            // A shard holding every row (the 1-shard case) is the
+            // identity permutation: build straight on `data` instead of
+            // materializing a full copy.
+            let gathered;
+            let slice: &MatrixF32 = if rows.len() == n {
+                data
+            } else {
+                gathered = data.gather_rows(rows);
+                &gathered
+            };
+            let mut cfg = index_config.clone();
+            cfg.num_partitions = (index_config.num_partitions * rows.len() / n)
+                .max(index_config.num_spills + 1)
+                .min(rows.len());
+            let index = build_index_with_int8(&engine, slice, &cfg, int8.clone())?;
+            let dim = index.dim;
+            let parts = index.num_partitions();
+            let cb = index.pq.code_bytes();
+            let global_ids: Vec<u32> = rows.iter().map(|&i| i as u32).collect();
+            let seg = SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))?;
+            let snap = IndexSnapshot::new(
+                vec![Arc::new(seg)],
+                Arc::new(DeltaSegment::empty(dim, parts, cb)),
+                Arc::new(HashSet::new()),
+                0,
+            );
+            MutableIndex::from_snapshot(Arc::new(snap), engine.clone(), config.shard_mutable())
+        })
+        .into_iter()
+        .collect();
+        Collection::from_shards(built?, engine, config)
+    }
+
+    /// Adopt a single prebuilt index as a 1-shard collection (the legacy
+    /// single-index deployments' migration path).
+    pub fn from_index(
+        index: SoarIndex,
+        engine: Arc<Engine>,
+        config: CollectionConfig,
+    ) -> Result<Collection> {
+        if config.num_shards != 1 {
+            return Err(Error::Config(format!(
+                "a single index seeds a 1-shard collection, not {}",
+                config.num_shards
+            )));
+        }
+        let snap = Arc::new(IndexSnapshot::from_index(Arc::new(index)));
+        Collection::from_snapshots(vec![snap], engine, config)
+    }
+
+    /// Resume mutation on previously published / deserialized per-shard
+    /// snapshots. Validates that every stored id routes to the shard that
+    /// holds it (so future upserts keep landing next to the existing
+    /// version).
+    pub fn from_snapshots(
+        snapshots: Vec<Arc<IndexSnapshot>>,
+        engine: Arc<Engine>,
+        config: CollectionConfig,
+    ) -> Result<Collection> {
+        config.validate()?;
+        if snapshots.len() != config.num_shards {
+            return Err(Error::Config(format!(
+                "{} shard snapshots for a {}-shard collection",
+                snapshots.len(),
+                config.num_shards
+            )));
+        }
+        if config.num_shards > 1 {
+            for (s, snap) in snapshots.iter().enumerate() {
+                let check = |g: u32| -> Result<()> {
+                    let want = config.routing.shard_of(g, config.num_shards);
+                    if want != s {
+                        return Err(Error::Config(format!(
+                            "id {g} stored in shard {s} but routes to shard {want} \
+                             (wrong routing policy or shard count?)"
+                        )));
+                    }
+                    Ok(())
+                };
+                for seg in &snap.sealed {
+                    for &g in &seg.global_ids {
+                        check(g)?;
+                    }
+                }
+                for &g in &snap.delta.slot_ids {
+                    check(g)?;
+                }
+            }
+        }
+        let shards: Result<Vec<MutableIndex>> = snapshots
+            .into_iter()
+            .map(|snap| MutableIndex::from_snapshot(snap, engine.clone(), config.shard_mutable()))
+            .collect();
+        Collection::from_shards(shards?, engine, config)
+    }
+
+    fn from_shards(
+        shards: Vec<MutableIndex>,
+        engine: Arc<Engine>,
+        config: CollectionConfig,
+    ) -> Result<Collection> {
+        let shards: Vec<Arc<MutableIndex>> = shards.into_iter().map(Arc::new).collect();
+        let dim = shards[0].snapshot().dim();
+        for (s, shard) in shards.iter().enumerate() {
+            let d = shard.snapshot().dim();
+            if d != dim {
+                return Err(Error::Shape(format!(
+                    "shard {s} dim {d} != shard 0 dim {dim}"
+                )));
+            }
+        }
+        let workers = if config.background_compact {
+            shards
+                .iter()
+                .enumerate()
+                .map(|(s, shard)| spawn_compaction_worker(shard.clone(), s))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Collection {
+            engine,
+            config,
+            shards,
+            workers,
+        })
+    }
+
+    /// Load a collection from a v3 manifest directory — or from a legacy
+    /// v1/v2 single-index file, which becomes a 1-shard collection.
+    pub fn load(path: &Path, engine: Arc<Engine>) -> Result<Collection> {
+        let (snapshots, config) = crate::index::serialize::load_collection_parts(path)?;
+        Collection::from_snapshots(snapshots, engine, config)
+    }
+
+    /// Persist as a v3 manifest + per-shard snapshot files under `dir`
+    /// (created if needed). Pending group-commit windows are flushed
+    /// first.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.flush();
+        crate::index::serialize::save_collection(&self.snapshot(), &self.config, dir)
+    }
+
+    pub fn config(&self) -> &CollectionConfig {
+        &self.config
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `id` routes to.
+    #[inline]
+    pub fn shard_of(&self, id: u32) -> usize {
+        self.config.routing.shard_of(id, self.shards.len())
+    }
+
+    /// Direct access to one shard (diagnostics, tests).
+    pub fn shard(&self, s: usize) -> &Arc<MutableIndex> {
+        &self.shards[s]
+    }
+
+    /// The per-shard snapshot cells, in shard order — hand these to
+    /// `ServeEngine::start_collection` so every published mutation is
+    /// visible to the next batch, per shard, with no global swap.
+    pub fn cells(&self) -> Vec<Arc<SnapshotCell>> {
+        self.shards.iter().map(|s| s.cell()).collect()
+    }
+
+    /// Capture a point-in-time view of every shard (lock-free: one `Arc`
+    /// clone per shard).
+    pub fn snapshot(&self) -> CollectionSnapshot {
+        CollectionSnapshot {
+            shards: self.shards.iter().map(|s| s.snapshot()).collect(),
+        }
+    }
+
+    /// Insert or replace one vector (routed to its shard).
+    pub fn upsert(&self, id: u32, vector: &[f32]) -> Result<()> {
+        let s = self.shard_of(id);
+        self.shards[s].upsert(id, vector)?;
+        self.kick_worker(s);
+        Ok(())
+    }
+
+    /// Insert or replace a batch: rows are grouped per shard and the
+    /// shards ingest their groups in parallel (one engine-batched
+    /// assignment pass per shard).
+    pub fn upsert_batch(&self, ids: &[u32], vectors: &MatrixF32) -> Result<()> {
+        if ids.len() != vectors.rows() {
+            return Err(Error::Shape(format!(
+                "{} ids for {} vectors",
+                ids.len(),
+                vectors.rows()
+            )));
+        }
+        if ids.is_empty() {
+            return Ok(());
+        }
+        if self.shards.len() == 1 {
+            self.shards[0].upsert_batch(ids, vectors)?;
+            self.kick_worker(0);
+            return Ok(());
+        }
+        let mut per: Vec<(Vec<u32>, Vec<usize>)> =
+            vec![(Vec::new(), Vec::new()); self.shards.len()];
+        for (i, &id) in ids.iter().enumerate() {
+            let s = self.shard_of(id);
+            per[s].0.push(id);
+            per[s].1.push(i);
+        }
+        let results: Vec<Result<()>> = par_map(self.shards.len(), |s| {
+            let (shard_ids, rows) = &per[s];
+            if shard_ids.is_empty() {
+                return Ok(());
+            }
+            self.shards[s].upsert_batch(shard_ids, &vectors.gather_rows(rows))
+        });
+        for r in results {
+            r?;
+        }
+        for s in 0..self.shards.len() {
+            self.kick_worker(s);
+        }
+        Ok(())
+    }
+
+    /// Delete a vector by id (routed). Returns whether a live row was
+    /// deleted.
+    pub fn delete(&self, id: u32) -> Result<bool> {
+        let s = self.shard_of(id);
+        let hit = self.shards[s].delete(id)?;
+        self.kick_worker(s);
+        Ok(hit)
+    }
+
+    /// Publish any mutations buffered in the shards' group-commit
+    /// windows. Returns how many shards published.
+    pub fn flush(&self) -> usize {
+        self.shards.iter().filter(|s| s.flush()).count()
+    }
+
+    /// Inline major compaction of every shard (parallel). Prefer
+    /// `background_compact` in serving deployments; this is the
+    /// deterministic path for tests, benches, and the CLI.
+    pub fn compact(&self) -> Result<CollectionStats> {
+        let results: Vec<Result<MutableStats>> =
+            par_map(self.shards.len(), |s| self.shards[s].compact());
+        let mut shards = Vec::with_capacity(results.len());
+        for r in results {
+            shards.push(r?);
+        }
+        Ok(CollectionStats { shards })
+    }
+
+    /// Current per-shard bookkeeping.
+    pub fn stats(&self) -> CollectionStats {
+        CollectionStats {
+            shards: self.shards.iter().map(|s| s.stats()).collect(),
+        }
+    }
+
+    /// Convenience single-query search against a fresh snapshot (capture
+    /// + fan-out + merge). Serving paths should hold a
+    /// [`CollectionSnapshot`] and a scratch instead.
+    pub fn search(&self, q: &[f32], params: &SearchParams) -> (Vec<Scored>, SearchStats) {
+        let snap = self.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &self.engine);
+        if snap.shards.len() == 1 {
+            let mut scratch = searcher.new_scratch();
+            return searcher.search(q, params, &mut scratch);
+        }
+        searcher.fan_out(q, params)
+    }
+
+    fn kick_worker(&self, s: usize) {
+        if let Some(w) = self.workers.get(s) {
+            let mut kicked = w.shared.kick.lock().unwrap();
+            *kicked = true;
+            w.shared.cv.notify_one();
+        }
+    }
+}
+
+impl Drop for Collection {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            w.shared.stop.store(true, Ordering::Relaxed);
+            w.shared.cv.notify_all();
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MutableConfig, ShardRouting, SpillMode};
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::index::build_index;
+    use crate::linalg::Rng;
+
+    fn dataset(n: usize, seed: u64) -> crate::data::Dataset {
+        SyntheticConfig::glove_like(n, 16, 12, seed).generate()
+    }
+
+    fn index_cfg(parts: usize) -> IndexConfig {
+        IndexConfig {
+            num_partitions: parts,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        }
+    }
+
+    fn full_probe(parts: usize, budget: usize) -> SearchParams {
+        SearchParams {
+            k: 10,
+            top_t: parts,
+            rerank_budget: budget,
+        }
+    }
+
+    #[test]
+    fn one_shard_collection_matches_snapshot_searcher_exactly() {
+        let ds = dataset(900, 17);
+        let engine = Arc::new(Engine::cpu());
+        let icfg = index_cfg(18);
+        let collection =
+            Collection::build(engine.clone(), &ds.data, &icfg, CollectionConfig::default())
+                .unwrap();
+        assert_eq!(collection.num_shards(), 1);
+
+        let single = build_index(&engine, &ds.data, &icfg).unwrap();
+        let single_snap = IndexSnapshot::from_index(Arc::new(single));
+        let single_searcher = SnapshotSearcher::new(&single_snap, &engine);
+        let mut single_scratch = SearchScratch::for_snapshot(&single_snap);
+
+        let snap = collection.snapshot();
+        snap.check_invariants().unwrap();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let mut scratch = searcher.new_scratch();
+        for params in [SearchParams::default(), full_probe(18, 400)] {
+            for qi in 0..ds.num_queries() {
+                let q = ds.queries.row(qi);
+                let (a, st_a) = searcher.search(q, &params, &mut scratch);
+                let (b, st_b) = single_searcher.search(q, &params, &mut single_scratch);
+                assert_eq!(a, b, "query {qi}: ids AND scores must be identical");
+                assert_eq!(st_a, st_b);
+            }
+        }
+        // Batch path delegates identically.
+        let batch = searcher
+            .search_batch(&ds.queries, &SearchParams::default())
+            .unwrap();
+        let single_batch = single_searcher
+            .search_batch(&ds.queries, &SearchParams::default())
+            .unwrap();
+        assert_eq!(batch, single_batch);
+    }
+
+    #[test]
+    fn sharded_collection_routes_and_serves_mutations() {
+        let ds = dataset(1200, 19);
+        let engine = Arc::new(Engine::cpu());
+        let cfg = CollectionConfig {
+            num_shards: 3,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &index_cfg(24), cfg).unwrap();
+        assert_eq!(c.num_shards(), 3);
+        let snap = c.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.live_count(), 1200);
+        // Shards hold disjoint, routing-consistent id sets.
+        for s in 0..3 {
+            let shard_snap = c.shard(s).snapshot();
+            for seg in &shard_snap.sealed {
+                for &g in &seg.global_ids {
+                    assert_eq!(c.shard_of(g), s, "id {g} misrouted");
+                }
+            }
+        }
+
+        // Upserts land on their shard and surface through the facade.
+        let mut rng = Rng::new(5);
+        let mut v = vec![0.0f32; 16];
+        rng.fill_gaussian(&mut v);
+        crate::linalg::normalize(&mut v);
+        c.upsert(5000, &v).unwrap();
+        let home = c.shard_of(5000);
+        assert_eq!(c.shard(home).stats().delta_rows, 1);
+        let (res, _) = c.search(&v, &full_probe(24, 2000));
+        assert_eq!(res[0].id, 5000);
+        assert!(c.delete(5000).unwrap());
+        assert!(!c.delete(5000).unwrap());
+        let (res, _) = c.search(&v, &full_probe(24, 2000));
+        assert!(res.iter().all(|r| r.id != 5000));
+
+        // Batch upserts fan out to every shard they touch.
+        let ids: Vec<u32> = (6000..6012).collect();
+        let mut m = MatrixF32::zeros(12, 16);
+        for i in 0..12 {
+            rng.fill_gaussian(m.row_mut(i));
+            crate::linalg::normalize(m.row_mut(i));
+        }
+        c.upsert_batch(&ids, &m).unwrap();
+        let snap = c.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.live_count(), 1200 + 12);
+        let stats = c.stats();
+        assert_eq!(stats.delta_rows(), 12);
+        // Compaction folds the deltas back in without changing results.
+        let (before, _) = c.search(m.row(0), &full_probe(24, 4000));
+        let after_stats = c.compact().unwrap();
+        assert_eq!(after_stats.delta_rows(), 0);
+        assert_eq!(after_stats.max_sealed_segments(), 1);
+        let (after, _) = c.search(m.row(0), &full_probe(24, 4000));
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn build_rejects_empty_shards_and_bad_seeds() {
+        let ds = dataset(40, 23);
+        let engine = Arc::new(Engine::cpu());
+        let cfg = CollectionConfig {
+            num_shards: 64,
+            ..Default::default()
+        };
+        // 40 ids over 64 shards must leave shards empty (pigeonhole).
+        assert!(Collection::build(engine.clone(), &ds.data, &index_cfg(8), cfg).is_err());
+        // A multi-shard config cannot adopt one monolithic index.
+        let idx = build_index(&engine, &ds.data, &index_cfg(4)).unwrap();
+        let bad = CollectionConfig {
+            num_shards: 2,
+            ..Default::default()
+        };
+        assert!(Collection::from_index(idx, engine, bad).is_err());
+    }
+
+    #[test]
+    fn from_snapshots_validates_routing() {
+        let ds = dataset(600, 29);
+        let engine = Arc::new(Engine::cpu());
+        let cfg = CollectionConfig {
+            num_shards: 2,
+            routing: ShardRouting::Modulo,
+            ..Default::default()
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &index_cfg(12), cfg).unwrap();
+        let snaps = c.snapshot().shards;
+        // Same shards, same config: accepted.
+        let reopened = Collection::from_snapshots(snaps.clone(), engine.clone(), cfg).unwrap();
+        assert_eq!(reopened.snapshot().live_count(), 600);
+        // Swapped shard order misroutes every id: rejected.
+        let swapped = vec![snaps[1].clone(), snaps[0].clone()];
+        assert!(Collection::from_snapshots(swapped, engine.clone(), cfg).is_err());
+        // Shard-count mismatch: rejected.
+        assert!(Collection::from_snapshots(snaps, engine, CollectionConfig::default()).is_err());
+    }
+
+    #[test]
+    fn background_worker_compacts_off_the_write_path() {
+        let ds = dataset(700, 31);
+        let engine = Arc::new(Engine::cpu());
+        let cfg = CollectionConfig {
+            num_shards: 1,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                delta_capacity: 8,
+                auto_compact: true, // overridden by background_compact
+                ..Default::default()
+            },
+            background_compact: true,
+        };
+        let c = Collection::build(engine, &ds.data, &index_cfg(14), cfg).unwrap();
+        assert!(!c.config().shard_mutable().auto_compact);
+        let mut rng = Rng::new(7);
+        for i in 0..40u32 {
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            c.upsert(1000 + i, &v).unwrap();
+        }
+        // The worker seals + merges asynchronously; wait for it to catch
+        // up rather than assuming scheduling.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let stats = c.stats();
+            if stats.compactions() >= 1 && stats.delta_rows() < 8 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "background worker never compacted: {stats:?}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let snap = c.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.live_count(), 740);
+        drop(c); // joins the worker cleanly
+    }
+}

@@ -9,10 +9,11 @@
 //! * [`builder`]    — the indexing pipeline (§3.5: train VQ → primary
 //!                    assign → residuals → SOAR spill → PQ encode).
 //! * [`searcher`]   — multi-stage query path (centroid top-t → ADC scan
-//!                    with dedup → int8 rerank): [`Searcher`] over one
-//!                    monolithic index, [`SnapshotSearcher`] over a
-//!                    segmented snapshot (tombstone/shadow filtering +
-//!                    per-segment top-k merge).
+//!                    with dedup → int8 rerank): the [`Search`] trait,
+//!                    [`Searcher`] over one monolithic index,
+//!                    [`SnapshotSearcher`] over a segmented snapshot
+//!                    (tombstone/shadow filtering + per-segment top-k
+//!                    merge).
 //! * [`segment`]    — segmented architecture: immutable
 //!                    [`SealedSegment`]s, the frozen [`DeltaSegment`],
 //!                    the [`IndexSnapshot`] queries run against, and the
@@ -20,19 +21,28 @@
 //! * [`mutable`]    — the write path: [`MutableIndex`] with online
 //!                    `upsert`/`delete` (new points spill-assigned via
 //!                    Theorem 3.1 against the fixed codebook), delta
-//!                    sealing, and tombstone-purging compaction.
+//!                    sealing, group-commit publishing, and inline or
+//!                    staged (off-write-path) compaction.
+//! * [`collection`] — the public facade: a [`Collection`] of S
+//!                    independently mutable, snapshot-served shards with
+//!                    routed writes, parallel fan-out reads
+//!                    ([`CollectionSearcher`]), and per-shard background
+//!                    compaction workers.
 //! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
 //! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
 //! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
 //! * [`serialize`]  — versioned binary formats (v1 single index,
-//!                    v2 segments + delta + tombstones, with v1
-//!                    backward-compat reads) + Table 1 memory accounting.
+//!                    v2 segments + delta + tombstones, v3 sharded
+//!                    collection manifests, with backward-compat reads)
+//!                    + Table 1 memory accounting.
 //!
 //! Invariant checking is layered the same way: [`SoarIndex::check_invariants`]
 //! covers one segment; [`segment::IndexSnapshot::check_invariants`] extends it
-//! across sealed segments, the delta, and the tombstone set.
+//! across sealed segments, the delta, and the tombstone set;
+//! [`collection::CollectionSnapshot::check_invariants`] spans the shards.
 
 pub mod builder;
+pub mod collection;
 pub mod ivf;
 pub mod kmr;
 pub mod multilevel;
@@ -43,10 +53,11 @@ pub mod serialize;
 pub mod soar;
 pub mod stats;
 
-pub use builder::build_index;
+pub use builder::{build_index, build_index_with_int8};
+pub use collection::{Collection, CollectionSearcher, CollectionSnapshot, CollectionStats};
 pub use ivf::{IvfIndex, PostingList};
-pub use mutable::{MutableIndex, MutableStats};
-pub use searcher::{SearchScratch, SearchStats, Searcher, SnapshotSearcher};
+pub use mutable::{CompactionJob, MutableIndex, MutableStats};
+pub use searcher::{Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher};
 pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 
 use crate::config::IndexConfig;

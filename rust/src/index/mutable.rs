@@ -23,6 +23,20 @@
 //!
 //! Compaction triggers ([`MutableConfig`]): delta row count
 //! (`delta_capacity`) and tombstone pressure (`tombstone_ratio`).
+//!
+//! Two mechanisms keep writers off the slow paths:
+//!
+//! * **Group-commit publishing** (`MutableConfig::publish_coalesce`):
+//!   single-row mutations only republish the snapshot every N mutations,
+//!   amortizing the O(delta + id_space/64) freeze; [`MutableIndex::flush`]
+//!   forces a publish for read-your-writes.
+//! * **Staged compaction** ([`MutableIndex::begin_compaction`] →
+//!   [`CompactionJob::merge`] → [`MutableIndex::install_compaction`]):
+//!   the sealed-segment merge runs on a *copy* captured under a brief
+//!   lock, off the write path; writers keep mutating throughout and stall
+//!   only for the final install + snapshot store.
+//!   [`MutableIndex::compact_concurrent`] drives all three phases and is
+//!   what `Collection`'s per-shard background workers call.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
@@ -220,6 +234,138 @@ struct Inner {
     tombstones: HashSet<u32>,
     epoch: u64,
     compactions: u64,
+    /// Mutations accumulated since the last snapshot publish (the
+    /// group-commit window counter).
+    pending: usize,
+}
+
+/// Append the surviving rows of one sealed segment into a merged segment
+/// layout (`keep(local, global)` decides survival). Shared by inline
+/// compaction and the off-write-path [`CompactionJob::merge`].
+fn gather_segment_rows(
+    seg: &SealedSegment,
+    keep: &dyn Fn(u32, u32) -> bool,
+    cb: usize,
+    has_int8: bool,
+    postings: &mut [PostingList],
+    global_ids: &mut Vec<u32>,
+    assignments: &mut Vec<Vec<u32>>,
+    raw_int8: &mut Vec<i8>,
+) -> Result<()> {
+    let idx = &seg.index;
+    // partition-major → row-major code gather
+    let mut row_codes: Vec<Vec<(u32, Vec<u8>)>> = vec![Vec::new(); idx.n];
+    for (p, list) in idx.ivf.postings.iter().enumerate() {
+        for (pos, &local) in list.ids.iter().enumerate() {
+            row_codes[local as usize].push((p as u32, list.code(pos, cb).to_vec()));
+        }
+    }
+    for local in 0..idx.n {
+        let g = seg.global_ids[local];
+        if !keep(local as u32, g) {
+            continue;
+        }
+        let new_local = global_ids.len() as u32;
+        for &p in &idx.assignments[local] {
+            let code = row_codes[local]
+                .iter()
+                .find(|(pp, _)| *pp == p)
+                .map(|(_, c)| c.clone())
+                .ok_or_else(|| {
+                    Error::Serialize(format!("segment row {local} missing code for partition {p}"))
+                })?;
+            postings[p as usize].push(new_local, &code);
+        }
+        global_ids.push(g);
+        assignments.push(idx.assignments[local].clone());
+        if has_int8 {
+            raw_int8.extend_from_slice(idx.int8_record(local as u32));
+        }
+    }
+    Ok(())
+}
+
+/// Assemble gathered rows into a fresh sealed segment sharing `base`'s
+/// codebook (centroids, PQ, int8 scales); no engine calls.
+fn assemble_segment(
+    base: &SoarIndex,
+    postings: Vec<PostingList>,
+    global_ids: Vec<u32>,
+    assignments: Vec<Vec<u32>>,
+    raw_int8: Vec<i8>,
+) -> Result<SealedSegment> {
+    let mut index = SoarIndex {
+        config: base.config.clone(),
+        n: global_ids.len(),
+        dim: base.dim,
+        ivf: IvfIndex {
+            centroids: base.ivf.centroids.clone(),
+            postings,
+        },
+        pq: base.pq.clone(),
+        int8: base.int8.clone(),
+        raw_int8,
+        assignments,
+        blocked: Vec::new(),
+    };
+    index.rebuild_blocked();
+    index.check_invariants()?;
+    SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))
+}
+
+/// A sealed-segment merge captured off the write path: phase 1 of the
+/// staged compaction ([`MutableIndex::begin_compaction`]). Holds clones of
+/// the `Arc`'d segments and the tombstone set at capture time; the
+/// expensive [`CompactionJob::merge`] then runs without any lock while
+/// writers keep mutating the index.
+///
+/// Unlike the inline [`MutableIndex::compact`], the staged merge covers
+/// sealed segments only — the delta keeps moving underneath it and rows it
+/// supersedes stay filtered by the snapshot's `dead` bitmap until the next
+/// merge picks them up.
+#[derive(Debug)]
+pub struct CompactionJob {
+    captured: Vec<Arc<SealedSegment>>,
+    tombstones: HashSet<u32>,
+}
+
+impl CompactionJob {
+    /// Rows stored across the captured segments (the merge workload).
+    pub fn rows(&self) -> usize {
+        self.captured.iter().map(|s| s.len()).sum()
+    }
+
+    /// Segments captured for the merge.
+    pub fn segments(&self) -> usize {
+        self.captured.len()
+    }
+
+    /// Phase 2 (no lock held): merge the captured segments into one,
+    /// dropping rows tombstoned or shadowed *as of capture time*. Rows
+    /// deleted or superseded after capture are handled at install / scan
+    /// time by the tombstone set and the snapshot `dead` bitmap.
+    pub fn merge(&self) -> Result<SealedSegment> {
+        let base = &self.captured[0].index;
+        let cb = base.pq.code_bytes();
+        let has_int8 = base.int8.is_some();
+        let mut postings = vec![PostingList::default(); base.num_partitions()];
+        let mut global_ids: Vec<u32> = Vec::new();
+        let mut assignments: Vec<Vec<u32>> = Vec::new();
+        let mut raw_int8: Vec<i8> = Vec::new();
+        for seg in &self.captured {
+            gather_segment_rows(
+                seg.as_ref(),
+                &|local, g| !self.tombstones.contains(&g) && !seg.shadow_bits.get(local as usize),
+                cb,
+                has_int8,
+                &mut postings,
+                &mut global_ids,
+                &mut assignments,
+                &mut raw_int8,
+            )?;
+        }
+        assemble_segment(base, postings, global_ids, assignments, raw_int8)
+    }
 }
 
 /// A segmented index accepting online upserts and deletes while serving
@@ -285,6 +431,7 @@ impl MutableIndex {
             tombstones: (*snapshot.tombstones).clone(),
             epoch: snapshot.epoch,
             compactions: 0,
+            pending: 0,
         };
         Ok(MutableIndex {
             engine,
@@ -365,7 +512,7 @@ impl MutableIndex {
         if self.config.auto_compact && self.delta_full(&inner) {
             self.compact_locked(&mut inner)?;
         } else {
-            self.publish_locked(&mut inner);
+            self.note_mutations_locked(&mut inner, ids.len());
         }
         Ok(())
     }
@@ -395,7 +542,7 @@ impl MutableIndex {
         if self.config.auto_compact && (pressure || self.delta_full(&inner)) {
             self.compact_locked(&mut inner)?;
         } else {
-            self.publish_locked(&mut inner);
+            self.note_mutations_locked(&mut inner, 1);
         }
         Ok(in_delta || (in_sealed && !was_tombstoned))
     }
@@ -455,6 +602,7 @@ impl MutableIndex {
 
     /// Publish the current writer state as an immutable snapshot.
     fn publish_locked(&self, inner: &mut Inner) {
+        inner.pending = 0;
         inner.epoch += 1;
         let snap = IndexSnapshot::new(
             inner.sealed.clone(),
@@ -463,6 +611,101 @@ impl MutableIndex {
             inner.epoch,
         );
         self.cell.store(Arc::new(snap));
+    }
+
+    /// Record `count` mutations and publish once the group-commit window
+    /// (`publish_coalesce`) fills.
+    fn note_mutations_locked(&self, inner: &mut Inner, count: usize) {
+        inner.pending += count;
+        if inner.pending >= self.config.publish_coalesce {
+            self.publish_locked(inner);
+        }
+    }
+
+    /// Publish any mutations still buffered inside the group-commit
+    /// window. Returns whether a new snapshot was published (`false` when
+    /// the published snapshot was already current).
+    pub fn flush(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.pending > 0 {
+            self.publish_locked(&mut inner);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Phase 1 of the staged compaction (brief lock): capture the sealed
+    /// segments and tombstone set. Run [`CompactionJob::merge`] on the
+    /// returned job — on any thread, with no lock held — then
+    /// [`MutableIndex::install_compaction`].
+    pub fn begin_compaction(&self) -> CompactionJob {
+        let inner = self.inner.lock().unwrap();
+        CompactionJob {
+            captured: inner.sealed.clone(),
+            tombstones: inner.tombstones.clone(),
+        }
+    }
+
+    /// Phase 3 of the staged compaction (brief lock): swap the merged
+    /// segment in for the captured ones. Segments sealed *after* capture
+    /// are kept on top of the merged one (their ids shadow it), and
+    /// tombstones whose rows were purged by the merge are dropped.
+    ///
+    /// Returns `false` — leaving the index untouched — when the capture
+    /// was invalidated by a concurrent major compaction (the captured
+    /// segments no longer form a prefix of the sealed list).
+    pub fn install_compaction(&self, job: &CompactionJob, merged: SealedSegment) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.sealed.len() < job.captured.len() {
+            return Ok(false);
+        }
+        for (cur, cap) in inner.sealed.iter().zip(&job.captured) {
+            if !Arc::ptr_eq(&cur.index, &cap.index) {
+                return Ok(false);
+            }
+        }
+        let newer: Vec<Arc<SealedSegment>> = inner.sealed[job.captured.len()..].to_vec();
+        // Rows re-sealed after capture shadow their merged copies.
+        let mut shadow: HashSet<u32> = HashSet::new();
+        for seg in &newer {
+            shadow.extend(seg.global_ids.iter().copied());
+        }
+        let merged = Arc::new(merged.with_shadow(Arc::new(shadow)));
+        let mut sealed = Vec::with_capacity(1 + newer.len());
+        sealed.push(merged);
+        sealed.extend(newer);
+        // A tombstone survives only while some sealed row still carries
+        // its id (rows purged by the merge no longer need masking).
+        inner
+            .tombstones
+            .retain(|t| sealed.iter().any(|s| s.contains_global(*t)));
+        inner.sealed = sealed;
+        inner.compactions += 1;
+        self.publish_locked(&mut inner);
+        Ok(true)
+    }
+
+    /// Run the staged compaction end to end: capture (brief lock), merge
+    /// (no lock — writers proceed), install (brief lock). Returns whether
+    /// the merge was installed (`false` if a concurrent major compaction
+    /// won the race; the index is left consistent either way).
+    pub fn compact_concurrent(&self) -> Result<bool> {
+        let job = self.begin_compaction();
+        let merged = job.merge()?;
+        self.install_compaction(&job, merged)
+    }
+
+    /// Background-worker probe: `(seal_delta, merge_sealed)` pressure by
+    /// the [`MutableConfig`] triggers. `merge_sealed` also reports
+    /// multi-segment states so workers collapse freshly sealed deltas.
+    pub fn compaction_pressure(&self) -> (bool, bool) {
+        let inner = self.inner.lock().unwrap();
+        let seal = self.delta_full(&inner);
+        let sealed_rows: usize = inner.sealed.iter().map(|s| s.len()).sum();
+        let merge = inner.sealed.len() > 1
+            || inner.tombstones.len() as f32 > self.config.tombstone_ratio * sealed_rows as f32;
+        (seal, merge)
     }
 
     /// Build a sealed segment out of the delta builder's live rows (local
@@ -481,23 +724,7 @@ impl MutableIndex {
             &mut assignments,
             &mut raw_int8,
         )?;
-        let mut index = SoarIndex {
-            config: base.config.clone(),
-            n: global_ids.len(),
-            dim: base.dim,
-            ivf: IvfIndex {
-                centroids: base.ivf.centroids.clone(),
-                postings,
-            },
-            pq: base.pq.clone(),
-            int8: base.int8.clone(),
-            raw_int8,
-            assignments,
-            blocked: Vec::new(),
-        };
-        index.rebuild_blocked();
-        index.check_invariants()?;
-        SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))
+        assemble_segment(base, postings, global_ids, assignments, raw_int8)
     }
 
     fn compact_locked(&self, inner: &mut Inner) -> Result<()> {
@@ -513,42 +740,23 @@ impl MutableIndex {
         // Sealed rows (oldest → newest): keep rows that are not
         // tombstoned, not shadowed by a newer sealed segment, and not
         // superseded by a delta row.
+        let tombstones = &inner.tombstones;
+        let delta = &inner.delta;
         for seg in &inner.sealed {
-            let idx = &seg.index;
-            // partition-major → row-major code gather
-            let mut row_codes: Vec<Vec<(u32, Vec<u8>)>> = vec![Vec::new(); idx.n];
-            for (p, list) in idx.ivf.postings.iter().enumerate() {
-                for (pos, &local) in list.ids.iter().enumerate() {
-                    row_codes[local as usize].push((p as u32, list.code(pos, cb).to_vec()));
-                }
-            }
-            for local in 0..idx.n {
-                let g = seg.global_ids[local];
-                if inner.tombstones.contains(&g)
-                    || seg.shadow.contains(&g)
-                    || inner.delta.slot_of.contains_key(&g)
-                {
-                    continue;
-                }
-                let new_local = global_ids.len() as u32;
-                for &p in &idx.assignments[local] {
-                    let code = row_codes[local]
-                        .iter()
-                        .find(|(pp, _)| *pp == p)
-                        .map(|(_, c)| c.clone())
-                        .ok_or_else(|| {
-                            Error::Serialize(format!(
-                                "segment row {local} missing code for partition {p}"
-                            ))
-                        })?;
-                    postings[p as usize].push(new_local, &code);
-                }
-                global_ids.push(g);
-                assignments.push(idx.assignments[local].clone());
-                if has_int8 {
-                    raw_int8.extend_from_slice(idx.int8_record(local as u32));
-                }
-            }
+            gather_segment_rows(
+                seg.as_ref(),
+                &|local, g| {
+                    !tombstones.contains(&g)
+                        && !seg.shadow_bits.get(local as usize)
+                        && !delta.slot_of.contains_key(&g)
+                },
+                cb,
+                has_int8,
+                &mut postings,
+                &mut global_ids,
+                &mut assignments,
+                &mut raw_int8,
+            )?;
         }
 
         // Delta rows (always newest → always kept).
@@ -561,23 +769,7 @@ impl MutableIndex {
             &mut raw_int8,
         )?;
 
-        let mut merged = SoarIndex {
-            config: base.config.clone(),
-            n: global_ids.len(),
-            dim: base.dim,
-            ivf: IvfIndex {
-                centroids: base.ivf.centroids.clone(),
-                postings,
-            },
-            pq: base.pq.clone(),
-            int8: base.int8.clone(),
-            raw_int8,
-            assignments,
-            blocked: Vec::new(),
-        };
-        merged.rebuild_blocked();
-        merged.check_invariants()?;
-        let seg = SealedSegment::new(Arc::new(merged), global_ids, Arc::new(HashSet::new()))?;
+        let seg = assemble_segment(&base, postings, global_ids, assignments, raw_int8)?;
         inner.sealed = vec![Arc::new(seg)];
         inner.delta.reset();
         inner.tombstones.clear();
@@ -787,6 +979,7 @@ mod tests {
                 delta_capacity: 8,
                 tombstone_ratio: 0.05,
                 auto_compact: true,
+                publish_coalesce: 1,
             },
         )
         .unwrap();
@@ -810,6 +1003,143 @@ mod tests {
             "compaction must have purged tombstones, left {}",
             s.tombstones
         );
+        m.snapshot().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn publish_coalesce_amortizes_snapshot_publishing() {
+        let (ds, _, engine) = fixture(400);
+        let cfg = IndexConfig {
+            num_partitions: 16,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let m = MutableIndex::from_index(
+            idx,
+            engine.clone(),
+            MutableConfig {
+                auto_compact: false,
+                publish_coalesce: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let e0 = m.snapshot().epoch;
+        let mut rng = Rng::new(41);
+        for i in 0..3u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(900 + i, &v).unwrap();
+        }
+        // Window not full: the published snapshot is unchanged.
+        assert_eq!(m.snapshot().epoch, e0);
+        assert_eq!(m.snapshot().delta.len(), 0);
+        let v = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(903, &v).unwrap();
+        // 4th mutation fills the window: one publish covers all four.
+        assert_eq!(m.snapshot().epoch, e0 + 1);
+        assert_eq!(m.snapshot().delta.len(), 4);
+        // Deletes count toward the window; flush forces the publish early.
+        m.delete(0).unwrap();
+        assert_eq!(m.snapshot().epoch, e0 + 1);
+        assert!(m.flush());
+        assert_eq!(m.snapshot().epoch, e0 + 2);
+        assert!(m.snapshot().tombstones.contains(&0));
+        assert!(!m.flush(), "nothing pending after a flush");
+        // A batch counts as its row count, and sealing always publishes.
+        let ids: Vec<u32> = (910..914).collect();
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| perturbed(&mut rng, &ds.data, 0.15)).collect();
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        m.upsert_batch(&ids, &MatrixF32::from_rows(&row_refs).unwrap())
+            .unwrap();
+        assert_eq!(m.snapshot().epoch, e0 + 3);
+        m.upsert(920, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        assert!(m.seal_delta().unwrap());
+        assert_eq!(m.snapshot().delta.len(), 0);
+        assert!(m.snapshot().sealed.len() >= 2);
+        m.snapshot().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn staged_compaction_runs_off_the_write_path() {
+        let (ds, m, engine) = fixture(800);
+        let mut rng = Rng::new(23);
+        // Two sealed segments + tombstones + a live delta.
+        for i in 0..40u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(1000 + i, &v).unwrap();
+        }
+        assert!(m.seal_delta().unwrap());
+        for id in [3u32, 9, 1005] {
+            assert!(m.delete(id).unwrap());
+        }
+        for i in 0..10u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(2000 + i, &v).unwrap();
+        }
+
+        // Phase 1: capture. No lock is held afterwards.
+        let job = m.begin_compaction();
+        assert_eq!(job.segments(), 2);
+        assert_eq!(job.rows(), 840);
+
+        // Writers proceed while the merge would be running.
+        assert!(m.delete(17).unwrap()); // tombstone born after capture
+        let moved = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(25, &moved).unwrap(); // supersedes a captured sealed row
+        let fresh = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(3000, &fresh).unwrap();
+        // Seal mid-merge: a post-capture segment the install must keep.
+        assert!(m.seal_delta().unwrap());
+
+        // Phase 2 (no lock) + phase 3 (brief lock).
+        let merged = job.merge().unwrap();
+        assert!(m.install_compaction(&job, merged).unwrap());
+
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        // merged + the post-capture segment
+        assert_eq!(snap.sealed.len(), 2);
+        let expected_live = 800 + 40 + 10 + 1 - 3 - 1; // inserts − deletes
+        assert_eq!(snap.live_count(), expected_live);
+        // Post-capture mutations are honored by the merged state.
+        let params = full_probe(16);
+        for q in [&moved, &fresh] {
+            let ids = top_ids(&m, &engine, q, &params);
+            assert!(!ids.contains(&17), "post-capture delete must hold");
+        }
+        assert_eq!(top_ids(&m, &engine, &moved, &params)[0], 25);
+        assert_eq!(top_ids(&m, &engine, &fresh, &params)[0], 3000);
+        // Captured tombstones were purged by the merge; the post-capture
+        // one survives because its row still exists in the merged segment.
+        assert!(!snap.tombstones.contains(&3));
+        assert!(!snap.tombstones.contains(&9));
+        assert!(snap.tombstones.contains(&17));
+        assert_eq!(m.stats().compactions, 1);
+
+        // And mutation continues normally afterwards.
+        m.upsert(4000, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        m.snapshot().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn staged_compaction_aborts_when_invalidated() {
+        let (ds, m, _) = fixture(500);
+        let mut rng = Rng::new(29);
+        for i in 0..12u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(600 + i, &v).unwrap();
+        }
+        assert!(m.seal_delta().unwrap());
+        let job = m.begin_compaction();
+        // A concurrent inline compaction replaces the captured segments…
+        m.compact().unwrap();
+        let epoch = m.snapshot().epoch;
+        // …so the staged install must refuse, leaving the index untouched.
+        let merged = job.merge().unwrap();
+        assert!(!m.install_compaction(&job, merged).unwrap());
+        assert_eq!(m.snapshot().epoch, epoch);
+        assert_eq!(m.stats().compactions, 1);
         m.snapshot().check_invariants().unwrap();
     }
 }

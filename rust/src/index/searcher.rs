@@ -107,6 +107,20 @@ pub struct SearchStats {
     pub segments_scanned: usize,
 }
 
+impl SearchStats {
+    /// Fold another query/shard's counters into this one (kept next to
+    /// the field list so adding a counter updates every aggregation
+    /// site).
+    pub fn accumulate(&mut self, other: &SearchStats) {
+        self.partitions_probed += other.partitions_probed;
+        self.points_scanned += other.points_scanned;
+        self.duplicates_skipped += other.duplicates_skipped;
+        self.candidates_reranked += other.candidates_reranked;
+        self.tombstones_skipped += other.tombstones_skipped;
+        self.segments_scanned += other.segments_scanned;
+    }
+}
+
 /// Score every entry of one posting list into the `scores` arena: the
 /// blocked u8 kernel by default, the exact per-candidate f32 walk when
 /// quantization is off.
@@ -161,6 +175,37 @@ where
     .into_iter()
     .flatten()
     .collect()
+}
+
+/// The capability every searcher exposes: scratch construction, a
+/// single-query path, and an engine-batched path. `Collection`, the
+/// serving workers, and the eval sweeps are written against this trait,
+/// so each backing index shape ([`Searcher`] over a monolithic index,
+/// [`SnapshotSearcher`] over a segmented snapshot,
+/// [`crate::index::CollectionSearcher`] over a sharded collection) plugs
+/// in without duplicating per-searcher plumbing.
+pub trait Search: Sync {
+    /// Vector dimensionality queries must match.
+    fn dim(&self) -> usize;
+
+    /// Fresh scratch sized for this searcher's largest posting list.
+    fn new_scratch(&self) -> SearchScratch;
+
+    /// Single-query search (CPU partition selection).
+    fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats);
+
+    /// Batched search: engine-batched partition selection + parallel
+    /// per-query scans.
+    fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>>;
 }
 
 /// Read-only searcher over an index; cheap to construct, `Sync`.
@@ -284,6 +329,33 @@ impl<'a> Searcher<'a> {
             }
         };
         (result, stats)
+    }
+}
+
+impl Search for Searcher<'_> {
+    fn dim(&self) -> usize {
+        self.index.dim
+    }
+
+    fn new_scratch(&self) -> SearchScratch {
+        SearchScratch::new(self.index)
+    }
+
+    fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        Searcher::search(self, q, params, scratch)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        Searcher::search_batch(self, queries, params)
     }
 }
 
@@ -483,6 +555,33 @@ impl<'a> SnapshotSearcher<'a> {
     }
 }
 
+impl Search for SnapshotSearcher<'_> {
+    fn dim(&self) -> usize {
+        self.snapshot.dim()
+    }
+
+    fn new_scratch(&self) -> SearchScratch {
+        SearchScratch::for_snapshot(self.snapshot)
+    }
+
+    fn search(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Scored>, SearchStats) {
+        SnapshotSearcher::search(self, q, params, scratch)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        SnapshotSearcher::search_batch(self, queries, params)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -679,6 +778,40 @@ mod tests {
         for qi in 0..ds.num_queries() {
             let (single, _) = snap_searcher.search(ds.queries.row(qi), &params, &mut s2);
             assert_eq!(single, batch[qi].0, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn search_trait_unifies_both_searchers() {
+        use crate::index::segment::IndexSnapshot;
+        use std::sync::Arc;
+        fn via_trait<S: Search>(s: &S, q: &[f32], params: &SearchParams) -> Vec<u32> {
+            let mut scratch = s.new_scratch();
+            Search::search(s, q, params, &mut scratch)
+                .0
+                .into_iter()
+                .map(|r| r.id)
+                .collect()
+        }
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 900);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let snap = IndexSnapshot::from_index(Arc::new(idx.clone()));
+        let snap_searcher = SnapshotSearcher::new(&snap, &engine);
+        assert_eq!(Search::dim(&searcher), 16);
+        assert_eq!(Search::dim(&snap_searcher), 16);
+        let params = SearchParams::default();
+        let mut sc = SearchScratch::new(&idx);
+        for qi in 0..4 {
+            let q = ds.queries.row(qi);
+            let direct: Vec<u32> = searcher
+                .search(q, &params, &mut sc)
+                .0
+                .into_iter()
+                .map(|r| r.id)
+                .collect();
+            assert_eq!(via_trait(&searcher, q, &params), direct);
+            assert_eq!(via_trait(&snap_searcher, q, &params), direct);
         }
     }
 

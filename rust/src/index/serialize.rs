@@ -19,16 +19,28 @@
 //! deterministically from the raw rows against the base codebook on load,
 //! so v2 stays compact and byte-order-stable.
 //!
+//! v3 — a sharded collection ([`save_collection`] /
+//! [`load_collection_parts`]): a directory with one v2 snapshot file per
+//! shard plus a `COLLECTION.soar` manifest:
+//! ```text
+//!   magic "SOAR" | version=3 u32 | collection-config-json (len u64 + bytes)
+//!   num_shards u64 | per shard: file name (len u64 + utf8 bytes)
+//! ```
+//! [`load_collection_parts`] also accepts a v1 or v2 *file* path, which
+//! loads as a 1-shard collection — legacy indexes migrate without a
+//! rewrite.
+//!
 //! All integers little-endian throughout.
 
 use std::collections::HashSet;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::config::IndexConfig;
+use crate::config::{CollectionConfig, IndexConfig};
 use crate::error::{Error, Result};
+use crate::index::collection::CollectionSnapshot;
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment};
 use crate::index::{IvfIndex, PostingList, SoarIndex};
 use crate::linalg::MatrixF32;
@@ -37,6 +49,10 @@ use crate::quant::{Int8Quantizer, ProductQuantizer};
 const MAGIC: &[u8; 4] = b"SOAR";
 const VERSION: u32 = 1;
 const VERSION_SEGMENTED: u32 = 2;
+const VERSION_COLLECTION: u32 = 3;
+
+/// Manifest file name inside a v3 collection directory.
+pub const COLLECTION_MANIFEST: &str = "COLLECTION.soar";
 
 // ---------------------------------------------------------------------
 // primitives
@@ -383,6 +399,103 @@ pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
 }
 
 // ---------------------------------------------------------------------
+// v3: sharded collections (manifest + per-shard snapshot files)
+// ---------------------------------------------------------------------
+
+/// File name of shard `s`'s snapshot inside a collection directory.
+fn shard_file_name(s: usize) -> String {
+    format!("shard-{s:04}.soar")
+}
+
+/// Save a collection as a v3 manifest directory: `dir/COLLECTION.soar`
+/// plus one v2 snapshot file per shard. `dir` is created if needed.
+pub fn save_collection(
+    snapshot: &CollectionSnapshot,
+    config: &CollectionConfig,
+    dir: &Path,
+) -> Result<()> {
+    config.validate()?;
+    if snapshot.shards.len() != config.num_shards {
+        return Err(Error::Serialize(format!(
+            "{} shard snapshots for a {}-shard config",
+            snapshot.shards.len(),
+            config.num_shards
+        )));
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut names = Vec::with_capacity(snapshot.shards.len());
+    for (s, shard) in snapshot.shards.iter().enumerate() {
+        let name = shard_file_name(s);
+        save_snapshot(shard, &dir.join(&name))?;
+        names.push(name);
+    }
+    let mut w = BufWriter::new(File::create(dir.join(COLLECTION_MANIFEST))?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION_COLLECTION)?;
+    w_bytes(&mut w, config.to_json().to_json().as_bytes())?;
+    w_u64(&mut w, names.len() as u64)?;
+    for name in &names {
+        w_bytes(&mut w, name.as_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load the parts of a collection: per-shard snapshots plus the stored
+/// [`CollectionConfig`]. Accepts every on-disk generation:
+///
+/// * a **v3** directory (or a direct path to its `COLLECTION.soar`
+///   manifest) restores all shards;
+/// * a **v1 or v2 file** loads as a 1-shard collection with a default
+///   config — legacy single-index deployments migrate in place.
+pub fn load_collection_parts(path: &Path) -> Result<(Vec<Arc<IndexSnapshot>>, CollectionConfig)> {
+    let manifest: PathBuf = if path.is_dir() {
+        path.join(COLLECTION_MANIFEST)
+    } else {
+        path.to_path_buf()
+    };
+    let mut r = BufReader::new(File::open(&manifest)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Serialize("bad magic".into()));
+    }
+    let version = r_u32(&mut r)?;
+    if version == VERSION || version == VERSION_SEGMENTED {
+        // Legacy single-index / single-snapshot file → 1-shard collection.
+        drop(r);
+        let snapshot = load_snapshot(&manifest)?;
+        return Ok((vec![Arc::new(snapshot)], CollectionConfig::default()));
+    }
+    if version != VERSION_COLLECTION {
+        return Err(Error::Serialize(format!("unsupported version {version}")));
+    }
+    let cfg_bytes = r_bytes(&mut r)?;
+    let cfg_text = std::str::from_utf8(&cfg_bytes)
+        .map_err(|e| Error::Serialize(format!("manifest config utf8: {e}")))?;
+    let config = CollectionConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
+        .map_err(|e| Error::Serialize(format!("manifest config json: {e}")))?;
+    let num_shards = r_u64(&mut r)? as usize;
+    if num_shards != config.num_shards {
+        return Err(Error::Serialize(format!(
+            "manifest lists {num_shards} shard files for a {}-shard config",
+            config.num_shards
+        )));
+    }
+    let base = manifest
+        .parent()
+        .ok_or_else(|| Error::Serialize("manifest has no parent directory".into()))?;
+    let mut shards = Vec::with_capacity(num_shards);
+    for _ in 0..num_shards {
+        let name_bytes = r_bytes(&mut r)?;
+        let name = std::str::from_utf8(&name_bytes)
+            .map_err(|e| Error::Serialize(format!("shard file name utf8: {e}")))?;
+        shards.push(Arc::new(load_snapshot(&base.join(name))?));
+    }
+    Ok((shards, config))
+}
+
+// ---------------------------------------------------------------------
 // memory accounting (Table 1 / §3.5)
 // ---------------------------------------------------------------------
 
@@ -611,6 +724,61 @@ mod tests {
                 assert_eq!(st_a, st_b);
             }
         }
+    }
+
+    #[test]
+    fn v3_collection_manifest_round_trip() {
+        use crate::config::{CollectionConfig, SearchParams, ShardRouting};
+        use crate::index::Collection;
+        use crate::linalg::Rng;
+        use std::sync::Arc;
+
+        let ds = SyntheticConfig::glove_like(500, 16, 6, 61).generate();
+        let engine = Arc::new(Engine::cpu());
+        let icfg = IndexConfig {
+            num_partitions: 10,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let ccfg = CollectionConfig {
+            num_shards: 2,
+            routing: ShardRouting::Modulo,
+            ..Default::default()
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        let mut rng = Rng::new(62);
+        let mut v = vec![0.0f32; 16];
+        rng.fill_gaussian(&mut v);
+        crate::linalg::normalize(&mut v);
+        c.upsert(900, &v).unwrap();
+        c.delete(3).unwrap();
+
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let col_dir = dir.join("col");
+        c.save(&col_dir).unwrap();
+        assert!(col_dir.join(COLLECTION_MANIFEST).exists());
+
+        let back = Collection::load(&col_dir, engine.clone()).unwrap();
+        assert_eq!(*back.config(), ccfg);
+        assert_eq!(back.snapshot().live_count(), 500);
+        let params = SearchParams {
+            k: 10,
+            top_t: 10,
+            rerank_budget: 600,
+        };
+        for qi in 0..ds.num_queries() {
+            let q = ds.queries.row(qi);
+            assert_eq!(c.search(q, &params), back.search(q, &params), "query {qi}");
+        }
+        // The manifest file path is accepted directly as well.
+        let via_manifest =
+            Collection::load(&col_dir.join(COLLECTION_MANIFEST), engine.clone()).unwrap();
+        assert_eq!(via_manifest.num_shards(), 2);
+        // Garbage manifests are rejected.
+        let bad = dir.join("bad");
+        std::fs::create_dir_all(&bad).unwrap();
+        std::fs::write(bad.join(COLLECTION_MANIFEST), b"NOPE____").unwrap();
+        assert!(Collection::load(&bad, engine).is_err());
     }
 
     #[test]

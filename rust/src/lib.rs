@@ -53,10 +53,13 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-pub use config::{IndexConfig, MutableConfig, SearchParams, ServeConfig, SpillMode};
+pub use config::{
+    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ServeConfig, ShardRouting,
+    SpillMode,
+};
 pub use error::{Error, Result};
 pub use index::{
-    build_index, IndexSnapshot, MutableIndex, SearchScratch, Searcher, SnapshotCell,
-    SnapshotSearcher, SoarIndex,
+    build_index, Collection, CollectionSearcher, CollectionSnapshot, IndexSnapshot, MutableIndex,
+    Search, SearchScratch, Searcher, SnapshotCell, SnapshotSearcher, SoarIndex,
 };
 pub use runtime::Engine;

@@ -35,10 +35,13 @@ COMMANDS
                --out index.soar
   search       --index index.soar --queries data/queries.fvecs
                --k 10 --top-t 8 --rerank 200
-  serve        --n 20000 --dim 64 (or --index/--data) --clients 8
+  serve        --n 20000 --dim 64 (or --index/--data) --shards 1 --clients 8
                --requests 64 --max-batch 64 --max-wait-us 200 --workers 4
-  churn        --n 20000 --dim 64 --ops (n/5) --clients 4 --requests 64
-               --delta-cap 4096 — serve while upserting/deleting 20%
+               (--index accepts v1/v2 files and v3 collection dirs)
+  churn        --n 20000 --dim 64 --shards 1 --ops (n/5) --clients 4
+               --requests 64 --delta-cap 4096 --coalesce 1 — serve a
+               collection while upserting/deleting 20%, with per-shard
+               background compaction off the write path
   experiments  <fig1|fig2|fig4|fig7|fig8|fig9|kmr|fig10|fig11|fig12|table1|all>
                --n 20000 --dim 64 --queries 200 --lambda 1.0 --quick
   info         --index index.soar | (artifact summary with no flags)
@@ -64,7 +67,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "n", "dim", "queries", "seed", "out", "data", "partitions", "spill", "lambda",
     "index", "k", "top-t", "rerank", "clients", "requests", "max-batch",
     "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
-    "ops", "delta-cap",
+    "ops", "delta-cap", "shards", "coalesce",
 ];
 
 fn engine_from(args: &Args) -> Engine {
@@ -225,13 +228,22 @@ fn cmd_search(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use soar_ann::config::CollectionConfig;
+    use soar_ann::index::Collection;
+
     let engine = Arc::new(engine_from(args));
-    let index = match args.get("index") {
-        Some(p) => Arc::new(load_index(Path::new(p))?),
+    let collection = match args.get("index") {
+        // v1/v2 files load as 1-shard collections; v3 dirs restore all
+        // shards with their stored routing.
+        Some(p) => Collection::load(Path::new(p), engine.clone())?,
         None => {
             let ds = load_or_generate(args)?;
             let cfg = IndexConfig::for_dataset(ds.n(), spill_from(args)?);
-            Arc::new(build_index(&engine, &ds.data, &cfg)?)
+            let ccfg = CollectionConfig {
+                num_shards: args.get_usize("shards", 1)?,
+                ..Default::default()
+            };
+            Collection::build(engine.clone(), &ds.data, &cfg, ccfg)?
         }
     };
     let ds = load_or_generate(args)?;
@@ -249,11 +261,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 8)?;
     let per_client = args.get_usize("requests", 64)?;
     println!(
-        "serving: n={} partitions={} | {clients} clients x {per_client} reqs",
-        index.n,
-        index.num_partitions()
+        "serving: {} live rows over {} shard(s) | {clients} clients x {per_client} reqs",
+        collection.snapshot().live_count(),
+        collection.num_shards()
     );
-    let server = ServeEngine::start(index, engine, params, serve_cfg);
+    let server = ServeEngine::start_collection(&collection, params, serve_cfg);
     let handle = server.handle();
     let elapsed = closed_loop_load(&handle, &ds.queries, clients, per_client);
     let snap = server.metrics().snapshot();
@@ -270,11 +282,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serve live traffic from a mutable index while a writer thread churns
-/// 20%-of-corpus upserts/deletes through it, then compact and report.
+/// Serve live traffic from a sharded collection while a writer thread
+/// churns 20%-of-corpus upserts/deletes through it (background workers
+/// sealing and merging off the write path), then compact and report.
 fn cmd_churn(args: &Args) -> Result<()> {
-    use soar_ann::config::MutableConfig;
-    use soar_ann::index::MutableIndex;
+    use soar_ann::config::{CollectionConfig, MutableConfig, ShardRouting};
+    use soar_ann::index::Collection;
     use soar_ann::linalg::Rng;
 
     let engine = Arc::new(engine_from(args));
@@ -282,27 +295,30 @@ fn cmd_churn(args: &Args) -> Result<()> {
     let n = ds.n();
     let dim = ds.dim();
     let cfg = IndexConfig::for_dataset(n, spill_from(args)?);
-    println!("building base index over {n} x {dim}…");
+    let ccfg = CollectionConfig {
+        num_shards: args.get_usize("shards", 1)?,
+        routing: ShardRouting::Hash,
+        mutable: MutableConfig {
+            delta_capacity: args.get_usize("delta-cap", 4096)?,
+            publish_coalesce: args.get_usize("coalesce", 1)?,
+            ..Default::default()
+        },
+        background_compact: true,
+    };
+    println!(
+        "building {}-shard collection over {n} x {dim}…",
+        ccfg.num_shards
+    );
     let t0 = std::time::Instant::now();
-    let base = build_index(&engine, &ds.data, &cfg)?;
+    let collection = Arc::new(Collection::build(engine.clone(), &ds.data, &cfg, ccfg)?);
     println!("built in {:.2}s", t0.elapsed().as_secs_f64());
 
-    let mcfg = MutableConfig {
-        delta_capacity: args.get_usize("delta-cap", 4096)?,
-        ..Default::default()
-    };
-    let mutable = Arc::new(MutableIndex::from_index(base, engine.clone(), mcfg)?);
     let params = SearchParams {
         k: args.get_usize("k", 10)?,
         top_t: args.get_usize("top-t", 8)?,
         rerank_budget: args.get_usize("rerank", 200)?,
     };
-    let server = ServeEngine::start_shared(
-        mutable.cell(),
-        engine.clone(),
-        params,
-        ServeConfig::default(),
-    );
+    let server = ServeEngine::start_collection(&collection, params, ServeConfig::default());
     let handle = server.handle();
 
     let ops = args.get_usize("ops", (n / 5).max(1))?;
@@ -312,7 +328,7 @@ fn cmd_churn(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let writer = {
-        let mutable = mutable.clone();
+        let collection = collection.clone();
         let data = ds.data.clone();
         std::thread::spawn(move || -> Result<(usize, usize)> {
             let mut rng = Rng::new(seed ^ 0xc0ffee);
@@ -327,14 +343,15 @@ fn cmd_churn(args: &Args) -> Result<()> {
                         *x += 0.05 * rng.next_gaussian();
                     }
                     soar_ann::linalg::normalize(&mut v);
-                    mutable.upsert(next_id, &v)?;
+                    collection.upsert(next_id, &v)?;
                     next_id += 1;
                     upserts += 1;
                 } else {
-                    mutable.delete(rng.next_below(next_id))?;
+                    collection.delete(rng.next_below(next_id))?;
                     deletes += 1;
                 }
             }
+            collection.flush(); // drain the group-commit windows
             Ok((upserts, deletes))
         })
     };
@@ -345,7 +362,7 @@ fn cmd_churn(args: &Args) -> Result<()> {
     let churn_secs = t0.elapsed().as_secs_f64();
 
     let snap_metrics = server.metrics().snapshot();
-    let stats = mutable.stats();
+    let stats = collection.stats();
     println!(
         "churned {ops} ops ({upserts} upserts, {deletes} deletes) in {churn_secs:.2}s \
          ({:.0} ops/s) while serving",
@@ -359,23 +376,26 @@ fn cmd_churn(args: &Args) -> Result<()> {
         snap_metrics.p99_us,
         snap_metrics.mean_batch
     );
+    for (s, sh) in stats.shards.iter().enumerate() {
+        println!(
+            "shard {s}: {} sealed segment(s), {} sealed rows, {} delta rows, {} tombstones, \
+             epoch {}, {} compaction(s)",
+            sh.sealed_segments, sh.sealed_rows, sh.delta_rows, sh.tombstones, sh.epoch,
+            sh.compactions
+        );
+    }
     println!(
-        "index: {} sealed segment(s), {} sealed rows, {} delta rows, {} tombstones, epoch {}, {} compaction(s)",
-        stats.sealed_segments,
-        stats.sealed_rows,
-        stats.delta_rows,
-        stats.tombstones,
-        stats.epoch,
-        stats.compactions
+        "collection: {} background compaction(s) ran off the write path",
+        stats.compactions()
     );
     let t0 = std::time::Instant::now();
-    let after = mutable.compact()?;
+    let after = collection.compact()?;
     println!(
-        "compacted in {:.3}s → {} rows in {} segment(s), {} tombstones",
+        "final inline compact in {:.3}s → {} rows across {} shard(s), {} tombstones",
         t0.elapsed().as_secs_f64(),
-        after.sealed_rows,
-        after.sealed_segments,
-        after.tombstones
+        after.sealed_rows(),
+        after.shards.len(),
+        after.tombstones()
     );
     server.shutdown();
     Ok(())

@@ -1,0 +1,399 @@
+//! Integration: the unified `Collection` API.
+//!
+//! * **Format compat matrix**: v1 single-index and v2 snapshot files load
+//!   as 1-shard collections and search identically to their native
+//!   loaders, across every `SpillMode`; v3 collection manifests
+//!   round-trip with their config.
+//! * **Shard equivalence**: at full probe with an exhaustive rerank
+//!   budget, a collection with S ∈ {1, 2, 4} shards returns exactly the
+//!   results of the unsharded mutable index — before and after a churn
+//!   (upsert/update/delete) cycle, and again after compaction. This holds
+//!   because the build shares one int8 quantizer across shards, so rerank
+//!   scores are the same function of (query, id) everywhere.
+//! * **Background compaction**: upserts keep landing while a shard's
+//!   staged merge runs; the merge publishes exactly one snapshot (the
+//!   final swap is the only writer-visible stall).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use soar_ann::config::{
+    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting, SpillMode,
+};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::serialize::{load_index, load_snapshot, save_index, save_snapshot};
+use soar_ann::index::{
+    build_index, Collection, MutableIndex, SearchScratch, Searcher, SnapshotSearcher,
+};
+use soar_ann::linalg::topk::Scored;
+use soar_ann::linalg::{MatrixF32, Rng};
+use soar_ann::runtime::Engine;
+use soar_ann::util::tempdir::TempDir;
+
+/// Unit-norm perturbation of a random corpus row (stays inside the base
+/// int8 scale range, like real ingestion).
+fn perturbed(rng: &mut Rng, data: &MatrixF32, noise: f32) -> Vec<f32> {
+    let src = rng.next_below(data.rows() as u32) as usize;
+    let mut v = data.row(src).to_vec();
+    for x in v.iter_mut() {
+        *x += noise * rng.next_gaussian();
+    }
+    soar_ann::linalg::normalize(&mut v);
+    v
+}
+
+const SPILL_MODES: [SpillMode; 3] = [
+    SpillMode::None,
+    SpillMode::Nearest,
+    SpillMode::Soar { lambda: 1.0 },
+];
+
+#[test]
+fn compat_matrix_v1_v2_files_load_as_collections() {
+    for (mi, spill) in SPILL_MODES.into_iter().enumerate() {
+        let ds = SyntheticConfig::glove_like(800, 16, 10, 100 + mi as u64).generate();
+        let engine = Arc::new(Engine::cpu());
+        let cfg = IndexConfig {
+            num_partitions: 16,
+            spill,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let dir = TempDir::new().unwrap();
+        let param_grid = [
+            SearchParams::default(),
+            SearchParams {
+                k: 10,
+                top_t: 16,
+                rerank_budget: 900,
+            },
+        ];
+
+        // v1 file: native loader vs 1-shard collection, identical results.
+        let v1 = dir.join("v1.soar");
+        save_index(&idx, &v1).unwrap();
+        let native = load_index(&v1).unwrap();
+        let col = Collection::load(&v1, engine.clone()).unwrap();
+        assert_eq!(col.num_shards(), 1);
+        assert_eq!(col.snapshot().live_count(), 800);
+        let searcher = Searcher::new(&native, &engine);
+        let mut scratch = SearchScratch::new(&native);
+        for params in param_grid {
+            for qi in 0..ds.num_queries() {
+                let q = ds.queries.row(qi);
+                let (a, _) = searcher.search(q, &params, &mut scratch);
+                let (b, _) = col.search(q, &params);
+                assert_eq!(a, b, "{spill:?} v1 query {qi}");
+            }
+        }
+
+        // v2 snapshot (with segments, delta, and tombstones): native
+        // loader vs 1-shard collection, identical results.
+        let m = MutableIndex::from_index(
+            idx,
+            engine.clone(),
+            MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(7 + mi as u64);
+        for i in 0..25u32 {
+            m.upsert(900 + i, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        }
+        m.seal_delta().unwrap();
+        for i in 0..10u32 {
+            m.upsert(i * 3, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        }
+        for id in [5u32, 77, 905] {
+            assert!(m.delete(id).unwrap());
+        }
+        let v2 = dir.join("v2.soar");
+        save_snapshot(&m.snapshot(), &v2).unwrap();
+        let native2 = load_snapshot(&v2).unwrap();
+        let col2 = Collection::load(&v2, engine.clone()).unwrap();
+        assert_eq!(col2.num_shards(), 1);
+        let s2 = SnapshotSearcher::new(&native2, &engine);
+        let mut sc2 = SearchScratch::for_snapshot(&native2);
+        for params in param_grid {
+            for qi in 0..ds.num_queries() {
+                let q = ds.queries.row(qi);
+                let (a, _) = s2.search(q, &params, &mut sc2);
+                let (b, _) = col2.search(q, &params);
+                assert_eq!(a, b, "{spill:?} v2 query {qi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn v3_round_trip_across_spill_modes() {
+    for (mi, spill) in SPILL_MODES.into_iter().enumerate() {
+        let ds = SyntheticConfig::glove_like(900, 16, 8, 200 + mi as u64).generate();
+        let engine = Arc::new(Engine::cpu());
+        let icfg = IndexConfig {
+            num_partitions: 18,
+            spill,
+            ..Default::default()
+        };
+        let ccfg = CollectionConfig {
+            num_shards: 3,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        let mut rng = Rng::new(300 + mi as u64);
+        for i in 0..30u32 {
+            c.upsert(2000 + i, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        }
+        for i in 0..10u32 {
+            c.upsert(i * 17, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        }
+        for i in 0..10u32 {
+            assert!(c.delete(500 + i * 7).unwrap());
+        }
+
+        let dir = TempDir::new().unwrap();
+        let path = dir.join("col");
+        c.save(&path).unwrap();
+        let back = Collection::load(&path, engine.clone()).unwrap();
+        assert_eq!(*back.config(), ccfg);
+        assert_eq!(back.num_shards(), 3);
+        assert_eq!(back.snapshot().live_count(), c.snapshot().live_count());
+        let params = SearchParams {
+            k: 10,
+            top_t: 18,
+            rerank_budget: 2000,
+        };
+        for qi in 0..ds.num_queries() {
+            let q = ds.queries.row(qi);
+            assert_eq!(c.search(q, &params), back.search(q, &params), "{spill:?} v3 query {qi}");
+        }
+        // Mutation resumes on the reloaded collection.
+        let v = perturbed(&mut rng, &ds.data, 0.15);
+        back.upsert(5000, &v).unwrap();
+        let (res, _) = back.search(&v, &params);
+        assert_eq!(res[0].id, 5000, "{spill:?}: reloaded collection must accept writes");
+    }
+}
+
+/// One churn transcript applied identically to every index variant.
+enum Op {
+    Upsert(u32, Vec<f32>),
+    Delete(u32),
+}
+
+fn churn_ops(data: &MatrixF32) -> Vec<Op> {
+    let mut rng = Rng::new(88);
+    let mut ops = Vec::new();
+    // Fresh inserts.
+    for i in 0..80u32 {
+        ops.push(Op::Upsert(5000 + i, perturbed(&mut rng, data, 0.15)));
+    }
+    // In-place updates of sealed ids (disjoint from the deletes below).
+    for i in 0..40u32 {
+        ops.push(Op::Upsert(i * 13, perturbed(&mut rng, data, 0.15)));
+    }
+    // Deletes of sealed ids and of freshly inserted ids.
+    for id in 1000..1040u32 {
+        ops.push(Op::Delete(id));
+    }
+    for id in 5000..5008u32 {
+        ops.push(Op::Delete(id));
+    }
+    ops
+}
+
+#[test]
+fn shard_equivalence_full_probe_with_churn() {
+    let n = 2000usize;
+    let ds = SyntheticConfig::glove_like(n, 16, 12, 77).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 20,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    // Full probe + a rerank budget above the live count: every live row
+    // is reranked with the shared int8 scores, so the global top-k is a
+    // pure function of (query, live set) — identical across shardings.
+    // (An *exact* f32 score tie at the k boundary could break by scan
+    // order; the fixed seeds make this test deterministic either way.)
+    let params = SearchParams {
+        k: 10,
+        top_t: 20,
+        rerank_budget: 4000,
+    };
+    let ops = churn_ops(&ds.data);
+
+    // Reference: the unsharded mutable index.
+    let reference = MutableIndex::from_index(
+        build_index(&engine, &ds.data, &icfg).unwrap(),
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for op in &ops {
+        match op {
+            Op::Upsert(id, v) => reference.upsert(*id, v).unwrap(),
+            Op::Delete(id) => {
+                assert!(reference.delete(*id).unwrap());
+            }
+        }
+    }
+    let ref_results = |m: &MutableIndex| -> Vec<Vec<Scored>> {
+        let snap = m.snapshot();
+        let searcher = SnapshotSearcher::new(&snap, &engine);
+        let mut scratch = SearchScratch::for_snapshot(&snap);
+        (0..ds.num_queries())
+            .map(|qi| searcher.search(ds.queries.row(qi), &params, &mut scratch).0)
+            .collect()
+    };
+    let expected = ref_results(&reference);
+    let expected_live = reference.snapshot().live_count();
+
+    let mut collections = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let ccfg = CollectionConfig {
+            num_shards: shards,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        for op in &ops {
+            match op {
+                Op::Upsert(id, v) => c.upsert(*id, v).unwrap(),
+                Op::Delete(id) => {
+                    assert!(c.delete(*id).unwrap());
+                }
+            }
+        }
+        assert_eq!(c.snapshot().live_count(), expected_live, "S={shards}");
+        for (qi, want) in expected.iter().enumerate() {
+            let (got, _) = c.search(ds.queries.row(qi), &params);
+            assert_eq!(&got, want, "S={shards} query {qi}: must match unsharded results");
+        }
+        collections.push((shards, c));
+    }
+
+    // Compaction must not change full-probe results on any variant.
+    reference.compact().unwrap();
+    let expected = ref_results(&reference);
+    for (shards, c) in &collections {
+        let stats = c.compact().unwrap();
+        assert_eq!(stats.delta_rows(), 0);
+        assert_eq!(stats.tombstones(), 0);
+        assert_eq!(c.snapshot().live_count(), expected_live, "S={shards}");
+        for (qi, want) in expected.iter().enumerate() {
+            let (got, _) = c.search(ds.queries.row(qi), &params);
+            assert_eq!(&got, want, "S={shards} query {qi} after compaction");
+        }
+    }
+}
+
+#[test]
+fn upserts_proceed_while_shard_compacts() {
+    let n = 2500usize;
+    let ds = SyntheticConfig::glove_like(n, 16, 6, 99).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 25,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let ccfg = CollectionConfig {
+        num_shards: 1,
+        routing: ShardRouting::Hash,
+        mutable: MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false, // the test drives the staged merge itself
+    };
+    let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+    let mut rng = Rng::new(3);
+    // Two sealed segments + tombstone pressure = a real merge workload.
+    for i in 0..400u32 {
+        c.upsert(10_000 + i, &perturbed(&mut rng, &ds.data, 0.1)).unwrap();
+    }
+    assert!(c.shard(0).seal_delta().unwrap());
+    for i in 0..50u32 {
+        assert!(c.delete(i * 11).unwrap());
+    }
+    let epoch_before = c.shard(0).snapshot().epoch;
+
+    let shard = c.shard(0).clone();
+    let started = Arc::new(AtomicBool::new(false));
+    let gate = Arc::new(AtomicBool::new(false)); // set by the first upsert
+    let done = Arc::new(AtomicBool::new(false));
+    let compactor = {
+        let shard = shard.clone();
+        let (started, gate, done) = (started.clone(), gate.clone(), done.clone());
+        std::thread::spawn(move || {
+            let job = shard.begin_compaction();
+            started.store(true, Ordering::SeqCst);
+            // Don't even start merging until a concurrent upsert has
+            // landed — proof the write path is open during compaction.
+            while !gate.load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            let merged = job.merge().unwrap();
+            let installed = shard.install_compaction(&job, merged).unwrap();
+            done.store(true, Ordering::SeqCst);
+            installed
+        })
+    };
+    while !started.load(Ordering::SeqCst) {
+        std::thread::yield_now();
+    }
+    let mut concurrent_upserts = 0u32;
+    let mut during_merge = 0u32;
+    loop {
+        let merge_running = !done.load(Ordering::SeqCst);
+        c.upsert(20_000 + concurrent_upserts, &perturbed(&mut rng, &ds.data, 0.1))
+            .unwrap();
+        concurrent_upserts += 1;
+        if merge_running {
+            during_merge += 1;
+        }
+        gate.store(true, Ordering::SeqCst);
+        if done.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    assert!(compactor.join().unwrap(), "must not be invalidated by pure upserts");
+    assert!(during_merge >= 1, "upserts must proceed while the shard compacts");
+
+    let snap = c.snapshot();
+    snap.check_invariants().unwrap();
+    assert_eq!(snap.live_count(), n + 400 + concurrent_upserts as usize - 50);
+    let stats = c.stats();
+    assert_eq!(stats.compactions(), 1);
+    assert_eq!(stats.tombstones(), 0, "captured tombstones must be purged");
+    // The publish stall is bounded to the final swap: every concurrent
+    // upsert published once, and the whole compaction published exactly
+    // once more.
+    assert_eq!(c.shard(0).snapshot().epoch, epoch_before + concurrent_upserts as u64 + 1);
+    // The merged state serves both old and concurrent rows.
+    let params = SearchParams {
+        k: 10,
+        top_t: 25,
+        rerank_budget: 400,
+    };
+    let probe = perturbed(&mut rng, &ds.data, 0.1);
+    c.upsert(99_999, &probe).unwrap();
+    let (res, _) = c.search(&probe, &params);
+    assert_eq!(res[0].id, 99_999);
+}

@@ -143,7 +143,7 @@ fn served_engine_end_to_end_recall() {
 fn sharded_router_recall_close_to_single_index() {
     use soar_ann::coordinator::router::ShardedIndex;
     let ds = SyntheticConfig::glove_like(6000, 32, 40, 31).generate();
-    let engine = Engine::cpu();
+    let engine = Arc::new(Engine::cpu());
     let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
     let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
     let params = SearchParams {
@@ -162,11 +162,10 @@ fn sharded_router_recall_close_to_single_index() {
     }
     let single_recall = gt.mean_recall(&single_results);
 
-    let sharded = ShardedIndex::build(&engine, &ds.data, &cfg, 3).unwrap();
-    let mut scratches = sharded.make_scratches();
+    let sharded = ShardedIndex::build(engine, &ds.data, &cfg, 3).unwrap();
     let mut sharded_results = Vec::new();
     for qi in 0..ds.num_queries() {
-        let res = sharded.search(&engine, ds.queries.row(qi), &params, &mut scratches);
+        let (res, _) = sharded.search(ds.queries.row(qi), &params);
         sharded_results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
     }
     let sharded_recall = gt.mean_recall(&sharded_results);
