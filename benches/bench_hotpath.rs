@@ -51,25 +51,24 @@ fn main() {
     let cfg = IndexConfig::for_dataset(ds.n(), SpillMode::Soar { lambda: 1.0 });
     let index = build_index(&engine, &ds.data, &cfg).expect("build");
     let q = ds.queries.row(0).to_vec();
-    let m = index.pq.num_subspaces();
-    let cb = index.pq.code_bytes();
+    let m = index.pq().num_subspaces();
+    let cb = index.pq().code_bytes();
 
     // -- PQ LUT build ----------------------------------------------------
     let mut lut = Vec::new();
     b.run("pq/build_lut/d64", || {
-        index.pq.build_lut(black_box(&q), &mut lut);
+        index.pq().build_lut(black_box(&q), &mut lut);
     });
     let mut qlut = QueryLut::sized(m);
     b.run("pq/build_query_lut/d64", || {
-        index.pq.build_query_lut(black_box(&q), &mut qlut);
+        index.pq().build_query_lut(black_box(&q), &mut qlut);
     });
-    index.pq.build_lut(&q, &mut lut);
-    index.pq.build_query_lut(&q, &mut qlut);
+    index.pq().build_lut(&q, &mut lut);
+    index.pq().build_query_lut(&q, &mut qlut);
     assert!(qlut.quantized, "fixture LUT must quantize");
 
     // -- scalar ADC on the largest real posting list ---------------------
     let list = index
-        .ivf
         .postings
         .iter()
         .max_by_key(|p| p.len())
@@ -77,7 +76,7 @@ fn main() {
     b.run(&format!("pq/adc_scan/{}pts", list.len()), || {
         let mut acc = 0.0f32;
         for i in 0..list.len() {
-            acc += index.pq.adc_score(&lut, list.code(i, cb));
+            acc += index.pq().adc_score(&lut, list.code(i, cb));
         }
         black_box(acc);
     });
@@ -101,7 +100,7 @@ fn main() {
         let scalar = b.run(&format!("adc/scalar/{len}"), || {
             let mut acc = 0.0f32;
             for i in 0..len {
-                acc += index.pq.adc_score(&qlut.f32_lut, &codes[i * cb..(i + 1) * cb]);
+                acc += index.pq().adc_score(&qlut.f32_lut, &codes[i * cb..(i + 1) * cb]);
             }
             black_box(acc);
         });
@@ -155,7 +154,7 @@ fn main() {
     b.run("centroid_scores/cpu/b64_c50_d64", || {
         black_box(
             engine
-                .centroid_scores(black_box(&queries64), &index.ivf.centroids)
+                .centroid_scores(black_box(&queries64), index.centroids())
                 .unwrap(),
         );
     });

@@ -39,7 +39,7 @@ fn main() {
                 soar::assign_spills(
                     &engine,
                     &ds.data,
-                    &base.ivf.centroids,
+                    base.centroids(),
                     &primary,
                     SpillMode::Soar { lambda: lam },
                     1,

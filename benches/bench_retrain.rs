@@ -1,0 +1,188 @@
+//! Online-retraining benchmark: retrain wall time vs segment count,
+//! recall under distribution drift before/after the retrain, and the
+//! serving QPS impact while a background retrain runs.
+//!
+//! Emits `BENCH_retrain.json` so successive PRs can track the perf
+//! trajectory of the staged retrain path.
+//!
+//! Run with: `cargo bench --bench bench_retrain [-- --quick]`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use soar_ann::config::{IndexConfig, MutableConfig, SearchParams, SpillMode};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{build_index, MutableIndex, SearchScratch, SnapshotSearcher};
+use soar_ann::linalg::MatrixF32;
+use soar_ann::runtime::Engine;
+use soar_ann::util::json::Value;
+
+fn mutable_from(
+    data: &MatrixF32,
+    engine: &Arc<Engine>,
+    partitions: usize,
+) -> MutableIndex {
+    let cfg = IndexConfig {
+        num_partitions: partitions,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let base = build_index(engine, data, &cfg).expect("build");
+    MutableIndex::from_index(
+        base,
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+    )
+    .expect("mutable")
+}
+
+fn recall(
+    m: &MutableIndex,
+    engine: &Engine,
+    queries: &MatrixF32,
+    gt_data: &MatrixF32,
+    params: &SearchParams,
+) -> f64 {
+    let gt = ground_truth_mips(gt_data, queries, params.k);
+    let snap = m.snapshot();
+    let searcher = SnapshotSearcher::new(&snap, engine);
+    let mut scratch = SearchScratch::for_snapshot(&snap);
+    let results: Vec<Vec<u32>> = (0..queries.rows())
+        .map(|qi| {
+            searcher
+                .search(queries.row(qi), params, &mut scratch)
+                .0
+                .into_iter()
+                .map(|s| s.id)
+                .collect()
+        })
+        .collect();
+    gt.mean_recall(&results)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 4_000 } else { 16_000 };
+    let dim = 32;
+    let nq = if quick { 64 } else { 128 };
+    let search_iters = if quick { 300 } else { 1_500 };
+    let partitions = (n / 400).max(8);
+
+    let a = SyntheticConfig::glove_like(n, dim, nq, 42).generate();
+    let b = SyntheticConfig::glove_like(n, dim, nq, 4242).generate();
+    let engine = Arc::new(Engine::cpu());
+    let mut report_fields: Vec<(&str, Value)> = vec![
+        ("bench", Value::str("retrain")),
+        ("n", Value::num(n as f64)),
+        ("dim", Value::num(dim as f64)),
+        ("quick", Value::Bool(quick)),
+    ];
+
+    // --- retrain wall time vs sealed segment count ---------------------
+    // Same total corpus, sliced into 1 / 2 / 4 sealed segments via
+    // seal_delta: the capture + reconstruct + train + re-encode cost is
+    // what we track.
+    let mut by_segments = Vec::new();
+    for segments in [1usize, 2, 4] {
+        println!("building {segments}-segment fixture (n={n})…");
+        let m = mutable_from(&a.data, &engine, partitions);
+        let per = n / (segments * 2); // extra rows sealed on top of base
+        for s in 0..segments.saturating_sub(1) {
+            for i in 0..per {
+                let id = (n + s * per + i) as u32;
+                let row = a.data.row((s * per + i) % n).to_vec();
+                m.upsert(id, &row).expect("upsert");
+            }
+            m.seal_delta().expect("seal");
+        }
+        let stats = m.stats();
+        assert_eq!(stats.sealed_segments, segments);
+        let rows = stats.sealed_rows;
+        let t0 = Instant::now();
+        assert!(m.retrain_concurrent().expect("retrain"));
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "bench retrain/wall_time    {secs:>10.3} s      ({segments} segment(s), {rows} rows)"
+        );
+        by_segments.push(Value::obj(vec![
+            ("segments", Value::num(segments as f64)),
+            ("rows", Value::num(rows as f64)),
+            ("retrain_secs", Value::num(secs)),
+        ]));
+    }
+    report_fields.push(("wall_time_vs_segments", Value::Arr(by_segments)));
+
+    // --- recall under drift, before/after ------------------------------
+    let params = SearchParams {
+        k: 10,
+        top_t: (partitions / 5).max(2),
+        rerank_budget: 100,
+    };
+    let m = mutable_from(&a.data, &engine, partitions);
+    let baseline = recall(&m, &engine, &a.queries, &a.data, &params);
+    let ids: Vec<u32> = (0..n as u32).collect();
+    m.upsert_batch(&ids, &b.data).expect("drift");
+    let stale = recall(&m, &engine, &b.queries, &b.data, &params);
+    let t0 = Instant::now();
+    assert!(m.retrain_concurrent().expect("retrain"));
+    let drift_retrain_secs = t0.elapsed().as_secs_f64();
+    let recovered = recall(&m, &engine, &b.queries, &b.data, &params);
+    println!(
+        "bench retrain/drift        recall@10 baseline {baseline:.4} → stale {stale:.4} → retrained {recovered:.4} ({drift_retrain_secs:.2}s)"
+    );
+    report_fields.push(("recall_baseline", Value::num(baseline)));
+    report_fields.push(("recall_under_drift", Value::num(stale)));
+    report_fields.push(("recall_after_retrain", Value::num(recovered)));
+    report_fields.push(("drift_retrain_secs", Value::num(drift_retrain_secs)));
+
+    // --- QPS impact while a background retrain runs --------------------
+    let m = Arc::new(mutable_from(&a.data, &engine, partitions));
+    let qps_of = |iters: usize| -> f64 {
+        let mut scratch = SearchScratch::for_snapshot(&m.snapshot());
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let snap = m.snapshot();
+            let searcher = SnapshotSearcher::new(&snap, &engine);
+            let (res, _) =
+                searcher.search(a.queries.row(i % a.queries.rows()), &params, &mut scratch);
+            assert!(!res.is_empty());
+        }
+        iters as f64 / t0.elapsed().as_secs_f64()
+    };
+    let qps_idle = qps_of(search_iters);
+    let retraining = Arc::new(AtomicBool::new(true));
+    let trainer = {
+        let m = m.clone();
+        let retraining = retraining.clone();
+        std::thread::spawn(move || {
+            let mut rounds = 0u64;
+            while retraining.load(Ordering::Relaxed) {
+                m.retrain_concurrent().expect("background retrain");
+                rounds += 1;
+            }
+            rounds
+        })
+    };
+    let qps_during = qps_of(search_iters);
+    retraining.store(false, Ordering::Relaxed);
+    let retrain_rounds = trainer.join().expect("trainer");
+    println!(
+        "bench retrain/qps_impact   idle {qps_idle:>8.0} q/s  during-retrain {qps_during:>8.0} q/s  ({retrain_rounds} background retrain(s))"
+    );
+    report_fields.push(("qps_idle", Value::num(qps_idle)));
+    report_fields.push(("qps_during_retrain", Value::num(qps_during)));
+    report_fields.push((
+        "qps_retention",
+        Value::num(if qps_idle > 0.0 { qps_during / qps_idle } else { 0.0 }),
+    ));
+    report_fields.push(("background_retrains", Value::num(retrain_rounds as f64)));
+
+    let report = Value::obj(report_fields);
+    std::fs::write("BENCH_retrain.json", report.to_json_pretty()).expect("write report");
+    println!("wrote BENCH_retrain.json");
+}

@@ -24,7 +24,7 @@ fn main() -> soar_ann::Result<()> {
     println!(
         "index: {} partitions, {} posting entries",
         index.num_partitions(),
-        index.ivf.total_postings()
+        index.total_postings()
     );
 
     // 4. Search.
@@ -39,7 +39,7 @@ fn main() -> soar_ann::Result<()> {
     println!(
         "scanned {} of {} postings across {} partitions ({} spilled duplicates skipped)",
         stats.points_scanned,
-        index.ivf.total_postings(),
+        index.total_postings(),
         stats.partitions_probed,
         stats.duplicates_skipped
     );

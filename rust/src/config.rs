@@ -234,6 +234,12 @@ pub struct MutableConfig {
     /// `MutableIndex::flush` for read-your-writes before the window
     /// fills. Sealing and compaction always publish immediately.
     pub publish_coalesce: usize,
+    /// Time bound on the group-commit window, in microseconds (0 =
+    /// unbounded). When set, a background timer publishes any buffered
+    /// mutations within this delay even if the count window never fills —
+    /// a lone upsert becomes visible within T µs instead of waiting for
+    /// `publish_coalesce − 1` followers or an explicit flush.
+    pub publish_max_delay_us: u64,
 }
 
 impl Default for MutableConfig {
@@ -243,6 +249,7 @@ impl Default for MutableConfig {
             tombstone_ratio: 0.25,
             auto_compact: true,
             publish_coalesce: 1,
+            publish_max_delay_us: 0,
         }
     }
 }
@@ -271,12 +278,17 @@ impl MutableConfig {
             ("tombstone_ratio", Value::num(self.tombstone_ratio as f64)),
             ("auto_compact", Value::Bool(self.auto_compact)),
             ("publish_coalesce", Value::num(self.publish_coalesce as f64)),
+            (
+                "publish_max_delay_us",
+                Value::num(self.publish_max_delay_us as f64),
+            ),
         ])
     }
 
-    /// Inverse of [`MutableConfig::to_json`]. `publish_coalesce` is
-    /// optional (configs persisted before the group-commit window default
-    /// to 1, the old publish-per-mutation behavior).
+    /// Inverse of [`MutableConfig::to_json`]. `publish_coalesce` and
+    /// `publish_max_delay_us` are optional (configs persisted before the
+    /// group-commit window default to 1 / 0, the old publish-per-mutation
+    /// behavior).
     pub fn from_json(v: &Value) -> Result<MutableConfig> {
         let num = |key: &str| -> Result<f64> {
             v.get(key)
@@ -300,6 +312,12 @@ impl MutableConfig {
                     Error::Config("publish_coalesce must be a positive integer".into())
                 })?,
                 None => 1,
+            },
+            publish_max_delay_us: match v.get("publish_max_delay_us") {
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config("publish_max_delay_us must be a non-negative integer".into())
+                })? as u64,
+                None => 0,
             },
         };
         cfg.validate()?;
@@ -604,6 +622,7 @@ mod tests {
     fn publish_coalesce_validation_and_default() {
         let mut m = MutableConfig::default();
         assert_eq!(m.publish_coalesce, 1);
+        assert_eq!(m.publish_max_delay_us, 0);
         m.publish_coalesce = 0;
         assert!(m.validate().is_err());
         // Configs persisted before the group-commit window still parse.
@@ -613,6 +632,16 @@ mod tests {
         .unwrap();
         let back = MutableConfig::from_json(&legacy).unwrap();
         assert_eq!(back.publish_coalesce, 1);
+        assert_eq!(back.publish_max_delay_us, 0);
+        // The time bound round-trips.
+        let timed = MutableConfig {
+            publish_coalesce: 64,
+            publish_max_delay_us: 500,
+            ..Default::default()
+        };
+        let s = timed.to_json().to_json();
+        let back = MutableConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, timed);
     }
 
     #[test]

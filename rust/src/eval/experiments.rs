@@ -352,7 +352,7 @@ pub fn fig9(cfg: &ExpConfig, engine: &Engine) -> Result<()> {
     let ds = cfg.dataset();
     // One fixed VQ index; only the spilled assignment varies with λ.
     let base = build_index(engine, &ds.data, &cfg.index_config(SpillMode::None))?;
-    let centroids = &base.ivf.centroids;
+    let centroids = base.centroids();
     let primary: Vec<u32> = base.assignments.iter().map(|a| a[0]).collect();
     let lambdas: &[f32] = if cfg.quick {
         &[0.0, 1.0, 4.0]

@@ -1,26 +1,30 @@
-//! The indexing pipeline (§3.5):
+//! The indexing pipeline (§3.5), as a thin wrapper over the quantization
+//! model:
 //!
-//! 1. train a standard VQ index (k-means, optionally anisotropic),
-//! 2. primary-assign every datapoint (batched engine matmuls),
-//! 3. compute partitioning residuals,
-//! 4. SOAR-assign spilled partitions (Theorem 3.1 loss via the engine),
-//! 5. train the residual PQ and encode every (point, partition) pair,
-//! 6. encode int8 rerank vectors.
+//! 1. [`crate::quant::QuantModel::train`] — k-means VQ codebook
+//!    (optionally anisotropic), residual PQ trained on primary residuals,
+//!    int8 rerank quantizer;
+//! 2. [`encode_index`] — primary + SOAR spilled assignment (Theorem 3.1
+//!    loss via the engine) of every datapoint against the model, PQ
+//!    residual codes per (point, partition) pair, int8 records.
 //!
 //! "Creating a SOAR-enabled index first requires training a standard,
-//! non-spilled VQ index as usual" — the pipeline below is exactly that,
-//! plus step 4; all other stages are shared with the baseline.
+//! non-spilled VQ index as usual" — step 1 is exactly that; step 2 adds
+//! the spill. The split is what makes online retraining possible: a
+//! retrain trains a *fresh* model off the write path and re-runs step 2
+//! over the captured rows ([`crate::index::mutable::RetrainJob`]).
+
+use std::sync::Arc;
 
 use crate::config::IndexConfig;
 use crate::error::Result;
-use crate::index::{ivf::IvfIndex, soar, SoarIndex};
+use crate::index::{ivf::PostingList, SoarIndex};
 use crate::linalg::MatrixF32;
-use crate::quant::{Int8Quantizer, KMeans, KMeansConfig, ProductQuantizer};
+use crate::quant::{Int8Quantizer, QuantModel};
 use crate::runtime::Engine;
 use crate::util::parallel::{par_chunks_mut, par_map};
 
-/// Batch size for engine scoring calls during assignment.
-const ASSIGN_BATCH: usize = 256;
+pub use crate::quant::model::primary_assignments;
 
 /// Build an index over `data` with `config`, using `engine` for the
 /// dense scoring stages (PJRT artifacts or CPU fallback).
@@ -40,95 +44,69 @@ pub fn build_index_with_int8(
     config: &IndexConfig,
     int8: Option<Int8Quantizer>,
 ) -> Result<SoarIndex> {
-    config.validate(data.rows(), data.cols())?;
-    if let Some(q8) = &int8 {
-        if q8.dim() != data.cols() {
-            return Err(crate::error::Error::Shape(format!(
-                "int8 quantizer dim {} != data dim {}",
-                q8.dim(),
-                data.cols()
-            )));
-        }
+    let model = QuantModel::train(engine, data, config, 0, int8)?;
+    encode_index(engine, data, Arc::new(model))
+}
+
+/// Encode `data` against an already-trained model: spilled assignment,
+/// PQ residual codes per (point, partition), int8 records. This is the
+/// distribution-independent half of the build, shared with online
+/// retraining (which trains a fresh model first).
+pub fn encode_index(
+    engine: &Engine,
+    data: &MatrixF32,
+    model: Arc<QuantModel>,
+) -> Result<SoarIndex> {
+    if data.cols() != model.dim() {
+        return Err(crate::error::Error::Shape(format!(
+            "data dim {} != model dim {}",
+            data.cols(),
+            model.dim()
+        )));
     }
     let n = data.rows();
     let dim = data.cols();
 
-    // 1. VQ codebook.
-    let km = KMeans::train(
-        data,
-        &KMeansConfig {
-            k: config.num_partitions,
-            seed: config.seed,
-            ..config.kmeans.clone()
-        },
-    )?;
-    let centroids = km.centroids;
+    // Primary + spilled assignments (no-op spills for SpillMode::None).
+    let assignments = model.assign(engine, data)?;
 
-    // 2. Primary assignment: argmin ‖x−c‖² via the engine's loss matmuls.
-    let primary = primary_assignments(engine, data, &centroids)?;
-
-    // 3+4. Spilled assignments (no-op for SpillMode::None).
-    let assignments = soar::assign_spills(
-        engine,
-        data,
-        &centroids,
-        &primary,
-        config.spill,
-        config.num_spills,
-    )?;
-
-    // 5. Residual PQ: train on primary residuals (subsampled inside
-    // KMeans::train), then encode one code per (point, partition) pair.
-    let residuals = primary_residuals(data, &centroids, &primary);
-    let pq = ProductQuantizer::train(&residuals, &config.pq)?;
-    drop(residuals);
-
-    let mut ivf = IvfIndex::new(centroids);
-    let code_bytes = pq.code_bytes();
-    // Encode in parallel, then scatter into posting lists sequentially.
+    // Residual PQ codes: encode one code per (point, partition) pair in
+    // parallel, then scatter into posting lists sequentially.
+    let mut postings = vec![PostingList::default(); model.num_partitions()];
     let encoded: Vec<Vec<(u32, Vec<u8>)>> = par_map(n, |i| {
         assignments[i]
             .iter()
-            .map(|&p| {
-                let r = crate::index::residual(data.row(i), &ivf.centroids, p);
-                (p, pq.encode(&r).0)
-            })
+            .map(|&p| (p, model.residual_code(data.row(i), p).0))
             .collect()
     });
     for (i, codes) in encoded.into_iter().enumerate() {
         for (p, code) in codes {
-            ivf.postings[p as usize].push(i as u32, &code);
+            postings[p as usize].push(i as u32, &code);
         }
     }
     debug_assert_eq!(
-        ivf.total_postings(),
-        n * config.assignments_per_point(),
+        postings.iter().map(|p| p.len()).sum::<usize>(),
+        n * model.assignments_per_point(),
         "every point must appear once per assignment"
     );
-    let _ = code_bytes;
 
-    // 6. int8 rerank storage.
-    let (int8, raw_int8) = if config.store_int8 {
-        let q8 = match int8 {
-            Some(q8) => q8,
-            None => Int8Quantizer::train(data)?,
-        };
-        let mut raw = vec![0i8; n * dim];
-        par_chunks_mut(&mut raw, dim, |i, chunk| {
-            chunk.copy_from_slice(&q8.encode(data.row(i)));
-        });
-        (Some(q8), raw)
-    } else {
-        (None, Vec::new())
+    // int8 rerank storage.
+    let raw_int8 = match &model.int8 {
+        Some(q8) => {
+            let mut raw = vec![0i8; n * dim];
+            par_chunks_mut(&mut raw, dim, |i, chunk| {
+                chunk.copy_from_slice(&q8.encode(data.row(i)));
+            });
+            raw
+        }
+        None => Vec::new(),
     };
 
     let mut index = SoarIndex {
-        config: config.clone(),
         n,
         dim,
-        ivf,
-        pq,
-        int8,
+        model,
+        postings,
         raw_int8,
         assignments,
         blocked: Vec::new(),
@@ -138,53 +116,12 @@ pub fn build_index_with_int8(
     Ok(index)
 }
 
-/// Argmin-ℓ₂ primary assignment, batched through the engine. Public so
-/// the mutable-index upsert path can assign new points against an
-/// existing codebook.
-pub fn primary_assignments(
-    engine: &Engine,
-    data: &MatrixF32,
-    centroids: &MatrixF32,
-) -> Result<Vec<u32>> {
-    let n = data.rows();
-    let d = data.cols();
-    let mut primary = vec![0u32; n];
-    let mut start = 0usize;
-    while start < n {
-        let stop = (start + ASSIGN_BATCH).min(n);
-        let rows: Vec<usize> = (start..stop).collect();
-        let x = data.gather_rows(&rows);
-        let zeros = MatrixF32::zeros(x.rows(), d);
-        // λ=0 SOAR loss ≡ squared Euclidean distance matrix.
-        let loss = engine.soar_loss(&x, &zeros, centroids, 0.0)?;
-        for (local, gi) in (start..stop).enumerate() {
-            primary[gi] = crate::linalg::argmin(loss.row(local)) as u32;
-        }
-        start = stop;
-    }
-    Ok(primary)
-}
-
-/// Residuals of every point w.r.t. its primary centroid.
-fn primary_residuals(data: &MatrixF32, centroids: &MatrixF32, primary: &[u32]) -> MatrixF32 {
-    let n = data.rows();
-    let d = data.cols();
-    let mut out = MatrixF32::zeros(n, d);
-    par_chunks_mut(out.as_mut_slice(), d, |i, dst| {
-        let c = centroids.row(primary[i] as usize);
-        let x = data.row(i);
-        for j in 0..d {
-            dst[j] = x[j] - c[j];
-        }
-    });
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SpillMode;
     use crate::data::synthetic::SyntheticConfig;
+    use crate::quant::KMeansConfig;
 
     fn small_config(spill: SpillMode) -> IndexConfig {
         IndexConfig {
@@ -205,8 +142,9 @@ mod tests {
         let engine = Engine::cpu();
         let idx = build_index(&engine, &ds.data, &small_config(SpillMode::None)).unwrap();
         assert_eq!(idx.n, 1000);
-        assert_eq!(idx.ivf.total_postings(), 1000);
+        assert_eq!(idx.total_postings(), 1000);
         assert_eq!(idx.num_partitions(), 16);
+        assert_eq!(idx.model.generation, 0);
         for a in &idx.assignments {
             assert_eq!(a.len(), 1);
         }
@@ -223,7 +161,7 @@ mod tests {
             &small_config(SpillMode::Soar { lambda: 1.0 }),
         )
         .unwrap();
-        assert_eq!(idx.ivf.total_postings(), 1600); // 2 assignments/point
+        assert_eq!(idx.total_postings(), 1600); // 2 assignments/point
         for a in &idx.assignments {
             assert_eq!(a.len(), 2);
             assert_ne!(a[0], a[1]);
@@ -239,7 +177,7 @@ mod tests {
             let x = ds.data.row(i);
             let mut best = 0u32;
             let mut bd = f32::INFINITY;
-            for (c, row) in idx.ivf.centroids.iter_rows().enumerate() {
+            for (c, row) in idx.centroids().iter_rows().enumerate() {
                 let d = crate::linalg::squared_l2(x, row);
                 if d < bd {
                     bd = d;
@@ -257,14 +195,14 @@ mod tests {
         let mut cfg = small_config(SpillMode::None);
         cfg.store_int8 = false;
         let idx = build_index(&engine, &ds.data, &cfg).unwrap();
-        assert!(idx.int8.is_none());
+        assert!(idx.int8().is_none());
         assert!(idx.raw_int8.is_empty());
         cfg.store_int8 = true;
         let idx = build_index(&engine, &ds.data, &cfg).unwrap();
         assert_eq!(idx.raw_int8.len(), 400 * 8);
         // int8 record decodes close to the original
         let rec = idx.int8_record(7);
-        let dec = idx.int8.as_ref().unwrap().decode(rec);
+        let dec = idx.int8().unwrap().decode(rec);
         let err = crate::linalg::squared_l2(&dec, ds.data.row(7));
         assert!(err < 0.01, "int8 reconstruction error {err}");
     }
@@ -281,7 +219,7 @@ mod tests {
         let rows: Vec<usize> = (0..300).collect();
         let slice = ds.data.gather_rows(&rows);
         let idx = build_index_with_int8(&engine, &slice, &cfg, Some(q8.clone())).unwrap();
-        assert_eq!(idx.int8.as_ref().unwrap().scales, q8.scales);
+        assert_eq!(idx.int8().unwrap().scales, q8.scales);
         idx.check_invariants().unwrap();
         // Dimension mismatch is rejected.
         let bad = Int8Quantizer {
@@ -291,7 +229,24 @@ mod tests {
         // Without int8 storage the quantizer is ignored.
         cfg.store_int8 = false;
         let idx = build_index_with_int8(&engine, &slice, &cfg, Some(q8)).unwrap();
-        assert!(idx.int8.is_none());
+        assert!(idx.int8().is_none());
+    }
+
+    #[test]
+    fn encode_against_foreign_model_rejects_bad_dim() {
+        let ds = SyntheticConfig::glove_like(300, 8, 2, 10).generate();
+        let engine = Engine::cpu();
+        let mut cfg = small_config(SpillMode::None);
+        cfg.num_partitions = 8;
+        let model = Arc::new(QuantModel::train(&engine, &ds.data, &cfg, 0, None).unwrap());
+        let wrong = SyntheticConfig::glove_like(50, 16, 2, 11).generate();
+        assert!(encode_index(&engine, &wrong.data, model.clone()).is_err());
+        // Same-dim data encodes fine against a foreign model.
+        let other = SyntheticConfig::glove_like(200, 8, 2, 12).generate();
+        let idx = encode_index(&engine, &other.data, model.clone()).unwrap();
+        assert_eq!(idx.n, 200);
+        assert!(Arc::ptr_eq(&idx.model, &model));
+        idx.check_invariants().unwrap();
     }
 
     #[test]
@@ -311,6 +266,7 @@ mod tests {
         let a = build_index(&engine, &ds.data, &cfg).unwrap();
         let b = build_index(&engine, &ds.data, &cfg).unwrap();
         assert_eq!(a.assignments, b.assignments);
-        assert_eq!(a.ivf.centroids, b.ivf.centroids);
+        assert_eq!(a.centroids(), b.centroids());
+        assert_eq!(a.model.id(), b.model.id());
     }
 }

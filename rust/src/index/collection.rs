@@ -350,6 +350,10 @@ impl CollectionStats {
         self.shards.iter().map(|s| s.compactions).sum()
     }
 
+    pub fn retrains(&self) -> u64 {
+        self.shards.iter().map(|s| s.retrains).sum()
+    }
+
     pub fn max_sealed_segments(&self) -> usize {
         self.shards
             .iter()
@@ -432,14 +436,12 @@ impl Collection {
                 .max(index_config.num_spills + 1)
                 .min(rows.len());
             let index = build_index_with_int8(&engine, slice, &cfg, int8.clone())?;
-            let dim = index.dim;
-            let parts = index.num_partitions();
-            let cb = index.pq.code_bytes();
+            let model = index.model.clone();
             let global_ids: Vec<u32> = rows.iter().map(|&i| i as u32).collect();
             let seg = SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))?;
             let snap = IndexSnapshot::new(
                 vec![Arc::new(seg)],
-                Arc::new(DeltaSegment::empty(dim, parts, cb)),
+                Arc::new(DeltaSegment::empty(model)),
                 Arc::new(HashSet::new()),
                 0,
             );
@@ -661,6 +663,47 @@ impl Collection {
     /// windows. Returns how many shards published.
     pub fn flush(&self) -> usize {
         self.shards.iter().filter(|s| s.flush()).count()
+    }
+
+    /// Retrain one shard's quantization model from its live rows while
+    /// every other shard (and this shard's writers) keep serving: the
+    /// staged [`MutableIndex::begin_retrain`] →
+    /// [`crate::index::mutable::RetrainJob::train`] →
+    /// [`MutableIndex::install_retrain`] protocol runs the expensive
+    /// train + re-encode off the write path. A concurrent background
+    /// compaction can invalidate the capture (install aborts cleanly), so
+    /// the race is retried a few times — each lost race costs a full
+    /// train pass, which is acceptable because compactions are far less
+    /// frequent than the retry window on a settled shard (the usual lose
+    /// → win sequence is: the first attempt's delta seal triggers the
+    /// merge that kills it, and the second attempt captures the merged
+    /// state). Returns whether a fresh model was installed.
+    pub fn retrain_shard(&self, s: usize) -> Result<bool> {
+        if s >= self.shards.len() {
+            return Err(Error::Config(format!(
+                "shard {s} out of range for {} shards",
+                self.shards.len()
+            )));
+        }
+        for _ in 0..4 {
+            if self.shards[s].retrain_concurrent()? {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// [`Collection::retrain_shard`] over every shard, sequentially (so
+    /// at most one shard is paying retrain CPU at a time while the rest
+    /// serve untouched). Returns how many shards installed a new model.
+    pub fn retrain_all(&self) -> Result<usize> {
+        let mut installed = 0;
+        for s in 0..self.shards.len() {
+            if self.retrain_shard(s)? {
+                installed += 1;
+            }
+        }
+        Ok(installed)
     }
 
     /// Inline major compaction of every shard (parallel). Prefer

@@ -1,12 +1,11 @@
-//! Inverted-file (IVF) structure: codebook + per-partition posting lists.
+//! Inverted-file (IVF) posting lists.
 //!
 //! Each posting entry is a datapoint id plus its packed PQ code (of the
 //! partitioning residual *relative to this partition's centroid* — with
 //! spilling, the same datapoint carries a different code in each partition
 //! it appears in, which is exactly the duplicated dark-blue block of the
-//! paper's Fig 5 memory layout).
-
-use crate::linalg::MatrixF32;
+//! paper's Fig 5 memory layout). The codebook the lists are encoded
+//! against lives in the segment's [`crate::quant::QuantModel`].
 
 /// One partition's postings. Ids and codes are parallel arrays; codes are
 /// flattened `code_bytes`-wide records so the ADC scan streams a single
@@ -65,48 +64,6 @@ impl PostingList {
     }
 }
 
-/// Codebook + posting lists.
-#[derive(Clone, Debug)]
-pub struct IvfIndex {
-    /// `[c, d]` partition centers.
-    pub centroids: MatrixF32,
-    /// One posting list per partition.
-    pub postings: Vec<PostingList>,
-}
-
-impl IvfIndex {
-    pub fn new(centroids: MatrixF32) -> IvfIndex {
-        let c = centroids.rows();
-        IvfIndex {
-            centroids,
-            postings: vec![PostingList::default(); c],
-        }
-    }
-
-    pub fn num_partitions(&self) -> usize {
-        self.centroids.rows()
-    }
-
-    pub fn dim(&self) -> usize {
-        self.centroids.cols()
-    }
-
-    /// Posting sizes per partition (the KMR weighting in §5.1 uses these).
-    pub fn partition_sizes(&self) -> Vec<usize> {
-        self.postings.iter().map(|p| p.len()).collect()
-    }
-
-    /// Total posting entries (n × assignments-per-point).
-    pub fn total_postings(&self) -> usize {
-        self.postings.iter().map(|p| p.len()).sum()
-    }
-
-    pub fn memory_bytes(&self) -> usize {
-        self.centroids.memory_bytes()
-            + self.postings.iter().map(|p| p.memory_bytes()).sum::<usize>()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,19 +92,5 @@ mod tests {
         assert_eq!(pl.code(1, 2), &[0x33, 0x33]);
         assert_eq!(pl.position_of(3), Some(1));
         assert_eq!(pl.position_of(9), None);
-    }
-
-    #[test]
-    fn ivf_bookkeeping() {
-        let centroids = MatrixF32::zeros(4, 8);
-        let mut ivf = IvfIndex::new(centroids);
-        assert_eq!(ivf.num_partitions(), 4);
-        assert_eq!(ivf.dim(), 8);
-        ivf.postings[1].push(0, &[0]);
-        ivf.postings[1].push(1, &[1]);
-        ivf.postings[3].push(2, &[2]);
-        assert_eq!(ivf.partition_sizes(), vec![0, 2, 0, 1]);
-        assert_eq!(ivf.total_postings(), 3);
-        assert!(ivf.memory_bytes() > 4 * 8 * 4);
     }
 }

@@ -88,9 +88,9 @@ impl KmrResult {
 
 /// Compute the KMR cost distribution for `index` over a query workload.
 pub fn compute_kmr(index: &SoarIndex, queries: &MatrixF32, gt: &GroundTruth) -> KmrResult {
-    let centroids = &index.ivf.centroids;
+    let centroids = index.centroids();
     let c = centroids.rows();
-    let sizes: Vec<u64> = index.ivf.partition_sizes().iter().map(|&s| s as u64).collect();
+    let sizes: Vec<u64> = index.partition_sizes().iter().map(|&s| s as u64).collect();
 
     let per_query: Vec<(Vec<u64>, Vec<u32>)> = par_map(queries.rows(), |qi| {
             let q = queries.row(qi);
@@ -140,7 +140,7 @@ pub fn compute_kmr(index: &SoarIndex, queries: &MatrixF32, gt: &GroundTruth) -> 
     KmrResult {
         pair_costs,
         pair_ranks,
-        total_postings: index.ivf.total_postings() as u64,
+        total_postings: index.total_postings() as u64,
         num_partitions: c,
     }
 }

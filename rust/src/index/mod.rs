@@ -3,38 +3,47 @@
 //! turns the build-once index into a living one.
 //!
 //! Module map:
-//! * [`ivf`]        — codebook + posting lists substrate.
+//! * [`ivf`]        — posting-list substrate.
 //! * [`soar`]       — the paper's contribution: Theorem 3.1 spilled
 //!                    assignment.
-//! * [`builder`]    — the indexing pipeline (§3.5: train VQ → primary
-//!                    assign → residuals → SOAR spill → PQ encode).
+//! * [`builder`]    — the indexing pipeline, now a thin wrapper over
+//!                    [`crate::quant::QuantModel::train`] + assignment +
+//!                    encoding.
 //! * [`searcher`]   — multi-stage query path (centroid top-t → ADC scan
 //!                    with dedup → int8 rerank): the [`Search`] trait,
 //!                    [`Searcher`] over one monolithic index,
 //!                    [`SnapshotSearcher`] over a segmented snapshot
-//!                    (tombstone/shadow filtering + per-segment top-k
+//!                    (per-model partition selection + LUTs,
+//!                    tombstone/shadow filtering, per-segment top-k
 //!                    merge).
 //! * [`segment`]    — segmented architecture: immutable
 //!                    [`SealedSegment`]s, the frozen [`DeltaSegment`],
 //!                    the [`IndexSnapshot`] queries run against, and the
-//!                    [`SnapshotCell`] epoch-style `Arc` swap point.
+//!                    [`SnapshotCell`] epoch-style `Arc` swap point. Each
+//!                    segment carries an `Arc<QuantModel>`; snapshots may
+//!                    mix models (post-retrain states).
 //! * [`mutable`]    — the write path: [`MutableIndex`] with online
 //!                    `upsert`/`delete` (new points spill-assigned via
-//!                    Theorem 3.1 against the fixed codebook), delta
-//!                    sealing, group-commit publishing, and inline or
-//!                    staged (off-write-path) compaction.
+//!                    Theorem 3.1 against the *active* model), delta
+//!                    sealing, group-commit publishing (count- and
+//!                    time-bounded), inline or staged (off-write-path)
+//!                    compaction, and staged online retraining
+//!                    (`begin_retrain` → [`mutable::RetrainJob::train`] →
+//!                    `install_retrain`).
 //! * [`collection`] — the public facade: a [`Collection`] of S
 //!                    independently mutable, snapshot-served shards with
 //!                    routed writes, parallel fan-out reads
-//!                    ([`CollectionSearcher`]), and per-shard background
-//!                    compaction workers.
+//!                    ([`CollectionSearcher`]), per-shard background
+//!                    compaction workers, and per-shard online retraining
+//!                    ([`Collection::retrain_shard`]).
 //! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
 //! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
 //! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
 //! * [`serialize`]  — versioned binary formats (v1 single index,
 //!                    v2 segments + delta + tombstones, v3 sharded
-//!                    collection manifests, with backward-compat reads)
-//!                    + Table 1 memory accounting.
+//!                    collection manifests, v4 deduplicated model table +
+//!                    per-segment model references, with backward-compat
+//!                    reads) + Table 1 memory accounting.
 //!
 //! Invariant checking is layered the same way: [`SoarIndex::check_invariants`]
 //! covers one segment; [`segment::IndexSnapshot::check_invariants`] extends it
@@ -53,43 +62,77 @@ pub mod serialize;
 pub mod soar;
 pub mod stats;
 
-pub use builder::{build_index, build_index_with_int8};
+pub use builder::{build_index, build_index_with_int8, encode_index};
 pub use collection::{Collection, CollectionSearcher, CollectionSnapshot, CollectionStats};
-pub use ivf::{IvfIndex, PostingList};
-pub use mutable::{CompactionJob, MutableIndex, MutableStats};
+pub use ivf::PostingList;
+pub use mutable::{CompactionJob, MutableIndex, MutableStats, RetrainJob};
 pub use searcher::{Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher};
 pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 
+use std::sync::Arc;
+
 use crate::config::IndexConfig;
 use crate::linalg::MatrixF32;
-use crate::quant::{BlockedCodes, Int8Quantizer, ProductQuantizer};
+use crate::quant::{BlockedCodes, Int8Quantizer, ProductQuantizer, QuantModel};
 
-/// A fully built SOAR (or baseline VQ) index.
+/// A fully built SOAR (or baseline VQ) index: one [`QuantModel`] plus the
+/// rows encoded against it (posting lists, int8 records, assignments).
+///
+/// The model is `Arc`-shared — segments produced from the same training
+/// run (seal, compaction) reference one allocation, and the searcher keys
+/// per-query work on [`QuantModel::id`].
 #[derive(Clone, Debug)]
 pub struct SoarIndex {
-    pub config: IndexConfig,
     /// Dataset size the index was built over.
     pub n: usize,
     pub dim: usize,
-    /// Codebook + posting lists (ids + packed PQ codes).
-    pub ivf: IvfIndex,
-    /// Residual product quantizer shared by all partitions.
-    pub pq: ProductQuantizer,
-    /// Optional int8 rerank stage ("highest-bitrate representation").
-    pub int8: Option<Int8Quantizer>,
-    /// `n * dim` int8 codes when `int8` is present.
+    /// The quantization model every row is encoded against.
+    pub model: Arc<QuantModel>,
+    /// One posting list per partition (ids + packed PQ codes).
+    pub postings: Vec<PostingList>,
+    /// `n * dim` int8 codes when the model stores int8.
     pub raw_int8: Vec<i8>,
     /// Per-point partition assignments; `assignments[i][0]` is primary.
     pub assignments: Vec<Vec<u32>>,
     /// Blockwise LUT16 scan layout, one per partition — derived from
-    /// `ivf.postings` via [`SoarIndex::rebuild_blocked`] (never
-    /// serialized; re-derived on load).
+    /// `postings` via [`SoarIndex::rebuild_blocked`] (never serialized;
+    /// re-derived on load).
     pub blocked: Vec<BlockedCodes>,
 }
 
 impl SoarIndex {
+    /// The training-time parameters of this index's model.
+    pub fn config(&self) -> &IndexConfig {
+        &self.model.config
+    }
+
+    /// `[c, d]` partition centers of the model.
+    pub fn centroids(&self) -> &MatrixF32 {
+        &self.model.centroids
+    }
+
+    /// The model's residual product quantizer.
+    pub fn pq(&self) -> &ProductQuantizer {
+        &self.model.pq
+    }
+
+    /// The model's int8 rerank quantizer, if storage is enabled.
+    pub fn int8(&self) -> Option<&Int8Quantizer> {
+        self.model.int8.as_ref()
+    }
+
     pub fn num_partitions(&self) -> usize {
-        self.ivf.num_partitions()
+        self.model.num_partitions()
+    }
+
+    /// Total posting entries (n × assignments-per-point).
+    pub fn total_postings(&self) -> usize {
+        self.postings.iter().map(|p| p.len()).sum()
+    }
+
+    /// Posting sizes per partition (the KMR weighting in §5.1 uses these).
+    pub fn partition_sizes(&self) -> Vec<usize> {
+        self.postings.iter().map(|p| p.len()).collect()
     }
 
     /// The int8 record of point `id` (panics if int8 storage disabled).
@@ -107,10 +150,9 @@ impl SoarIndex {
     /// (Re)derive the blocked LUT16 scan layout from the posting lists.
     /// Every constructor must call this after the postings are final.
     pub fn rebuild_blocked(&mut self) {
-        let m = self.pq.num_subspaces();
-        let cb = self.pq.code_bytes();
+        let m = self.model.pq.num_subspaces();
+        let cb = self.model.pq.code_bytes();
         self.blocked = self
-            .ivf
             .postings
             .iter()
             .map(|list| BlockedCodes::from_codes(&list.codes, list.len(), cb, m))
@@ -120,19 +162,33 @@ impl SoarIndex {
     /// Basic invariant check used by tests and after deserialization.
     pub fn check_invariants(&self) -> crate::error::Result<()> {
         use crate::error::Error;
-        let per_point = self.config.assignments_per_point();
+        if self.dim != self.model.dim() {
+            return Err(Error::Serialize(format!(
+                "index dim {} != model dim {}",
+                self.dim,
+                self.model.dim()
+            )));
+        }
+        if self.postings.len() != self.model.num_partitions() {
+            return Err(Error::Serialize(format!(
+                "{} posting lists for a {}-partition model",
+                self.postings.len(),
+                self.model.num_partitions()
+            )));
+        }
+        let per_point = self.model.assignments_per_point();
         if self.assignments.len() != self.n {
             return Err(Error::Serialize("assignment count != n".into()));
         }
-        let total: usize = self.ivf.total_postings();
+        let total: usize = self.total_postings();
         if total != self.n * per_point {
             return Err(Error::Serialize(format!(
                 "posting entries {total} != n*assignments {}",
                 self.n * per_point
             )));
         }
-        let cb = self.pq.code_bytes();
-        for (p, list) in self.ivf.postings.iter().enumerate() {
+        let cb = self.model.pq.code_bytes();
+        for (p, list) in self.postings.iter().enumerate() {
             if list.codes.len() != list.ids.len() * cb {
                 return Err(Error::Serialize(format!(
                     "partition {p}: code bytes misaligned"
@@ -146,15 +202,15 @@ impl SoarIndex {
                 }
             }
         }
-        if self.int8.is_some() && self.raw_int8.len() != self.n * self.dim {
+        if self.model.int8.is_some() && self.raw_int8.len() != self.n * self.dim {
             return Err(Error::Serialize("raw int8 storage size mismatch".into()));
         }
-        if self.blocked.len() != self.ivf.postings.len() {
+        if self.blocked.len() != self.postings.len() {
             return Err(Error::Serialize(
                 "blocked layout partition count mismatch (rebuild_blocked not called?)".into(),
             ));
         }
-        for (p, (b, list)) in self.blocked.iter().zip(&self.ivf.postings).enumerate() {
+        for (p, (b, list)) in self.blocked.iter().zip(&self.postings).enumerate() {
             if b.len() != list.len() {
                 return Err(Error::Serialize(format!(
                     "partition {p}: blocked layout has {} entries for {} postings",

@@ -30,7 +30,7 @@ pub struct MultiLevelSelector {
 impl MultiLevelSelector {
     /// Cluster the index's leaf centroids into `num_groups` cells.
     pub fn build(engine: &Engine, index: &SoarIndex, num_groups: usize, seed: u64) -> Result<Self> {
-        let leaves = &index.ivf.centroids;
+        let leaves = index.centroids();
         let g = num_groups.clamp(1, leaves.rows());
         let km = KMeans::train(
             leaves,
@@ -81,7 +81,7 @@ impl MultiLevelSelector {
         let mut scored = 0usize;
         for cell in top.into_sorted() {
             for &leaf in &self.groups[cell.id as usize] {
-                let s = dot(q, index.ivf.centroids.row(leaf as usize));
+                let s = dot(q, index.centroids().row(leaf as usize));
                 leaves.push(leaf, s);
                 scored += 1;
             }
@@ -143,7 +143,7 @@ mod tests {
         let flat = engine
             .centroid_topk(
                 &MatrixF32::from_rows(&[q]).unwrap(),
-                &idx.ivf.centroids,
+                idx.centroids(),
                 16,
             )
             .unwrap();

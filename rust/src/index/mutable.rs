@@ -1,11 +1,12 @@
 //! The mutable front of the segmented index: online `upsert`/`delete`
-//! with immutable snapshot publishing, delta sealing, and compaction.
+//! with immutable snapshot publishing, delta sealing, compaction, and
+//! staged online retraining.
 //!
 //! Write path:
 //!
 //! 1. `upsert(id, v)` assigns `v` a primary partition (argmin ℓ₂) and
-//!    SOAR spilled partitions via [`soar::assign_spills`] against the
-//!    *existing* codebook (centroids are fixed between retrains, so the
+//!    SOAR spilled partitions via [`QuantModel::assign`] against the
+//!    *active* model (its centroids are fixed between retrains, so the
 //!    Theorem 3.1 loss applies to incremental points unchanged), encodes
 //!    PQ residual codes + the int8 record, and installs the row in the
 //!    delta builder. A previous delta version of `id` is replaced; a
@@ -16,20 +17,26 @@
 //!    the shared [`SnapshotCell`] — readers are never blocked and always
 //!    observe a consistent index.
 //! 4. `seal_delta()` freezes the delta into a new sealed segment (minor
-//!    compaction); `compact()` merges *all* segments plus the delta into
-//!    one sealed segment, dropping tombstoned and shadowed rows (major
-//!    compaction — no re-encoding: PQ codes, int8 records, and
-//!    assignments are carried over verbatim).
+//!    compaction); `compact()` merges each maximal adjacent run of
+//!    *same-model* segments (plus the delta, when it shares the newest
+//!    run's model) into one segment per run, dropping tombstoned and
+//!    shadowed rows (major compaction — no re-encoding: PQ codes, int8
+//!    records, and assignments are carried over verbatim, which is only
+//!    possible within one model). A never-retrained index has one run, so
+//!    this is the familiar collapse-to-one-segment.
 //!
 //! Compaction triggers ([`MutableConfig`]): delta row count
 //! (`delta_capacity`) and tombstone pressure (`tombstone_ratio`).
 //!
-//! Two mechanisms keep writers off the slow paths:
+//! Three mechanisms keep writers off the slow paths:
 //!
 //! * **Group-commit publishing** (`MutableConfig::publish_coalesce`):
 //!   single-row mutations only republish the snapshot every N mutations,
 //!   amortizing the O(delta + id_space/64) freeze; [`MutableIndex::flush`]
-//!   forces a publish for read-your-writes.
+//!   forces a publish for read-your-writes. A time bound
+//!   (`MutableConfig::publish_max_delay_us`) caps how long a lone
+//!   mutation can sit unpublished: a background timer thread flushes the
+//!   window within T µs even if the count never fills.
 //! * **Staged compaction** ([`MutableIndex::begin_compaction`] →
 //!   [`CompactionJob::merge`] → [`MutableIndex::install_compaction`]):
 //!   the sealed-segment merge runs on a *copy* captured under a brief
@@ -37,17 +44,31 @@
 //!   only for the final install + snapshot store.
 //!   [`MutableIndex::compact_concurrent`] drives all three phases and is
 //!   what `Collection`'s per-shard background workers call.
+//! * **Staged retraining** ([`MutableIndex::begin_retrain`] →
+//!   [`RetrainJob::train`] → [`MutableIndex::install_retrain`]): capture
+//!   seals the delta and snapshots the sealed list; `train` reconstructs
+//!   the captured live rows from their highest-bitrate representation,
+//!   trains a *fresh* [`QuantModel`] (generation + 1) and re-encodes +
+//!   re-spills every row against it — all with no lock held; install
+//!   swaps the new-model segment in under the same
+//!   shadowing/abort-on-conflict protocol as compaction. Concurrent
+//!   upserts land in post-capture segments (or the delta) and shadow
+//!   their retrained copies, so no write is lost; the delta builder is
+//!   rebound to the new model so subsequent writes use it.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::config::MutableConfig;
 use crate::error::{Error, Result};
-use crate::index::builder::primary_assignments;
-use crate::index::ivf::{IvfIndex, PostingList};
+use crate::index::ivf::PostingList;
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
-use crate::index::{soar, SoarIndex};
+use crate::index::SoarIndex;
 use crate::linalg::MatrixF32;
+use crate::quant::QuantModel;
 use crate::runtime::Engine;
 
 /// Point-in-time bookkeeping about a [`MutableIndex`].
@@ -66,6 +87,14 @@ pub struct MutableStats {
     pub epoch: u64,
     /// Major compactions performed.
     pub compactions: u64,
+    /// Retrains installed (model swaps).
+    pub retrains: u64,
+    /// Generation of the active (write-side) model: 0 until the first
+    /// retrain installs.
+    pub model_generation: u32,
+    /// Time since the last snapshot publish (staleness of the served
+    /// view; bounded by `publish_max_delay_us` when it is set).
+    pub last_publish_age: Duration,
 }
 
 /// Mutable builder state for the delta segment. Rows live in append-only
@@ -74,10 +103,10 @@ pub struct MutableStats {
 /// snapshots and serialization deterministic).
 #[derive(Debug)]
 struct DeltaBuilder {
+    /// The active model — every row in the builder is encoded against it.
+    model: Arc<QuantModel>,
     dim: usize,
     code_bytes: usize,
-    /// PQ subspace count (for rebuilding the frozen delta's blocked layout).
-    m: usize,
     postings: Vec<PostingList>,
     slot_ids: Vec<u32>,
     slot_live: Vec<bool>,
@@ -89,12 +118,15 @@ struct DeltaBuilder {
 }
 
 impl DeltaBuilder {
-    fn new(dim: usize, num_partitions: usize, code_bytes: usize, m: usize) -> DeltaBuilder {
+    fn new(model: Arc<QuantModel>) -> DeltaBuilder {
+        let dim = model.dim();
+        let parts = model.num_partitions();
+        let code_bytes = model.pq.code_bytes();
         DeltaBuilder {
+            model,
             dim,
             code_bytes,
-            m,
-            postings: vec![PostingList::default(); num_partitions],
+            postings: vec![PostingList::default(); parts],
             slot_ids: Vec::new(),
             slot_live: Vec::new(),
             assignments: Vec::new(),
@@ -121,13 +153,12 @@ impl DeltaBuilder {
     /// records. Shared by delta sealing and major compaction.
     fn append_live_rows(
         &self,
-        code_bytes: usize,
-        has_int8: bool,
         postings: &mut [PostingList],
         global_ids: &mut Vec<u32>,
         assignments: &mut Vec<Vec<u32>>,
         raw_int8: &mut Vec<i8>,
     ) -> Result<()> {
+        let has_int8 = self.model.int8.is_some();
         for slot in 0..self.slot_ids.len() {
             if !self.slot_live[slot] {
                 continue;
@@ -139,7 +170,7 @@ impl DeltaBuilder {
                 let pos = list.position_of(id).ok_or_else(|| {
                     Error::Serialize(format!("delta posting missing for id {id}"))
                 })?;
-                postings[p as usize].push(local, list.code(pos, code_bytes));
+                postings[p as usize].push(local, list.code(pos, self.code_bytes));
             }
             global_ids.push(id);
             assignments.push(self.assignments[slot].clone());
@@ -197,7 +228,7 @@ impl DeltaBuilder {
     /// cloned verbatim (they reference global ids, not slots, and already
     /// contain only live entries in ascending-slot order).
     fn freeze(&self) -> DeltaSegment {
-        let mut d = DeltaSegment::empty(self.dim, self.postings.len(), self.code_bytes);
+        let mut d = DeltaSegment::empty(self.model.clone());
         d.postings = self.postings.clone();
         let has_int8 = !self.int8_codes.is_empty();
         for slot in 0..self.slot_ids.len() {
@@ -217,12 +248,18 @@ impl DeltaBuilder {
             d.assignments.push(self.assignments[slot].clone());
             d.id_space = d.id_space.max(id as usize + 1);
         }
-        d.rebuild_blocked(self.m);
+        d.rebuild_blocked();
         d
     }
 
+    /// Empty builder bound to `model` (rebinding point after a retrain).
+    fn reset_with(&mut self, model: Arc<QuantModel>) {
+        *self = DeltaBuilder::new(model);
+    }
+
     fn reset(&mut self) {
-        *self = DeltaBuilder::new(self.dim, self.postings.len(), self.code_bytes, self.m);
+        let model = self.model.clone();
+        self.reset_with(model);
     }
 }
 
@@ -234,28 +271,50 @@ struct Inner {
     tombstones: HashSet<u32>,
     epoch: u64,
     compactions: u64,
+    retrains: u64,
     /// Mutations accumulated since the last snapshot publish (the
     /// group-commit window counter).
     pending: usize,
+    /// When the oldest unpublished mutation entered the window (drives
+    /// the `publish_max_delay_us` timer).
+    pending_since: Option<Instant>,
+    /// When the snapshot was last published.
+    last_publish: Instant,
+}
+
+/// Publish the current writer state as an immutable snapshot.
+fn publish(cell: &SnapshotCell, inner: &mut Inner) {
+    inner.pending = 0;
+    inner.pending_since = None;
+    inner.epoch += 1;
+    inner.last_publish = Instant::now();
+    let snap = IndexSnapshot::new(
+        inner.sealed.clone(),
+        Arc::new(inner.delta.freeze()),
+        Arc::new(inner.tombstones.clone()),
+        inner.epoch,
+    );
+    cell.store(Arc::new(snap));
 }
 
 /// Append the surviving rows of one sealed segment into a merged segment
 /// layout (`keep(local, global)` decides survival). Shared by inline
-/// compaction and the off-write-path [`CompactionJob::merge`].
+/// compaction and the off-write-path [`CompactionJob::merge`]. Only valid
+/// within one model (codes are copied verbatim).
 fn gather_segment_rows(
     seg: &SealedSegment,
     keep: &dyn Fn(u32, u32) -> bool,
-    cb: usize,
-    has_int8: bool,
     postings: &mut [PostingList],
     global_ids: &mut Vec<u32>,
     assignments: &mut Vec<Vec<u32>>,
     raw_int8: &mut Vec<i8>,
 ) -> Result<()> {
     let idx = &seg.index;
+    let cb = idx.model.pq.code_bytes();
+    let has_int8 = idx.model.int8.is_some();
     // partition-major → row-major code gather
     let mut row_codes: Vec<Vec<(u32, Vec<u8>)>> = vec![Vec::new(); idx.n];
-    for (p, list) in idx.ivf.postings.iter().enumerate() {
+    for (p, list) in idx.postings.iter().enumerate() {
         for (pos, &local) in list.ids.iter().enumerate() {
             row_codes[local as usize].push((p as u32, list.code(pos, cb).to_vec()));
         }
@@ -285,25 +344,20 @@ fn gather_segment_rows(
     Ok(())
 }
 
-/// Assemble gathered rows into a fresh sealed segment sharing `base`'s
-/// codebook (centroids, PQ, int8 scales); no engine calls.
+/// Assemble gathered rows into a fresh sealed segment encoded against
+/// `model`; no engine calls.
 fn assemble_segment(
-    base: &SoarIndex,
+    model: Arc<QuantModel>,
     postings: Vec<PostingList>,
     global_ids: Vec<u32>,
     assignments: Vec<Vec<u32>>,
     raw_int8: Vec<i8>,
 ) -> Result<SealedSegment> {
     let mut index = SoarIndex {
-        config: base.config.clone(),
         n: global_ids.len(),
-        dim: base.dim,
-        ivf: IvfIndex {
-            centroids: base.ivf.centroids.clone(),
-            postings,
-        },
-        pq: base.pq.clone(),
-        int8: base.int8.clone(),
+        dim: model.dim(),
+        model,
+        postings,
         raw_int8,
         assignments,
         blocked: Vec::new(),
@@ -311,6 +365,93 @@ fn assemble_segment(
     index.rebuild_blocked();
     index.check_invariants()?;
     SealedSegment::new(Arc::new(index), global_ids, Arc::new(HashSet::new()))
+}
+
+/// A rowless sealed segment — the fallback that keeps the snapshot's
+/// non-empty-sealed-list invariant when a merge drops every row.
+fn empty_segment(model: Arc<QuantModel>) -> Result<SealedSegment> {
+    let parts = model.num_partitions();
+    assemble_segment(
+        model,
+        vec![PostingList::default(); parts],
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+    )
+}
+
+/// Staged-install validity check: the captured segments must still form a
+/// prefix of the live sealed list (same `Arc`s, same order); a concurrent
+/// major compaction or retrain breaks this and the install must abort.
+fn capture_is_prefix(inner: &Inner, captured: &[Arc<SealedSegment>]) -> bool {
+    inner.sealed.len() >= captured.len()
+        && inner
+            .sealed
+            .iter()
+            .zip(captured)
+            .all(|(cur, cap)| Arc::ptr_eq(&cur.index, &cap.index))
+}
+
+/// Group sealed segments into maximal adjacent runs sharing one model
+/// (order preserved). One run for a never-retrained index.
+fn model_runs(sealed: &[Arc<SealedSegment>]) -> Vec<Vec<Arc<SealedSegment>>> {
+    let mut runs: Vec<Vec<Arc<SealedSegment>>> = Vec::new();
+    for seg in sealed {
+        match runs.last_mut() {
+            Some(run) if run[0].model().id() == seg.model().id() => run.push(seg.clone()),
+            _ => runs.push(vec![seg.clone()]),
+        }
+    }
+    runs
+}
+
+/// Merge each run with `keep` deciding row survival; `fold_delta` (live
+/// rows of the delta builder, same model as the last run) appends into the
+/// final run's segment. Returns one segment per run, in order, empty runs
+/// dropped (unless every run is empty and nothing else remains — the
+/// caller handles the all-empty case).
+fn merge_runs(
+    runs: &[Vec<Arc<SealedSegment>>],
+    keep: &dyn Fn(&SealedSegment, u32, u32) -> bool,
+    fold_delta: Option<&DeltaBuilder>,
+) -> Result<Vec<SealedSegment>> {
+    let mut merged = Vec::with_capacity(runs.len());
+    for (ri, run) in runs.iter().enumerate() {
+        let model = run[0].model().clone();
+        let mut postings = vec![PostingList::default(); model.num_partitions()];
+        let mut global_ids: Vec<u32> = Vec::new();
+        let mut assignments: Vec<Vec<u32>> = Vec::new();
+        let mut raw_int8: Vec<i8> = Vec::new();
+        for seg in run {
+            gather_segment_rows(
+                seg.as_ref(),
+                &|local, g| keep(seg, local, g),
+                &mut postings,
+                &mut global_ids,
+                &mut assignments,
+                &mut raw_int8,
+            )?;
+        }
+        if ri + 1 == runs.len() {
+            if let Some(delta) = fold_delta {
+                debug_assert_eq!(delta.model.id(), model.id());
+                delta.append_live_rows(
+                    &mut postings,
+                    &mut global_ids,
+                    &mut assignments,
+                    &mut raw_int8,
+                )?;
+            }
+        }
+        merged.push(assemble_segment(
+            model,
+            postings,
+            global_ids,
+            assignments,
+            raw_int8,
+        )?);
+    }
+    Ok(merged)
 }
 
 /// A sealed-segment merge captured off the write path: phase 1 of the
@@ -340,31 +481,201 @@ impl CompactionJob {
         self.captured.len()
     }
 
-    /// Phase 2 (no lock held): merge the captured segments into one,
-    /// dropping rows tombstoned or shadowed *as of capture time*. Rows
-    /// deleted or superseded after capture are handled at install / scan
-    /// time by the tombstone set and the snapshot `dead` bitmap.
-    pub fn merge(&self) -> Result<SealedSegment> {
-        let base = &self.captured[0].index;
-        let cb = base.pq.code_bytes();
-        let has_int8 = base.int8.is_some();
-        let mut postings = vec![PostingList::default(); base.num_partitions()];
-        let mut global_ids: Vec<u32> = Vec::new();
-        let mut assignments: Vec<Vec<u32>> = Vec::new();
-        let mut raw_int8: Vec<i8> = Vec::new();
+    /// Phase 2 (no lock held): merge the captured segments — one merged
+    /// segment per adjacent same-model run — dropping rows tombstoned or
+    /// shadowed *as of capture time*. Rows deleted or superseded after
+    /// capture are handled at install / scan time by the tombstone set
+    /// and the snapshot `dead` bitmap.
+    pub fn merge(&self) -> Result<Vec<SealedSegment>> {
+        let runs = model_runs(&self.captured);
+        merge_runs(
+            &runs,
+            &|seg, local, g| {
+                !self.tombstones.contains(&g) && !seg.shadow_bits.get(local as usize)
+            },
+            None,
+        )
+    }
+}
+
+/// A retrain captured off the write path: phase 1 of the staged retrain
+/// ([`MutableIndex::begin_retrain`], which seals the delta first so the
+/// freshest rows inform the new model). [`RetrainJob::train`] then runs
+/// with no lock held — reconstruction, k-means, PQ/int8 training, and
+/// re-encoding are the expensive parts — while writers keep mutating.
+#[derive(Debug)]
+pub struct RetrainJob {
+    captured: Vec<Arc<SealedSegment>>,
+    tombstones: HashSet<u32>,
+    base_model: Arc<QuantModel>,
+}
+
+impl RetrainJob {
+    /// Rows stored across the captured segments.
+    pub fn rows(&self) -> usize {
+        self.captured.iter().map(|s| s.len()).sum()
+    }
+
+    /// Segments captured for the retrain.
+    pub fn segments(&self) -> usize {
+        self.captured.len()
+    }
+
+    /// Reconstruct the live captured rows from their highest-bitrate
+    /// stored representation: the int8 record when present, else the
+    /// primary-partition PQ reconstruction (centroid + decoded residual).
+    fn reconstruct(&self) -> Result<(Vec<u32>, MatrixF32)> {
+        let dim = self.base_model.dim();
+        let mut gids: Vec<u32> = Vec::new();
+        let mut data = MatrixF32::zeros(0, dim);
         for seg in &self.captured {
-            gather_segment_rows(
-                seg.as_ref(),
-                &|local, g| !self.tombstones.contains(&g) && !seg.shadow_bits.get(local as usize),
-                cb,
-                has_int8,
-                &mut postings,
-                &mut global_ids,
-                &mut assignments,
-                &mut raw_int8,
-            )?;
+            let idx = &seg.index;
+            // Primary-code lookup (PQ fallback path): position of each
+            // row's code in its primary partition's list.
+            let mut primary_pos: Vec<Option<usize>> = vec![None; idx.n];
+            if idx.model.int8.is_none() {
+                for (p, list) in idx.postings.iter().enumerate() {
+                    for (pos, &local) in list.ids.iter().enumerate() {
+                        if idx.assignments[local as usize][0] == p as u32 {
+                            primary_pos[local as usize] = Some(pos);
+                        }
+                    }
+                }
+            }
+            let cb = idx.model.pq.code_bytes();
+            for local in 0..idx.n {
+                let g = seg.global_ids[local];
+                if self.tombstones.contains(&g) || seg.shadow_bits.get(local) {
+                    continue;
+                }
+                let row = match &idx.model.int8 {
+                    Some(q8) => q8.decode(idx.int8_record(local as u32)),
+                    None => {
+                        let p = idx.assignments[local][0];
+                        let pos = primary_pos[local].ok_or_else(|| {
+                            Error::Serialize(format!("row {local} missing primary code"))
+                        })?;
+                        let code = idx.postings[p as usize].code(pos, cb).to_vec();
+                        let r = idx.model.pq.decode(&crate::quant::PqCode(code));
+                        let c = idx.model.centroids.row(p as usize);
+                        r.iter().zip(c).map(|(&a, &b)| a + b).collect()
+                    }
+                };
+                data.push_row(&row)?;
+                gids.push(g);
+            }
         }
-        assemble_segment(base, postings, global_ids, assignments, raw_int8)
+        Ok((gids, data))
+    }
+
+    /// Phase 2 (no lock held): reconstruct the captured live rows, train
+    /// a fresh model on them (generation + 1), and re-encode + re-spill
+    /// every row into one new-model sealed segment.
+    pub fn train(&self, engine: &Engine) -> Result<SealedSegment> {
+        let (gids, data) = self.reconstruct()?;
+        let mut config = self.base_model.config.clone();
+        // The retrained partition count tracks the captured corpus: keep
+        // the configured count where possible, but stay trainable on a
+        // shrunken corpus.
+        config.num_partitions = config
+            .num_partitions
+            .min(data.rows())
+            .max(config.num_spills + 1);
+        if data.rows() <= config.num_spills || data.rows() < crate::quant::pq::PQ_CENTERS {
+            return Err(Error::Config(format!(
+                "cannot retrain on {} live rows",
+                data.rows()
+            )));
+        }
+        let model = QuantModel::train(
+            engine,
+            &data,
+            &config,
+            self.base_model.generation + 1,
+            None,
+        )?;
+        let index = crate::index::builder::encode_index(engine, &data, Arc::new(model))?;
+        SealedSegment::new(Arc::new(index), gids, Arc::new(HashSet::new()))
+    }
+}
+
+/// Signal block shared with the publish-timer thread.
+#[derive(Debug)]
+struct TimerShared {
+    /// "Re-check the deadline" flag (set by mutators arming a window).
+    kicked: Mutex<bool>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// The `publish_max_delay_us` enforcement thread: parked until a
+/// group-commit window opens, then flushes it at deadline.
+#[derive(Debug)]
+struct PublishTimer {
+    shared: Arc<TimerShared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+fn spawn_publish_timer(
+    inner: Arc<Mutex<Inner>>,
+    cell: Arc<SnapshotCell>,
+    delay: Duration,
+) -> PublishTimer {
+    let shared = Arc::new(TimerShared {
+        kicked: Mutex::new(false),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+    });
+    let thread = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("soar-publish-timer".into())
+            .spawn(move || {
+                loop {
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Inspect the window with only the writer lock held
+                    // (never while holding the cv mutex — lock order is
+                    // always inner → kicked).
+                    let wait = {
+                        let mut g = inner.lock().unwrap();
+                        match g.pending_since {
+                            Some(t0) => {
+                                let due = t0 + delay;
+                                let now = Instant::now();
+                                if now >= due {
+                                    publish(&cell, &mut g);
+                                    None
+                                } else {
+                                    Some(due - now)
+                                }
+                            }
+                            None => None,
+                        }
+                    };
+                    let guard = shared.kicked.lock().unwrap();
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if *guard {
+                        // A window opened while we were inspecting.
+                        let mut guard = guard;
+                        *guard = false;
+                        continue;
+                    }
+                    // Park until kicked (bounded so `stop` is honored),
+                    // or sleep out the remaining window.
+                    let timeout = wait.unwrap_or(Duration::from_millis(100));
+                    let (mut guard, _) = shared.cv.wait_timeout(guard, timeout).unwrap();
+                    *guard = false;
+                }
+            })
+            .expect("spawn publish timer")
+    };
+    PublishTimer {
+        shared,
+        thread: Some(thread),
     }
 }
 
@@ -376,7 +687,8 @@ pub struct MutableIndex {
     engine: Arc<Engine>,
     config: MutableConfig,
     cell: Arc<SnapshotCell>,
-    inner: Mutex<Inner>,
+    inner: Arc<Mutex<Inner>>,
+    timer: Option<PublishTimer>,
 }
 
 impl MutableIndex {
@@ -395,6 +707,8 @@ impl MutableIndex {
     }
 
     /// Resume mutation on a previously published / deserialized snapshot.
+    /// The write side binds to the snapshot's *active* model (the delta's
+    /// — which tracks the newest installed retrain).
     pub fn from_snapshot(
         snapshot: Arc<IndexSnapshot>,
         engine: Arc<Engine>,
@@ -402,13 +716,8 @@ impl MutableIndex {
     ) -> Result<MutableIndex> {
         config.validate()?;
         snapshot.check_invariants()?;
-        let base = snapshot.base();
-        let mut delta = DeltaBuilder::new(
-            base.dim,
-            base.num_partitions(),
-            base.pq.code_bytes(),
-            base.pq.num_subspaces(),
-        );
+        let active = snapshot.active_model().clone();
+        let mut delta = DeltaBuilder::new(active.clone());
         // Rehydrate the builder from the frozen delta, slot order preserved.
         let frozen = &snapshot.delta;
         for slot in 0..frozen.len() {
@@ -417,27 +726,38 @@ impl MutableIndex {
             let assignment = frozen.assignments[slot].clone();
             let codes: Vec<Vec<u8>> = assignment
                 .iter()
-                .map(|&p| {
-                    let r = crate::index::residual(row, &base.ivf.centroids, p);
-                    base.pq.encode(&r).0
-                })
+                .map(|&p| active.residual_code(row, p).0)
                 .collect();
-            let int8_row = base.int8.as_ref().map(|q8| q8.encode(row));
+            let int8_row = active.encode_int8(row);
             delta.insert(id, row, assignment, &codes, int8_row);
         }
-        let inner = Inner {
+        let inner = Arc::new(Mutex::new(Inner {
             sealed: snapshot.sealed.clone(),
             delta,
             tombstones: (*snapshot.tombstones).clone(),
             epoch: snapshot.epoch,
             compactions: 0,
+            retrains: 0,
             pending: 0,
+            pending_since: None,
+            last_publish: Instant::now(),
+        }));
+        let cell = Arc::new(SnapshotCell::new(snapshot));
+        let timer = if config.publish_max_delay_us > 0 {
+            Some(spawn_publish_timer(
+                inner.clone(),
+                cell.clone(),
+                Duration::from_micros(config.publish_max_delay_us),
+            ))
+        } else {
+            None
         };
         Ok(MutableIndex {
             engine,
             config,
-            cell: Arc::new(SnapshotCell::new(snapshot)),
-            inner: Mutex::new(inner),
+            cell,
+            inner,
+            timer,
         })
     }
 
@@ -455,6 +775,11 @@ impl MutableIndex {
 
     pub fn mutable_config(&self) -> MutableConfig {
         self.config
+    }
+
+    /// The model new writes are encoded against.
+    pub fn active_model(&self) -> Arc<QuantModel> {
+        self.inner.lock().unwrap().delta.model.clone()
     }
 
     /// Insert or replace one vector.
@@ -477,35 +802,23 @@ impl MutableIndex {
             return Ok(());
         }
         let mut inner = self.inner.lock().unwrap();
-        let base = inner.sealed[0].index.clone();
-        if vectors.cols() != base.dim {
+        let model = inner.delta.model.clone();
+        if vectors.cols() != model.dim() {
             return Err(Error::Shape(format!(
                 "vector dim {} != index dim {}",
                 vectors.cols(),
-                base.dim
+                model.dim()
             )));
         }
-        let centroids = &base.ivf.centroids;
-        let primary = primary_assignments(&self.engine, vectors, centroids)?;
-        let assignments = soar::assign_spills(
-            &self.engine,
-            vectors,
-            centroids,
-            &primary,
-            base.config.spill,
-            base.config.num_spills,
-        )?;
+        let assignments = model.assign(&self.engine, vectors)?;
         for (i, &id) in ids.iter().enumerate() {
             let row = vectors.row(i);
             let assignment = assignments[i].clone();
             let codes: Vec<Vec<u8>> = assignment
                 .iter()
-                .map(|&p| {
-                    let r = crate::index::residual(row, centroids, p);
-                    base.pq.encode(&r).0
-                })
+                .map(|&p| model.residual_code(row, p).0)
                 .collect();
-            let int8_row = base.int8.as_ref().map(|q8| q8.encode(row));
+            let int8_row = model.encode_int8(row);
             inner.delta.insert(id, row, assignment, &codes, int8_row);
             inner.tombstones.remove(&id);
         }
@@ -552,10 +865,14 @@ impl MutableIndex {
     /// was sealed (`false` when the delta was empty).
     pub fn seal_delta(&self) -> Result<bool> {
         let mut inner = self.inner.lock().unwrap();
+        self.seal_delta_locked(&mut inner)
+    }
+
+    fn seal_delta_locked(&self, inner: &mut Inner) -> Result<bool> {
         if inner.delta.live_len() == 0 {
             return Ok(false);
         }
-        let seg = self.segment_from_delta(&inner)?;
+        let seg = self.segment_from_delta(inner)?;
         let new_ids: HashSet<u32> = seg.global_ids.iter().copied().collect();
         // Every older segment is now additionally shadowed by the new one.
         inner.sealed = inner
@@ -569,14 +886,17 @@ impl MutableIndex {
             .collect();
         inner.sealed.push(Arc::new(seg));
         inner.delta.reset();
-        self.publish_locked(&mut inner);
+        publish(&self.cell, inner);
         Ok(true)
     }
 
-    /// Major compaction: merge every sealed segment plus the delta into a
-    /// single sealed segment, dropping tombstoned and shadowed rows and
-    /// clearing the tombstone set. Codes and assignments are carried over
-    /// verbatim (centroids stay fixed), so no engine calls are needed.
+    /// Major compaction: merge every adjacent same-model run of sealed
+    /// segments (plus the delta, when it shares the final run's model)
+    /// into one segment per run, dropping tombstoned and shadowed rows
+    /// and purging dead tombstones. Codes and assignments are carried
+    /// over verbatim within each run (centroids fixed per model), so no
+    /// engine calls are needed. A never-retrained index collapses to a
+    /// single segment.
     pub fn compact(&self) -> Result<MutableStats> {
         let mut inner = self.inner.lock().unwrap();
         self.compact_locked(&mut inner)?;
@@ -597,28 +917,29 @@ impl MutableIndex {
             tombstones: inner.tombstones.len(),
             epoch: inner.epoch,
             compactions: inner.compactions,
+            retrains: inner.retrains,
+            model_generation: inner.delta.model.generation,
+            last_publish_age: inner.last_publish.elapsed(),
         }
     }
 
-    /// Publish the current writer state as an immutable snapshot.
-    fn publish_locked(&self, inner: &mut Inner) {
-        inner.pending = 0;
-        inner.epoch += 1;
-        let snap = IndexSnapshot::new(
-            inner.sealed.clone(),
-            Arc::new(inner.delta.freeze()),
-            Arc::new(inner.tombstones.clone()),
-            inner.epoch,
-        );
-        self.cell.store(Arc::new(snap));
-    }
-
     /// Record `count` mutations and publish once the group-commit window
-    /// (`publish_coalesce`) fills.
+    /// (`publish_coalesce`) fills; otherwise arm the max-delay timer.
     fn note_mutations_locked(&self, inner: &mut Inner, count: usize) {
         inner.pending += count;
         if inner.pending >= self.config.publish_coalesce {
-            self.publish_locked(inner);
+            publish(&self.cell, inner);
+            return;
+        }
+        if inner.pending_since.is_none() {
+            inner.pending_since = Some(Instant::now());
+            if let Some(t) = &self.timer {
+                // Lock order inner → kicked (the timer thread never takes
+                // them in the other order).
+                let mut kicked = t.shared.kicked.lock().unwrap();
+                *kicked = true;
+                t.shared.cv.notify_one();
+            }
         }
     }
 
@@ -628,7 +949,7 @@ impl MutableIndex {
     pub fn flush(&self) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if inner.pending > 0 {
-            self.publish_locked(&mut inner);
+            publish(&self.cell, &mut inner);
             true
         } else {
             false
@@ -648,33 +969,46 @@ impl MutableIndex {
     }
 
     /// Phase 3 of the staged compaction (brief lock): swap the merged
-    /// segment in for the captured ones. Segments sealed *after* capture
-    /// are kept on top of the merged one (their ids shadow it), and
-    /// tombstones whose rows were purged by the merge are dropped.
+    /// run segments in for the captured ones. Segments sealed *after*
+    /// capture are kept on top of the merged ones (their ids shadow
+    /// them), and tombstones whose rows were purged by the merge are
+    /// dropped.
     ///
     /// Returns `false` — leaving the index untouched — when the capture
-    /// was invalidated by a concurrent major compaction (the captured
-    /// segments no longer form a prefix of the sealed list).
-    pub fn install_compaction(&self, job: &CompactionJob, merged: SealedSegment) -> Result<bool> {
+    /// was invalidated by a concurrent major compaction or retrain (the
+    /// captured segments no longer form a prefix of the sealed list).
+    pub fn install_compaction(
+        &self,
+        job: &CompactionJob,
+        merged: Vec<SealedSegment>,
+    ) -> Result<bool> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.sealed.len() < job.captured.len() {
+        if !capture_is_prefix(&inner, &job.captured) {
             return Ok(false);
         }
-        for (cur, cap) in inner.sealed.iter().zip(&job.captured) {
-            if !Arc::ptr_eq(&cur.index, &cap.index) {
-                return Ok(false);
-            }
-        }
         let newer: Vec<Arc<SealedSegment>> = inner.sealed[job.captured.len()..].to_vec();
-        // Rows re-sealed after capture shadow their merged copies.
-        let mut shadow: HashSet<u32> = HashSet::new();
+        // Rows re-sealed after capture shadow their merged copies. The
+        // merged runs hold pairwise-disjoint ids (survivors were not
+        // shadowed at capture time), so they need no shadows against
+        // each other, and the `newer` suffix keeps its existing shadow
+        // sets untouched (what is newer than those segments has not
+        // changed) — the install stays O(merged + newer ids), not
+        // O(segments × ids).
+        let mut newer_ids: HashSet<u32> = HashSet::new();
         for seg in &newer {
-            shadow.extend(seg.global_ids.iter().copied());
+            newer_ids.extend(seg.global_ids.iter().copied());
         }
-        let merged = Arc::new(merged.with_shadow(Arc::new(shadow)));
-        let mut sealed = Vec::with_capacity(1 + newer.len());
-        sealed.push(merged);
+        let newer_shadow = Arc::new(newer_ids);
+        let mut sealed: Vec<Arc<SealedSegment>> = merged
+            .into_iter()
+            .filter(|s| !s.is_empty())
+            .map(|s| Arc::new(s.with_shadow(newer_shadow.clone())))
+            .collect();
         sealed.extend(newer);
+        if sealed.is_empty() {
+            // Everything merged away and nothing was sealed since.
+            sealed.push(Arc::new(empty_segment(job.captured[0].model().clone())?));
+        }
         // A tombstone survives only while some sealed row still carries
         // its id (rows purged by the merge no longer need masking).
         inner
@@ -682,7 +1016,7 @@ impl MutableIndex {
             .retain(|t| sealed.iter().any(|s| s.contains_global(*t)));
         inner.sealed = sealed;
         inner.compactions += 1;
-        self.publish_locked(&mut inner);
+        publish(&self.cell, &mut inner);
         Ok(true)
     }
 
@@ -696,86 +1030,190 @@ impl MutableIndex {
         self.install_compaction(&job, merged)
     }
 
+    /// Phase 1 of the staged retrain (brief lock): seal the delta — so
+    /// the freshest rows inform the new model — and capture the sealed
+    /// segments + tombstones. Run [`RetrainJob::train`] on the returned
+    /// job with no lock held, then [`MutableIndex::install_retrain`].
+    pub fn begin_retrain(&self) -> Result<RetrainJob> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.delta.live_len() > 0 {
+            self.seal_delta_locked(&mut inner)?;
+        }
+        Ok(RetrainJob {
+            captured: inner.sealed.clone(),
+            tombstones: inner.tombstones.clone(),
+            base_model: inner.delta.model.clone(),
+        })
+    }
+
+    /// Phase 3 of the staged retrain (brief lock): swap the new-model
+    /// segment in for the captured ones, reusing the compaction install
+    /// protocol — post-capture segments stay on top (their rows shadow
+    /// their retrained copies, so concurrent upserts survive), the
+    /// current delta is sealed as an old-model segment, the delta builder
+    /// rebinds to the new model, and dead tombstones are purged.
+    ///
+    /// Returns `false` — leaving the index untouched — when a concurrent
+    /// compaction or retrain invalidated the capture.
+    pub fn install_retrain(&self, job: &RetrainJob, retrained: SealedSegment) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        if !capture_is_prefix(&inner, &job.captured) {
+            return Ok(false);
+        }
+        let new_model = retrained.index.model.clone();
+        let newer: Vec<Arc<SealedSegment>> = inner.sealed[job.captured.len()..].to_vec();
+        // Writes that landed in the delta during the retrain become one
+        // more (old-model) segment on top; newest-wins shadowing keeps
+        // them authoritative over their retrained copies.
+        let delta_seg = if inner.delta.live_len() > 0 {
+            Some(self.segment_from_delta(&inner)?)
+        } else {
+            None
+        };
+        let delta_ids: HashSet<u32> = delta_seg
+            .as_ref()
+            .map(|s| s.global_ids.iter().copied().collect())
+            .unwrap_or_default();
+        // The retrained base is shadowed by everything newer: the
+        // post-capture segments and the just-sealed delta. The
+        // post-capture segments only gain the delta's ids (their shadows
+        // against each other are already correct).
+        let mut base_shadow = delta_ids.clone();
+        for seg in &newer {
+            base_shadow.extend(seg.global_ids.iter().copied());
+        }
+        let mut sealed: Vec<Arc<SealedSegment>> =
+            Vec::with_capacity(2 + newer.len());
+        sealed.push(Arc::new(retrained.with_shadow(Arc::new(base_shadow))));
+        if delta_ids.is_empty() {
+            sealed.extend(newer);
+        } else {
+            for seg in &newer {
+                let mut sh: HashSet<u32> = (*seg.shadow).clone();
+                sh.extend(delta_ids.iter().copied());
+                sealed.push(Arc::new(seg.with_shadow(Arc::new(sh))));
+            }
+        }
+        if let Some(d) = delta_seg {
+            sealed.push(Arc::new(d));
+        }
+        inner
+            .tombstones
+            .retain(|t| sealed.iter().any(|s| s.contains_global(*t)));
+        inner.sealed = sealed;
+        inner.delta.reset_with(new_model);
+        inner.retrains += 1;
+        publish(&self.cell, &mut inner);
+        Ok(true)
+    }
+
+    /// Run the staged retrain end to end: capture + delta seal (brief
+    /// lock), train + re-encode (no lock — writers proceed), install
+    /// (brief lock). Returns whether the new model was installed (`false`
+    /// if a concurrent compaction/retrain won the race).
+    pub fn retrain_concurrent(&self) -> Result<bool> {
+        let job = self.begin_retrain()?;
+        let retrained = job.train(&self.engine)?;
+        self.install_retrain(&job, retrained)
+    }
+
     /// Background-worker probe: `(seal_delta, merge_sealed)` pressure by
-    /// the [`MutableConfig`] triggers. `merge_sealed` also reports
-    /// multi-segment states so workers collapse freshly sealed deltas.
+    /// the [`MutableConfig`] triggers. `merge_sealed` reports states where
+    /// some same-model run holds more than one segment (a post-retrain
+    /// mix of models is *not* merge pressure by itself — runs cannot be
+    /// merged across models).
     pub fn compaction_pressure(&self) -> (bool, bool) {
         let inner = self.inner.lock().unwrap();
         let seal = self.delta_full(&inner);
         let sealed_rows: usize = inner.sealed.iter().map(|s| s.len()).sum();
-        let merge = inner.sealed.len() > 1
+        let merge = inner.sealed.len() > model_runs(&inner.sealed).len()
             || inner.tombstones.len() as f32 > self.config.tombstone_ratio * sealed_rows as f32;
         (seal, merge)
     }
 
     /// Build a sealed segment out of the delta builder's live rows (local
-    /// ids 0.. in slot order, codes copied, codebook shared with the base).
+    /// ids 0.. in slot order, codes copied, encoded against the delta's
+    /// model).
     fn segment_from_delta(&self, inner: &Inner) -> Result<SealedSegment> {
-        let base = &inner.sealed[0].index;
-        let mut postings = vec![PostingList::default(); base.num_partitions()];
+        let model = inner.delta.model.clone();
+        let mut postings = vec![PostingList::default(); model.num_partitions()];
         let mut global_ids = Vec::new();
         let mut assignments = Vec::new();
         let mut raw_int8 = Vec::new();
         inner.delta.append_live_rows(
-            base.pq.code_bytes(),
-            base.int8.is_some(),
             &mut postings,
             &mut global_ids,
             &mut assignments,
             &mut raw_int8,
         )?;
-        assemble_segment(base, postings, global_ids, assignments, raw_int8)
+        assemble_segment(model, postings, global_ids, assignments, raw_int8)
     }
 
     fn compact_locked(&self, inner: &mut Inner) -> Result<()> {
-        let base = inner.sealed[0].index.clone();
-        let cb = base.pq.code_bytes();
-        let has_int8 = base.int8.is_some();
-
-        let mut postings = vec![PostingList::default(); base.num_partitions()];
-        let mut global_ids: Vec<u32> = Vec::new();
-        let mut assignments: Vec<Vec<u32>> = Vec::new();
-        let mut raw_int8: Vec<i8> = Vec::new();
-
-        // Sealed rows (oldest → newest): keep rows that are not
-        // tombstoned, not shadowed by a newer sealed segment, and not
-        // superseded by a delta row.
+        let runs = model_runs(&inner.sealed);
         let tombstones = &inner.tombstones;
         let delta = &inner.delta;
-        for seg in &inner.sealed {
-            gather_segment_rows(
-                seg.as_ref(),
-                &|local, g| {
-                    !tombstones.contains(&g)
-                        && !seg.shadow_bits.get(local as usize)
-                        && !delta.slot_of.contains_key(&g)
-                },
-                cb,
-                has_int8,
-                &mut postings,
-                &mut global_ids,
-                &mut assignments,
-                &mut raw_int8,
-            )?;
-        }
-
-        // Delta rows (always newest → always kept).
-        inner.delta.append_live_rows(
-            cb,
-            has_int8,
-            &mut postings,
-            &mut global_ids,
-            &mut assignments,
-            &mut raw_int8,
+        let fold_delta = if delta.live_len() > 0
+            && runs.last().map(|r| r[0].model().id()) == Some(delta.model.id())
+        {
+            Some(delta)
+        } else {
+            None
+        };
+        let folded = fold_delta.is_some();
+        let merged = merge_runs(
+            &runs,
+            &|seg, local, g| {
+                !tombstones.contains(&g)
+                    && !seg.shadow_bits.get(local as usize)
+                    && !delta.slot_of.contains_key(&g)
+            },
+            fold_delta,
         )?;
-
-        let seg = assemble_segment(&base, postings, global_ids, assignments, raw_int8)?;
-        inner.sealed = vec![Arc::new(seg)];
+        // Every surviving row is unique across the merged runs and the
+        // delta (the keep filter drops shadowed/superseded copies), so
+        // all result segments carry empty shadow sets — nothing to
+        // rebuild.
+        let mut sealed: Vec<Arc<SealedSegment>> = merged
+            .into_iter()
+            .filter(|s| !s.is_empty())
+            .map(Arc::new)
+            .collect();
+        // A delta whose model opened a new run (first writes after a
+        // retrain install) seals into its own segment.
+        if !folded && inner.delta.live_len() > 0 {
+            sealed.push(Arc::new(self.segment_from_delta(inner)?));
+        }
+        if sealed.is_empty() {
+            sealed.push(Arc::new(empty_segment(inner.delta.model.clone())?));
+        }
+        inner
+            .tombstones
+            .retain(|t| sealed.iter().any(|s| s.contains_global(*t)));
+        inner.sealed = sealed;
         inner.delta.reset();
-        inner.tombstones.clear();
         inner.compactions += 1;
-        self.publish_locked(inner);
+        publish(&self.cell, inner);
         Ok(())
+    }
+}
+
+impl Drop for MutableIndex {
+    fn drop(&mut self) {
+        if let Some(t) = &mut self.timer {
+            {
+                // Store + notify under the kicked mutex so the wakeup
+                // cannot fall between the timer's locked stop check and
+                // its wait (a lost notification would stall this join
+                // for a full timeout).
+                let _guard = t.shared.kicked.lock().unwrap();
+                t.shared.stop.store(true, Ordering::Relaxed);
+                t.shared.cv.notify_all();
+            }
+            if let Some(h) = t.thread.take() {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -894,10 +1332,6 @@ mod tests {
         assert_eq!(snap.delta.len(), 1);
         let ids = top_ids(&m, &engine, &v2, &full_probe(16));
         assert_eq!(ids[0], 10);
-        // The old location must no longer surface id 10 at rank 0 via the
-        // sealed copy: querying the ORIGINAL vector of point 10 may still
-        // return 10 (its new vector could coincidentally score), but the
-        // sealed copy itself is shadowed — verify via live_count.
         assert_eq!(snap.live_count(), 600, "update must not change cardinality");
     }
 
@@ -980,6 +1414,7 @@ mod tests {
                 tombstone_ratio: 0.05,
                 auto_compact: true,
                 publish_coalesce: 1,
+                publish_max_delay_us: 0,
             },
         )
         .unwrap();
@@ -1061,6 +1496,56 @@ mod tests {
     }
 
     #[test]
+    fn publish_max_delay_flushes_a_lone_upsert() {
+        let (ds, _, engine) = fixture(300);
+        let cfg = IndexConfig {
+            num_partitions: 8,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let m = MutableIndex::from_index(
+            idx,
+            engine.clone(),
+            MutableConfig {
+                auto_compact: false,
+                publish_coalesce: 1000, // the count window never fills
+                publish_max_delay_us: 20_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let e0 = m.snapshot().epoch;
+        let mut rng = Rng::new(51);
+        let v = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(900, &v).unwrap();
+        // Not yet published (count window open, deadline not reached).
+        assert_eq!(m.snapshot().epoch, e0);
+        // …but the timer publishes within the deadline (+ scheduling
+        // slack).
+        let deadline = Instant::now() + Duration::from_millis(2000);
+        while m.snapshot().epoch == e0 {
+            assert!(
+                Instant::now() < deadline,
+                "publish_max_delay_us never flushed the window"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(m.snapshot().delta.len(), 1);
+        assert!(m.snapshot().delta.contains(900));
+        assert!(!m.flush(), "timer already published everything");
+        // A second window also flushes (the timer re-arms).
+        let e1 = m.snapshot().epoch;
+        m.upsert(901, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(2000);
+        while m.snapshot().epoch == e1 {
+            assert!(Instant::now() < deadline, "second window never flushed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        m.snapshot().check_invariants().unwrap();
+    }
+
+    #[test]
     fn staged_compaction_runs_off_the_write_path() {
         let (ds, m, engine) = fixture(800);
         let mut rng = Rng::new(23);
@@ -1094,6 +1579,7 @@ mod tests {
 
         // Phase 2 (no lock) + phase 3 (brief lock).
         let merged = job.merge().unwrap();
+        assert_eq!(merged.len(), 1, "one model ⇒ one merged run");
         assert!(m.install_compaction(&job, merged).unwrap());
 
         let snap = m.snapshot();
@@ -1140,6 +1626,99 @@ mod tests {
         assert!(!m.install_compaction(&job, merged).unwrap());
         assert_eq!(m.snapshot().epoch, epoch);
         assert_eq!(m.stats().compactions, 1);
+        m.snapshot().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retrain_swaps_model_and_keeps_serving_results() {
+        let (ds, m, engine) = fixture(700);
+        let mut rng = Rng::new(61);
+        for i in 0..30u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(1000 + i, &v).unwrap();
+        }
+        for id in [5u32, 11] {
+            assert!(m.delete(id).unwrap());
+        }
+        let live_before = m.snapshot().live_count();
+        let gen_before = m.active_model().generation;
+
+        // Staged retrain with concurrent writes between capture and
+        // install.
+        let job = m.begin_retrain().unwrap();
+        assert!(job.rows() >= 700);
+        let during = perturbed(&mut rng, &ds.data, 0.15);
+        m.upsert(2000, &during).unwrap(); // lands in the (old-model) delta
+        assert!(m.delete(7).unwrap()); // post-capture delete
+        let retrained = job.train(&engine).unwrap();
+        assert_eq!(retrained.index.model.generation, gen_before + 1);
+        assert!(m.install_retrain(&job, retrained).unwrap());
+
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        // New model is active; old + new models coexist in the snapshot
+        // (the during-retrain upsert sealed as an old-model segment).
+        assert_eq!(m.active_model().generation, gen_before + 1);
+        assert_eq!(m.stats().retrains, 1);
+        assert_eq!(m.stats().model_generation, gen_before + 1);
+        assert_eq!(snap.models().len(), 2);
+        assert_eq!(snap.live_count(), live_before + 1 - 1);
+        // Post-capture mutations survive the install.
+        let params = full_probe(16);
+        assert_eq!(top_ids(&m, &engine, &during, &params)[0], 2000);
+        for qi in 0..ds.num_queries() {
+            let ids = top_ids(&m, &engine, ds.queries.row(qi), &params);
+            assert!(!ids.contains(&5));
+            assert!(!ids.contains(&7));
+        }
+        // Retrained serving quality: every original (undeleted) row is
+        // still its own nearest neighbor under the new model.
+        let probe = SearchParams {
+            rerank_budget: 1000,
+            ..params
+        };
+        let mut hits = 0;
+        for i in (20..620).step_by(40) {
+            let ids = top_ids(&m, &engine, ds.data.row(i), &probe);
+            if ids.first() == Some(&(i as u32)) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 13, "self-recall after retrain: {hits}/15");
+
+        // Writes continue against the new model; compaction keeps runs
+        // separate per model but the index stays consistent.
+        m.upsert(3000, &perturbed(&mut rng, &ds.data, 0.15)).unwrap();
+        m.compact().unwrap();
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        assert!(snap.models().len() <= 2);
+        // A second retrain converges everything back to one model.
+        assert!(m.retrain_concurrent().unwrap());
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.models().len(), 1);
+        assert_eq!(m.active_model().generation, gen_before + 2);
+    }
+
+    #[test]
+    fn retrain_aborts_when_invalidated() {
+        let (ds, m, engine) = fixture(400);
+        let mut rng = Rng::new(67);
+        for i in 0..10u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.15);
+            m.upsert(600 + i, &v).unwrap();
+        }
+        let job = m.begin_retrain().unwrap();
+        // A concurrent compaction replaces the captured segments…
+        m.compact().unwrap();
+        let epoch = m.snapshot().epoch;
+        let retrained = job.train(&engine).unwrap();
+        // …so the install must refuse, leaving the model unchanged.
+        assert!(!m.install_retrain(&job, retrained).unwrap());
+        assert_eq!(m.snapshot().epoch, epoch);
+        assert_eq!(m.stats().retrains, 0);
+        assert_eq!(m.active_model().generation, 0);
         m.snapshot().check_invariants().unwrap();
     }
 }

@@ -19,8 +19,17 @@
 //! delta first, then sealed segments newest → oldest, filters tombstoned
 //! and shadowed rows (two bitmap tests per row: the segment's
 //! `shadow_bits` over local ids and the snapshot's `dead` map over global
-//! ids), and merges the per-segment top-k by score (all segments share one
-//! codebook, so ADC and rerank scores are directly comparable).
+//! ids), and merges the per-segment top-k by score.
+//!
+//! Segments reference their quantization model by identity
+//! ([`crate::quant::QuantModel::id`]); the snapshot path performs
+//! **per-model** partition selection and LUT construction — one of each
+//! per *distinct* model in the snapshot, shared by every segment with
+//! that model. Scores merge in reconstructed float space: ADC and int8
+//! rerank scores are estimates of the same ⟨q, x⟩ regardless of which
+//! model produced them, so a post-retrain snapshot mixing models still
+//! returns one coherent top-k. (With a single shared model this
+//! degenerates to exactly the one-LUT pipeline, bit for bit.)
 
 use crate::config::SearchParams;
 use crate::coordinator::DedupSet;
@@ -30,18 +39,23 @@ use crate::index::segment::IndexSnapshot;
 use crate::index::SoarIndex;
 use crate::linalg::topk::Scored;
 use crate::linalg::{dot, dot_i8, MatrixF32, TopK};
-use crate::quant::{lut16, BlockedCodes, ProductQuantizer, QueryLut};
+use crate::quant::{lut16, BlockedCodes, ProductQuantizer, QuantModel, QueryLut};
 use crate::runtime::Engine;
 use crate::util::parallel::par_map;
 
 /// Reusable per-thread scratch; avoids all hot-path allocation except the
 /// final result vector. The LUT buffers and score arena are sized at
 /// construction, so steady-state queries never touch the allocator.
+/// Snapshot searches hold one LUT and one scaled-query buffer per
+/// distinct model ("slot") in the snapshot; the monolithic path uses
+/// slot 0.
 #[derive(Debug)]
 pub struct SearchScratch {
-    lut: QueryLut,
+    /// One per model slot.
+    luts: Vec<QueryLut>,
     visited: DedupSet,
-    q_scaled: Vec<f32>,
+    /// One per model slot (int8 rerank prescaling).
+    q_scaled: Vec<Vec<f32>>,
     /// Blocked-scan score arena: one f32 per posting entry of the list
     /// currently being scanned.
     scores: Vec<f32>,
@@ -52,19 +66,19 @@ pub struct SearchScratch {
 
 impl SearchScratch {
     pub fn new(index: &SoarIndex) -> SearchScratch {
-        let max_list = index.ivf.postings.iter().map(|l| l.len()).max().unwrap_or(0);
+        let max_list = index.postings.iter().map(|l| l.len()).max().unwrap_or(0);
         SearchScratch {
-            lut: QueryLut::sized(index.pq.num_subspaces()),
+            luts: vec![QueryLut::sized(index.pq().num_subspaces())],
             visited: DedupSet::new(index.n),
-            q_scaled: Vec::with_capacity(index.dim),
+            q_scaled: vec![Vec::with_capacity(index.dim)],
             scores: Vec::with_capacity(max_list),
             force_f32_lut: false,
         }
     }
 
-    /// Scratch sized for a segmented snapshot (dedup over global ids).
+    /// Scratch sized for a segmented snapshot (dedup over global ids, one
+    /// LUT per distinct model).
     pub fn for_snapshot(snapshot: &IndexSnapshot) -> SearchScratch {
-        let base = snapshot.base();
         let mut max_list = snapshot
             .delta
             .postings
@@ -73,16 +87,36 @@ impl SearchScratch {
             .max()
             .unwrap_or(0);
         for seg in &snapshot.sealed {
-            for l in &seg.index.ivf.postings {
+            for l in &seg.index.postings {
                 max_list = max_list.max(l.len());
             }
         }
+        let dim = snapshot.dim();
         SearchScratch {
-            lut: QueryLut::sized(base.pq.num_subspaces()),
+            luts: snapshot
+                .models()
+                .iter()
+                .map(|m| QueryLut::sized(m.pq.num_subspaces()))
+                .collect(),
             visited: DedupSet::new(snapshot.id_space()),
-            q_scaled: Vec::with_capacity(base.dim),
+            q_scaled: snapshot
+                .models()
+                .iter()
+                .map(|_| Vec::with_capacity(dim))
+                .collect(),
             scores: Vec::with_capacity(max_list),
             force_f32_lut: false,
+        }
+    }
+
+    /// Grow the per-model buffers to `slots` entries (scratches outlive
+    /// snapshot swaps, and a retrain can raise the distinct-model count).
+    fn ensure_slots(&mut self, slots: usize) {
+        while self.luts.len() < slots {
+            self.luts.push(QueryLut::new());
+        }
+        while self.q_scaled.len() < slots {
+            self.q_scaled.push(Vec::new());
         }
     }
 }
@@ -90,7 +124,8 @@ impl SearchScratch {
 /// Per-query observability counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SearchStats {
-    /// Partitions probed (= effective t).
+    /// Partitions probed, summed over the distinct models actually
+    /// scanned (= effective t for single-model snapshots).
     pub partitions_probed: usize,
     /// Posting entries scanned, *including* spilled duplicates — the
     /// memory-bandwidth cost the paper's Fig 6 x-axis measures.
@@ -142,6 +177,16 @@ fn score_list(
     } else {
         lut16::score_all(blocked, lut, cscore, scores);
     }
+}
+
+/// CPU top-t partition selection against one model's centroids.
+fn select_partitions(model: &QuantModel, q: &[f32], top_t: usize) -> Vec<(u32, f32)> {
+    let t = top_t.min(model.num_partitions());
+    let mut tk = TopK::new(t.max(1));
+    for (j, row) in model.centroids.iter_rows().enumerate() {
+        tk.push(j as u32, dot(q, row));
+    }
+    tk.into_sorted().into_iter().map(|s| (s.id, s.score)).collect()
 }
 
 /// Shared batched-scan driver for both searchers. One scratch per worker
@@ -228,17 +273,7 @@ impl<'a> Searcher<'a> {
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
         debug_assert_eq!(q.len(), self.index.dim);
-        let c = self.index.ivf.centroids.rows();
-        let t = params.top_t.min(c);
-        let mut tk = TopK::new(t.max(1));
-        for (j, row) in self.index.ivf.centroids.iter_rows().enumerate() {
-            tk.push(j as u32, dot(q, row));
-        }
-        let partitions: Vec<(u32, f32)> = tk
-            .into_sorted()
-            .into_iter()
-            .map(|s| (s.id, s.score))
-            .collect();
+        let partitions = select_partitions(&self.index.model, q, params.top_t);
         self.search_partitions(q, &partitions, params, scratch)
     }
 
@@ -252,7 +287,7 @@ impl<'a> Searcher<'a> {
         let t = params.top_t.min(self.index.num_partitions());
         let partitions = self
             .engine
-            .centroid_topk(queries, &self.index.ivf.centroids, t)?;
+            .centroid_topk(queries, self.index.centroids(), t)?;
         Ok(batched_search(
             queries.rows(),
             || SearchScratch::new(self.index),
@@ -271,25 +306,26 @@ impl<'a> Searcher<'a> {
         let index = self.index;
         let mut stats = SearchStats::default();
 
-        index.pq.build_query_lut(q, &mut scratch.lut);
-        let use_f32 = scratch.force_f32_lut || !scratch.lut.quantized;
+        scratch.ensure_slots(1);
+        index.pq().build_query_lut(q, &mut scratch.luts[0]);
+        let use_f32 = scratch.force_f32_lut || !scratch.luts[0].quantized;
         scratch.visited.ensure_capacity(index.n);
         scratch.visited.reset();
 
         // Stage 2: blocked ADC scan → arena → dedup + threshold-pruned emit.
         let mut approx = TopK::new(params.rerank_budget.max(params.k));
         for &(p, cscore) in partitions.iter().take(params.top_t) {
-            let list = &index.ivf.postings[p as usize];
+            let list = &index.postings[p as usize];
             stats.partitions_probed += 1;
             stats.points_scanned += list.len();
             if list.is_empty() {
                 continue;
             }
             score_list(
-                &index.pq,
+                index.pq(),
                 list,
                 &index.blocked[p as usize],
-                &scratch.lut,
+                &scratch.luts[0],
                 cscore,
                 use_f32,
                 &mut scratch.scores,
@@ -309,16 +345,15 @@ impl<'a> Searcher<'a> {
         }
 
         // Stage 3: exact-ish rerank on the int8 representation.
-        let result = match &index.int8 {
+        let result = match index.int8() {
             Some(q8) => {
-                scratch.q_scaled.clear();
-                scratch
-                    .q_scaled
-                    .extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
+                let q_scaled = &mut scratch.q_scaled[0];
+                q_scaled.clear();
+                q_scaled.extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
                 let mut exact = TopK::new(params.k);
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    exact.push(cand.id, dot_i8(&scratch.q_scaled, index.int8_record(cand.id)));
+                    exact.push(cand.id, dot_i8(q_scaled, index.int8_record(cand.id)));
                 }
                 exact.into_sorted()
             }
@@ -361,8 +396,9 @@ impl Search for Searcher<'_> {
 
 /// Read-only searcher over a segmented [`IndexSnapshot`]; cheap to
 /// construct, `Sync`. Scans delta → sealed (newest → oldest); per-segment
-/// candidates are reranked against the shared int8 representation and
-/// merged into one top-k. `rerank_budget` applies per segment.
+/// candidates are reranked against the segment model's int8
+/// representation and merged into one top-k. `rerank_budget` applies per
+/// segment. Partition selection and LUTs are keyed per distinct model.
 pub struct SnapshotSearcher<'a> {
     pub snapshot: &'a IndexSnapshot,
     pub engine: &'a Engine,
@@ -373,95 +409,114 @@ impl<'a> SnapshotSearcher<'a> {
         SnapshotSearcher { snapshot, engine }
     }
 
-    /// Single-query search (CPU partition selection, like
-    /// [`Searcher::search`]).
+    /// Single-query search (CPU partition selection per distinct model,
+    /// like [`Searcher::search`]).
     pub fn search(
         &self,
         q: &[f32],
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
-        let centroids = &self.snapshot.base().ivf.centroids;
         debug_assert_eq!(q.len(), self.snapshot.dim());
-        let t = params.top_t.min(centroids.rows());
-        let mut tk = TopK::new(t.max(1));
-        for (j, row) in centroids.iter_rows().enumerate() {
-            tk.push(j as u32, dot(q, row));
-        }
-        let partitions: Vec<(u32, f32)> = tk
-            .into_sorted()
-            .into_iter()
-            .map(|s| (s.id, s.score))
+        let partitions: Vec<Vec<(u32, f32)>> = self
+            .snapshot
+            .models()
+            .iter()
+            .map(|m| select_partitions(m, q, params.top_t))
             .collect();
         self.search_partitions(q, &partitions, params, scratch)
     }
 
-    /// Batched search: one engine call selects partitions for the whole
-    /// batch, then per-query scans run in parallel (shares
-    /// [`Searcher::search_batch`]'s driver).
+    /// Batched search: one engine call per distinct model selects
+    /// partitions for the whole batch, then per-query scans run in
+    /// parallel (shares [`Searcher::search_batch`]'s driver).
     pub fn search_batch(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
     ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
-        let base = self.snapshot.base();
-        let t = params.top_t.min(base.num_partitions());
-        let partitions = self.engine.centroid_topk(queries, &base.ivf.centroids, t)?;
+        let models = self.snapshot.models();
+        let nq = queries.rows();
+        let mut per_model: Vec<Vec<Vec<(u32, f32)>>> = Vec::with_capacity(models.len());
+        for model in models {
+            let t = params.top_t.min(model.num_partitions());
+            per_model.push(self.engine.centroid_topk(queries, &model.centroids, t)?);
+        }
+        // Reshape [model][query] → [query][model] so each worker reads one
+        // contiguous per-query slice.
+        let mut by_query: Vec<Vec<Vec<(u32, f32)>>> = (0..nq)
+            .map(|_| Vec::with_capacity(models.len()))
+            .collect();
+        for model_parts in per_model {
+            for (qi, parts) in model_parts.into_iter().enumerate() {
+                by_query[qi].push(parts);
+            }
+        }
         Ok(batched_search(
-            queries.rows(),
+            nq,
             || SearchScratch::for_snapshot(self.snapshot),
-            |qi, scratch| self.search_partitions(queries.row(qi), &partitions[qi], params, scratch),
+            |qi, scratch| self.search_partitions(queries.row(qi), &by_query[qi], params, scratch),
         ))
     }
 
-    /// Stages 2+3 across all segments, given selected partitions.
+    /// Stages 2+3 across all segments, given selected partitions per
+    /// model slot (`partitions[slot]` for `snapshot.models()[slot]`).
     pub fn search_partitions(
         &self,
         q: &[f32],
-        partitions: &[(u32, f32)],
+        partitions: &[Vec<(u32, f32)>],
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
         let snap = self.snapshot;
-        let base = snap.base();
+        let models = snap.models();
+        debug_assert_eq!(partitions.len(), models.len());
         let mut stats = SearchStats::default();
 
-        base.pq.build_query_lut(q, &mut scratch.lut);
-        let use_f32 = scratch.force_f32_lut || !scratch.lut.quantized;
+        scratch.ensure_slots(models.len());
+        // Per-model query state: LUT, int8 prescaling, f32 fallback flag.
+        let mut use_f32 = vec![false; models.len()];
+        for (slot, model) in models.iter().enumerate() {
+            model.pq.build_query_lut(q, &mut scratch.luts[slot]);
+            use_f32[slot] = scratch.force_f32_lut || !scratch.luts[slot].quantized;
+            if let Some(q8) = &model.int8 {
+                let qs = &mut scratch.q_scaled[slot];
+                qs.clear();
+                qs.extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
+            }
+        }
+        // Models must agree on int8-ness (snapshot invariant).
+        let use_int8 = models[0].int8.is_some();
+        // Count selection work once per distinct model actually scanned.
+        let mut slot_scanned = vec![false; models.len()];
+
         scratch.visited.ensure_capacity(snap.id_space());
         scratch.visited.reset();
-        if let Some(q8) = &base.int8 {
-            scratch.q_scaled.clear();
-            scratch
-                .q_scaled
-                .extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
-        }
-        let use_int8 = base.int8.is_some();
         let tombs = &*snap.tombstones;
         let delta = &*snap.delta;
-        let probe: Vec<(u32, f32)> = partitions.iter().take(params.top_t).copied().collect();
-        stats.partitions_probed = probe.len();
         let budget = params.rerank_budget.max(params.k).max(1);
         let mut merged = TopK::new(params.k.max(1));
 
         // Newest first: the delta segment. Posting ids are global; per-id
         // records live in slots.
         if !delta.is_empty() {
+            let slot = snap.delta_model_slot();
+            slot_scanned[slot] = true;
             stats.segments_scanned += 1;
             let mut approx = TopK::new(budget);
-            for &(p, cscore) in &probe {
+            for &(p, cscore) in partitions[slot].iter().take(params.top_t) {
                 let list = &delta.postings[p as usize];
                 stats.points_scanned += list.len();
                 if list.is_empty() {
                     continue;
                 }
                 score_list(
-                    &base.pq,
+                    &delta.model.pq,
                     list,
                     &delta.blocked[p as usize],
-                    &scratch.lut,
+                    &scratch.luts[slot],
                     cscore,
-                    use_f32,
+                    use_f32[slot],
                     &mut scratch.scores,
                 );
                 let mut thresh = approx.threshold();
@@ -480,7 +535,8 @@ impl<'a> SnapshotSearcher<'a> {
             if use_int8 {
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    let score = dot_i8(&scratch.q_scaled, delta.int8_record(cand.id as usize));
+                    let score =
+                        dot_i8(&scratch.q_scaled[slot], delta.int8_record(cand.id as usize));
                     merged.push(delta.slot_ids[cand.id as usize], score);
                 }
             } else {
@@ -491,29 +547,31 @@ impl<'a> SnapshotSearcher<'a> {
         }
 
         // Sealed segments, newest → oldest. Posting ids are local.
-        for seg in snap.sealed.iter().rev() {
+        for (si, seg) in snap.sealed.iter().enumerate().rev() {
             let idx = &*seg.index;
             if idx.n == 0 {
                 continue;
             }
+            let slot = snap.sealed_model_slot(si);
+            slot_scanned[slot] = true;
             stats.segments_scanned += 1;
             // Hoist the filter probe: with no tombstones, no newer sealed
             // segment, and an empty delta, the scan is filter-free.
             let filtered = !tombs.is_empty() || !seg.shadow.is_empty() || !delta.is_empty();
             let mut approx = TopK::new(budget);
-            for &(p, cscore) in &probe {
-                let list = &idx.ivf.postings[p as usize];
+            for &(p, cscore) in partitions[slot].iter().take(params.top_t) {
+                let list = &idx.postings[p as usize];
                 stats.points_scanned += list.len();
                 if list.is_empty() {
                     continue;
                 }
                 score_list(
-                    &base.pq,
+                    idx.pq(),
                     list,
                     &idx.blocked[p as usize],
-                    &scratch.lut,
+                    &scratch.luts[slot],
                     cscore,
-                    use_f32,
+                    use_f32[slot],
                     &mut scratch.scores,
                 );
                 let mut thresh = approx.threshold();
@@ -541,13 +599,19 @@ impl<'a> SnapshotSearcher<'a> {
             if use_int8 {
                 for cand in approx.into_sorted() {
                     stats.candidates_reranked += 1;
-                    let score = dot_i8(&scratch.q_scaled, idx.int8_record(cand.id));
+                    let score = dot_i8(&scratch.q_scaled[slot], idx.int8_record(cand.id));
                     merged.push(seg.global_ids[cand.id as usize], score);
                 }
             } else {
                 for cand in approx.into_sorted().into_iter().take(params.k) {
                     merged.push(seg.global_ids[cand.id as usize], cand.score);
                 }
+            }
+        }
+
+        for (slot, scanned) in slot_scanned.iter().enumerate() {
+            if *scanned {
+                stats.partitions_probed += partitions[slot].len().min(params.top_t);
             }
         }
 
@@ -623,7 +687,7 @@ mod tests {
         for qi in 0..ds.num_queries() {
             let (res, stats) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
             assert_eq!(stats.partitions_probed, idx.num_partitions());
-            assert_eq!(stats.points_scanned, idx.ivf.total_postings());
+            assert_eq!(stats.points_scanned, idx.total_postings());
             results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
         }
         let recall = gt.mean_recall(&results);
@@ -762,6 +826,7 @@ mod tests {
                 let (b, st_b) = snap_searcher.search(ds.queries.row(qi), &params, &mut s2);
                 assert_eq!(a, b, "query {qi}");
                 assert_eq!(st_a.points_scanned, st_b.points_scanned);
+                assert_eq!(st_a.partitions_probed, st_b.partitions_probed);
                 assert_eq!(st_a.duplicates_skipped, st_b.duplicates_skipped);
                 assert_eq!(st_b.tombstones_skipped, 0);
                 assert_eq!(st_b.segments_scanned, 1);
@@ -832,5 +897,72 @@ mod tests {
             searcher.search(ds.queries.row(0), &SearchParams::default(), &mut scratch);
         assert!(!res.is_empty());
         assert_eq!(stats.candidates_reranked, 0);
+    }
+
+    #[test]
+    fn mixed_model_snapshot_merges_across_segments() {
+        use crate::index::segment::{DeltaSegment, SealedSegment};
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        // Two segments over disjoint halves of one corpus, each with its
+        // OWN model; a full probe + generous rerank must surface each
+        // half's true neighbors through the merged top-k.
+        let ds = SyntheticConfig::glove_like(1000, 16, 12, 31).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 10,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let lo: Vec<usize> = (0..500).collect();
+        let hi: Vec<usize> = (500..1000).collect();
+        let idx_lo = build_index(&engine, &ds.data.gather_rows(&lo), &cfg).unwrap();
+        let mut cfg_hi = cfg.clone();
+        cfg_hi.seed = 43; // different codebook on purpose
+        let idx_hi = build_index(&engine, &ds.data.gather_rows(&hi), &cfg_hi).unwrap();
+        assert_ne!(idx_lo.model.id(), idx_hi.model.id());
+        let model_hi = idx_hi.model.clone();
+        let seg_lo = Arc::new(SealedSegment::from_index(Arc::new(idx_lo)));
+        let seg_hi = Arc::new(
+            SealedSegment::new(
+                Arc::new(idx_hi),
+                (500..1000).collect(),
+                Arc::new(HashSet::new()),
+            )
+            .unwrap(),
+        );
+        let snap = IndexSnapshot::new(
+            vec![seg_lo, seg_hi],
+            Arc::new(DeltaSegment::empty(model_hi)),
+            Arc::new(HashSet::new()),
+            0,
+        );
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.models().len(), 2);
+        let searcher = SnapshotSearcher::new(&snap, &engine);
+        let gt = ground_truth_mips(&ds.data, &ds.queries, 10);
+        let params = SearchParams {
+            k: 10,
+            top_t: 10,
+            rerank_budget: 1000,
+        };
+        let mut scratch = SearchScratch::for_snapshot(&snap);
+        let mut results = Vec::new();
+        for qi in 0..ds.num_queries() {
+            let (res, stats) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            assert_eq!(stats.segments_scanned, 2);
+            // Selection ran once per model: 10 + 10 partitions.
+            assert_eq!(stats.partitions_probed, 20);
+            results.push(res.into_iter().map(|s| s.id).collect::<Vec<_>>());
+        }
+        let recall = gt.mean_recall(&results);
+        assert!(recall > 0.85, "mixed-model full-probe recall {recall}");
+        // Batch path agrees with the single-query path.
+        let batch = searcher.search_batch(&ds.queries, &params).unwrap();
+        let mut sc = SearchScratch::for_snapshot(&snap);
+        for qi in 0..ds.num_queries() {
+            let (single, _) = searcher.search(ds.queries.row(qi), &params, &mut sc);
+            assert_eq!(single, batch[qi].0, "query {qi}");
+        }
     }
 }

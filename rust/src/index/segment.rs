@@ -7,9 +7,9 @@
 //!   `0..n`) plus a `local → global` id map. The initial build is the
 //!   first sealed segment with an identity map.
 //! * the **delta segment** holds recently upserted rows, encoded against
-//!   the *base* codebook (centroids, PQ, int8 scales stay fixed between
-//!   retrains — SOAR's Theorem 3.1 spill loss extends directly to
-//!   incrementally assigned points).
+//!   the *active* [`QuantModel`] (the model new writes assign to — SOAR's
+//!   Theorem 3.1 spill loss extends directly to incrementally assigned
+//!   points).
 //! * **tombstones** are a global-id set consulted while scanning sealed
 //!   segments; the delta never contains tombstoned ids by construction.
 //! * an [`IndexSnapshot`] is a fully immutable view of
@@ -18,6 +18,15 @@
 //!   it; writers publish whole new snapshots into the cell (epoch-style
 //!   `Arc` swap), so in-flight queries keep their snapshot alive and are
 //!   never blocked.
+//!
+//! Every segment (delta included) references its quantization model by
+//! `Arc<QuantModel>`; a snapshot may mix models — the normal state during
+//! and after an online retrain, where a fresh-model segment serves next
+//! to old-model segments until compaction converges them. The snapshot
+//! indexes the *distinct* models ([`IndexSnapshot::models`]) so the
+//! searcher builds one partition selection + LUT per model, not per
+//! segment. Models must be pairwise compatible (same dim, same
+//! int8-ness); scores merge in reconstructed float space.
 //!
 //! Shadowing rule: an id present in a *newer* segment (delta counts as
 //! newest) masks any older version of that id. Each sealed segment carries
@@ -31,7 +40,7 @@ use crate::config::IndexConfig;
 use crate::error::{Error, Result};
 use crate::index::ivf::PostingList;
 use crate::index::SoarIndex;
-use crate::quant::BlockedCodes;
+use crate::quant::{BlockedCodes, QuantModel};
 use crate::util::bitmap::Bitmap;
 
 /// An immutable sealed segment: a [`SoarIndex`] whose posting-list ids are
@@ -126,6 +135,12 @@ impl SealedSegment {
         }
     }
 
+    /// This segment's quantization model.
+    #[inline]
+    pub fn model(&self) -> &Arc<QuantModel> {
+        &self.index.model
+    }
+
     pub fn len(&self) -> usize {
         self.index.n
     }
@@ -172,20 +187,23 @@ impl SealedSegment {
 ///
 /// Rows live in dense *slots*; posting lists carry **global** ids (the
 /// delta has no meaningful local id space of its own). All codes are
-/// produced with the base segment's codebook, PQ, and int8 scales, so
-/// delta scores merge directly with sealed-segment scores.
+/// produced with the delta's [`QuantModel`], so delta scores merge with
+/// sealed-segment scores in reconstructed float space.
 #[derive(Clone, Debug)]
 pub struct DeltaSegment {
+    /// The model every delta row is encoded against (the writer's active
+    /// model).
+    pub model: Arc<QuantModel>,
     pub dim: usize,
-    /// Packed PQ code width, mirrored from the base PQ.
+    /// Packed PQ code width, mirrored from the model's PQ.
     pub code_bytes: usize,
     /// Posting lists over global ids, one per partition.
     pub postings: Vec<PostingList>,
     /// Slot-major raw rows (`len = slots * dim`) — kept for compaction,
     /// serialization, and (when int8 is disabled) exact access.
     pub raw: Vec<f32>,
-    /// Slot-major int8 codes (`len = slots * dim`), empty when the base
-    /// index stores no int8 representation.
+    /// Slot-major int8 codes (`len = slots * dim`), empty when the model
+    /// stores no int8 representation.
     pub int8_codes: Vec<i8>,
     /// `slot_ids[slot]` = global id of the row in `slot`.
     pub slot_ids: Vec<u32>,
@@ -201,27 +219,32 @@ pub struct DeltaSegment {
 }
 
 impl DeltaSegment {
-    /// An empty delta over `num_partitions` partitions.
-    pub fn empty(dim: usize, num_partitions: usize, code_bytes: usize) -> DeltaSegment {
+    /// An empty delta encoded against `model`.
+    pub fn empty(model: Arc<QuantModel>) -> DeltaSegment {
+        let dim = model.dim();
+        let parts = model.num_partitions();
+        let code_bytes = model.pq.code_bytes();
         DeltaSegment {
+            model,
             dim,
             code_bytes,
-            postings: vec![PostingList::default(); num_partitions],
+            postings: vec![PostingList::default(); parts],
             raw: Vec::new(),
             int8_codes: Vec::new(),
             slot_ids: Vec::new(),
             assignments: Vec::new(),
             slot_of: HashMap::new(),
             id_space: 0,
-            blocked: vec![BlockedCodes::default(); num_partitions],
+            blocked: vec![BlockedCodes::default(); parts],
         }
     }
 
-    /// (Re)derive the blocked LUT16 layout from the posting lists; `m` is
-    /// the base PQ's subspace count. Must run after the postings are final
-    /// (called by [`DeltaSegment::from_rows`] and the delta freeze in
+    /// (Re)derive the blocked LUT16 layout from the posting lists. Must
+    /// run after the postings are final (called by
+    /// [`DeltaSegment::from_rows`] and the delta freeze in
     /// [`crate::index::MutableIndex`]).
-    pub fn rebuild_blocked(&mut self, m: usize) {
+    pub fn rebuild_blocked(&mut self) {
+        let m = self.model.pq.num_subspaces();
         self.blocked = self
             .postings
             .iter()
@@ -230,15 +253,15 @@ impl DeltaSegment {
     }
 
     /// Build a frozen delta from `(global id, raw row, assignments)`
-    /// triples, encoding PQ codes and int8 records against `base`'s
-    /// codebook. Row order is preserved (slot = input position), which is
-    /// what makes serialization round-trips byte-stable.
+    /// triples, encoding PQ codes and int8 records against `model`. Row
+    /// order is preserved (slot = input position), which is what makes
+    /// serialization round-trips byte-stable.
     pub fn from_rows(
-        base: &SoarIndex,
+        model: Arc<QuantModel>,
         rows: &[(u32, Vec<f32>, Vec<u32>)],
     ) -> Result<DeltaSegment> {
-        let dim = base.dim;
-        let mut d = DeltaSegment::empty(dim, base.num_partitions(), base.pq.code_bytes());
+        let dim = model.dim();
+        let mut d = DeltaSegment::empty(model);
         for (id, raw, assignment) in rows {
             if raw.len() != dim {
                 return Err(Error::Shape(format!(
@@ -252,8 +275,8 @@ impl DeltaSegment {
             }
             d.slot_ids.push(*id);
             d.raw.extend_from_slice(raw);
-            if let Some(q8) = &base.int8 {
-                d.int8_codes.extend(q8.encode(raw));
+            if let Some(q8) = d.model.encode_int8(raw) {
+                d.int8_codes.extend(q8);
             }
             for &p in assignment {
                 if p as usize >= d.postings.len() {
@@ -261,13 +284,13 @@ impl DeltaSegment {
                         "delta assignment {p} out of range"
                     )));
                 }
-                let r = crate::index::residual(raw, &base.ivf.centroids, p);
-                d.postings[p as usize].push(*id, &base.pq.encode(&r).0);
+                let code = d.model.residual_code(raw, p);
+                d.postings[p as usize].push(*id, &code.0);
             }
             d.assignments.push(assignment.clone());
             d.id_space = d.id_space.max(*id as usize + 1);
         }
-        d.rebuild_blocked(base.pq.num_subspaces());
+        d.rebuild_blocked();
         Ok(d)
     }
 
@@ -308,8 +331,9 @@ impl DeltaSegment {
 /// sealed segments (oldest → newest), the frozen delta, and tombstones.
 #[derive(Clone, Debug)]
 pub struct IndexSnapshot {
-    /// Sealed segments, oldest first. Never empty; `sealed[0]` carries the
-    /// codebook (centroids / PQ / int8 scales) every segment shares.
+    /// Sealed segments, oldest first. Never empty; `sealed[0]` is the
+    /// *base* segment (its model provides defaults like the snapshot
+    /// config).
     pub sealed: Vec<Arc<SealedSegment>>,
     /// Frozen delta (possibly empty).
     pub delta: Arc<DeltaSegment>,
@@ -323,10 +347,19 @@ pub struct IndexSnapshot {
     /// Monotonic publish counter (diagnostics / tests).
     pub epoch: u64,
     id_space: usize,
+    /// Distinct quantization models across all segments, deduped by
+    /// [`QuantModel::id`] (delta's model first, then sealed newest →
+    /// oldest, in first-appearance order).
+    models: Vec<Arc<QuantModel>>,
+    /// `models` index of each sealed segment (parallel to `sealed`).
+    sealed_model_slots: Vec<usize>,
+    /// `models` index of the delta's model.
+    delta_model_slot: usize,
 }
 
 impl IndexSnapshot {
-    /// Assemble a snapshot from parts, computing the id space bound.
+    /// Assemble a snapshot from parts, computing the id space bound and
+    /// the distinct-model table.
     pub fn new(
         sealed: Vec<Arc<SealedSegment>>,
         delta: Arc<DeltaSegment>,
@@ -348,6 +381,24 @@ impl IndexSnapshot {
         for &id in &delta.slot_ids {
             dead.set(id as usize);
         }
+        // Distinct-model table: the searcher keys one partition selection
+        // + LUT per entry, in scan order (delta, then sealed newest →
+        // oldest).
+        let mut models: Vec<Arc<QuantModel>> = Vec::new();
+        let slot_of = |model: &Arc<QuantModel>, models: &mut Vec<Arc<QuantModel>>| -> usize {
+            match models.iter().position(|m| m.id() == model.id()) {
+                Some(i) => i,
+                None => {
+                    models.push(model.clone());
+                    models.len() - 1
+                }
+            }
+        };
+        let delta_model_slot = slot_of(&delta.model, &mut models);
+        let mut sealed_model_slots = vec![0usize; sealed.len()];
+        for (i, seg) in sealed.iter().enumerate().rev() {
+            sealed_model_slots[i] = slot_of(seg.model(), &mut models);
+        }
         IndexSnapshot {
             sealed,
             delta,
@@ -355,26 +406,52 @@ impl IndexSnapshot {
             dead,
             epoch,
             id_space,
+            models,
+            sealed_model_slots,
+            delta_model_slot,
         }
     }
 
     /// Wrap a monolithic index (fresh build or legacy v1 load) as a
     /// single-sealed-segment snapshot with an empty delta.
     pub fn from_index(index: Arc<SoarIndex>) -> IndexSnapshot {
-        let dim = index.dim;
-        let parts = index.num_partitions();
-        let cb = index.pq.code_bytes();
+        let model = index.model.clone();
         IndexSnapshot::new(
             vec![Arc::new(SealedSegment::from_index(index))],
-            Arc::new(DeltaSegment::empty(dim, parts, cb)),
+            Arc::new(DeltaSegment::empty(model)),
             Arc::new(HashSet::new()),
             0,
         )
     }
 
-    /// The base segment's index — the source of the shared codebook.
+    /// The base segment's index (the oldest sealed segment).
     pub fn base(&self) -> &SoarIndex {
         &self.sealed[0].index
+    }
+
+    /// The distinct quantization models this snapshot serves, deduped by
+    /// content id. One entry for every snapshot that never retrained.
+    pub fn models(&self) -> &[Arc<QuantModel>] {
+        &self.models
+    }
+
+    /// `models()` index of sealed segment `i`.
+    #[inline]
+    pub fn sealed_model_slot(&self, i: usize) -> usize {
+        self.sealed_model_slots[i]
+    }
+
+    /// `models()` index of the delta's model.
+    #[inline]
+    pub fn delta_model_slot(&self) -> usize {
+        self.delta_model_slot
+    }
+
+    /// The model new writes should encode against when resuming mutation
+    /// on this snapshot: the delta's model (which tracks the newest
+    /// installed retrain).
+    pub fn active_model(&self) -> &Arc<QuantModel> {
+        &self.delta.model
     }
 
     pub fn dim(&self) -> usize {
@@ -386,7 +463,7 @@ impl IndexSnapshot {
     }
 
     pub fn config(&self) -> &IndexConfig {
-        &self.base().config
+        self.base().config()
     }
 
     /// Upper bound on `global id + 1` across every segment — the query
@@ -427,31 +504,35 @@ impl IndexSnapshot {
                 "snapshot must contain at least one sealed segment".into(),
             ));
         }
-        let base = self.base();
-        let cb = base.pq.code_bytes();
-        for seg in &self.sealed {
+        let base_model = self.sealed[0].model();
+        for (i, seg) in self.sealed.iter().enumerate() {
             seg.check_invariants()?;
-            if seg.index.dim != base.dim {
-                return Err(Error::Serialize("segment dim mismatch".into()));
+            if !seg.model().compatible_with(base_model) {
+                return Err(Error::Serialize(
+                    "segment model incompatible with base (dim or int8-ness)".into(),
+                ));
             }
-            if seg.index.num_partitions() != base.num_partitions() {
-                return Err(Error::Serialize("segment partition count mismatch".into()));
-            }
-            if seg.index.pq.code_bytes() != cb {
-                return Err(Error::Serialize("segment PQ code width mismatch".into()));
-            }
-            if seg.index.int8.is_some() != base.int8.is_some() {
-                return Err(Error::Serialize("segment int8 storage mismatch".into()));
+            let slot = self.sealed_model_slots[i];
+            if self.models[slot].id() != seg.model().id() {
+                return Err(Error::Serialize("segment model slot out of sync".into()));
             }
         }
         let d = &self.delta;
-        if d.dim != base.dim {
+        if !d.model.compatible_with(base_model) {
+            return Err(Error::Serialize(
+                "delta model incompatible with base (dim or int8-ness)".into(),
+            ));
+        }
+        if self.models[self.delta_model_slot].id() != d.model.id() {
+            return Err(Error::Serialize("delta model slot out of sync".into()));
+        }
+        if d.dim != d.model.dim() {
             return Err(Error::Serialize("delta dim mismatch".into()));
         }
-        if d.postings.len() != base.num_partitions() {
+        if d.postings.len() != d.model.num_partitions() {
             return Err(Error::Serialize("delta partition count mismatch".into()));
         }
-        if d.code_bytes != cb {
+        if d.code_bytes != d.model.pq.code_bytes() {
             return Err(Error::Serialize("delta PQ code width mismatch".into()));
         }
         if d.slot_ids.len() != d.assignments.len() || d.slot_of.len() != d.slot_ids.len() {
@@ -460,10 +541,10 @@ impl IndexSnapshot {
         if d.raw.len() != d.len() * d.dim {
             return Err(Error::Serialize("delta raw storage mismatch".into()));
         }
-        if base.int8.is_some() && d.int8_codes.len() != d.len() * d.dim {
+        if d.model.int8.is_some() && d.int8_codes.len() != d.len() * d.dim {
             return Err(Error::Serialize("delta int8 storage mismatch".into()));
         }
-        let per_point = base.config.assignments_per_point();
+        let per_point = d.model.assignments_per_point();
         if d.total_postings() != d.len() * per_point {
             return Err(Error::Serialize(format!(
                 "delta posting entries {} != rows * assignments {}",
@@ -481,6 +562,7 @@ impl IndexSnapshot {
                 return Err(Error::Serialize("delta blocked layout out of sync".into()));
             }
         }
+        let cb = d.code_bytes;
         for list in &d.postings {
             if list.codes.len() != list.ids.len() * cb {
                 return Err(Error::Serialize("delta code bytes misaligned".into()));
@@ -573,6 +655,11 @@ mod tests {
         assert!(snap.sealed[0].contains_global(299));
         assert!(!snap.sealed[0].contains_global(300));
         assert_eq!(snap.sealed[0].global_of(7), 7);
+        // One distinct model, shared by delta and the sealed segment.
+        assert_eq!(snap.models().len(), 1);
+        assert_eq!(snap.sealed_model_slot(0), 0);
+        assert_eq!(snap.delta_model_slot(), 0);
+        assert!(Arc::ptr_eq(snap.active_model(), snap.sealed[0].model()));
     }
 
     #[test]
@@ -583,10 +670,10 @@ mod tests {
     }
 
     #[test]
-    fn delta_from_rows_encodes_against_base() {
+    fn delta_from_rows_encodes_against_model() {
         let idx = small_index(200);
-        let row = idx.ivf.centroids.row(0).to_vec();
-        let d = DeltaSegment::from_rows(&idx, &[(1000, row, vec![0, 3])]).unwrap();
+        let row = idx.centroids().row(0).to_vec();
+        let d = DeltaSegment::from_rows(idx.model.clone(), &[(1000, row, vec![0, 3])]).unwrap();
         assert_eq!(d.len(), 1);
         assert!(d.contains(1000));
         assert_eq!(d.id_space, 1001);
@@ -596,12 +683,61 @@ mod tests {
         assert_eq!(d.raw_row(0).len(), 8);
         assert_eq!(d.int8_record(0).len(), 8);
         // duplicate ids rejected
-        let row2 = idx.ivf.centroids.row(0).to_vec();
+        let row2 = idx.centroids().row(0).to_vec();
         assert!(DeltaSegment::from_rows(
-            &idx,
+            idx.model.clone(),
             &[(7, row2.clone(), vec![0]), (7, row2, vec![1])]
         )
         .is_err());
+    }
+
+    #[test]
+    fn distinct_models_are_indexed_per_segment() {
+        let a = small_index(120);
+        // A second index over a different corpus slice: different model.
+        let ds = SyntheticConfig::glove_like(150, 8, 2, 99).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: 6,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let b = build_index(&engine, &ds.data, &cfg).unwrap();
+        assert_ne!(a.model.id(), b.model.id());
+        let seg_a = Arc::new(SealedSegment::from_index(Arc::new(a)));
+        let ids_b: Vec<u32> = (1000..1150).collect();
+        let model_b = b.model.clone();
+        let seg_b =
+            Arc::new(SealedSegment::new(Arc::new(b), ids_b, Arc::new(HashSet::new())).unwrap());
+        let snap = IndexSnapshot::new(
+            vec![seg_a, seg_b],
+            Arc::new(DeltaSegment::empty(model_b.clone())),
+            Arc::new(HashSet::new()),
+            0,
+        );
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.models().len(), 2);
+        // Delta (model b) claims slot 0; sealed[1] shares it; sealed[0]
+        // gets slot 1.
+        assert_eq!(snap.delta_model_slot(), 0);
+        assert_eq!(snap.sealed_model_slot(1), 0);
+        assert_eq!(snap.sealed_model_slot(0), 1);
+        assert_eq!(snap.models()[0].id(), model_b.id());
+    }
+
+    #[test]
+    fn with_shadow_reindexes_the_bitmap() {
+        let idx = Arc::new(small_index(100));
+        let s0 = SealedSegment::from_index(idx.clone());
+        // Shadow ids 50..150: only 50..99 exist in the segment, so the
+        // local bitmap marks exactly those 50 rows.
+        let shadow: HashSet<u32> = (50..150).collect();
+        let shadowed = s0.with_shadow(Arc::new(shadow));
+        assert_eq!(shadowed.shadow.len(), 100);
+        assert!(shadowed.shadow_bits.get(50));
+        assert!(!shadowed.shadow_bits.get(49));
+        assert_eq!(shadowed.shadow_bits.count_ones(), 50);
+        shadowed.check_invariants().unwrap();
     }
 
     #[test]

@@ -8,27 +8,43 @@
 //!   int8 flag + scales + raw codes | assignments
 //! ```
 //!
-//! v2 — a segmented snapshot ([`save_snapshot`] / [`load_snapshot`]):
+//! v2 — a segmented snapshot (readable; writable via
+//! [`save_snapshot_versioned`] for single-model snapshots):
 //! ```text
 //!   magic "SOAR" | version=2 u32
 //!   num_sealed u64 | per segment: v1 body + global-id map
 //!   delta rows u64 | per row: id u32 | raw f32s | assignment u32s
 //!   tombstone count u64 | tombstone ids
 //! ```
-//! Delta PQ codes and int8 records are *not* stored: they re-encode
-//! deterministically from the raw rows against the base codebook on load,
-//! so v2 stays compact and byte-order-stable.
 //!
 //! v3 — a sharded collection ([`save_collection`] /
-//! [`load_collection_parts`]): a directory with one v2 snapshot file per
+//! [`load_collection_parts`]): a directory with one snapshot file per
 //! shard plus a `COLLECTION.soar` manifest:
 //! ```text
 //!   magic "SOAR" | version=3 u32 | collection-config-json (len u64 + bytes)
 //!   num_shards u64 | per shard: file name (len u64 + utf8 bytes)
 //! ```
-//! [`load_collection_parts`] also accepts a v1 or v2 *file* path, which
-//! loads as a 1-shard collection — legacy indexes migrate without a
-//! rewrite.
+//!
+//! v4 — a segmented snapshot with a deduplicated **model table** (the
+//! default write format, [`save_snapshot`]): every distinct
+//! [`QuantModel`] is stored once and segments reference it by index, so a
+//! post-retrain snapshot mixing models round-trips and same-model
+//! segments share one stored codebook:
+//! ```text
+//!   magic "SOAR" | version=4 u32
+//!   num_models u64 | per model: canonical bytes (len u64 + bytes)
+//!   num_sealed u64 | per segment:
+//!     model_idx u64 | n u64 | postings | int8 flag + raw codes
+//!     assignments | global-id map
+//!   delta model_idx u64 | delta rows u64 | per row: id | raw | assignment
+//!   tombstone count u64 | tombstone ids
+//! ```
+//! Delta PQ codes and int8 records are *not* stored in v2/v4: they
+//! re-encode deterministically from the raw rows against the delta's
+//! model on load, so snapshots stay compact and byte-order-stable.
+//! Legacy v1–v3 files load as a single-model table: each stored body
+//! reconstructs its model, and equal content hashes re-share one
+//! `Arc<QuantModel>` ([`crate::quant::model::intern_model`]).
 //!
 //! All integers little-endian throughout.
 
@@ -42,14 +58,16 @@ use crate::config::{CollectionConfig, IndexConfig};
 use crate::error::{Error, Result};
 use crate::index::collection::CollectionSnapshot;
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment};
-use crate::index::{IvfIndex, PostingList, SoarIndex};
+use crate::index::{PostingList, SoarIndex};
 use crate::linalg::MatrixF32;
-use crate::quant::{Int8Quantizer, ProductQuantizer};
+use crate::quant::model::intern_model;
+use crate::quant::{Int8Quantizer, ProductQuantizer, QuantModel};
 
 const MAGIC: &[u8; 4] = b"SOAR";
 const VERSION: u32 = 1;
 const VERSION_SEGMENTED: u32 = 2;
 const VERSION_COLLECTION: u32 = 3;
+const VERSION_MODELED: u32 = 4;
 
 /// Manifest file name inside a v3 collection directory.
 pub const COLLECTION_MANIFEST: &str = "COLLECTION.soar";
@@ -125,33 +143,98 @@ fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
 }
 
 // ---------------------------------------------------------------------
-// save / load
+// shared sub-encoders
 // ---------------------------------------------------------------------
 
-/// Write the v1 index body (everything after magic + version).
-fn write_index_body(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
-    let cfg = index.config.to_json().to_json();
-    w_bytes(w, cfg.as_bytes())?;
-    w_u64(w, index.n as u64)?;
-    w_u64(w, index.dim as u64)?;
-
-    w_matrix(w, &index.ivf.centroids)?;
-    w_u64(w, index.ivf.postings.len() as u64)?;
-    for list in &index.ivf.postings {
+fn write_postings(w: &mut impl Write, postings: &[PostingList]) -> Result<()> {
+    w_u64(w, postings.len() as u64)?;
+    for list in postings {
         w_u64(w, list.ids.len() as u64)?;
         for &id in &list.ids {
             w_u32(w, id)?;
         }
         w_bytes(w, &list.codes)?;
     }
+    Ok(())
+}
 
-    w_u64(w, index.pq.dims_per_subspace() as u64)?;
-    w_u64(w, index.pq.codebooks().len() as u64)?;
-    for cb in index.pq.codebooks() {
+fn read_postings(r: &mut impl Read, expected: usize) -> Result<Vec<PostingList>> {
+    let num_lists = r_u64(r)? as usize;
+    if num_lists != expected {
+        return Err(Error::Serialize("posting list count mismatch".into()));
+    }
+    let mut postings = Vec::with_capacity(num_lists);
+    for _ in 0..num_lists {
+        let len = r_u64(r)? as usize;
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(r_u32(r)?);
+        }
+        let codes = r_bytes(r)?;
+        postings.push(PostingList { ids, codes });
+    }
+    Ok(postings)
+}
+
+fn write_raw_int8(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
+    match index.int8() {
+        Some(_) => {
+            w_u32(w, 1)?;
+            let raw: Vec<u8> = index.raw_int8.iter().map(|&v| v as u8).collect();
+            w_bytes(w, &raw)?;
+        }
+        None => w_u32(w, 0)?,
+    }
+    Ok(())
+}
+
+fn write_assignments(w: &mut impl Write, assignments: &[Vec<u32>]) -> Result<()> {
+    w_u64(w, assignments.len() as u64)?;
+    for a in assignments {
+        w_u32(w, a.len() as u32)?;
+        for &p in a {
+            w_u32(w, p)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_assignments(r: &mut impl Read) -> Result<Vec<Vec<u32>>> {
+    let na = r_u64(r)? as usize;
+    let mut assignments = Vec::with_capacity(na);
+    for _ in 0..na {
+        let len = r_u32(r)? as usize;
+        let mut a = Vec::with_capacity(len);
+        for _ in 0..len {
+            a.push(r_u32(r)?);
+        }
+        assignments.push(a);
+    }
+    Ok(assignments)
+}
+
+// ---------------------------------------------------------------------
+// v1 bodies (model stored inline, duplicated per segment)
+// ---------------------------------------------------------------------
+
+/// Write the v1 index body (everything after magic + version).
+fn write_index_body(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
+    let cfg = index.config().to_json().to_json();
+    w_bytes(w, cfg.as_bytes())?;
+    w_u64(w, index.n as u64)?;
+    w_u64(w, index.dim as u64)?;
+
+    w_matrix(w, index.centroids())?;
+    write_postings(w, &index.postings)?;
+
+    let pq = index.pq();
+    w_u64(w, pq.dims_per_subspace() as u64)?;
+    w_u64(w, pq.codebooks().len() as u64)?;
+    for cb in pq.codebooks() {
         w_matrix(w, cb)?;
     }
 
-    match &index.int8 {
+    match index.int8() {
         Some(q8) => {
             w_u32(w, 1)?;
             w_f32s(w, &q8.scales)?;
@@ -161,14 +244,7 @@ fn write_index_body(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
         None => w_u32(w, 0)?,
     }
 
-    w_u64(w, index.assignments.len() as u64)?;
-    for a in &index.assignments {
-        w_u32(w, a.len() as u32)?;
-        for &p in a {
-            w_u32(w, p)?;
-        }
-    }
-    Ok(())
+    write_assignments(w, &index.assignments)
 }
 
 /// Save an index to `path` (v1 format, unchanged on disk).
@@ -195,11 +271,14 @@ pub fn load_index(path: &Path) -> Result<SoarIndex> {
             "unsupported version {version} (segmented snapshots load via load_snapshot)"
         )));
     }
-    read_index_body(&mut r)
+    let mut pool = Vec::new();
+    read_index_body(&mut r, &mut pool)
 }
 
-/// Read a v1 index body and verify its invariants.
-fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
+/// Read a v1 index body, reconstructing its model (interned into `pool`
+/// by content hash so equal models across segments share one `Arc`), and
+/// verify its invariants.
+fn read_index_body(r: &mut impl Read, pool: &mut Vec<Arc<QuantModel>>) -> Result<SoarIndex> {
     let cfg_bytes = r_bytes(r)?;
     let cfg_text = std::str::from_utf8(&cfg_bytes)
         .map_err(|e| Error::Serialize(format!("config utf8: {e}")))?;
@@ -209,20 +288,7 @@ fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
     let dim = r_u64(&mut r)? as usize;
 
     let centroids = r_matrix(&mut r)?;
-    let num_lists = r_u64(&mut r)? as usize;
-    let mut ivf = IvfIndex::new(centroids);
-    if num_lists != ivf.postings.len() {
-        return Err(Error::Serialize("posting list count mismatch".into()));
-    }
-    for p in 0..num_lists {
-        let len = r_u64(&mut r)? as usize;
-        let mut ids = Vec::with_capacity(len);
-        for _ in 0..len {
-            ids.push(r_u32(&mut r)?);
-        }
-        let codes = r_bytes(&mut r)?;
-        ivf.postings[p] = PostingList { ids, codes };
-    }
+    let postings = read_postings(r, centroids.rows())?;
 
     let s = r_u64(&mut r)? as usize;
     let ncb = r_u64(&mut r)? as usize;
@@ -244,24 +310,14 @@ fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
         (None, Vec::new())
     };
 
-    let na = r_u64(&mut r)? as usize;
-    let mut assignments = Vec::with_capacity(na);
-    for _ in 0..na {
-        let len = r_u32(&mut r)? as usize;
-        let mut a = Vec::with_capacity(len);
-        for _ in 0..len {
-            a.push(r_u32(&mut r)?);
-        }
-        assignments.push(a);
-    }
+    let assignments = read_assignments(r)?;
+    let model = intern_model(pool, QuantModel::from_parts(0, config, centroids, pq, int8)?);
 
     let mut index = SoarIndex {
-        config,
         n,
         dim,
-        ivf,
-        pq,
-        int8,
+        model,
+        postings,
         raw_int8,
         assignments,
         blocked: Vec::new(),
@@ -274,12 +330,98 @@ fn read_index_body(r: &mut impl Read) -> Result<SoarIndex> {
 }
 
 // ---------------------------------------------------------------------
-// v2: segmented snapshots
+// v2 / v4: segmented snapshots
 // ---------------------------------------------------------------------
 
-/// Save a segmented snapshot to `path` (v2 format).
+fn write_delta_rows(w: &mut impl Write, d: &DeltaSegment) -> Result<()> {
+    w_u64(w, d.len() as u64)?;
+    for slot in 0..d.len() {
+        w_u32(w, d.slot_ids[slot])?;
+        w_f32s(w, d.raw_row(slot))?;
+        let a = &d.assignments[slot];
+        w_u32(w, a.len() as u32)?;
+        for &p in a {
+            w_u32(w, p)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_delta_rows(r: &mut impl Read) -> Result<Vec<(u32, Vec<f32>, Vec<u32>)>> {
+    let rows = r_u64(r)? as usize;
+    let mut delta_rows = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let id = r_u32(r)?;
+        let raw = r_f32s(r)?;
+        let na = r_u32(r)? as usize;
+        let mut assignment = Vec::with_capacity(na);
+        for _ in 0..na {
+            assignment.push(r_u32(r)?);
+        }
+        delta_rows.push((id, raw, assignment));
+    }
+    Ok(delta_rows)
+}
+
+fn write_tombstones(w: &mut impl Write, tombstones: &HashSet<u32>) -> Result<()> {
+    w_u64(w, tombstones.len() as u64)?;
+    let mut tombs: Vec<u32> = tombstones.iter().copied().collect();
+    tombs.sort_unstable(); // deterministic bytes
+    for t in tombs {
+        w_u32(w, t)?;
+    }
+    Ok(())
+}
+
+fn read_tombstones(r: &mut impl Read) -> Result<HashSet<u32>> {
+    let nt = r_u64(r)? as usize;
+    let mut tombstones = HashSet::with_capacity(nt);
+    for _ in 0..nt {
+        tombstones.insert(r_u32(r)?);
+    }
+    Ok(tombstones)
+}
+
+/// Save a segmented snapshot to `path` in the current default format
+/// (v4: deduplicated model table).
 pub fn save_snapshot(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
+    save_snapshot_versioned(snapshot, path, VERSION_MODELED)
+}
+
+/// Save a snapshot pinned to a specific on-disk `version`: 4 (model
+/// table) or 2 (legacy segmented — valid only for single-model snapshots,
+/// since the v2 layout duplicates the model per segment and cannot name a
+/// second one).
+pub fn save_snapshot_versioned(snapshot: &IndexSnapshot, path: &Path, version: u32) -> Result<()> {
     snapshot.check_invariants()?;
+    match version {
+        VERSION_MODELED => save_snapshot_v4(snapshot, path),
+        VERSION_SEGMENTED => {
+            if snapshot.models().len() != 1 {
+                return Err(Error::Serialize(format!(
+                    "v2 cannot encode a snapshot with {} distinct models; use v4",
+                    snapshot.models().len()
+                )));
+            }
+            // The v2 layout has nowhere to store the retrain generation
+            // (read_index_body reconstructs generation 0), so writing a
+            // retrained model would silently change its identity on
+            // reload.
+            if snapshot.models()[0].generation != 0 {
+                return Err(Error::Serialize(format!(
+                    "v2 cannot encode a generation-{} model; use v4",
+                    snapshot.models()[0].generation
+                )));
+            }
+            save_snapshot_v2(snapshot, path)
+        }
+        other => Err(Error::Serialize(format!(
+            "cannot write snapshot version {other}"
+        ))),
+    }
+}
+
+fn save_snapshot_v2(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(MAGIC)?;
     w_u32(&mut w, VERSION_SEGMENTED)?;
@@ -292,34 +434,52 @@ pub fn save_snapshot(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
             w_u32(&mut w, g)?;
         }
     }
-
-    let d = &snapshot.delta;
-    w_u64(&mut w, d.len() as u64)?;
-    for slot in 0..d.len() {
-        w_u32(&mut w, d.slot_ids[slot])?;
-        w_f32s(&mut w, d.raw_row(slot))?;
-        let a = &d.assignments[slot];
-        w_u32(&mut w, a.len() as u32)?;
-        for &p in a {
-            w_u32(&mut w, p)?;
-        }
-    }
-
-    w_u64(&mut w, snapshot.tombstones.len() as u64)?;
-    let mut tombs: Vec<u32> = snapshot.tombstones.iter().copied().collect();
-    tombs.sort_unstable(); // deterministic bytes
-    for t in tombs {
-        w_u32(&mut w, t)?;
-    }
+    write_delta_rows(&mut w, &snapshot.delta)?;
+    write_tombstones(&mut w, &snapshot.tombstones)?;
     w.flush()?;
     Ok(())
 }
 
-/// Load a snapshot from `path`. Reads both formats: a legacy v1 file
-/// becomes a single-sealed-segment snapshot (identity id map, empty delta,
-/// no tombstones) that searches identically to [`load_index`]; a v2 file
-/// restores segments + delta + tombstones, recomputing shadow sets and
-/// re-encoding delta codes against the base codebook.
+fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION_MODELED)?;
+
+    // Model table: one canonical encoding per distinct model.
+    let models = snapshot.models();
+    w_u64(&mut w, models.len() as u64)?;
+    for model in models {
+        w_bytes(&mut w, &model.to_bytes())?;
+    }
+
+    w_u64(&mut w, snapshot.sealed.len() as u64)?;
+    for (i, seg) in snapshot.sealed.iter().enumerate() {
+        let idx = &seg.index;
+        w_u64(&mut w, snapshot.sealed_model_slot(i) as u64)?;
+        w_u64(&mut w, idx.n as u64)?;
+        write_postings(&mut w, &idx.postings)?;
+        write_raw_int8(&mut w, idx)?;
+        write_assignments(&mut w, &idx.assignments)?;
+        w_u64(&mut w, seg.global_ids.len() as u64)?;
+        for &g in &seg.global_ids {
+            w_u32(&mut w, g)?;
+        }
+    }
+
+    w_u64(&mut w, snapshot.delta_model_slot() as u64)?;
+    write_delta_rows(&mut w, &snapshot.delta)?;
+    write_tombstones(&mut w, &snapshot.tombstones)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a snapshot from `path`. Reads every single-file generation: a
+/// legacy v1 file becomes a single-sealed-segment snapshot (identity id
+/// map, empty delta, no tombstones) that searches identically to
+/// [`load_index`]; a v2 file restores segments + delta + tombstones; a
+/// v4 file additionally restores the deduplicated model table (segments
+/// re-share one `Arc<QuantModel>` per table entry). Shadow sets are
+/// recomputed and delta codes re-encode against the delta's model.
 pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
     let mut r = BufReader::new(File::open(path)?);
     let mut magic = [0u8; 4];
@@ -329,29 +489,25 @@ pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
     }
     let version = r_u32(&mut r)?;
     if version == VERSION {
-        let index = read_index_body(&mut r)?;
+        let mut pool = Vec::new();
+        let index = read_index_body(&mut r, &mut pool)?;
         return Ok(IndexSnapshot::from_index(Arc::new(index)));
     }
-    if version != VERSION_SEGMENTED {
-        return Err(Error::Serialize(format!("unsupported version {version}")));
+    match version {
+        VERSION_SEGMENTED => load_snapshot_v2(&mut r),
+        VERSION_MODELED => load_snapshot_v4(&mut r),
+        other => Err(Error::Serialize(format!("unsupported version {other}"))),
     }
+}
 
-    let num_sealed = r_u64(&mut r)? as usize;
-    if num_sealed == 0 {
-        return Err(Error::Serialize("snapshot has no sealed segments".into()));
-    }
-    let mut bodies = Vec::with_capacity(num_sealed);
-    let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
-    for _ in 0..num_sealed {
-        let index = read_index_body(&mut r)?;
-        let len = r_u64(&mut r)? as usize;
-        let mut ids = Vec::with_capacity(len);
-        for _ in 0..len {
-            ids.push(r_u32(&mut r)?);
-        }
-        bodies.push(index);
-        id_maps.push(ids);
-    }
+/// Assemble loaded segments + delta + tombstones, recomputing shadows.
+fn assemble_snapshot(
+    bodies: Vec<SoarIndex>,
+    id_maps: Vec<Vec<u32>>,
+    delta: DeltaSegment,
+    tombstones: HashSet<u32>,
+) -> Result<IndexSnapshot> {
+    let num_sealed = bodies.len();
     // Shadow sets: ids of strictly newer sealed segments.
     let mut shadows: Vec<HashSet<u32>> = vec![HashSet::new(); num_sealed];
     let mut acc: HashSet<u32> = HashSet::new();
@@ -367,35 +523,100 @@ pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
             Arc::new(shadow),
         )?));
     }
-
-    let rows = r_u64(&mut r)? as usize;
-    let mut delta_rows = Vec::with_capacity(rows);
-    for _ in 0..rows {
-        let id = r_u32(&mut r)?;
-        let raw = r_f32s(&mut r)?;
-        let na = r_u32(&mut r)? as usize;
-        let mut assignment = Vec::with_capacity(na);
-        for _ in 0..na {
-            assignment.push(r_u32(&mut r)?);
-        }
-        delta_rows.push((id, raw, assignment));
-    }
-    let delta = DeltaSegment::from_rows(&sealed[0].index, &delta_rows)?;
-
-    let nt = r_u64(&mut r)? as usize;
-    let mut tombstones = HashSet::with_capacity(nt);
-    for _ in 0..nt {
-        tombstones.insert(r_u32(&mut r)?);
-    }
-
-    let snapshot = IndexSnapshot::new(
-        sealed,
-        Arc::new(delta),
-        Arc::new(tombstones),
-        0,
-    );
+    let snapshot = IndexSnapshot::new(sealed, Arc::new(delta), Arc::new(tombstones), 0);
     snapshot.check_invariants()?;
     Ok(snapshot)
+}
+
+fn load_snapshot_v2(r: &mut impl Read) -> Result<IndexSnapshot> {
+    let num_sealed = r_u64(r)? as usize;
+    if num_sealed == 0 {
+        return Err(Error::Serialize("snapshot has no sealed segments".into()));
+    }
+    let mut pool: Vec<Arc<QuantModel>> = Vec::new();
+    let mut bodies = Vec::with_capacity(num_sealed);
+    let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
+    for _ in 0..num_sealed {
+        let index = read_index_body(r, &mut pool)?;
+        let len = r_u64(r)? as usize;
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(r_u32(r)?);
+        }
+        bodies.push(index);
+        id_maps.push(ids);
+    }
+    let base_model = bodies[0].model.clone();
+    let delta_rows = read_delta_rows(r)?;
+    let delta = DeltaSegment::from_rows(base_model, &delta_rows)?;
+    let tombstones = read_tombstones(r)?;
+    assemble_snapshot(bodies, id_maps, delta, tombstones)
+}
+
+fn load_snapshot_v4(r: &mut impl Read) -> Result<IndexSnapshot> {
+    let num_models = r_u64(r)? as usize;
+    if num_models == 0 {
+        return Err(Error::Serialize("snapshot has no models".into()));
+    }
+    let mut models: Vec<Arc<QuantModel>> = Vec::with_capacity(num_models);
+    for _ in 0..num_models {
+        let bytes = r_bytes(r)?;
+        models.push(Arc::new(QuantModel::from_bytes(&bytes)?));
+    }
+    let model_at = |idx: u64| -> Result<Arc<QuantModel>> {
+        models
+            .get(idx as usize)
+            .cloned()
+            .ok_or_else(|| Error::Serialize(format!("model index {idx} out of table range")))
+    };
+
+    let num_sealed = r_u64(r)? as usize;
+    if num_sealed == 0 {
+        return Err(Error::Serialize("snapshot has no sealed segments".into()));
+    }
+    let mut bodies = Vec::with_capacity(num_sealed);
+    let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
+    for _ in 0..num_sealed {
+        let model = model_at(r_u64(r)?)?;
+        let n = r_u64(r)? as usize;
+        let postings = read_postings(r, model.num_partitions())?;
+        let has_int8 = r_u32(r)? == 1;
+        if has_int8 != model.int8.is_some() {
+            return Err(Error::Serialize(
+                "segment int8 flag disagrees with its model".into(),
+            ));
+        }
+        let raw_int8: Vec<i8> = if has_int8 {
+            r_bytes(r)?.into_iter().map(|v| v as i8).collect()
+        } else {
+            Vec::new()
+        };
+        let assignments = read_assignments(r)?;
+        let len = r_u64(r)? as usize;
+        let mut ids = Vec::with_capacity(len);
+        for _ in 0..len {
+            ids.push(r_u32(r)?);
+        }
+        let mut index = SoarIndex {
+            n,
+            dim: model.dim(),
+            model,
+            postings,
+            raw_int8,
+            assignments,
+            blocked: Vec::new(),
+        };
+        index.rebuild_blocked();
+        index.check_invariants()?;
+        bodies.push(index);
+        id_maps.push(ids);
+    }
+
+    let delta_model = model_at(r_u64(r)?)?;
+    let delta_rows = read_delta_rows(r)?;
+    let delta = DeltaSegment::from_rows(delta_model, &delta_rows)?;
+    let tombstones = read_tombstones(r)?;
+    assemble_snapshot(bodies, id_maps, delta, tombstones)
 }
 
 // ---------------------------------------------------------------------
@@ -408,7 +629,8 @@ fn shard_file_name(s: usize) -> String {
 }
 
 /// Save a collection as a v3 manifest directory: `dir/COLLECTION.soar`
-/// plus one v2 snapshot file per shard. `dir` is created if needed.
+/// plus one snapshot file per shard (written in the current default
+/// snapshot format, v4). `dir` is created if needed.
 pub fn save_collection(
     snapshot: &CollectionSnapshot,
     config: &CollectionConfig,
@@ -445,9 +667,9 @@ pub fn save_collection(
 /// [`CollectionConfig`]. Accepts every on-disk generation:
 ///
 /// * a **v3** directory (or a direct path to its `COLLECTION.soar`
-///   manifest) restores all shards;
-/// * a **v1 or v2 file** loads as a 1-shard collection with a default
-///   config — legacy single-index deployments migrate in place.
+///   manifest) restores all shards (shard files may be v1/v2/v4);
+/// * a **v1, v2, or v4 file** loads as a 1-shard collection with a
+///   default config — legacy single-index deployments migrate in place.
 pub fn load_collection_parts(path: &Path) -> Result<(Vec<Arc<IndexSnapshot>>, CollectionConfig)> {
     let manifest: PathBuf = if path.is_dir() {
         path.join(COLLECTION_MANIFEST)
@@ -461,7 +683,7 @@ pub fn load_collection_parts(path: &Path) -> Result<(Vec<Arc<IndexSnapshot>>, Co
         return Err(Error::Serialize("bad magic".into()));
     }
     let version = r_u32(&mut r)?;
-    if version == VERSION || version == VERSION_SEGMENTED {
+    if version == VERSION || version == VERSION_SEGMENTED || version == VERSION_MODELED {
         // Legacy single-index / single-snapshot file → 1-shard collection.
         drop(r);
         let snapshot = load_snapshot(&manifest)?;
@@ -521,12 +743,12 @@ pub struct MemoryReport {
 
 /// Compute the Table 1 memory breakdown.
 pub fn memory_report(index: &SoarIndex) -> MemoryReport {
-    let centroids_bytes = index.ivf.centroids.memory_bytes();
-    let total_postings = index.ivf.total_postings();
+    let centroids_bytes = index.centroids().memory_bytes();
+    let total_postings = index.total_postings();
     let posting_id_bytes = total_postings * 4;
-    let pq_code_bytes: usize = index.ivf.postings.iter().map(|p| p.codes.len()).sum();
-    let pq_codebook_bytes = index.pq.memory_bytes();
-    let int8_bytes = index.raw_int8.len() + index.int8.as_ref().map_or(0, |q| q.scales.len() * 4);
+    let pq_code_bytes: usize = index.postings.iter().map(|p| p.codes.len()).sum();
+    let pq_codebook_bytes = index.pq().memory_bytes();
+    let int8_bytes = index.raw_int8.len() + index.int8().map_or(0, |q| q.scales.len() * 4);
     let assignment_bytes: usize = index.assignments.iter().map(|a| a.len() * 4).sum();
     let total_bytes = centroids_bytes
         + posting_id_bytes
@@ -536,7 +758,7 @@ pub fn memory_report(index: &SoarIndex) -> MemoryReport {
         + assignment_bytes;
     // Extra assignments beyond the first.
     let extra = total_postings.saturating_sub(index.n);
-    let per_entry = 4 + index.pq.code_bytes();
+    let per_entry = 4 + index.pq().code_bytes();
     let d = index.dim as f64;
     MemoryReport {
         centroids_bytes,
@@ -579,13 +801,14 @@ mod tests {
         let back = load_index(&path).unwrap();
         assert_eq!(back.n, idx.n);
         assert_eq!(back.dim, idx.dim);
-        assert_eq!(back.ivf.centroids, idx.ivf.centroids);
-        assert_eq!(back.ivf.postings, idx.ivf.postings);
+        assert_eq!(back.centroids(), idx.centroids());
+        assert_eq!(back.postings, idx.postings);
         assert_eq!(back.assignments, idx.assignments);
         assert_eq!(back.raw_int8, idx.raw_int8);
-        assert_eq!(back.int8, idx.int8);
-        assert_eq!(back.config.spill, idx.config.spill);
-        assert_eq!(back.pq.codebooks(), idx.pq.codebooks());
+        assert_eq!(back.int8(), idx.int8());
+        assert_eq!(back.config().spill, idx.config().spill);
+        assert_eq!(back.pq().codebooks(), idx.pq().codebooks());
+        assert_eq!(back.model.id(), idx.model.id(), "model identity survives");
     }
 
     #[test]
@@ -606,7 +829,7 @@ mod tests {
         let m_soar = memory_report(&idx_soar);
         assert!(m_soar.total_bytes > m_none.total_bytes);
         let d = idx_soar.dim;
-        let s = idx_soar.pq.dims_per_subspace();
+        let s = idx_soar.pq().dims_per_subspace();
         let per_point = 4 + d.div_ceil(2 * s);
         assert_eq!(m_soar.spill_overhead_bytes, idx_soar.n * per_point);
         // measured relative growth of the *data* structures (ids + codes +
@@ -632,12 +855,14 @@ mod tests {
         assert_eq!(snap.sealed.len(), 1);
         assert!(snap.delta.is_empty());
         assert!(snap.tombstones.is_empty());
+        assert_eq!(snap.models().len(), 1);
         let base = snap.base();
         assert_eq!(base.n, idx.n);
-        assert_eq!(base.ivf.postings, idx.ivf.postings);
+        assert_eq!(base.postings, idx.postings);
         assert_eq!(base.assignments, idx.assignments);
         assert_eq!(base.raw_int8, idx.raw_int8);
-        // and a v2 file is rejected by the legacy loader with a clear error
+        assert_eq!(base.model.id(), idx.model.id());
+        // and a v4 file is rejected by the legacy loader with a clear error
         let snap_path = dir.join("segmented.soar");
         save_snapshot(&snap, &snap_path).unwrap();
         let err = load_index(&snap_path).unwrap_err();
@@ -645,7 +870,7 @@ mod tests {
     }
 
     #[test]
-    fn v2_snapshot_round_trip_with_delta_and_tombstones() {
+    fn snapshot_round_trip_with_delta_and_tombstones_v2_and_v4() {
         use crate::config::{MutableConfig, SearchParams};
         use crate::index::{MutableIndex, SearchScratch, SnapshotSearcher};
         use crate::linalg::Rng;
@@ -692,37 +917,151 @@ mod tests {
         assert!(!snap.tombstones.is_empty());
 
         let dir = crate::util::tempdir::TempDir::new().unwrap();
-        let path = dir.join("segmented.soar");
+        for version in [2u32, 4] {
+            let path = dir.join(format!("segmented-v{version}.soar"));
+            save_snapshot_versioned(&snap, &path, version).unwrap();
+            let back = load_snapshot(&path).unwrap();
+            assert_eq!(back.sealed.len(), snap.sealed.len());
+            assert_eq!(back.delta.slot_ids, snap.delta.slot_ids);
+            assert_eq!(back.delta.postings, snap.delta.postings);
+            assert_eq!(back.delta.int8_codes, snap.delta.int8_codes);
+            assert_eq!(*back.tombstones, *snap.tombstones);
+            assert_eq!(back.models().len(), 1);
+            assert_eq!(back.models()[0].id(), snap.models()[0].id());
+            // Segments re-share one model Arc after the load.
+            assert!(Arc::ptr_eq(
+                back.sealed[0].model(),
+                back.sealed[1].model()
+            ));
+            for (a, b) in back.sealed.iter().zip(&snap.sealed) {
+                assert_eq!(a.global_ids, b.global_ids);
+                assert_eq!(*a.shadow, *b.shadow);
+                assert_eq!(a.index.postings, b.index.postings);
+            }
+
+            // Search identically on both, full and partial probe.
+            for top_t in [3usize, 10] {
+                let params = SearchParams {
+                    k: 10,
+                    top_t,
+                    rerank_budget: 200,
+                };
+                let s1 = SnapshotSearcher::new(&snap, &engine);
+                let s2 = SnapshotSearcher::new(&back, &engine);
+                let mut sc1 = SearchScratch::for_snapshot(&snap);
+                let mut sc2 = SearchScratch::for_snapshot(&back);
+                for qi in 0..ds.num_queries() {
+                    let (a, st_a) = s1.search(ds.queries.row(qi), &params, &mut sc1);
+                    let (b, st_b) = s2.search(ds.queries.row(qi), &params, &mut sc2);
+                    assert_eq!(a, b, "query {qi} at top_t {top_t} (v{version})");
+                    assert_eq!(st_a, st_b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v4_round_trips_multi_model_snapshots_and_v2_refuses() {
+        use crate::config::{MutableConfig, SearchParams};
+        use crate::index::{MutableIndex, SearchScratch, SnapshotSearcher};
+        use crate::linalg::Rng;
+        use std::sync::Arc;
+
+        let ds = SyntheticConfig::glove_like(500, 16, 6, 53).generate();
+        let engine = Arc::new(Engine::cpu());
+        let cfg = IndexConfig {
+            num_partitions: 10,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let m = MutableIndex::from_index(
+            idx,
+            engine.clone(),
+            MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(54);
+        // Retrain, then keep writing so the snapshot mixes an old-model
+        // segment with the new-model base + delta.
+        assert!(m.retrain_concurrent().unwrap());
+        for i in 0..8u32 {
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            m.upsert(800 + i, &v).unwrap();
+        }
+        m.seal_delta().unwrap();
+        m.upsert(900, &{
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            v
+        })
+        .unwrap();
+        m.delete(7).unwrap();
+        // Build a snapshot that genuinely mixes two models: the retrained
+        // base (gen 1) plus an old-model (gen 0) segment is already in
+        // place only if a pre-retrain segment survived; force the mix by
+        // a second retrain capture + post-capture write.
+        let job = m.begin_retrain().unwrap();
+        m.upsert(901, &{
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            v
+        })
+        .unwrap();
+        let retrained = job.train(&engine).unwrap();
+        assert!(m.install_retrain(&job, retrained).unwrap());
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        assert!(
+            snap.models().len() >= 2,
+            "fixture must mix models, got {}",
+            snap.models().len()
+        );
+
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        // v2 cannot express the model mix.
+        assert!(save_snapshot_versioned(&snap, &dir.join("nope.soar"), 2).is_err());
+        // v4 round-trips it exactly.
+        let path = dir.join("mixed.soar");
         save_snapshot(&snap, &path).unwrap();
         let back = load_snapshot(&path).unwrap();
-        assert_eq!(back.sealed.len(), snap.sealed.len());
-        assert_eq!(back.delta.slot_ids, snap.delta.slot_ids);
-        assert_eq!(back.delta.postings, snap.delta.postings);
-        assert_eq!(back.delta.int8_codes, snap.delta.int8_codes);
-        assert_eq!(*back.tombstones, *snap.tombstones);
-        for (a, b) in back.sealed.iter().zip(&snap.sealed) {
-            assert_eq!(a.global_ids, b.global_ids);
-            assert_eq!(*a.shadow, *b.shadow);
-            assert_eq!(a.index.ivf.postings, b.index.ivf.postings);
+        back.check_invariants().unwrap();
+        assert_eq!(back.models().len(), snap.models().len());
+        for (a, b) in back.models().iter().zip(snap.models()) {
+            assert_eq!(a.id(), b.id());
+            assert_eq!(a.generation, b.generation);
         }
-
-        // Search identically on both, full and partial probe.
-        for top_t in [3usize, 10] {
-            let params = SearchParams {
-                k: 10,
-                top_t,
-                rerank_budget: 200,
-            };
-            let s1 = SnapshotSearcher::new(&snap, &engine);
-            let s2 = SnapshotSearcher::new(&back, &engine);
-            let mut sc1 = SearchScratch::for_snapshot(&snap);
-            let mut sc2 = SearchScratch::for_snapshot(&back);
-            for qi in 0..ds.num_queries() {
-                let (a, st_a) = s1.search(ds.queries.row(qi), &params, &mut sc1);
-                let (b, st_b) = s2.search(ds.queries.row(qi), &params, &mut sc2);
-                assert_eq!(a, b, "query {qi} at top_t {top_t}");
-                assert_eq!(st_a, st_b);
-            }
+        assert_eq!(back.sealed.len(), snap.sealed.len());
+        for i in 0..snap.sealed.len() {
+            assert_eq!(back.sealed_model_slot(i), snap.sealed_model_slot(i));
+            assert_eq!(back.sealed[i].global_ids, snap.sealed[i].global_ids);
+            assert_eq!(back.sealed[i].index.postings, snap.sealed[i].index.postings);
+            assert_eq!(back.sealed[i].index.raw_int8, snap.sealed[i].index.raw_int8);
+        }
+        assert_eq!(back.delta_model_slot(), snap.delta_model_slot());
+        assert_eq!(back.delta.slot_ids, snap.delta.slot_ids);
+        assert_eq!(*back.tombstones, *snap.tombstones);
+        // Searches agree.
+        let params = SearchParams {
+            k: 10,
+            top_t: 10,
+            rerank_budget: 400,
+        };
+        let s1 = SnapshotSearcher::new(&snap, &engine);
+        let s2 = SnapshotSearcher::new(&back, &engine);
+        let mut sc1 = SearchScratch::for_snapshot(&snap);
+        let mut sc2 = SearchScratch::for_snapshot(&back);
+        for qi in 0..ds.num_queries() {
+            let (a, _) = s1.search(ds.queries.row(qi), &params, &mut sc1);
+            let (b, _) = s2.search(ds.queries.row(qi), &params, &mut sc2);
+            assert_eq!(a, b, "query {qi}");
         }
     }
 
@@ -796,7 +1135,7 @@ mod tests {
         let path = dir.join("x.soar");
         save_index(&idx, &path).unwrap();
         let back = load_index(&path).unwrap();
-        assert!(back.int8.is_none());
+        assert!(back.int8().is_none());
         assert!(back.raw_int8.is_empty());
     }
 }

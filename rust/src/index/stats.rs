@@ -46,7 +46,7 @@ pub fn collect_pair_stats(
     queries: &MatrixF32,
     gt: &GroundTruth,
 ) -> Vec<PairStats> {
-    let centroids = &index.ivf.centroids;
+    let centroids = index.centroids();
     let c = centroids.rows();
     let per_query: Vec<Vec<PairStats>> = par_map(queries.rows(), |qi| {
             let q = queries.row(qi).to_vec();

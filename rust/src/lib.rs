@@ -62,4 +62,5 @@ pub use index::{
     build_index, Collection, CollectionSearcher, CollectionSnapshot, IndexSnapshot, MutableIndex,
     Search, SearchScratch, Searcher, SnapshotCell, SnapshotSearcher, SoarIndex,
 };
+pub use quant::QuantModel;
 pub use runtime::Engine;

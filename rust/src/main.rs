@@ -6,6 +6,8 @@
 //!   search        query a saved index from an fvecs query file
 //!   serve         start the serving stack and drive a load test against it
 //!   churn         serve live traffic while upserting/deleting (mutable index)
+//!   retrain       drift a collection away from its build distribution, then
+//!                 retrain each shard's quantization model online
 //!   experiments   regenerate the paper's figures/tables (see DESIGN.md §4)
 //!   info          print index / artifact / engine information
 
@@ -39,9 +41,14 @@ COMMANDS
                --requests 64 --max-batch 64 --max-wait-us 200 --workers 4
                (--index accepts v1/v2 files and v3 collection dirs)
   churn        --n 20000 --dim 64 --shards 1 --ops (n/5) --clients 4
-               --requests 64 --delta-cap 4096 --coalesce 1 — serve a
-               collection while upserting/deleting 20%, with per-shard
-               background compaction off the write path
+               --requests 64 --delta-cap 4096 --coalesce 1
+               --max-delay-us 0 — serve a collection while
+               upserting/deleting 20%, with per-shard background
+               compaction off the write path
+  retrain      --n 8000 --dim 32 --shards 2 --drift 0.6 --k 10 --top-t 8
+               — replace a fraction of the corpus with a shifted
+               distribution, report recall@k before/after per-shard
+               online retraining
   experiments  <fig1|fig2|fig4|fig7|fig8|fig9|kmr|fig10|fig11|fig12|table1|all>
                --n 20000 --dim 64 --queries 200 --lambda 1.0 --quick
   info         --index index.soar | (artifact summary with no flags)
@@ -67,7 +74,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "n", "dim", "queries", "seed", "out", "data", "partitions", "spill", "lambda",
     "index", "k", "top-t", "rerank", "clients", "requests", "max-batch",
     "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
-    "ops", "delta-cap", "shards", "coalesce",
+    "ops", "delta-cap", "shards", "coalesce", "max-delay-us", "drift",
 ];
 
 fn engine_from(args: &Args) -> Engine {
@@ -131,6 +138,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
         "churn" => cmd_churn(&args),
+        "retrain" => cmd_retrain(&args),
         "experiments" => cmd_experiments(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -177,7 +185,7 @@ fn cmd_build(args: &Args) -> Result<()> {
         index.n,
         index.dim,
         index.num_partitions(),
-        index.config.spill.tag(),
+        index.config().spill.tag(),
         mem.total_bytes as f64 / 1e6
     );
     let out = PathBuf::from(args.get_str("out", "index.soar"));
@@ -301,6 +309,7 @@ fn cmd_churn(args: &Args) -> Result<()> {
         mutable: MutableConfig {
             delta_capacity: args.get_usize("delta-cap", 4096)?,
             publish_coalesce: args.get_usize("coalesce", 1)?,
+            publish_max_delay_us: args.get_u64("max-delay-us", 0)?,
             ..Default::default()
         },
         background_compact: true,
@@ -379,14 +388,22 @@ fn cmd_churn(args: &Args) -> Result<()> {
     for (s, sh) in stats.shards.iter().enumerate() {
         println!(
             "shard {s}: {} sealed segment(s), {} sealed rows, {} delta rows, {} tombstones, \
-             epoch {}, {} compaction(s)",
-            sh.sealed_segments, sh.sealed_rows, sh.delta_rows, sh.tombstones, sh.epoch,
-            sh.compactions
+             epoch {}, {} compaction(s), {} retrain(s), model gen {}, last publish {}µs ago",
+            sh.sealed_segments,
+            sh.sealed_rows,
+            sh.delta_rows,
+            sh.tombstones,
+            sh.epoch,
+            sh.compactions,
+            sh.retrains,
+            sh.model_generation,
+            sh.last_publish_age.as_micros()
         );
     }
     println!(
-        "collection: {} background compaction(s) ran off the write path",
-        stats.compactions()
+        "collection: {} background compaction(s), {} retrain(s) ran off the write path",
+        stats.compactions(),
+        stats.retrains()
     );
     let t0 = std::time::Instant::now();
     let after = collection.compact()?;
@@ -398,6 +415,95 @@ fn cmd_churn(args: &Args) -> Result<()> {
         after.tombstones()
     );
     server.shutdown();
+    Ok(())
+}
+
+/// Drift a collection away from its build distribution by replacing a
+/// fraction of the corpus with rows from a shifted distribution, then
+/// retrain each shard's quantization model online (other shards keep
+/// serving) and report recall@k before and after.
+fn cmd_retrain(args: &Args) -> Result<()> {
+    use soar_ann::config::{CollectionConfig, ShardRouting};
+    use soar_ann::data::ground_truth::ground_truth_mips;
+    use soar_ann::index::Collection;
+
+    let engine = Arc::new(engine_from(args));
+    let n = args.get_usize("n", 8000)?;
+    let dim = args.get_usize("dim", 32)?;
+    let nq = args.get_usize("queries", 200)?;
+    let seed = args.get_u64("seed", 42)?;
+    let drift = args.get_f32("drift", 0.6)?.clamp(0.0, 1.0);
+    let shards = args.get_usize("shards", 2)?;
+    let params = SearchParams {
+        k: args.get_usize("k", 10)?,
+        top_t: args.get_usize("top-t", 8)?,
+        rerank_budget: args.get_usize("rerank", 200)?,
+    };
+    params.validate()?;
+
+    // Distribution A: what the index is built on. Distribution B: what
+    // the corpus drifts toward (fresh topic structure from a different
+    // seed). Queries follow the drifted corpus, as real query logs do.
+    let a = SyntheticConfig::glove_like(n, dim, nq, seed).generate();
+    let b = SyntheticConfig::glove_like(n, dim, nq, seed ^ 0x5eed).generate();
+
+    let cfg = IndexConfig::for_dataset(n, spill_from(args)?);
+    let ccfg = CollectionConfig {
+        num_shards: shards,
+        routing: ShardRouting::Hash,
+        ..Default::default()
+    };
+    println!("building {shards}-shard collection over {n} x {dim} (distribution A)…");
+    let collection = Collection::build(engine.clone(), &a.data, &cfg, ccfg)?;
+
+    // Drift: replace the first drift*n ids with B rows.
+    let replaced = (drift * n as f32) as usize;
+    println!("drifting: upserting {replaced} rows from distribution B…");
+    let ids: Vec<u32> = (0..replaced as u32).collect();
+    let rows: Vec<usize> = (0..replaced).collect();
+    collection.upsert_batch(&ids, &b.data.gather_rows(&rows))?;
+    collection.flush();
+
+    // Ground truth over the live (mixed) corpus, queried near B.
+    let mut live = b.data.gather_rows(&rows);
+    for i in replaced..n {
+        live.push_row(a.data.row(i))?;
+    }
+    let gt = ground_truth_mips(&live, &b.queries, params.k);
+    let recall = |c: &Collection| -> f64 {
+        let results: Vec<Vec<u32>> = (0..b.queries.rows())
+            .map(|qi| {
+                c.search(b.queries.row(qi), &params)
+                    .0
+                    .into_iter()
+                    .map(|s| s.id)
+                    .collect()
+            })
+            .collect();
+        gt.mean_recall(&results)
+    };
+    let before = recall(&collection);
+    println!("recall@{} under drift, stale model: {before:.4}", params.k);
+
+    for s in 0..collection.num_shards() {
+        let t0 = std::time::Instant::now();
+        let installed = collection.retrain_shard(s)?;
+        let stats = collection.stats();
+        let st = &stats.shards[s];
+        println!(
+            "shard {s}: retrain {} in {:.2}s (model gen {}, {} sealed rows)",
+            if installed { "installed" } else { "aborted" },
+            t0.elapsed().as_secs_f64(),
+            st.model_generation,
+            st.sealed_rows
+        );
+    }
+    let after = recall(&collection);
+    println!(
+        "recall@{} after per-shard retrain: {after:.4} ({:+.4})",
+        params.k,
+        after - before
+    );
     Ok(())
 }
 
@@ -451,8 +557,8 @@ fn cmd_info(args: &Args) -> Result<()> {
                 index.dim,
                 index.num_partitions()
             );
-            println!("  spill: {}", index.config.spill.tag());
-            println!("  postings: {}", index.ivf.total_postings());
+            println!("  spill: {}", index.config().spill.tag());
+            println!("  postings: {}", index.total_postings());
             println!("  memory: {:.2} MB total", mem.total_bytes as f64 / 1e6);
             println!(
                 "    centroids {:.2} MB | ids {:.2} MB | pq codes {:.2} MB | int8 {:.2} MB",

@@ -5,16 +5,21 @@
 //! ScaNN's anisotropic loss), PQ codes over the partitioning residuals for
 //! the in-partition approximate scoring stage, an int8 highest-bitrate
 //! representation for the final rerank, and the blockwise LUT16 layout +
-//! kernels ([`lut16`]) that make the ADC scan SIMD-friendly.
+//! kernels ([`lut16`]) that make the ADC scan SIMD-friendly. The [`model`]
+//! module bundles every distribution-dependent component (centroids, spill
+//! parameters, PQ, int8 scales) into the versioned, swappable
+//! [`QuantModel`] the segmented index layers reference by identity.
 
 pub mod anisotropic;
 pub mod int8;
 pub mod kmeans;
 pub mod lut16;
+pub mod model;
 pub mod pq;
 
 pub use anisotropic::AnisotropicWeights;
 pub use int8::Int8Quantizer;
 pub use kmeans::{KMeans, KMeansConfig};
 pub use lut16::{BlockedCodes, QueryLut};
+pub use model::QuantModel;
 pub use pq::{PqCode, PqConfig, ProductQuantizer};

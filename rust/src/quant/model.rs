@@ -1,0 +1,521 @@
+//! The versioned quantization model: every distribution-dependent
+//! component of the index in one swappable unit.
+//!
+//! SOAR's quality hinges on how well the partition centroids, the spill
+//! assignment loss, the residual PQ codebook, and the int8 rerank scales
+//! fit the *served* distribution — and under churn the served distribution
+//! drifts away from whatever the seed build was trained on. Following the
+//! reconfigurable-index line of work (Rii; LoRANN's fitted score models),
+//! the [`QuantModel`] packages all of those into a single immutable value
+//! with a content-derived identity, so that:
+//!
+//! * segments reference their model by `Arc` (two segments trained from
+//!   the same distribution share one model, and one allocation);
+//! * the searcher can group segments by model id and build one per-query
+//!   LUT / partition selection per *distinct* model, not per segment;
+//! * serialization dedupes models into a table referenced by segment
+//!   header (format v4), and legacy files reconstruct models whose equal
+//!   content hashes re-share automatically;
+//! * online retraining is "train a fresh `QuantModel`, re-encode, swap"
+//!   behind the usual snapshot publish — the index shape never changes.
+//!
+//! The identity is a 64-bit FNV-1a hash over the model's canonical byte
+//! encoding ([`QuantModel::to_bytes`]), so content-equal models are
+//! interchangeable everywhere a model id is compared.
+
+use std::sync::Arc;
+
+use crate::config::IndexConfig;
+use crate::error::{Error, Result};
+use crate::linalg::MatrixF32;
+use crate::quant::{Int8Quantizer, KMeans, KMeansConfig, PqCode, ProductQuantizer};
+use crate::runtime::Engine;
+
+/// Batch size for engine scoring calls during assignment (matches the AOT
+/// bucket batch).
+const ASSIGN_BATCH: usize = 256;
+
+/// A trained, immutable quantization model: partition centroids, spill
+/// assignment parameters (via the training [`IndexConfig`]), the residual
+/// product quantizer, and the optional int8 rerank quantizer.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    /// Content hash of the canonical encoding — the identity every layer
+    /// compares. Equal ids ⇒ interchangeable models.
+    id: u64,
+    /// Retrain generation: 0 for the seed build, +1 per retrain.
+    pub generation: u32,
+    /// Training-time parameters; `spill` / `num_spills` here are the spill
+    /// assignment parameters applied to every point encoded against this
+    /// model (including online upserts).
+    pub config: IndexConfig,
+    /// `[c, d]` partition centers.
+    pub centroids: MatrixF32,
+    /// Residual product quantizer shared by all partitions.
+    pub pq: ProductQuantizer,
+    /// Int8 rerank quantizer (present iff `config.store_int8`).
+    pub int8: Option<Int8Quantizer>,
+}
+
+impl PartialEq for QuantModel {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+    }
+}
+
+impl QuantModel {
+    /// Assemble a model from trained parts, validating shapes and
+    /// computing the content id.
+    pub fn from_parts(
+        generation: u32,
+        config: IndexConfig,
+        centroids: MatrixF32,
+        pq: ProductQuantizer,
+        int8: Option<Int8Quantizer>,
+    ) -> Result<QuantModel> {
+        if centroids.rows() != config.num_partitions {
+            return Err(Error::Config(format!(
+                "model has {} centroids for num_partitions {}",
+                centroids.rows(),
+                config.num_partitions
+            )));
+        }
+        if pq.dim() != centroids.cols() {
+            return Err(Error::Config(format!(
+                "model PQ dim {} != centroid dim {}",
+                pq.dim(),
+                centroids.cols()
+            )));
+        }
+        if let Some(q8) = &int8 {
+            if q8.dim() != centroids.cols() {
+                return Err(Error::Config(format!(
+                    "model int8 dim {} != centroid dim {}",
+                    q8.dim(),
+                    centroids.cols()
+                )));
+            }
+        }
+        if int8.is_some() != config.store_int8 {
+            return Err(Error::Config(
+                "model int8 presence disagrees with config.store_int8".into(),
+            ));
+        }
+        let mut model = QuantModel {
+            id: 0,
+            generation,
+            config,
+            centroids,
+            pq,
+            int8,
+        };
+        model.id = fnv1a64(&model.to_bytes());
+        Ok(model)
+    }
+
+    /// Train a fresh model over `data`: VQ codebook (k-means), residual PQ
+    /// (trained on primary residuals), and the int8 rerank quantizer.
+    /// `int8_override` adopts a pre-trained quantizer instead (the
+    /// collection build trains one over the whole corpus so rerank scores
+    /// merge exactly across shards); it is ignored when
+    /// `config.store_int8` is false.
+    pub fn train(
+        engine: &Engine,
+        data: &MatrixF32,
+        config: &IndexConfig,
+        generation: u32,
+        int8_override: Option<Int8Quantizer>,
+    ) -> Result<QuantModel> {
+        config.validate(data.rows(), data.cols())?;
+        if let Some(q8) = &int8_override {
+            if q8.dim() != data.cols() {
+                return Err(Error::Shape(format!(
+                    "int8 quantizer dim {} != data dim {}",
+                    q8.dim(),
+                    data.cols()
+                )));
+            }
+        }
+        let km = KMeans::train(
+            data,
+            &KMeansConfig {
+                k: config.num_partitions,
+                seed: config.seed,
+                ..config.kmeans.clone()
+            },
+        )?;
+        let centroids = km.centroids;
+        let primary = primary_assignments(engine, data, &centroids)?;
+        let residuals = primary_residuals(data, &centroids, &primary);
+        let pq = ProductQuantizer::train(&residuals, &config.pq)?;
+        drop(residuals);
+        let int8 = if config.store_int8 {
+            Some(match int8_override {
+                Some(q8) => q8,
+                None => Int8Quantizer::train(data)?,
+            })
+        } else {
+            None
+        };
+        QuantModel::from_parts(generation, config.clone(), centroids, pq, int8)
+    }
+
+    /// The content-derived identity.
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn dim(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.centroids.rows()
+    }
+
+    /// Total assignments per point encoded against this model.
+    pub fn assignments_per_point(&self) -> usize {
+        self.config.assignments_per_point()
+    }
+
+    /// Primary + SOAR-spilled partition assignments for `data` under this
+    /// model (Theorem 3.1 loss against the model's fixed centroids).
+    pub fn assign(&self, engine: &Engine, data: &MatrixF32) -> Result<Vec<Vec<u32>>> {
+        let primary = primary_assignments(engine, data, &self.centroids)?;
+        crate::index::soar::assign_spills(
+            engine,
+            data,
+            &self.centroids,
+            &primary,
+            self.config.spill,
+            self.config.num_spills,
+        )
+    }
+
+    /// PQ code of `row`'s residual w.r.t. partition `p`.
+    pub fn residual_code(&self, row: &[f32], p: u32) -> PqCode {
+        let mut r = vec![0.0f32; row.len()];
+        crate::linalg::sub(row, self.centroids.row(p as usize), &mut r);
+        self.pq.encode(&r)
+    }
+
+    /// Int8 record of `row` (`None` when int8 storage is disabled).
+    pub fn encode_int8(&self, row: &[f32]) -> Option<Vec<i8>> {
+        self.int8.as_ref().map(|q8| q8.encode(row))
+    }
+
+    /// Two models can coexist in one snapshot iff they quantize the same
+    /// vector space and agree on whether the rerank stage exists.
+    pub fn compatible_with(&self, other: &QuantModel) -> bool {
+        self.dim() == other.dim() && self.int8.is_some() == other.int8.is_some()
+    }
+
+    /// Canonical little-endian byte encoding (the unit the v4 model table
+    /// stores, and the input of the content hash). Byte-stable: encoding
+    /// the decoded model reproduces the exact bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&self.generation.to_le_bytes());
+        let cfg = self.config.to_json().to_json();
+        w_bytes(&mut out, cfg.as_bytes());
+        w_matrix(&mut out, &self.centroids);
+        out.extend_from_slice(&(self.pq.dims_per_subspace() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.pq.codebooks().len() as u64).to_le_bytes());
+        for cb in self.pq.codebooks() {
+            w_matrix(&mut out, cb);
+        }
+        match &self.int8 {
+            Some(q8) => {
+                out.push(1);
+                w_f32s(&mut out, &q8.scales);
+            }
+            None => out.push(0),
+        }
+        out
+    }
+
+    /// Inverse of [`QuantModel::to_bytes`]; recomputes the content id.
+    pub fn from_bytes(bytes: &[u8]) -> Result<QuantModel> {
+        let mut r = Reader { bytes, pos: 0 };
+        let generation = r.u32()?;
+        let cfg_bytes = r.bytes()?;
+        let cfg_text = std::str::from_utf8(cfg_bytes)
+            .map_err(|e| Error::Serialize(format!("model config utf8: {e}")))?;
+        let config = IndexConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
+            .map_err(|e| Error::Serialize(format!("model config json: {e}")))?;
+        let centroids = r.matrix()?;
+        let dim = centroids.cols();
+        let s = r.u64()? as usize;
+        let ncb = r.u64()? as usize;
+        let mut codebooks = Vec::with_capacity(ncb);
+        for _ in 0..ncb {
+            codebooks.push(r.matrix()?);
+        }
+        let pq = ProductQuantizer::from_parts(dim, s, codebooks)?;
+        let int8 = match r.u8()? {
+            0 => None,
+            1 => Some(Int8Quantizer { scales: r.f32s()? }),
+            other => {
+                return Err(Error::Serialize(format!("bad model int8 flag {other}")));
+            }
+        };
+        if r.pos != bytes.len() {
+            return Err(Error::Serialize(format!(
+                "model encoding has {} trailing bytes",
+                bytes.len() - r.pos
+            )));
+        }
+        QuantModel::from_parts(generation, config, centroids, pq, int8)
+    }
+}
+
+/// Dedup an incoming model against already-loaded ones by content id,
+/// re-sharing the `Arc` on a hit (used by the deserializers so segments
+/// written with duplicated model bodies — v1/v2 files — coalesce in
+/// memory).
+pub fn intern_model(pool: &mut Vec<Arc<QuantModel>>, model: QuantModel) -> Arc<QuantModel> {
+    if let Some(existing) = pool.iter().find(|m| m.id() == model.id()) {
+        return existing.clone();
+    }
+    let model = Arc::new(model);
+    pool.push(model.clone());
+    model
+}
+
+/// Argmin-ℓ₂ primary assignment, batched through the engine (λ=0 SOAR
+/// loss ≡ squared Euclidean distance matrix).
+pub fn primary_assignments(
+    engine: &Engine,
+    data: &MatrixF32,
+    centroids: &MatrixF32,
+) -> Result<Vec<u32>> {
+    let n = data.rows();
+    let d = data.cols();
+    let mut primary = vec![0u32; n];
+    let mut start = 0usize;
+    while start < n {
+        let stop = (start + ASSIGN_BATCH).min(n);
+        let rows: Vec<usize> = (start..stop).collect();
+        let x = data.gather_rows(&rows);
+        let zeros = MatrixF32::zeros(x.rows(), d);
+        let loss = engine.soar_loss(&x, &zeros, centroids, 0.0)?;
+        for (local, gi) in (start..stop).enumerate() {
+            primary[gi] = crate::linalg::argmin(loss.row(local)) as u32;
+        }
+        start = stop;
+    }
+    Ok(primary)
+}
+
+/// Residuals of every point w.r.t. its primary centroid.
+fn primary_residuals(data: &MatrixF32, centroids: &MatrixF32, primary: &[u32]) -> MatrixF32 {
+    let n = data.rows();
+    let d = data.cols();
+    let mut out = MatrixF32::zeros(n, d);
+    crate::util::parallel::par_chunks_mut(out.as_mut_slice(), d, |i, dst| {
+        let c = centroids.row(primary[i] as usize);
+        let x = data.row(i);
+        for j in 0..d {
+            dst[j] = x[j] - c[j];
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// canonical byte encoding primitives
+// ---------------------------------------------------------------------
+
+fn w_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn w_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.extend_from_slice(&(vs.len() as u64).to_le_bytes());
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn w_matrix(out: &mut Vec<u8>, m: &MatrixF32) {
+    out.extend_from_slice(&(m.rows() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.cols() as u64).to_le_bytes());
+    w_f32s(out, m.as_slice());
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // Checked arithmetic: a corrupted length field must surface as a
+        // parse error, not an overflow panic.
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| Error::Serialize("model encoding truncated".into()))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            Error::Serialize("model encoding truncated".into())
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn matrix(&mut self) -> Result<MatrixF32> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let data = self.f32s()?;
+        MatrixF32::from_vec(rows, cols, data)
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SpillMode;
+    use crate::data::synthetic::SyntheticConfig;
+
+    fn small_config() -> IndexConfig {
+        IndexConfig {
+            num_partitions: 8,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn train_produces_consistent_model() {
+        let ds = SyntheticConfig::glove_like(400, 16, 4, 3).generate();
+        let engine = Engine::cpu();
+        let m = QuantModel::train(&engine, &ds.data, &small_config(), 0, None).unwrap();
+        assert_eq!(m.dim(), 16);
+        assert_eq!(m.num_partitions(), 8);
+        assert_eq!(m.generation, 0);
+        assert_eq!(m.assignments_per_point(), 2);
+        assert!(m.int8.is_some());
+        // Deterministic: retraining with the same inputs gives the same id.
+        let m2 = QuantModel::train(&engine, &ds.data, &small_config(), 0, None).unwrap();
+        assert_eq!(m.id(), m2.id());
+        // A different generation label is a different identity.
+        let m3 = QuantModel::train(&engine, &ds.data, &small_config(), 1, None).unwrap();
+        assert_ne!(m.id(), m3.id());
+        // Assignments are within range and distinct per point.
+        let a = m.assign(&engine, &ds.data).unwrap();
+        assert_eq!(a.len(), 400);
+        for v in &a {
+            assert_eq!(v.len(), 2);
+            assert_ne!(v[0], v[1]);
+            assert!(v.iter().all(|&p| (p as usize) < 8));
+        }
+    }
+
+    #[test]
+    fn byte_round_trip_is_exact() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 5).generate();
+        let engine = Engine::cpu();
+        let m = QuantModel::train(&engine, &ds.data, &small_config(), 2, None).unwrap();
+        let bytes = m.to_bytes();
+        let back = QuantModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.id(), m.id());
+        assert_eq!(back.generation, 2);
+        assert_eq!(back.centroids, m.centroids);
+        assert_eq!(back.pq.codebooks(), m.pq.codebooks());
+        assert_eq!(back.int8, m.int8);
+        assert_eq!(back.to_bytes(), bytes, "re-encoding must be byte-stable");
+        // Truncated and trailing-garbage encodings are rejected.
+        assert!(QuantModel::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(QuantModel::from_bytes(&long).is_err());
+    }
+
+    #[test]
+    fn intern_reshares_equal_content() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 7).generate();
+        let engine = Engine::cpu();
+        let mut pool = Vec::new();
+        let a = QuantModel::train(&engine, &ds.data, &small_config(), 0, None).unwrap();
+        let b = QuantModel::train(&engine, &ds.data, &small_config(), 0, None).unwrap();
+        let ia = intern_model(&mut pool, a);
+        let ib = intern_model(&mut pool, b);
+        assert!(Arc::ptr_eq(&ia, &ib));
+        assert_eq!(pool.len(), 1);
+        let c = QuantModel::train(&engine, &ds.data, &small_config(), 1, None).unwrap();
+        let ic = intern_model(&mut pool, c);
+        assert!(!Arc::ptr_eq(&ia, &ic));
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn from_parts_validates_shapes() {
+        let ds = SyntheticConfig::glove_like(300, 8, 4, 9).generate();
+        let engine = Engine::cpu();
+        let m = QuantModel::train(&engine, &ds.data, &small_config(), 0, None).unwrap();
+        // Wrong centroid count for the config.
+        let mut cfg = m.config.clone();
+        cfg.num_partitions = 9;
+        assert!(QuantModel::from_parts(
+            0,
+            cfg,
+            m.centroids.clone(),
+            m.pq.clone(),
+            m.int8.clone()
+        )
+        .is_err());
+        // int8 presence must match config.store_int8.
+        let mut cfg = m.config.clone();
+        cfg.store_int8 = false;
+        assert!(QuantModel::from_parts(
+            0,
+            cfg,
+            m.centroids.clone(),
+            m.pq.clone(),
+            m.int8.clone()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Online retraining: drift recovery, the v1–v4 serialize compat matrix,
+//! and QuantModel byte-exact round-trips.
+//!
+//! The drift test is the acceptance scenario for per-segment quantization
+//! models: a collection is built on distribution A, the corpus is then
+//! fully replaced by distribution B (a different topic structure), and
+//! partial-probe recall@10 is measured against ground truth over the
+//! live rows — once with the stale A-trained models, once after
+//! `Collection::retrain_shard` swaps in B-trained models per shard.
+//! Everything is seeded, so the run is deterministic.
+
+use std::sync::Arc;
+
+use soar_ann::config::{
+    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting, SpillMode,
+};
+use soar_ann::data::ground_truth::ground_truth_mips;
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::serialize::{
+    load_snapshot, save_index, save_snapshot, save_snapshot_versioned,
+};
+use soar_ann::index::{
+    build_index, Collection, MutableIndex, SearchScratch, SnapshotSearcher,
+};
+use soar_ann::linalg::MatrixF32;
+use soar_ann::quant::{KMeansConfig, QuantModel};
+use soar_ann::runtime::Engine;
+use soar_ann::util::prop::check;
+use soar_ann::util::tempdir::TempDir;
+
+const DIM: usize = 16;
+
+fn recall_of(c: &Collection, queries: &MatrixF32, gt_data: &MatrixF32, params: &SearchParams) -> f64 {
+    let gt = ground_truth_mips(gt_data, queries, params.k);
+    let results: Vec<Vec<u32>> = (0..queries.rows())
+        .map(|qi| {
+            c.search(queries.row(qi), params)
+                .0
+                .into_iter()
+                .map(|s| s.id)
+                .collect()
+        })
+        .collect();
+    gt.mean_recall(&results)
+}
+
+/// The drift-recovery acceptance test: post-retrain recall must recover
+/// to the pre-drift baseline (to within recall-estimator noise across the
+/// two disjoint query workloads) and beat the stale-model run outright,
+/// while the drift itself must have visibly hurt the stale model.
+#[test]
+fn retrain_recovers_recall_under_distribution_shift() {
+    let n = 2400;
+    // Two independent topic structures from one generator family. 400
+    // queries per side keep the recall estimator's noise well under the
+    // recovery tolerance asserted below.
+    let a = SyntheticConfig::glove_like(n, DIM, 400, 101).generate();
+    let b = SyntheticConfig::glove_like(n, DIM, 400, 909).generate();
+
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 24, // ~12 per shard
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let ccfg = CollectionConfig {
+        num_shards: 2,
+        routing: ShardRouting::Modulo,
+        mutable: MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false, // keep the run deterministic
+    };
+    let c = Collection::build(engine.clone(), &a.data, &icfg, ccfg).unwrap();
+
+    // Partial probe: partition selection quality is what drift degrades.
+    let params = SearchParams {
+        k: 10,
+        top_t: 4,
+        rerank_budget: 60,
+    };
+    let baseline = recall_of(&c, &a.queries, &a.data, &params);
+    assert!(baseline > 0.5, "pre-drift baseline too low: {baseline}");
+
+    // Drift: replace the whole corpus with distribution B.
+    let ids: Vec<u32> = (0..n as u32).collect();
+    c.upsert_batch(&ids, &b.data).unwrap();
+    c.flush();
+    assert_eq!(c.snapshot().live_count(), n);
+
+    let stale = recall_of(&c, &b.queries, &b.data, &params);
+    assert!(
+        stale < baseline - 0.03,
+        "drift must hurt the stale model: stale {stale} vs baseline {baseline}"
+    );
+
+    // Per-shard online retrain; writes stay enabled throughout (one lands
+    // mid-sequence and must survive).
+    assert!(c.retrain_shard(0).unwrap());
+    let mut rng = soar_ann::linalg::Rng::new(77);
+    let mut survivor = b.data.row(7).to_vec();
+    for x in survivor.iter_mut() {
+        *x += 0.2 * rng.next_gaussian();
+    }
+    soar_ann::linalg::normalize(&mut survivor);
+    c.upsert(5000, &survivor).unwrap();
+    assert!(c.retrain_shard(1).unwrap());
+    let stats = c.stats();
+    for (s, sh) in stats.shards.iter().enumerate() {
+        assert_eq!(sh.retrains, 1, "shard {s} must have retrained once");
+        assert_eq!(sh.model_generation, 1, "shard {s} model generation");
+    }
+    let snap = c.snapshot();
+    snap.check_invariants().unwrap();
+    assert_eq!(snap.live_count(), n + 1);
+
+    let post = recall_of(&c, &b.queries, &b.data, &params);
+    assert!(
+        post >= baseline - 0.015,
+        "post-retrain recall must recover to the pre-drift baseline \
+         (±1.5% estimator noise across disjoint query sets): \
+         post {post} vs baseline {baseline}"
+    );
+    assert!(
+        post > stale + 0.03,
+        "post-retrain recall must beat the stale model outright: \
+         post {post} vs stale {stale}"
+    );
+
+    // The upsert accepted during the retrain sequence survived it.
+    let full = SearchParams {
+        k: 10,
+        top_t: 24,
+        rerank_budget: 4000,
+    };
+    let (res, _) = c.search(&survivor, &full);
+    assert_eq!(res[0].id, 5000, "mid-retrain upsert must survive the install");
+}
+
+/// Every on-disk generation must load and search identically to the
+/// in-memory snapshot it came from: v1 (monolithic), v2 (segmented), v4
+/// (model table), and v3 (collection manifest over v4 shard files).
+#[test]
+fn serialize_compat_matrix_v1_to_v4() {
+    let ds = SyntheticConfig::glove_like(700, DIM, 8, 303).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 10,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let dir = TempDir::new().unwrap();
+    let params = SearchParams {
+        k: 10,
+        top_t: 10,
+        rerank_budget: 300,
+    };
+
+    // Mutated single-index fixture: two sealed segments + delta +
+    // tombstones, then a retrain so v4 carries a two-entry model table.
+    let idx = build_index(&engine, &ds.data, &icfg).unwrap();
+    let m = MutableIndex::from_index(
+        idx.clone(),
+        engine.clone(),
+        MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for i in 0..20u32 {
+        let row = ds.data.row((i as usize * 13) % 700).to_vec();
+        m.upsert(700 + i, &row).unwrap();
+    }
+    m.seal_delta().unwrap();
+    m.upsert(705, &ds.data.row(5).to_vec()).unwrap();
+    m.delete(3).unwrap();
+
+    // v1: the original monolithic file.
+    let v1_path = dir.join("v1.soar");
+    save_index(&idx, &v1_path).unwrap();
+    // v2 + v4 of the same mutated snapshot.
+    let snap_single = m.snapshot();
+    let v2_path = dir.join("v2.soar");
+    save_snapshot_versioned(&snap_single, &v2_path, 2).unwrap();
+    let v4_single_path = dir.join("v4-single.soar");
+    save_snapshot(&snap_single, &v4_single_path).unwrap();
+    // v4 with a genuine model mix (post-retrain + post-retrain write).
+    assert!(m.retrain_concurrent().unwrap());
+    m.upsert(710, &ds.data.row(10).to_vec()).unwrap();
+    m.seal_delta().unwrap();
+    let job = m.begin_retrain().unwrap();
+    m.upsert(711, &ds.data.row(11).to_vec()).unwrap();
+    let retrained = job.train(&engine).unwrap();
+    assert!(m.install_retrain(&job, retrained).unwrap());
+    let snap_mixed = m.snapshot();
+    assert!(snap_mixed.models().len() >= 2, "fixture must mix models");
+    let v4_mixed_path = dir.join("v4-mixed.soar");
+    save_snapshot(&snap_mixed, &v4_mixed_path).unwrap();
+
+    // Matrix: every file loads, validates, and searches identically to
+    // its source snapshot.
+    let cases: Vec<(&str, std::path::PathBuf, Arc<soar_ann::index::IndexSnapshot>)> = vec![
+        (
+            "v1",
+            v1_path.clone(),
+            Arc::new(soar_ann::index::IndexSnapshot::from_index(Arc::new(idx))),
+        ),
+        ("v2", v2_path, snap_single.clone()),
+        ("v4-single", v4_single_path, snap_single),
+        ("v4-mixed", v4_mixed_path, snap_mixed),
+    ];
+    for (name, path, want) in &cases {
+        let got = load_snapshot(path).unwrap();
+        got.check_invariants().unwrap();
+        assert_eq!(got.models().len(), want.models().len(), "{name}");
+        let s_want = SnapshotSearcher::new(want, &engine);
+        let s_got = SnapshotSearcher::new(&got, &engine);
+        let mut sc_want = SearchScratch::for_snapshot(want);
+        let mut sc_got = SearchScratch::for_snapshot(&got);
+        for qi in 0..ds.num_queries() {
+            let (rw, stw) = s_want.search(ds.queries.row(qi), &params, &mut sc_want);
+            let (rg, stg) = s_got.search(ds.queries.row(qi), &params, &mut sc_got);
+            assert_eq!(rw, rg, "{name} query {qi}");
+            assert_eq!(stw, stg, "{name} query {qi} stats");
+        }
+    }
+
+    // v3: a sharded collection (shard files written as v4) round-trips
+    // through the manifest, including after a per-shard retrain.
+    let ccfg = CollectionConfig {
+        num_shards: 2,
+        routing: ShardRouting::Modulo,
+        ..Default::default()
+    };
+    let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+    c.upsert(900, &ds.data.row(42).to_vec()).unwrap();
+    assert!(c.retrain_shard(0).unwrap());
+    let col_dir = dir.join("col");
+    c.save(&col_dir).unwrap();
+    let back = Collection::load(&col_dir, engine.clone()).unwrap();
+    assert_eq!(back.stats().shards[0].model_generation, 1);
+    for qi in 0..ds.num_queries() {
+        let q = ds.queries.row(qi);
+        assert_eq!(c.search(q, &params), back.search(q, &params), "v3 query {qi}");
+    }
+}
+
+/// Property: a trained QuantModel's canonical encoding round-trips
+/// byte-exactly (identity, centroids, codebooks, and scales all bit-equal)
+/// across random shapes, spill modes, and int8-ness.
+#[test]
+fn quant_model_round_trips_bit_exactly() {
+    let engine = Engine::cpu();
+    check("quant model byte round-trip", 10, |g| {
+        let dim = g.usize_in(4..10);
+        let n = g.usize_in(60..140);
+        let mut data = MatrixF32::zeros(n, dim);
+        for i in 0..n {
+            for j in 0..dim {
+                data.row_mut(i)[j] = g.gaussian();
+            }
+        }
+        let spill = *g.choose(&[
+            SpillMode::None,
+            SpillMode::Nearest,
+            SpillMode::Soar { lambda: 1.5 },
+        ]);
+        let cfg = IndexConfig {
+            num_partitions: g.usize_in(3..8),
+            spill,
+            num_spills: 1,
+            store_int8: g.bool(),
+            seed: g.usize_in(0..1000) as u64,
+            kmeans: KMeansConfig {
+                iters: 2,
+                ..Default::default()
+            },
+            pq: soar_ann::quant::PqConfig {
+                dims_per_subspace: g.usize_in(1..dim.min(4)),
+                train_iters: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let generation = g.usize_in(0..5) as u32;
+        let model = QuantModel::train(&engine, &data, &cfg, generation, None).unwrap();
+        let bytes = model.to_bytes();
+        let back = QuantModel::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes, "re-encoding must be byte-stable");
+        assert_eq!(back.id(), model.id());
+        assert_eq!(back.generation, model.generation);
+        assert_eq!(back.centroids, model.centroids);
+        assert_eq!(back.pq.codebooks(), model.pq.codebooks());
+        assert_eq!(back.int8, model.int8);
+        assert_eq!(back.config.spill, model.config.spill);
+        assert_eq!(back.config.num_partitions, model.config.num_partitions);
+    });
+}
