@@ -45,6 +45,7 @@ fn build_collection(
             ..Default::default()
         },
         background_compact: false,
+        maintenance: Default::default(),
     };
     Collection::build(engine.clone(), data, &icfg, ccfg).expect("build collection")
 }

@@ -325,6 +325,131 @@ impl MutableConfig {
     }
 }
 
+/// Policy for the per-shard background **maintenance engine**: when the
+/// worker retrains a drifted shard on its own and when it re-encodes
+/// small stale-model runs into the active model (model-converging
+/// compaction).
+///
+/// The drift signal is the write path's EWMA of per-upsert primary
+/// assignment loss ‖x − c_primary‖² divided by the active model's
+/// recorded training loss (see `QuantModel::training_loss`). A ratio of
+/// 1.0 means new rows quantize exactly as well as the rows the model was
+/// trained on; the engine fires a staged retrain when the ratio crosses
+/// `drift_threshold`, at most once per `retrain_cooldown_ms`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MaintenanceConfig {
+    /// Let the background worker fire `begin_retrain → train →
+    /// install_retrain` on its own when the drift ratio crosses
+    /// `drift_threshold`. Off by default: retrains are operator-driven
+    /// unless the deployment opts in.
+    pub auto_retrain: bool,
+    /// Drift ratio (EWMA upsert loss / model training loss) at which an
+    /// automatic retrain fires.
+    pub drift_threshold: f32,
+    /// Ignore the drift signal until this many upserts have fed the EWMA
+    /// since the active model was installed (a handful of unlucky rows
+    /// must not trigger a full retrain).
+    pub min_drift_samples: u64,
+    /// Minimum time between automatic retrain *attempts* on one shard,
+    /// in milliseconds. Cooldown is measured from the attempt, not the
+    /// install, so a repeatedly-aborting retrain cannot hot-loop.
+    pub retrain_cooldown_ms: u64,
+    /// During quiet periods (no compaction pressure, no drift trigger),
+    /// re-encode small stale-model runs into the active model so
+    /// long-lived mixed-model snapshots converge to a single model
+    /// without a full retrain.
+    pub converge_compact: bool,
+    /// Largest stale run (stored rows) the converging compaction will
+    /// re-encode; bigger runs wait for the next full retrain.
+    pub converge_max_rows: usize,
+}
+
+impl Default for MaintenanceConfig {
+    fn default() -> Self {
+        MaintenanceConfig {
+            auto_retrain: false,
+            drift_threshold: 1.5,
+            min_drift_samples: 256,
+            retrain_cooldown_ms: 60_000,
+            converge_compact: false,
+            converge_max_rows: 4096,
+        }
+    }
+}
+
+impl MaintenanceConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.drift_threshold.is_finite() || self.drift_threshold <= 0.0 {
+            return Err(Error::Config(format!(
+                "drift_threshold must be a positive finite number, got {}",
+                self.drift_threshold
+            )));
+        }
+        if self.converge_compact && self.converge_max_rows == 0 {
+            return Err(Error::Config(
+                "converge_max_rows must be ≥ 1 when converge_compact is set".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// JSON encoding (persisted inside the v3 collection manifest).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("auto_retrain", Value::Bool(self.auto_retrain)),
+            ("drift_threshold", Value::num(self.drift_threshold as f64)),
+            ("min_drift_samples", Value::num(self.min_drift_samples as f64)),
+            (
+                "retrain_cooldown_ms",
+                Value::num(self.retrain_cooldown_ms as f64),
+            ),
+            ("converge_compact", Value::Bool(self.converge_compact)),
+            ("converge_max_rows", Value::num(self.converge_max_rows as f64)),
+        ])
+    }
+
+    /// Inverse of [`MaintenanceConfig::to_json`]. Every field is
+    /// optional — an *absent* field takes its default (manifests written
+    /// before that knob existed) — but a field that is present with the
+    /// wrong type is an error, not a silent fallback to the default
+    /// policy.
+    pub fn from_json(v: &Value) -> Result<MaintenanceConfig> {
+        let bool_field = |key: &str, default: bool| -> Result<bool> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| Error::Config(format!("{key} must be a boolean"))),
+            }
+        };
+        let num_field = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(x) => x
+                    .as_f64()
+                    .ok_or_else(|| Error::Config(format!("{key} must be a number"))),
+            }
+        };
+        let d = MaintenanceConfig::default();
+        let cfg = MaintenanceConfig {
+            auto_retrain: bool_field("auto_retrain", d.auto_retrain)?,
+            drift_threshold: num_field("drift_threshold", d.drift_threshold as f64)? as f32,
+            min_drift_samples: num_field("min_drift_samples", d.min_drift_samples as f64)? as u64,
+            retrain_cooldown_ms: num_field("retrain_cooldown_ms", d.retrain_cooldown_ms as f64)?
+                as u64,
+            converge_compact: bool_field("converge_compact", d.converge_compact)?,
+            converge_max_rows: match v.get("converge_max_rows") {
+                None => d.converge_max_rows,
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config("converge_max_rows must be a non-negative integer".into())
+                })?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// How a [`crate::index::Collection`] maps a global id to one of its
 /// shards. The policy is persisted in the v3 collection manifest so a
 /// reloaded collection keeps routing upserts to the shard that already
@@ -389,11 +514,18 @@ pub struct CollectionConfig {
     pub routing: ShardRouting,
     /// Mutation / compaction policy applied to every shard.
     pub mutable: MutableConfig,
-    /// Spawn one background compaction worker per shard: delta seals and
+    /// Spawn one background maintenance worker per shard: delta seals and
     /// sealed-segment merges run off the write path (copy-then-swap), so
-    /// writers stall only for the final snapshot publish. Disables the
-    /// shards' inline `auto_compact` (the worker owns the triggers).
+    /// writers stall only for the final snapshot publish, and the worker
+    /// additionally owns the `maintenance` policy (drift-triggered
+    /// retrains, model-converging compaction). Disables the shards'
+    /// inline `auto_compact` (the worker owns the triggers).
     pub background_compact: bool,
+    /// Maintenance-engine policy (drift-triggered retraining +
+    /// model-converging compaction), enforced by the background workers
+    /// when `background_compact` is set and by explicit
+    /// `Collection::maintenance_tick` calls otherwise.
+    pub maintenance: MaintenanceConfig,
 }
 
 impl Default for CollectionConfig {
@@ -403,6 +535,7 @@ impl Default for CollectionConfig {
             routing: ShardRouting::Hash,
             mutable: MutableConfig::default(),
             background_compact: false,
+            maintenance: MaintenanceConfig::default(),
         }
     }
 }
@@ -412,7 +545,8 @@ impl CollectionConfig {
         if self.num_shards == 0 {
             return Err(Error::Config("num_shards must be ≥ 1".into()));
         }
-        self.mutable.validate()
+        self.mutable.validate()?;
+        self.maintenance.validate()
     }
 
     /// Per-shard mutation config actually handed to the shards: inline
@@ -431,10 +565,13 @@ impl CollectionConfig {
             ("routing", Value::str(self.routing.tag())),
             ("mutable", self.mutable.to_json()),
             ("background_compact", Value::Bool(self.background_compact)),
+            ("maintenance", self.maintenance.to_json()),
         ])
     }
 
-    /// Inverse of [`CollectionConfig::to_json`].
+    /// Inverse of [`CollectionConfig::to_json`]. `maintenance` is
+    /// optional (v3 manifests persisted before the maintenance engine
+    /// default to the conservative do-nothing policy).
     pub fn from_json(v: &Value) -> Result<CollectionConfig> {
         let cfg = CollectionConfig {
             num_shards: v
@@ -454,6 +591,10 @@ impl CollectionConfig {
                 .get("background_compact")
                 .and_then(|b| b.as_bool())
                 .ok_or_else(|| Error::Config("missing background_compact".into()))?,
+            maintenance: match v.get("maintenance") {
+                Some(m) => MaintenanceConfig::from_json(m)?,
+                None => MaintenanceConfig::default(),
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -680,6 +821,14 @@ mod tests {
                 ..Default::default()
             },
             background_compact: true,
+            maintenance: MaintenanceConfig {
+                auto_retrain: true,
+                drift_threshold: 1.25,
+                min_drift_samples: 32,
+                retrain_cooldown_ms: 5_000,
+                converge_compact: true,
+                converge_max_rows: 512,
+            },
         };
         c.validate().unwrap();
         // Background workers own the compaction triggers.
@@ -692,6 +841,56 @@ mod tests {
         assert_eq!(back, c);
         c.num_shards = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn maintenance_config_round_trip_defaults_and_validation() {
+        let d = MaintenanceConfig::default();
+        d.validate().unwrap();
+        assert!(!d.auto_retrain, "autonomy must be opt-in");
+        assert!(!d.converge_compact);
+        // Round trip of a fully customized policy.
+        let m = MaintenanceConfig {
+            auto_retrain: true,
+            drift_threshold: 2.0,
+            min_drift_samples: 64,
+            retrain_cooldown_ms: 1_000,
+            converge_compact: true,
+            converge_max_rows: 128,
+        };
+        let s = m.to_json().to_json();
+        let back =
+            MaintenanceConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, m);
+        // A v3 manifest written before the maintenance engine carries no
+        // "maintenance" object: the collection parses with the default
+        // do-nothing policy.
+        let legacy = CollectionConfig::default().to_json().to_json();
+        let mut legacy_v = crate::util::json::Value::parse(&legacy).unwrap();
+        if let crate::util::json::Value::Obj(entries) = &mut legacy_v {
+            entries.remove("maintenance");
+        }
+        let back = CollectionConfig::from_json(&legacy_v).unwrap();
+        assert_eq!(back.maintenance, MaintenanceConfig::default());
+        // A present field of the wrong type is corruption, not a legacy
+        // manifest: it must error, never silently fall back to defaults.
+        let bad_type =
+            crate::util::json::Value::parse("{\"drift_threshold\": \"2.5\"}").unwrap();
+        assert!(MaintenanceConfig::from_json(&bad_type).is_err());
+        let bad_type = crate::util::json::Value::parse("{\"auto_retrain\": 1}").unwrap();
+        assert!(MaintenanceConfig::from_json(&bad_type).is_err());
+        // Validation rejects nonsense.
+        let bad = MaintenanceConfig {
+            drift_threshold: 0.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = MaintenanceConfig {
+            converge_compact: true,
+            converge_max_rows: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

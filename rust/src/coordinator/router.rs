@@ -47,6 +47,7 @@ impl ShardedIndex {
             routing: ShardRouting::Hash,
             mutable: MutableConfig::default(),
             background_compact: false,
+            maintenance: Default::default(),
         };
         Ok(ShardedIndex {
             collection: Collection::build(engine, data, config, ccfg)?,

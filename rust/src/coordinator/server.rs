@@ -558,6 +558,7 @@ mod tests {
                 ..Default::default()
             },
             background_compact: false,
+            maintenance: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let params = SearchParams {

@@ -21,12 +21,20 @@
 //!   the row. (VQ codebooks and PQ stay per-shard — only the pre-rerank
 //!   candidate stream is shard-local. As within a single index, an
 //!   *exact* score tie at the k boundary is broken by scan order.)
-//! * With `background_compact`, each shard gets a compaction worker:
-//!   delta seals and sealed-segment merges run off the write path via the
-//!   staged [`MutableIndex::begin_compaction`] →
+//! * With `background_compact`, each shard gets a **maintenance
+//!   worker** — the engine that owns every reconfiguration duty so none
+//!   of them needs an operator verb: delta seals and sealed-segment
+//!   merges run off the write path via the staged
+//!   [`MutableIndex::begin_compaction`] →
 //!   [`crate::index::mutable::CompactionJob::merge`] →
-//!   [`MutableIndex::install_compaction`] protocol, so writers stall only
-//!   for the final snapshot publish.
+//!   [`MutableIndex::install_compaction`] protocol (writers stall only
+//!   for the final snapshot publish); when the write path's drift signal
+//!   crosses [`MaintenanceConfig::drift_threshold`] the worker fires the
+//!   staged retrain on its own (with a per-shard cooldown); and in quiet
+//!   periods it re-encodes small stale-model runs into the active model
+//!   ([`MutableIndex::converge_concurrent`]) so mixed-model snapshots
+//!   converge without a full retrain. Deployments without workers drive
+//!   the same state machine via [`Collection::maintenance_tick`].
 
 use std::collections::HashSet;
 use std::path::Path;
@@ -35,7 +43,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::{CollectionConfig, IndexConfig, SearchParams};
+use crate::config::{CollectionConfig, IndexConfig, MaintenanceConfig, SearchParams};
 use crate::error::{Error, Result};
 use crate::index::builder::build_index_with_int8;
 use crate::index::mutable::{MutableIndex, MutableStats};
@@ -235,7 +243,7 @@ impl Search for CollectionSearcher<'_> {
     }
 }
 
-/// Signal block shared with one shard's background compaction worker.
+/// Signal block shared with one shard's background maintenance worker.
 #[derive(Debug)]
 struct WorkerShared {
     /// Set by mutators to request an immediate pressure check.
@@ -244,9 +252,13 @@ struct WorkerShared {
     stop: AtomicBool,
 }
 
-/// One background compaction worker (thread + signal block).
+/// One background maintenance worker (thread + signal block). The worker
+/// owns every reconfiguration duty of its shard: delta seals +
+/// sealed-segment merges (compaction pressure), drift-triggered
+/// automatic retrains, and — when the shard is otherwise quiet —
+/// model-converging compaction of small stale-model runs.
 #[derive(Debug)]
-struct CompactionWorker {
+struct MaintenanceWorker {
     shared: Arc<WorkerShared>,
     thread: Option<JoinHandle<()>>,
 }
@@ -254,7 +266,83 @@ struct CompactionWorker {
 /// How long a worker sleeps between unsolicited pressure checks.
 const WORKER_TICK: Duration = Duration::from_millis(50);
 
-fn spawn_compaction_worker(shard: Arc<MutableIndex>, shard_id: usize) -> CompactionWorker {
+/// What one scheduler pass did to a shard. The order is also the
+/// priority order: pressure relief first (cheap, bounds memory), then
+/// drift response, then opportunistic convergence in quiet periods.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaintenanceAction {
+    /// No trigger fired; the shard is in its steady state.
+    Idle,
+    /// Delta sealed and/or sealed runs merged (compaction pressure).
+    Compacted,
+    /// Drift crossed the threshold: an automatic staged retrain
+    /// installed a fresh model.
+    Retrained,
+    /// Stale-model runs were re-encoded into the active model.
+    Converged,
+}
+
+/// One pass of the maintenance state machine over one shard — the unit
+/// both the background workers and [`Collection::maintenance_tick`]
+/// execute:
+///
+/// 1. **Pressure**: a full delta is sealed and mergeable sealed runs are
+///    merged (staged, off the write path).
+/// 2. **Drift**: when the shard's write-path drift ratio crosses
+///    `cfg.drift_threshold` (EWMA warm, cooldown expired), a staged
+///    retrain runs with no operator involved.
+/// 3. **Convergence**: with no pressure and no drift, small stale-model
+///    runs are re-encoded into the active model so mixed-model snapshots
+///    converge.
+///
+/// Returns the action taken (callers loop until [`Idle`] to drain
+/// accumulated work) paired with the outcome of that action, so a
+/// failure is attributed to the duty that raised it (the worker degrades
+/// the failing duty, not the whole engine). A lost install race reports
+/// `Idle` — the state is untouched and the next pass re-evaluates from
+/// scratch.
+///
+/// [`Idle`]: MaintenanceAction::Idle
+fn maintenance_step(
+    shard: &MutableIndex,
+    cfg: &MaintenanceConfig,
+) -> (MaintenanceAction, Result<()>) {
+    // Seal a full delta (brief writer stall, O(delta)), then merge
+    // sealed segments off the write path: writers only stall again for
+    // the install's final snapshot store.
+    let (seal, merge) = shard.compaction_pressure();
+    if seal || merge {
+        let attempt = || -> Result<()> {
+            if seal {
+                shard.seal_delta()?;
+            }
+            shard.compact_concurrent()?;
+            Ok(())
+        };
+        return (MaintenanceAction::Compacted, attempt());
+    }
+    if shard.auto_retrain_due(cfg) {
+        return match shard.retrain_auto() {
+            Ok(true) => (MaintenanceAction::Retrained, Ok(())),
+            Ok(false) => (MaintenanceAction::Idle, Ok(())),
+            Err(e) => (MaintenanceAction::Retrained, Err(e)),
+        };
+    }
+    if cfg.converge_compact {
+        return match shard.converge_concurrent(cfg.converge_max_rows) {
+            Ok(true) => (MaintenanceAction::Converged, Ok(())),
+            Ok(false) => (MaintenanceAction::Idle, Ok(())),
+            Err(e) => (MaintenanceAction::Converged, Err(e)),
+        };
+    }
+    (MaintenanceAction::Idle, Ok(()))
+}
+
+fn spawn_maintenance_worker(
+    shard: Arc<MutableIndex>,
+    shard_id: usize,
+    maintenance: MaintenanceConfig,
+) -> MaintenanceWorker {
     let shared = Arc::new(WorkerShared {
         kick: Mutex::new(false),
         cv: Condvar::new(),
@@ -263,14 +351,20 @@ fn spawn_compaction_worker(shard: Arc<MutableIndex>, shard_id: usize) -> Compact
     let thread = {
         let shared = shared.clone();
         std::thread::Builder::new()
-            .name(format!("soar-compactor-{shard_id}"))
+            .name(format!("soar-maintenance-{shard_id}"))
             .spawn(move || {
-                // A deterministic failure (corrupt segment state) would
-                // otherwise re-run the full merge every tick forever; give
-                // up after a few consecutive failures instead of burning a
-                // core (writers and readers are unaffected either way).
-                let mut consecutive_failures = 0u32;
-                loop {
+                // A deterministic failure (corrupt segment state, a shard
+                // too small to retrain) would otherwise re-run the failing
+                // job every tick forever. Degrade per duty instead:
+                // repeated retrain/convergence failures drop only those
+                // optional duties, and only repeated *compaction* failures
+                // give the worker up entirely (writers and readers are
+                // unaffected either way).
+                let mut cfg = maintenance;
+                let mut compaction_failures = 0u32;
+                let mut retrain_failures = 0u32;
+                let mut converge_failures = 0u32;
+                'outer: loop {
                     {
                         let guard = shared.kick.lock().unwrap();
                         let (mut guard, _) = shared
@@ -284,43 +378,72 @@ fn spawn_compaction_worker(shard: Arc<MutableIndex>, shard_id: usize) -> Compact
                     if shared.stop.load(Ordering::Relaxed) {
                         break;
                     }
-                    // Seal a full delta (brief writer stall, O(delta)),
-                    // then merge sealed segments off the write path:
-                    // writers only stall again for the install's final
-                    // snapshot store.
-                    let (seal, merge) = shard.compaction_pressure();
-                    if !(seal || merge) {
-                        continue;
-                    }
-                    let attempt = || -> Result<()> {
-                        if seal {
-                            shard.seal_delta()?;
+                    // Drain: re-check the triggers after every completed
+                    // job instead of sleeping — a shard that goes idle
+                    // right after a write burst must not sit on pending
+                    // pressure for a full tick.
+                    loop {
+                        if shared.stop.load(Ordering::Relaxed) {
+                            break 'outer;
                         }
-                        shard.compact_concurrent()?;
-                        Ok(())
-                    };
-                    match attempt() {
-                        Ok(()) => consecutive_failures = 0,
-                        Err(e) => {
-                            consecutive_failures += 1;
-                            eprintln!(
-                                "shard {shard_id} background compaction failed \
-                                 ({consecutive_failures}x): {e}"
-                            );
-                            if consecutive_failures >= 3 {
+                        match maintenance_step(&shard, &cfg) {
+                            (MaintenanceAction::Idle, Ok(())) => break,
+                            (MaintenanceAction::Compacted, Ok(())) => compaction_failures = 0,
+                            (MaintenanceAction::Retrained, Ok(())) => retrain_failures = 0,
+                            (MaintenanceAction::Converged, Ok(())) => converge_failures = 0,
+                            (action, Err(e)) => {
+                                // Degrade only the duty that failed: a
+                                // broken converge must not cost the shard
+                                // its drift response, and vice versa.
+                                let (count, flag, name): (&mut u32, &mut bool, &str) =
+                                    match action {
+                                        MaintenanceAction::Retrained => (
+                                            &mut retrain_failures,
+                                            &mut cfg.auto_retrain,
+                                            "auto-retrain",
+                                        ),
+                                        MaintenanceAction::Converged => (
+                                            &mut converge_failures,
+                                            &mut cfg.converge_compact,
+                                            "convergence",
+                                        ),
+                                        _ => {
+                                            compaction_failures += 1;
+                                            eprintln!(
+                                                "shard {shard_id} background compaction \
+                                                 failed ({compaction_failures}x): {e}"
+                                            );
+                                            if compaction_failures >= 3 {
+                                                eprintln!(
+                                                    "shard {shard_id}: disabling background \
+                                                     maintenance after repeated failures"
+                                                );
+                                                break 'outer;
+                                            }
+                                            break;
+                                        }
+                                    };
+                                *count += 1;
                                 eprintln!(
-                                    "shard {shard_id}: disabling background compaction \
-                                     after repeated failures"
+                                    "shard {shard_id} background {name} failed \
+                                     ({count}x): {e}"
                                 );
+                                if *count >= 3 {
+                                    eprintln!(
+                                        "shard {shard_id}: disabling {name} after \
+                                         repeated failures (other duties continue)"
+                                    );
+                                    *flag = false;
+                                }
                                 break;
                             }
                         }
                     }
                 }
             })
-            .expect("spawn compaction worker")
+            .expect("spawn maintenance worker")
     };
-    CompactionWorker {
+    MaintenanceWorker {
         shared,
         thread: Some(thread),
     }
@@ -354,6 +477,34 @@ impl CollectionStats {
         self.shards.iter().map(|s| s.retrains).sum()
     }
 
+    /// Retrains fired by the maintenance engine with no operator call.
+    pub fn auto_retrains(&self) -> u64 {
+        self.shards.iter().map(|s| s.auto_retrains).sum()
+    }
+
+    /// Model-converging compactions installed across the shards.
+    pub fn converges(&self) -> u64 {
+        self.shards.iter().map(|s| s.converges).sum()
+    }
+
+    /// Rows still encoded against non-active models.
+    pub fn stale_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.stale_rows).sum()
+    }
+
+    /// Approximate bytes held by stale-model runs.
+    pub fn stale_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.stale_bytes).sum()
+    }
+
+    /// Worst per-shard drift ratio (0 when no shard has a signal).
+    pub fn max_drift_ratio(&self) -> f32 {
+        self.shards
+            .iter()
+            .map(|s| s.drift_ratio)
+            .fold(0.0f32, f32::max)
+    }
+
     pub fn max_sealed_segments(&self) -> usize {
         self.shards
             .iter()
@@ -371,7 +522,7 @@ pub struct Collection {
     engine: Arc<Engine>,
     config: CollectionConfig,
     shards: Vec<Arc<MutableIndex>>,
-    workers: Vec<CompactionWorker>,
+    workers: Vec<MaintenanceWorker>,
 }
 
 impl Collection {
@@ -534,7 +685,7 @@ impl Collection {
             shards
                 .iter()
                 .enumerate()
-                .map(|(s, shard)| spawn_compaction_worker(shard.clone(), s))
+                .map(|(s, shard)| spawn_maintenance_worker(shard.clone(), s, config.maintenance))
                 .collect()
         } else {
             Vec::new()
@@ -693,6 +844,24 @@ impl Collection {
         Ok(false)
     }
 
+    /// Run one pass of the maintenance state machine on shard `s` —
+    /// exactly what the background workers execute per wakeup: pressure
+    /// relief (seal + merge), then a drift-triggered automatic retrain,
+    /// then model-converging compaction in quiet periods. Exposed so
+    /// deployments without background workers (and deterministic tests)
+    /// can drive the engine on their own schedule; call in a loop until
+    /// it returns [`MaintenanceAction::Idle`] to drain accumulated work.
+    pub fn maintenance_tick(&self, s: usize) -> Result<MaintenanceAction> {
+        if s >= self.shards.len() {
+            return Err(Error::Config(format!(
+                "shard {s} out of range for {} shards",
+                self.shards.len()
+            )));
+        }
+        let (action, result) = maintenance_step(&self.shards[s], &self.config.maintenance);
+        result.map(|()| action)
+    }
+
     /// [`Collection::retrain_shard`] over every shard, sequentially (so
     /// at most one shard is paying retrain CPU at a time while the rest
     /// serve untouched). Returns how many shards installed a new model.
@@ -840,6 +1009,7 @@ mod tests {
                 ..Default::default()
             },
             background_compact: false,
+            maintenance: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &index_cfg(24), cfg).unwrap();
         assert_eq!(c.num_shards(), 3);
@@ -946,6 +1116,7 @@ mod tests {
                 ..Default::default()
             },
             background_compact: true,
+            maintenance: Default::default(),
         };
         let c = Collection::build(engine, &ds.data, &index_cfg(14), cfg).unwrap();
         assert!(!c.config().shard_mutable().auto_compact);

@@ -33,9 +33,13 @@
 //! * [`collection`] — the public facade: a [`Collection`] of S
 //!                    independently mutable, snapshot-served shards with
 //!                    routed writes, parallel fan-out reads
-//!                    ([`CollectionSearcher`]), per-shard background
-//!                    compaction workers, and per-shard online retraining
-//!                    ([`Collection::retrain_shard`]).
+//!                    ([`CollectionSearcher`]), per-shard online
+//!                    retraining ([`Collection::retrain_shard`]), and the
+//!                    per-shard background **maintenance engine**
+//!                    (compaction pressure + drift-triggered automatic
+//!                    retrains + model-converging compaction, one
+//!                    scheduler per shard; see
+//!                    [`Collection::maintenance_tick`]).
 //! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
 //! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
 //! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
@@ -63,9 +67,11 @@ pub mod soar;
 pub mod stats;
 
 pub use builder::{build_index, build_index_with_int8, encode_index};
-pub use collection::{Collection, CollectionSearcher, CollectionSnapshot, CollectionStats};
+pub use collection::{
+    Collection, CollectionSearcher, CollectionSnapshot, CollectionStats, MaintenanceAction,
+};
 pub use ivf::PostingList;
-pub use mutable::{CompactionJob, MutableIndex, MutableStats, RetrainJob};
+pub use mutable::{CompactionJob, ConvergeJob, MutableIndex, MutableStats, RetrainJob};
 pub use searcher::{Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher};
 pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 

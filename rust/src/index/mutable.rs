@@ -55,6 +55,20 @@
 //!   upserts land in post-capture segments (or the delta) and shadow
 //!   their retrained copies, so no write is lost; the delta builder is
 //!   rebound to the new model so subsequent writes use it.
+//!
+//! On top of these, the write path feeds the **drift signal** the
+//! maintenance engine schedules on: every upsert EWMAs its
+//! primary-assignment loss ‖x − c_primary‖² (`DRIFT_EWMA_SPAN`), and
+//! the ratio of that EWMA to the active model's recorded
+//! `QuantModel::training_loss` says how far the live distribution has
+//! moved from what the model was trained on
+//! ([`MutableIndex::drift_ratio`], reset on every retrain install). And
+//! the staged compaction gains a model-converging variant
+//! ([`MutableIndex::begin_converge`] → [`ConvergeJob::converge`] →
+//! [`MutableIndex::install_converge`]): small stale-model runs are
+//! reconstructed and re-encoded into the active model off the write
+//! path, so long-lived mixed-model snapshots converge to a single model
+//! without a full retrain.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -62,7 +76,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::MutableConfig;
+use crate::config::{MaintenanceConfig, MutableConfig};
 use crate::error::{Error, Result};
 use crate::index::ivf::PostingList;
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
@@ -95,6 +109,30 @@ pub struct MutableStats {
     /// Time since the last snapshot publish (staleness of the served
     /// view; bounded by `publish_max_delay_us` when it is set).
     pub last_publish_age: Duration,
+    /// EWMA of the per-upsert primary-assignment loss ‖x − c_primary‖²
+    /// (the drift-ratio numerator). 0 until the first upsert against the
+    /// active model.
+    pub drift_ewma: f32,
+    /// Drift ratio: `drift_ewma` over the active model's recorded
+    /// training loss. 0 when the signal is unavailable (no samples yet,
+    /// or a legacy model with no recorded training loss).
+    pub drift_ratio: f32,
+    /// Upserts that have fed the EWMA since the active model was
+    /// installed.
+    pub drift_samples: u64,
+    /// Retrains fired by the maintenance engine with no operator call
+    /// (a subset of `retrains`).
+    pub auto_retrains: u64,
+    /// Model-converging compactions installed (stale-model runs
+    /// re-encoded into the active model).
+    pub converges: u64,
+    /// Rows stored in sealed segments encoded against a non-active
+    /// model (what converging compaction / the next retrain will fold
+    /// in).
+    pub stale_rows: usize,
+    /// Approximate bytes those stale rows occupy (posting ids + PQ codes
+    /// + int8 records + id maps).
+    pub stale_bytes: usize,
 }
 
 /// Mutable builder state for the delta segment. Rows live in append-only
@@ -280,7 +318,27 @@ struct Inner {
     pending_since: Option<Instant>,
     /// When the snapshot was last published.
     last_publish: Instant,
+    /// EWMA of per-upsert primary-assignment loss against the active
+    /// model (drift-ratio numerator; reset when a retrain installs).
+    drift_ewma: f64,
+    /// Upserts that have fed `drift_ewma` since the active model was
+    /// installed.
+    drift_samples: u64,
+    /// Maintenance-engine retrains installed (subset of `retrains`).
+    auto_retrains: u64,
+    /// Model-converging compactions installed.
+    converges: u64,
+    /// When the maintenance engine last *attempted* an automatic retrain
+    /// (cooldown anchor — attempts, not installs, so a repeatedly
+    /// aborting retrain cannot hot-loop the worker).
+    last_auto_retrain: Option<Instant>,
 }
+
+/// Effective sample span of the drift EWMA (α = 2 / (SPAN + 1)): wide
+/// enough to ride out single odd rows, narrow enough that a genuine
+/// distribution shift dominates the average within a few hundred
+/// upserts.
+const DRIFT_EWMA_SPAN: f64 = 512.0;
 
 /// Publish the current writer state as an immutable snapshot.
 fn publish(cell: &SnapshotCell, inner: &mut Inner) {
@@ -498,6 +556,187 @@ impl CompactionJob {
     }
 }
 
+/// The model-converging [`CompactionJob`] variant: instead of merging
+/// each same-model run verbatim, small stale-model runs are re-encoded
+/// into the `target` (active) model, so a long-lived mixed-model
+/// snapshot converges to a single model without paying for a full
+/// retrain. Produced by [`MutableIndex::begin_converge`];
+/// [`ConvergeJob::converge`] runs the engine-assisted re-encode with no
+/// lock held, and [`MutableIndex::install_converge`] swaps the result in
+/// under the same prefix/shadow protocol as plain staged compaction.
+#[derive(Debug)]
+pub struct ConvergeJob {
+    captured: Vec<Arc<SealedSegment>>,
+    tombstones: HashSet<u32>,
+    target: Arc<QuantModel>,
+    max_rows: usize,
+}
+
+impl ConvergeJob {
+    /// Rows stored across the captured segments.
+    pub fn rows(&self) -> usize {
+        self.captured.iter().map(|s| s.len()).sum()
+    }
+
+    /// Rows stored in captured segments encoded against a non-target
+    /// model (the re-encode workload upper bound).
+    pub fn stale_rows(&self) -> usize {
+        self.captured
+            .iter()
+            .filter(|s| s.model().id() != self.target.id())
+            .map(|s| s.len())
+            .sum()
+    }
+
+    /// Phase 2 (no lock held): merge the captured segments like
+    /// [`CompactionJob::merge`], except that qualifying stale runs are
+    /// reconstructed from their highest-bitrate representation and
+    /// re-encoded + re-spilled against the target model (the only
+    /// compaction path that makes engine calls). Runs whose effective
+    /// model becomes adjacent-equal merge into one segment, so a
+    /// fully-convergeable snapshot comes back as a single target-model
+    /// segment.
+    pub fn converge(&self, engine: &Engine) -> Result<Vec<SealedSegment>> {
+        let runs = model_runs(&self.captured);
+        let keep = |seg: &SealedSegment, local: u32, g: u32| {
+            !self.tombstones.contains(&g) && !seg.shadow_bits.get(local as usize)
+        };
+        // Effective model per run after conversion decisions.
+        let eff: Vec<Arc<QuantModel>> = runs
+            .iter()
+            .map(|run| {
+                if run_converges(run, &self.target, self.max_rows) {
+                    self.target.clone()
+                } else {
+                    run[0].model().clone()
+                }
+            })
+            .collect();
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start < runs.len() {
+            let model = eff[start].clone();
+            let mut end = start + 1;
+            while end < runs.len() && eff[end].id() == model.id() {
+                end += 1;
+            }
+            let mut postings = vec![PostingList::default(); model.num_partitions()];
+            let mut global_ids: Vec<u32> = Vec::new();
+            let mut assignments: Vec<Vec<u32>> = Vec::new();
+            let mut raw_int8: Vec<i8> = Vec::new();
+            for run in &runs[start..end] {
+                if run[0].model().id() == model.id() {
+                    // Already in the group's model: codes carry over
+                    // verbatim, exactly like a plain merge.
+                    for seg in run {
+                        gather_segment_rows(
+                            seg.as_ref(),
+                            &|local, g| keep(seg, local, g),
+                            &mut postings,
+                            &mut global_ids,
+                            &mut assignments,
+                            &mut raw_int8,
+                        )?;
+                    }
+                } else {
+                    // Stale run: reconstruct the surviving rows and
+                    // re-encode + re-spill them against the target.
+                    let (gids, data) =
+                        reconstruct_live_rows(run, &self.tombstones, model.dim())?;
+                    if data.rows() == 0 {
+                        continue;
+                    }
+                    let assigns = model.assign(engine, &data)?;
+                    for i in 0..data.rows() {
+                        let row = data.row(i);
+                        let local = global_ids.len() as u32;
+                        for &p in &assigns[i] {
+                            let code = model.residual_code(row, p);
+                            postings[p as usize].push(local, &code.0);
+                        }
+                        global_ids.push(gids[i]);
+                        assignments.push(assigns[i].clone());
+                        if let Some(r8) = model.encode_int8(row) {
+                            raw_int8.extend_from_slice(&r8);
+                        }
+                    }
+                }
+            }
+            out.push(assemble_segment(
+                model,
+                postings,
+                global_ids,
+                assignments,
+                raw_int8,
+            )?);
+            start = end;
+        }
+        Ok(out)
+    }
+}
+
+/// Whether a run would be re-encoded into `target` by the converging
+/// compaction: stale, compatible, and small enough.
+fn run_converges(run: &[Arc<SealedSegment>], target: &QuantModel, max_rows: usize) -> bool {
+    let m = run[0].model();
+    m.id() != target.id()
+        && m.compatible_with(target)
+        && run.iter().map(|s| s.len()).sum::<usize>() <= max_rows
+}
+
+/// Reconstruct the live rows of `segments` (tombstone- and
+/// shadow-filtered) from their highest-bitrate stored representation:
+/// the int8 record when present, else the primary-partition PQ
+/// reconstruction (centroid + decoded residual). Shared by the staged
+/// retrain ([`RetrainJob`]) and the model-converging compaction
+/// ([`ConvergeJob`]).
+fn reconstruct_live_rows(
+    segments: &[Arc<SealedSegment>],
+    tombstones: &HashSet<u32>,
+    dim: usize,
+) -> Result<(Vec<u32>, MatrixF32)> {
+    let mut gids: Vec<u32> = Vec::new();
+    let mut data = MatrixF32::zeros(0, dim);
+    for seg in segments {
+        let idx = &seg.index;
+        // Primary-code lookup (PQ fallback path): position of each
+        // row's code in its primary partition's list.
+        let mut primary_pos: Vec<Option<usize>> = vec![None; idx.n];
+        if idx.model.int8.is_none() {
+            for (p, list) in idx.postings.iter().enumerate() {
+                for (pos, &local) in list.ids.iter().enumerate() {
+                    if idx.assignments[local as usize][0] == p as u32 {
+                        primary_pos[local as usize] = Some(pos);
+                    }
+                }
+            }
+        }
+        let cb = idx.model.pq.code_bytes();
+        for local in 0..idx.n {
+            let g = seg.global_ids[local];
+            if tombstones.contains(&g) || seg.shadow_bits.get(local) {
+                continue;
+            }
+            let row = match &idx.model.int8 {
+                Some(q8) => q8.decode(idx.int8_record(local as u32)),
+                None => {
+                    let p = idx.assignments[local][0];
+                    let pos = primary_pos[local].ok_or_else(|| {
+                        Error::Serialize(format!("row {local} missing primary code"))
+                    })?;
+                    let code = idx.postings[p as usize].code(pos, cb).to_vec();
+                    let r = idx.model.pq.decode(&crate::quant::PqCode(code));
+                    let c = idx.model.centroids.row(p as usize);
+                    r.iter().zip(c).map(|(&a, &b)| a + b).collect()
+                }
+            };
+            data.push_row(&row)?;
+            gids.push(g);
+        }
+    }
+    Ok((gids, data))
+}
+
 /// A retrain captured off the write path: phase 1 of the staged retrain
 /// ([`MutableIndex::begin_retrain`], which seals the delta first so the
 /// freshest rows inform the new model). [`RetrainJob::train`] then runs
@@ -525,47 +764,7 @@ impl RetrainJob {
     /// stored representation: the int8 record when present, else the
     /// primary-partition PQ reconstruction (centroid + decoded residual).
     fn reconstruct(&self) -> Result<(Vec<u32>, MatrixF32)> {
-        let dim = self.base_model.dim();
-        let mut gids: Vec<u32> = Vec::new();
-        let mut data = MatrixF32::zeros(0, dim);
-        for seg in &self.captured {
-            let idx = &seg.index;
-            // Primary-code lookup (PQ fallback path): position of each
-            // row's code in its primary partition's list.
-            let mut primary_pos: Vec<Option<usize>> = vec![None; idx.n];
-            if idx.model.int8.is_none() {
-                for (p, list) in idx.postings.iter().enumerate() {
-                    for (pos, &local) in list.ids.iter().enumerate() {
-                        if idx.assignments[local as usize][0] == p as u32 {
-                            primary_pos[local as usize] = Some(pos);
-                        }
-                    }
-                }
-            }
-            let cb = idx.model.pq.code_bytes();
-            for local in 0..idx.n {
-                let g = seg.global_ids[local];
-                if self.tombstones.contains(&g) || seg.shadow_bits.get(local) {
-                    continue;
-                }
-                let row = match &idx.model.int8 {
-                    Some(q8) => q8.decode(idx.int8_record(local as u32)),
-                    None => {
-                        let p = idx.assignments[local][0];
-                        let pos = primary_pos[local].ok_or_else(|| {
-                            Error::Serialize(format!("row {local} missing primary code"))
-                        })?;
-                        let code = idx.postings[p as usize].code(pos, cb).to_vec();
-                        let r = idx.model.pq.decode(&crate::quant::PqCode(code));
-                        let c = idx.model.centroids.row(p as usize);
-                        r.iter().zip(c).map(|(&a, &b)| a + b).collect()
-                    }
-                };
-                data.push_row(&row)?;
-                gids.push(g);
-            }
-        }
-        Ok((gids, data))
+        reconstruct_live_rows(&self.captured, &self.tombstones, self.base_model.dim())
     }
 
     /// Phase 2 (no lock held): reconstruct the captured live rows, train
@@ -741,6 +940,11 @@ impl MutableIndex {
             pending: 0,
             pending_since: None,
             last_publish: Instant::now(),
+            drift_ewma: 0.0,
+            drift_samples: 0,
+            auto_retrains: 0,
+            converges: 0,
+            last_auto_retrain: None,
         }));
         let cell = Arc::new(SnapshotCell::new(snapshot));
         let timer = if config.publish_max_delay_us > 0 {
@@ -811,6 +1015,32 @@ impl MutableIndex {
             )));
         }
         let assignments = model.assign(&self.engine, vectors)?;
+        // Drift signal: EWMA the primary-assignment loss ‖x − c₀‖² of
+        // every upserted row — the same quantity the active model
+        // recorded as `training_loss` over its training corpus — so the
+        // maintenance engine can see how well the live write stream
+        // still fits the model (ratio ≈ 1 ⇒ no drift).
+        let alpha = 2.0 / (DRIFT_EWMA_SPAN + 1.0);
+        for (i, assignment) in assignments.iter().enumerate() {
+            let row = vectors.row(i);
+            let c = model.centroids.row(assignment[0] as usize);
+            let mut loss = 0.0f64;
+            for (x, cj) in row.iter().zip(c) {
+                let d = (x - cj) as f64;
+                loss += d * d;
+            }
+            // A non-finite row (caller bug) must not poison the EWMA —
+            // NaN would stick until the next retrain and read as drift.
+            if !loss.is_finite() {
+                continue;
+            }
+            inner.drift_samples += 1;
+            if inner.drift_samples == 1 {
+                inner.drift_ewma = loss;
+            } else {
+                inner.drift_ewma += alpha * (loss - inner.drift_ewma);
+            }
+        }
         for (i, &id) in ids.iter().enumerate() {
             let row = vectors.row(i);
             let assignment = assignments[i].clone();
@@ -870,6 +1100,15 @@ impl MutableIndex {
 
     fn seal_delta_locked(&self, inner: &mut Inner) -> Result<bool> {
         if inner.delta.live_len() == 0 {
+            // An all-dead builder (every delta row deleted or replaced)
+            // has nothing to seal, but its dead slots still trip the
+            // `delta_full` pressure trigger. Discard them so the pressure
+            // clears — otherwise a seal-on-pressure loop (the maintenance
+            // worker's drain) would re-fire forever without progress,
+            // and the builder would pin the dead rows' memory.
+            if inner.delta.total_slots() > 0 {
+                inner.delta.reset();
+            }
             return Ok(false);
         }
         let seg = self.segment_from_delta(inner)?;
@@ -910,6 +1149,25 @@ impl MutableIndex {
     }
 
     fn stats_locked(inner: &Inner) -> MutableStats {
+        // Stale-run accounting: rows (and their approximate footprint)
+        // still encoded against a non-active model — the backlog the
+        // converging compaction / next retrain will fold in.
+        let active_id = inner.delta.model.id();
+        let mut stale_rows = 0usize;
+        let mut stale_bytes = 0usize;
+        for seg in &inner.sealed {
+            let m = seg.model();
+            if m.id() != active_id {
+                // per row: one (u32 id + PQ code) posting entry per
+                // assignment, the global-id map entry, and the int8
+                // record when present.
+                let per_row = m.assignments_per_point() * (4 + m.pq.code_bytes())
+                    + 4
+                    + if m.int8.is_some() { m.dim() } else { 0 };
+                stale_rows += seg.len();
+                stale_bytes += seg.len() * per_row;
+            }
+        }
         MutableStats {
             sealed_segments: inner.sealed.len(),
             sealed_rows: inner.sealed.iter().map(|s| s.len()).sum(),
@@ -920,7 +1178,69 @@ impl MutableIndex {
             retrains: inner.retrains,
             model_generation: inner.delta.model.generation,
             last_publish_age: inner.last_publish.elapsed(),
+            drift_ewma: inner.drift_ewma as f32,
+            drift_ratio: Self::drift_ratio_locked(inner).unwrap_or(0.0) as f32,
+            drift_samples: inner.drift_samples,
+            auto_retrains: inner.auto_retrains,
+            converges: inner.converges,
+            stale_rows,
+            stale_bytes,
         }
+    }
+
+    /// Drift ratio of the write stream against the active model, when
+    /// the signal is available (at least one sample, and a model that
+    /// recorded its training loss).
+    pub fn drift_ratio(&self) -> Option<f64> {
+        Self::drift_ratio_locked(&self.inner.lock().unwrap())
+    }
+
+    fn drift_ratio_locked(inner: &Inner) -> Option<f64> {
+        let training = inner.delta.model.training_loss? as f64;
+        if inner.drift_samples == 0 || training <= f64::EPSILON {
+            return None;
+        }
+        Some(inner.drift_ewma / training)
+    }
+
+    /// Whether the maintenance engine should fire an automatic retrain
+    /// right now: drift signal trusted (`min_drift_samples`), ratio at
+    /// or above `drift_threshold`, and the per-shard cooldown expired.
+    pub fn auto_retrain_due(&self, cfg: &MaintenanceConfig) -> bool {
+        if !cfg.auto_retrain {
+            return false;
+        }
+        let inner = self.inner.lock().unwrap();
+        if inner.drift_samples < cfg.min_drift_samples {
+            return false;
+        }
+        let ratio = match Self::drift_ratio_locked(&inner) {
+            Some(r) => r,
+            None => return false,
+        };
+        // Explicit NaN check: a poisoned ratio must never pass the gate
+        // (`NaN < threshold` is false, so a plain `<` early-return would
+        // let it through).
+        if ratio.is_nan() || ratio < cfg.drift_threshold as f64 {
+            return false;
+        }
+        match inner.last_auto_retrain {
+            Some(t) => t.elapsed() >= Duration::from_millis(cfg.retrain_cooldown_ms),
+            None => true,
+        }
+    }
+
+    /// [`MutableIndex::retrain_concurrent`] driven by the maintenance
+    /// engine: stamps the cooldown at the *attempt* (so a retrain that
+    /// keeps losing the install race cannot hot-loop the worker) and
+    /// counts the install as an automatic retrain.
+    pub fn retrain_auto(&self) -> Result<bool> {
+        self.inner.lock().unwrap().last_auto_retrain = Some(Instant::now());
+        let installed = self.retrain_concurrent()?;
+        if installed {
+            self.inner.lock().unwrap().auto_retrains += 1;
+        }
+        Ok(installed)
     }
 
     /// Record `count` mutations and publish once the group-commit window
@@ -983,10 +1303,31 @@ impl MutableIndex {
         merged: Vec<SealedSegment>,
     ) -> Result<bool> {
         let mut inner = self.inner.lock().unwrap();
-        if !capture_is_prefix(&inner, &job.captured) {
+        let fallback = job.captured[0].model().clone();
+        if !Self::install_merged_locked(&mut inner, &job.captured, merged, fallback)? {
             return Ok(false);
         }
-        let newer: Vec<Arc<SealedSegment>> = inner.sealed[job.captured.len()..].to_vec();
+        inner.compactions += 1;
+        publish(&self.cell, &mut inner);
+        Ok(true)
+    }
+
+    /// Swap `merged` in for `captured` under the staged-install protocol
+    /// (shared by plain and model-converging compaction): prefix check,
+    /// newer-segment shadowing, empty-segment fallback, dead-tombstone
+    /// purge. Returns `false` — leaving the index untouched — when the
+    /// capture was invalidated. The caller bumps its counter and
+    /// publishes.
+    fn install_merged_locked(
+        inner: &mut Inner,
+        captured: &[Arc<SealedSegment>],
+        merged: Vec<SealedSegment>,
+        fallback_model: Arc<QuantModel>,
+    ) -> Result<bool> {
+        if !capture_is_prefix(inner, captured) {
+            return Ok(false);
+        }
+        let newer: Vec<Arc<SealedSegment>> = inner.sealed[captured.len()..].to_vec();
         // Rows re-sealed after capture shadow their merged copies. The
         // merged runs hold pairwise-disjoint ids (survivors were not
         // shadowed at capture time), so they need no shadows against
@@ -1007,7 +1348,7 @@ impl MutableIndex {
         sealed.extend(newer);
         if sealed.is_empty() {
             // Everything merged away and nothing was sealed since.
-            sealed.push(Arc::new(empty_segment(job.captured[0].model().clone())?));
+            sealed.push(Arc::new(empty_segment(fallback_model)?));
         }
         // A tombstone survives only while some sealed row still carries
         // its id (rows purged by the merge no longer need masking).
@@ -1015,8 +1356,6 @@ impl MutableIndex {
             .tombstones
             .retain(|t| sealed.iter().any(|s| s.contains_global(*t)));
         inner.sealed = sealed;
-        inner.compactions += 1;
-        publish(&self.cell, &mut inner);
         Ok(true)
     }
 
@@ -1028,6 +1367,61 @@ impl MutableIndex {
         let job = self.begin_compaction();
         let merged = job.merge()?;
         self.install_compaction(&job, merged)
+    }
+
+    /// Phase 1 of the model-converging compaction (brief lock): capture
+    /// the sealed segments, tombstones, and the active model as the
+    /// convergence target. Returns `None` when there is nothing to
+    /// converge — no stale run, or every stale run is over `max_rows`
+    /// (those wait for the next full retrain) or model-incompatible.
+    pub fn begin_converge(&self, max_rows: usize) -> Option<ConvergeJob> {
+        let inner = self.inner.lock().unwrap();
+        let target = inner.delta.model.clone();
+        // Cheap convergeability probe first (Arc walks only): the common
+        // steady state is a single-model snapshot, and the worker calls
+        // this every quiet tick — the O(tombstones) capture clone must
+        // only be paid when there is actual work.
+        let convergeable = model_runs(&inner.sealed)
+            .iter()
+            .any(|run| run_converges(run, &target, max_rows));
+        if !convergeable {
+            return None;
+        }
+        Some(ConvergeJob {
+            captured: inner.sealed.clone(),
+            tombstones: inner.tombstones.clone(),
+            target,
+            max_rows,
+        })
+    }
+
+    /// Phase 3 of the model-converging compaction (brief lock): swap the
+    /// converged segments in under the staged-install protocol. Returns
+    /// `false` — leaving the index untouched — when a concurrent
+    /// compaction or retrain invalidated the capture.
+    pub fn install_converge(&self, job: &ConvergeJob, merged: Vec<SealedSegment>) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        if !Self::install_merged_locked(&mut inner, &job.captured, merged, job.target.clone())? {
+            return Ok(false);
+        }
+        inner.converges += 1;
+        publish(&self.cell, &mut inner);
+        Ok(true)
+    }
+
+    /// Run the model-converging compaction end to end: capture (brief
+    /// lock), re-encode stale runs against the active model (no lock —
+    /// writers proceed), install (brief lock). Returns whether a
+    /// converged state was installed (`false` when there was nothing to
+    /// converge within `max_rows`, or a concurrent compaction/retrain
+    /// won the race).
+    pub fn converge_concurrent(&self, max_rows: usize) -> Result<bool> {
+        let job = match self.begin_converge(max_rows) {
+            Some(j) => j,
+            None => return Ok(false),
+        };
+        let merged = job.converge(&self.engine)?;
+        self.install_converge(&job, merged)
     }
 
     /// Phase 1 of the staged retrain (brief lock): seal the delta — so
@@ -1103,6 +1497,10 @@ impl MutableIndex {
         inner.sealed = sealed;
         inner.delta.reset_with(new_model);
         inner.retrains += 1;
+        // The drift signal measured fit against the *old* model; the
+        // fresh one starts with a clean slate.
+        inner.drift_ewma = 0.0;
+        inner.drift_samples = 0;
         publish(&self.cell, &mut inner);
         Ok(true)
     }
@@ -1699,6 +2097,124 @@ mod tests {
         snap.check_invariants().unwrap();
         assert_eq!(snap.models().len(), 1);
         assert_eq!(m.active_model().generation, gen_before + 2);
+    }
+
+    #[test]
+    fn all_dead_delta_clears_seal_pressure() {
+        let ds = SyntheticConfig::glove_like(400, 16, 4, 37).generate();
+        let engine = Arc::new(Engine::cpu());
+        let cfg = IndexConfig {
+            num_partitions: 8,
+            spill: SpillMode::Soar { lambda: 1.0 },
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let m = MutableIndex::from_index(
+            idx,
+            engine,
+            MutableConfig {
+                delta_capacity: 4,
+                auto_compact: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Two upsert+delete rounds per id leave 8 dead slots and zero
+        // live rows: dead-slot growth (2× capacity) registers as seal
+        // pressure even though there is nothing to seal.
+        let mut rng = Rng::new(43);
+        for _ in 0..2 {
+            for id in 900..904u32 {
+                let v = perturbed(&mut rng, &ds.data, 0.1);
+                m.upsert(id, &v).unwrap();
+            }
+            for id in 900..904u32 {
+                assert!(m.delete(id).unwrap());
+            }
+        }
+        let (seal, _) = m.compaction_pressure();
+        assert!(seal, "dead-slot growth must register as pressure");
+        // Sealing an all-dead delta seals nothing but must discard the
+        // dead slots, so a seal-on-pressure loop (the maintenance
+        // worker's drain) makes progress instead of re-firing forever.
+        assert!(!m.seal_delta().unwrap(), "nothing live to seal");
+        let (seal, merge) = m.compaction_pressure();
+        assert!(
+            !seal && !merge,
+            "pressure must clear once the dead slots are discarded"
+        );
+        let snap = m.snapshot();
+        snap.check_invariants().unwrap();
+        assert_eq!(snap.live_count(), 400, "no live rows touched");
+    }
+
+    #[test]
+    fn drift_signal_tracks_upsert_loss_and_resets_on_retrain() {
+        let (ds, m, _) = fixture(600);
+        assert_eq!(m.stats().drift_samples, 0);
+        assert!(m.drift_ratio().is_none(), "no samples ⇒ no signal");
+        let mut rng = Rng::new(91);
+        // In-distribution upserts: loss comparable to training loss.
+        for i in 0..64u32 {
+            let v = perturbed(&mut rng, &ds.data, 0.05);
+            m.upsert(2000 + i, &v).unwrap();
+        }
+        let st = m.stats();
+        assert_eq!(st.drift_samples, 64);
+        assert!(st.drift_ewma > 0.0);
+        let ratio = m.drift_ratio().unwrap();
+        assert!(
+            ratio > 0.2 && ratio < 3.0,
+            "in-distribution upserts must read near the training loss, got {ratio}"
+        );
+        assert!((st.drift_ratio as f64 - ratio).abs() < 1e-3);
+        // Out-of-distribution upserts (random directions, no cluster
+        // structure) push the ratio up.
+        for i in 0..256u32 {
+            let mut v = vec![0.0f32; 16];
+            rng.fill_gaussian(&mut v);
+            crate::linalg::normalize(&mut v);
+            m.upsert(3000 + i, &v).unwrap();
+        }
+        let worse = m.drift_ratio().unwrap();
+        assert!(
+            worse > ratio,
+            "random rows must read as drift: {worse} vs {ratio}"
+        );
+        // The trigger honors its gates: flag, threshold, warm-up.
+        let cfg = MaintenanceConfig {
+            auto_retrain: true,
+            drift_threshold: (worse * 0.5) as f32,
+            min_drift_samples: 16,
+            retrain_cooldown_ms: 3_600_000,
+            ..Default::default()
+        };
+        assert!(m.auto_retrain_due(&cfg));
+        assert!(!m.auto_retrain_due(&MaintenanceConfig {
+            auto_retrain: false,
+            ..cfg
+        }));
+        assert!(!m.auto_retrain_due(&MaintenanceConfig {
+            drift_threshold: (worse * 10.0) as f32,
+            ..cfg
+        }));
+        assert!(!m.auto_retrain_due(&MaintenanceConfig {
+            min_drift_samples: 1_000_000,
+            ..cfg
+        }));
+        // The install counts as an auto-retrain, resets the signal, and
+        // the attempt-stamped cooldown holds.
+        assert!(m.retrain_auto().unwrap());
+        let st = m.stats();
+        assert_eq!(st.auto_retrains, 1);
+        assert_eq!(st.retrains, 1);
+        assert_eq!(st.drift_samples, 0, "install must reset the EWMA");
+        assert_eq!(st.drift_ratio, 0.0);
+        assert!(
+            !m.auto_retrain_due(&cfg),
+            "cooldown + reset must hold right after the install"
+        );
+        m.snapshot().check_invariants().unwrap();
     }
 
     #[test]

@@ -42,9 +42,13 @@ COMMANDS
                (--index accepts v1/v2 files and v3 collection dirs)
   churn        --n 20000 --dim 64 --shards 1 --ops (n/5) --clients 4
                --requests 64 --delta-cap 4096 --coalesce 1
-               --max-delay-us 0 — serve a collection while
-               upserting/deleting 20%, with per-shard background
-               compaction off the write path
+               --max-delay-us 0 --drift 0.0 — serve a collection while
+               upserting/deleting 20%, with the per-shard background
+               maintenance engine (compaction + optional --auto-retrain
+               with --drift-threshold 1.5 --cooldown-ms 60000, and
+               --converge [--converge-rows 4096] model convergence) off
+               the write path; reports drift ratio, auto-retrains, and
+               stale-run bytes per shard
   retrain      --n 8000 --dim 32 --shards 2 --drift 0.6 --k 10 --top-t 8
                — replace a fraction of the corpus with a shifted
                distribution, report recall@k before/after per-shard
@@ -75,6 +79,8 @@ const KNOWN_FLAGS: &[&str] = &[
     "index", "k", "top-t", "rerank", "clients", "requests", "max-batch",
     "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
     "ops", "delta-cap", "shards", "coalesce", "max-delay-us", "drift",
+    "auto-retrain", "drift-threshold", "cooldown-ms", "converge", "converge-rows",
+    "min-drift-samples",
 ];
 
 fn engine_from(args: &Args) -> Engine {
@@ -294,7 +300,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// churns 20%-of-corpus upserts/deletes through it (background workers
 /// sealing and merging off the write path), then compact and report.
 fn cmd_churn(args: &Args) -> Result<()> {
-    use soar_ann::config::{CollectionConfig, MutableConfig, ShardRouting};
+    use soar_ann::config::{CollectionConfig, MaintenanceConfig, MutableConfig, ShardRouting};
     use soar_ann::index::Collection;
     use soar_ann::linalg::Rng;
 
@@ -303,6 +309,7 @@ fn cmd_churn(args: &Args) -> Result<()> {
     let n = ds.n();
     let dim = ds.dim();
     let cfg = IndexConfig::for_dataset(n, spill_from(args)?);
+    let maintenance_defaults = MaintenanceConfig::default();
     let ccfg = CollectionConfig {
         num_shards: args.get_usize("shards", 1)?,
         routing: ShardRouting::Hash,
@@ -313,6 +320,23 @@ fn cmd_churn(args: &Args) -> Result<()> {
             ..Default::default()
         },
         background_compact: true,
+        maintenance: MaintenanceConfig {
+            auto_retrain: args.get_bool("auto-retrain"),
+            drift_threshold: args.get_f32("drift-threshold", maintenance_defaults.drift_threshold)?,
+            min_drift_samples: args.get_u64(
+                "min-drift-samples",
+                maintenance_defaults.min_drift_samples,
+            )?,
+            retrain_cooldown_ms: args.get_u64(
+                "cooldown-ms",
+                maintenance_defaults.retrain_cooldown_ms,
+            )?,
+            converge_compact: args.get_bool("converge"),
+            converge_max_rows: args.get_usize(
+                "converge-rows",
+                maintenance_defaults.converge_max_rows,
+            )?,
+        },
     };
     println!(
         "building {}-shard collection over {n} x {dim}…",
@@ -334,6 +358,13 @@ fn cmd_churn(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 4)?;
     let per_client = args.get_usize("requests", 64)?;
     let seed = args.get_u64("seed", 42)?;
+    // --drift f: that fraction of upserts draws from a *shifted*
+    // distribution instead of perturbing the build corpus, so the
+    // maintenance engine's drift signal (and --auto-retrain) has
+    // something to react to.
+    let drift = args.get_f32("drift", 0.0)?.clamp(0.0, 1.0);
+    let drifted = (drift > 0.0)
+        .then(|| SyntheticConfig::glove_like(n, dim, 1, seed ^ 0x5eed).generate().data);
 
     let t0 = std::time::Instant::now();
     let writer = {
@@ -345,12 +376,21 @@ fn cmd_churn(args: &Args) -> Result<()> {
             let (mut upserts, mut deletes) = (0usize, 0usize);
             for _ in 0..ops {
                 if rng.next_f32() < 0.5 {
-                    // Upsert: a perturbed copy of a random corpus row.
                     let src = rng.next_below(n as u32) as usize;
-                    let mut v = data.row(src).to_vec();
-                    for x in v.iter_mut() {
-                        *x += 0.05 * rng.next_gaussian();
-                    }
+                    let mut v = match &drifted {
+                        // Drifted upsert: a row from the shifted
+                        // distribution.
+                        Some(b) if rng.next_f32() < drift => b.row(src).to_vec(),
+                        // Steady-state upsert: a perturbed copy of a
+                        // random corpus row.
+                        _ => {
+                            let mut v = data.row(src).to_vec();
+                            for x in v.iter_mut() {
+                                *x += 0.05 * rng.next_gaussian();
+                            }
+                            v
+                        }
+                    };
                     soar_ann::linalg::normalize(&mut v);
                     collection.upsert(next_id, &v)?;
                     next_id += 1;
@@ -399,11 +439,27 @@ fn cmd_churn(args: &Args) -> Result<()> {
             sh.model_generation,
             sh.last_publish_age.as_micros()
         );
+        println!(
+            "         drift ratio {:.3} ({} upserts in EWMA), {} auto-retrain(s), \
+             {} converge(s), {} stale rows ({:.2} MB stale)",
+            sh.drift_ratio,
+            sh.drift_samples,
+            sh.auto_retrains,
+            sh.converges,
+            sh.stale_rows,
+            sh.stale_bytes as f64 / 1e6
+        );
     }
     println!(
-        "collection: {} background compaction(s), {} retrain(s) ran off the write path",
+        "collection: {} background compaction(s), {} retrain(s) ({} drift-triggered), \
+         {} model-converging compaction(s) ran off the write path; \
+         max drift ratio {:.3}, {:.2} MB in stale-model runs",
         stats.compactions(),
-        stats.retrains()
+        stats.retrains(),
+        stats.auto_retrains(),
+        stats.converges(),
+        stats.max_drift_ratio(),
+        stats.stale_bytes() as f64 / 1e6
     );
     let t0 = std::time::Instant::now();
     let after = collection.compact()?;

@@ -55,6 +55,12 @@ pub struct QuantModel {
     pub pq: ProductQuantizer,
     /// Int8 rerank quantizer (present iff `config.store_int8`).
     pub int8: Option<Int8Quantizer>,
+    /// Mean primary-assignment loss ‖x − c_primary‖² over the corpus the
+    /// model was trained on — the denominator of the maintenance engine's
+    /// drift ratio (the write path EWMAs the same quantity per upsert and
+    /// compares). `None` for models reconstructed from pre-v4 files,
+    /// which predate the field; the drift trigger stays dormant for them.
+    pub training_loss: Option<f32>,
 }
 
 impl PartialEq for QuantModel {
@@ -108,9 +114,20 @@ impl QuantModel {
             centroids,
             pq,
             int8,
+            training_loss: None,
         };
         model.id = fnv1a64(&model.to_bytes());
         Ok(model)
+    }
+
+    /// Record the training-time mean primary-assignment loss. The loss is
+    /// part of the canonical encoding, so the content id is recomputed.
+    /// Non-finite or non-positive values are dropped (they would make the
+    /// drift ratio meaningless).
+    pub fn with_training_loss(mut self, loss: f32) -> QuantModel {
+        self.training_loss = (loss.is_finite() && loss > 0.0).then_some(loss);
+        self.id = fnv1a64(&self.to_bytes());
+        self
     }
 
     /// Train a fresh model over `data`: VQ codebook (k-means), residual PQ
@@ -147,6 +164,18 @@ impl QuantModel {
         let centroids = km.centroids;
         let primary = primary_assignments(engine, data, &centroids)?;
         let residuals = primary_residuals(data, &centroids, &primary);
+        // Mean ‖x − c_primary‖² over the training corpus: the reference
+        // the write path's drift EWMA is compared against.
+        let training_loss = if residuals.rows() > 0 {
+            let mut sum = 0.0f64;
+            for i in 0..residuals.rows() {
+                let r = residuals.row(i);
+                sum += r.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            }
+            (sum / residuals.rows() as f64) as f32
+        } else {
+            0.0
+        };
         let pq = ProductQuantizer::train(&residuals, &config.pq)?;
         drop(residuals);
         let int8 = if config.store_int8 {
@@ -157,7 +186,8 @@ impl QuantModel {
         } else {
             None
         };
-        QuantModel::from_parts(generation, config.clone(), centroids, pq, int8)
+        Ok(QuantModel::from_parts(generation, config.clone(), centroids, pq, int8)?
+            .with_training_loss(training_loss))
     }
 
     /// The content-derived identity.
@@ -232,6 +262,13 @@ impl QuantModel {
             }
             None => out.push(0),
         }
+        // Optional trailing section (models encoded before the drift
+        // signal end right after the int8 block, and models without a
+        // recorded loss re-encode byte-identically to them).
+        if let Some(loss) = self.training_loss {
+            out.push(1);
+            out.extend_from_slice(&loss.to_le_bytes());
+        }
         out
     }
 
@@ -260,13 +297,34 @@ impl QuantModel {
                 return Err(Error::Serialize(format!("bad model int8 flag {other}")));
             }
         };
+        // Optional trailing training-loss section (absent in encodings
+        // written before the drift signal existed).
+        let training_loss = if r.pos == bytes.len() {
+            None
+        } else {
+            match r.u8()? {
+                1 => {
+                    let b = r.take(4)?;
+                    Some(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                }
+                other => {
+                    return Err(Error::Serialize(format!(
+                        "bad model training-loss flag {other}"
+                    )));
+                }
+            }
+        };
         if r.pos != bytes.len() {
             return Err(Error::Serialize(format!(
                 "model encoding has {} trailing bytes",
                 bytes.len() - r.pos
             )));
         }
-        QuantModel::from_parts(generation, config, centroids, pq, int8)
+        let model = QuantModel::from_parts(generation, config, centroids, pq, int8)?;
+        Ok(match training_loss {
+            Some(loss) => model.with_training_loss(loss),
+            None => model,
+        })
     }
 }
 
@@ -465,12 +523,25 @@ mod tests {
         assert_eq!(back.centroids, m.centroids);
         assert_eq!(back.pq.codebooks(), m.pq.codebooks());
         assert_eq!(back.int8, m.int8);
+        assert_eq!(back.training_loss, m.training_loss);
+        assert!(
+            m.training_loss.unwrap() > 0.0,
+            "training must record a positive mean primary loss"
+        );
         assert_eq!(back.to_bytes(), bytes, "re-encoding must be byte-stable");
         // Truncated and trailing-garbage encodings are rejected.
         assert!(QuantModel::from_bytes(&bytes[..bytes.len() - 1]).is_err());
         let mut long = bytes.clone();
         long.push(0);
         assert!(QuantModel::from_bytes(&long).is_err());
+        // An encoding written before the drift signal (no trailing
+        // training-loss section) still decodes — with no recorded loss —
+        // and re-encodes byte-identically to the legacy bytes.
+        let legacy = &bytes[..bytes.len() - 5];
+        let old = QuantModel::from_bytes(legacy).unwrap();
+        assert_eq!(old.training_loss, None);
+        assert_eq!(old.to_bytes(), legacy, "legacy re-encoding must be byte-stable");
+        assert_eq!(old.centroids, m.centroids);
     }
 
     #[test]

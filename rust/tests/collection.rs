@@ -145,6 +145,7 @@ fn v3_round_trip_across_spill_modes() {
                 ..Default::default()
             },
             background_compact: false,
+            maintenance: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let mut rng = Rng::new(300 + mi as u64);
@@ -270,6 +271,7 @@ fn shard_equivalence_full_probe_with_churn() {
                 ..Default::default()
             },
             background_compact: false,
+            maintenance: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         for op in &ops {
@@ -321,6 +323,7 @@ fn upserts_proceed_while_shard_compacts() {
             ..Default::default()
         },
         background_compact: false, // the test drives the staged merge itself
+        maintenance: Default::default(),
     };
     let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
     let mut rng = Rng::new(3);

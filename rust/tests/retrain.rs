@@ -12,7 +12,8 @@
 use std::sync::Arc;
 
 use soar_ann::config::{
-    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting, SpillMode,
+    CollectionConfig, IndexConfig, MaintenanceConfig, MutableConfig, SearchParams, ShardRouting,
+    SpillMode,
 };
 use soar_ann::data::ground_truth::ground_truth_mips;
 use soar_ann::data::synthetic::SyntheticConfig;
@@ -20,7 +21,7 @@ use soar_ann::index::serialize::{
     load_snapshot, save_index, save_snapshot, save_snapshot_versioned,
 };
 use soar_ann::index::{
-    build_index, Collection, MutableIndex, SearchScratch, SnapshotSearcher,
+    build_index, Collection, MaintenanceAction, MutableIndex, SearchScratch, SnapshotSearcher,
 };
 use soar_ann::linalg::MatrixF32;
 use soar_ann::quant::{KMeansConfig, QuantModel};
@@ -71,6 +72,7 @@ fn retrain_recovers_recall_under_distribution_shift() {
             ..Default::default()
         },
         background_compact: false, // keep the run deterministic
+        maintenance: Default::default(),
     };
     let c = Collection::build(engine.clone(), &a.data, &icfg, ccfg).unwrap();
 
@@ -136,6 +138,200 @@ fn retrain_recovers_recall_under_distribution_shift() {
     };
     let (res, _) = c.search(&survivor, &full);
     assert_eq!(res[0].id, 5000, "mid-retrain upsert must survive the install");
+}
+
+/// The maintenance engine's acceptance scenario: after an A→B
+/// distribution shift arrives through the write path, the engine —
+/// driven tick by deterministic tick, with **no operator retrain call**
+/// — fires exactly one automatic retrain, and recall recovers to the
+/// pre-drift baseline (±1.5% estimator noise across the two disjoint
+/// query workloads). Further ticks stay idle: the install reset the
+/// drift EWMA and the per-shard cooldown holds.
+#[test]
+fn maintenance_engine_auto_retrains_on_drift_without_operator() {
+    let n = 2400;
+    let a = SyntheticConfig::glove_like(n, DIM, 400, 101).generate();
+    let b = SyntheticConfig::glove_like(n, DIM, 400, 909).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 24,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let ccfg = CollectionConfig {
+        num_shards: 1, // one scheduler: the tick sequence below is the whole engine
+        routing: ShardRouting::Modulo,
+        mutable: MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false, // ticks are driven explicitly (injected clock)
+        maintenance: MaintenanceConfig {
+            auto_retrain: true,
+            drift_threshold: 1.1,
+            min_drift_samples: 256,
+            retrain_cooldown_ms: 3_600_000, // at most one fire within the test
+            ..Default::default()
+        },
+    };
+    let c = Collection::build(engine.clone(), &a.data, &icfg, ccfg).unwrap();
+    let params = SearchParams {
+        k: 10,
+        top_t: 4,
+        rerank_budget: 60,
+    };
+    let baseline = recall_of(&c, &a.queries, &a.data, &params);
+    assert!(baseline > 0.5, "pre-drift baseline too low: {baseline}");
+
+    // Steady state: no pressure, no drift signal yet → the engine idles.
+    assert_eq!(c.maintenance_tick(0).unwrap(), MaintenanceAction::Idle);
+    assert_eq!(c.stats().shards[0].drift_samples, 0);
+
+    // The A→B shift arrives through the write path (full corpus
+    // replacement), feeding the drift EWMA.
+    let ids: Vec<u32> = (0..n as u32).collect();
+    c.upsert_batch(&ids, &b.data).unwrap();
+    c.flush();
+    let st = c.stats().shards[0];
+    assert_eq!(st.drift_samples, n as u64);
+    assert!(
+        st.drift_ratio > 1.1,
+        "B rows must quantize visibly worse under the A model: ratio {}",
+        st.drift_ratio
+    );
+    let stale = recall_of(&c, &b.queries, &b.data, &params);
+    assert!(
+        stale < baseline - 0.03,
+        "drift must hurt the stale model: stale {stale} vs baseline {baseline}"
+    );
+
+    // One tick: the engine fires the staged retrain on its own.
+    assert_eq!(c.maintenance_tick(0).unwrap(), MaintenanceAction::Retrained);
+    let st = c.stats().shards[0];
+    assert_eq!(st.auto_retrains, 1);
+    assert_eq!(st.retrains, 1);
+    assert_eq!(st.model_generation, 1);
+    assert_eq!(st.drift_samples, 0, "install must reset the drift EWMA");
+
+    // …and stays quiet afterwards: EWMA reset + cooldown hold.
+    for _ in 0..3 {
+        assert_eq!(c.maintenance_tick(0).unwrap(), MaintenanceAction::Idle);
+    }
+    assert_eq!(
+        c.stats().shards[0].auto_retrains,
+        1,
+        "exactly one auto-retrain must fire"
+    );
+
+    let snap = c.snapshot();
+    snap.check_invariants().unwrap();
+    assert_eq!(snap.live_count(), n);
+    let post = recall_of(&c, &b.queries, &b.data, &params);
+    assert!(
+        post >= baseline - 0.015,
+        "post-auto-retrain recall must recover to the pre-drift baseline \
+         (±1.5% estimator noise): post {post} vs baseline {baseline}"
+    );
+    assert!(
+        post > stale + 0.03,
+        "post-auto-retrain recall must beat the stale model outright: \
+         post {post} vs stale {stale}"
+    );
+}
+
+/// Model-converging compaction: a mixed-model snapshot (old-model rows
+/// written during a retrain survive the install as their own run)
+/// converges to a single-model state through the maintenance engine's
+/// quiet-period re-encode — with no full retrain and no live-row loss.
+#[test]
+fn converging_compaction_reaches_single_model_without_retrain() {
+    let n = 1200;
+    let ds = SyntheticConfig::glove_like(n, DIM, 40, 515).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 12,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let ccfg = CollectionConfig {
+        num_shards: 1,
+        routing: ShardRouting::Modulo,
+        mutable: MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false,
+        maintenance: MaintenanceConfig {
+            converge_compact: true,
+            converge_max_rows: 4096,
+            ..Default::default()
+        },
+    };
+    let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+    let shard = c.shard(0).clone();
+
+    // Mixed-model fixture: rows upserted while a retrain is in flight
+    // survive the install as an old-model segment on top of the
+    // new-model base.
+    let job = shard.begin_retrain().unwrap();
+    let mut survivors: Vec<(u32, Vec<f32>)> = Vec::new();
+    let mut rng = soar_ann::linalg::Rng::new(33);
+    for i in 0..25u32 {
+        let mut v = ds.data.row((i as usize * 37) % n).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.15 * rng.next_gaussian();
+        }
+        soar_ann::linalg::normalize(&mut v);
+        c.upsert(10_000 + i, &v).unwrap();
+        survivors.push((10_000 + i, v));
+    }
+    let retrained = job.train(&engine).unwrap();
+    assert!(shard.install_retrain(&job, retrained).unwrap());
+
+    let snap = c.snapshot();
+    snap.check_invariants().unwrap();
+    assert_eq!(snap.models().len(), 2, "fixture must mix models");
+    let st = c.stats().shards[0];
+    assert_eq!(st.retrains, 1);
+    assert_eq!(
+        st.stale_rows, 25,
+        "the mid-retrain writes are the stale run"
+    );
+    assert!(st.stale_bytes > 0);
+    let live_before = snap.live_count();
+    assert_eq!(live_before, n + 25);
+
+    // Quiet period: no pressure, no drift → the engine re-encodes the
+    // stale run into the active model.
+    assert_eq!(c.maintenance_tick(0).unwrap(), MaintenanceAction::Converged);
+
+    let snap = c.snapshot();
+    snap.check_invariants().unwrap();
+    assert_eq!(snap.models().len(), 1, "snapshot must converge to one model");
+    let st = c.stats().shards[0];
+    assert_eq!(st.converges, 1);
+    assert_eq!(st.retrains, 1, "convergence must not run a full retrain");
+    assert_eq!(st.auto_retrains, 0);
+    assert_eq!(st.model_generation, 1, "active model is unchanged");
+    assert_eq!(st.stale_rows, 0);
+    assert_eq!(st.stale_bytes, 0);
+    assert_eq!(st.sealed_segments, 1, "converged runs merge into one segment");
+    assert_eq!(snap.live_count(), live_before, "no live-row loss");
+
+    // Every re-encoded row is still served (its own nearest neighbor
+    // under a full-probe search).
+    let params = SearchParams {
+        k: 10,
+        top_t: 12,
+        rerank_budget: 2000,
+    };
+    for (id, v) in &survivors {
+        let (res, _) = c.search(v, &params);
+        assert_eq!(res[0].id, *id, "converged row {id} must survive");
+    }
+
+    // And the engine is idle afterwards.
+    assert_eq!(c.maintenance_tick(0).unwrap(), MaintenanceAction::Idle);
 }
 
 /// Every on-disk generation must load and search identically to the

@@ -1,0 +1,535 @@
+//! `bench_gate` — the CI bench-regression gate.
+//!
+//! Diffs the bench JSON reports the CI bench job just produced
+//! (`BENCH_*.json`) against the committed baselines
+//! (`BENCH_*.baseline.json`) and fails the job when a tracked metric
+//! regresses:
+//!
+//! * throughput metrics (`*_qps`, `*_per_sec`, `speedup*`, `retention`):
+//!   fail when current < baseline by more than `--tolerance` (default
+//!   15%);
+//! * latency/time metrics (`*_ns*`, `*_us`, `*_ms`, `*_secs`, `p50`,
+//!   `p99`): fail when current > baseline by more than `--tolerance`;
+//! * recall metrics (`*recall*`): fail on any absolute drop greater
+//!   than `--recall-drop` (default 0.01) — recall is seeded and
+//!   deterministic, so the bar is much tighter than for wall-clock
+//!   metrics.
+//!
+//! Counters, shapes, and config echoes (`n`, `dim`, `quick`, …) are not
+//! gated. Metrics are matched by their path through the report, with
+//! array elements keyed by a discriminator field (`list_len`, `shards`,
+//! `segments`, `config`, `publish_coalesce`) so reordering does not
+//! misalign the diff.
+//!
+//! A baseline containing `"pending": true` is a **bootstrap** baseline:
+//! the gate reports the current numbers, passes, and asks for the
+//! refreshed baseline (uploaded as a CI artifact) to be committed —
+//! this is how a baseline is first materialized on the actual CI
+//! hardware instead of a developer laptop. `--update` rewrites the
+//! baseline files from the current reports locally.
+//!
+//! A per-metric summary table is printed to stdout and appended to
+//! `$GITHUB_STEP_SUMMARY` when that file is set (the GitHub Actions
+//! job-summary protocol).
+//!
+//! Usage:
+//!   bench_gate [--tolerance 0.15] [--recall-drop 0.01] [--update] \
+//!       <name> <baseline.json> <current.json> [<name> <b> <c> …]
+
+use std::io::Write as _;
+
+use soar_ann::util::json::Value;
+
+/// How a metric is compared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum MetricKind {
+    /// Throughput-like: higher is better, relative tolerance.
+    HigherBetter,
+    /// Latency/time-like: lower is better, relative tolerance.
+    LowerBetter,
+    /// Recall: higher is better, absolute-drop tolerance.
+    Recall,
+}
+
+/// Classify a metric by the last path segment (the leaf key). Returns
+/// `None` for numbers that are not performance metrics (counts, shapes,
+/// config echoes).
+fn classify(key: &str) -> Option<MetricKind> {
+    let k = key.to_ascii_lowercase();
+    if k.contains("recall") {
+        return Some(MetricKind::Recall);
+    }
+    if k.ends_with("_qps")
+        || k == "qps"
+        || k.starts_with("qps_")
+        || k.contains("per_sec")
+        || k.contains("speedup")
+        || k.contains("retention")
+    {
+        return Some(MetricKind::HigherBetter);
+    }
+    if k.contains("_ns")
+        || k.ends_with("_us")
+        || k.ends_with("_ms")
+        || k.ends_with("_secs")
+        || k.contains("latency")
+        || k.contains("p50")
+        || k.contains("p99")
+    {
+        return Some(MetricKind::LowerBetter);
+    }
+    None
+}
+
+/// Array elements are labeled by the first discriminator field they
+/// carry, so baseline/current rows align even if the array is reordered
+/// or grows.
+const DISCRIMINATORS: &[&str] = &[
+    "list_len",
+    "shards",
+    "segments",
+    "config",
+    "publish_coalesce",
+    "bench",
+];
+
+fn element_label(v: &Value, index: usize) -> String {
+    for d in DISCRIMINATORS {
+        if let Some(val) = v.get(d) {
+            if let Some(s) = val.as_str() {
+                return format!("{d}={s}");
+            }
+            if let Some(n) = val.as_f64() {
+                return format!("{d}={n}");
+            }
+        }
+    }
+    format!("[{index}]")
+}
+
+/// Flatten a report into `(path, leaf_key, value)` numeric leaves.
+fn flatten(v: &Value, path: &str, out: &mut Vec<(String, String, f64)>) {
+    match v {
+        Value::Num(n) => {
+            let key = path.rsplit('/').next().unwrap_or(path).to_string();
+            out.push((path.to_string(), key, *n));
+        }
+        Value::Obj(m) => {
+            for (k, child) in m {
+                let p = if path.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{path}/{k}")
+                };
+                flatten(child, &p, out);
+            }
+        }
+        Value::Arr(items) => {
+            for (i, child) in items.iter().enumerate() {
+                let label = element_label(child, i);
+                let p = if path.is_empty() {
+                    label.clone()
+                } else {
+                    format!("{path}/{label}")
+                };
+                flatten(child, &p, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// One compared metric, ready for the summary table.
+struct Row {
+    suite: String,
+    path: String,
+    kind: MetricKind,
+    baseline: f64,
+    current: f64,
+    /// Signed relative change, improvement-positive (throughput up /
+    /// latency down / recall up ⇒ positive).
+    delta: f64,
+    failed: bool,
+}
+
+impl Row {
+    fn status(&self) -> &'static str {
+        if self.failed {
+            "REGRESSED"
+        } else if self.delta > 0.0 {
+            "ok (improved)"
+        } else {
+            "ok"
+        }
+    }
+}
+
+fn compare(
+    suite: &str,
+    baseline: &Value,
+    current: &Value,
+    tolerance: f64,
+    recall_drop: f64,
+    rows: &mut Vec<Row>,
+    missing: &mut Vec<String>,
+) {
+    let mut base_leaves = Vec::new();
+    flatten(baseline, "", &mut base_leaves);
+    let mut cur_leaves = Vec::new();
+    flatten(current, "", &mut cur_leaves);
+    for (path, key, base) in &base_leaves {
+        let Some(kind) = classify(key) else { continue };
+        let Some((_, _, cur)) = cur_leaves.iter().find(|(p, _, _)| p == path) else {
+            missing.push(format!("{suite}:{path}"));
+            continue;
+        };
+        let cur = *cur;
+        let (delta, failed) = match kind {
+            MetricKind::Recall => {
+                let drop = base - cur;
+                (cur - base, drop > recall_drop)
+            }
+            MetricKind::HigherBetter => {
+                let rel = if base.abs() > f64::EPSILON {
+                    (cur - base) / base
+                } else {
+                    0.0
+                };
+                (rel, rel < -tolerance)
+            }
+            MetricKind::LowerBetter => {
+                let rel = if base.abs() > f64::EPSILON {
+                    (cur - base) / base
+                } else {
+                    0.0
+                };
+                // improvement-positive: latency going down is good
+                (-rel, rel > tolerance)
+            }
+        };
+        rows.push(Row {
+            suite: suite.to_string(),
+            path: path.clone(),
+            kind,
+            baseline: *base,
+            current: cur,
+            delta,
+            failed,
+        });
+    }
+}
+
+fn fmt_value(kind: MetricKind, v: f64) -> String {
+    match kind {
+        MetricKind::Recall => format!("{v:.4}"),
+        _ => {
+            if v.abs() >= 1000.0 {
+                format!("{v:.0}")
+            } else {
+                format!("{v:.3}")
+            }
+        }
+    }
+}
+
+fn summary_table(rows: &[Row], missing: &[String], bootstraps: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str("## Bench regression gate\n\n");
+    if !bootstraps.is_empty() {
+        out.push_str(&format!(
+            "⚠️ bootstrap baselines (no comparison run): {} — commit the \
+             `bench-baselines` artifact from this run to arm the gate.\n\n",
+            bootstraps.join(", ")
+        ));
+    }
+    if rows.is_empty() && bootstraps.is_empty() {
+        out.push_str("no tracked metrics found.\n");
+        return out;
+    }
+    if !rows.is_empty() {
+        out.push_str("| suite | metric | baseline | current | Δ | status |\n");
+        out.push_str("|---|---|---:|---:|---:|---|\n");
+        for r in rows {
+            out.push_str(&format!(
+                "| {} | `{}` | {} | {} | {:+.1}% | {} |\n",
+                r.suite,
+                r.path,
+                fmt_value(r.kind, r.baseline),
+                fmt_value(r.kind, r.current),
+                r.delta * 100.0,
+                r.status()
+            ));
+        }
+    }
+    if !missing.is_empty() {
+        out.push_str(&format!(
+            "\n❌ metrics in the baseline but absent from the current report \
+             (renamed bench? refresh the baseline explicitly — a vanished \
+             metric must not silently disarm its gate): {}\n",
+            missing.join(", ")
+        ));
+    }
+    out
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_gate [--tolerance 0.15] [--recall-drop 0.01] [--update] \
+         <name> <baseline.json> <current.json> [<name> <baseline> <current> ...]"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut tolerance = 0.15f64;
+    let mut recall_drop = 0.01f64;
+    let mut update = false;
+    let mut triples: Vec<String> = Vec::new();
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance" => {
+                tolerance = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage());
+            }
+            "--recall-drop" => {
+                recall_drop = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage());
+            }
+            "--update" => update = true,
+            _ => triples.push(a),
+        }
+    }
+    if triples.is_empty() || triples.len() % 3 != 0 {
+        usage();
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut missing: Vec<String> = Vec::new();
+    let mut bootstraps: Vec<String> = Vec::new();
+    let mut hard_error = false;
+    for chunk in triples.chunks(3) {
+        let (suite, base_path, cur_path) = (&chunk[0], &chunk[1], &chunk[2]);
+        let current = match std::fs::read_to_string(cur_path).map_err(|e| e.to_string()) {
+            Ok(text) => match Value::parse(&text) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{suite}: cannot parse current report {cur_path}: {e}");
+                    hard_error = true;
+                    continue;
+                }
+            },
+            Err(e) => {
+                eprintln!("{suite}: cannot read current report {cur_path}: {e}");
+                hard_error = true;
+                continue;
+            }
+        };
+        if update {
+            if let Err(e) = std::fs::write(base_path, current.to_json_pretty()) {
+                eprintln!("{suite}: cannot update baseline {base_path}: {e}");
+                hard_error = true;
+            } else {
+                println!("{suite}: baseline {base_path} updated from {cur_path}");
+            }
+            continue;
+        }
+        let baseline = match std::fs::read_to_string(base_path).map_err(|e| e.to_string()) {
+            Ok(text) => match Value::parse(&text) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{suite}: cannot parse baseline {base_path}: {e}");
+                    hard_error = true;
+                    continue;
+                }
+            },
+            Err(e) => {
+                eprintln!("{suite}: cannot read baseline {base_path}: {e}");
+                hard_error = true;
+                continue;
+            }
+        };
+        if baseline.get("pending").and_then(|v| v.as_bool()) == Some(true) {
+            bootstraps.push(suite.clone());
+            continue;
+        }
+        compare(
+            suite,
+            &baseline,
+            &current,
+            tolerance,
+            recall_drop,
+            &mut rows,
+            &mut missing,
+        );
+    }
+    if update {
+        std::process::exit(if hard_error { 1 } else { 0 });
+    }
+
+    let table = summary_table(&rows, &missing, &bootstraps);
+    println!("{table}");
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        if let Ok(mut f) = std::fs::OpenOptions::new().append(true).create(true).open(&path) {
+            let _ = writeln!(f, "{table}");
+        }
+    }
+
+    let regressed: Vec<&Row> = rows.iter().filter(|r| r.failed).collect();
+    if !regressed.is_empty() {
+        eprintln!("bench gate FAILED: {} metric(s) regressed", regressed.len());
+        for r in &regressed {
+            eprintln!(
+                "  {}:{} {} → {} ({:+.1}%)",
+                r.suite,
+                r.path,
+                fmt_value(r.kind, r.baseline),
+                fmt_value(r.kind, r.current),
+                r.delta * 100.0
+            );
+        }
+        std::process::exit(1);
+    }
+    // A gated metric that vanished from the current report is a failure
+    // too: renaming or dropping a bench must come with an explicit
+    // baseline refresh, not a silently disarmed gate.
+    if !missing.is_empty() {
+        eprintln!(
+            "bench gate FAILED: {} baseline metric(s) missing from the current \
+             report: {}",
+            missing.len(),
+            missing.join(", ")
+        );
+        std::process::exit(1);
+    }
+    if hard_error {
+        std::process::exit(1);
+    }
+    println!(
+        "bench gate passed: {} metric(s) within tolerance ({} bootstrap suite(s))",
+        rows.len(),
+        bootstraps.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_covers_the_report_vocabulary() {
+        assert_eq!(classify("search_qps"), Some(MetricKind::HigherBetter));
+        assert_eq!(classify("batch_qps"), Some(MetricKind::HigherBetter));
+        assert_eq!(classify("qps_idle"), Some(MetricKind::HigherBetter));
+        assert_eq!(classify("qps_retention"), Some(MetricKind::HigherBetter));
+        assert_eq!(
+            classify("blocked_points_per_sec"),
+            Some(MetricKind::HigherBetter)
+        );
+        assert_eq!(
+            classify("speedup_blocked_vs_scalar"),
+            Some(MetricKind::HigherBetter)
+        );
+        assert_eq!(
+            classify("scalar_ns_per_candidate"),
+            Some(MetricKind::LowerBetter)
+        );
+        assert_eq!(classify("upsert_p50_us"), Some(MetricKind::LowerBetter));
+        assert_eq!(classify("upsert_p99_us"), Some(MetricKind::LowerBetter));
+        assert_eq!(classify("median_ns"), Some(MetricKind::LowerBetter));
+        assert_eq!(classify("retrain_secs"), Some(MetricKind::LowerBetter));
+        assert_eq!(
+            classify("auto_drift_to_install_secs"),
+            Some(MetricKind::LowerBetter)
+        );
+        assert_eq!(classify("recall_after_retrain"), Some(MetricKind::Recall));
+        assert_eq!(classify("auto_recall_recovered"), Some(MetricKind::Recall));
+        // Not gated: counts, shapes, config echoes.
+        assert_eq!(classify("n"), None);
+        assert_eq!(classify("dim"), None);
+        assert_eq!(classify("rows"), None);
+        assert_eq!(classify("auto_retrains"), None);
+        assert_eq!(classify("background_retrains"), None);
+        assert_eq!(classify("search_iters"), None);
+        assert_eq!(classify("upsert_ops"), None);
+    }
+
+    fn report(qps: f64, p99: f64, recall: f64) -> Value {
+        Value::parse(&format!(
+            "{{\"bench\":\"t\",\"n\":100,\"per_shard\":[{{\"shards\":1,\
+             \"search_qps\":{qps},\"upsert_p99_us\":{p99}}}],\
+             \"recall_after_retrain\":{recall}}}"
+        ))
+        .unwrap()
+    }
+
+    fn run_compare(base: &Value, cur: &Value) -> (Vec<Row>, Vec<String>) {
+        let mut rows = Vec::new();
+        let mut missing = Vec::new();
+        compare("t", base, cur, 0.15, 0.01, &mut rows, &mut missing);
+        (rows, missing)
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_regressions_fail() {
+        let base = report(1000.0, 50.0, 0.90);
+        // 10% QPS dip, 10% latency rise, recall drop of 0.005: all inside.
+        let ok = report(900.0, 55.0, 0.895);
+        let (rows, missing) = run_compare(&base, &ok);
+        assert!(missing.is_empty());
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| !r.failed), "within-tolerance must pass");
+        // 20% QPS regression fails; others keep passing.
+        let qps_bad = report(800.0, 50.0, 0.90);
+        let (rows, _) = run_compare(&base, &qps_bad);
+        assert_eq!(rows.iter().filter(|r| r.failed).count(), 1);
+        assert!(rows.iter().any(|r| r.failed && r.path.contains("search_qps")));
+        // 20% latency regression fails.
+        let lat_bad = report(1000.0, 60.0, 0.90);
+        let (rows, _) = run_compare(&base, &lat_bad);
+        assert!(rows.iter().any(|r| r.failed && r.path.contains("p99")));
+        // recall drop of 0.02 fails even though it is < 15% relative.
+        let recall_bad = report(1000.0, 50.0, 0.88);
+        let (rows, _) = run_compare(&base, &recall_bad);
+        assert!(rows.iter().any(|r| r.failed && r.path.contains("recall")));
+        // Improvements never fail.
+        let better = report(2000.0, 10.0, 0.99);
+        let (rows, _) = run_compare(&base, &better);
+        assert!(rows.iter().all(|r| !r.failed));
+        assert!(rows.iter().all(|r| r.delta > 0.0));
+    }
+
+    #[test]
+    fn array_rows_align_by_discriminator_and_missing_is_reported() {
+        let base = Value::parse(
+            "{\"per_shard\":[{\"shards\":1,\"search_qps\":1000},\
+             {\"shards\":4,\"search_qps\":3000}]}",
+        )
+        .unwrap();
+        // Reordered array + one shard count gone.
+        let cur = Value::parse("{\"per_shard\":[{\"shards\":4,\"search_qps\":2950}]}").unwrap();
+        let (rows, missing) = run_compare(&base, &cur);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].path.contains("shards=4"));
+        assert!(!rows[0].failed, "2950 vs 3000 is within 15%");
+        assert_eq!(missing.len(), 1);
+        assert!(missing[0].contains("shards=1"));
+    }
+
+    #[test]
+    fn summary_table_mentions_every_row() {
+        let base = report(1000.0, 50.0, 0.90);
+        let cur = report(700.0, 50.0, 0.90);
+        let (rows, missing) = run_compare(&base, &cur);
+        let table = summary_table(&rows, &missing, &["hotpath".to_string()]);
+        assert!(table.contains("search_qps"));
+        assert!(table.contains("REGRESSED"));
+        assert!(table.contains("bootstrap"));
+        assert!(table.contains("| suite | metric |"));
+    }
+}
