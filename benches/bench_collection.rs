@@ -18,7 +18,13 @@ use soar_ann::data::Dataset;
 use soar_ann::index::{Collection, CollectionSearcher, Search};
 use soar_ann::linalg::Rng;
 use soar_ann::runtime::Engine;
+use soar_ann::util::alloc::CountingAllocator;
 use soar_ann::util::json::Value;
+
+// Counting allocator so the report can pin `allocs_per_query` at zero
+// for the steady-state fan-out.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
 
 fn percentile_us(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
@@ -95,14 +101,35 @@ fn main() {
         let snap = c.snapshot();
         let searcher = CollectionSearcher::new(&snap, &engine);
         let mut scratch = searcher.new_scratch();
+        let mut results = Vec::new();
+        let mut lat_us: Vec<f64> = Vec::with_capacity(search_iters);
+        // Warm the pooled per-shard contexts before timing.
+        for i in 0..8 {
+            searcher.search_into(ds.queries.row(i % ds.num_queries()), &params, &mut scratch, &mut results);
+        }
         let t0 = Instant::now();
         for i in 0..search_iters {
             let q = ds.queries.row(i % ds.num_queries());
-            let (res, _) = searcher.search(q, &params, &mut scratch);
-            assert!(!res.is_empty());
+            let tq = Instant::now();
+            searcher.search_into(q, &params, &mut scratch, &mut results);
+            lat_us.push(tq.elapsed().as_nanos() as f64 / 1e3);
+            assert!(!results.is_empty());
         }
         let search_secs = t0.elapsed().as_secs_f64();
         let search_qps = search_iters as f64 / search_secs;
+        lat_us.sort_by(f64::total_cmp);
+        let search_p50 = percentile_us(&lat_us, 0.50);
+
+        // Steady-state allocator calls per query; the bench-gate
+        // baseline pins this at zero.
+        let alloc_iters = 100u64;
+        let before = CountingAllocator::allocations();
+        for i in 0..alloc_iters as usize {
+            let q = ds.queries.row(i % ds.num_queries());
+            searcher.search_into(q, &params, &mut scratch, &mut results);
+        }
+        let allocs_per_query =
+            (CountingAllocator::allocations() - before) as f64 / alloc_iters as f64;
 
         // --- batched fan-out throughput ------------------------------
         let t0 = Instant::now();
@@ -119,11 +146,13 @@ fn main() {
         let p99 = percentile_us(&lat, 0.99);
 
         println!(
-            "bench collection/shards={shards} search {search_qps:>8.0} qps | batch {batch_qps:>8.0} qps | upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
+            "bench collection/shards={shards} search {search_qps:>8.0} qps (p50 {search_p50:>6.1}µs, {allocs_per_query:.1} allocs/q) | batch {batch_qps:>8.0} qps | upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
         );
         per_shard_reports.push(Value::obj(vec![
             ("shards", Value::num(shards as f64)),
             ("search_qps", Value::num(search_qps)),
+            ("single_query_p50_us", Value::num(search_p50)),
+            ("allocs_per_query", Value::num(allocs_per_query)),
             ("batch_qps", Value::num(batch_qps)),
             ("upsert_p50_us", Value::num(p50)),
             ("upsert_p99_us", Value::num(p99)),

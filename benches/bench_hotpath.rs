@@ -17,8 +17,14 @@ use soar_ann::linalg::{dot, MatrixF32, Rng};
 use soar_ann::quant::lut16::{self, KernelKind};
 use soar_ann::quant::{BlockedCodes, QueryLut};
 use soar_ann::runtime::{default_artifact_dir, Engine};
+use soar_ann::util::alloc::CountingAllocator;
 use soar_ann::util::bench::{black_box, Bencher};
 use soar_ann::util::json::Value;
+
+// Counting allocator so the report can pin `allocs_per_query` at zero —
+// a relaxed fetch_add per allocator call, negligible next to the scan.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
 
 fn random(n: usize, d: usize, seed: u64) -> MatrixF32 {
     let mut rng = Rng::new(seed);
@@ -172,9 +178,10 @@ fn main() {
         });
     }
 
-    // -- full single-query search ----------------------------------------
+    // -- full single-query search (pooled zero-alloc path) ----------------
     let searcher = Searcher::new(&index, &engine);
     let mut scratch = SearchScratch::new(&index);
+    let mut results = Vec::new();
     let mut search_medians: Vec<Value> = Vec::new();
     for (tag, params) in [
         ("t4", SearchParams { k: 10, top_t: 4, rerank_budget: 100 }),
@@ -182,11 +189,21 @@ fn main() {
         ("t16", SearchParams { k: 10, top_t: 16, rerank_budget: 400 }),
     ] {
         let meas = b.run(&format!("search/single/{tag}"), || {
-            black_box(searcher.search(black_box(&q), &params, &mut scratch));
+            black_box(searcher.search_into(black_box(&q), &params, &mut scratch, &mut results));
         });
+        // Steady-state allocator calls per query; the bench-gate baseline
+        // pins this at zero (the scratch is warm after the timed run).
+        let alloc_iters = 100u64;
+        let before = CountingAllocator::allocations();
+        for _ in 0..alloc_iters {
+            searcher.search_into(&q, &params, &mut scratch, &mut results);
+        }
+        let allocs = (CountingAllocator::allocations() - before) as f64 / alloc_iters as f64;
         search_medians.push(Value::obj(vec![
             ("config", Value::str(tag)),
             ("median_ns", Value::num(meas.median_ns())),
+            ("single_query_p50_us", Value::num(meas.median_ns() / 1e3)),
+            ("allocs_per_query", Value::num(allocs)),
         ]));
     }
 

@@ -1,0 +1,37 @@
+//! Build probe for the AVX-512 LUT16 kernel.
+//!
+//! The `_mm512_permutexvar_epi8` (VPERMB) family of intrinsics stabilized in
+//! Rust 1.89, but the crate's MSRV is 1.74. Rather than raise the floor for
+//! one optional kernel, we probe the compiler version here and emit a custom
+//! `soar_avx512` cfg when the toolchain can compile it. Runtime CPU detection
+//! (`is_x86_feature_detected!`) still gates actual dispatch — this cfg only
+//! decides whether the kernel is compiled in at all.
+
+use std::env;
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = env::var_os("RUSTC").unwrap_or_else(|| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-07-01)" — second whitespace field is the triple.
+    let version = text.split_whitespace().nth(1)?;
+    let minor = version.split('.').nth(1)?;
+    minor.parse().ok()
+}
+
+fn main() {
+    // Declare the cfg so `-D warnings` + check-cfg builds stay clean even
+    // when the cfg is never set.
+    println!("cargo:rustc-check-cfg=cfg(soar_avx512)");
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+
+    let on_x86_64 = env::var("CARGO_CFG_TARGET_ARCH").as_deref() == Ok("x86_64");
+    if on_x86_64 && rustc_minor().is_some_and(|m| m >= 89) {
+        println!("cargo:rustc-cfg=soar_avx512");
+    }
+}

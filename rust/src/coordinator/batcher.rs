@@ -9,6 +9,14 @@
 //! * when the *first* request in it has waited `max_wait_us` since the
 //!   batch opened.
 //!
+//! The serving stack layers *adaptive admission* on top
+//! ([`collect_batch_adaptive`]): when a worker is idle there is nothing
+//! to amortize against, so the batch is dispatched immediately (taking
+//! any already-queued backlog without waiting); the `max_wait_us` delay
+//! is only paid when every worker is busy and waiting actually buys
+//! amortization. Low-load latency is thus the search cost itself, not
+//! search + the batching window.
+//!
 //! Built on `std::sync::mpsc` (this repo's offline vendor set has no
 //! async runtime); the serving stack in `server.rs` runs the loop on a
 //! dedicated thread.
@@ -66,6 +74,37 @@ pub fn collect_batch_with_first(
             Ok(req) => batch.push(req),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break, // flush remainder
+        }
+    }
+    batch
+}
+
+/// Adaptive admission: assemble a batch around `first`, waiting only
+/// when it pays.
+///
+/// * `busy == false` (an idle worker exists): dispatch now — take the
+///   already-queued backlog via `try_recv` up to `max_batch`, but never
+///   wait. Queueing delay would be pure latency with no amortization
+///   gain.
+/// * `busy == true` (all workers occupied): fall back to the deadline
+///   policy of [`collect_batch_with_first`] — the batch cannot start
+///   sooner than a worker frees up anyway, so the wait is (partially)
+///   hidden behind the in-flight batch.
+pub fn collect_batch_adaptive(
+    first: QueryRequest,
+    rx: &Receiver<QueryRequest>,
+    max_batch: usize,
+    max_wait: Duration,
+    busy: bool,
+) -> Vec<QueryRequest> {
+    if busy {
+        return collect_batch_with_first(first, rx, max_batch, max_wait);
+    }
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(req) => batch.push(req),
+            Err(_) => break,
         }
     }
     batch
@@ -136,6 +175,53 @@ mod tests {
         let batch = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
         let vals: Vec<f32> = batch.iter().map(|r| r.query[0]).collect();
         assert_eq!(vals, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn idle_dispatch_skips_the_wait() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _keep) = req(1.0);
+        tx.send(r).unwrap();
+        let first = rx.recv().unwrap();
+        let start = Instant::now();
+        let batch = collect_batch_adaptive(first, &rx, 64, Duration::from_secs(5), false);
+        assert_eq!(batch.len(), 1);
+        assert!(
+            start.elapsed() < Duration::from_secs(1),
+            "idle dispatch must not pay the batching window"
+        );
+    }
+
+    #[test]
+    fn idle_dispatch_drains_queued_backlog() {
+        let (tx, rx) = mpsc::channel();
+        let mut keeps = Vec::new();
+        for i in 0..5 {
+            let (r, keep) = req(i as f32);
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let first = rx.recv().unwrap();
+        let batch = collect_batch_adaptive(first, &rx, 3, Duration::from_secs(5), false);
+        // Backlog joins up to max_batch even on the no-wait path.
+        assert_eq!(batch.len(), 3);
+        let vals: Vec<f32> = batch.iter().map(|r| r.query[0]).collect();
+        assert_eq!(vals, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn busy_dispatch_accumulates_until_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _keep) = req(1.0);
+        tx.send(r).unwrap();
+        let first = rx.recv().unwrap();
+        let start = Instant::now();
+        let batch = collect_batch_adaptive(first, &rx, 64, Duration::from_millis(20), true);
+        assert_eq!(batch.len(), 1);
+        assert!(
+            start.elapsed() >= Duration::from_millis(15),
+            "busy dispatch keeps the deadline policy"
+        );
     }
 
     #[test]

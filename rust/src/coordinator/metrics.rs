@@ -91,6 +91,12 @@ pub struct ServeMetrics {
     batches: AtomicU64,
     batch_size_sum: AtomicU64,
     rejected: AtomicU64,
+    /// Batches dispatched without paying the batching window (a worker
+    /// was idle — adaptive admission).
+    immediate_batches: AtomicU64,
+    /// Batches that accumulated under the `max_wait_us` deadline (all
+    /// workers were busy).
+    waited_batches: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     started: Instant,
 }
@@ -102,6 +108,8 @@ impl Default for ServeMetrics {
             batches: AtomicU64::new(0),
             batch_size_sum: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            immediate_batches: AtomicU64::new(0),
+            waited_batches: AtomicU64::new(0),
             latency: Mutex::new(LatencyHistogram::default()),
             started: Instant::now(),
         }
@@ -124,6 +132,17 @@ impl ServeMetrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record which admission path a batch took at dispatch time:
+    /// `waited == false` means an idle worker let it skip the batching
+    /// window entirely.
+    pub fn record_admission(&self, waited: bool) {
+        if waited {
+            self.waited_batches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.immediate_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let h = self.latency.lock().unwrap();
         let queries = self.queries.load(Ordering::Relaxed);
@@ -138,6 +157,8 @@ impl ServeMetrics {
             } else {
                 self.batch_size_sum.load(Ordering::Relaxed) as f64 / batches as f64
             },
+            immediate_batches: self.immediate_batches.load(Ordering::Relaxed),
+            waited_batches: self.waited_batches.load(Ordering::Relaxed),
             qps: if elapsed > 0.0 {
                 queries as f64 / elapsed
             } else {
@@ -157,6 +178,8 @@ pub struct MetricsSnapshot {
     pub queries: u64,
     pub batches: u64,
     pub rejected: u64,
+    pub immediate_batches: u64,
+    pub waited_batches: u64,
     pub mean_batch: f64,
     pub qps: f64,
     pub mean_us: f64,
@@ -211,10 +234,14 @@ mod tests {
         m.record_batch(3, &[100, 200, 300]);
         m.record_batch(1, &[50]);
         m.record_rejected();
+        m.record_admission(true);
+        m.record_admission(false);
         let s = m.snapshot();
         assert_eq!(s.queries, 4);
         assert_eq!(s.batches, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.immediate_batches, 1);
+        assert_eq!(s.waited_batches, 1);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
         assert!(s.mean_us > 0.0);
         assert!(s.qps > 0.0);

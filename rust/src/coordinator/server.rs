@@ -2,8 +2,14 @@
 //!
 //! Topology: callers hold a cheap cloneable [`ServeHandle`]; requests flow
 //! through a bounded mpsc into a batcher thread that forms batches
-//! (`collect_batch`) and dispatches them to a pool of worker threads
-//! running the parallel fan-out `CollectionSearcher::search_batch`.
+//! (`collect_batch_adaptive`) and dispatches them to a pool of worker
+//! threads running the parallel fan-out
+//! `CollectionSearcher::search_batch`. Admission is adaptive: an
+//! in-flight batch counter shared with the workers tells the batcher
+//! whether anyone is idle — if so the batch goes out immediately (plus
+//! whatever backlog already queued), and the `max_wait_us` accumulation
+//! window is only paid when all workers are busy and the wait hides
+//! behind running work.
 //! Bounded channels give backpressure end-to-end: when workers fall
 //! behind, `try_send` fails and callers see `Error::Coordinator` instead
 //! of unbounded queue growth.
@@ -18,14 +24,14 @@
 //! in-flight queries: they finish on the snapshots they started with. A
 //! single-shard engine behaves exactly like the pre-collection stack.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::{SearchParams, ServeConfig};
-use crate::coordinator::batcher::{collect_batch_with_first, QueryRequest};
+use crate::coordinator::batcher::{collect_batch_adaptive, QueryRequest};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::error::{Error, Result};
 use crate::index::{
@@ -115,13 +121,21 @@ impl ServeEngine {
         let brx = Arc::new(Mutex::new(brx));
 
         let stop = Arc::new(AtomicBool::new(false));
+        // Batches dispatched but not yet finished by a worker; the
+        // batcher reads it to decide whether waiting for more requests
+        // would hide behind running work (all workers busy) or just add
+        // latency (someone is idle).
+        let in_flight = Arc::new(AtomicUsize::new(0));
         let mut threads = Vec::new();
         // Batcher thread: polls intake with a short timeout so it can
         // observe `stop` even while client handles keep the channel open.
         {
             let max_batch = config.max_batch.max(1);
             let wait = Duration::from_micros(config.max_wait_us);
+            let workers = config.workers.max(1);
             let stop = stop.clone();
+            let in_flight = in_flight.clone();
+            let metrics = metrics.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("soar-batcher".into())
@@ -131,8 +145,11 @@ impl ServeEngine {
                         }
                         match rx.recv_timeout(Duration::from_millis(20)) {
                             Ok(first) => {
+                                let busy = in_flight.load(Ordering::Relaxed) >= workers;
                                 let batch =
-                                    collect_batch_with_first(first, &rx, max_batch, wait);
+                                    collect_batch_adaptive(first, &rx, max_batch, wait, busy);
+                                metrics.record_admission(busy);
+                                in_flight.fetch_add(1, Ordering::Relaxed);
                                 if btx.send(batch).is_err() {
                                     break; // workers gone
                                 }
@@ -152,6 +169,7 @@ impl ServeEngine {
             let cells = cells.clone();
             let engine = engine.clone();
             let metrics = metrics.clone();
+            let in_flight = in_flight.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("soar-worker-{w}"))
@@ -165,7 +183,8 @@ impl ServeEngine {
                                 let snapshot = CollectionSnapshot {
                                     shards: cells.iter().map(|c| c.load()).collect(),
                                 };
-                                run_batch(&snapshot, &engine, &params, batch, &metrics)
+                                run_batch(&snapshot, &engine, &params, batch, &metrics);
+                                in_flight.fetch_sub(1, Ordering::Relaxed);
                             }
                             Err(_) => break, // batcher shut down
                         }
@@ -459,6 +478,35 @@ mod tests {
         assert_eq!(snap.queries, 64);
         // concurrency must actually produce multi-query batches
         assert!(snap.mean_batch > 1.0, "mean batch {}", snap.mean_batch);
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_queries_skip_the_batching_window() {
+        let (ds, idx, engine) = serve_fixture();
+        // A batching window far larger than any search: the old
+        // always-wait policy would pay 500ms per sequential query.
+        let config = ServeConfig {
+            max_batch: 64,
+            max_wait_us: 500_000,
+            workers: 2,
+            queue_depth: 64,
+        };
+        let server = ServeEngine::start(idx, engine, SearchParams::default(), config);
+        let handle = server.handle();
+        let start = Instant::now();
+        for qi in 0..4 {
+            handle.search(ds.queries.row(qi).to_vec()).unwrap();
+        }
+        let elapsed = start.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(400),
+            "4 idle queries took {elapsed:?}; adaptive admission should not pay the window"
+        );
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.queries, 4);
+        assert_eq!(snap.immediate_batches, 4, "all dispatches had an idle worker");
+        assert_eq!(snap.waited_batches, 0);
         server.shutdown();
     }
 

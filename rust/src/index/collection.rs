@@ -113,10 +113,26 @@ impl CollectionSnapshot {
 pub struct CollectionSearcher<'a> {
     pub snapshot: &'a CollectionSnapshot,
     pub engine: &'a Engine,
-    /// Lazily built per-shard scratches, taken out for the duration of a
+    /// Lazily built fan-out state (per-shard scratches and result
+    /// buffers plus the merge heap), taken out for the duration of a
     /// fan-out and returned afterwards (uncontended lock for the usual
-    /// one-caller-per-searcher pattern).
-    fan_out_scratches: Mutex<Option<Vec<SearchScratch>>>,
+    /// one-caller-per-searcher pattern). Pooling the whole state — not
+    /// just the scratches — is what makes repeated single-query fan-outs
+    /// allocation-free after the first query.
+    fan_out_pool: Mutex<Option<FanOutPool>>,
+}
+
+/// Per-shard fan-out context: everything one shard's scan writes into.
+struct ShardCtx {
+    scratch: SearchScratch,
+    results: Vec<Scored>,
+    stats: SearchStats,
+}
+
+/// Pooled state for the parallel fan-out path.
+struct FanOutPool {
+    shards: Vec<ShardCtx>,
+    merged: TopK,
 }
 
 impl<'a> CollectionSearcher<'a> {
@@ -124,7 +140,7 @@ impl<'a> CollectionSearcher<'a> {
         CollectionSearcher {
             snapshot,
             engine,
-            fan_out_scratches: Mutex::new(None),
+            fan_out_pool: Mutex::new(None),
         }
     }
 
@@ -149,32 +165,53 @@ impl<'a> CollectionSearcher<'a> {
     /// of [`Search::search`], also used by `Collection::search` so the
     /// multi-shard convenience path never allocates an unused scratch.
     fn fan_out(&self, q: &[f32], params: &SearchParams) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.fan_out_into(q, params, &mut out);
+        (out, stats)
+    }
+
+    /// Allocation-free parallel fan-out: per-shard scans run on the
+    /// persistent worker pool into pooled per-shard contexts, and the
+    /// global top-k merge reuses a pooled heap. Steady state performs
+    /// zero allocator calls.
+    fn fan_out_into(&self, q: &[f32], params: &SearchParams, out: &mut Vec<Scored>) -> SearchStats {
         let shards = &self.snapshot.shards;
-        let pooled = self.fan_out_scratches.lock().unwrap().take();
-        let scratches = match pooled {
-            Some(v) if v.len() == shards.len() => v,
-            _ => shards
-                .iter()
-                .map(|sn| SearchScratch::for_snapshot(sn))
-                .collect(),
+        let pooled = self.fan_out_pool.lock().unwrap().take();
+        let mut pool = match pooled {
+            Some(p) if p.shards.len() == shards.len() => p,
+            _ => FanOutPool {
+                shards: shards
+                    .iter()
+                    .map(|sn| ShardCtx {
+                        scratch: SearchScratch::for_snapshot(sn),
+                        results: Vec::new(),
+                        stats: SearchStats::default(),
+                    })
+                    .collect(),
+                merged: TopK::new(1),
+            },
         };
-        // Pair each scratch with a result slot so the work-stealing
-        // `par_chunks_mut` hands every shard exclusive &mut access.
-        let mut work: Vec<(SearchScratch, Option<(Vec<Scored>, SearchStats)>)> =
-            scratches.into_iter().map(|sc| (sc, None)).collect();
-        par_chunks_mut(&mut work, 1, |s, chunk| {
-            let (scratch, out) = &mut chunk[0];
+        // hot-path: no-alloc begin
+        // One chunk per shard: `par_chunks_mut` hands every shard
+        // exclusive &mut access to its context.
+        par_chunks_mut(&mut pool.shards, 1, |s, chunk| {
+            let ctx = &mut chunk[0];
             let searcher = SnapshotSearcher::new(&shards[s], self.engine);
-            *out = Some(searcher.search(q, params, scratch));
+            ctx.stats = searcher.search_into(q, params, &mut ctx.scratch, &mut ctx.results);
         });
-        let mut per_shard = Vec::with_capacity(work.len());
-        let mut scratches = Vec::with_capacity(work.len());
-        for (sc, out) in work {
-            scratches.push(sc);
-            per_shard.push(out.expect("fan-out worker ran for every shard"));
+        let mut stats = SearchStats::default();
+        pool.merged.reset(params.k.max(1));
+        for ctx in &pool.shards {
+            stats.accumulate(&ctx.stats);
+            for r in &ctx.results {
+                pool.merged.push(r.id, r.score);
+            }
         }
-        *self.fan_out_scratches.lock().unwrap() = Some(scratches);
-        Self::merge_results(per_shard, params.k)
+        out.clear();
+        pool.merged.sort_into(out);
+        // hot-path: no-alloc end
+        *self.fan_out_pool.lock().unwrap() = Some(pool);
+        stats
     }
 }
 
@@ -188,18 +225,20 @@ impl Search for CollectionSearcher<'_> {
     }
 
     /// Single-query fan-out. The caller's scratch serves the 1-shard fast
-    /// path; the parallel path gives each shard its own scratch.
-    fn search(
+    /// path; the parallel path gives each shard its own pooled scratch.
+    fn search_into(
         &self,
         q: &[f32],
         params: &SearchParams,
         scratch: &mut SearchScratch,
-    ) -> (Vec<Scored>, SearchStats) {
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
         let shards = &self.snapshot.shards;
         if shards.len() == 1 {
-            return SnapshotSearcher::new(&shards[0], self.engine).search(q, params, scratch);
+            return SnapshotSearcher::new(&shards[0], self.engine)
+                .search_into(q, params, scratch, out);
         }
-        self.fan_out(q, params)
+        self.fan_out_into(q, params, out)
     }
 
     fn search_batch(

@@ -43,12 +43,13 @@ use crate::quant::{lut16, BlockedCodes, ProductQuantizer, QuantModel, QueryLut};
 use crate::runtime::Engine;
 use crate::util::parallel::par_map;
 
-/// Reusable per-thread scratch; avoids all hot-path allocation except the
-/// final result vector. The LUT buffers and score arena are sized at
-/// construction, so steady-state queries never touch the allocator.
-/// Snapshot searches hold one LUT and one scaled-query buffer per
-/// distinct model ("slot") in the snapshot; the monolithic path uses
-/// slot 0.
+/// Reusable per-thread scratch backing the whole query: LUT buffers, the
+/// score arena, the dedup set, both top-k heaps, and the per-model
+/// partition lists all live here and retain their capacity across
+/// queries, so a steady-state query performs **zero allocator calls** at
+/// any `rerank_budget` (verified by `rust/tests/alloc.rs`). Snapshot
+/// searches hold one LUT and one scaled-query buffer per distinct model
+/// ("slot") in the snapshot; the monolithic path uses slot 0.
 #[derive(Debug)]
 pub struct SearchScratch {
     /// One per model slot.
@@ -59,6 +60,18 @@ pub struct SearchScratch {
     /// Blocked-scan score arena: one f32 per posting entry of the list
     /// currently being scanned.
     scores: Vec<f32>,
+    /// Per-segment approximate-candidate heap (rerank_budget-sized).
+    approx: TopK,
+    /// Cross-segment merge / exact-rerank heap (k-sized); doubles as the
+    /// selection heap during partition selection, which finishes before
+    /// any merging starts.
+    merged: TopK,
+    /// Selected partitions, one list per model slot (single-query path).
+    partitions: Vec<Vec<(u32, f32)>>,
+    /// Per-slot f32-LUT fallback flags.
+    use_f32: Vec<bool>,
+    /// Per-slot "selection work was actually used" flags.
+    slot_scanned: Vec<bool>,
     /// Force the exact f32 LUT path (recall-parity tests / debugging);
     /// the quantized u8 kernel is the default.
     pub force_f32_lut: bool,
@@ -72,6 +85,11 @@ impl SearchScratch {
             visited: DedupSet::new(index.n),
             q_scaled: vec![Vec::with_capacity(index.dim)],
             scores: Vec::with_capacity(max_list),
+            approx: TopK::new(1),
+            merged: TopK::new(1),
+            partitions: vec![Vec::new()],
+            use_f32: Vec::new(),
+            slot_scanned: Vec::new(),
             force_f32_lut: false,
         }
     }
@@ -92,6 +110,7 @@ impl SearchScratch {
             }
         }
         let dim = snapshot.dim();
+        let slots = snapshot.models().len();
         SearchScratch {
             luts: snapshot
                 .models()
@@ -105,6 +124,11 @@ impl SearchScratch {
                 .map(|_| Vec::with_capacity(dim))
                 .collect(),
             scores: Vec::with_capacity(max_list),
+            approx: TopK::new(1),
+            merged: TopK::new(1),
+            partitions: (0..slots).map(|_| Vec::new()).collect(),
+            use_f32: Vec::with_capacity(slots),
+            slot_scanned: Vec::with_capacity(slots),
             force_f32_lut: false,
         }
     }
@@ -117,6 +141,9 @@ impl SearchScratch {
         }
         while self.q_scaled.len() < slots {
             self.q_scaled.push(Vec::new());
+        }
+        while self.partitions.len() < slots {
+            self.partitions.push(Vec::new());
         }
     }
 }
@@ -179,14 +206,22 @@ fn score_list(
     }
 }
 
-/// CPU top-t partition selection against one model's centroids.
-fn select_partitions(model: &QuantModel, q: &[f32], top_t: usize) -> Vec<(u32, f32)> {
-    let t = top_t.min(model.num_partitions());
-    let mut tk = TopK::new(t.max(1));
+/// CPU top-t partition selection against one model's centroids, into a
+/// reused heap and output list (no allocation once warm).
+fn select_partitions_into(
+    model: &QuantModel,
+    q: &[f32],
+    top_t: usize,
+    tk: &mut TopK,
+    out: &mut Vec<(u32, f32)>,
+) {
+    let t = top_t.min(model.num_partitions()).max(1);
+    tk.reset(t);
     for (j, row) in model.centroids.iter_rows().enumerate() {
         tk.push(j as u32, dot(q, row));
     }
-    tk.into_sorted().into_iter().map(|s| (s.id, s.score)).collect()
+    out.clear();
+    out.extend(tk.sorted().iter().map(|s| (s.id, s.score)));
 }
 
 /// Shared batched-scan driver for both searchers. One scratch per worker
@@ -236,13 +271,27 @@ pub trait Search: Sync {
     /// Fresh scratch sized for this searcher's largest posting list.
     fn new_scratch(&self) -> SearchScratch;
 
+    /// Single-query search (CPU partition selection) with caller-owned
+    /// result storage — the allocation-free primitive. `search` wraps it.
+    fn search_into(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Scored>,
+    ) -> SearchStats;
+
     /// Single-query search (CPU partition selection).
     fn search(
         &self,
         q: &[f32],
         params: &SearchParams,
         scratch: &mut SearchScratch,
-    ) -> (Vec<Scored>, SearchStats);
+    ) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.search_into(q, params, scratch, &mut out);
+        (out, stats)
+    }
 
     /// Batched search: engine-batched partition selection + parallel
     /// per-query scans.
@@ -272,9 +321,35 @@ impl<'a> Searcher<'a> {
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.search_into(q, params, scratch, &mut out);
+        (out, stats)
+    }
+
+    /// Allocation-free single-query search: results land in `out` (whose
+    /// capacity is reused), every intermediate lives in `scratch`.
+    pub fn search_into(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
         debug_assert_eq!(q.len(), self.index.dim);
-        let partitions = select_partitions(&self.index.model, q, params.top_t);
-        self.search_partitions(q, &partitions, params, scratch)
+        scratch.ensure_slots(1);
+        // Move the partition list out of the scratch so the selection and
+        // scan stages can borrow the rest of it (returned below).
+        let mut parts = std::mem::take(&mut scratch.partitions);
+        select_partitions_into(
+            &self.index.model,
+            q,
+            params.top_t,
+            &mut scratch.merged,
+            &mut parts[0],
+        );
+        let stats = self.search_partitions_into(q, &parts[0], params, scratch, out);
+        scratch.partitions = parts;
+        stats
     }
 
     /// Batched search: one engine call selects partitions for the whole
@@ -303,6 +378,22 @@ impl<'a> Searcher<'a> {
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.search_partitions_into(q, partitions, params, scratch, &mut out);
+        (out, stats)
+    }
+
+    /// Stages 2+3 given an already-selected partition list, results into
+    /// `out`. This is the steady-state hot path: nothing here may allocate
+    /// once the scratch and `out` are warm.
+    pub fn search_partitions_into(
+        &self,
+        q: &[f32],
+        partitions: &[(u32, f32)],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
         let index = self.index;
         let mut stats = SearchStats::default();
 
@@ -312,8 +403,9 @@ impl<'a> Searcher<'a> {
         scratch.visited.ensure_capacity(index.n);
         scratch.visited.reset();
 
+        // hot-path: no-alloc begin
         // Stage 2: blocked ADC scan → arena → dedup + threshold-pruned emit.
-        let mut approx = TopK::new(params.rerank_budget.max(params.k));
+        scratch.approx.reset(params.rerank_budget.max(params.k));
         for &(p, cscore) in partitions.iter().take(params.top_t) {
             let list = &index.postings[p as usize];
             stats.partitions_probed += 1;
@@ -330,7 +422,7 @@ impl<'a> Searcher<'a> {
                 use_f32,
                 &mut scratch.scores,
             );
-            let mut thresh = approx.threshold();
+            let mut thresh = scratch.approx.threshold();
             for (i, &id) in list.ids.iter().enumerate() {
                 if !scratch.visited.insert(id) {
                     stats.duplicates_skipped += 1;
@@ -338,32 +430,35 @@ impl<'a> Searcher<'a> {
                 }
                 let score = scratch.scores[i];
                 if score > thresh {
-                    approx.push(id, score);
-                    thresh = approx.threshold();
+                    scratch.approx.push(id, score);
+                    thresh = scratch.approx.threshold();
                 }
             }
         }
 
         // Stage 3: exact-ish rerank on the int8 representation.
-        let result = match index.int8() {
+        out.clear();
+        match index.int8() {
             Some(q8) => {
                 let q_scaled = &mut scratch.q_scaled[0];
                 q_scaled.clear();
                 q_scaled.extend(q.iter().zip(&q8.scales).map(|(&v, &s)| v * s));
-                let mut exact = TopK::new(params.k);
-                for cand in approx.into_sorted() {
+                scratch.merged.reset(params.k);
+                for &cand in scratch.approx.sorted() {
                     stats.candidates_reranked += 1;
-                    exact.push(cand.id, dot_i8(q_scaled, index.int8_record(cand.id)));
+                    scratch
+                        .merged
+                        .push(cand.id, dot_i8(&scratch.q_scaled[0], index.int8_record(cand.id)));
                 }
-                exact.into_sorted()
+                scratch.merged.sort_into(out);
             }
             None => {
-                let mut v = approx.into_sorted();
-                v.truncate(params.k);
-                v
+                out.extend_from_slice(scratch.approx.sorted());
+                out.truncate(params.k);
             }
-        };
-        (result, stats)
+        }
+        // hot-path: no-alloc end
+        stats
     }
 }
 
@@ -376,13 +471,14 @@ impl Search for Searcher<'_> {
         SearchScratch::new(self.index)
     }
 
-    fn search(
+    fn search_into(
         &self,
         q: &[f32],
         params: &SearchParams,
         scratch: &mut SearchScratch,
-    ) -> (Vec<Scored>, SearchStats) {
-        Searcher::search(self, q, params, scratch)
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
+        Searcher::search_into(self, q, params, scratch, out)
     }
 
     fn search_batch(
@@ -417,14 +513,32 @@ impl<'a> SnapshotSearcher<'a> {
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.search_into(q, params, scratch, &mut out);
+        (out, stats)
+    }
+
+    /// Allocation-free single-query search: results land in `out` (whose
+    /// capacity is reused), every intermediate lives in `scratch`.
+    pub fn search_into(
+        &self,
+        q: &[f32],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
         debug_assert_eq!(q.len(), self.snapshot.dim());
-        let partitions: Vec<Vec<(u32, f32)>> = self
-            .snapshot
-            .models()
-            .iter()
-            .map(|m| select_partitions(m, q, params.top_t))
-            .collect();
-        self.search_partitions(q, &partitions, params, scratch)
+        let models = self.snapshot.models();
+        scratch.ensure_slots(models.len());
+        // Move the partition lists out of the scratch so selection and the
+        // scan stages can borrow the rest of it (returned below).
+        let mut parts = std::mem::take(&mut scratch.partitions);
+        for (slot, model) in models.iter().enumerate() {
+            select_partitions_into(model, q, params.top_t, &mut scratch.merged, &mut parts[slot]);
+        }
+        let stats = self.search_partitions_into(q, &parts[..models.len()], params, scratch, out);
+        scratch.partitions = parts;
+        stats
     }
 
     /// Batched search: one engine call per distinct model selects
@@ -468,6 +582,22 @@ impl<'a> SnapshotSearcher<'a> {
         params: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> (Vec<Scored>, SearchStats) {
+        let mut out = Vec::new();
+        let stats = self.search_partitions_into(q, partitions, params, scratch, &mut out);
+        (out, stats)
+    }
+
+    /// Stages 2+3 across all segments, results into `out`. This is the
+    /// steady-state hot path: nothing here may allocate once the scratch
+    /// and `out` are warm.
+    pub fn search_partitions_into(
+        &self,
+        q: &[f32],
+        partitions: &[Vec<(u32, f32)>],
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
         let snap = self.snapshot;
         let models = snap.models();
         debug_assert_eq!(partitions.len(), models.len());
@@ -475,10 +605,13 @@ impl<'a> SnapshotSearcher<'a> {
 
         scratch.ensure_slots(models.len());
         // Per-model query state: LUT, int8 prescaling, f32 fallback flag.
-        let mut use_f32 = vec![false; models.len()];
+        scratch.use_f32.clear();
+        scratch.use_f32.resize(models.len(), false);
+        scratch.slot_scanned.clear();
+        scratch.slot_scanned.resize(models.len(), false);
         for (slot, model) in models.iter().enumerate() {
             model.pq.build_query_lut(q, &mut scratch.luts[slot]);
-            use_f32[slot] = scratch.force_f32_lut || !scratch.luts[slot].quantized;
+            scratch.use_f32[slot] = scratch.force_f32_lut || !scratch.luts[slot].quantized;
             if let Some(q8) = &model.int8 {
                 let qs = &mut scratch.q_scaled[slot];
                 qs.clear();
@@ -487,23 +620,22 @@ impl<'a> SnapshotSearcher<'a> {
         }
         // Models must agree on int8-ness (snapshot invariant).
         let use_int8 = models[0].int8.is_some();
-        // Count selection work once per distinct model actually scanned.
-        let mut slot_scanned = vec![false; models.len()];
 
         scratch.visited.ensure_capacity(snap.id_space());
         scratch.visited.reset();
         let tombs = &*snap.tombstones;
         let delta = &*snap.delta;
         let budget = params.rerank_budget.max(params.k).max(1);
-        let mut merged = TopK::new(params.k.max(1));
+        // hot-path: no-alloc begin
+        scratch.merged.reset(params.k.max(1));
 
         // Newest first: the delta segment. Posting ids are global; per-id
         // records live in slots.
         if !delta.is_empty() {
             let slot = snap.delta_model_slot();
-            slot_scanned[slot] = true;
+            scratch.slot_scanned[slot] = true;
             stats.segments_scanned += 1;
-            let mut approx = TopK::new(budget);
+            scratch.approx.reset(budget);
             for &(p, cscore) in partitions[slot].iter().take(params.top_t) {
                 let list = &delta.postings[p as usize];
                 stats.points_scanned += list.len();
@@ -516,10 +648,10 @@ impl<'a> SnapshotSearcher<'a> {
                     &delta.blocked[p as usize],
                     &scratch.luts[slot],
                     cscore,
-                    use_f32[slot],
+                    scratch.use_f32[slot],
                     &mut scratch.scores,
                 );
-                let mut thresh = approx.threshold();
+                let mut thresh = scratch.approx.threshold();
                 for (i, &gid) in list.ids.iter().enumerate() {
                     if !scratch.visited.insert(gid) {
                         stats.duplicates_skipped += 1;
@@ -527,21 +659,21 @@ impl<'a> SnapshotSearcher<'a> {
                     }
                     let score = scratch.scores[i];
                     if score > thresh {
-                        approx.push(delta.slot_of[&gid] as u32, score);
-                        thresh = approx.threshold();
+                        scratch.approx.push(delta.slot_of[&gid] as u32, score);
+                        thresh = scratch.approx.threshold();
                     }
                 }
             }
             if use_int8 {
-                for cand in approx.into_sorted() {
+                for &cand in scratch.approx.sorted() {
                     stats.candidates_reranked += 1;
                     let score =
                         dot_i8(&scratch.q_scaled[slot], delta.int8_record(cand.id as usize));
-                    merged.push(delta.slot_ids[cand.id as usize], score);
+                    scratch.merged.push(delta.slot_ids[cand.id as usize], score);
                 }
             } else {
-                for cand in approx.into_sorted().into_iter().take(params.k) {
-                    merged.push(delta.slot_ids[cand.id as usize], cand.score);
+                for &cand in scratch.approx.sorted().iter().take(params.k) {
+                    scratch.merged.push(delta.slot_ids[cand.id as usize], cand.score);
                 }
             }
         }
@@ -553,12 +685,12 @@ impl<'a> SnapshotSearcher<'a> {
                 continue;
             }
             let slot = snap.sealed_model_slot(si);
-            slot_scanned[slot] = true;
+            scratch.slot_scanned[slot] = true;
             stats.segments_scanned += 1;
             // Hoist the filter probe: with no tombstones, no newer sealed
             // segment, and an empty delta, the scan is filter-free.
             let filtered = !tombs.is_empty() || !seg.shadow.is_empty() || !delta.is_empty();
-            let mut approx = TopK::new(budget);
+            scratch.approx.reset(budget);
             for &(p, cscore) in partitions[slot].iter().take(params.top_t) {
                 let list = &idx.postings[p as usize];
                 stats.points_scanned += list.len();
@@ -571,10 +703,10 @@ impl<'a> SnapshotSearcher<'a> {
                     &idx.blocked[p as usize],
                     &scratch.luts[slot],
                     cscore,
-                    use_f32[slot],
+                    scratch.use_f32[slot],
                     &mut scratch.scores,
                 );
-                let mut thresh = approx.threshold();
+                let mut thresh = scratch.approx.threshold();
                 for (i, &local) in list.ids.iter().enumerate() {
                     let gid = seg.global_ids[local as usize];
                     if !scratch.visited.insert(gid) {
@@ -591,31 +723,34 @@ impl<'a> SnapshotSearcher<'a> {
                     }
                     let score = scratch.scores[i];
                     if score > thresh {
-                        approx.push(local, score);
-                        thresh = approx.threshold();
+                        scratch.approx.push(local, score);
+                        thresh = scratch.approx.threshold();
                     }
                 }
             }
             if use_int8 {
-                for cand in approx.into_sorted() {
+                for &cand in scratch.approx.sorted() {
                     stats.candidates_reranked += 1;
                     let score = dot_i8(&scratch.q_scaled[slot], idx.int8_record(cand.id));
-                    merged.push(seg.global_ids[cand.id as usize], score);
+                    scratch.merged.push(seg.global_ids[cand.id as usize], score);
                 }
             } else {
-                for cand in approx.into_sorted().into_iter().take(params.k) {
-                    merged.push(seg.global_ids[cand.id as usize], cand.score);
+                for &cand in scratch.approx.sorted().iter().take(params.k) {
+                    scratch.merged.push(seg.global_ids[cand.id as usize], cand.score);
                 }
             }
         }
 
-        for (slot, scanned) in slot_scanned.iter().enumerate() {
+        for (slot, scanned) in scratch.slot_scanned.iter().enumerate() {
             if *scanned {
                 stats.partitions_probed += partitions[slot].len().min(params.top_t);
             }
         }
 
-        (merged.into_sorted(), stats)
+        out.clear();
+        scratch.merged.sort_into(out);
+        // hot-path: no-alloc end
+        stats
     }
 }
 
@@ -628,13 +763,14 @@ impl Search for SnapshotSearcher<'_> {
         SearchScratch::for_snapshot(self.snapshot)
     }
 
-    fn search(
+    fn search_into(
         &self,
         q: &[f32],
         params: &SearchParams,
         scratch: &mut SearchScratch,
-    ) -> (Vec<Scored>, SearchStats) {
-        SnapshotSearcher::search(self, q, params, scratch)
+        out: &mut Vec<Scored>,
+    ) -> SearchStats {
+        SnapshotSearcher::search_into(self, q, params, scratch, out)
     }
 
     fn search_batch(

@@ -94,16 +94,47 @@ impl TopK {
         }
     }
 
+    /// Re-arm for a fresh accumulation of up to `k` candidates, retaining
+    /// the heap's buffer. After the first call at a given `k`, subsequent
+    /// resets at the same (or smaller) `k` never touch the allocator —
+    /// this is what lets a reused scratch run allocation-free.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "k must be positive");
+        self.k = k;
+        self.heap.clear();
+        self.heap.reserve(k);
+    }
+
+    /// Sort the kept candidates by descending score (ties by ascending id
+    /// for determinism) and return them in place. The accumulator is no
+    /// longer a valid heap afterwards; `reset` before the next use.
+    pub fn sorted(&mut self) -> &[Scored] {
+        Self::sort_desc(&mut self.heap);
+        &self.heap
+    }
+
+    /// Like [`TopK::sorted`], but appends the sorted candidates into `out`
+    /// (whose capacity is reused) and clears the accumulator.
+    pub fn sort_into(&mut self, out: &mut Vec<Scored>) {
+        Self::sort_desc(&mut self.heap);
+        out.extend_from_slice(&self.heap);
+        self.heap.clear();
+    }
+
     /// Drain into a `Vec` sorted by descending score (ties by ascending id
     /// for determinism).
     pub fn into_sorted(mut self) -> Vec<Scored> {
-        self.heap.sort_by(|a, b| {
+        Self::sort_desc(&mut self.heap);
+        self.heap
+    }
+
+    fn sort_desc(items: &mut [Scored]) {
+        items.sort_by(|a, b| {
             b.score
                 .partial_cmp(&a.score)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.id.cmp(&b.id))
         });
-        self.heap
     }
 
     /// Clear for reuse without deallocating.
@@ -161,6 +192,29 @@ mod tests {
         let out = tk.into_sorted();
         assert_eq!(out[0].id, 1);
         assert_eq!(out[1].id, 2);
+    }
+
+    #[test]
+    fn reset_and_sort_into_reuse_buffers() {
+        let mut tk = TopK::new(3);
+        tk.push(1, 1.0);
+        tk.push(2, 5.0);
+        tk.push(3, 3.0);
+        let mut out = Vec::new();
+        tk.sort_into(&mut out);
+        assert_eq!(out.iter().map(|s| s.id).collect::<Vec<_>>(), [2, 3, 1]);
+        // Re-arm at a different k; prior contents must be gone.
+        tk.reset(2);
+        assert!(tk.is_empty());
+        tk.push(4, 9.0);
+        tk.push(5, 7.0);
+        tk.push(6, 8.0);
+        assert_eq!(tk.sorted().iter().map(|s| s.id).collect::<Vec<_>>(), [4, 6]);
+        // sorted() leaves contents in place for a follow-up sort_into.
+        out.clear();
+        tk.sort_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert!(tk.is_empty());
     }
 
     #[test]

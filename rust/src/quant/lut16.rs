@@ -20,12 +20,17 @@
 //!    a SIMD register, so `pshufb` performs 16 table lookups per
 //!    instruction, and per-candidate sums accumulate in u16 lanes.
 //!
-//! Kernels: an AVX2 path (two subspaces per iteration), an SSSE3 path, and
-//! a portable scalar-blocked path. All three produce **bit-identical**
-//! scores: they compute the same exact integer sums (u16 accumulation
-//! cannot overflow — [`QueryLut`] refuses to quantize when `m > 257`) and
-//! share one float reconstruction expression. Dispatch is by runtime
-//! feature detection, cached process-wide.
+//! Kernels: an AVX-512 VBMI path (four subspaces per iteration via
+//! `vpermb`, compiled only when the toolchain has stable AVX-512
+//! intrinsics — the `soar_avx512` cfg emitted by `build.rs`), an AVX2
+//! path (two subspaces per iteration), an SSSE3 path, and a portable
+//! scalar-blocked path. All produce **bit-identical** scores: they
+//! compute the same exact integer sums (u16 accumulation cannot overflow
+//! — [`QueryLut`] refuses to quantize when `m > 257`) and share one float
+//! reconstruction expression. Dispatch is by runtime feature detection,
+//! cached process-wide. The block loop software-prefetches the next
+//! block's nibble planes so the scan streams at memory bandwidth instead
+//! of stalling on demand misses.
 
 use crate::quant::pq::PQ_CENTERS;
 
@@ -161,6 +166,12 @@ pub enum KernelKind {
     Ssse3,
     /// 256-bit path, two subspaces per iteration.
     Avx2,
+    /// 512-bit `vpermb` path, four subspaces per iteration. Present only
+    /// when the toolchain can compile stable AVX-512 intrinsics (the
+    /// `soar_avx512` cfg from `build.rs`); selected only when the CPU
+    /// reports avx512f+avx512bw+avx512vbmi.
+    #[cfg(soar_avx512)]
+    Avx512,
 }
 
 impl KernelKind {
@@ -169,6 +180,8 @@ impl KernelKind {
             KernelKind::Portable => "portable",
             KernelKind::Ssse3 => "ssse3",
             KernelKind::Avx2 => "avx2",
+            #[cfg(soar_avx512)]
+            KernelKind::Avx512 => "avx512",
         }
     }
 
@@ -180,6 +193,12 @@ impl KernelKind {
             KernelKind::Ssse3 => std::arch::is_x86_feature_detected!("ssse3"),
             #[cfg(target_arch = "x86_64")]
             KernelKind::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(soar_avx512)]
+            KernelKind::Avx512 => {
+                std::arch::is_x86_feature_detected!("avx512f")
+                    && std::arch::is_x86_feature_detected!("avx512bw")
+                    && std::arch::is_x86_feature_detected!("avx512vbmi")
+            }
             #[cfg(not(target_arch = "x86_64"))]
             _ => false,
         }
@@ -190,6 +209,12 @@ impl KernelKind {
 pub fn detect_kernel() -> KernelKind {
     static CACHE: std::sync::OnceLock<KernelKind> = std::sync::OnceLock::new();
     *CACHE.get_or_init(|| {
+        #[cfg(soar_avx512)]
+        {
+            if KernelKind::Avx512.supported() {
+                return KernelKind::Avx512;
+            }
+        }
         #[cfg(target_arch = "x86_64")]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
@@ -213,6 +238,12 @@ pub fn available_kernels() -> Vec<KernelKind> {
         }
         if std::arch::is_x86_feature_detected!("avx2") {
             kinds.push(KernelKind::Avx2);
+        }
+    }
+    #[cfg(soar_avx512)]
+    {
+        if KernelKind::Avx512.supported() {
+            kinds.push(KernelKind::Avx512);
         }
     }
     kinds
@@ -315,6 +346,115 @@ unsafe fn accumulate_block_avx2(planes: &[u8], lut: &[u8], m: usize, acc: &mut [
     _mm_storeu_si128(out.add(3), s3);
 }
 
+/// # Safety
+/// Requires AVX-512 F+BW+VBMI; `planes` and `lut` must hold at least
+/// `m * 16` bytes.
+#[cfg(soar_avx512)]
+#[target_feature(enable = "avx512f,avx512bw,avx512vbmi,ssse3")]
+unsafe fn accumulate_block_avx512(planes: &[u8], lut: &[u8], m: usize, acc: &mut [u16; BLOCK]) {
+    use core::arch::x86_64::*;
+    let zero = _mm512_setzero_si512();
+    let low_mask = _mm512_set1_epi8(0x0f);
+    // `vpermb` indexes across the whole 64-byte table register, so each
+    // 16-byte group of nibble indices is offset into its own subspace's
+    // 16-byte table group: bytes 0-15 → +0, 16-31 → +16, 32-47 → +32,
+    // 48-63 → +48.
+    let group_offsets = _mm512_set_epi64(
+        0x3030303030303030u64 as i64,
+        0x3030303030303030u64 as i64,
+        0x2020202020202020u64 as i64,
+        0x2020202020202020u64 as i64,
+        0x1010101010101010u64 as i64,
+        0x1010101010101010u64 as i64,
+        0,
+        0,
+    );
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    // Four subspaces per iteration: 128-bit lane L of the 512-bit vectors
+    // carries subspace 4p+L; the lanes are folded together afterwards.
+    for p in 0..m / 4 {
+        let table = _mm512_loadu_si512(lut.as_ptr().add(p * 4 * PLANE) as *const _);
+        let plane = _mm512_loadu_si512(planes.as_ptr().add(p * 4 * PLANE) as *const _);
+        let lo = _mm512_or_si512(_mm512_and_si512(plane, low_mask), group_offsets);
+        let hi = _mm512_or_si512(
+            _mm512_and_si512(_mm512_srli_epi16::<4>(plane), low_mask),
+            group_offsets,
+        );
+        let vlo = _mm512_permutexvar_epi8(lo, table);
+        let vhi = _mm512_permutexvar_epi8(hi, table);
+        a0 = _mm512_add_epi16(a0, _mm512_unpacklo_epi8(vlo, zero));
+        a1 = _mm512_add_epi16(a1, _mm512_unpackhi_epi8(vlo, zero));
+        a2 = _mm512_add_epi16(a2, _mm512_unpacklo_epi8(vhi, zero));
+        a3 = _mm512_add_epi16(a3, _mm512_unpackhi_epi8(vhi, zero));
+    }
+    // Fold the four 128-bit lanes of each accumulator (exact u16 sums, so
+    // fold order cannot change the result).
+    let mut s0 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a0),
+            _mm512_extracti32x4_epi32::<1>(a0),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a0),
+            _mm512_extracti32x4_epi32::<3>(a0),
+        ),
+    );
+    let mut s1 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a1),
+            _mm512_extracti32x4_epi32::<1>(a1),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a1),
+            _mm512_extracti32x4_epi32::<3>(a1),
+        ),
+    );
+    let mut s2 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a2),
+            _mm512_extracti32x4_epi32::<1>(a2),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a2),
+            _mm512_extracti32x4_epi32::<3>(a2),
+        ),
+    );
+    let mut s3 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a3),
+            _mm512_extracti32x4_epi32::<1>(a3),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a3),
+            _mm512_extracti32x4_epi32::<3>(a3),
+        ),
+    );
+    // SSE remainder for the last m % 4 subspaces (same shape as the SSSE3
+    // kernel's body).
+    let zero128 = _mm_setzero_si128();
+    let mask128 = _mm_set1_epi8(0x0f);
+    for sub in (m - m % 4)..m {
+        let table = _mm_loadu_si128(lut.as_ptr().add(sub * PLANE) as *const __m128i);
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, mask128);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), mask128);
+        let vlo = _mm_shuffle_epi8(table, lo);
+        let vhi = _mm_shuffle_epi8(table, hi);
+        s0 = _mm_add_epi16(s0, _mm_unpacklo_epi8(vlo, zero128));
+        s1 = _mm_add_epi16(s1, _mm_unpackhi_epi8(vlo, zero128));
+        s2 = _mm_add_epi16(s2, _mm_unpacklo_epi8(vhi, zero128));
+        s3 = _mm_add_epi16(s3, _mm_unpackhi_epi8(vhi, zero128));
+    }
+    let out = acc.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out, s0);
+    _mm_storeu_si128(out.add(1), s1);
+    _mm_storeu_si128(out.add(2), s2);
+    _mm_storeu_si128(out.add(3), s3);
+}
+
 #[inline]
 fn accumulate_block(
     kind: KernelKind,
@@ -332,6 +472,8 @@ fn accumulate_block(
         KernelKind::Ssse3 => unsafe { accumulate_block_ssse3(planes, lut, m, acc) },
         #[cfg(target_arch = "x86_64")]
         KernelKind::Avx2 => unsafe { accumulate_block_avx2(planes, lut, m, acc) },
+        #[cfg(soar_avx512)]
+        KernelKind::Avx512 => unsafe { accumulate_block_avx512(planes, lut, m, acc) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => accumulate_block_portable(planes, lut, m, acc),
     }
@@ -371,7 +513,29 @@ pub fn score_all_with(
     // here too so hand-built LUTs cannot overflow the u16 accumulators.
     assert!(m * (u8::MAX as usize) <= u16::MAX as usize);
     let mut acc = [0u16; BLOCK];
-    for b in 0..blocked.num_blocks() {
+    let num_blocks = blocked.num_blocks();
+    for b in 0..num_blocks {
+        // Software-prefetch the next block's nibble planes while this one
+        // accumulates: the scan walks `data` strictly forward, so the
+        // lines are guaranteed to be wanted, and hiding the miss keeps the
+        // pshufb/vpermb pipe fed on lists that overflow L2.
+        #[cfg(target_arch = "x86_64")]
+        if b + 1 < num_blocks {
+            let next = blocked.block_planes(b + 1);
+            let mut off = 0;
+            // Up to 4 cache lines — covers a whole block at m ≤ 16.
+            while off < next.len() && off < 256 {
+                // SAFETY: prefetch has no semantic effect; the address is
+                // in bounds of `next`.
+                unsafe {
+                    core::arch::x86_64::_mm_prefetch(
+                        next.as_ptr().add(off) as *const i8,
+                        core::arch::x86_64::_MM_HINT_T0,
+                    );
+                }
+                off += 64;
+            }
+        }
         accumulate_block(kind, blocked.block_planes(b), &lut.u8_lut, m, &mut acc);
         let base = b * BLOCK;
         let lanes = BLOCK.min(blocked.len - base);

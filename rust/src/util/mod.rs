@@ -12,8 +12,11 @@
 //!                  (criterion stand-in) used by `benches/`,
 //! * [`prop`]     — property-testing driver with seeded case generation
 //!                  and failure reporting (proptest stand-in),
+//! * [`alloc`]    — allocation-counting global allocator used by the
+//!                  zero-alloc hot-path tests and benches,
 //! * [`tempdir`]  — self-deleting temp directories for tests.
 
+pub mod alloc;
 pub mod bench;
 pub mod bitmap;
 pub mod cli;

@@ -1,14 +1,26 @@
-//! Data-parallel primitives on scoped std threads (rayon stand-in).
+//! Data-parallel primitives on a persistent worker pool (rayon stand-in).
 //!
 //! The engine's parallel workloads are all embarrassingly parallel maps
-//! over dense index ranges (per-query scans, per-point assignments), so a
-//! static-chunked scoped-thread pool covers them with negligible overhead.
-//! Threads are spawned per call; for the multi-millisecond workloads these
-//! helpers serve, spawn cost (<20µs/thread) is noise — and keeping the
-//! helpers stateless avoids global-pool lifecycle hazards in tests.
+//! over dense index ranges (per-query scans, per-point assignments). They
+//! used to run on per-call `std::thread::scope` spawns; at ~20µs per spawn
+//! that tax dominated single-query fan-out latency at high QPS, so the
+//! helpers now share one lazily-initialized pool of `num_threads() - 1`
+//! condvar-parked workers. The submitting thread participates in chunk
+//! execution, chunking stays static (same ordering guarantees as before),
+//! and a worker panic is propagated to the submitter with the panicking
+//! chunk's index so fan-out failures are attributable to a shard.
+//!
+//! Pool lifecycle is deliberately simple: workers are detached and live
+//! for the process. Nested parallel calls (e.g. a per-shard build that
+//! itself k-means in parallel) detect they are running on a pool worker
+//! and degrade to serial execution instead of deadlocking on the pool.
 
+use std::any::Any;
+use std::cell::Cell;
+use std::mem::{ManuallyDrop, MaybeUninit};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Worker count: `SOAR_THREADS` override or the machine's parallelism.
 pub fn num_threads() -> usize {
@@ -30,6 +42,185 @@ pub fn num_threads() -> usize {
     n
 }
 
+thread_local! {
+    /// Set on pool workers so nested parallel calls run serially inline
+    /// instead of re-entering (and possibly deadlocking on) the pool.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool() -> bool {
+    IN_POOL.with(|flag| flag.get())
+}
+
+/// One submitted parallel region. Lives on the submitting thread's stack;
+/// the pool's job list holds a raw pointer to it only between `submit` and
+/// the submitter's removal of that pointer (under the pool lock, after the
+/// last chunk finishes), so every dereference happens while the stack
+/// frame is provably alive.
+struct Job {
+    /// Type-erased chunk body: `call(ctx, chunk_index)`.
+    call: unsafe fn(*const (), usize),
+    /// Points at the `Sync` closure owned by `run_chunked`'s frame.
+    ctx: *const (),
+    /// Next unclaimed chunk index; read and advanced under the pool lock.
+    next: AtomicUsize,
+    n_chunks: usize,
+    /// Chunks not yet finished; the submitter waits for this to hit zero.
+    pending: AtomicUsize,
+    /// First panic observed: (chunk index, payload).
+    panic: Mutex<Option<(usize, Box<dyn Any + Send>)>>,
+}
+
+#[derive(Clone, Copy)]
+struct JobPtr(*const Job);
+// SAFETY: a JobPtr is only dereferenced either under the pool lock while
+// the job is still listed (the submitter unlists it before returning) or
+// while the dereferencing thread owns an unfinished chunk (so the
+// submitter is still blocked on `pending`). The chunk body behind `ctx`
+// is `Sync` by construction of `run_chunked`.
+unsafe impl Send for JobPtr {}
+
+/// Raw pointer carrier for disjoint-index writes from pool workers.
+struct SendPtr<T>(*mut T);
+// SAFETY: callers only write through disjoint indices, one chunk per
+// thread, while the pointee outlives the parallel region.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+struct Pool {
+    /// Jobs with work remaining or still awaiting their submitter's
+    /// removal. Chunk claiming happens under this lock.
+    jobs: Mutex<Vec<JobPtr>>,
+    /// Workers park here when no listed job has unclaimed chunks.
+    work_cv: Condvar,
+    /// Submitters park here until their job's last chunk finishes.
+    done_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            jobs: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }));
+        for w in 0..num_threads().saturating_sub(1) {
+            std::thread::Builder::new()
+                .name(format!("soar-pool-{w}"))
+                .spawn(move || worker_loop(pool))
+                .expect("failed to spawn pool worker");
+        }
+        pool
+    })
+}
+
+/// Run one chunk, recording the first panic (with its chunk index) on the
+/// job instead of unwinding through the pool.
+fn exec_chunk(job: &Job, chunk: usize) {
+    let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ctx, chunk) }));
+    if let Err(payload) = result {
+        let mut slot = job.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some((chunk, payload));
+        }
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    IN_POOL.with(|flag| flag.set(true));
+    let mut guard = pool.jobs.lock().unwrap();
+    loop {
+        let mut claimed = None;
+        for &jp in guard.iter() {
+            // SAFETY: the job is listed and we hold the pool lock.
+            let job = unsafe { &*jp.0 };
+            let next = job.next.load(Ordering::Relaxed);
+            if next < job.n_chunks {
+                job.next.store(next + 1, Ordering::Relaxed);
+                claimed = Some((jp, next));
+                break;
+            }
+        }
+        match claimed {
+            Some((jp, chunk)) => {
+                drop(guard);
+                // SAFETY: we own an unfinished chunk of this job, so its
+                // submitter is still blocked and the Job is alive.
+                let job = unsafe { &*jp.0 };
+                exec_chunk(job, chunk);
+                guard = pool.jobs.lock().unwrap();
+                if job.pending.fetch_sub(1, Ordering::Relaxed) == 1 {
+                    pool.done_cv.notify_all();
+                }
+            }
+            None => guard = pool.work_cv.wait(guard).unwrap(),
+        }
+    }
+}
+
+/// List the job, help execute its chunks, wait for stragglers, unlist it,
+/// and re-raise any recorded panic with its chunk index.
+fn submit_and_help(pool: &'static Pool, job: &Job) {
+    let mut guard = pool.jobs.lock().unwrap();
+    guard.push(JobPtr(job as *const Job));
+    pool.work_cv.notify_all();
+    loop {
+        let next = job.next.load(Ordering::Relaxed);
+        if next >= job.n_chunks {
+            break;
+        }
+        job.next.store(next + 1, Ordering::Relaxed);
+        drop(guard);
+        exec_chunk(job, next);
+        guard = pool.jobs.lock().unwrap();
+        job.pending.fetch_sub(1, Ordering::Relaxed);
+    }
+    while job.pending.load(Ordering::Relaxed) != 0 {
+        guard = pool.done_cv.wait(guard).unwrap();
+    }
+    let pos = guard
+        .iter()
+        .position(|jp| std::ptr::eq(jp.0, job))
+        .expect("submitted job still listed");
+    guard.swap_remove(pos);
+    drop(guard);
+    let recorded = job.panic.lock().unwrap().take();
+    if let Some((chunk, payload)) = recorded {
+        propagate_panic(chunk, payload);
+    }
+}
+
+fn propagate_panic(chunk: usize, payload: Box<dyn Any + Send>) -> ! {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    panic!("parallel worker panicked in chunk {chunk}: {msg}");
+}
+
+/// Execute `body(0..n_chunks)` on the pool (the calling thread included).
+fn run_chunked<F>(n_chunks: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    unsafe fn thunk<F: Fn(usize) + Sync>(ctx: *const (), chunk: usize) {
+        // SAFETY: `ctx` is the `&F` erased by `run_chunked` below, alive
+        // for the whole parallel region.
+        unsafe { (*(ctx as *const F))(chunk) }
+    }
+    let job = Job {
+        call: thunk::<F>,
+        ctx: &body as *const F as *const (),
+        next: AtomicUsize::new(0),
+        n_chunks,
+        pending: AtomicUsize::new(n_chunks),
+        panic: Mutex::new(None),
+    };
+    submit_and_help(pool(), &job);
+}
+
 /// Parallel `(0..n).map(f).collect()` preserving order.
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
@@ -37,67 +228,85 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n < 2 {
+    if threads <= 1 || n < 2 || in_pool() {
         return (0..n).map(f).collect();
     }
     let chunk = n.div_ceil(threads);
-    let mut parts: Vec<Vec<T>> = Vec::with_capacity(threads);
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>())
-            })
-            .collect();
-        parts.extend(handles.into_iter().map(|h| h.join().expect("worker panicked")));
+    let n_chunks = n.div_ceil(chunk);
+    let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit slots need no initialization.
+    unsafe { out.set_len(n) };
+    let base = SendPtr(out.as_mut_ptr());
+    let f = &f;
+    run_chunked(n_chunks, move |t| {
+        let lo = t * chunk;
+        let hi = (lo + chunk).min(n);
+        for i in lo..hi {
+            let value = f(i);
+            // SAFETY: chunks cover disjoint index ranges of `out`.
+            unsafe { base.0.add(i).write(MaybeUninit::new(value)) };
+        }
     });
-    let mut out = Vec::with_capacity(n);
-    for p in parts {
-        out.extend(p);
-    }
-    out
+    // A panic above unwinds before this point and leaks the initialized
+    // elements (Vec<MaybeUninit<T>> drops no contents) — safe, and the
+    // process is failing anyway. On success every slot was written.
+    let mut out = ManuallyDrop::new(out);
+    let (ptr, len, cap) = (out.as_mut_ptr(), out.len(), out.capacity());
+    // SAFETY: all `len` elements are initialized; layout of T and
+    // MaybeUninit<T> is identical.
+    unsafe { Vec::from_raw_parts(ptr as *mut T, len, cap) }
 }
 
 /// Parallel for-each over `chunk_size`-wide mutable chunks of `data`;
-/// `f(chunk_index, chunk)`. Work-stealing via a shared iterator, so ragged
-/// per-chunk costs still balance.
+/// `f(chunk_index, chunk)`. Chunks are claimed dynamically from a shared
+/// counter, so ragged per-chunk costs still balance.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_size: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk_size > 0);
-    let n_chunks = data.len().div_ceil(chunk_size.max(1));
-    let threads = num_threads().min(n_chunks.max(1));
-    if threads <= 1 || n_chunks < 2 {
+    let n = data.len();
+    let n_chunks = n.div_ceil(chunk_size);
+    if num_threads() <= 1 || n_chunks < 2 || in_pool() {
         for (i, c) in data.chunks_mut(chunk_size).enumerate() {
             f(i, c);
         }
         return;
     }
-    let queue = Mutex::new(data.chunks_mut(chunk_size).enumerate());
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let next = queue.lock().unwrap().next();
-                match next {
-                    Some((i, c)) => f(i, c),
-                    None => break,
-                }
-            });
-        }
+    let base = SendPtr(data.as_mut_ptr());
+    let f = &f;
+    run_chunked(n_chunks, move |ci| {
+        let lo = ci * chunk_size;
+        let hi = (lo + chunk_size).min(n);
+        // SAFETY: each chunk index maps to a disjoint subslice of `data`,
+        // which outlives the parallel region.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(ci, chunk);
     });
 }
 
-/// Parallel for-each over shared items (no results).
+/// Parallel for-each over shared items (no results, no allocation).
 pub fn par_for_each<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let _ = par_map(n, |i| {
-        f(i);
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 2 || in_pool() {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let n_chunks = n.div_ceil(chunk);
+    let f = &f;
+    run_chunked(n_chunks, move |t| {
+        let lo = t * chunk;
+        let hi = (lo + chunk).min(n);
+        for i in lo..hi {
+            f(i);
+        }
     });
 }
 
@@ -112,6 +321,18 @@ mod tests {
             let got = par_map(n, |i| i * i);
             let want: Vec<usize> = (0..n).map(|i| i * i).collect();
             assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_map_reuses_the_pool_across_calls() {
+        // Many small regions in a row exercise worker re-parking; results
+        // must stay ordered every time.
+        for round in 0..50usize {
+            let got = par_map(64, move |i| i + round);
+            for (i, &v) in got.iter().enumerate() {
+                assert_eq!(v, i + round);
+            }
         }
     }
 
@@ -148,6 +369,39 @@ mod tests {
             counter.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(counter.load(Ordering::Relaxed), (0..500u64).sum());
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        // Outer region on the pool; inner regions run serially on workers
+        // (IN_POOL) or as fresh jobs from the submitting thread.
+        let sums = par_map(8, |i| par_map(50, move |j| i * j).iter().sum::<usize>());
+        for (i, &s) in sums.iter().enumerate() {
+            assert_eq!(s, i * (0..50usize).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn panic_is_propagated_with_chunk_attribution() {
+        let result = std::panic::catch_unwind(|| {
+            par_map(100, |i| {
+                if i == 73 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("string payload");
+        assert!(msg.contains("boom at 73"), "{msg}");
+        if num_threads() > 1 {
+            // Pool path prefixes the panicking chunk's index.
+            assert!(msg.contains("chunk"), "{msg}");
+        }
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! Integration: the zero-allocation steady-state query contract.
+//!
+//! The pooled query path promises that once scratch state is warm, a
+//! single-query search performs **zero allocator calls** — across the
+//! monolithic `Searcher`, the segmented `SnapshotSearcher`, and the
+//! sharded `CollectionSearcher` fan-out. This binary installs the
+//! counting global allocator and measures the claim directly.
+//!
+//! Everything lives in ONE test function: the allocation counter is
+//! process-global, so concurrently running sibling tests would pollute
+//! the measurement windows.
+
+use std::sync::Arc;
+
+use soar_ann::config::{
+    CollectionConfig, IndexConfig, MutableConfig, SearchParams, ShardRouting, SpillMode,
+};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{
+    build_index, Collection, CollectionSearcher, IndexSnapshot, Search, SearchScratch, Searcher,
+    SnapshotSearcher,
+};
+use soar_ann::linalg::topk::Scored;
+use soar_ann::runtime::Engine;
+use soar_ann::util::alloc::CountingAllocator;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
+
+/// Run `queries` warm-up + measured passes of `search_into` and return
+/// the allocator-call delta over the measured passes.
+fn measured_allocs<S: Search + ?Sized>(
+    searcher: &S,
+    queries: &soar_ann::linalg::MatrixF32,
+    params: &SearchParams,
+    scratch: &mut SearchScratch,
+    out: &mut Vec<Scored>,
+) -> u64 {
+    // Warm-up: first passes size every pooled buffer (LUTs, heaps,
+    // dedup stamps, per-shard contexts). Cycle through all query rows so
+    // capacities see the full workload spread.
+    for qi in 0..queries.rows() {
+        searcher.search_into(queries.row(qi), params, scratch, out);
+        assert!(!out.is_empty(), "fixture must return results");
+    }
+    let before = CountingAllocator::allocations();
+    for qi in 0..queries.rows() {
+        searcher.search_into(queries.row(qi), params, scratch, out);
+    }
+    CountingAllocator::allocations() - before
+}
+
+#[test]
+fn steady_state_queries_do_not_allocate() {
+    // Sanity: the counter actually counts.
+    let before = CountingAllocator::allocations();
+    let v: Vec<u64> = (0..1024).collect();
+    assert!(v.len() == 1024);
+    assert!(
+        CountingAllocator::allocations() > before,
+        "counting allocator is not installed"
+    );
+    drop(v);
+
+    let ds = SyntheticConfig::glove_like(1500, 16, 24, 77).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 30,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let params = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 200,
+    };
+
+    // 1. Monolithic index + Searcher.
+    let idx = Arc::new(build_index(&engine, &ds.data, &icfg).unwrap());
+    {
+        let searcher = Searcher::new(&idx, &engine);
+        let mut scratch = SearchScratch::new(&idx);
+        let mut out = Vec::new();
+        let allocs = measured_allocs(&searcher, &ds.queries, &params, &mut scratch, &mut out);
+        assert_eq!(allocs, 0, "monolithic Searcher allocated on a warm query");
+    }
+
+    // 2. Segmented snapshot + SnapshotSearcher.
+    let snapshot = Arc::new(IndexSnapshot::from_index(idx.clone()));
+    {
+        let searcher = SnapshotSearcher::new(&snapshot, &engine);
+        let mut scratch = SearchScratch::for_snapshot(&snapshot);
+        let mut out = Vec::new();
+        let allocs = measured_allocs(&searcher, &ds.queries, &params, &mut scratch, &mut out);
+        assert_eq!(allocs, 0, "SnapshotSearcher allocated on a warm query");
+    }
+
+    // 3. Sharded collection fan-out (background maintenance off: worker
+    // threads would allocate concurrently and pollute the window).
+    for shards in [2usize, 4] {
+        let ccfg = CollectionConfig {
+            num_shards: shards,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+            maintenance: Default::default(),
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let mut scratch = searcher.new_scratch();
+        let mut out = Vec::new();
+        let allocs = measured_allocs(&searcher, &ds.queries, &params, &mut scratch, &mut out);
+        assert_eq!(
+            allocs, 0,
+            "CollectionSearcher fan-out (S={shards}) allocated on a warm query"
+        );
+    }
+}

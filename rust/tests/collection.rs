@@ -400,3 +400,66 @@ fn upserts_proceed_while_shard_compacts() {
     let (res, _) = c.search(&probe, &params);
     assert_eq!(res[0].id, 99_999);
 }
+
+/// The pooled parallel fan-out must be bit-identical to a serial
+/// reference: scan each shard independently with a fresh scratch, then
+/// merge the per-shard top-k lists in shard order. Covers S ∈ {2, 4},
+/// and a second pass per query so the pooled per-shard contexts are
+/// exercised warm (the reuse path), not just on their first fill.
+#[test]
+fn pooled_fan_out_matches_serial_per_shard_merge() {
+    use soar_ann::index::{CollectionSearcher, Search, SearchStats};
+    use soar_ann::linalg::topk::TopK;
+
+    let ds = SyntheticConfig::glove_like(2000, 16, 16, 91).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: 24,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let params = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 150,
+    };
+    for shards in [2usize, 4] {
+        let ccfg = CollectionConfig {
+            num_shards: shards,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+            maintenance: Default::default(),
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let mut scratch = searcher.new_scratch();
+        let mut ref_scratches: Vec<SearchScratch> = snap
+            .shards
+            .iter()
+            .map(|sn| SearchScratch::for_snapshot(sn))
+            .collect();
+        for pass in 0..2 {
+            for qi in 0..ds.num_queries() {
+                let q = ds.queries.row(qi);
+                let (pooled, pooled_stats) = searcher.search(q, &params, &mut scratch);
+                let mut merged = TopK::new(params.k);
+                let mut ref_stats = SearchStats::default();
+                for (sn, sc) in snap.shards.iter().zip(ref_scratches.iter_mut()) {
+                    let (res, st) = SnapshotSearcher::new(sn, &engine).search(q, &params, sc);
+                    ref_stats.accumulate(&st);
+                    for r in res {
+                        merged.push(r.id, r.score);
+                    }
+                }
+                let reference = merged.into_sorted();
+                assert_eq!(pooled, reference, "S={shards} pass={pass} qi={qi}");
+                assert_eq!(pooled_stats, ref_stats, "S={shards} pass={pass} qi={qi}");
+            }
+        }
+    }
+}

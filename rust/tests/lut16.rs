@@ -82,6 +82,58 @@ fn prop_blocked_kernels_match_scalar_reference() {
     });
 }
 
+/// Dedicated AVX-512 parity rows: the VPERMB kernel consumes four
+/// subspaces per iteration, so sweep subspace counts around that stride
+/// (multiples of 4, ±1 remainders) with lists shaped to hit both the
+/// full-block path and ragged tails. Skips gracefully when the kernel is
+/// unavailable — old toolchain (no `soar_avx512` cfg) or a CPU without
+/// avx512vbmi — since `available_kernels` only lists runnable kernels.
+#[test]
+fn prop_avx512_kernel_matches_scalar_reference_or_skips() {
+    let avx512 = lut16::available_kernels()
+        .into_iter()
+        .find(|k| k.name() == "avx512");
+    let Some(kind) = avx512 else {
+        eprintln!("skipping AVX-512 parity: kernel unavailable (toolchain or CPU)");
+        return;
+    };
+    check("avx512 LUT16 == scalar ADC", 80, |g: &mut Gen| {
+        // Around the 4-subspace stride: exact multiples exercise only the
+        // 64-byte VPERMB loop, the ±remainders the SSE tail.
+        let m = 4 * g.usize_in(1..9) + g.usize_in(0..4);
+        let code_bytes = m.div_ceil(2);
+        let len = match g.usize_in(0..3) {
+            0 => BLOCK * g.usize_in(1..5),
+            _ => g.usize_in(1..300),
+        };
+        let codes: Vec<u8> = (0..len * code_bytes)
+            .map(|_| g.usize_in(0..256) as u8)
+            .collect();
+        let lut = QueryLut {
+            f32_lut: Vec::new(),
+            u8_lut: (0..m * 16).map(|_| g.usize_in(0..256) as u8).collect(),
+            scale: g.f32_in(0.001, 0.1),
+            bias: g.f32_in(-1.0, 1.0),
+            quantized: true,
+        };
+        let blocked = BlockedCodes::from_codes(&codes, len, code_bytes, m);
+        let mut want = Vec::new();
+        lut16::score_all_with(KernelKind::Portable, &blocked, &lut, 0.25, &mut want);
+        let mut got = Vec::new();
+        lut16::score_all_with(kind, &blocked, &lut, 0.25, &mut got);
+        assert_eq!(want.len(), got.len());
+        for i in 0..len {
+            assert_eq!(
+                want[i].to_bits(),
+                got[i].to_bits(),
+                "avx512 m={m} len={len} i={i}: {} vs {}",
+                want[i],
+                got[i]
+            );
+        }
+    });
+}
+
 /// The dispatched kernel (whatever this CPU selects) agrees with the
 /// quantized scalar reference exposed by the product quantizer itself,
 /// on real codes from a trained PQ.

@@ -13,7 +13,11 @@
 //! * recall metrics (`*recall*`): fail on any absolute drop greater
 //!   than `--recall-drop` (default 0.01) — recall is seeded and
 //!   deterministic, so the bar is much tighter than for wall-clock
-//!   metrics.
+//!   metrics;
+//! * allocation counts (`*allocs*`): lower is better, and a **zero**
+//!   baseline is a contract, not a measurement — any allocation at all
+//!   fails, with no relative tolerance (0 → 1 is a broken zero-alloc
+//!   hot path, not a 15% wobble).
 //!
 //! Counters, shapes, and config echoes (`n`, `dim`, `quick`, …) are not
 //! gated. Metrics are matched by their path through the report, with
@@ -49,6 +53,9 @@ enum MetricKind {
     LowerBetter,
     /// Recall: higher is better, absolute-drop tolerance.
     Recall,
+    /// Allocator-call counts: lower is better; a zero baseline admits
+    /// no allocation at all (the zero-alloc hot-path contract).
+    Allocs,
 }
 
 /// Classify a metric by the last path segment (the leaf key). Returns
@@ -58,6 +65,9 @@ fn classify(key: &str) -> Option<MetricKind> {
     let k = key.to_ascii_lowercase();
     if k.contains("recall") {
         return Some(MetricKind::Recall);
+    }
+    if k.contains("allocs") {
+        return Some(MetricKind::Allocs);
     }
     if k.ends_with("_qps")
         || k == "qps"
@@ -205,6 +215,17 @@ fn compare(
                 };
                 // improvement-positive: latency going down is good
                 (-rel, rel > tolerance)
+            }
+            MetricKind::Allocs => {
+                if base.abs() <= f64::EPSILON {
+                    // A zero baseline is absolute: one allocation breaks
+                    // the contract (relative tolerance from 0 would pass
+                    // anything).
+                    (if cur > 0.0 { -1.0 } else { 0.0 }, cur > 0.0)
+                } else {
+                    let rel = (cur - base) / base;
+                    (-rel, rel > tolerance)
+                }
             }
         };
         rows.push(Row {
@@ -449,6 +470,8 @@ mod tests {
         );
         assert_eq!(classify("recall_after_retrain"), Some(MetricKind::Recall));
         assert_eq!(classify("auto_recall_recovered"), Some(MetricKind::Recall));
+        assert_eq!(classify("allocs_per_query"), Some(MetricKind::Allocs));
+        assert_eq!(classify("single_query_p50_us"), Some(MetricKind::LowerBetter));
         // Not gated: counts, shapes, config echoes.
         assert_eq!(classify("n"), None);
         assert_eq!(classify("dim"), None);
@@ -502,6 +525,28 @@ mod tests {
         let (rows, _) = run_compare(&base, &better);
         assert!(rows.iter().all(|r| !r.failed));
         assert!(rows.iter().all(|r| r.delta > 0.0));
+    }
+
+    #[test]
+    fn zero_alloc_baseline_fails_on_any_allocation() {
+        let base = Value::parse("{\"allocs_per_query\":0}").unwrap();
+        let clean = Value::parse("{\"allocs_per_query\":0}").unwrap();
+        let (rows, _) = run_compare(&base, &clean);
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].failed, "0 → 0 must pass");
+        // A single allocation breaks the contract — relative tolerance
+        // from a zero baseline must not wave it through.
+        let dirty = Value::parse("{\"allocs_per_query\":1}").unwrap();
+        let (rows, _) = run_compare(&base, &dirty);
+        assert!(rows[0].failed, "0 → 1 must fail the gate");
+        // Nonzero baselines fall back to relative tolerance.
+        let base = Value::parse("{\"allocs_per_query\":100}").unwrap();
+        let ok = Value::parse("{\"allocs_per_query\":110}").unwrap();
+        let (rows, _) = run_compare(&base, &ok);
+        assert!(!rows[0].failed, "10% rise is inside tolerance");
+        let bad = Value::parse("{\"allocs_per_query\":130}").unwrap();
+        let (rows, _) = run_compare(&base, &bad);
+        assert!(rows[0].failed, "30% rise regresses");
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! `hotpath_lint` — static check for the zero-alloc hot-path contract.
+//!
+//! The query hot paths are bracketed with marker comments:
+//!
+//! ```text
+//! // hot-path: no-alloc begin
+//! ...scan / rerank / merge...
+//! // hot-path: no-alloc end
+//! ```
+//!
+//! This tool scans `rust/src` for those regions and fails when a line
+//! inside one contains an allocating construct (`vec![`,
+//! `Vec::with_capacity`, `.to_vec()`, `Box::new(`, `format!(`,
+//! `.collect()`, `.to_string()`, `String::from(`). The allocation test
+//! (`rust/tests/alloc.rs`) proves the steady state is clean at runtime;
+//! this lint catches the regression at review time, before anyone has to
+//! bisect a p99 blip, and covers paths the test fixtures do not reach.
+//!
+//! The check is textual on purpose: it runs in the CI lint job with no
+//! compilation, and the marked regions are short enough that the crude
+//! line-level match has no false positives (comments are stripped before
+//! matching). It also fails when no region is found at all — if the
+//! markers are renamed, the lint must be updated, not silently disarmed.
+//!
+//! Usage: hotpath_lint [src-root (default rust/src)]
+
+use std::path::{Path, PathBuf};
+
+/// Substrings that allocate. Line-level, matched after stripping `//`
+/// comments.
+const BANNED: &[&str] = &[
+    "vec![",
+    "Vec::with_capacity",
+    ".to_vec()",
+    "Box::new(",
+    "format!(",
+    ".collect()",
+    ".collect::<",
+    ".to_string()",
+    "String::from(",
+    "String::new(",
+];
+
+const BEGIN: &str = "hot-path: no-alloc begin";
+const END: &str = "hot-path: no-alloc end";
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Code portion of a line: everything before a `//` comment.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn main() {
+    let root = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "rust/src".to_string());
+    let mut files = Vec::new();
+    if let Err(e) = rust_files(Path::new(&root), &mut files) {
+        eprintln!("hotpath_lint: cannot walk {root}: {e}");
+        std::process::exit(2);
+    }
+    files.sort();
+
+    let mut regions = 0usize;
+    let mut violations: Vec<String> = Vec::new();
+    for file in &files {
+        let text = match std::fs::read_to_string(file) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("hotpath_lint: cannot read {}: {e}", file.display());
+                std::process::exit(2);
+            }
+        };
+        let mut open_at: Option<usize> = None;
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            if line.contains(BEGIN) {
+                if open_at.is_some() {
+                    violations.push(format!(
+                        "{}:{lineno}: nested `{BEGIN}` marker",
+                        file.display()
+                    ));
+                }
+                open_at = Some(lineno);
+                regions += 1;
+                continue;
+            }
+            if line.contains(END) {
+                if open_at.is_none() {
+                    violations.push(format!(
+                        "{}:{lineno}: `{END}` without matching begin",
+                        file.display()
+                    ));
+                }
+                open_at = None;
+                continue;
+            }
+            if open_at.is_some() {
+                let code = code_part(line);
+                for pat in BANNED {
+                    if code.contains(pat) {
+                        violations.push(format!(
+                            "{}:{lineno}: `{pat}` inside a no-alloc hot-path region \
+                             (opened at line {})",
+                            file.display(),
+                            open_at.unwrap()
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(open) = open_at {
+            violations.push(format!(
+                "{}:{open}: `{BEGIN}` region never closed",
+                file.display()
+            ));
+        }
+    }
+
+    if regions == 0 {
+        eprintln!(
+            "hotpath_lint FAILED: no `{BEGIN}` regions found under {root} — \
+             markers renamed or removed? The lint must not be silently disarmed."
+        );
+        std::process::exit(1);
+    }
+    if !violations.is_empty() {
+        eprintln!(
+            "hotpath_lint FAILED: {} violation(s) in {} region(s):",
+            violations.len(),
+            regions
+        );
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "hotpath_lint passed: {regions} no-alloc region(s) across {} files, no allocating \
+         constructs",
+        files.len()
+    );
+}
