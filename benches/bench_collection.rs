@@ -52,6 +52,7 @@ fn build_collection(
         },
         background_compact: false,
         maintenance: Default::default(),
+        durability: Default::default(),
     };
     Collection::build(engine.clone(), data, &icfg, ccfg).expect("build collection")
 }

@@ -1,0 +1,208 @@
+//! Durability benchmark: WAL append latency with and without per-record
+//! fsync, crash-recovery time as a function of WAL length, and the churn
+//! throughput overhead of running with the WAL enabled (group commit).
+//!
+//! Emits `BENCH_durability.json` so successive PRs can track the cost of
+//! the crash-safety layer.
+//!
+//! Run with: `cargo bench --bench bench_durability [-- --quick]`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use soar_ann::config::{
+    CollectionConfig, DurabilityConfig, FsyncPolicy, IndexConfig, MutableConfig, ShardRouting,
+    SpillMode,
+};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::index::{Collection, ShardWal};
+use soar_ann::linalg::{MatrixF32, Rng};
+use soar_ann::runtime::Engine;
+use soar_ann::util::fs::{DurableFs, RealFs};
+use soar_ann::util::json::Value;
+use soar_ann::util::tempdir::TempDir;
+
+fn percentile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn perturbed(rng: &mut Rng, data: &MatrixF32, noise: f32) -> Vec<f32> {
+    let src = rng.next_below(data.rows() as u32) as usize;
+    let mut v = data.row(src).to_vec();
+    for x in v.iter_mut() {
+        *x += noise * rng.next_gaussian();
+    }
+    soar_ann::linalg::normalize(&mut v);
+    v
+}
+
+fn collection_cfg(durability: DurabilityConfig) -> CollectionConfig {
+    CollectionConfig {
+        num_shards: 1,
+        routing: ShardRouting::Hash,
+        mutable: MutableConfig {
+            delta_capacity: usize::MAX >> 1, // keep sealing out of the timings
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false,
+        maintenance: Default::default(),
+        durability,
+    }
+}
+
+/// Raw WAL append latency distribution: `iters` upsert records through
+/// [`ShardWal`], optionally fsyncing after every record.
+fn wal_append_bench(dim: usize, iters: usize, fsync_each: bool) -> (f64, f64) {
+    let dir = TempDir::new().expect("tempdir");
+    let wal_dir = dir.join("wal");
+    let fs: Arc<dyn DurableFs> = Arc::new(RealFs);
+    let (mut wal, _) = ShardWal::open(&wal_dir, fs).expect("wal open");
+    let vector = vec![0.25f32; dim];
+    let mut lat_us = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        wal.append_upsert(i as u32, &vector).expect("append");
+        if fsync_each {
+            wal.sync().expect("sync");
+        }
+        lat_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
+    }
+    lat_us.sort_by(f64::total_cmp);
+    (percentile_us(&lat_us, 0.50), percentile_us(&lat_us, 0.99))
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 2_000 } else { 8_000 };
+    let dim = 32;
+    let append_iters = if quick { 5_000 } else { 20_000 };
+    let fsync_iters = if quick { 100 } else { 400 };
+    let churn_ops = if quick { 1_500 } else { 6_000 };
+    let recovery_lengths: &[usize] = if quick { &[200, 800] } else { &[500, 2_000, 8_000] };
+    let partitions = (n / 400).max(8);
+
+    let ds = SyntheticConfig::glove_like(n, dim, 16, 42).generate();
+    let engine = Arc::new(Engine::cpu());
+    let icfg = IndexConfig {
+        num_partitions: partitions,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let mut report_fields: Vec<(&str, Value)> = vec![
+        ("bench", Value::str("durability")),
+        ("n", Value::num(n as f64)),
+        ("dim", Value::num(dim as f64)),
+        ("quick", Value::Bool(quick)),
+    ];
+
+    // --- WAL append latency, no fsync ---------------------------------
+    let (p50, p99) = wal_append_bench(dim, append_iters, false);
+    println!("bench durability/append       p50 {p50:>8.2}µs  p99 {p99:>8.2}µs  ({append_iters} records, no fsync)");
+    report_fields.push(("wal_append_p50_us", Value::num(p50)));
+    report_fields.push(("wal_append_p99_us", Value::num(p99)));
+
+    // --- WAL append latency, fsync per record --------------------------
+    let (fp50, fp99) = wal_append_bench(dim, fsync_iters, true);
+    println!("bench durability/append+sync  p50 {fp50:>8.2}µs  p99 {fp99:>8.2}µs  ({fsync_iters} records, fsync each)");
+    report_fields.push(("wal_append_fsync_p50_us", Value::num(fp50)));
+    report_fields.push(("wal_append_fsync_p99_us", Value::num(fp99)));
+
+    // --- recovery time vs WAL length -----------------------------------
+    // One durable base checkpoint; each run replays a longer WAL tail
+    // through the normal mutation path on open.
+    println!("building base collection: n={n} dim={dim}…");
+    let base = Collection::build(
+        engine.clone(),
+        &ds.data,
+        &icfg,
+        collection_cfg(DurabilityConfig {
+            wal: true,
+            fsync: FsyncPolicy::Never,
+        }),
+    )
+    .expect("build");
+    let root = TempDir::new().expect("tempdir");
+    let mut recovery_rows = Vec::new();
+    for &ops in recovery_lengths {
+        let dir = root.join(format!("recover-{ops}"));
+        base.save(&dir).expect("save");
+        {
+            let (col, _) = Collection::open(&dir, engine.clone()).expect("open");
+            let mut rng = Rng::new(7);
+            for i in 0..ops {
+                col.upsert((n + i) as u32, &perturbed(&mut rng, &ds.data, 0.05))
+                    .expect("upsert");
+            }
+            // Dropped without a checkpoint: the whole tail stays in the
+            // WAL, exactly the post-crash shape.
+        }
+        let t0 = Instant::now();
+        let (col, report) = Collection::open(&dir, engine.clone()).expect("recover");
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(report.wal_ops_replayed, ops);
+        assert_eq!(col.snapshot().live_count(), n + ops);
+        let per_sec = ops as f64 / (ms / 1e3);
+        println!(
+            "bench durability/recovery     {ms:>10.1} ms   ({ops} WAL ops, {per_sec:.0} replayed/s)"
+        );
+        recovery_rows.push(Value::obj(vec![
+            ("config", Value::str(&format!("wal_ops_{ops}"))),
+            ("wal_ops", Value::num(ops as f64)),
+            ("recovery_ms", Value::num(ms)),
+            ("replay_per_sec", Value::num(per_sec)),
+        ]));
+    }
+    report_fields.push(("recovery_vs_wal_length", Value::Arr(recovery_rows)));
+
+    // --- churn throughput: WAL off vs WAL on (group commit) ------------
+    let churn_qps = |durability: DurabilityConfig| -> (f64, f64) {
+        let col = Collection::build(engine.clone(), &ds.data, &icfg, collection_cfg(durability))
+            .expect("build");
+        let dir = TempDir::new().expect("tempdir");
+        let home = dir.join("col");
+        col.save(&home).expect("save");
+        drop(col);
+        let (col, _) = Collection::open(&home, engine.clone()).expect("open");
+        let mut rng = Rng::new(11);
+        let t0 = Instant::now();
+        for i in 0..churn_ops {
+            if i % 5 == 4 {
+                col.delete((n + i - 1) as u32).expect("delete");
+            } else {
+                col.upsert((n + i) as u32, &perturbed(&mut rng, &ds.data, 0.05))
+                    .expect("upsert");
+            }
+        }
+        col.flush();
+        let qps = churn_ops as f64 / t0.elapsed().as_secs_f64();
+        // Checkpoint cost while we have a WAL-attached collection.
+        let t0 = Instant::now();
+        col.save(&home).expect("checkpoint");
+        (qps, t0.elapsed().as_secs_f64() * 1e3)
+    };
+    let (qps_off, _) = churn_qps(DurabilityConfig {
+        wal: false,
+        fsync: FsyncPolicy::GroupCommit,
+    });
+    let (qps_on, checkpoint_ms) = churn_qps(DurabilityConfig {
+        wal: true,
+        fsync: FsyncPolicy::GroupCommit,
+    });
+    let retention = if qps_off > 0.0 { qps_on / qps_off } else { 0.0 };
+    println!(
+        "bench durability/churn        off {qps_off:>8.0} ops/s  wal {qps_on:>8.0} ops/s  (retention {retention:.2}, checkpoint {checkpoint_ms:.1}ms)"
+    );
+    report_fields.push(("churn_qps_nowal", Value::num(qps_off)));
+    report_fields.push(("churn_qps_wal", Value::num(qps_on)));
+    report_fields.push(("wal_churn_retention", Value::num(retention)));
+    report_fields.push(("checkpoint_ms", Value::num(checkpoint_ms)));
+
+    let report = Value::obj(report_fields);
+    std::fs::write("BENCH_durability.json", report.to_json_pretty()).expect("write report");
+    println!("wrote BENCH_durability.json");
+}

@@ -167,6 +167,7 @@ fn main() {
                 converge_compact: true,
                 ..Default::default()
             },
+            durability: Default::default(),
         };
         let icfg = IndexConfig {
             num_partitions: partitions,

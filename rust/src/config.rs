@@ -450,6 +450,100 @@ impl MaintenanceConfig {
     }
 }
 
+/// When the per-shard write-ahead log fsyncs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync after every appended record: an acknowledged write is
+    /// durable the moment `upsert`/`delete` returns. Strongest
+    /// guarantee, one fsync per mutation.
+    Always,
+    /// fsync when the publish window commits (riding the existing
+    /// `publish_coalesce` / publish-timer group-commit machinery): an
+    /// acknowledged write is durable once its group publishes, so the
+    /// fsync cost amortizes across the window. The default.
+    GroupCommit,
+    /// Never fsync from the write path; the OS flushes on its own
+    /// schedule. Crash-*consistent* (torn tails are detected and
+    /// discarded on replay) but the unsynced tail may be lost.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Short tag used in the manifest and the CLI.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::GroupCommit => "group_commit",
+            FsyncPolicy::Never => "never",
+        }
+    }
+
+    /// Inverse of [`FsyncPolicy::tag`].
+    pub fn from_tag(tag: &str) -> Result<FsyncPolicy> {
+        match tag {
+            "always" => Ok(FsyncPolicy::Always),
+            "group_commit" => Ok(FsyncPolicy::GroupCommit),
+            "never" => Ok(FsyncPolicy::Never),
+            other => Err(Error::Config(format!("unknown fsync policy {other:?}"))),
+        }
+    }
+}
+
+/// Crash-safety knobs for a [`crate::index::Collection`]. The default is
+/// everything **off** — exactly the pre-durability behavior (no WAL, no
+/// footers, plain writes), and a default-valued config is omitted from
+/// the manifest JSON so legacy manifests stay byte-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DurabilityConfig {
+    /// Append every upsert/delete to a per-shard checksummed WAL and
+    /// replay its tail on `Collection::open`. Also switches saves to
+    /// durable installs (checksummed footer + atomic rename).
+    pub wal: bool,
+    /// WAL fsync schedule (ignored when `wal` is off).
+    pub fsync: FsyncPolicy,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        DurabilityConfig {
+            wal: false,
+            fsync: FsyncPolicy::GroupCommit,
+        }
+    }
+}
+
+impl DurabilityConfig {
+    /// JSON encoding (persisted inside the v3 collection manifest when
+    /// non-default).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("wal", Value::Bool(self.wal)),
+            ("fsync", Value::str(self.fsync.tag())),
+        ])
+    }
+
+    /// Inverse of [`DurabilityConfig::to_json`]. Absent fields take
+    /// their defaults; present fields of the wrong type are errors.
+    pub fn from_json(v: &Value) -> Result<DurabilityConfig> {
+        let d = DurabilityConfig::default();
+        Ok(DurabilityConfig {
+            wal: match v.get("wal") {
+                None => d.wal,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("wal must be a boolean".into()))?,
+            },
+            fsync: match v.get("fsync") {
+                None => d.fsync,
+                Some(x) => FsyncPolicy::from_tag(
+                    x.as_str()
+                        .ok_or_else(|| Error::Config("fsync must be a string".into()))?,
+                )?,
+            },
+        })
+    }
+}
+
 /// How a [`crate::index::Collection`] maps a global id to one of its
 /// shards. The policy is persisted in the v3 collection manifest so a
 /// reloaded collection keeps routing upserts to the shard that already
@@ -526,6 +620,9 @@ pub struct CollectionConfig {
     /// when `background_compact` is set and by explicit
     /// `Collection::maintenance_tick` calls otherwise.
     pub maintenance: MaintenanceConfig,
+    /// Crash-safety policy (per-shard WAL + durable installs). Default
+    /// off ⇒ bit-for-bit the pre-durability behavior.
+    pub durability: DurabilityConfig,
 }
 
 impl Default for CollectionConfig {
@@ -536,6 +633,7 @@ impl Default for CollectionConfig {
             mutable: MutableConfig::default(),
             background_compact: false,
             maintenance: MaintenanceConfig::default(),
+            durability: DurabilityConfig::default(),
         }
     }
 }
@@ -558,15 +656,22 @@ impl CollectionConfig {
         }
     }
 
-    /// JSON encoding (persisted inside the v3 collection manifest).
+    /// JSON encoding (persisted inside the v3 collection manifest). A
+    /// default (all-off) durability config is omitted so manifests
+    /// written by non-durable deployments stay byte-identical to the
+    /// pre-durability format.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("num_shards", Value::num(self.num_shards as f64)),
             ("routing", Value::str(self.routing.tag())),
             ("mutable", self.mutable.to_json()),
             ("background_compact", Value::Bool(self.background_compact)),
             ("maintenance", self.maintenance.to_json()),
-        ])
+        ];
+        if self.durability != DurabilityConfig::default() {
+            fields.push(("durability", self.durability.to_json()));
+        }
+        Value::obj(fields)
     }
 
     /// Inverse of [`CollectionConfig::to_json`]. `maintenance` is
@@ -594,6 +699,10 @@ impl CollectionConfig {
             maintenance: match v.get("maintenance") {
                 Some(m) => MaintenanceConfig::from_json(m)?,
                 None => MaintenanceConfig::default(),
+            },
+            durability: match v.get("durability") {
+                Some(d) => DurabilityConfig::from_json(d)?,
+                None => DurabilityConfig::default(),
             },
         };
         cfg.validate()?;
@@ -829,6 +938,7 @@ mod tests {
                 converge_compact: true,
                 converge_max_rows: 512,
             },
+            durability: Default::default(),
         };
         c.validate().unwrap();
         // Background workers own the compaction triggers.
@@ -891,6 +1001,38 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn durability_config_round_trip_and_manifest_compat() {
+        let d = DurabilityConfig::default();
+        assert!(!d.wal, "durability must be opt-in");
+        assert_eq!(d.fsync, FsyncPolicy::GroupCommit);
+        // A default config leaves the manifest JSON untouched — the
+        // byte-identity guarantee for non-durable deployments.
+        let legacy_json = CollectionConfig::default().to_json().to_json();
+        assert!(!legacy_json.contains("durability"), "{legacy_json}");
+        // Non-default configs round-trip.
+        for fsync in [FsyncPolicy::Always, FsyncPolicy::GroupCommit, FsyncPolicy::Never] {
+            assert_eq!(FsyncPolicy::from_tag(fsync.tag()).unwrap(), fsync);
+            let c = CollectionConfig {
+                durability: DurabilityConfig { wal: true, fsync },
+                ..Default::default()
+            };
+            let s = c.to_json().to_json();
+            assert!(s.contains("durability"));
+            let back =
+                CollectionConfig::from_json(&crate::util::json::Value::parse(&s).unwrap()).unwrap();
+            assert_eq!(back, c);
+        }
+        assert!(FsyncPolicy::from_tag("bogus").is_err());
+        // Absent fields default; wrong-typed fields error.
+        let empty = crate::util::json::Value::parse("{}").unwrap();
+        assert_eq!(DurabilityConfig::from_json(&empty).unwrap(), d);
+        let bad = crate::util::json::Value::parse("{\"wal\": 1}").unwrap();
+        assert!(DurabilityConfig::from_json(&bad).is_err());
+        let bad = crate::util::json::Value::parse("{\"fsync\": true}").unwrap();
+        assert!(DurabilityConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -48,6 +48,7 @@ impl ShardedIndex {
             mutable: MutableConfig::default(),
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         Ok(ShardedIndex {
             collection: Collection::build(engine, data, config, ccfg)?,

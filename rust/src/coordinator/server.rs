@@ -607,6 +607,7 @@ mod tests {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let params = SearchParams {

@@ -13,10 +13,40 @@ pub enum Error {
     Serialize(String),
     /// Filesystem IO.
     Io(std::io::Error),
+    /// An on-disk file failed checksum / framing verification. Always
+    /// carries the path, so an operator of an S-shard collection knows
+    /// *which* file to restore, and a detail string describing what
+    /// failed to verify.
+    Corrupt { path: String, detail: String },
     /// PJRT runtime failure (artifact load / compile / execute).
     Runtime(String),
     /// The serving coordinator was shut down or a worker died.
     Coordinator(String),
+}
+
+impl Error {
+    /// A [`Error::Corrupt`] for `path`.
+    pub fn corrupt(path: &std::path::Path, detail: impl Into<String>) -> Error {
+        Error::Corrupt {
+            path: path.display().to_string(),
+            detail: detail.into(),
+        }
+    }
+
+    /// Attach a file path to IO and serialize errors that lack one, so a
+    /// failure in an S-shard load names the offending file. The variant
+    /// shape is preserved (`Io` stays `Io`, `Serialize` stays
+    /// `Serialize`) — only the message is contextualized.
+    pub fn with_path(self, path: &std::path::Path) -> Error {
+        match self {
+            Error::Io(e) => Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("{}: {e}", path.display()),
+            )),
+            Error::Serialize(m) => Error::Serialize(format!("{}: {m}", path.display())),
+            other => other,
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -26,6 +56,9 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Serialize(m) => write!(f, "serialize error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Corrupt { path, detail } => {
+                write!(f, "corrupt file {path}: {detail}")
+            }
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
         }
@@ -66,10 +99,32 @@ mod tests {
             ),
             (Error::Runtime("x".into()), "runtime"),
             (Error::Coordinator("x".into()), "coordinator"),
+            (
+                Error::Corrupt {
+                    path: "shard-0001.soar".into(),
+                    detail: "bad crc".into(),
+                },
+                "corrupt",
+            ),
         ];
         for (e, frag) in cases {
             assert!(e.to_string().contains(frag), "{e}");
         }
+    }
+
+    #[test]
+    fn with_path_contextualizes_io_and_serialize() {
+        let p = std::path::Path::new("/tmp/shard-0002.soar");
+        let io = Error::Io(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let io = io.with_path(p);
+        assert!(matches!(io, Error::Io(_)), "variant shape preserved");
+        assert!(io.to_string().contains("shard-0002"));
+        let ser = Error::Serialize("bad magic".into()).with_path(p);
+        assert!(matches!(ser, Error::Serialize(_)));
+        assert!(ser.to_string().contains("shard-0002"));
+        // Other variants pass through untouched.
+        let cfg = Error::Config("x".into()).with_path(p);
+        assert!(!cfg.to_string().contains("shard-0002"));
     }
 
     #[test]

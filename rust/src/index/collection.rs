@@ -37,7 +37,7 @@
 //!   the same state machine via [`Collection::maintenance_tick`].
 
 use std::collections::HashSet;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -47,6 +47,8 @@ use crate::config::{CollectionConfig, IndexConfig, MaintenanceConfig, SearchPara
 use crate::error::{Error, Result};
 use crate::index::builder::build_index_with_int8;
 use crate::index::mutable::{MutableIndex, MutableStats};
+use crate::index::serialize;
+use crate::index::wal::{ShardWal, WalOp};
 use crate::index::searcher::{Search, SearchScratch, SearchStats, SnapshotSearcher};
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 use crate::index::SoarIndex;
@@ -54,6 +56,7 @@ use crate::linalg::topk::{Scored, TopK};
 use crate::linalg::MatrixF32;
 use crate::quant::Int8Quantizer;
 use crate::runtime::Engine;
+use crate::util::fs::{DurableFs, RealFs};
 use crate::util::parallel::{par_chunks_mut, par_map};
 
 /// A point-in-time view of every shard: one immutable `IndexSnapshot`
@@ -176,7 +179,20 @@ impl<'a> CollectionSearcher<'a> {
     /// zero allocator calls.
     fn fan_out_into(&self, q: &[f32], params: &SearchParams, out: &mut Vec<Scored>) -> SearchStats {
         let shards = &self.snapshot.shards;
-        let pooled = self.fan_out_pool.lock().unwrap().take();
+        // A panic on another fan-out poisons this mutex, but cannot leave
+        // the pool itself inconsistent: the pool is taken *out* before
+        // any fallible work runs. Recover the guard and rebuild the
+        // pooled state from scratch anyway — one query's worth of
+        // re-warming beats propagating the panic to every later caller.
+        let pooled = self
+            .fan_out_pool
+            .lock()
+            .unwrap_or_else(|poisoned| {
+                let mut g = poisoned.into_inner();
+                *g = None;
+                g
+            })
+            .take();
         let mut pool = match pooled {
             Some(p) if p.shards.len() == shards.len() => p,
             _ => FanOutPool {
@@ -210,7 +226,10 @@ impl<'a> CollectionSearcher<'a> {
         out.clear();
         pool.merged.sort_into(out);
         // hot-path: no-alloc end
-        *self.fan_out_pool.lock().unwrap() = Some(pool);
+        *self
+            .fan_out_pool
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner()) = Some(pool);
         stats
     }
 }
@@ -551,6 +570,60 @@ impl CollectionStats {
             .max()
             .unwrap_or(0)
     }
+
+    /// WAL records appended across all shards (0 when durability is off).
+    pub fn wal_records(&self) -> u64 {
+        self.shards
+            .iter()
+            .filter_map(|s| s.wal.map(|w| w.appended_records))
+            .sum()
+    }
+
+    /// WAL fsyncs issued across all shards.
+    pub fn wal_syncs(&self) -> u64 {
+        self.shards
+            .iter()
+            .filter_map(|s| s.wal.map(|w| w.syncs))
+            .sum()
+    }
+
+    /// Group-commit WAL fsync failures across all shards (should be 0).
+    pub fn wal_sync_errors(&self) -> u64 {
+        self.shards.iter().map(|s| s.wal_sync_errors).sum()
+    }
+}
+
+/// What [`Collection::open`] had to do to bring the on-disk state back.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// The primary manifest was corrupt; the previous generation
+    /// (`COLLECTION.soar.1`) was used instead.
+    pub manifest_fallback: bool,
+    /// Shards restored.
+    pub shards: usize,
+    /// WAL records replayed through the mutation path.
+    pub wal_ops_replayed: usize,
+    /// WAL segment files scanned during replay.
+    pub wal_segments_replayed: u64,
+    /// Bytes of crash-torn (never-acknowledged) WAL tail discarded.
+    pub torn_bytes_discarded: u64,
+}
+
+/// Per-shard WAL directory under a collection directory.
+fn wal_dir(base: &Path, s: usize) -> PathBuf {
+    base.join("wal").join(format!("shard-{s:04}"))
+}
+
+/// Move a corrupt file aside (best effort — the descriptive error still
+/// propagates even if the rename fails) so no later open can mistake it
+/// for live state.
+fn quarantine(fs: &dyn DurableFs, path: &Path) {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    name.push_str(".corrupt");
+    let _ = fs.rename(path, &path.with_file_name(name));
 }
 
 /// S independently mutable, snapshot-served shards behind one facade:
@@ -562,6 +635,14 @@ pub struct Collection {
     config: CollectionConfig,
     shards: Vec<Arc<MutableIndex>>,
     workers: Vec<MaintenanceWorker>,
+    /// Filesystem used for durable saves (and shared with the shard
+    /// WALs); [`RealFs`] outside fault-injection tests.
+    fs: Arc<dyn DurableFs>,
+    /// The collection directory whose WALs are attached, when durability
+    /// is on — [`Collection::checkpoint`] only prunes WAL segments when
+    /// saving back to this directory (a save-elsewhere must not discard
+    /// the home directory's replay state).
+    wal_home: Option<PathBuf>,
 }
 
 impl Collection {
@@ -734,6 +815,8 @@ impl Collection {
             config,
             shards,
             workers,
+            fs: Arc::new(RealFs),
+            wal_home: None,
         })
     }
 
@@ -744,12 +827,161 @@ impl Collection {
         Collection::from_snapshots(snapshots, engine, config)
     }
 
+    /// Crash-safe recovery entry point: pick the newest **valid**
+    /// manifest generation (falling back to the previous one when the
+    /// primary is corrupt), verify and load every shard file —
+    /// quarantining a corrupt file aside before surfacing its
+    /// [`Error::Corrupt`] — and, when the stored config enables
+    /// durability, replay each shard's WAL tail through the normal
+    /// mutation path and resume logging. Returns the collection plus a
+    /// report of what recovery had to do.
+    pub fn open(path: &Path, engine: Arc<Engine>) -> Result<(Collection, RecoveryReport)> {
+        Collection::open_with(path, engine, Arc::new(RealFs))
+    }
+
+    /// [`Collection::open`] through an explicit [`DurableFs`] (the
+    /// fault-injection harness drives recovery through a scripted one).
+    pub fn open_with(
+        path: &Path,
+        engine: Arc<Engine>,
+        fs: Arc<dyn DurableFs>,
+    ) -> Result<(Collection, RecoveryReport)> {
+        let mut report = RecoveryReport::default();
+        let manifest = serialize::manifest_path(path);
+        let parsed = match serialize::load_collection_manifest_with(&manifest, fs.as_ref()) {
+            Ok(m) => m,
+            Err(primary_err) => {
+                // The backup is the previous save's manifest — every
+                // shard file it references was installed atomically
+                // before it was demoted, so falling back is safe.
+                let backup = manifest.with_file_name(serialize::COLLECTION_MANIFEST_BACKUP);
+                if !fs.exists(&backup) {
+                    return Err(primary_err);
+                }
+                match serialize::load_collection_manifest_with(&backup, fs.as_ref()) {
+                    Ok(m) => {
+                        quarantine(fs.as_ref(), &manifest);
+                        report.manifest_fallback = true;
+                        m
+                    }
+                    Err(_) => return Err(primary_err),
+                }
+            }
+        };
+        let m = match parsed {
+            serialize::ManifestFile::SingleSnapshot => {
+                // Legacy single-file deployment: no manifest directory,
+                // no WAL — verify, load, migrate in place.
+                let (snaps, config) =
+                    match serialize::load_collection_parts_with(path, fs.as_ref()) {
+                        Ok(x) => x,
+                        Err(e @ Error::Corrupt { .. }) => {
+                            quarantine(fs.as_ref(), &manifest);
+                            return Err(e);
+                        }
+                        Err(e) => return Err(e),
+                    };
+                let c = Collection::from_snapshots(snaps, engine, config)?;
+                report.shards = 1;
+                return Ok((c, report));
+            }
+            serialize::ManifestFile::Collection(m) => m,
+        };
+        let base = manifest
+            .parent()
+            .ok_or_else(|| Error::Serialize("manifest has no parent directory".into()))?;
+        let mut snaps = Vec::with_capacity(m.shard_files.len());
+        for name in &m.shard_files {
+            let p = base.join(name);
+            match serialize::load_snapshot_with(&p, fs.as_ref()) {
+                Ok(s) => snaps.push(Arc::new(s)),
+                Err(e @ Error::Corrupt { .. }) => {
+                    quarantine(fs.as_ref(), &p);
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let durability = m.config.durability;
+        let mut collection = Collection::from_snapshots(snaps, engine, m.config)?;
+        collection.fs = fs.clone();
+        report.shards = collection.shards.len();
+        if durability.wal {
+            for (s, shard) in collection.shards.iter().enumerate() {
+                let (wal, rec) = ShardWal::open(&wal_dir(base, s), fs.clone())?;
+                // Replay through the normal mutation path with no WAL
+                // attached: recovered records are not re-logged (their
+                // original segments survive until the next checkpoint).
+                for op in &rec.ops {
+                    match op {
+                        WalOp::Upsert { id, vector } => shard.upsert(*id, vector)?,
+                        WalOp::Delete { id } => {
+                            shard.delete(*id)?;
+                        }
+                    }
+                }
+                report.wal_ops_replayed += rec.ops.len();
+                report.wal_segments_replayed += rec.segments_replayed;
+                report.torn_bytes_discarded += rec.torn_bytes_discarded;
+                shard.attach_wal(wal, durability.fsync);
+            }
+            collection.wal_home = Some(base.to_path_buf());
+            // Replayed mutations become visible to readers immediately.
+            collection.flush();
+        }
+        Ok((collection, report))
+    }
+
     /// Persist as a v3 manifest + per-shard snapshot files under `dir`
     /// (created if needed). Pending group-commit windows are flushed
-    /// first.
+    /// first. With durability enabled this is a [`Collection::checkpoint`]:
+    /// every file is checksummed and atomically installed, and covered
+    /// WAL segments are pruned.
     pub fn save(&self, dir: &Path) -> Result<()> {
+        if self.config.durability.wal {
+            return self.checkpoint(dir);
+        }
         self.flush();
         crate::index::serialize::save_collection(&self.snapshot(), &self.config, dir)
+    }
+
+    /// Durability checkpoint: per shard, publish + capture + rotate the
+    /// WAL under one lock hold (so each rotation boundary covers exactly
+    /// what its captured snapshot contains), durably install every shard
+    /// file and the manifest (checksummed footer, write-to-temp → fsync
+    /// → rename → fsync-dir, previous manifest demoted to backup), and
+    /// only then prune the covered WAL segments. Shards without an
+    /// attached WAL (a freshly built collection before its first
+    /// [`Collection::open`]) save durably with nothing to prune.
+    pub fn checkpoint(&self, dir: &Path) -> Result<()> {
+        let mut snaps = Vec::with_capacity(self.shards.len());
+        let mut boundaries = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            match shard.begin_checkpoint()? {
+                Some((snap, b)) => {
+                    snaps.push(snap);
+                    boundaries.push(Some(b));
+                }
+                None => {
+                    shard.flush();
+                    snaps.push(shard.snapshot());
+                    boundaries.push(None);
+                }
+            }
+        }
+        let snapshot = CollectionSnapshot { shards: snaps };
+        serialize::save_collection_durable(&snapshot, &self.config, dir, self.fs.as_ref())?;
+        // Prune only when this save landed in the directory whose WALs
+        // are attached — a save-elsewhere must leave the home
+        // directory's replay state intact.
+        if self.wal_home.as_deref() == Some(dir) {
+            for (shard, b) in self.shards.iter().zip(&boundaries) {
+                if let Some(b) = *b {
+                    shard.end_checkpoint(*b)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn config(&self) -> &CollectionConfig {
@@ -1049,6 +1281,7 @@ mod tests {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &index_cfg(24), cfg).unwrap();
         assert_eq!(c.num_shards(), 3);
@@ -1143,6 +1376,51 @@ mod tests {
     }
 
     #[test]
+    fn poisoned_fan_out_pool_recovers() {
+        let ds = dataset(600, 37);
+        let engine = Arc::new(Engine::cpu());
+        let cfg = CollectionConfig {
+            num_shards: 3,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+            maintenance: Default::default(),
+            durability: Default::default(),
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &index_cfg(12), cfg).unwrap();
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let params = full_probe(12, 2000);
+        let q = ds.queries.row(0);
+        let (before, _) = searcher.fan_out(q, &params);
+        let batch_before = searcher.search_batch(&ds.queries, &params).unwrap();
+
+        // Poison the pool mutex the only way it can happen in production:
+        // a panic while the lock is held.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = searcher.fan_out_pool.lock().unwrap();
+            panic!("poison the fan-out pool");
+        }));
+        std::panic::set_hook(prev);
+        assert!(poisoned.is_err());
+        assert!(searcher.fan_out_pool.is_poisoned());
+
+        // Searches recover (rebuilding pooled state) instead of
+        // propagating the poison to every later caller.
+        let (after, _) = searcher.fan_out(q, &params);
+        assert_eq!(before, after);
+        let (again, _) = searcher.fan_out(q, &params);
+        assert_eq!(before, again);
+        let batch_after = searcher.search_batch(&ds.queries, &params).unwrap();
+        assert_eq!(batch_before, batch_after);
+    }
+
+    #[test]
     fn background_worker_compacts_off_the_write_path() {
         let ds = dataset(700, 31);
         let engine = Arc::new(Engine::cpu());
@@ -1156,6 +1434,7 @@ mod tests {
             },
             background_compact: true,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine, &ds.data, &index_cfg(14), cfg).unwrap();
         assert!(!c.config().shard_mutable().auto_compact);

@@ -40,6 +40,9 @@
 //!                    retrains + model-converging compaction, one
 //!                    scheduler per shard; see
 //!                    [`Collection::maintenance_tick`]).
+//! * [`wal`]        — per-shard checksummed write-ahead log: CRC32C-framed
+//!                    upsert/delete records, segment rotation at snapshot
+//!                    checkpoints, torn-tail-tolerant replay on recovery.
 //! * [`multilevel`] — two-level VQ partition selection (App. A.4.1).
 //! * [`kmr`]        — k-means-recall curves (§2.2.1, Fig 6 / Table 2).
 //! * [`stats`]      — residual/angle/rank statistics (Figs 1, 2, 4, 7–9).
@@ -65,15 +68,18 @@ pub mod segment;
 pub mod serialize;
 pub mod soar;
 pub mod stats;
+pub mod wal;
 
 pub use builder::{build_index, build_index_with_int8, encode_index};
 pub use collection::{
     Collection, CollectionSearcher, CollectionSnapshot, CollectionStats, MaintenanceAction,
+    RecoveryReport,
 };
 pub use ivf::PostingList;
 pub use mutable::{CompactionJob, ConvergeJob, MutableIndex, MutableStats, RetrainJob};
 pub use searcher::{Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher};
 pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
+pub use wal::{ShardWal, WalOp, WalRecovery, WalStats};
 
 use std::sync::Arc;
 

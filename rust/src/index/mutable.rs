@@ -76,9 +76,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::{MaintenanceConfig, MutableConfig};
+use crate::config::{FsyncPolicy, MaintenanceConfig, MutableConfig};
 use crate::error::{Error, Result};
 use crate::index::ivf::PostingList;
+use crate::index::wal::{ShardWal, WalStats};
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 use crate::index::SoarIndex;
 use crate::linalg::MatrixF32;
@@ -133,6 +134,11 @@ pub struct MutableStats {
     /// Approximate bytes those stale rows occupy (posting ids + PQ codes
     /// + int8 records + id maps).
     pub stale_bytes: usize,
+    /// Write-ahead-log counters, when durability is on.
+    pub wal: Option<WalStats>,
+    /// Group-commit WAL fsyncs that failed (should stay 0; the publish
+    /// path cannot propagate an `Err`, so failures surface here).
+    pub wal_sync_errors: u64,
 }
 
 /// Mutable builder state for the delta segment. Rows live in append-only
@@ -332,6 +338,15 @@ struct Inner {
     /// (cooldown anchor — attempts, not installs, so a repeatedly
     /// aborting retrain cannot hot-loop the worker).
     last_auto_retrain: Option<Instant>,
+    /// Write-ahead log, when durability is on. Lives under the mutation
+    /// lock so the on-disk record order is exactly the apply order.
+    wal: Option<ShardWal>,
+    /// When to fsync WAL appends: per mutation (`Always`), riding the
+    /// group-commit publish (`GroupCommit`), or never.
+    fsync: FsyncPolicy,
+    /// Group-commit syncs that failed (the publish path cannot surface
+    /// an `Err`; the counter keeps the failure observable).
+    wal_sync_errors: u64,
 }
 
 /// Effective sample span of the drift EWMA (α = 2 / (SPAN + 1)): wide
@@ -342,6 +357,15 @@ const DRIFT_EWMA_SPAN: f64 = 512.0;
 
 /// Publish the current writer state as an immutable snapshot.
 fn publish(cell: &SnapshotCell, inner: &mut Inner) {
+    // Group commit: the WAL hardens at snapshot-publication cadence, so
+    // one fsync covers the whole coalesced window of mutations.
+    if inner.fsync == FsyncPolicy::GroupCommit {
+        if let Some(w) = inner.wal.as_mut() {
+            if w.sync().is_err() {
+                inner.wal_sync_errors += 1;
+            }
+        }
+    }
     inner.pending = 0;
     inner.pending_since = None;
     inner.epoch += 1;
@@ -945,6 +969,9 @@ impl MutableIndex {
             auto_retrains: 0,
             converges: 0,
             last_auto_retrain: None,
+            wal: None,
+            fsync: FsyncPolicy::GroupCommit,
+            wal_sync_errors: 0,
         }));
         let cell = Arc::new(SnapshotCell::new(snapshot));
         let timer = if config.publish_max_delay_us > 0 {
@@ -1015,6 +1042,21 @@ impl MutableIndex {
             )));
         }
         let assignments = model.assign(&self.engine, vectors)?;
+        // WAL first: the batch is logged (and, under `Always`, fsynced)
+        // before any row lands in memory, so every acknowledged upsert
+        // is replayable after a crash. An append error aborts the batch
+        // with nothing applied; a logged-but-unapplied prefix only makes
+        // replay re-do work that is idempotent by id.
+        if inner.wal.is_some() {
+            let fsync_now = inner.fsync == FsyncPolicy::Always;
+            let w = inner.wal.as_mut().unwrap();
+            for (i, &id) in ids.iter().enumerate() {
+                w.append_upsert(id, vectors.row(i))?;
+            }
+            if fsync_now {
+                w.sync()?;
+            }
+        }
         // Drift signal: EWMA the primary-assignment loss ‖x − c₀‖² of
         // every upserted row — the same quantity the active model
         // recorded as `training_loss` over its training corpus — so the
@@ -1073,6 +1115,15 @@ impl MutableIndex {
     /// (`false` for unknown or already-deleted ids).
     pub fn delete(&self, id: u32) -> Result<bool> {
         let mut inner = self.inner.lock().unwrap();
+        // WAL before apply (see `upsert_batch`).
+        if inner.wal.is_some() {
+            let fsync_now = inner.fsync == FsyncPolicy::Always;
+            let w = inner.wal.as_mut().unwrap();
+            w.append_delete(id)?;
+            if fsync_now {
+                w.sync()?;
+            }
+        }
         let in_delta = inner.delta.remove(id);
         let was_tombstoned = inner.tombstones.contains(&id);
         let in_sealed = inner.sealed.iter().any(|s| s.contains_global(id));
@@ -1185,6 +1236,8 @@ impl MutableIndex {
             converges: inner.converges,
             stale_rows,
             stale_bytes,
+            wal: inner.wal.as_ref().map(|w| w.stats()),
+            wal_sync_errors: inner.wal_sync_errors,
         }
     }
 
@@ -1274,6 +1327,47 @@ impl MutableIndex {
         } else {
             false
         }
+    }
+
+    /// Attach an open write-ahead log: every subsequent mutation is
+    /// logged (under the mutation lock, so record order is apply order)
+    /// before it is applied. Call *after* replaying the WAL's recovered
+    /// ops through the normal mutation path — replay happens with no WAL
+    /// attached, so recovered records are not re-logged (they stay in
+    /// their original segments until the next checkpoint prunes them).
+    pub fn attach_wal(&self, wal: ShardWal, fsync: FsyncPolicy) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.wal = Some(wal);
+        inner.fsync = fsync;
+    }
+
+    /// Phase 1 of a durability checkpoint (brief lock): publish any
+    /// buffered mutations, capture the now-current snapshot, and rotate
+    /// the WAL — all under one lock hold, so the returned rotation
+    /// boundary covers *exactly* the records the snapshot contains.
+    /// Persist the snapshot durably, then call
+    /// [`MutableIndex::end_checkpoint`] with the boundary. Returns
+    /// `None` when no WAL is attached.
+    pub fn begin_checkpoint(&self) -> Result<Option<(Arc<IndexSnapshot>, u64)>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.wal.is_none() {
+            return Ok(None);
+        }
+        if inner.pending > 0 {
+            publish(&self.cell, &mut inner);
+        }
+        let boundary = inner.wal.as_mut().unwrap().rotate()?;
+        Ok(Some((self.cell.load(), boundary)))
+    }
+
+    /// Phase 2 of a durability checkpoint, once the snapshot from
+    /// [`MutableIndex::begin_checkpoint`] has landed durably: prune the
+    /// WAL segments the snapshot covers.
+    pub fn end_checkpoint(&self, boundary: u64) -> Result<()> {
+        if let Some(w) = self.inner.lock().unwrap().wal.as_mut() {
+            w.prune_upto(boundary)?;
+        }
+        Ok(())
     }
 
     /// Phase 1 of the staged compaction (brief lock): capture the sealed
@@ -1610,6 +1704,13 @@ impl Drop for MutableIndex {
             }
             if let Some(h) = t.thread.take() {
                 let _ = h.join();
+            }
+        }
+        // Clean shutdown hardens the WAL tail: the group-commit loss
+        // window is a crash property, not a drop property.
+        if let Ok(mut inner) = self.inner.lock() {
+            if let Some(w) = inner.wal.as_mut() {
+                let _ = w.sync();
             }
         }
     }

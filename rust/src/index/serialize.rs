@@ -47,10 +47,19 @@
 //! `Arc<QuantModel>` ([`crate::quant::model::intern_model`]).
 //!
 //! All integers little-endian throughout.
+//!
+//! **Durability.** Every format above can additionally be written
+//! *durably* (`save_snapshot_durable` / `save_collection_durable`):
+//! the same body bytes gain a checksummed footer
+//! ([`crate::util::fs::append_footer`]) and are installed atomically
+//! (write-to-temp → fsync → rename → fsync-dir) through a
+//! [`DurableFs`]. Loads verify the footer when present and reject any
+//! corrupted byte with [`Error::Corrupt`]; footer-less files parse as
+//! legacy, so pre-durability saves stay readable and the legacy save
+//! paths stay byte-identical.
 
 use std::collections::HashSet;
-use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -62,6 +71,7 @@ use crate::index::{PostingList, SoarIndex};
 use crate::linalg::MatrixF32;
 use crate::quant::model::intern_model;
 use crate::quant::{Int8Quantizer, ProductQuantizer, QuantModel};
+use crate::util::fs::{append_footer, split_footer, DurableFs, RealFs};
 
 const MAGIC: &[u8; 4] = b"SOAR";
 const VERSION: u32 = 1;
@@ -72,9 +82,61 @@ const VERSION_MODELED: u32 = 4;
 /// Manifest file name inside a v3 collection directory.
 pub const COLLECTION_MANIFEST: &str = "COLLECTION.soar";
 
+/// Previous-generation manifest kept by durable collection saves; the
+/// recovery path falls back to it when `COLLECTION.soar` is corrupt.
+pub const COLLECTION_MANIFEST_BACKUP: &str = "COLLECTION.soar.1";
+
 // ---------------------------------------------------------------------
 // primitives
 // ---------------------------------------------------------------------
+
+/// Bounds-checked cursor over an in-memory file image. Every length
+/// prefix is validated against the remaining input *before* any
+/// allocation or copy, so a truncated or garbage file yields a clean
+/// `Err(Serialize)` instead of a multi-GB `Vec::with_capacity` abort.
+pub(crate) struct SliceReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SliceReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> SliceReader<'a> {
+        SliceReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Consume the next `n` bytes.
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(Error::Serialize(format!(
+                "truncated input: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Validate an element-count prefix before `Vec::with_capacity`:
+    /// `count` entries of at least `min_entry_bytes` each must fit in
+    /// the remaining input.
+    fn check_count(&self, count: usize, min_entry_bytes: usize) -> Result<()> {
+        let need = count.checked_mul(min_entry_bytes.max(1));
+        match need {
+            Some(need) if need <= self.remaining() => Ok(()),
+            _ => Err(Error::Serialize(format!(
+                "implausible element count {count} at offset {} ({} bytes remain)",
+                self.pos,
+                self.remaining()
+            ))),
+        }
+    }
+}
 
 fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
@@ -86,16 +148,12 @@ fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
     Ok(())
 }
 
-fn r_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+fn r_u32(r: &mut SliceReader) -> Result<u32> {
+    Ok(u32::from_le_bytes(r.take(4)?.try_into().unwrap()))
 }
 
-fn r_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+fn r_u64(r: &mut SliceReader) -> Result<u64> {
+    Ok(u64::from_le_bytes(r.take(8)?.try_into().unwrap()))
 }
 
 fn w_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
@@ -106,10 +164,10 @@ fn w_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+fn r_f32s(r: &mut SliceReader) -> Result<Vec<f32>> {
     let n = r_u64(r)? as usize;
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
+    r.check_count(n, 4)?;
+    let buf = r.take(n * 4)?;
     Ok(buf
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -122,7 +180,7 @@ fn w_matrix(w: &mut impl Write, m: &MatrixF32) -> Result<()> {
     w_f32s(w, m.as_slice())
 }
 
-fn r_matrix(r: &mut impl Read) -> Result<MatrixF32> {
+fn r_matrix(r: &mut SliceReader) -> Result<MatrixF32> {
     let rows = r_u64(r)? as usize;
     let cols = r_u64(r)? as usize;
     let data = r_f32s(r)?;
@@ -135,11 +193,18 @@ fn w_bytes(w: &mut impl Write, b: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn r_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+fn r_bytes(r: &mut SliceReader) -> Result<Vec<u8>> {
     let n = r_u64(r)? as usize;
-    let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf)?;
-    Ok(buf)
+    Ok(r.take(n)?.to_vec())
+}
+
+fn r_u32s(r: &mut SliceReader, n: usize) -> Result<Vec<u32>> {
+    r.check_count(n, 4)?;
+    let buf = r.take(n * 4)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 // ---------------------------------------------------------------------
@@ -158,18 +223,17 @@ fn write_postings(w: &mut impl Write, postings: &[PostingList]) -> Result<()> {
     Ok(())
 }
 
-fn read_postings(r: &mut impl Read, expected: usize) -> Result<Vec<PostingList>> {
+fn read_postings(r: &mut SliceReader, expected: usize) -> Result<Vec<PostingList>> {
     let num_lists = r_u64(r)? as usize;
     if num_lists != expected {
         return Err(Error::Serialize("posting list count mismatch".into()));
     }
+    // Each list costs at least its two length prefixes.
+    r.check_count(num_lists, 16)?;
     let mut postings = Vec::with_capacity(num_lists);
     for _ in 0..num_lists {
         let len = r_u64(r)? as usize;
-        let mut ids = Vec::with_capacity(len);
-        for _ in 0..len {
-            ids.push(r_u32(r)?);
-        }
+        let ids = r_u32s(r, len)?;
         let codes = r_bytes(r)?;
         postings.push(PostingList { ids, codes });
     }
@@ -199,16 +263,31 @@ fn write_assignments(w: &mut impl Write, assignments: &[Vec<u32>]) -> Result<()>
     Ok(())
 }
 
-fn read_assignments(r: &mut impl Read) -> Result<Vec<Vec<u32>>> {
+/// [`SoarIndex::rebuild_blocked`] walks every list assuming
+/// `codes.len() == ids.len() * code_bytes`; verify that *before* calling
+/// it, so a garbage file yields `Err(Serialize)` instead of a panic
+/// (`check_invariants` re-checks, but only after the rebuild).
+fn check_code_alignment(postings: &[PostingList], code_bytes: usize) -> Result<()> {
+    for (p, list) in postings.iter().enumerate() {
+        if list.ids.len().checked_mul(code_bytes) != Some(list.codes.len()) {
+            return Err(Error::Serialize(format!(
+                "partition {p}: {} code bytes for {} ids ({code_bytes} each)",
+                list.codes.len(),
+                list.ids.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn read_assignments(r: &mut SliceReader) -> Result<Vec<Vec<u32>>> {
     let na = r_u64(r)? as usize;
+    // Each assignment row costs at least its u32 length prefix.
+    r.check_count(na, 4)?;
     let mut assignments = Vec::with_capacity(na);
     for _ in 0..na {
         let len = r_u32(r)? as usize;
-        let mut a = Vec::with_capacity(len);
-        for _ in 0..len {
-            a.push(r_u32(r)?);
-        }
-        assignments.push(a);
+        assignments.push(r_u32s(r, len)?);
     }
     Ok(assignments)
 }
@@ -247,61 +326,99 @@ fn write_index_body(w: &mut impl Write, index: &SoarIndex) -> Result<()> {
     write_assignments(w, &index.assignments)
 }
 
+/// Install a fully built file body at `path`. With `fs = None` this is
+/// the legacy write path (plain create + write, byte-identical to the
+/// pre-durability formats); with a [`DurableFs`] the body gains a
+/// checksummed footer over `sections` and is installed atomically.
+fn install_body(
+    path: &Path,
+    fs: Option<&dyn DurableFs>,
+    mut body: Vec<u8>,
+    mut sections: Vec<usize>,
+) -> Result<()> {
+    match fs {
+        None => std::fs::write(path, &body).map_err(|e| Error::from(e).with_path(path)),
+        Some(fs) => {
+            if sections.last() != Some(&body.len()) {
+                sections.push(body.len());
+            }
+            append_footer(&mut body, &sections);
+            fs.write_atomic(path, &body)
+                .map_err(|e| Error::from(e).with_path(path))
+        }
+    }
+}
+
+/// Read a file image and strip/verify its footer (if any).
+fn read_verified(path: &Path, fs: &dyn DurableFs) -> Result<Vec<u8>> {
+    let bytes = fs.read(path).map_err(|e| Error::from(e).with_path(path))?;
+    let (body_len, _had_footer) = {
+        let (body, had) = split_footer(path, &bytes)?;
+        (body.len(), had)
+    };
+    let mut bytes = bytes;
+    bytes.truncate(body_len);
+    Ok(bytes)
+}
+
 /// Save an index to `path` (v1 format, unchanged on disk).
 pub fn save_index(index: &SoarIndex, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w_u32(&mut w, VERSION)?;
-    write_index_body(&mut w, index)?;
-    w.flush()?;
-    Ok(())
+    let mut body = Vec::new();
+    body.extend_from_slice(MAGIC);
+    w_u32(&mut body, VERSION)?;
+    write_index_body(&mut body, index)?;
+    install_body(path, None, body, Vec::new())
 }
 
 /// Load an index from `path` and verify its invariants.
 pub fn load_index(path: &Path) -> Result<SoarIndex> {
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Serialize("bad magic".into()));
-    }
-    let version = r_u32(&mut r)?;
-    if version != VERSION {
-        return Err(Error::Serialize(format!(
-            "unsupported version {version} (segmented snapshots load via load_snapshot)"
-        )));
-    }
-    let mut pool = Vec::new();
-    read_index_body(&mut r, &mut pool)
+    let bytes = read_verified(path, &RealFs)?;
+    let mut r = SliceReader::new(&bytes);
+    (|| -> Result<SoarIndex> {
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(Error::Serialize("bad magic".into()));
+        }
+        let version = r_u32(&mut r)?;
+        if version != VERSION {
+            return Err(Error::Serialize(format!(
+                "unsupported version {version} (segmented snapshots load via load_snapshot)"
+            )));
+        }
+        let mut pool = Vec::new();
+        read_index_body(&mut r, &mut pool)
+    })()
+    .map_err(|e| e.with_path(path))
 }
 
 /// Read a v1 index body, reconstructing its model (interned into `pool`
 /// by content hash so equal models across segments share one `Arc`), and
 /// verify its invariants.
-fn read_index_body(r: &mut impl Read, pool: &mut Vec<Arc<QuantModel>>) -> Result<SoarIndex> {
+fn read_index_body(r: &mut SliceReader, pool: &mut Vec<Arc<QuantModel>>) -> Result<SoarIndex> {
     let cfg_bytes = r_bytes(r)?;
     let cfg_text = std::str::from_utf8(&cfg_bytes)
         .map_err(|e| Error::Serialize(format!("config utf8: {e}")))?;
     let config = IndexConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
         .map_err(|e| Error::Serialize(format!("config json: {e}")))?;
-    let n = r_u64(&mut r)? as usize;
-    let dim = r_u64(&mut r)? as usize;
+    let n = r_u64(r)? as usize;
+    let dim = r_u64(r)? as usize;
 
-    let centroids = r_matrix(&mut r)?;
+    let centroids = r_matrix(r)?;
     let postings = read_postings(r, centroids.rows())?;
 
-    let s = r_u64(&mut r)? as usize;
-    let ncb = r_u64(&mut r)? as usize;
+    let s = r_u64(r)? as usize;
+    let ncb = r_u64(r)? as usize;
+    r.check_count(ncb, 16)?;
     let mut codebooks = Vec::with_capacity(ncb);
     for _ in 0..ncb {
-        codebooks.push(r_matrix(&mut r)?);
+        codebooks.push(r_matrix(r)?);
     }
     let pq = ProductQuantizer::from_parts(dim, s, codebooks)?;
 
-    let has_int8 = r_u32(&mut r)? == 1;
+    let has_int8 = r_u32(r)? == 1;
     let (int8, raw_int8) = if has_int8 {
-        let scales = r_f32s(&mut r)?;
-        let raw = r_bytes(&mut r)?;
+        let scales = r_f32s(r)?;
+        let raw = r_bytes(r)?;
         (
             Some(Int8Quantizer { scales }),
             raw.into_iter().map(|v| v as i8).collect(),
@@ -312,6 +429,7 @@ fn read_index_body(r: &mut impl Read, pool: &mut Vec<Arc<QuantModel>>) -> Result
 
     let assignments = read_assignments(r)?;
     let model = intern_model(pool, QuantModel::from_parts(0, config, centroids, pq, int8)?);
+    check_code_alignment(&postings, model.pq.code_bytes())?;
 
     let mut index = SoarIndex {
         n,
@@ -347,17 +465,16 @@ fn write_delta_rows(w: &mut impl Write, d: &DeltaSegment) -> Result<()> {
     Ok(())
 }
 
-fn read_delta_rows(r: &mut impl Read) -> Result<Vec<(u32, Vec<f32>, Vec<u32>)>> {
+fn read_delta_rows(r: &mut SliceReader) -> Result<Vec<(u32, Vec<f32>, Vec<u32>)>> {
     let rows = r_u64(r)? as usize;
+    // Each row costs at least id + raw-len prefix + assignment count.
+    r.check_count(rows, 16)?;
     let mut delta_rows = Vec::with_capacity(rows);
     for _ in 0..rows {
         let id = r_u32(r)?;
         let raw = r_f32s(r)?;
         let na = r_u32(r)? as usize;
-        let mut assignment = Vec::with_capacity(na);
-        for _ in 0..na {
-            assignment.push(r_u32(r)?);
-        }
+        let assignment = r_u32s(r, na)?;
         delta_rows.push((id, raw, assignment));
     }
     Ok(delta_rows)
@@ -373,19 +490,29 @@ fn write_tombstones(w: &mut impl Write, tombstones: &HashSet<u32>) -> Result<()>
     Ok(())
 }
 
-fn read_tombstones(r: &mut impl Read) -> Result<HashSet<u32>> {
+fn read_tombstones(r: &mut SliceReader) -> Result<HashSet<u32>> {
     let nt = r_u64(r)? as usize;
-    let mut tombstones = HashSet::with_capacity(nt);
-    for _ in 0..nt {
-        tombstones.insert(r_u32(r)?);
-    }
-    Ok(tombstones)
+    r.check_count(nt, 4)?;
+    Ok(r_u32s(r, nt)?.into_iter().collect())
 }
 
 /// Save a segmented snapshot to `path` in the current default format
-/// (v4: deduplicated model table).
+/// (v4: deduplicated model table), with the legacy (non-durable,
+/// footer-less) write path — byte-identical to pre-durability saves.
 pub fn save_snapshot(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
     save_snapshot_versioned(snapshot, path, VERSION_MODELED)
+}
+
+/// Save a v4 snapshot durably: checksummed footer + atomic install
+/// (write-to-temp → fsync → rename → fsync-dir) through `fs`.
+pub fn save_snapshot_durable(
+    snapshot: &IndexSnapshot,
+    path: &Path,
+    fs: &dyn DurableFs,
+) -> Result<()> {
+    snapshot.check_invariants()?;
+    let (body, sections) = snapshot_v4_body(snapshot)?;
+    install_body(path, Some(fs), body, sections)
 }
 
 /// Save a snapshot pinned to a specific on-disk `version`: 4 (model
@@ -422,8 +549,8 @@ pub fn save_snapshot_versioned(snapshot: &IndexSnapshot, path: &Path, version: u
 }
 
 fn save_snapshot_v2(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
+    let mut w: Vec<u8> = Vec::new();
+    w.extend_from_slice(MAGIC);
     w_u32(&mut w, VERSION_SEGMENTED)?;
 
     w_u64(&mut w, snapshot.sealed.len() as u64)?;
@@ -436,13 +563,15 @@ fn save_snapshot_v2(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
     }
     write_delta_rows(&mut w, &snapshot.delta)?;
     write_tombstones(&mut w, &snapshot.tombstones)?;
-    w.flush()?;
-    Ok(())
+    install_body(path, None, w, Vec::new())
 }
 
-fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
+/// The v4 body plus its footer section boundaries (header + model
+/// table | per-segment | delta | tombstones).
+fn snapshot_v4_body(snapshot: &IndexSnapshot) -> Result<(Vec<u8>, Vec<usize>)> {
+    let mut w: Vec<u8> = Vec::new();
+    let mut sections: Vec<usize> = Vec::new();
+    w.extend_from_slice(MAGIC);
     w_u32(&mut w, VERSION_MODELED)?;
 
     // Model table: one canonical encoding per distinct model.
@@ -451,6 +580,7 @@ fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
     for model in models {
         w_bytes(&mut w, &model.to_bytes())?;
     }
+    sections.push(w.len());
 
     w_u64(&mut w, snapshot.sealed.len() as u64)?;
     for (i, seg) in snapshot.sealed.iter().enumerate() {
@@ -464,13 +594,20 @@ fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
         for &g in &seg.global_ids {
             w_u32(&mut w, g)?;
         }
+        sections.push(w.len());
     }
 
     w_u64(&mut w, snapshot.delta_model_slot() as u64)?;
     write_delta_rows(&mut w, &snapshot.delta)?;
+    sections.push(w.len());
     write_tombstones(&mut w, &snapshot.tombstones)?;
-    w.flush()?;
-    Ok(())
+    sections.push(w.len());
+    Ok((w, sections))
+}
+
+fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
+    let (body, _) = snapshot_v4_body(snapshot)?;
+    install_body(path, None, body, Vec::new())
 }
 
 /// Load a snapshot from `path`. Reads every single-file generation: a
@@ -481,23 +618,32 @@ fn save_snapshot_v4(snapshot: &IndexSnapshot, path: &Path) -> Result<()> {
 /// re-share one `Arc<QuantModel>` per table entry). Shadow sets are
 /// recomputed and delta codes re-encode against the delta's model.
 pub fn load_snapshot(path: &Path) -> Result<IndexSnapshot> {
-    let mut r = BufReader::new(File::open(path)?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Serialize("bad magic".into()));
-    }
-    let version = r_u32(&mut r)?;
-    if version == VERSION {
-        let mut pool = Vec::new();
-        let index = read_index_body(&mut r, &mut pool)?;
-        return Ok(IndexSnapshot::from_index(Arc::new(index)));
-    }
-    match version {
-        VERSION_SEGMENTED => load_snapshot_v2(&mut r),
-        VERSION_MODELED => load_snapshot_v4(&mut r),
-        other => Err(Error::Serialize(format!("unsupported version {other}"))),
-    }
+    load_snapshot_with(path, &RealFs)
+}
+
+/// [`load_snapshot`] through an explicit [`DurableFs`] (the durability
+/// test-suite injects read faults here). Errors carry the file path.
+pub fn load_snapshot_with(path: &Path, fs: &dyn DurableFs) -> Result<IndexSnapshot> {
+    let bytes = read_verified(path, fs)?;
+    let mut r = SliceReader::new(&bytes);
+    (|| -> Result<IndexSnapshot> {
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(Error::Serialize("bad magic".into()));
+        }
+        let version = r_u32(&mut r)?;
+        if version == VERSION {
+            let mut pool = Vec::new();
+            let index = read_index_body(&mut r, &mut pool)?;
+            return Ok(IndexSnapshot::from_index(Arc::new(index)));
+        }
+        match version {
+            VERSION_SEGMENTED => load_snapshot_v2(&mut r),
+            VERSION_MODELED => load_snapshot_v4(&mut r),
+            other => Err(Error::Serialize(format!("unsupported version {other}"))),
+        }
+    })()
+    .map_err(|e| e.with_path(path))
 }
 
 /// Assemble loaded segments + delta + tombstones, recomputing shadows.
@@ -528,21 +674,19 @@ fn assemble_snapshot(
     Ok(snapshot)
 }
 
-fn load_snapshot_v2(r: &mut impl Read) -> Result<IndexSnapshot> {
+fn load_snapshot_v2(r: &mut SliceReader) -> Result<IndexSnapshot> {
     let num_sealed = r_u64(r)? as usize;
     if num_sealed == 0 {
         return Err(Error::Serialize("snapshot has no sealed segments".into()));
     }
+    r.check_count(num_sealed, 16)?;
     let mut pool: Vec<Arc<QuantModel>> = Vec::new();
     let mut bodies = Vec::with_capacity(num_sealed);
     let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
     for _ in 0..num_sealed {
         let index = read_index_body(r, &mut pool)?;
         let len = r_u64(r)? as usize;
-        let mut ids = Vec::with_capacity(len);
-        for _ in 0..len {
-            ids.push(r_u32(r)?);
-        }
+        let ids = r_u32s(r, len)?;
         bodies.push(index);
         id_maps.push(ids);
     }
@@ -553,11 +697,12 @@ fn load_snapshot_v2(r: &mut impl Read) -> Result<IndexSnapshot> {
     assemble_snapshot(bodies, id_maps, delta, tombstones)
 }
 
-fn load_snapshot_v4(r: &mut impl Read) -> Result<IndexSnapshot> {
+fn load_snapshot_v4(r: &mut SliceReader) -> Result<IndexSnapshot> {
     let num_models = r_u64(r)? as usize;
     if num_models == 0 {
         return Err(Error::Serialize("snapshot has no models".into()));
     }
+    r.check_count(num_models, 8)?;
     let mut models: Vec<Arc<QuantModel>> = Vec::with_capacity(num_models);
     for _ in 0..num_models {
         let bytes = r_bytes(r)?;
@@ -574,6 +719,7 @@ fn load_snapshot_v4(r: &mut impl Read) -> Result<IndexSnapshot> {
     if num_sealed == 0 {
         return Err(Error::Serialize("snapshot has no sealed segments".into()));
     }
+    r.check_count(num_sealed, 16)?;
     let mut bodies = Vec::with_capacity(num_sealed);
     let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(num_sealed);
     for _ in 0..num_sealed {
@@ -593,10 +739,8 @@ fn load_snapshot_v4(r: &mut impl Read) -> Result<IndexSnapshot> {
         };
         let assignments = read_assignments(r)?;
         let len = r_u64(r)? as usize;
-        let mut ids = Vec::with_capacity(len);
-        for _ in 0..len {
-            ids.push(r_u32(r)?);
-        }
+        let ids = r_u32s(r, len)?;
+        check_code_alignment(&postings, model.pq.code_bytes())?;
         let mut index = SoarIndex {
             n,
             dim: model.dim(),
@@ -630,11 +774,34 @@ fn shard_file_name(s: usize) -> String {
 
 /// Save a collection as a v3 manifest directory: `dir/COLLECTION.soar`
 /// plus one snapshot file per shard (written in the current default
-/// snapshot format, v4). `dir` is created if needed.
+/// snapshot format, v4). `dir` is created if needed. Legacy write path:
+/// plain creates, no footers — byte-identical to pre-durability saves.
 pub fn save_collection(
     snapshot: &CollectionSnapshot,
     config: &CollectionConfig,
     dir: &Path,
+) -> Result<()> {
+    save_collection_with(snapshot, config, dir, None)
+}
+
+/// [`save_collection`] with durable installs: every shard file and the
+/// manifest gain a checksummed footer and land via write-to-temp →
+/// fsync → rename → fsync-dir. The previous manifest generation is kept
+/// as [`COLLECTION_MANIFEST_BACKUP`] so recovery can fall back to it.
+pub fn save_collection_durable(
+    snapshot: &CollectionSnapshot,
+    config: &CollectionConfig,
+    dir: &Path,
+    fs: &dyn DurableFs,
+) -> Result<()> {
+    save_collection_with(snapshot, config, dir, Some(fs))
+}
+
+fn save_collection_with(
+    snapshot: &CollectionSnapshot,
+    config: &CollectionConfig,
+    dir: &Path,
+    fs: Option<&dyn DurableFs>,
 ) -> Result<()> {
     config.validate()?;
     if snapshot.shards.len() != config.num_shards {
@@ -644,23 +811,115 @@ pub fn save_collection(
             config.num_shards
         )));
     }
-    std::fs::create_dir_all(dir)?;
+    match fs {
+        None => std::fs::create_dir_all(dir)?,
+        Some(fs) => fs
+            .create_dir_all(dir)
+            .map_err(|e| Error::from(e).with_path(dir))?,
+    }
     let mut names = Vec::with_capacity(snapshot.shards.len());
     for (s, shard) in snapshot.shards.iter().enumerate() {
         let name = shard_file_name(s);
-        save_snapshot(shard, &dir.join(&name))?;
+        match fs {
+            None => save_snapshot(shard, &dir.join(&name))?,
+            Some(fs) => save_snapshot_durable(shard, &dir.join(&name), fs)?,
+        }
         names.push(name);
     }
-    let mut w = BufWriter::new(File::create(dir.join(COLLECTION_MANIFEST))?);
-    w.write_all(MAGIC)?;
-    w_u32(&mut w, VERSION_COLLECTION)?;
-    w_bytes(&mut w, config.to_json().to_json().as_bytes())?;
-    w_u64(&mut w, names.len() as u64)?;
+    let mut body: Vec<u8> = Vec::new();
+    body.extend_from_slice(MAGIC);
+    w_u32(&mut body, VERSION_COLLECTION)?;
+    w_bytes(&mut body, config.to_json().to_json().as_bytes())?;
+    w_u64(&mut body, names.len() as u64)?;
     for name in &names {
-        w_bytes(&mut w, name.as_bytes())?;
+        w_bytes(&mut body, name.as_bytes())?;
     }
-    w.flush()?;
-    Ok(())
+    let manifest = dir.join(COLLECTION_MANIFEST);
+    if let Some(fs) = fs {
+        // Demote the previous manifest to the backup generation before
+        // installing the new one; recovery falls back to it if the
+        // primary is ever found corrupt.
+        if fs.exists(&manifest) {
+            fs.rename(&manifest, &dir.join(COLLECTION_MANIFEST_BACKUP))
+                .map_err(|e| Error::from(e).with_path(&manifest))?;
+        }
+    }
+    install_body(&manifest, fs, body, Vec::new())
+}
+
+/// A parsed v3 manifest: the stored config plus shard file names
+/// (relative to the manifest's directory).
+pub(crate) struct CollectionManifest {
+    pub config: CollectionConfig,
+    pub shard_files: Vec<String>,
+}
+
+/// What a manifest path turned out to contain.
+pub(crate) enum ManifestFile {
+    /// A real v3 manifest.
+    Collection(CollectionManifest),
+    /// A v1/v2/v4 single-snapshot file (legacy migrate-in-place load).
+    SingleSnapshot,
+}
+
+/// Parse (and checksum-verify, when footered) a manifest file without
+/// touching any shard. The recovery path uses this to pick the newest
+/// *valid* manifest generation before committing to shard loads.
+pub(crate) fn load_collection_manifest_with(
+    path: &Path,
+    fs: &dyn DurableFs,
+) -> Result<ManifestFile> {
+    let bytes = read_verified(path, fs)?;
+    let mut r = SliceReader::new(&bytes);
+    (|| -> Result<ManifestFile> {
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err(Error::Serialize("bad magic".into()));
+        }
+        let version = r_u32(&mut r)?;
+        if version == VERSION || version == VERSION_SEGMENTED || version == VERSION_MODELED {
+            return Ok(ManifestFile::SingleSnapshot);
+        }
+        if version != VERSION_COLLECTION {
+            return Err(Error::Serialize(format!("unsupported version {version}")));
+        }
+        let cfg_bytes = r_bytes(&mut r)?;
+        let cfg_text = std::str::from_utf8(&cfg_bytes)
+            .map_err(|e| Error::Serialize(format!("manifest config utf8: {e}")))?;
+        let config = CollectionConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
+            .map_err(|e| Error::Serialize(format!("manifest config json: {e}")))?;
+        let num_shards = r_u64(&mut r)? as usize;
+        if num_shards != config.num_shards {
+            return Err(Error::Serialize(format!(
+                "manifest lists {num_shards} shard files for a {}-shard config",
+                config.num_shards
+            )));
+        }
+        // Each name costs at least its u64 length prefix.
+        r.check_count(num_shards, 8)?;
+        let mut shard_files = Vec::with_capacity(num_shards);
+        for _ in 0..num_shards {
+            let name_bytes = r_bytes(&mut r)?;
+            let name = std::str::from_utf8(&name_bytes)
+                .map_err(|e| Error::Serialize(format!("shard file name utf8: {e}")))?;
+            shard_files.push(name.to_string());
+        }
+        Ok(ManifestFile::Collection(CollectionManifest {
+            config,
+            shard_files,
+        }))
+    })()
+    .map_err(|e| e.with_path(path))
+}
+
+/// Resolve the manifest path for `path` (a collection directory or a
+/// direct file path).
+pub(crate) fn manifest_path(path: &Path) -> PathBuf {
+    if path.is_dir() {
+        path.join(COLLECTION_MANIFEST)
+    } else {
+        path.to_path_buf()
+    }
 }
 
 /// Load the parts of a collection: per-shard snapshots plus the stored
@@ -671,50 +930,31 @@ pub fn save_collection(
 /// * a **v1, v2, or v4 file** loads as a 1-shard collection with a
 ///   default config — legacy single-index deployments migrate in place.
 pub fn load_collection_parts(path: &Path) -> Result<(Vec<Arc<IndexSnapshot>>, CollectionConfig)> {
-    let manifest: PathBuf = if path.is_dir() {
-        path.join(COLLECTION_MANIFEST)
-    } else {
-        path.to_path_buf()
-    };
-    let mut r = BufReader::new(File::open(&manifest)?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Serialize("bad magic".into()));
+    load_collection_parts_with(path, &RealFs)
+}
+
+/// [`load_collection_parts`] through an explicit [`DurableFs`].
+pub fn load_collection_parts_with(
+    path: &Path,
+    fs: &dyn DurableFs,
+) -> Result<(Vec<Arc<IndexSnapshot>>, CollectionConfig)> {
+    let manifest = manifest_path(path);
+    match load_collection_manifest_with(&manifest, fs)? {
+        ManifestFile::SingleSnapshot => {
+            let snapshot = load_snapshot_with(&manifest, fs)?;
+            Ok((vec![Arc::new(snapshot)], CollectionConfig::default()))
+        }
+        ManifestFile::Collection(m) => {
+            let base = manifest
+                .parent()
+                .ok_or_else(|| Error::Serialize("manifest has no parent directory".into()))?;
+            let mut shards = Vec::with_capacity(m.shard_files.len());
+            for name in &m.shard_files {
+                shards.push(Arc::new(load_snapshot_with(&base.join(name), fs)?));
+            }
+            Ok((shards, m.config))
+        }
     }
-    let version = r_u32(&mut r)?;
-    if version == VERSION || version == VERSION_SEGMENTED || version == VERSION_MODELED {
-        // Legacy single-index / single-snapshot file → 1-shard collection.
-        drop(r);
-        let snapshot = load_snapshot(&manifest)?;
-        return Ok((vec![Arc::new(snapshot)], CollectionConfig::default()));
-    }
-    if version != VERSION_COLLECTION {
-        return Err(Error::Serialize(format!("unsupported version {version}")));
-    }
-    let cfg_bytes = r_bytes(&mut r)?;
-    let cfg_text = std::str::from_utf8(&cfg_bytes)
-        .map_err(|e| Error::Serialize(format!("manifest config utf8: {e}")))?;
-    let config = CollectionConfig::from_json(&crate::util::json::Value::parse(cfg_text)?)
-        .map_err(|e| Error::Serialize(format!("manifest config json: {e}")))?;
-    let num_shards = r_u64(&mut r)? as usize;
-    if num_shards != config.num_shards {
-        return Err(Error::Serialize(format!(
-            "manifest lists {num_shards} shard files for a {}-shard config",
-            config.num_shards
-        )));
-    }
-    let base = manifest
-        .parent()
-        .ok_or_else(|| Error::Serialize("manifest has no parent directory".into()))?;
-    let mut shards = Vec::with_capacity(num_shards);
-    for _ in 0..num_shards {
-        let name_bytes = r_bytes(&mut r)?;
-        let name = std::str::from_utf8(&name_bytes)
-            .map_err(|e| Error::Serialize(format!("shard file name utf8: {e}")))?;
-        shards.push(Arc::new(load_snapshot(&base.join(name))?));
-    }
-    Ok((shards, config))
 }
 
 // ---------------------------------------------------------------------
@@ -817,6 +1057,83 @@ mod tests {
         let path = dir.join("garbage");
         std::fs::write(&path, b"NOPE____").unwrap();
         assert!(load_index(&path).is_err());
+        assert!(load_snapshot(&path).is_err());
+        assert!(load_collection_parts(&path).is_err());
+    }
+
+    /// Truncating a valid file at *any* length-prefix boundary (or
+    /// mid-field) must yield a clean `Err`, never a panic or a multi-GB
+    /// allocation. Every short prefix is covered exhaustively; longer
+    /// ones are strided.
+    #[test]
+    fn load_rejects_truncation_at_every_prefix() {
+        let (_, idx) = build(SpillMode::Soar { lambda: 1.0 });
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let v1_path = dir.join("v1.soar");
+        save_index(&idx, &v1_path).unwrap();
+        let snap = IndexSnapshot::from_index(Arc::new(idx));
+        let v4_path = dir.join("v4.soar");
+        save_snapshot(&snap, &v4_path).unwrap();
+
+        let cut_points = |len: usize| -> Vec<usize> {
+            let mut cuts: Vec<usize> = (0..len.min(96)).collect();
+            cuts.extend((96..len).step_by(97));
+            cuts.extend(len.saturating_sub(32)..len);
+            cuts.sort_unstable();
+            cuts.dedup();
+            cuts
+        };
+
+        let bytes = std::fs::read(&v1_path).unwrap();
+        let cut_path = dir.join("cut");
+        for cut in cut_points(bytes.len()) {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            assert!(load_index(&cut_path).is_err(), "v1 truncated at {cut}");
+            assert!(load_snapshot(&cut_path).is_err(), "v1-as-snapshot at {cut}");
+        }
+        let bytes = std::fs::read(&v4_path).unwrap();
+        for cut in cut_points(bytes.len()) {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            assert!(load_snapshot(&cut_path).is_err(), "v4 truncated at {cut}");
+        }
+    }
+
+    #[test]
+    fn durable_save_appends_footer_and_detects_corruption() {
+        let (_, idx) = build(SpillMode::Soar { lambda: 1.0 });
+        let snap = IndexSnapshot::from_index(Arc::new(idx));
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+
+        // Durable and legacy saves agree on the body bytes: the footer is
+        // strictly additive, so the legacy path stays byte-identical.
+        let legacy_path = dir.join("legacy.soar");
+        save_snapshot(&snap, &legacy_path).unwrap();
+        let legacy = std::fs::read(&legacy_path).unwrap();
+        assert!(!legacy.ends_with(crate::util::fs::FOOTER_MAGIC));
+
+        let durable_path = dir.join("durable.soar");
+        save_snapshot_durable(&snap, &durable_path, &RealFs).unwrap();
+        let durable = std::fs::read(&durable_path).unwrap();
+        assert!(durable.ends_with(crate::util::fs::FOOTER_MAGIC));
+        assert_eq!(&durable[..legacy.len()], &legacy[..], "body unchanged");
+
+        // The footered file loads identically.
+        let back = load_snapshot(&durable_path).unwrap();
+        assert_eq!(back.sealed.len(), snap.sealed.len());
+        assert_eq!(back.sealed[0].index.postings, snap.sealed[0].index.postings);
+
+        // Any single corrupted body byte is caught by the footer CRCs.
+        let bad_path = dir.join("bad.soar");
+        for pos in [0usize, 5, legacy.len() / 2, legacy.len() - 1] {
+            let mut bad = durable.clone();
+            bad[pos] ^= 0x40;
+            std::fs::write(&bad_path, &bad).unwrap();
+            let err = load_snapshot(&bad_path).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt { .. }),
+                "byte {pos}: expected Corrupt, got {err}"
+            );
+        }
     }
 
     #[test]

@@ -23,7 +23,9 @@ impl MatrixF32 {
 
     /// Wrap an existing buffer; `data.len()` must equal `rows * cols`.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
-        if data.len() != rows * cols {
+        // Checked product: deserializers hand this u64-derived shapes, and
+        // a corrupted file must fail cleanly, not overflow.
+        if rows.checked_mul(cols) != Some(data.len()) {
             return Err(Error::Shape(format!(
                 "buffer len {} != {rows}x{cols}",
                 data.len()

@@ -48,7 +48,10 @@ COMMANDS
                with --drift-threshold 1.5 --cooldown-ms 60000, and
                --converge [--converge-rows 4096] model convergence) off
                the write path; reports drift ratio, auto-retrains, and
-               stale-run bytes per shard
+               stale-run bytes per shard. --wal [--fsync
+               always|group_commit|never] [--out dir/] persists a durable
+               checkpoint, reopens through crash recovery, and logs every
+               mutation to per-shard checksummed WALs
   retrain      --n 8000 --dim 32 --shards 2 --drift 0.6 --k 10 --top-t 8
                — replace a fraction of the corpus with a shifted
                distribution, report recall@k before/after per-shard
@@ -80,7 +83,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "max-wait-us", "workers", "quick", "cpu", "spills", "query-noise", "data-noise", "eta",
     "ops", "delta-cap", "shards", "coalesce", "max-delay-us", "drift",
     "auto-retrain", "drift-threshold", "cooldown-ms", "converge", "converge-rows",
-    "min-drift-samples",
+    "min-drift-samples", "wal", "fsync",
 ];
 
 fn engine_from(args: &Args) -> Engine {
@@ -101,6 +104,18 @@ fn spill_from(args: &Args) -> Result<SpillMode> {
         "none" => Ok(SpillMode::None),
         other => Err(Error::Config(format!("unknown spill mode {other:?}"))),
     }
+}
+
+fn durability_from(args: &Args) -> Result<soar_ann::config::DurabilityConfig> {
+    use soar_ann::config::{DurabilityConfig, FsyncPolicy};
+    let fsync = match args.get("fsync") {
+        Some(tag) => FsyncPolicy::from_tag(tag)?,
+        None => DurabilityConfig::default().fsync,
+    };
+    Ok(DurabilityConfig {
+        wal: args.get_bool("wal"),
+        fsync,
+    })
 }
 
 fn load_or_generate(args: &Args) -> Result<soar_ann::data::Dataset> {
@@ -337,14 +352,56 @@ fn cmd_churn(args: &Args) -> Result<()> {
                 maintenance_defaults.converge_max_rows,
             )?,
         },
+        durability: durability_from(args)?,
     };
     println!(
         "building {}-shard collection over {n} x {dim}…",
         ccfg.num_shards
     );
+    let wal_on = ccfg.durability.wal;
     let t0 = std::time::Instant::now();
-    let collection = Arc::new(Collection::build(engine.clone(), &ds.data, &cfg, ccfg)?);
+    let built = Collection::build(engine.clone(), &ds.data, &cfg, ccfg)?;
     println!("built in {:.2}s", t0.elapsed().as_secs_f64());
+    // --wal: persist a durable checkpoint and reopen through the
+    // recovery path, so the churn below runs with per-shard WALs
+    // attached (and crash-recovery stats are exercised for real).
+    let mut _wal_keepalive = None;
+    let (collection, wal_dir) = if wal_on {
+        let dir = match args.get("out") {
+            Some(p) => PathBuf::from(p),
+            None => {
+                let t = soar_ann::util::tempdir::TempDir::new()?;
+                let p = t.join("churn-wal");
+                _wal_keepalive = Some(t);
+                p
+            }
+        };
+        built.save(&dir)?;
+        drop(built);
+        let (c, recovery) = Collection::open(&dir, engine.clone())?;
+        println!(
+            "wal: opened {} at {} — {} shard(s), {} op(s) replayed over {} segment(s), \
+             {} torn byte(s) discarded{}",
+            if recovery.manifest_fallback {
+                "backup manifest"
+            } else {
+                "primary manifest"
+            },
+            dir.display(),
+            recovery.shards,
+            recovery.wal_ops_replayed,
+            recovery.wal_segments_replayed,
+            recovery.torn_bytes_discarded,
+            if recovery.manifest_fallback {
+                " (primary quarantined)"
+            } else {
+                ""
+            }
+        );
+        (Arc::new(c), Some(dir))
+    } else {
+        (Arc::new(built), None)
+    };
 
     let params = SearchParams {
         k: args.get_usize("k", 10)?,
@@ -461,6 +518,14 @@ fn cmd_churn(args: &Args) -> Result<()> {
         stats.max_drift_ratio(),
         stats.stale_bytes() as f64 / 1e6
     );
+    if wal_on {
+        println!(
+            "wal: {} record(s) appended, {} fsync(s), {} fsync error(s)",
+            stats.wal_records(),
+            stats.wal_syncs(),
+            stats.wal_sync_errors()
+        );
+    }
     let t0 = std::time::Instant::now();
     let after = collection.compact()?;
     println!(
@@ -470,6 +535,14 @@ fn cmd_churn(args: &Args) -> Result<()> {
         after.shards.len(),
         after.tombstones()
     );
+    if let Some(dir) = &wal_dir {
+        let t0 = std::time::Instant::now();
+        collection.save(dir)?;
+        println!(
+            "wal: final checkpoint (durable snapshot + segment prune) in {:.3}s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
     server.shutdown();
     Ok(())
 }

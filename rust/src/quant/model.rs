@@ -285,6 +285,14 @@ impl QuantModel {
         let dim = centroids.cols();
         let s = r.u64()? as usize;
         let ncb = r.u64()? as usize;
+        // Each codebook costs at least its 24-byte matrix header; cap the
+        // count against the remaining input before reserving.
+        let remaining = bytes.len() - r.pos;
+        if ncb.checked_mul(24).map_or(true, |need| need > remaining) {
+            return Err(Error::Serialize(format!(
+                "implausible codebook count {ncb} ({remaining} bytes remain)"
+            )));
+        }
         let mut codebooks = Vec::with_capacity(ncb);
         for _ in 0..ncb {
             codebooks.push(r.matrix()?);

@@ -14,12 +14,17 @@
 //!                  and failure reporting (proptest stand-in),
 //! * [`alloc`]    — allocation-counting global allocator used by the
 //!                  zero-alloc hot-path tests and benches,
+//! * [`fs`]       — durable filesystem substrate: CRC32C, atomic
+//!                  write-rename-fsync installs, checksummed footers,
+//!                  and the deterministic fault-injection filesystem
+//!                  the crash-recovery tests script,
 //! * [`tempdir`]  — self-deleting temp directories for tests.
 
 pub mod alloc;
 pub mod bench;
 pub mod bitmap;
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod parallel;
 pub mod prop;

@@ -107,6 +107,7 @@ fn steady_state_queries_do_not_allocate() {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let snap = c.snapshot();

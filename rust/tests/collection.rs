@@ -146,6 +146,7 @@ fn v3_round_trip_across_spill_modes() {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let mut rng = Rng::new(300 + mi as u64);
@@ -272,6 +273,7 @@ fn shard_equivalence_full_probe_with_churn() {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         for op in &ops {
@@ -324,6 +326,7 @@ fn upserts_proceed_while_shard_compacts() {
         },
         background_compact: false, // the test drives the staged merge itself
         maintenance: Default::default(),
+        durability: Default::default(),
     };
     let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
     let mut rng = Rng::new(3);
@@ -433,6 +436,7 @@ fn pooled_fan_out_matches_serial_per_shard_merge() {
             },
             background_compact: false,
             maintenance: Default::default(),
+            durability: Default::default(),
         };
         let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
         let snap = c.snapshot();

@@ -1,0 +1,573 @@
+//! Integration: crash-safe durability.
+//!
+//! * **Failpoint enumeration**: a dry run through the scripted
+//!   [`FaultFs`] counts every write and rename a full
+//!   open → mutate → checkpoint cycle performs; then one trial per
+//!   failpoint (torn write / crash before rename / crash after rename at
+//!   every ordinal) proves the two durability theorems — *no
+//!   acknowledged write is ever lost* and recovery over the real
+//!   filesystem always succeeds.
+//! * **Corruption rejection**: any single bit flipped on a read during
+//!   recovery is either refused with [`Error::Corrupt`] or (for the
+//!   final WAL segment) discarded at a record boundary — never served.
+//!   Any single-byte corruption or truncation of a checksummed file
+//!   makes `Collection::open` return a clean error, never panic.
+//! * **Recovery ergonomics**: a corrupt primary manifest falls back to
+//!   the previous generation (`COLLECTION.soar.1`) and the damaged file
+//!   is quarantined aside as `<name>.corrupt`.
+//! * **Replay equivalence**: dropping a WAL-enabled collection without
+//!   a checkpoint (a simulated crash) and reopening reproduces the
+//!   in-memory state bit-for-bit — same live set, same search results —
+//!   and a checkpoint prunes the replayed segments.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use soar_ann::config::{
+    CollectionConfig, DurabilityConfig, FsyncPolicy, IndexConfig, MutableConfig, SearchParams,
+    ShardRouting, SpillMode,
+};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::error::Error;
+use soar_ann::index::serialize::COLLECTION_MANIFEST;
+use soar_ann::index::Collection;
+use soar_ann::linalg::{MatrixF32, Rng};
+use soar_ann::runtime::Engine;
+use soar_ann::util::fs::{DurableFs, Fault, FaultFs};
+use soar_ann::util::tempdir::TempDir;
+
+/// Unit-norm perturbation of a random corpus row (stays inside the base
+/// int8 scale range, like real ingestion).
+fn perturbed(rng: &mut Rng, data: &MatrixF32, noise: f32) -> Vec<f32> {
+    let src = rng.next_below(data.rows() as u32) as usize;
+    let mut v = data.row(src).to_vec();
+    for x in v.iter_mut() {
+        *x += noise * rng.next_gaussian();
+    }
+    soar_ann::linalg::normalize(&mut v);
+    v
+}
+
+#[derive(Clone, Debug)]
+enum Op {
+    Upsert(u32, Vec<f32>),
+    Delete(u32),
+}
+
+/// Inserts, updates, a delete of a base row, and a delete of a row
+/// inserted earlier in the same workload.
+fn workload(data: &MatrixF32, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    for i in 0..6u32 {
+        ops.push(Op::Upsert(1000 + i, perturbed(&mut rng, data, 0.2)));
+    }
+    ops.push(Op::Upsert(3, perturbed(&mut rng, data, 0.2)));
+    ops.push(Op::Upsert(6, perturbed(&mut rng, data, 0.2)));
+    ops.push(Op::Delete(10));
+    ops.push(Op::Delete(20));
+    ops.push(Op::Delete(1001));
+    ops
+}
+
+/// The live id → vector map after applying a prefix of the workload.
+fn apply(base: &HashMap<u32, Vec<f32>>, ops: &[Op]) -> HashMap<u32, Vec<f32>> {
+    let mut m = base.clone();
+    for op in ops {
+        match op {
+            Op::Upsert(id, v) => {
+                m.insert(*id, v.clone());
+            }
+            Op::Delete(id) => {
+                m.remove(id);
+            }
+        }
+    }
+    m
+}
+
+fn durable_cfg(fsync: FsyncPolicy, shards: usize) -> CollectionConfig {
+    CollectionConfig {
+        num_shards: shards,
+        routing: ShardRouting::Hash,
+        mutable: MutableConfig {
+            auto_compact: false,
+            ..Default::default()
+        },
+        background_compact: false,
+        maintenance: Default::default(),
+        durability: DurabilityConfig { wal: true, fsync },
+    }
+}
+
+/// Build a collection with durability on and checkpoint it into `dir`.
+fn build_pristine(
+    dir: &Path,
+    engine: &Arc<Engine>,
+    data: &MatrixF32,
+    fsync: FsyncPolicy,
+    shards: usize,
+) {
+    let icfg = IndexConfig {
+        num_partitions: 8,
+        spill: SpillMode::Soar { lambda: 1.0 },
+        ..Default::default()
+    };
+    let c = Collection::build(engine.clone(), data, &icfg, durable_cfg(fsync, shards)).unwrap();
+    c.save(dir).unwrap();
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        let to = dst.join(entry.file_name());
+        if entry.file_type().unwrap().is_dir() {
+            copy_dir(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).unwrap();
+        }
+    }
+}
+
+const PROBE: SearchParams = SearchParams {
+    k: 10,
+    top_t: 64, // clamped to the partition count: full probe
+    rerank_budget: 1 << 20,
+};
+
+struct TrialOutcome {
+    /// Ops whose mutation call returned `Ok` before the crash.
+    acked: usize,
+    /// The checkpoint itself was acknowledged.
+    save_acked: bool,
+    opened: bool,
+}
+
+/// One crash trial: recover `dir` through the scripted filesystem, apply
+/// the workload until an op fails, checkpoint if everything was
+/// acknowledged. The collection is dropped (simulated process death)
+/// before returning.
+fn run_trial(dir: &Path, engine: &Arc<Engine>, ops: &[Op], ffs: &Arc<FaultFs>) -> TrialOutcome {
+    let dyn_fs: Arc<dyn DurableFs> = Arc::new(ffs.clone());
+    let col = match Collection::open_with(dir, engine.clone(), dyn_fs) {
+        Ok((c, _)) => c,
+        Err(_) => {
+            return TrialOutcome {
+                acked: 0,
+                save_acked: false,
+                opened: false,
+            }
+        }
+    };
+    let mut acked = 0;
+    for op in ops {
+        let r = match op {
+            Op::Upsert(id, v) => col.upsert(*id, v),
+            Op::Delete(id) => col.delete(*id).map(|_| ()),
+        };
+        if r.is_err() {
+            return TrialOutcome {
+                acked,
+                save_acked: false,
+                opened: true,
+            };
+        }
+        acked += 1;
+    }
+    let save_acked = col.save(dir).is_ok();
+    TrialOutcome {
+        acked,
+        save_acked,
+        opened: true,
+    }
+}
+
+/// Recover over the real filesystem and check the durability theorem:
+/// the served state is exactly the acknowledged prefix of the workload.
+/// (Under these fault scripts an unacknowledged op can never be durable:
+/// a torn append fails its checksum on replay, and rename faults only
+/// fire after every op was acknowledged.)
+fn verify_recovered(
+    dir: &Path,
+    engine: &Arc<Engine>,
+    base: &HashMap<u32, Vec<f32>>,
+    ops: &[Op],
+    t: &TrialOutcome,
+) {
+    let (col, rep) =
+        Collection::open(dir, engine.clone()).expect("recovery must succeed at every failpoint");
+    if t.save_acked {
+        assert_eq!(
+            rep.wal_ops_replayed, 0,
+            "an acknowledged checkpoint must prune the covered WAL segments"
+        );
+    } else if t.opened {
+        assert_eq!(
+            rep.wal_ops_replayed, t.acked,
+            "exactly the acknowledged ops must replay from the WAL"
+        );
+    }
+    let expect = apply(base, &ops[..t.acked]);
+    assert_eq!(
+        col.snapshot().live_count(),
+        expect.len(),
+        "live set diverged from the acknowledged prefix ({} acked ops)",
+        t.acked
+    );
+    for op in &ops[..t.acked] {
+        match op {
+            Op::Upsert(id, v) => {
+                // Skip ids a later acknowledged op superseded or removed.
+                if expect.get(id) == Some(v) {
+                    let (res, _) = col.search(v, &PROBE);
+                    assert_eq!(res[0].id, *id, "acknowledged upsert of id {id} was lost");
+                }
+            }
+            Op::Delete(id) => {
+                if !expect.contains_key(id) {
+                    // Query with the deleted row's own vector: it must
+                    // never be served again.
+                    let q = ops[..t.acked]
+                        .iter()
+                        .find_map(|o| match o {
+                            Op::Upsert(i, v) if i == id => Some(v.clone()),
+                            _ => None,
+                        })
+                        .unwrap_or_else(|| base[id].clone());
+                    let (res, _) = col.search(&q, &PROBE);
+                    assert!(
+                        res.iter().all(|r| r.id != *id),
+                        "acknowledged delete of id {id} was lost"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_acknowledged_write_is_lost_at_any_failpoint() {
+    let ds = SyntheticConfig::glove_like(400, 16, 4, 71).generate();
+    let engine = Arc::new(Engine::cpu());
+    let base: HashMap<u32, Vec<f32>> = (0..ds.data.rows())
+        .map(|i| (i as u32, ds.data.row(i).to_vec()))
+        .collect();
+    let ops = workload(&ds.data, 72);
+    let root = TempDir::new().unwrap();
+    let pristine = root.join("pristine");
+    build_pristine(&pristine, &engine, &ds.data, FsyncPolicy::Always, 1);
+
+    // Dry run: same cycle, no faults — counts every failpoint and
+    // doubles as the clean-path check.
+    let dry = root.join("dry");
+    copy_dir(&pristine, &dry);
+    let ffs = Arc::new(FaultFs::new(Vec::new()));
+    let t = run_trial(&dry, &engine, &ops, &ffs);
+    assert_eq!(t.acked, ops.len());
+    assert!(t.save_acked);
+    verify_recovered(&dry, &engine, &base, &ops, &t);
+    let (writes, renames, _reads) = ffs.ops();
+    assert!(
+        writes as usize >= ops.len(),
+        "every mutation must be WAL-logged before it is acknowledged ({writes} writes)"
+    );
+    assert!(
+        renames >= 2,
+        "a checkpoint must atomically install shard files and manifest ({renames} renames)"
+    );
+
+    let mut scripts: Vec<Vec<Fault>> = Vec::new();
+    for nth in 1..=writes {
+        scripts.push(vec![Fault::TearWrite {
+            nth,
+            keep_bytes: (nth as usize * 3) % 9,
+        }]);
+    }
+    for nth in 1..=renames {
+        scripts.push(vec![Fault::CrashBeforeRename { nth }]);
+        scripts.push(vec![Fault::CrashAfterRename { nth }]);
+    }
+    for (i, faults) in scripts.into_iter().enumerate() {
+        let dir = root.join(format!("trial-{i:03}"));
+        copy_dir(&pristine, &dir);
+        let ffs = Arc::new(FaultFs::new(faults.clone()));
+        let t = run_trial(&dir, &engine, &ops, &ffs);
+        assert!(ffs.crashed(), "scripted fault {faults:?} never fired");
+        assert!(!t.save_acked, "trial {i}: a checkpoint cannot be acknowledged across a crash");
+        verify_recovered(&dir, &engine, &base, &ops, &t);
+    }
+}
+
+#[test]
+fn corrupted_reads_are_rejected_or_discarded_never_served() {
+    let ds = SyntheticConfig::glove_like(400, 16, 4, 73).generate();
+    let engine = Arc::new(Engine::cpu());
+    let base: HashMap<u32, Vec<f32>> = (0..ds.data.rows())
+        .map(|i| (i as u32, ds.data.row(i).to_vec()))
+        .collect();
+    let ops = workload(&ds.data, 74);
+    let root = TempDir::new().unwrap();
+    let rich = root.join("rich");
+    build_pristine(&rich, &engine, &ds.data, FsyncPolicy::Always, 1);
+    // Apply the workload without checkpointing: the tail state lives
+    // only in the WAL, so recovery reads manifest + shard + segments.
+    {
+        let (col, _) = Collection::open(&rich, engine.clone()).unwrap();
+        for op in &ops {
+            match op {
+                Op::Upsert(id, v) => col.upsert(*id, v).unwrap(),
+                Op::Delete(id) => {
+                    col.delete(*id).unwrap();
+                }
+            }
+        }
+    }
+    // Damage to the final WAL segment truncates replay at a record
+    // boundary, so only prefix states are reachable.
+    let valid_counts: HashSet<usize> = (0..=ops.len())
+        .map(|j| apply(&base, &ops[..j]).len())
+        .collect();
+
+    // Count the reads of one clean recovery.
+    let probe_dir = root.join("probe");
+    copy_dir(&rich, &probe_dir);
+    let ffs = Arc::new(FaultFs::new(Vec::new()));
+    {
+        let dyn_fs: Arc<dyn DurableFs> = Arc::new(ffs.clone());
+        Collection::open_with(&probe_dir, engine.clone(), dyn_fs).unwrap();
+    }
+    let (_, _, reads) = ffs.ops();
+    assert!(reads >= 3, "recovery must read manifest, shard, and WAL");
+
+    let mut rejected = 0usize;
+    let mut trial = 0usize;
+    for nth in 1..=reads {
+        for &(byte, bit) in &[(0usize, 0u8), (13, 5), (80, 2)] {
+            let dir = root.join(format!("flip-{trial:03}"));
+            trial += 1;
+            copy_dir(&rich, &dir);
+            let ffs = Arc::new(FaultFs::new(vec![Fault::FlipBitOnRead { nth, byte, bit }]));
+            let dyn_fs: Arc<dyn DurableFs> = Arc::new(ffs.clone());
+            match Collection::open_with(&dir, engine.clone(), dyn_fs) {
+                Err(Error::Corrupt { .. }) => rejected += 1,
+                Err(e) => panic!("corruption must surface as Error::Corrupt, got: {e}"),
+                Ok((col, _)) => {
+                    // The flip missed (offset past end of a short file)
+                    // or hit the final WAL segment, where damage
+                    // truncates replay at a record boundary.
+                    let snap = col.snapshot();
+                    snap.check_invariants().unwrap();
+                    assert!(
+                        valid_counts.contains(&snap.live_count()),
+                        "read {nth} flip ({byte},{bit}): served a state that never existed"
+                    );
+                }
+            }
+        }
+    }
+    assert!(rejected > 0, "no flip was ever detected — harness broken?");
+}
+
+#[test]
+fn manifest_fallback_recovers_previous_generation() {
+    let ds = SyntheticConfig::glove_like(400, 16, 4, 75).generate();
+    let engine = Arc::new(Engine::cpu());
+    let base: HashMap<u32, Vec<f32>> = (0..ds.data.rows())
+        .map(|i| (i as u32, ds.data.row(i).to_vec()))
+        .collect();
+    let ops = workload(&ds.data, 76);
+    let root = TempDir::new().unwrap();
+    let dir = root.join("col");
+    build_pristine(&dir, &engine, &ds.data, FsyncPolicy::Always, 1);
+    {
+        let (col, _) = Collection::open(&dir, engine.clone()).unwrap();
+        for op in &ops {
+            match op {
+                Op::Upsert(id, v) => col.upsert(*id, v).unwrap(),
+                Op::Delete(id) => {
+                    col.delete(*id).unwrap();
+                }
+            }
+        }
+        // Second checkpoint: demotes the first manifest to the backup.
+        col.save(&dir).unwrap();
+    }
+    let manifest = dir.join(COLLECTION_MANIFEST);
+    let mut bytes = std::fs::read(&manifest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&manifest, &bytes).unwrap();
+
+    let (col, rep) = Collection::open(&dir, engine.clone()).unwrap();
+    assert!(rep.manifest_fallback, "must fall back to the backup manifest");
+    assert!(
+        dir.join("COLLECTION.soar.corrupt").exists(),
+        "corrupt primary must be quarantined aside"
+    );
+    // The backup references the same shard files — installed atomically
+    // before the manifest was demoted — so the full state is served.
+    let expect = apply(&base, &ops);
+    assert_eq!(col.snapshot().live_count(), expect.len());
+}
+
+#[test]
+fn corrupt_shard_file_is_quarantined_with_descriptive_error() {
+    let ds = SyntheticConfig::glove_like(400, 16, 4, 77).generate();
+    let engine = Arc::new(Engine::cpu());
+    let root = TempDir::new().unwrap();
+    let dir = root.join("col");
+    build_pristine(&dir, &engine, &ds.data, FsyncPolicy::Always, 1);
+
+    let shard: PathBuf = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            (name.starts_with("shard-") && name.ends_with(".soar")).then_some(p)
+        })
+        .next()
+        .expect("checkpoint must write a shard file");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&shard, &bytes).unwrap();
+
+    match Collection::open(&dir, engine.clone()) {
+        Err(Error::Corrupt { path, detail }) => {
+            assert!(
+                path.contains(&shard.file_name().unwrap().to_string_lossy().into_owned()),
+                "error must name the damaged file, got: {path}"
+            );
+            assert!(!detail.is_empty());
+        }
+        Err(e) => panic!("expected Error::Corrupt, got: {e}"),
+        Ok(_) => panic!("a corrupt shard file must not load"),
+    }
+    let quarantined = shard.with_file_name(format!(
+        "{}.corrupt",
+        shard.file_name().unwrap().to_string_lossy()
+    ));
+    assert!(quarantined.exists(), "damaged shard must be moved aside");
+    assert!(!shard.exists(), "damaged shard must not remain in place");
+}
+
+#[test]
+fn any_single_byte_corruption_or_truncation_errors_cleanly() {
+    let ds = SyntheticConfig::glove_like(400, 16, 4, 79).generate();
+    let engine = Arc::new(Engine::cpu());
+    let root = TempDir::new().unwrap();
+    let dir = root.join("col");
+    build_pristine(&dir, &engine, &ds.data, FsyncPolicy::Always, 1);
+
+    // Restore a file after a corruption trial (a quarantine may have
+    // renamed it aside).
+    let restore = |dir: &Path, file: &Path, orig: &[u8]| {
+        std::fs::write(file, orig).unwrap();
+        for e in std::fs::read_dir(dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.extension().map(|x| x == "corrupt").unwrap_or(false) {
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    };
+
+    let files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| {
+            let e = e.unwrap();
+            e.file_type().unwrap().is_file().then(|| e.path())
+        })
+        .collect();
+    assert!(files.len() >= 2, "expected manifest + shard file");
+
+    for file in &files {
+        let orig = std::fs::read(file).unwrap();
+        let n = orig.len();
+        // Body positions plus the checksummed footer region.
+        let mut positions = vec![0, n / 7, n / 3, n / 2, (2 * n) / 3, n - 1];
+        for k in 1..=4usize {
+            if n >= 4 * k + 1 {
+                positions.push(n - 4 * k);
+            }
+        }
+        for &p in &positions {
+            let mut b = orig.clone();
+            b[p] ^= 0x04;
+            std::fs::write(file, &b).unwrap();
+            assert!(
+                Collection::open(&dir, engine.clone()).is_err(),
+                "{}: flipped byte {p} must fail the load",
+                file.display()
+            );
+            restore(&dir, file, &orig);
+        }
+        for &len in &[0usize, 1, 7, n / 2, n - 1] {
+            std::fs::write(file, &orig[..len]).unwrap();
+            assert!(
+                Collection::open(&dir, engine.clone()).is_err(),
+                "{}: truncation to {len} bytes must fail the load",
+                file.display()
+            );
+            restore(&dir, file, &orig);
+        }
+    }
+    // The untouched directory still opens.
+    let (col, rep) = Collection::open(&dir, engine).unwrap();
+    assert!(!rep.manifest_fallback);
+    assert_eq!(col.snapshot().live_count(), 400);
+}
+
+#[test]
+fn wal_replay_reproduces_in_memory_state_after_crash() {
+    let ds = SyntheticConfig::glove_like(500, 16, 6, 81).generate();
+    let engine = Arc::new(Engine::cpu());
+    let root = TempDir::new().unwrap();
+    let dir = root.join("col");
+    build_pristine(&dir, &engine, &ds.data, FsyncPolicy::GroupCommit, 2);
+
+    let mut rng = Rng::new(82);
+    let (expected_live, expected_results) = {
+        let (col, rep) = Collection::open(&dir, engine.clone()).unwrap();
+        assert_eq!(rep.shards, 2);
+        assert_eq!(rep.wal_ops_replayed, 0);
+        for i in 0..30u32 {
+            col.upsert(2000 + i, &perturbed(&mut rng, &ds.data, 0.2)).unwrap();
+        }
+        for i in 0..8u32 {
+            col.upsert(i * 13, &perturbed(&mut rng, &ds.data, 0.2)).unwrap();
+        }
+        for i in 0..8u32 {
+            assert!(col.delete(40 + i * 9).unwrap());
+        }
+        col.flush();
+        let stats = col.stats();
+        assert!(stats.wal_records() >= 46, "every mutation must hit the WAL");
+        assert!(stats.wal_syncs() >= 1, "group commit must fsync at publish");
+        assert_eq!(stats.wal_sync_errors(), 0);
+        let results: Vec<_> = (0..ds.num_queries())
+            .map(|qi| col.search(ds.queries.row(qi), &PROBE).0)
+            .collect();
+        (col.snapshot().live_count(), results)
+        // Dropped WITHOUT a checkpoint: the simulated crash.
+    };
+
+    let (col, rep) = Collection::open(&dir, engine.clone()).unwrap();
+    assert_eq!(rep.wal_ops_replayed, 46);
+    assert!(rep.wal_segments_replayed >= 1);
+    assert_eq!(rep.torn_bytes_discarded, 0);
+    assert_eq!(col.snapshot().live_count(), expected_live);
+    for (qi, expected) in expected_results.iter().enumerate() {
+        let (res, _) = col.search(ds.queries.row(qi), &PROBE);
+        assert_eq!(&res, expected, "query {qi} diverged after WAL replay");
+    }
+
+    // A checkpoint prunes the replayed segments; the next recovery has
+    // nothing to replay and serves the same state.
+    col.save(&dir).unwrap();
+    drop(col);
+    let (col, rep) = Collection::open(&dir, engine).unwrap();
+    assert_eq!(rep.wal_ops_replayed, 0);
+    assert_eq!(col.snapshot().live_count(), expected_live);
+}

@@ -73,6 +73,7 @@ fn retrain_recovers_recall_under_distribution_shift() {
         },
         background_compact: false, // keep the run deterministic
         maintenance: Default::default(),
+        durability: Default::default(),
     };
     let c = Collection::build(engine.clone(), &a.data, &icfg, ccfg).unwrap();
 
@@ -173,6 +174,7 @@ fn maintenance_engine_auto_retrains_on_drift_without_operator() {
             retrain_cooldown_ms: 3_600_000, // at most one fire within the test
             ..Default::default()
         },
+        durability: Default::default(),
     };
     let c = Collection::build(engine.clone(), &a.data, &icfg, ccfg).unwrap();
     let params = SearchParams {
@@ -266,6 +268,7 @@ fn converging_compaction_reaches_single_model_without_retrain() {
             converge_max_rows: 4096,
             ..Default::default()
         },
+        durability: Default::default(),
     };
     let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
     let shard = c.shard(0).clone();
