@@ -27,6 +27,10 @@ fn main() {
     // Declare the cfg so `-D warnings` + check-cfg builds stay clean even
     // when the cfg is never set.
     println!("cargo:rustc-check-cfg=cfg(soar_avx512)");
+    // `--cfg loom` is set via RUSTFLAGS by the loom CI lane (it must
+    // apply to the whole dependency graph, not just this crate's
+    // targets); declare it so check-cfg builds stay clean without it.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
     println!("cargo:rerun-if-changed=build.rs");
     println!("cargo:rerun-if-env-changed=RUSTC");
 

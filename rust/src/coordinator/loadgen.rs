@@ -7,7 +7,7 @@
 //! exposes the latency-vs-load curve behind the paper's QPS-at-recall
 //! operating points.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -45,7 +45,7 @@ pub fn open_loop_load(
     let completed = AtomicU64::new(0);
     let rejected = AtomicU64::new(0);
     let issued = AtomicU64::new(0);
-    let hist = std::sync::Mutex::new(LatencyHistogram::default());
+    let hist = crate::util::sync::Mutex::new(LatencyHistogram::default());
     let start = Instant::now();
     let deadline = start + duration;
 

@@ -4,8 +4,8 @@
 //! the instrumentation that produces those numbers from the live serving
 //! stack.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 use std::time::Instant;
 
 /// Log₂-bucketed latency histogram over microseconds.

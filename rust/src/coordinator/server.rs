@@ -24,9 +24,10 @@
 //! in-flight queries: they finish on the snapshots they started with. A
 //! single-shard engine behaves exactly like the pre-collection stack.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::Mutex;
 use std::sync::mpsc::{RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 

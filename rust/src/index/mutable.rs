@@ -71,8 +71,9 @@
 //! without a full retrain.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::{Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 

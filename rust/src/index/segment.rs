@@ -34,7 +34,8 @@
 //! the delta's live set is checked dynamically.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, RwLock};
+use crate::util::sync::SwapCell;
+use std::sync::Arc;
 
 use crate::config::IndexConfig;
 use crate::error::{Error, Result};
@@ -600,29 +601,10 @@ impl IndexSnapshot {
 ///
 /// Readers only hold the lock long enough to clone the `Arc` (no query
 /// work happens under it), so publishing a new snapshot never waits on, or
-/// blocks, an in-flight query.
-#[derive(Debug)]
-pub struct SnapshotCell {
-    inner: RwLock<Arc<IndexSnapshot>>,
-}
-
-impl SnapshotCell {
-    pub fn new(snapshot: Arc<IndexSnapshot>) -> SnapshotCell {
-        SnapshotCell {
-            inner: RwLock::new(snapshot),
-        }
-    }
-
-    /// Current snapshot (cheap: one `Arc` clone).
-    pub fn load(&self) -> Arc<IndexSnapshot> {
-        self.inner.read().unwrap().clone()
-    }
-
-    /// Publish a new snapshot. In-flight readers keep the old `Arc`.
-    pub fn store(&self, snapshot: Arc<IndexSnapshot>) {
-        *self.inner.write().unwrap() = snapshot;
-    }
-}
+/// blocks, an in-flight query. The swap mechanics live in the generic
+/// [`SwapCell`] so the loom models (`rust/tests/loom.rs`) can prove the
+/// publish linearizable on the exact production code path.
+pub type SnapshotCell = SwapCell<IndexSnapshot>;
 
 #[cfg(test)]
 mod tests {

@@ -491,6 +491,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // per-byte corruption sweep: too slow interpreted
     fn corruption_is_rejected_not_replayed() {
         let dir = TempDir::new().unwrap();
         let wal_dir = dir.join("wal");
@@ -552,6 +553,87 @@ mod tests {
         match ShardWal::open(&wal_dir, real_fs()) {
             Err(Error::Corrupt { .. }) => {}
             other => panic!("expected Corrupt for torn rotated segment, got {other:?}"),
+        }
+    }
+
+    /// Hand-build one frame: `crc | claimed_len | payload`, CRC stamped
+    /// over `claimed_len || payload` exactly as `finish_frame` does.
+    fn raw_frame(payload: &[u8], claimed_len: u32) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(8 + payload.len());
+        buf.extend_from_slice(&[0u8; 4]);
+        buf.extend_from_slice(&claimed_len.to_le_bytes());
+        buf.extend_from_slice(payload);
+        let crc = crc32c(&buf[4..]);
+        buf[0..4].copy_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    fn write_segment(wal_dir: &Path, bytes: &[u8]) {
+        std::fs::create_dir_all(wal_dir).unwrap();
+        std::fs::write(wal_dir.join(segment_name(1)), bytes).unwrap();
+    }
+
+    #[test]
+    fn max_record_len_boundary_torn_tail() {
+        // A header claiming exactly MAX_RECORD_LEN passes the plausibility
+        // gate; with the payload missing, the final segment treats it as a
+        // torn tail and drops it cleanly.
+        let dir = TempDir::new().unwrap();
+        let wal_dir = dir.join("wal");
+        let mut delete = Vec::new();
+        encode_delete(4, &mut delete);
+        let mut seg = delete.clone();
+        seg.extend_from_slice(&raw_frame(&[KIND_UPSERT, 0, 0], MAX_RECORD_LEN as u32));
+        write_segment(&wal_dir, &seg);
+        let (_, rec) = ShardWal::open(&wal_dir, real_fs()).unwrap();
+        assert_eq!(rec.ops, vec![WalOp::Delete { id: 4 }]);
+        assert_eq!(rec.torn_bytes_discarded, 8 + 3);
+
+        // MAX_RECORD_LEN + 1 is an implausible length: rejected as Corrupt
+        // even in the final segment, before torn-tail tolerance applies.
+        let dir2 = TempDir::new().unwrap();
+        let wal_dir2 = dir2.join("wal");
+        let mut seg2 = delete;
+        seg2.extend_from_slice(&raw_frame(&[KIND_UPSERT, 0, 0], MAX_RECORD_LEN as u32 + 1));
+        write_segment(&wal_dir2, &seg2);
+        match ShardWal::open(&wal_dir2, real_fs()) {
+            Err(Error::Corrupt { detail, .. }) => {
+                assert!(detail.contains("implausible length"), "{detail}");
+            }
+            other => panic!("expected Corrupt for len > MAX_RECORD_LEN, got {other:?}"),
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 64 MiB payload: CRC sweep is too slow interpreted
+    fn max_record_len_boundary_full_payload() {
+        // A fully-present payload of exactly MAX_RECORD_LEN bytes clears
+        // both the plausibility gate and the CRC; rejection only happens
+        // at the decode layer (the dim field cannot match). One byte more
+        // and the plausibility gate fires instead — the CRC and payload
+        // are never even inspected.
+        let dir = TempDir::new().unwrap();
+        let wal_dir = dir.join("wal");
+        let mut payload = vec![0u8; MAX_RECORD_LEN];
+        payload[0] = KIND_UPSERT;
+        write_segment(&wal_dir, &raw_frame(&payload, MAX_RECORD_LEN as u32));
+        match ShardWal::open(&wal_dir, real_fs()) {
+            Err(Error::Corrupt { detail, .. }) => {
+                assert!(detail.contains("dim disagrees"), "{detail}");
+            }
+            other => panic!("expected decode-level Corrupt at len == MAX, got {other:?}"),
+        }
+
+        let dir2 = TempDir::new().unwrap();
+        let wal_dir2 = dir2.join("wal");
+        let mut payload = vec![0u8; MAX_RECORD_LEN + 1];
+        payload[0] = KIND_UPSERT;
+        write_segment(&wal_dir2, &raw_frame(&payload, (MAX_RECORD_LEN + 1) as u32));
+        match ShardWal::open(&wal_dir2, real_fs()) {
+            Err(Error::Corrupt { detail, .. }) => {
+                assert!(detail.contains("implausible length"), "{detail}");
+            }
+            other => panic!("expected Corrupt at len == MAX + 1, got {other:?}"),
         }
     }
 

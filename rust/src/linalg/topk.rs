@@ -50,6 +50,8 @@ impl TopK {
         }
     }
 
+    // serve-path: no-panic begin (admission and drain run per candidate
+    // inside the scan loop; nothing here may unwrap)
     /// Offer a candidate; O(1) when rejected, O(log k) when admitted.
     #[inline]
     pub fn push(&mut self, id: u32, score: f32) {
@@ -141,6 +143,7 @@ impl TopK {
     pub fn clear(&mut self) {
         self.heap.clear();
     }
+    // serve-path: no-panic end
 }
 
 #[cfg(test)]

@@ -206,9 +206,14 @@ impl KernelKind {
 }
 
 /// Best kernel supported by this CPU (cached after the first call).
+/// Under Miri the portable kernel is forced: runtime feature detection is
+/// interpreter-dependent, and the scalar tier is the one Miri verifies.
 pub fn detect_kernel() -> KernelKind {
-    static CACHE: std::sync::OnceLock<KernelKind> = std::sync::OnceLock::new();
+    static CACHE: crate::util::sync::OnceLock<KernelKind> = crate::util::sync::OnceLock::new();
     *CACHE.get_or_init(|| {
+        if cfg!(miri) {
+            return KernelKind::Portable;
+        }
         #[cfg(soar_avx512)]
         {
             if KernelKind::Avx512.supported() {
@@ -231,6 +236,11 @@ pub fn detect_kernel() -> KernelKind {
 /// Every kernel runnable on this CPU (for parity tests and benches).
 pub fn available_kernels() -> Vec<KernelKind> {
     let mut kinds = vec![KernelKind::Portable];
+    if cfg!(miri) {
+        // Intrinsic kernels cannot run interpreted; parity tests degrade
+        // to portable-vs-portable (a no-op) instead of failing.
+        return kinds;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("ssse3") {
@@ -471,8 +481,12 @@ fn accumulate_block(
         // feature detection) and the slice bounds before dispatching here.
         KernelKind::Ssse3 => unsafe { accumulate_block_ssse3(planes, lut, m, acc) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — AVX2 support and slice bounds are asserted by
+        // score_all_with before any dispatch reaches this arm.
         KernelKind::Avx2 => unsafe { accumulate_block_avx2(planes, lut, m, acc) },
         #[cfg(soar_avx512)]
+        // SAFETY: as above — AVX-512 F+BW+VBMI support and slice bounds
+        // are asserted by score_all_with before dispatch.
         KernelKind::Avx512 => unsafe { accumulate_block_avx512(planes, lut, m, acc) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => accumulate_block_portable(planes, lut, m, acc),
@@ -512,6 +526,8 @@ pub fn score_all_with(
     // The quantization guard in build_query_lut keeps m ≤ 257; enforce it
     // here too so hand-built LUTs cannot overflow the u16 accumulators.
     assert!(m * (u8::MAX as usize) <= u16::MAX as usize);
+    // serve-path: no-panic begin (input contracts asserted above; the scan
+    // below must not reach an unwrap/expect)
     let mut acc = [0u16; BLOCK];
     let num_blocks = blocked.num_blocks();
     for b in 0..num_blocks {
@@ -545,6 +561,7 @@ pub fn score_all_with(
             out[base + j] = cscore + (lut.bias + lut.scale * acc[j] as f32);
         }
     }
+    // serve-path: no-panic end
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use crate::util::sync::Mutex;
 
 use crate::error::{Error, Result};
 use crate::linalg::MatrixF32;
@@ -36,15 +36,16 @@ pub enum Backend {
 }
 
 /// Thread-mobility wrapper for the xla crate's executable handle.
-///
-/// SAFETY: `PjRtLoadedExecutable` is `!Send`/`!Sync` only because it holds
-/// an `Rc<PjRtClientInternal>` and raw C pointers. The PJRT C API itself is
-/// thread-safe for `Execute`, and this engine additionally serializes every
-/// execution behind `PjrtState::lock`. The `Rc` refcount is only touched at
-/// construction (single-threaded, in `Engine::pjrt`) and at drop (the
-/// engine is dropped from one thread); no clones cross threads.
 struct SendExec(xla::PjRtLoadedExecutable);
+// SAFETY: `PjRtLoadedExecutable` is `!Send`/`!Sync` only because it holds
+// an `Rc<PjRtClientInternal>` and raw C pointers. The PJRT C API itself is
+// thread-safe for `Execute`, and this engine additionally serializes every
+// execution behind `PjrtState::lock`. The `Rc` refcount is only touched at
+// construction (single-threaded, in `Engine::pjrt`) and at drop (the
+// engine is dropped from one thread); no clones cross threads.
 unsafe impl Send for SendExec {}
+// SAFETY: see the `Send` justification above — shared access is read-only
+// dispatch through the serialized `Execute` path.
 unsafe impl Sync for SendExec {}
 
 /// One compiled executable + its bucket metadata.

@@ -14,7 +14,10 @@
 //! enough to leave on in benches without distorting timings.
 
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+// The global allocator must never re-enter a scheduler: under cfg(loom)
+// the facade atomics take a schedule decision per operation, and the
+// model runtime itself allocates. Raw std atomics keep counting inert.
+use std::sync::atomic::{AtomicU64, Ordering}; // lint: allow(std-sync)
 
 /// A `System` wrapper that counts allocator calls.
 ///
@@ -60,20 +63,28 @@ pub fn allocation_count() -> u64 {
 // SAFETY: defers entirely to `System`; the counter is a side effect with
 // no influence on returned pointers or layouts.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds GlobalAlloc's contract (nonzero-size layout);
+    // the call forwards to `System::alloc` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: caller passes a pointer previously returned by this
+    // allocator with its original layout; forwarded to `System::dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: same contract as `alloc`; forwarded to
+    // `System::alloc_zeroed` unchanged.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller passes a live allocation of `layout` and a nonzero
+    // `new_size`; forwarded to `System::realloc` unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)

@@ -91,4 +91,54 @@ mod tests {
         let b = Bitmap::new(10);
         b.get(10);
     }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn set_beyond_capacity_panics() {
+        let mut b = Bitmap::new(64);
+        b.set(64);
+    }
+
+    #[test]
+    fn word_straddle_bits_are_independent() {
+        // Bits 63 and 64 live in adjacent words; setting one must not
+        // bleed into the other (shift-by-64 would wrap, masking would
+        // alias them).
+        let mut b = Bitmap::new(128);
+        b.set(63);
+        assert!(b.get(63));
+        assert!(!b.get(64));
+        assert!(!b.get(62));
+        assert_eq!(b.count_ones(), 1);
+
+        let mut b = Bitmap::new(128);
+        b.set(64);
+        assert!(b.get(64));
+        assert!(!b.get(63));
+        assert!(!b.get(65));
+        assert_eq!(b.count_ones(), 1);
+    }
+
+    #[test]
+    fn exact_word_multiple_length() {
+        // len == 64 allocates exactly one word and its last bit works.
+        let mut b = Bitmap::new(64);
+        assert_eq!(b.memory_bytes(), 8);
+        b.set(0);
+        b.set(63);
+        assert_eq!(b.count_ones(), 2);
+        assert!(b.get(63));
+        // len == 65 tips into a second word.
+        let b2 = Bitmap::new(65);
+        assert_eq!(b2.memory_bytes(), 16);
+        assert_eq!(b2.count_ones(), 0);
+    }
+
+    #[test]
+    fn empty_bitmap_allocates_nothing() {
+        let b = Bitmap::new(0);
+        assert_eq!(b.memory_bytes(), 0);
+        assert_eq!(b.len(), 0);
+    }
 }

@@ -27,7 +27,7 @@
 
 use std::io::{self, Write};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use crate::util::sync::Mutex;
 
 use crate::error::{Error, Result};
 

@@ -1,0 +1,1090 @@
+//! In-tree cooperative model checker backing the `cfg(loom)` build of
+//! [`crate::util::sync`].
+//!
+//! The crate is dependency-free by design, so the real `loom` crate cannot
+//! be a dev-dependency; this module is a miniature stand-in that keeps the
+//! part we rely on: **exhaustive exploration of thread interleavings at
+//! synchronization points**. The models in `rust/tests/loom.rs` run every
+//! schedule (up to a preemption bound) of small multi-threaded protocols
+//! and assert their invariants in each one.
+//!
+//! # How it works
+//!
+//! Model threads are real OS threads, but exactly one is ever runnable: a
+//! scheduler token is handed from thread to thread at *schedule points*
+//! (mutex acquire/release, condvar wait/notify, atomic ops, join). At each
+//! point the scheduler consults a decision vector; [`model`] drives a
+//! depth-first search over those vectors, replaying a prefix and exploring
+//! the next untried branch, until the tree is exhausted.
+//!
+//! State explosion is kept in check the usual ways:
+//!
+//! * decisions only happen at synchronization operations, never between
+//!   them (sound for data protected by the modeled primitives);
+//! * CHESS-style preemption bounding: at most
+//!   [`DEFAULT_PREEMPTION_BOUND`] involuntary context switches per
+//!   execution (override with `SOAR_LOOM_PREEMPTION_BOUND`);
+//! * timed condvar waits get a bounded number of spurious/timeout wakes
+//!   per thread, so `wait_timeout` retry loops terminate.
+//!
+//! The checker explores **sequentially consistent** interleavings only; it
+//! does not model weak-memory reorderings the way real `loom` does. For
+//! this codebase that is the property we care about: the protocols under
+//! test (snapshot swap, pool park/claim, publish timer, fan-out pool
+//! checkout) are mutex/condvar based, and their atomics are flags whose
+//! races manifest as lost wakeups or stale reads — both visible under
+//! sequential consistency.
+//!
+//! Failures (assertion panics in a model thread, deadlocks, livelocks)
+//! abort the execution and re-panic in [`model`] with the decision trace
+//! that produced them, so a failing schedule can be read back.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+use std::time::Duration;
+
+/// Involuntary context switches allowed per execution (CHESS bound).
+/// Most real concurrency bugs need very few preemptions to manifest;
+/// 3 keeps the schedule tree small enough for CI.
+const DEFAULT_PREEMPTION_BOUND: usize = 3;
+/// Executions explored before `model` gives up and fails loudly.
+const DEFAULT_MAX_ITERATIONS: usize = 500_000;
+/// Timeout/spurious wakes granted to each thread's timed waits per
+/// execution while other threads are still runnable.
+const TIMEOUT_WAKE_BUDGET: u32 = 3;
+/// Schedule decisions per execution before the run is declared a livelock.
+const MAX_DECISIONS_PER_RUN: usize = 40_000;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    /// Parked waiting for the mutex at this address.
+    BlockedMutex(usize),
+    /// Parked in a condvar wait; `timed` waits may be woken by the
+    /// scheduler electing their timeout.
+    BlockedCond { cv: usize, timed: bool },
+    /// Parked in `JoinHandle::join` on the thread with this id.
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct ThreadState {
+    status: Status,
+    /// Set when the scheduler woke a timed wait by electing its timeout
+    /// (as opposed to a notify); consumed by `wait_timeout` on resume.
+    woke_by_timeout: bool,
+    /// Timeout wakes spent by this thread in the current execution.
+    timeout_wakes: u32,
+}
+
+impl ThreadState {
+    fn new() -> ThreadState {
+        ThreadState { status: Status::Runnable, woke_by_timeout: false, timeout_wakes: 0 }
+    }
+}
+
+struct SchedState {
+    threads: Vec<ThreadState>,
+    /// Thread currently holding the execution token; `None` once the
+    /// execution is complete or aborted.
+    active: Option<usize>,
+    /// Model lock state keyed by primitive address: `true` = held.
+    locks: HashMap<usize, bool>,
+    /// Decision trace of this execution: (chosen option, option count).
+    decisions: Vec<(usize, usize)>,
+    /// Decision prefix to replay before exploring fresh branches.
+    replay: Vec<usize>,
+    preemptions: usize,
+    preemption_bound: usize,
+    /// First failure observed (assertion panic, deadlock, livelock).
+    failure: Option<String>,
+    /// Execution is being torn down; parked threads unwind instead of
+    /// waiting to be scheduled.
+    abort: bool,
+    finished: usize,
+}
+
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+type SchedGuard<'a> = std::sync::MutexGuard<'a, SchedState>;
+
+impl Sched {
+    fn lock(&self) -> SchedGuard<'_> {
+        // The scheduler lock is shared with threads that may be unwinding;
+        // recover from poison rather than cascading.
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Choose the next thread to run. Called with the state lock held by
+    /// the thread ceding control (which already updated its own status).
+    fn pick_next(&self, s: &mut SchedState, me: usize) {
+        if s.abort {
+            s.active = None;
+            return;
+        }
+        let mut options: Vec<usize> = Vec::new();
+        let mut timed_fallback: Vec<usize> = Vec::new();
+        for (tid, t) in s.threads.iter().enumerate() {
+            match t.status {
+                Status::Runnable => options.push(tid),
+                Status::BlockedCond { timed: true, .. } => {
+                    if t.timeout_wakes < TIMEOUT_WAKE_BUDGET {
+                        options.push(tid);
+                    } else {
+                        timed_fallback.push(tid);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if options.is_empty() {
+            // Out-of-budget timed waiters still wake eventually in real
+            // executions; electing them here avoids false deadlocks while
+            // the budget above keeps them from branching the tree.
+            options = timed_fallback;
+        }
+        if options.is_empty() {
+            if s.finished == s.threads.len() {
+                s.active = None; // execution complete
+            } else {
+                let stuck: Vec<String> = s
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.status != Status::Finished)
+                    .map(|(tid, t)| format!("t{tid}={:?}", t.status))
+                    .collect();
+                self.fail(s, format!("deadlock: no runnable thread ({})", stuck.join(", ")));
+            }
+            return;
+        }
+        // Preemption bound: once the budget is spent, a thread that can
+        // keep running must keep running.
+        let me_runnable =
+            me < s.threads.len() && s.threads[me].status == Status::Runnable;
+        if me_runnable && s.preemptions >= s.preemption_bound {
+            options = vec![me];
+        }
+        let di = s.decisions.len();
+        let choice = if di < s.replay.len() {
+            let c = s.replay[di];
+            if c >= options.len() {
+                // The model's control flow depends on something other than
+                // the schedule (e.g. real time or ambient randomness).
+                self.fail(s, format!("schedule replay diverged at decision {di}"));
+                return;
+            }
+            c
+        } else {
+            0
+        };
+        s.decisions.push((choice, options.len()));
+        if s.decisions.len() > MAX_DECISIONS_PER_RUN {
+            self.fail(
+                s,
+                format!("livelock: execution exceeded {MAX_DECISIONS_PER_RUN} schedule decisions"),
+            );
+            return;
+        }
+        let chosen = options[choice];
+        if me_runnable && chosen != me {
+            s.preemptions += 1;
+        }
+        if let Status::BlockedCond { timed: true, .. } = s.threads[chosen].status {
+            s.threads[chosen].status = Status::Runnable;
+            s.threads[chosen].woke_by_timeout = true;
+            s.threads[chosen].timeout_wakes += 1;
+        }
+        s.active = Some(chosen);
+    }
+
+    fn fail(&self, s: &mut SchedState, msg: String) {
+        if s.failure.is_none() {
+            s.failure = Some(msg);
+        }
+        s.abort = true;
+        s.active = None;
+    }
+
+    /// Cede control at a schedule point. `update` adjusts scheduler state
+    /// (typically this thread's own status) before the next thread is
+    /// chosen; the call returns once the token comes back to this thread.
+    fn reschedule(&self, me: usize, update: impl FnOnce(&mut SchedState)) {
+        let mut s = self.lock();
+        update(&mut s);
+        self.pick_next(&mut s, me);
+        self.cv.notify_all();
+        while s.active != Some(me) {
+            if s.abort {
+                drop(s);
+                std::panic::panic_any(LoomAbort);
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Park until first scheduled; returns `false` if the execution was
+    /// aborted before this thread ever ran.
+    fn wait_until_scheduled(&self, me: usize) -> bool {
+        let mut s = self.lock();
+        while s.active != Some(me) {
+            if s.abort {
+                return false;
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        true
+    }
+
+    fn thread_exit(&self, me: usize, panic_msg: Option<String>) {
+        let mut s = self.lock();
+        if let Some(msg) = panic_msg {
+            if s.failure.is_none() {
+                s.failure = Some(msg);
+            }
+            s.abort = true;
+        }
+        if s.threads[me].status != Status::Finished {
+            s.threads[me].status = Status::Finished;
+            s.finished += 1;
+        }
+        for t in &mut s.threads {
+            if t.status == Status::BlockedJoin(me) {
+                t.status = Status::Runnable;
+            }
+        }
+        self.pick_next(&mut s, me);
+        self.cv.notify_all();
+    }
+}
+
+/// Panic payload used to unwind parked threads when an execution aborts;
+/// not itself a model failure (the original failure is already recorded).
+struct LoomAbort;
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+/// The (scheduler, thread id) of the calling thread when it is part of a
+/// model execution; `None` on ordinary threads, where every facade
+/// primitive falls through to its `std` implementation.
+fn current() -> Option<(Arc<Sched>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Like [`current`], but opts out while unwinding so guard drops during an
+/// abort don't re-enter the scheduler.
+fn current_scheduled() -> Option<(Arc<Sched>, usize)> {
+    if std::thread::panicking() {
+        None
+    } else {
+        current()
+    }
+}
+
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> Option<String> {
+    if payload.is::<LoomAbort>() {
+        return None;
+    }
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        Some((*s).to_string())
+    } else {
+        payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| Some("model thread panicked".to_string()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model lock protocol helpers (shared by Mutex and RwLock).
+// ---------------------------------------------------------------------------
+
+/// Acquire the model lock at `addr`. With `race_point`, a schedule decision
+/// is taken *before* the attempt so other threads can win the race; the
+/// condvar re-acquire path skips it (its transition already yielded).
+fn model_acquire(sched: &Sched, me: usize, addr: usize, race_point: bool) {
+    if race_point {
+        sched.reschedule(me, |_| {});
+    }
+    loop {
+        let acquired = {
+            let mut s = sched.lock();
+            if s.abort {
+                drop(s);
+                std::panic::panic_any(LoomAbort);
+            }
+            let held = s.locks.entry(addr).or_insert(false);
+            if *held {
+                false
+            } else {
+                *held = true;
+                true
+            }
+        };
+        if acquired {
+            return;
+        }
+        sched.reschedule(me, |s| {
+            s.threads[me].status = Status::BlockedMutex(addr);
+        });
+    }
+}
+
+fn model_release(sched: &Sched, me: usize, addr: usize) {
+    sched.reschedule(me, |s| {
+        s.locks.insert(addr, false);
+        for t in &mut s.threads {
+            if t.status == Status::BlockedMutex(addr) {
+                t.status = Status::Runnable;
+            }
+        }
+    });
+}
+
+/// Best-effort release while unwinding: update lock state and wake waiters
+/// without taking a schedule decision.
+fn panicking_release(sched: &Sched, addr: usize) {
+    let mut s = sched.lock();
+    s.locks.insert(addr, false);
+    for t in &mut s.threads {
+        if t.status == Status::BlockedMutex(addr) {
+            t.status = Status::Runnable;
+        }
+    }
+    sched.cv.notify_all();
+}
+
+// ---------------------------------------------------------------------------
+// Public driver.
+// ---------------------------------------------------------------------------
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
+}
+
+/// Run `f` under every schedule (up to the preemption bound) and panic
+/// with the offending decision trace if any execution fails.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let max_iters = env_usize("SOAR_LOOM_MAX_ITERS", DEFAULT_MAX_ITERATIONS);
+    let bound = env_usize("SOAR_LOOM_PREEMPTION_BOUND", DEFAULT_PREEMPTION_BOUND);
+    let mut replay: Vec<usize> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= max_iters,
+            "loom: exploration exceeded {max_iters} executions; \
+             shrink the model or raise SOAR_LOOM_MAX_ITERS"
+        );
+        let sched = Arc::new(Sched {
+            state: StdMutex::new(SchedState {
+                threads: Vec::new(),
+                active: None,
+                locks: HashMap::new(),
+                decisions: Vec::new(),
+                replay: replay.clone(),
+                preemptions: 0,
+                preemption_bound: bound,
+                failure: None,
+                abort: false,
+                finished: 0,
+            }),
+            cv: StdCondvar::new(),
+        });
+        let body = {
+            let f = f.clone();
+            move || f()
+        };
+        let handle = spawn_model_thread(&sched, body);
+        {
+            let mut s = sched.lock();
+            s.active = Some(0);
+            sched.cv.notify_all();
+        }
+        // Wait for every model thread (the body plus any it spawned) to
+        // finish; the thread vector can grow while we wait.
+        let (decisions, failure) = {
+            let mut s = sched.lock();
+            while s.finished < s.threads.len() {
+                s = match sched.cv.wait(s) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+            (s.decisions.clone(), s.failure.clone())
+        };
+        reap(handle);
+        if let Some(msg) = failure {
+            let trace: Vec<usize> = decisions.iter().map(|&(c, _)| c).collect();
+            panic!(
+                "loom model failed after {iterations} executions: {msg}\n\
+                 failing schedule: {trace:?}"
+            );
+        }
+        match next_replay(&decisions) {
+            Some(next) => replay = next,
+            None => break,
+        }
+    }
+}
+
+/// Reap the model-body OS thread; threads it spawned are reaped by the
+/// in-model `join` calls (or exit on their own when an execution aborts).
+fn reap(handle: ModelHandle) {
+    let _ = handle.os.join();
+}
+
+/// Depth-first successor of a completed execution's decision vector: bump
+/// the deepest decision with untried options, drop everything after it.
+fn next_replay(decisions: &[(usize, usize)]) -> Option<Vec<usize>> {
+    let mut i = decisions.len();
+    while i > 0 {
+        i -= 1;
+        let (chosen, options) = decisions[i];
+        if chosen + 1 < options {
+            let mut replay: Vec<usize> = decisions[..i].iter().map(|&(c, _)| c).collect();
+            replay.push(chosen + 1);
+            return Some(replay);
+        }
+    }
+    None
+}
+
+struct ModelHandle {
+    os: std::thread::JoinHandle<()>,
+}
+
+/// Register a new model thread and start its OS thread parked; the
+/// scheduler id is assigned synchronously in the caller.
+fn spawn_model_thread<F>(sched: &Arc<Sched>, f: F) -> ModelHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    let tid = {
+        let mut s = sched.lock();
+        s.threads.push(ThreadState::new());
+        s.threads.len() - 1
+    };
+    let sched2 = Arc::clone(sched);
+    let os = std::thread::Builder::new()
+        .name(format!("loom-{tid}"))
+        .spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched2), tid)));
+            if sched2.wait_until_scheduled(tid) {
+                let result = catch_unwind(AssertUnwindSafe(f));
+                let msg = match &result {
+                    Ok(()) => None,
+                    Err(payload) => payload_msg(payload.as_ref()),
+                };
+                sched2.thread_exit(tid, msg);
+            } else {
+                sched2.thread_exit(tid, None);
+            }
+            CURRENT.with(|c| *c.borrow_mut() = None);
+        })
+        .expect("spawn loom model thread");
+    ModelHandle { os }
+}
+
+// ---------------------------------------------------------------------------
+// Facade types (loom mode). Re-exported by `util::sync` under cfg(loom).
+// ---------------------------------------------------------------------------
+
+pub mod sync {
+    use super::*;
+    pub use std::sync::{LockResult, PoisonError};
+
+    fn addr_of<T: ?Sized>(t: &T) -> usize {
+        t as *const T as *const () as usize
+    }
+
+    /// Mutex that participates in the model schedule when locked from a
+    /// model thread and behaves like `std::sync::Mutex` otherwise.
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(value: T) -> Mutex<T> {
+            Mutex { inner: StdMutex::new(value) }
+        }
+
+        fn addr(&self) -> usize {
+            addr_of(self)
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match current_scheduled() {
+                None => {
+                    let raw = match self.inner.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    Ok(MutexGuard { raw: Some(raw), mx: self, model: false })
+                }
+                Some((sched, me)) => {
+                    model_acquire(&sched, me, self.addr(), true);
+                    Ok(MutexGuard { raw: Some(self.raw_lock()), mx: self, model: true })
+                }
+            }
+        }
+
+        /// Take the underlying std lock, which the model guarantees is
+        /// free once the model lock has been granted.
+        fn raw_lock(&self) -> std::sync::MutexGuard<'_, T> {
+            match self.inner.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            match self.inner.into_inner() {
+                Ok(v) => Ok(v),
+                Err(p) => Ok(p.into_inner()),
+            }
+        }
+    }
+
+    impl<T> fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("Mutex(..)")
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        raw: Option<std::sync::MutexGuard<'a, T>>,
+        mx: &'a Mutex<T>,
+        /// Acquired inside a model execution: drop must release the model
+        /// lock and take a schedule decision.
+        model: bool,
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.raw.as_ref().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.raw.as_mut().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release the std lock before the model lock so the next model
+            // thread's raw_lock cannot block.
+            self.raw = None;
+            if self.model {
+                if let Some((sched, me)) = current_scheduled() {
+                    model_release(&sched, me, self.mx.addr());
+                } else if let Some((sched, _)) = current() {
+                    panicking_release(&sched, self.mx.addr());
+                }
+            }
+        }
+    }
+
+    /// Result of a timed condvar wait. `std`'s equivalent has no public
+    /// constructor, so loom mode carries its own.
+    #[derive(Clone, Copy, Debug)]
+    pub struct WaitTimeoutResult {
+        timed_out: bool,
+    }
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.timed_out
+        }
+    }
+
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar { inner: StdCondvar::new() }
+        }
+
+        fn addr(&self) -> usize {
+            addr_of(self)
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            match current_scheduled() {
+                None => {
+                    let mx = guard.mx;
+                    let mut guard = guard;
+                    let raw = guard.raw.take().expect("guard accessed after release");
+                    guard.model = false; // disarm the drop
+                    drop(guard);
+                    let raw = match self.inner.wait(raw) {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    Ok(MutexGuard { raw: Some(raw), mx, model: false })
+                }
+                Some((sched, me)) => {
+                    let mx = guard.mx;
+                    self.model_wait(&sched, me, guard, false);
+                    model_acquire(&sched, me, mx.addr(), false);
+                    Ok(MutexGuard { raw: Some(mx.raw_lock()), mx, model: true })
+                }
+            }
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            match current_scheduled() {
+                None => {
+                    let mx = guard.mx;
+                    let mut guard = guard;
+                    let raw = guard.raw.take().expect("guard accessed after release");
+                    guard.model = false;
+                    drop(guard);
+                    let (raw, res) = match self.inner.wait_timeout(raw, dur) {
+                        Ok(pair) => pair,
+                        Err(p) => p.into_inner(),
+                    };
+                    Ok((
+                        MutexGuard { raw: Some(raw), mx, model: false },
+                        WaitTimeoutResult { timed_out: res.timed_out() },
+                    ))
+                }
+                Some((sched, me)) => {
+                    let mx = guard.mx;
+                    self.model_wait(&sched, me, guard, true);
+                    let timed_out = {
+                        let mut s = sched.lock();
+                        std::mem::take(&mut s.threads[me].woke_by_timeout)
+                    };
+                    model_acquire(&sched, me, mx.addr(), false);
+                    Ok((
+                        MutexGuard { raw: Some(mx.raw_lock()), mx, model: true },
+                        WaitTimeoutResult { timed_out },
+                    ))
+                }
+            }
+        }
+
+        pub fn wait_timeout_while<'a, T, F>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+            dur: Duration,
+            mut condition: F,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)>
+        where
+            F: FnMut(&mut T) -> bool,
+        {
+            loop {
+                if !condition(&mut *guard) {
+                    return Ok((guard, WaitTimeoutResult { timed_out: false }));
+                }
+                let (g, res) = match self.wait_timeout(guard, dur) {
+                    Ok(pair) => pair,
+                    Err(p) => p.into_inner(),
+                };
+                guard = g;
+                if res.timed_out() {
+                    return Ok((guard, WaitTimeoutResult { timed_out: true }));
+                }
+            }
+        }
+
+        /// Release the mutex and enter the condvar wait set in a single
+        /// scheduler transition (the model cannot lose a wakeup between
+        /// the two), then park until notified or timed out.
+        fn model_wait<T>(&self, sched: &Sched, me: usize, guard: MutexGuard<'_, T>, timed: bool) {
+            let mx_addr = guard.mx.addr();
+            let cv_addr = self.addr();
+            let mut guard = guard;
+            guard.raw = None; // drop the std lock
+            guard.model = false; // disarm the model release in Drop
+            drop(guard);
+            sched.reschedule(me, |s| {
+                s.locks.insert(mx_addr, false);
+                for t in &mut s.threads {
+                    if t.status == Status::BlockedMutex(mx_addr) {
+                        t.status = Status::Runnable;
+                    }
+                }
+                s.threads[me].status = Status::BlockedCond { cv: cv_addr, timed };
+                s.threads[me].woke_by_timeout = false;
+            });
+        }
+
+        pub fn notify_one(&self) {
+            match current_scheduled() {
+                None => self.inner.notify_one(),
+                Some((sched, me)) => {
+                    let cv_addr = self.addr();
+                    sched.reschedule(me, |s| {
+                        if let Some(t) = s.threads.iter_mut().find(
+                            |t| matches!(t.status, Status::BlockedCond { cv, .. } if cv == cv_addr),
+                        ) {
+                            t.status = Status::Runnable;
+                            t.woke_by_timeout = false;
+                        }
+                    });
+                }
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match current_scheduled() {
+                None => self.inner.notify_all(),
+                Some((sched, me)) => {
+                    let cv_addr = self.addr();
+                    sched.reschedule(me, |s| {
+                        for t in &mut s.threads {
+                            if matches!(t.status, Status::BlockedCond { cv, .. } if cv == cv_addr) {
+                                t.status = Status::Runnable;
+                                t.woke_by_timeout = false;
+                            }
+                        }
+                    });
+                }
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+
+    impl fmt::Debug for Condvar {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("Condvar(..)")
+        }
+    }
+
+    /// RwLock modeled as an exclusive lock: readers serialize with each
+    /// other as well as with writers. Every execution of the exclusive
+    /// model is a legal execution of the real RwLock, so invariants proven
+    /// here hold for the shared-reader implementation too (the converse —
+    /// reader parallelism — is not what the models assert).
+    pub struct RwLock<T> {
+        inner: std::sync::RwLock<T>,
+    }
+
+    impl<T> RwLock<T> {
+        pub const fn new(value: T) -> RwLock<T> {
+            RwLock { inner: std::sync::RwLock::new(value) }
+        }
+
+        fn addr(&self) -> usize {
+            addr_of(self)
+        }
+
+        pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+            match current_scheduled() {
+                None => {
+                    let raw = match self.inner.read() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    Ok(RwLockReadGuard { raw: ReadRaw::Shared(raw), lk: self, model: false })
+                }
+                Some((sched, me)) => {
+                    model_acquire(&sched, me, self.addr(), true);
+                    let raw = match self.inner.write() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    Ok(RwLockReadGuard { raw: ReadRaw::Exclusive(raw), lk: self, model: true })
+                }
+            }
+        }
+
+        pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+            let model = match current_scheduled() {
+                None => false,
+                Some((sched, me)) => {
+                    model_acquire(&sched, me, self.addr(), true);
+                    true
+                }
+            };
+            let raw = match self.inner.write() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            Ok(RwLockWriteGuard { raw: Some(raw), lk: self, model })
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            match self.inner.into_inner() {
+                Ok(v) => Ok(v),
+                Err(p) => Ok(p.into_inner()),
+            }
+        }
+    }
+
+    impl<T> fmt::Debug for RwLock<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("RwLock(..)")
+        }
+    }
+
+    enum ReadRaw<'a, T> {
+        Shared(std::sync::RwLockReadGuard<'a, T>),
+        Exclusive(std::sync::RwLockWriteGuard<'a, T>),
+        Released,
+    }
+
+    pub struct RwLockReadGuard<'a, T> {
+        raw: ReadRaw<'a, T>,
+        lk: &'a RwLock<T>,
+        model: bool,
+    }
+
+    impl<T> std::ops::Deref for RwLockReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            match &self.raw {
+                ReadRaw::Shared(g) => g,
+                ReadRaw::Exclusive(g) => g,
+                ReadRaw::Released => panic!("guard accessed after release"),
+            }
+        }
+    }
+
+    impl<T> Drop for RwLockReadGuard<'_, T> {
+        fn drop(&mut self) {
+            self.raw = ReadRaw::Released;
+            if self.model {
+                if let Some((sched, me)) = current_scheduled() {
+                    model_release(&sched, me, self.lk.addr());
+                } else if let Some((sched, _)) = current() {
+                    panicking_release(&sched, self.lk.addr());
+                }
+            }
+        }
+    }
+
+    pub struct RwLockWriteGuard<'a, T> {
+        raw: Option<std::sync::RwLockWriteGuard<'a, T>>,
+        lk: &'a RwLock<T>,
+        model: bool,
+    }
+
+    impl<T> std::ops::Deref for RwLockWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.raw.as_ref().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.raw.as_mut().expect("guard accessed after release")
+        }
+    }
+
+    impl<T> Drop for RwLockWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            self.raw = None;
+            if self.model {
+                if let Some((sched, me)) = current_scheduled() {
+                    model_release(&sched, me, self.lk.addr());
+                } else if let Some((sched, _)) = current() {
+                    panicking_release(&sched, self.lk.addr());
+                }
+            }
+        }
+    }
+
+    pub mod atomic {
+        use super::super::current_scheduled;
+        pub use std::sync::atomic::Ordering;
+
+        /// A schedule decision before each atomic access: under sequential
+        /// consistency the interesting interleavings are "who gets to the
+        /// cell first", which this exposes to the explorer.
+        fn sync_op() {
+            if let Some((sched, me)) = current_scheduled() {
+                sched.reschedule(me, |_| {});
+            }
+        }
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ty, $prim:ty) => {
+                #[derive(Debug)]
+                pub struct $name {
+                    inner: $std,
+                }
+
+                impl $name {
+                    pub const fn new(v: $prim) -> Self {
+                        Self { inner: <$std>::new(v) }
+                    }
+
+                    pub fn load(&self, order: Ordering) -> $prim {
+                        sync_op();
+                        self.inner.load(order)
+                    }
+
+                    pub fn store(&self, val: $prim, order: Ordering) {
+                        sync_op();
+                        self.inner.store(val, order)
+                    }
+
+                    pub fn swap(&self, val: $prim, order: Ordering) -> $prim {
+                        sync_op();
+                        self.inner.swap(val, order)
+                    }
+                }
+            };
+        }
+
+        macro_rules! model_atomic_arith {
+            ($name:ident, $prim:ty) => {
+                impl $name {
+                    pub fn fetch_add(&self, val: $prim, order: Ordering) -> $prim {
+                        sync_op();
+                        self.inner.fetch_add(val, order)
+                    }
+
+                    pub fn fetch_sub(&self, val: $prim, order: Ordering) -> $prim {
+                        sync_op();
+                        self.inner.fetch_sub(val, order)
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        model_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+        model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        model_atomic_arith!(AtomicUsize, usize);
+        model_atomic_arith!(AtomicU32, u32);
+        model_atomic_arith!(AtomicU64, u64);
+    }
+}
+
+/// Model-aware `thread::spawn`/`join`. Outside a model execution these
+/// delegate to `std::thread`.
+pub mod thread {
+    use super::*;
+
+    enum Inner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model {
+            os: Option<std::thread::JoinHandle<()>>,
+            tid: usize,
+            sched: Arc<Sched>,
+            result: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+        },
+    }
+
+    pub struct JoinHandle<T> {
+        inner: Inner<T>,
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match current() {
+            None => JoinHandle { inner: Inner::Std(std::thread::spawn(f)) },
+            Some((sched, _)) => {
+                let result: Arc<StdMutex<Option<std::thread::Result<T>>>> =
+                    Arc::new(StdMutex::new(None));
+                let result2 = Arc::clone(&result);
+                let tid = {
+                    let mut s = sched.lock();
+                    s.threads.push(ThreadState::new());
+                    s.threads.len() - 1
+                };
+                let sched2 = Arc::clone(&sched);
+                let os = std::thread::Builder::new()
+                    .name(format!("loom-{tid}"))
+                    .spawn(move || {
+                        CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sched2), tid)));
+                        if sched2.wait_until_scheduled(tid) {
+                            let r = catch_unwind(AssertUnwindSafe(f));
+                            let msg = match &r {
+                                Ok(_) => None,
+                                Err(payload) => payload_msg(payload.as_ref()),
+                            };
+                            if let Ok(mut slot) = result2.lock() {
+                                *slot = Some(r);
+                            }
+                            sched2.thread_exit(tid, msg);
+                        } else {
+                            sched2.thread_exit(tid, None);
+                        }
+                        CURRENT.with(|c| *c.borrow_mut() = None);
+                    })
+                    .expect("spawn loom model thread");
+                JoinHandle { inner: Inner::Model { os: Some(os), tid, sched, result } }
+            }
+        }
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.inner {
+                Inner::Std(h) => h.join(),
+                Inner::Model { mut os, tid, sched, result } => {
+                    let (sched_cur, me) = current()
+                        .expect("model JoinHandle joined outside its model execution");
+                    debug_assert!(Arc::ptr_eq(&sched_cur, &sched));
+                    sched.reschedule(me, |s| {
+                        if s.threads[tid].status != Status::Finished {
+                            s.threads[me].status = Status::BlockedJoin(tid);
+                        }
+                    });
+                    if let Some(os) = os.take() {
+                        let _ = os.join();
+                    }
+                    let slot = match result.lock() {
+                        Ok(mut g) => g.take(),
+                        Err(p) => p.into_inner().take(),
+                    };
+                    match slot {
+                        Some(r) => r,
+                        // The child never ran (aborted execution): surface
+                        // an abort payload so callers unwind too.
+                        None => Err(Box::new("loom: joined thread did not run")),
+                    }
+                }
+            }
+        }
+    }
+}

@@ -18,7 +18,12 @@
 //!                  write-rename-fsync installs, checksummed footers,
 //!                  and the deterministic fault-injection filesystem
 //!                  the crash-recovery tests script,
-//! * [`tempdir`]  — self-deleting temp directories for tests.
+//! * [`tempdir`]  — self-deleting temp directories for tests,
+//! * [`sync`]     — synchronization facade over `std::sync` that swaps to
+//!                  the in-tree model checker under `cfg(loom)`,
+//! * [`loom`]     — miniature loom stand-in: exhaustive interleaving
+//!                  exploration for the facade's primitives (loom builds
+//!                  only; see `rust/tests/loom.rs`).
 
 pub mod alloc;
 pub mod bench;
@@ -26,6 +31,9 @@ pub mod bitmap;
 pub mod cli;
 pub mod fs;
 pub mod json;
+#[cfg(loom)]
+pub mod loom;
 pub mod parallel;
 pub mod prop;
+pub mod sync;
 pub mod tempdir;

@@ -15,24 +15,37 @@
 //! itself k-means in parallel) detect they are running on a pool worker
 //! and degrade to serial execution instead of deadlocking on the pool.
 
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{Condvar, Mutex, OnceLock};
 use std::any::Any;
 use std::cell::Cell;
 use std::mem::{ManuallyDrop, MaybeUninit};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Worker count: `SOAR_THREADS` override or the machine's parallelism.
+/// An unparsable or zero `SOAR_THREADS` is rejected with a warning on
+/// stderr (once) rather than silently falling back, so a typo'd override
+/// in a benchmark harness can't masquerade as a measurement.
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let cached = CACHED.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
     }
-    let n = std::env::var("SOAR_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&v| v >= 1)
+    let n = std::env::var_os("SOAR_THREADS")
+        .and_then(|raw| {
+            let parsed = raw
+                .to_str()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&v| v >= 1);
+            if parsed.is_none() {
+                eprintln!(
+                    "soar: SOAR_THREADS={raw:?} is not a positive integer; \
+                     falling back to the machine's parallelism"
+                );
+            }
+            parsed
+        })
         .unwrap_or_else(|| {
             std::thread::available_parallelism()
                 .map(|p| p.get())
@@ -118,6 +131,10 @@ fn pool() -> &'static Pool {
 /// Run one chunk, recording the first panic (with its chunk index) on the
 /// job instead of unwinding through the pool.
 fn exec_chunk(job: &Job, chunk: usize) {
+    // SAFETY: `ctx` points at the chunk closure owned by `run_chunked`'s
+    // frame, which stays alive until this job's last chunk retires (the
+    // submitter blocks on `pending`), and `call` is the matching thunk
+    // instantiated for that closure's concrete type.
     let result = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ctx, chunk) }));
     if let Err(payload) = result {
         let mut slot = job.panic.lock().unwrap();
@@ -205,6 +222,8 @@ fn run_chunked<F>(n_chunks: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
+    // SAFETY: callers must pass `ctx` as an `&F` erased to `*const ()`,
+    // alive for the duration of the call.
     unsafe fn thunk<F: Fn(usize) + Sync>(ctx: *const (), chunk: usize) {
         // SAFETY: `ctx` is the `&F` erased by `run_chunked` below, alive
         // for the whole parallel region.
@@ -313,7 +332,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use crate::util::sync::atomic::AtomicU64;
 
     #[test]
     fn par_map_matches_serial() {
@@ -325,6 +344,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 50 pool round-trips: correct but far too slow interpreted
     fn par_map_reuses_the_pool_across_calls() {
         // Many small regions in a row exercise worker re-parking; results
         // must stay ordered every time.

@@ -127,7 +127,7 @@ mod tests {
 
     #[test]
     fn passing_property_runs_all_cases() {
-        use std::sync::atomic::{AtomicU64, Ordering};
+        use crate::util::sync::atomic::{AtomicU64, Ordering};
         static RUNS: AtomicU64 = AtomicU64::new(0);
         check("always true", 50, |g| {
             let _ = g.f32_in(0.0, 1.0);

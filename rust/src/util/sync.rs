@@ -1,0 +1,115 @@
+//! Synchronization facade: the one place the crate imports
+//! `std::sync` primitives.
+//!
+//! Every scheduling-relevant primitive (locks, condvars, atomics, thread
+//! spawn/join) is re-exported here so the whole concurrency surface can be
+//! swapped onto the in-tree model checker ([`crate::util::loom`]) by
+//! building with `RUSTFLAGS="--cfg loom"`. In a normal build the facade is
+//! a zero-cost re-export of `std::sync`; under `cfg(loom)` the same names
+//! resolve to instrumented types whose operations become schedule points
+//! for exhaustive interleaving exploration (`cargo test --test loom`).
+//!
+//! `tools/invariant_lint.rs` enforces the funnel: outside this module (and
+//! the checker itself), `rust/src` must not name `std::sync` lock/atomic
+//! types directly — otherwise new concurrent code would silently escape
+//! loom coverage. `Arc`/`Weak`, `mpsc`, `Ordering`, and
+//! `LockResult`/`PoisonError` are not scheduling-relevant and stay
+//! importable from `std`; `OnceLock` is re-exported here unmodeled (its
+//! std implementation is used under both cfgs) so call sites stay inside
+//! the funnel.
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Condvar, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+
+#[cfg(loom)]
+pub use crate::util::loom::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult,
+};
+#[cfg(loom)]
+pub use std::sync::OnceLock;
+
+pub use std::sync::{LockResult, PoisonError};
+
+/// Atomics with the same shape as `std::sync::atomic`. Under `cfg(loom)`
+/// each operation takes a schedule decision before touching the cell.
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use crate::util::loom::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// Thread spawn/join that participates in model executions under
+/// `cfg(loom)`. Long-lived daemon threads (the worker pool, maintenance
+/// workers) keep using `std::thread` directly — they are modeled by
+/// purpose-built mirrors in `rust/tests/loom.rs` rather than by running
+/// the real loops under the checker.
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{spawn, JoinHandle};
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use crate::util::loom::thread::{spawn, JoinHandle};
+}
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A swappable shared-snapshot cell: readers `load` an `Arc` to the
+/// current value, writers `store` a replacement. The reader's clone
+/// happens under a read lock, so a load observes either the old or the
+/// new snapshot in full — never a torn mix — and the last reader of a
+/// replaced snapshot drops it.
+///
+/// This is the publication primitive behind `SnapshotCell` (readers keep
+/// scanning a consistent index while writers install rebuilt snapshots);
+/// it is generic so the loom models can drive the exact production code
+/// path with small payloads. Linearizability of the swap is proven by
+/// `swap_cell_publish_is_atomic_and_monotonic` in `rust/tests/loom.rs`.
+pub struct SwapCell<T> {
+    inner: RwLock<Arc<T>>,
+}
+
+impl<T> SwapCell<T> {
+    pub fn new(value: Arc<T>) -> SwapCell<T> {
+        SwapCell { inner: RwLock::new(value) }
+    }
+
+    /// Grab the current value. Cheap (one `Arc` clone under a read lock);
+    /// the returned handle stays valid while newer values are installed.
+    pub fn load(&self) -> Arc<T> {
+        match self.inner.read() {
+            Ok(guard) => Arc::clone(&guard),
+            // A writer can only poison the lock by panicking between
+            // acquiring it and completing a pointer-sized store; the cell
+            // still holds a fully-formed Arc either way.
+            Err(poisoned) => Arc::clone(&poisoned.into_inner()),
+        }
+    }
+
+    /// Atomically replace the current value.
+    pub fn store(&self, value: Arc<T>) {
+        match self.inner.write() {
+            Ok(mut guard) => *guard = value,
+            Err(poisoned) => *poisoned.into_inner() = value,
+        }
+    }
+}
+
+impl<T> fmt::Debug for SwapCell<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("SwapCell(..)")
+    }
+}

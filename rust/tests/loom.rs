@@ -1,0 +1,348 @@
+//! Model-checked concurrency protocols (build with `RUSTFLAGS="--cfg
+//! loom" cargo test --release --test loom`; without the cfg this target
+//! compiles empty and passes).
+//!
+//! Each test runs a small mirror of a production protocol under the
+//! in-tree model checker (`soar_ann::util::loom`), which executes every
+//! thread interleaving at synchronization points up to a preemption
+//! bound. The mirrors use the same `util::sync` facade primitives as the
+//! production code — and `SwapCell` *is* the production type — so a
+//! protocol bug (lost wakeup, torn publish, stale-capture install) shows
+//! up as an assertion failure or deadlock in some schedule, with the
+//! failing schedule printed.
+#![cfg(loom)]
+
+use soar_ann::util::loom::model;
+use soar_ann::util::sync::atomic::{AtomicBool, Ordering};
+use soar_ann::util::sync::{thread, Condvar, Mutex, SwapCell};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Snapshot-swap linearizability: readers racing a writer through the
+/// production `SwapCell` never observe a torn value, and successive loads
+/// never go backwards relative to a single writer's publish order.
+#[test]
+fn swap_cell_publish_is_atomic_and_monotonic() {
+    model(|| {
+        // Payload invariant: second component is always 10× the first. A
+        // torn swap (or a read overlapping a half-installed value) breaks
+        // the pairing; a non-linearizable swap breaks monotonicity.
+        let cell = Arc::new(SwapCell::new(Arc::new((0u64, 0u64))));
+        let writer = {
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                cell.store(Arc::new((1, 10)));
+                cell.store(Arc::new((2, 20)));
+            })
+        };
+        let reader = {
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                let a = cell.load();
+                let b = cell.load();
+                assert_eq!(a.1, a.0 * 10, "torn read: {a:?}");
+                assert_eq!(b.1, b.0 * 10, "torn read: {b:?}");
+                assert!(b.0 >= a.0, "snapshot went backwards: {a:?} then {b:?}");
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+        assert_eq!(cell.load().0, 2, "final snapshot is the last published");
+    });
+}
+
+/// Worker-pool publish/claim/park protocol (mirror of
+/// `util::parallel::{submit_and_help, worker_loop}`): one parked worker,
+/// one submitter listing a 2-chunk job and helping. In every schedule
+/// each chunk executes exactly once and both threads terminate — a lost
+/// wakeup (notify before the worker re-parks, missed claim) would strand
+/// a chunk and surface as a model deadlock.
+#[test]
+fn worker_pool_has_no_lost_wakeups() {
+    struct MiniJob {
+        next: usize,
+        n_chunks: usize,
+        pending: usize,
+        executed: [u32; 2],
+    }
+    struct PoolState {
+        job: Option<MiniJob>,
+        stop: bool,
+    }
+    struct MiniPool {
+        jobs: Mutex<PoolState>,
+        work_cv: Condvar,
+        done_cv: Condvar,
+    }
+    fn claim(state: &mut PoolState) -> Option<usize> {
+        match state.job.as_mut() {
+            Some(job) if job.next < job.n_chunks => {
+                let chunk = job.next;
+                job.next += 1;
+                Some(chunk)
+            }
+            _ => None,
+        }
+    }
+    model(|| {
+        let pool = Arc::new(MiniPool {
+            jobs: Mutex::new(PoolState { job: None, stop: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let worker = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || {
+                let mut guard = pool.jobs.lock().unwrap();
+                loop {
+                    if guard.stop {
+                        break;
+                    }
+                    match claim(&mut guard) {
+                        Some(chunk) => {
+                            // Execute outside the lock (mirrors exec_chunk),
+                            // then retire the chunk under it.
+                            drop(guard);
+                            guard = pool.jobs.lock().unwrap();
+                            let job = guard.job.as_mut().expect("job unlisted while pending");
+                            job.executed[chunk] += 1;
+                            job.pending -= 1;
+                            if job.pending == 0 {
+                                pool.done_cv.notify_all();
+                            }
+                        }
+                        None => guard = pool.work_cv.wait(guard).unwrap(),
+                    }
+                }
+            })
+        };
+        // Submitter: list the job (under the lock), wake the worker, help
+        // with chunks, then wait for stragglers and unlist.
+        let mut guard = pool.jobs.lock().unwrap();
+        guard.job = Some(MiniJob { next: 0, n_chunks: 2, pending: 2, executed: [0, 0] });
+        pool.work_cv.notify_all();
+        loop {
+            match claim(&mut guard) {
+                Some(chunk) => {
+                    drop(guard);
+                    guard = pool.jobs.lock().unwrap();
+                    let job = guard.job.as_mut().expect("job unlisted while pending");
+                    job.executed[chunk] += 1;
+                    job.pending -= 1;
+                }
+                None => break,
+            }
+        }
+        while guard.job.as_ref().expect("job unlisted while pending").pending > 0 {
+            guard = pool.done_cv.wait(guard).unwrap();
+        }
+        let job = guard.job.take().expect("job vanished");
+        assert_eq!(job.executed, [1, 1], "each chunk runs exactly once");
+        guard.stop = true;
+        pool.work_cv.notify_all();
+        drop(guard);
+        worker.join().unwrap();
+    });
+}
+
+/// Staged install vs. concurrent upsert (mirror of
+/// `MutableIndex::{begin_compaction, install_compaction}` +
+/// `capture_is_prefix` vs. `upsert`, with a concurrent delta seal racing
+/// both): the capture/merge-off-lock/install-if-unchanged protocol must
+/// never lose or duplicate a row, whichever of install, upsert, and seal
+/// wins each race. The sealer invalidates the compactor's capture in some
+/// schedules, so the abort path is exercised too.
+#[test]
+fn install_vs_concurrent_upsert_shadows_exactly_once() {
+    #[derive(Clone)]
+    struct Seg {
+        tag: u64,
+        ids: Vec<u32>,
+    }
+    struct Inner {
+        sealed: Vec<Seg>,
+        delta: Vec<u32>,
+        next_tag: u64,
+    }
+    fn view(inner: &Inner) -> Vec<u32> {
+        let mut v: Vec<u32> = inner.sealed.iter().flat_map(|s| s.ids.iter().copied()).collect();
+        v.extend_from_slice(&inner.delta);
+        v
+    }
+    fn publish_locked(cell: &SwapCell<Vec<u32>>, inner: &Inner) {
+        cell.store(Arc::new(view(inner)));
+    }
+    fn assert_consistent(v: &[u32]) {
+        let mut seen = std::collections::HashSet::new();
+        for id in v {
+            assert!(seen.insert(*id), "duplicate id {id} in view {v:?}");
+            assert!(matches!(*id, 1..=4 | 42), "unknown id {id}");
+        }
+    }
+    model(|| {
+        let inner = Arc::new(Mutex::new(Inner {
+            sealed: vec![Seg { tag: 1, ids: vec![1, 2] }, Seg { tag: 2, ids: vec![3] }],
+            delta: vec![4],
+            next_tag: 3,
+        }));
+        let cell = Arc::new(SwapCell::new(Arc::new(vec![1, 2, 3, 4])));
+
+        // Compactor: capture (brief lock) → merge off-lock → install only
+        // if the captured sealed list is still a prefix and the captured
+        // delta rows are still the delta's head.
+        let compactor = {
+            let inner = Arc::clone(&inner);
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                let (cap_sealed, cap_delta) = {
+                    let g = inner.lock().unwrap();
+                    (g.sealed.clone(), g.delta.clone())
+                };
+                // Merge outside the lock: fold captured delta into one run.
+                let merged: Vec<u32> = cap_sealed
+                    .iter()
+                    .flat_map(|s| s.ids.iter().copied())
+                    .chain(cap_delta.iter().copied())
+                    .collect();
+                let mut g = inner.lock().unwrap();
+                let prefix_ok = g.sealed.len() >= cap_sealed.len()
+                    && g.sealed.iter().zip(&cap_sealed).all(|(a, b)| a.tag == b.tag);
+                let delta_ok = g.delta.len() >= cap_delta.len()
+                    && g.delta[..cap_delta.len()] == cap_delta[..];
+                if !(prefix_ok && delta_ok) {
+                    return false; // capture invalidated: abort, index untouched
+                }
+                let newer: Vec<Seg> = g.sealed[cap_sealed.len()..].to_vec();
+                let tag = g.next_tag;
+                g.next_tag += 1;
+                let mut sealed = vec![Seg { tag, ids: merged }];
+                sealed.extend(newer);
+                g.sealed = sealed;
+                g.delta = g.delta[cap_delta.len()..].to_vec();
+                publish_locked(&cell, &g);
+                true
+            })
+        };
+        // Upserter: one new row through the normal mutation path.
+        let upserter = {
+            let inner = Arc::clone(&inner);
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                let mut g = inner.lock().unwrap();
+                g.delta.push(42);
+                publish_locked(&cell, &g);
+            })
+        };
+        // Sealer: moves the whole delta into a fresh sealed segment (the
+        // auto-compact seal inside the mutation path), invalidating any
+        // in-flight delta capture.
+        let sealer = {
+            let inner = Arc::clone(&inner);
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                let mut g = inner.lock().unwrap();
+                if !g.delta.is_empty() {
+                    let ids = std::mem::take(&mut g.delta);
+                    let tag = g.next_tag;
+                    g.next_tag += 1;
+                    g.sealed.push(Seg { tag, ids });
+                    publish_locked(&cell, &g);
+                }
+            })
+        };
+        // Concurrent reader: every published view is internally consistent.
+        let reader = {
+            let cell = Arc::clone(&cell);
+            thread::spawn(move || {
+                assert_consistent(&cell.load());
+            })
+        };
+        let _installed = compactor.join().unwrap();
+        upserter.join().unwrap();
+        sealer.join().unwrap();
+        reader.join().unwrap();
+
+        let g = inner.lock().unwrap();
+        let final_view = view(&g);
+        assert_consistent(&final_view);
+        for want in [1u32, 2, 3, 4, 42] {
+            assert!(
+                final_view.contains(&want),
+                "id {want} lost (view {final_view:?})"
+            );
+        }
+        // The cell's last publish happened under the inner lock, so it
+        // matches the final writer state.
+        assert_eq!(*cell.load(), final_view, "cell lags the writer state");
+    });
+}
+
+/// Group-commit publish timer (mirror of `spawn_publish_timer`): the
+/// inspect-window / kick-flag / `wait_timeout` loop must flush an armed
+/// window in every schedule. The kick-flag re-check closes the classic
+/// notify-before-wait window — without it, some schedule parks the timer
+/// after the mutator's notify and the model deadlocks.
+#[test]
+fn publish_timer_flushes_armed_window() {
+    struct TimerShared {
+        kicked: Mutex<bool>,
+        cv: Condvar,
+        stop: AtomicBool,
+    }
+    model(|| {
+        // (pending mutations, publishes flushed)
+        let inner = Arc::new(Mutex::new((0u32, 0u32)));
+        let shared = Arc::new(TimerShared {
+            kicked: Mutex::new(false),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let timer = {
+            let inner = Arc::clone(&inner);
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                loop {
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Inspect the window holding only the writer lock
+                    // (lock order inner → kicked, as in production).
+                    {
+                        let mut g = inner.lock().unwrap();
+                        if g.0 > 0 {
+                            g.0 = 0;
+                            g.1 += 1;
+                            break; // window flushed: model run complete
+                        }
+                    }
+                    let guard = shared.kicked.lock().unwrap();
+                    if *guard {
+                        // A window was armed while we were inspecting —
+                        // re-check instead of parking (the lost-wakeup
+                        // guard under test).
+                        let mut guard = guard;
+                        *guard = false;
+                        continue;
+                    }
+                    let (mut guard, _) =
+                        shared.cv.wait_timeout(guard, Duration::from_millis(100)).unwrap();
+                    *guard = false;
+                }
+            })
+        };
+        let mutator = {
+            let inner = Arc::clone(&inner);
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                inner.lock().unwrap().0 += 1; // arm the window
+                *shared.kicked.lock().unwrap() = true; // kick
+                shared.cv.notify_one();
+            })
+        };
+        mutator.join().unwrap();
+        timer.join().unwrap();
+        let g = inner.lock().unwrap();
+        assert_eq!(g.0, 0, "window left unflushed");
+        assert_eq!(g.1, 1, "window flushed exactly once");
+    });
+}

@@ -1,0 +1,476 @@
+//! `fuzz_decode` — deterministic structured fuzzing of every on-disk
+//! decoder: v1 index files, v2/v4 snapshots (plain and durable-footer),
+//! v3 collection manifests, and WAL segments (rotated and tail).
+//!
+//! Dependency-free by design: corpora are generated in-process by the
+//! crate's own savers, then mutated with the in-tree seeded PRNG
+//! ([`soar_ann::linalg::Rng`]) — byte/bit flips, truncations,
+//! extensions, length-field corruption (biased toward huge u32s),
+//! section swaps, and range zeroing. Every mutated artifact is fed to
+//! the matching loader under `catch_unwind`.
+//!
+//! Pass criteria per case:
+//!
+//! * the loader returns `Ok` (mutation survived verification — e.g. a
+//!   no-op flip) or a clean `Err` — **never a panic**;
+//! * a snapshot that loads `Ok` still satisfies `check_invariants()`;
+//! * no single allocation exceeds 1 GiB: a corrupted length field must
+//!   be rejected by plausibility gates *before* `Vec::with_capacity`,
+//!   not discovered by the OOM killer. The capped global allocator
+//!   turns such a request into an immediate abort (the fuzzer's one
+//!   non-catchable failure mode — CI treats the non-zero exit the same
+//!   as a panic).
+//!
+//! The error-variant distribution is printed at the end; `Corrupt`
+//! dominates by construction (checksums), with `Serialize`/`Io` from
+//! header/truncation damage.
+//!
+//! Usage: `fuzz_decode [--cases N] [--seed S] [--verbose]`
+//! (defaults: 2000 cases, seed 0x50AF; CI runs 12000). Failures print
+//! the (corpus, case, seed) triple — rerun with the same `--seed` and
+//! `--verbose` to replay.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::Arc;
+
+use soar_ann::config::{CollectionConfig, IndexConfig, MutableConfig};
+use soar_ann::data::synthetic::SyntheticConfig;
+use soar_ann::error::Error;
+use soar_ann::index::serialize::{
+    load_collection_parts, load_index, load_snapshot, save_collection_durable, save_index,
+    save_snapshot_durable, save_snapshot_versioned, COLLECTION_MANIFEST,
+    COLLECTION_MANIFEST_BACKUP,
+};
+use soar_ann::index::wal::ShardWal;
+use soar_ann::index::{build_index, CollectionSnapshot, IndexSnapshot, MutableIndex};
+use soar_ann::linalg::Rng;
+use soar_ann::runtime::Engine;
+use soar_ann::util::fs::RealFs;
+use soar_ann::util::tempdir::TempDir;
+
+/// Largest single allocation a decoder may request while loading a
+/// corpus-sized (~tens of KB) artifact. Generous: legitimate loads stay
+/// under a few MB; only a length field interpreted without a
+/// plausibility gate can get here.
+const ALLOC_CAP: usize = 1 << 30;
+
+struct CappedAlloc;
+
+// SAFETY: defers entirely to `System` for every in-cap request; over-cap
+// requests return null, which the caller's `handle_alloc_error` turns
+// into an abort (the intended failure report).
+unsafe impl GlobalAlloc for CappedAlloc {
+    // SAFETY: caller upholds GlobalAlloc's contract; forwarded unchanged.
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if layout.size() > ALLOC_CAP {
+            return std::ptr::null_mut();
+        }
+        System.alloc(layout)
+    }
+    // SAFETY: `ptr` came from this allocator with `layout`; forwarded.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    // SAFETY: same contract as `alloc`; forwarded unchanged.
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if layout.size() > ALLOC_CAP {
+            return std::ptr::null_mut();
+        }
+        System.alloc_zeroed(layout)
+    }
+    // SAFETY: `ptr` is a live allocation of `layout`; forwarded.
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > ALLOC_CAP {
+            return std::ptr::null_mut();
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CappedAlloc = CappedAlloc;
+
+/// Which loader a corpus exercises.
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    V1Index,
+    Snapshot,
+    Manifest,
+    Wal,
+}
+
+/// One fuzz target: pristine bytes for the mutated file, plus any
+/// sibling files the loader needs (shard bodies, the other WAL segment),
+/// re-written pristine before every case because some loaders repair or
+/// quarantine files in place.
+struct Corpus {
+    name: &'static str,
+    kind: Kind,
+    /// File the mutated bytes are written to, relative to the case dir.
+    target: &'static str,
+    pristine: Vec<u8>,
+    /// (relative name, bytes) written pristine before each case.
+    siblings: Vec<(String, Vec<u8>)>,
+}
+
+/// Small but structurally complete fixture: sealed base segments plus a
+/// delta with an update and a tombstone, so every snapshot section
+/// (postings, codes, delta rows, tombstones, model table) is populated.
+fn fixture_snapshot(engine: &Arc<Engine>, seed: u64) -> Arc<IndexSnapshot> {
+    let ds = SyntheticConfig::glove_like(160, 8, 8, seed).generate();
+    let cfg = IndexConfig {
+        num_partitions: 8,
+        ..Default::default()
+    };
+    let base = build_index(engine, &ds.data, &cfg).expect("fixture build");
+    let m = MutableIndex::from_index(base, engine.clone(), MutableConfig::default())
+        .expect("fixture mutable");
+    let mut rng = Rng::new(seed ^ 0xF1B);
+    for id in 0..4u32 {
+        let mut v = ds.data.row(id as usize).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.05 * rng.next_gaussian();
+        }
+        soar_ann::linalg::normalize(&mut v);
+        m.upsert(1000 + id, &v).expect("fixture upsert");
+    }
+    m.delete(3).expect("fixture delete");
+    m.snapshot()
+}
+
+fn read(path: &Path) -> Vec<u8> {
+    std::fs::read(path).unwrap_or_else(|e| panic!("read corpus {}: {e}", path.display()))
+}
+
+/// Build every corpus once, via the real savers, in a scratch dir.
+fn build_corpora(scratch: &Path) -> Vec<Corpus> {
+    let engine = Arc::new(Engine::cpu());
+    let snap = fixture_snapshot(&engine, 7);
+    let snap2 = fixture_snapshot(&engine, 11);
+    let mut corpora = Vec::new();
+
+    // v1 index file (legacy single-segment format).
+    {
+        let ds = SyntheticConfig::glove_like(160, 8, 8, 5).generate();
+        let cfg = IndexConfig {
+            num_partitions: 8,
+            ..Default::default()
+        };
+        let index = build_index(&engine, &ds.data, &cfg).expect("v1 build");
+        let path = scratch.join("v1.soar");
+        save_index(&index, &path).expect("save v1");
+        corpora.push(Corpus {
+            name: "v1-index",
+            kind: Kind::V1Index,
+            target: "index.soar",
+            pristine: read(&path),
+            siblings: Vec::new(),
+        });
+    }
+    // v2 (legacy segmented) and v4 (model-table) snapshots, plus the
+    // durable-footer v4 layout.
+    for (name, version) in [("v2-snapshot", 2u32), ("v4-snapshot", 4u32)] {
+        let path = scratch.join(format!("{name}.soar"));
+        save_snapshot_versioned(&snap, &path, version).expect("save snapshot");
+        corpora.push(Corpus {
+            name,
+            kind: Kind::Snapshot,
+            target: "snap.soar",
+            pristine: read(&path),
+            siblings: Vec::new(),
+        });
+    }
+    {
+        let path = scratch.join("v4d.soar");
+        save_snapshot_durable(&snap, &path, &RealFs).expect("save durable snapshot");
+        corpora.push(Corpus {
+            name: "v4-durable-snapshot",
+            kind: Kind::Snapshot,
+            target: "snap.soar",
+            pristine: read(&path),
+            siblings: Vec::new(),
+        });
+    }
+    // v3 collection manifest + two shard files. Only the manifest is
+    // mutated; shards are pristine siblings. The backup manifest is not
+    // written into case dirs, so recovery cannot silently mask a broken
+    // primary.
+    {
+        let dir = scratch.join("coll");
+        std::fs::create_dir_all(&dir).expect("mkdir coll");
+        let cs = CollectionSnapshot {
+            shards: vec![snap.clone(), snap2.clone()],
+        };
+        save_collection_durable(&cs, &CollectionConfig::default(), &dir, &RealFs)
+            .expect("save collection");
+        let mut siblings = Vec::new();
+        for entry in std::fs::read_dir(&dir).expect("ls coll") {
+            let p = entry.expect("ls coll").path();
+            let fname = p.file_name().unwrap().to_string_lossy().into_owned();
+            if fname == COLLECTION_MANIFEST || fname == COLLECTION_MANIFEST_BACKUP {
+                continue;
+            }
+            siblings.push((fname, read(&p)));
+        }
+        corpora.push(Corpus {
+            name: "v3-manifest",
+            kind: Kind::Manifest,
+            target: COLLECTION_MANIFEST,
+            pristine: read(&dir.join(COLLECTION_MANIFEST)),
+            siblings,
+        });
+    }
+    // WAL: two segments (one rotated + sealed, one live tail). Rotated
+    // segments get the strict no-torn-tail treatment; the tail tolerates
+    // a torn final record but nothing else.
+    {
+        let dir = scratch.join("wal");
+        std::fs::create_dir_all(&dir).expect("mkdir wal");
+        let (mut wal, _) = ShardWal::open(&dir, Arc::new(RealFs)).expect("wal open");
+        let mut rng = Rng::new(13);
+        let mut vec8 = [0f32; 8];
+        for id in 0..5u32 {
+            rng.fill_gaussian(&mut vec8);
+            wal.append_upsert(id, &vec8).expect("wal append");
+        }
+        wal.append_delete(2).expect("wal delete");
+        wal.sync().expect("wal sync");
+        wal.rotate().expect("wal rotate");
+        for id in 5..8u32 {
+            rng.fill_gaussian(&mut vec8);
+            wal.append_upsert(id, &vec8).expect("wal append");
+        }
+        wal.sync().expect("wal sync");
+        drop(wal);
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .expect("ls wal")
+            .map(|e| e.expect("ls wal").file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("wal-"))
+            .collect();
+        names.sort();
+        assert!(names.len() >= 2, "expected ≥2 wal segments, got {names:?}");
+        let seg_bytes: Vec<(String, Vec<u8>)> = names
+            .iter()
+            .map(|n| (n.clone(), read(&dir.join(n))))
+            .collect();
+        for (mutate_idx, cname) in [(0usize, "wal-rotated-segment"), (1, "wal-tail-segment")] {
+            let target: &'static str = Box::leak(seg_bytes[mutate_idx].0.clone().into_boxed_str());
+            let siblings = seg_bytes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != mutate_idx)
+                .map(|(_, (n, b))| (n.clone(), b.clone()))
+                .collect();
+            corpora.push(Corpus {
+                name: cname,
+                kind: Kind::Wal,
+                target,
+                pristine: seg_bytes[mutate_idx].1.clone(),
+                siblings,
+            });
+        }
+    }
+    corpora
+}
+
+/// Apply one seeded structured mutation to `bytes`.
+fn mutate(bytes: &mut Vec<u8>, rng: &mut Rng) {
+    let pick = |rng: &mut Rng, len: usize| rng.next_below(len.max(1) as u32) as usize;
+    match rng.next_below(6) {
+        // Bit/byte flips.
+        0 => {
+            let flips = 1 + rng.next_below(8) as usize;
+            for _ in 0..flips {
+                if bytes.is_empty() {
+                    break;
+                }
+                let i = pick(rng, bytes.len());
+                bytes[i] ^= 1 << rng.next_below(8);
+            }
+        }
+        // Truncation (framing / torn-tail handling).
+        1 => {
+            let at = pick(rng, bytes.len() + 1);
+            bytes.truncate(at);
+        }
+        // Extension with random garbage (trailing-byte handling).
+        2 => {
+            let extra = 1 + rng.next_below(64) as usize;
+            for _ in 0..extra {
+                bytes.push(rng.next_u32() as u8);
+            }
+        }
+        // Length-field corruption: overwrite 4 bytes with a value biased
+        // toward overflow-provoking magnitudes.
+        3 => {
+            if bytes.len() >= 4 {
+                let i = pick(rng, bytes.len() - 3);
+                let v: u32 = match rng.next_below(5) {
+                    0 => u32::MAX,
+                    1 => i32::MAX as u32,
+                    2 => u32::MAX - rng.next_below(8),
+                    3 => 1 << (24 + rng.next_below(8)),
+                    _ => rng.next_u32(),
+                };
+                bytes[i..i + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        // Section swap: exchange two disjoint ranges.
+        4 => {
+            if bytes.len() >= 8 {
+                let max_w = (bytes.len() / 2).min(256);
+                let w = 1 + pick(rng, max_w);
+                let a = pick(rng, bytes.len() - 2 * w + 1);
+                let b = a + w + pick(rng, bytes.len() - a - 2 * w + 1);
+                for k in 0..w {
+                    bytes.swap(a + k, b + k);
+                }
+            }
+        }
+        // Zero a range (simulates sparse-file holes / partial writes).
+        _ => {
+            if !bytes.is_empty() {
+                let a = pick(rng, bytes.len());
+                let w = 1 + pick(rng, (bytes.len() - a).min(512));
+                for x in &mut bytes[a..a + w] {
+                    *x = 0;
+                }
+            }
+        }
+    }
+}
+
+fn variant_name(e: &Error) -> &'static str {
+    match e {
+        Error::Config(_) => "Config",
+        Error::Shape(_) => "Shape",
+        Error::Serialize(_) => "Serialize",
+        Error::Io(_) => "Io",
+        Error::Corrupt { .. } => "Corrupt",
+        Error::Runtime(_) => "Runtime",
+        Error::Coordinator(_) => "Coordinator",
+    }
+}
+
+/// Run one loader over the case dir. Returns the outcome label, or
+/// `Err(finding)` for a panic or an `Ok` that fails invariant checks.
+fn run_loader(kind: Kind, dir: &Path, target: &Path) -> Result<&'static str, String> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| match kind {
+        Kind::V1Index => load_index(target).map(|_| ()),
+        Kind::Snapshot => load_snapshot(target).and_then(|s| s.check_invariants()),
+        Kind::Manifest => load_collection_parts(dir).and_then(|(shards, _)| {
+            for s in &shards {
+                s.check_invariants()?;
+            }
+            Ok(())
+        }),
+        Kind::Wal => ShardWal::open(dir, Arc::new(RealFs)).map(|_| ()),
+    }));
+    match outcome {
+        Ok(Ok(())) => Ok("Ok"),
+        Ok(Err(e)) => Ok(variant_name(&e)),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(format!("loader panicked: {msg}"))
+        }
+    }
+}
+
+fn main() {
+    let mut cases = 2000usize;
+    let mut seed = 0x50AFu64;
+    let mut verbose = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--cases" => {
+                cases = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage("--cases needs a number"))
+            }
+            "--seed" => {
+                seed = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage("--seed needs a number"))
+            }
+            "--verbose" => verbose = true,
+            other => usage(&format!("unknown argument {other}")),
+        }
+    }
+
+    let root = TempDir::new().expect("tempdir");
+    let corpora = build_corpora(root.path());
+    println!(
+        "fuzz_decode: {} corpora ({}), {cases} cases, seed {seed:#x}, alloc cap {} MiB",
+        corpora.len(),
+        corpora.iter().map(|c| c.name).collect::<Vec<_>>().join(", "),
+        ALLOC_CAP >> 20
+    );
+
+    let case_root = root.path().join("case");
+    let mut tallies: std::collections::BTreeMap<(&str, &str), u64> = Default::default();
+    let mut findings: Vec<String> = Vec::new();
+    for case in 0..cases {
+        let corpus = &corpora[case % corpora.len()];
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+
+        // Fresh case dir: loaders may repair/quarantine files in place.
+        let _ = std::fs::remove_dir_all(&case_root);
+        std::fs::create_dir_all(&case_root).expect("case dir");
+        for (name, bytes) in &corpus.siblings {
+            std::fs::write(case_root.join(name), bytes).expect("write sibling");
+        }
+        let mut mutated = corpus.pristine.clone();
+        mutate(&mut mutated, &mut rng);
+        let target = case_root.join(corpus.target);
+        std::fs::write(&target, &mutated).expect("write target");
+
+        if verbose {
+            println!(
+                "case {case}: corpus={} seed={case_seed:#x} len {} -> {}",
+                corpus.name,
+                corpus.pristine.len(),
+                mutated.len()
+            );
+        }
+        match run_loader(corpus.kind, &case_root, &target) {
+            Ok(label) => *tallies.entry((corpus.name, label)).or_insert(0) += 1,
+            Err(finding) => {
+                let repro = format!(
+                    "corpus={} case={case} case_seed={case_seed:#x} (rerun: fuzz_decode --cases \
+                     {cases} --seed {seed} --verbose): {finding}",
+                    corpus.name
+                );
+                eprintln!("FINDING: {repro}");
+                findings.push(repro);
+            }
+        }
+        if (case + 1) % 2000 == 0 {
+            println!("  ... {} / {cases} cases", case + 1);
+        }
+    }
+
+    println!("outcome distribution:");
+    for ((corpus, label), n) in &tallies {
+        println!("  {corpus:<22} {label:<10} {n}");
+    }
+    if !findings.is_empty() {
+        eprintln!("fuzz_decode FAILED: {} finding(s)", findings.len());
+        std::process::exit(1);
+    }
+    println!("fuzz_decode passed: {cases} mutated loads, zero panics, zero invariant breaks");
+}
+
+fn usage(msg: &str) -> ! {
+    eprintln!("fuzz_decode: {msg}\nusage: fuzz_decode [--cases N] [--seed S] [--verbose]");
+    std::process::exit(2);
+}

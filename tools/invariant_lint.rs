@@ -1,0 +1,474 @@
+//! `invariant_lint` — textual invariant checks for the crate's unsafe
+//! code, panic discipline, and concurrency facade. Successor to the
+//! original `hotpath_lint` (whose no-alloc rule is carried over as rule
+//! D). Runs in the CI lint job with no compilation; every rule is a
+//! line-level scan over `rust/src`.
+//!
+//! Rules:
+//!
+//! * **A. `[unsafe-safety-comment]`** — every `unsafe` block, `unsafe
+//!   fn`, and `unsafe impl` must be immediately preceded by a
+//!   `// SAFETY:` comment (or a `/// # Safety` doc section), scanning
+//!   upward past comments, attributes, and adjacent `unsafe impl` lines.
+//!   Bare `unsafe fn(...)` function-pointer *types* are exempt.
+//! * **B. `[serve-no-panic]`** — no `.unwrap()` / `.expect(` inside a
+//!   `serve-path: no-panic` or `hot-path: no-alloc` region. These are the
+//!   per-query code paths; a poisoned lock or stray `None` must degrade,
+//!   not abort the process. Suppress a deliberate use with
+//!   `// lint: allow(panic)` on the same line. (`.unwrap_or*` fallbacks
+//!   do not match and stay allowed.)
+//! * **C. `[std-sync-facade]`** — no direct use of `std::sync` lock,
+//!   condvar, or atomic types outside `util/sync.rs` / `util/loom.rs`;
+//!   everything else must go through the `crate::util::sync` facade so
+//!   the loom models exercise the same primitives production runs.
+//!   `Arc`, `Weak`, `mpsc`, `Ordering`, and the poison/result types are
+//!   allowed (they need no modeling). Suppress with
+//!   `// lint: allow(std-sync)` on the same line.
+//! * **D. `[hotpath-no-alloc]`** — no allocating construct inside a
+//!   `hot-path: no-alloc` region (the original hotpath_lint rule; the
+//!   runtime counterpart is `rust/tests/alloc.rs`).
+//!
+//! The lint fails when zero regions of either marker kind are found —
+//! renaming the markers must break CI, not silently disarm the rules.
+//!
+//! Usage: `invariant_lint [src-root]` (default `rust/src`), or
+//! `invariant_lint --self-test` to verify each rule still fires on a
+//! seeded violation and stays quiet on conforming code.
+
+use std::path::{Path, PathBuf};
+
+/// Substrings that allocate (rule D). Matched after stripping `//`
+/// comments.
+const BANNED_ALLOC: &[&str] = &[
+    "vec![",
+    "Vec::with_capacity",
+    ".to_vec()",
+    "Box::new(",
+    "format!(",
+    ".collect()",
+    ".collect::<",
+    ".to_string()",
+    "String::from(",
+    "String::new(",
+];
+
+/// Panic-capable calls banned inside serve/hot regions (rule B). Exact
+/// substrings: `.unwrap_or(`/`.unwrap_or_else(`/`.unwrap_or_default(` do
+/// not match.
+const BANNED_PANIC: &[&str] = &[".unwrap()", ".expect("];
+
+/// `std::sync` identifiers that must come from the facade (rule C).
+/// Anything starting with `Atomic` is banned as well.
+const BANNED_SYNC: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "OnceLock",
+    "Once",
+    "Barrier",
+    "LazyLock",
+    "WaitTimeoutResult",
+    "MutexGuard",
+    "RwLockReadGuard",
+    "RwLockWriteGuard",
+];
+
+const HOT_BEGIN: &str = "hot-path: no-alloc begin";
+const HOT_END: &str = "hot-path: no-alloc end";
+const SERVE_BEGIN: &str = "serve-path: no-panic begin";
+const SERVE_END: &str = "serve-path: no-panic end";
+
+/// Files exempt from rule C: the facade itself and the model checker
+/// backing it.
+const SYNC_EXEMPT: &[&str] = &["util/sync.rs", "util/loom.rs"];
+
+/// How far rule A scans upward (in lines) looking for a SAFETY comment.
+const SAFETY_SCAN_CAP: usize = 12;
+
+#[derive(Default)]
+struct Report {
+    violations: Vec<String>,
+    hot_regions: usize,
+    serve_regions: usize,
+    files: usize,
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Code portion of a line: everything before a `//` comment.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Rule A: does `code` contain an `unsafe` construct that needs a SAFETY
+/// comment? (Excludes `unsafe fn(` function-pointer types.)
+fn needs_safety_comment(code: &str) -> bool {
+    for (i, _) in code.match_indices("unsafe") {
+        let before_ok = i == 0
+            || !code[..i]
+                .chars()
+                .next_back()
+                .is_some_and(is_ident_char);
+        let after = &code[i + "unsafe".len()..];
+        let after_ok = !after.chars().next().is_some_and(is_ident_char);
+        if !(before_ok && after_ok) {
+            continue; // part of a longer identifier
+        }
+        if after.trim_start().starts_with("fn(") {
+            continue; // `unsafe fn(..)` function-pointer type, not a definition
+        }
+        return true;
+    }
+    false
+}
+
+/// Rule A: scan upward from line `i` (0-based) for a SAFETY comment,
+/// skipping comments, attributes, and adjacent `unsafe impl` lines.
+fn has_safety_comment(lines: &[&str], i: usize) -> bool {
+    // Trailing comment on the line itself also counts.
+    if lines[i].contains("SAFETY:") {
+        return true;
+    }
+    let mut scanned = 0;
+    let mut k = i;
+    while k > 0 && scanned < SAFETY_SCAN_CAP {
+        k -= 1;
+        scanned += 1;
+        let t = lines[k].trim_start();
+        if t.contains("SAFETY:") || t.contains("# Safety") {
+            return true;
+        }
+        let skippable = t.starts_with("//")
+            || t.starts_with("#[")
+            || t.starts_with("#!")
+            || t.contains("unsafe impl");
+        if !skippable {
+            return false;
+        }
+    }
+    false
+}
+
+/// Rule C: collect the identifiers a `std::sync::` reference names. For
+/// `use` lines that's every identifier up to the `;` (covers brace
+/// lists); elsewhere it's the `ident(::ident)*` chain only, so unrelated
+/// identifiers later on the line can't false-positive.
+fn sync_idents<'a>(code: &'a str, is_use: bool, out: &mut Vec<&'a str>) {
+    for (i, _) in code.match_indices("std::sync::") {
+        let rest = &code[i + "std::sync::".len()..];
+        if is_use {
+            let upto = rest.find(';').map_or(rest, |j| &rest[..j]);
+            out.extend(upto.split(|c| !is_ident_char(c)).filter(|s| !s.is_empty()));
+        } else {
+            let mut rest = rest;
+            loop {
+                let end = rest.find(|c| !is_ident_char(c)).unwrap_or(rest.len());
+                if end > 0 {
+                    out.push(&rest[..end]);
+                }
+                match rest[end..].strip_prefix("::") {
+                    Some(next) if next.chars().next().is_some_and(is_ident_char) => rest = next,
+                    _ => break,
+                }
+            }
+        }
+    }
+}
+
+fn lint_file(path: &Path, text: &str, report: &mut Report) {
+    let display = path.display();
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let sync_exempt = SYNC_EXEMPT.iter().any(|suffix| rel.ends_with(suffix));
+    let lines: Vec<&str> = text.lines().collect();
+
+    // (kind, open-line) of the current marker region, if any.
+    let mut hot_open: Option<usize> = None;
+    let mut serve_open: Option<usize> = None;
+
+    for (i, line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+        let code = code_part(line);
+
+        // Region bookkeeping (markers live in comments, so match the raw
+        // line).
+        if line.contains(HOT_BEGIN) {
+            if hot_open.is_some() {
+                report
+                    .violations
+                    .push(format!("[hotpath-no-alloc] {display}:{lineno}: nested `{HOT_BEGIN}`"));
+            }
+            hot_open = Some(lineno);
+            report.hot_regions += 1;
+            continue;
+        }
+        if line.contains(HOT_END) {
+            if hot_open.is_none() {
+                report.violations.push(format!(
+                    "[hotpath-no-alloc] {display}:{lineno}: `{HOT_END}` without matching begin"
+                ));
+            }
+            hot_open = None;
+            continue;
+        }
+        if line.contains(SERVE_BEGIN) {
+            if serve_open.is_some() {
+                report.violations.push(format!(
+                    "[serve-no-panic] {display}:{lineno}: nested `{SERVE_BEGIN}`"
+                ));
+            }
+            serve_open = Some(lineno);
+            report.serve_regions += 1;
+            continue;
+        }
+        if line.contains(SERVE_END) {
+            if serve_open.is_none() {
+                report.violations.push(format!(
+                    "[serve-no-panic] {display}:{lineno}: `{SERVE_END}` without matching begin"
+                ));
+            }
+            serve_open = None;
+            continue;
+        }
+
+        // Rule A: unsafe needs a SAFETY comment.
+        if needs_safety_comment(code) && !has_safety_comment(&lines, i) {
+            report.violations.push(format!(
+                "[unsafe-safety-comment] {display}:{lineno}: `unsafe` without a preceding \
+                 `// SAFETY:` comment"
+            ));
+        }
+
+        // Rule B: no panic-capable calls in serve/hot regions.
+        if (serve_open.is_some() || hot_open.is_some()) && !line.contains("lint: allow(panic)") {
+            for pat in BANNED_PANIC {
+                if code.contains(pat) {
+                    let opened = serve_open.or(hot_open).unwrap_or(lineno);
+                    report.violations.push(format!(
+                        "[serve-no-panic] {display}:{lineno}: `{pat}` inside a no-panic region \
+                         (opened at line {opened}); degrade instead, or annotate \
+                         `// lint: allow(panic)`"
+                    ));
+                }
+            }
+        }
+
+        // Rule C: std::sync primitives must come through the facade.
+        if !sync_exempt && code.contains("std::sync::") && !line.contains("lint: allow(std-sync)")
+        {
+            let is_use = code.trim_start().starts_with("use ")
+                || code.trim_start().starts_with("pub use ");
+            let mut idents = Vec::new();
+            sync_idents(code, is_use, &mut idents);
+            for ident in idents {
+                if BANNED_SYNC.contains(&ident) || ident.starts_with("Atomic") {
+                    report.violations.push(format!(
+                        "[std-sync-facade] {display}:{lineno}: `std::sync::{ident}` bypasses \
+                         `crate::util::sync` (loom models can't see it); import from the facade, \
+                         or annotate `// lint: allow(std-sync)`"
+                    ));
+                }
+            }
+        }
+
+        // Rule D: no allocation in hot-path regions.
+        if let Some(opened) = hot_open {
+            for pat in BANNED_ALLOC {
+                if code.contains(pat) {
+                    report.violations.push(format!(
+                        "[hotpath-no-alloc] {display}:{lineno}: `{pat}` inside a no-alloc \
+                         hot-path region (opened at line {opened})"
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(open) = hot_open {
+        report
+            .violations
+            .push(format!("[hotpath-no-alloc] {display}:{open}: `{HOT_BEGIN}` never closed"));
+    }
+    if let Some(open) = serve_open {
+        report
+            .violations
+            .push(format!("[serve-no-panic] {display}:{open}: `{SERVE_BEGIN}` never closed"));
+    }
+}
+
+fn lint_root(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    rust_files(root, &mut files)?;
+    files.sort();
+    let mut report = Report {
+        files: files.len(),
+        ..Report::default()
+    };
+    for file in &files {
+        let text = std::fs::read_to_string(file)?;
+        lint_file(file, &text, &mut report);
+    }
+    Ok(report)
+}
+
+/// Seed one violation per rule in a scratch tree and check each fires;
+/// then check a conforming tree stays quiet. Guards the lint itself
+/// against rot.
+fn self_test() -> Result<(), String> {
+    let dir = std::env::temp_dir().join(format!("soar_invariant_lint_{}", std::process::id()));
+    let src = dir.join("util");
+    std::fs::create_dir_all(&src).map_err(|e| format!("mkdir {}: {e}", src.display()))?;
+
+    // One conforming file exercising every rule's happy path; also
+    // provides the ≥1-region-of-each-kind floor.
+    let clean = concat!(
+        "pub fn serve(x: Option<u32>) -> u32 {\n",
+        "    // serve-path: no-panic begin\n",
+        "    let v = x.unwrap_or(0);\n",
+        "    // hot-path: no-alloc begin\n",
+        "    let w = v + 1;\n",
+        "    // hot-path: no-alloc end\n",
+        "    // serve-path: no-panic end\n",
+        "    w\n",
+        "}\n",
+        "use crate::util::sync::Mutex;\n",
+        "// SAFETY: null is a valid (unused) pointer value.\n",
+        "pub fn probe() { unsafe { std::ptr::read_volatile(&0u8); } }\n",
+    );
+    let seeded: &[(&str, &str, &str)] = &[
+        (
+            "bad_unsafe.rs",
+            "[unsafe-safety-comment]",
+            "pub fn f() { unsafe { std::ptr::read_volatile(&0u8); } }\n",
+        ),
+        (
+            "bad_panic.rs",
+            "[serve-no-panic]",
+            concat!(
+                "pub fn f(x: Option<u32>) -> u32 {\n",
+                "    // serve-path: no-panic begin\n",
+                "    let v = x.unwrap();\n",
+                "    // serve-path: no-panic end\n",
+                "    v\n",
+                "}\n",
+            ),
+        ),
+        (
+            "bad_sync.rs",
+            "[std-sync-facade]",
+            "use std::sync::Mutex;\n",
+        ),
+        (
+            "bad_alloc.rs",
+            "[hotpath-no-alloc]",
+            concat!(
+                "pub fn f() -> Vec<u32> {\n",
+                "    // hot-path: no-alloc begin\n",
+                "    let v = vec![1, 2, 3];\n",
+                "    // hot-path: no-alloc end\n",
+                "    v\n",
+                "}\n",
+            ),
+        ),
+    ];
+
+    let run = |report: std::io::Result<Report>| -> Result<Report, String> {
+        report.map_err(|e| format!("self-test lint run failed: {e}"))
+    };
+    let result = (|| {
+        std::fs::write(src.join("clean.rs"), clean)
+            .map_err(|e| format!("write clean.rs: {e}"))?;
+        // Conforming tree first: must be quiet.
+        let report = run(lint_root(&dir))?;
+        if !report.violations.is_empty() {
+            return Err(format!(
+                "conforming tree reported violations: {:?}",
+                report.violations
+            ));
+        }
+        if report.hot_regions == 0 || report.serve_regions == 0 {
+            return Err("conforming tree did not count its regions".to_string());
+        }
+        // Now seed one violation per rule and require each tag to fire.
+        for (name, _, contents) in seeded {
+            std::fs::write(src.join(name), contents)
+                .map_err(|e| format!("write {name}: {e}"))?;
+        }
+        let report = run(lint_root(&dir))?;
+        for (name, tag, _) in seeded {
+            let hit = report
+                .violations
+                .iter()
+                .any(|v| v.starts_with(tag) && v.contains(name));
+            if !hit {
+                return Err(format!(
+                    "seeded violation in {name} not detected (wanted {tag}); got {:?}",
+                    report.violations
+                ));
+            }
+        }
+        Ok(())
+    })();
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
+fn main() {
+    let arg = std::env::args().nth(1);
+    if arg.as_deref() == Some("--self-test") {
+        match self_test() {
+            Ok(()) => {
+                println!("invariant_lint self-test passed: all 4 rules fire on seeded violations");
+                return;
+            }
+            Err(e) => {
+                eprintln!("invariant_lint self-test FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let root = arg.unwrap_or_else(|| "rust/src".to_string());
+    let report = match lint_root(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("invariant_lint: cannot scan {root}: {e}");
+            std::process::exit(2);
+        }
+    };
+    if report.hot_regions == 0 || report.serve_regions == 0 {
+        eprintln!(
+            "invariant_lint FAILED: found {} `{HOT_BEGIN}` and {} `{SERVE_BEGIN}` regions under \
+             {root} — markers renamed or removed? The lint must not be silently disarmed.",
+            report.hot_regions, report.serve_regions
+        );
+        std::process::exit(1);
+    }
+    if !report.violations.is_empty() {
+        eprintln!("invariant_lint FAILED: {} violation(s):", report.violations.len());
+        for v in &report.violations {
+            eprintln!("  {v}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "invariant_lint passed: {} files, {} no-alloc region(s), {} no-panic region(s), \
+         all unsafe blocks documented, facade clean",
+        report.files, report.hot_regions, report.serve_regions
+    );
+}
