@@ -15,7 +15,7 @@ use soar_ann::config::{
 };
 use soar_ann::data::synthetic::SyntheticConfig;
 use soar_ann::data::Dataset;
-use soar_ann::index::{Collection, CollectionSearcher, Search};
+use soar_ann::index::{BatchPool, Collection, CollectionSearcher, Search};
 use soar_ann::linalg::Rng;
 use soar_ann::runtime::Engine;
 use soar_ann::util::alloc::CountingAllocator;
@@ -132,14 +132,39 @@ fn main() {
         let allocs_per_query =
             (CountingAllocator::allocations() - before) as f64 / alloc_iters as f64;
 
-        // --- batched fan-out throughput ------------------------------
+        // --- batched fan-out throughput (grouped executor, persistent
+        // pool — the serving path) -------------------------------------
+        let mut pool = BatchPool::new();
+        searcher
+            .search_batch_into(&ds.queries, &params, &mut pool)
+            .expect("batch warm-up");
         let t0 = Instant::now();
         for _ in 0..batch_rounds {
-            let results = searcher.search_batch(&ds.queries, &params).expect("batch");
-            assert_eq!(results.len(), ds.num_queries());
+            searcher
+                .search_batch_into(&ds.queries, &params, &mut pool)
+                .expect("batch");
+            assert_eq!(pool.results().len(), ds.num_queries());
         }
         let batch_secs = t0.elapsed().as_secs_f64();
         let batch_qps = (batch_rounds * ds.num_queries()) as f64 / batch_secs;
+
+        // Steady-state allocator calls per batch (contract: zero) and
+        // the amortized stream volume the grouped scan achieves.
+        let batch_alloc_iters = 10u64;
+        let before = CountingAllocator::allocations();
+        for _ in 0..batch_alloc_iters {
+            searcher
+                .search_batch_into(&ds.queries, &params, &mut pool)
+                .expect("batch");
+        }
+        let allocs_per_batch =
+            (CountingAllocator::allocations() - before) as f64 / batch_alloc_iters as f64;
+        let bytes_per_query = pool
+            .results()
+            .iter()
+            .map(|(_, st)| st.code_bytes_streamed)
+            .sum::<usize>() as f64
+            / ds.num_queries() as f64;
 
         // --- upsert latency distribution -----------------------------
         let lat = upsert_latencies(&c, &ds, ops, 7);
@@ -147,7 +172,7 @@ fn main() {
         let p99 = percentile_us(&lat, 0.99);
 
         println!(
-            "bench collection/shards={shards} search {search_qps:>8.0} qps (p50 {search_p50:>6.1}µs, {allocs_per_query:.1} allocs/q) | batch {batch_qps:>8.0} qps | upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
+            "bench collection/shards={shards} search {search_qps:>8.0} qps (p50 {search_p50:>6.1}µs, {allocs_per_query:.1} allocs/q) | batch {batch_qps:>8.0} qps ({allocs_per_batch:.1} allocs/batch, {bytes_per_query:.0} B streamed/q) | upsert p50 {p50:>7.1}µs p99 {p99:>7.1}µs"
         );
         per_shard_reports.push(Value::obj(vec![
             ("shards", Value::num(shards as f64)),
@@ -155,6 +180,8 @@ fn main() {
             ("single_query_p50_us", Value::num(search_p50)),
             ("allocs_per_query", Value::num(allocs_per_query)),
             ("batch_qps", Value::num(batch_qps)),
+            ("allocs_per_batch", Value::num(allocs_per_batch)),
+            ("code_bytes_streamed_per_query", Value::num(bytes_per_query)),
             ("upsert_p50_us", Value::num(p50)),
             ("upsert_p99_us", Value::num(p99)),
         ]));

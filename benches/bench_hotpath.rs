@@ -12,7 +12,7 @@
 use soar_ann::config::{IndexConfig, SearchParams, SpillMode};
 use soar_ann::coordinator::DedupSet;
 use soar_ann::data::synthetic::SyntheticConfig;
-use soar_ann::index::{build_index, SearchScratch, Searcher};
+use soar_ann::index::{build_index, BatchPool, SearchScratch, Searcher};
 use soar_ann::linalg::{dot, MatrixF32, Rng};
 use soar_ann::quant::lut16::{self, KernelKind};
 use soar_ann::quant::{BlockedCodes, QueryLut};
@@ -207,6 +207,81 @@ fn main() {
         ]));
     }
 
+    // -- multi-query grouped batch execution ------------------------------
+    // Three lanes per batch size: a serial single-query loop (the
+    // pre-batching reference), the per-query batch mode (parallel loop,
+    // no cross-query grouping), and the segment-major grouped executor
+    // with a persistent pool (the serving path).
+    let mut batch_entries: Vec<Value> = Vec::new();
+    let mut pool = BatchPool::new();
+    let mut rng_b = Rng::new(11);
+    let bparams = SearchParams {
+        k: 10,
+        top_t: 8,
+        rerank_budget: 200,
+    };
+    for &bsz in &[8usize, 64, 256] {
+        // Tile + jitter the query set so every batch row is distinct.
+        let mut qs = MatrixF32::zeros(bsz, ds.queries.cols());
+        for i in 0..bsz {
+            qs.row_mut(i).copy_from_slice(ds.queries.row(i % ds.num_queries()));
+            if i >= ds.num_queries() {
+                for v in qs.row_mut(i).iter_mut() {
+                    *v += 0.01 * rng_b.next_gaussian();
+                }
+            }
+        }
+        let serial = b.run(&format!("search/serial_loop/b{bsz}"), || {
+            for i in 0..bsz {
+                searcher.search_into(qs.row(i), &bparams, &mut scratch, &mut results);
+            }
+            black_box(results.len());
+        });
+        let per_query = b.run(&format!("search/per_query_mode/b{bsz}"), || {
+            black_box(searcher.search_batch_per_query(black_box(&qs), &bparams).unwrap());
+        });
+        let grouped = b.run(&format!("search/grouped_batch/b{bsz}"), || {
+            searcher
+                .search_batch_into(black_box(&qs), &bparams, &mut pool)
+                .unwrap();
+            black_box(pool.results().len());
+        });
+        // Steady-state allocator calls per batch; the bench-gate baseline
+        // pins this at zero (the pool is warm after the timed run).
+        let alloc_iters = 20u64;
+        let before = CountingAllocator::allocations();
+        for _ in 0..alloc_iters {
+            searcher.search_batch_into(&qs, &bparams, &mut pool).unwrap();
+        }
+        let allocs_per_batch =
+            (CountingAllocator::allocations() - before) as f64 / alloc_iters as f64;
+        let bytes: usize = pool
+            .results()
+            .iter()
+            .map(|(_, st)| st.code_bytes_streamed)
+            .sum();
+        let bf = bsz as f64;
+        let batch_qps = bf * 1e9 / grouped.median_ns();
+        let speedup_serial = serial.median_ns() / grouped.median_ns();
+        let speedup_pq = per_query.median_ns() / grouped.median_ns();
+        println!(
+            "batch b{bsz}: {batch_qps:.0} qps, {speedup_serial:.2}x vs serial loop, \
+             {speedup_pq:.2}x vs per-query mode, {:.0} bytes streamed/query, \
+             {allocs_per_batch:.1} allocs/batch",
+            bytes as f64 / bf
+        );
+        batch_entries.push(Value::obj(vec![
+            ("batch", Value::num(bf)),
+            ("batch_qps", Value::num(batch_qps)),
+            ("serial_loop_qps", Value::num(bf * 1e9 / serial.median_ns())),
+            ("per_query_mode_qps", Value::num(bf * 1e9 / per_query.median_ns())),
+            ("speedup_batch_vs_serial", Value::num(speedup_serial)),
+            ("speedup_batch_vs_per_query_mode", Value::num(speedup_pq)),
+            ("allocs_per_batch", Value::num(allocs_per_batch)),
+            ("code_bytes_streamed_per_query", Value::num(bytes as f64 / bf)),
+        ]));
+    }
+
     // -- report ----------------------------------------------------------
     let report = Value::obj(vec![
         ("bench", Value::str("hotpath")),
@@ -217,6 +292,7 @@ fn main() {
         ("min_speedup_blocked_vs_scalar", Value::num(min_blocked_speedup)),
         ("min_speedup_portable_vs_scalar", Value::num(min_portable_speedup)),
         ("search_single", Value::Arr(search_medians)),
+        ("search_batch", Value::Arr(batch_entries)),
         ("quick", Value::Bool(quick)),
     ]);
     std::fs::write("BENCH_hotpath.json", report.to_json_pretty()).expect("write report");

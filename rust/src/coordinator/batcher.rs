@@ -1,8 +1,12 @@
 //! Dynamic batching: fuse single-query requests into scoring batches.
 //!
-//! The centroid-scoring stage is a matmul whose PJRT dispatch cost is
-//! amortized across a batch (the AOT buckets are compiled at B=64); the
-//! batcher trades a bounded queueing delay (`max_wait_us`) for that
+//! A deeper batch is cheaper per query twice over: the centroid-scoring
+//! stage is a matmul whose dispatch cost (PJRT; AOT buckets compiled at
+//! B=64) and GEMM blocking amortize across the batch, and the grouped
+//! segment-major executor downstream streams each probed posting list
+//! **once per batch scan group** instead of once per query — so
+//! `code_bytes_streamed / queries` falls as batches deepen. The batcher
+//! trades a bounded queueing delay (`max_wait_us`) for that
 //! amortization, exactly like vLLM's request batcher. Policy:
 //!
 //! * a batch is flushed when it reaches `max_batch`, or

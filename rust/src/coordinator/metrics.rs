@@ -97,6 +97,14 @@ pub struct ServeMetrics {
     /// Batches that accumulated under the `max_wait_us` deadline (all
     /// workers were busy).
     waited_batches: AtomicU64,
+    /// Non-empty posting-list scans, summed over served queries
+    /// ([`SearchStats::lists_scanned`](crate::index::SearchStats)).
+    lists_scanned: AtomicU64,
+    /// Physical code bytes streamed, summed over served queries. Grouped
+    /// batched execution charges each streamed list once per scan group,
+    /// so `code_bytes_streamed / queries` falls as batches deepen — the
+    /// cross-query amortization the segment-major executor exists for.
+    code_bytes_streamed: AtomicU64,
     latency: Mutex<LatencyHistogram>,
     started: Instant,
 }
@@ -110,6 +118,8 @@ impl Default for ServeMetrics {
             rejected: AtomicU64::new(0),
             immediate_batches: AtomicU64::new(0),
             waited_batches: AtomicU64::new(0),
+            lists_scanned: AtomicU64::new(0),
+            code_bytes_streamed: AtomicU64::new(0),
             latency: Mutex::new(LatencyHistogram::default()),
             started: Instant::now(),
         }
@@ -126,6 +136,14 @@ impl ServeMetrics {
         for &us in per_query_latency_us {
             h.record(us);
         }
+    }
+
+    /// Fold one batch's aggregate scan work (summed over its queries)
+    /// into the serving counters.
+    pub fn record_scan_work(&self, lists_scanned: u64, code_bytes_streamed: u64) {
+        self.lists_scanned.fetch_add(lists_scanned, Ordering::Relaxed);
+        self.code_bytes_streamed
+            .fetch_add(code_bytes_streamed, Ordering::Relaxed);
     }
 
     pub fn record_rejected(&self) {
@@ -159,6 +177,8 @@ impl ServeMetrics {
             },
             immediate_batches: self.immediate_batches.load(Ordering::Relaxed),
             waited_batches: self.waited_batches.load(Ordering::Relaxed),
+            lists_scanned: self.lists_scanned.load(Ordering::Relaxed),
+            code_bytes_streamed: self.code_bytes_streamed.load(Ordering::Relaxed),
             qps: if elapsed > 0.0 {
                 queries as f64 / elapsed
             } else {
@@ -180,6 +200,13 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub immediate_batches: u64,
     pub waited_batches: u64,
+    /// Summed [`SearchStats::lists_scanned`](crate::index::SearchStats)
+    /// across served queries.
+    pub lists_scanned: u64,
+    /// Summed `SearchStats::code_bytes_streamed` across served queries;
+    /// divide by `queries` to see the grouped executor's per-query
+    /// bandwidth amortization.
+    pub code_bytes_streamed: u64,
     pub mean_batch: f64,
     pub qps: f64,
     pub mean_us: f64,
@@ -236,12 +263,16 @@ mod tests {
         m.record_rejected();
         m.record_admission(true);
         m.record_admission(false);
+        m.record_scan_work(12, 4096);
+        m.record_scan_work(3, 512);
         let s = m.snapshot();
         assert_eq!(s.queries, 4);
         assert_eq!(s.batches, 2);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.immediate_batches, 1);
         assert_eq!(s.waited_batches, 1);
+        assert_eq!(s.lists_scanned, 15);
+        assert_eq!(s.code_bytes_streamed, 4608);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
         assert!(s.mean_us > 0.0);
         assert!(s.qps > 0.0);

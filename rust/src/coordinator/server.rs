@@ -3,8 +3,9 @@
 //! Topology: callers hold a cheap cloneable [`ServeHandle`]; requests flow
 //! through a bounded mpsc into a batcher thread that forms batches
 //! (`collect_batch_adaptive`) and dispatches them to a pool of worker
-//! threads running the parallel fan-out
-//! `CollectionSearcher::search_batch`. Admission is adaptive: an
+//! threads running the grouped batched executor
+//! (`CollectionSearcher::search_batch_into` with a per-worker persistent
+//! `BatchPool`). Admission is adaptive: an
 //! in-flight batch counter shared with the workers tells the batcher
 //! whether anyone is idle — if so the batch goes out immediately (plus
 //! whatever backlog already queued), and the `max_wait_us` accumulation
@@ -36,8 +37,8 @@ use crate::coordinator::batcher::{collect_batch_adaptive, QueryRequest};
 use crate::coordinator::metrics::ServeMetrics;
 use crate::error::{Error, Result};
 use crate::index::{
-    Collection, CollectionSearcher, CollectionSnapshot, IndexSnapshot, Search, SnapshotCell,
-    SoarIndex,
+    BatchPool, Collection, CollectionSearcher, CollectionSnapshot, IndexSnapshot, Search,
+    SnapshotCell, SoarIndex,
 };
 use crate::linalg::topk::Scored;
 use crate::linalg::MatrixF32;
@@ -164,7 +165,10 @@ impl ServeEngine {
         }
         // Worker threads. Each batch loads every shard's snapshot current
         // at batch start; a concurrent swap never blocks or fails a
-        // request.
+        // request. Every worker owns a persistent [`BatchPool`], so the
+        // grouped batched executor's plans, arenas, and scratches are
+        // warm across batches — steady-state batches of a stable shape
+        // perform zero allocator calls inside the search itself.
         for w in 0..config.workers.max(1) {
             let brx = brx.clone();
             let cells = cells.clone();
@@ -174,20 +178,25 @@ impl ServeEngine {
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("soar-worker-{w}"))
-                    .spawn(move || loop {
-                        let batch = {
-                            let guard = brx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match batch {
-                            Ok(batch) => {
-                                let snapshot = CollectionSnapshot {
-                                    shards: cells.iter().map(|c| c.load()).collect(),
-                                };
-                                run_batch(&snapshot, &engine, &params, batch, &metrics);
-                                in_flight.fetch_sub(1, Ordering::Relaxed);
+                    .spawn(move || {
+                        let mut pool = BatchPool::new();
+                        loop {
+                            let batch = {
+                                let guard = brx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match batch {
+                                Ok(batch) => {
+                                    let snapshot = CollectionSnapshot {
+                                        shards: cells.iter().map(|c| c.load()).collect(),
+                                    };
+                                    run_batch(
+                                        &snapshot, &engine, &params, batch, &metrics, &mut pool,
+                                    );
+                                    in_flight.fetch_sub(1, Ordering::Relaxed);
+                                }
+                                Err(_) => break, // batcher shut down
                             }
-                            Err(_) => break, // batcher shut down
                         }
                     })
                     .expect("spawn worker"),
@@ -305,13 +314,16 @@ impl Drop for ServeEngine {
 
 /// Execute one batch on a worker thread: per-shard fan-out through the
 /// shared [`Search`] trait (a 1-shard snapshot delegates straight to the
-/// plain `SnapshotSearcher` path).
+/// plain `SnapshotSearcher` path). Results land in the worker's
+/// persistent `pool`, so the grouped executor's pooled state survives
+/// across batches.
 fn run_batch(
     snapshot: &CollectionSnapshot,
     engine: &Engine,
     params: &SearchParams,
     batch: Vec<QueryRequest>,
     metrics: &ServeMetrics,
+    pool: &mut BatchPool,
 ) {
     let searcher = CollectionSearcher::new(snapshot, engine);
     let dim = searcher.dim();
@@ -319,14 +331,11 @@ fn run_batch(
     for (i, req) in batch.iter().enumerate() {
         queries.row_mut(i).copy_from_slice(&req.query);
     }
-    let results = match searcher.search_batch(&queries, params) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("worker batch failed: {e}");
-            // Drop senders: callers observe a closed channel.
-            return;
-        }
-    };
+    if let Err(e) = searcher.search_batch_into(&queries, params, pool) {
+        eprintln!("worker batch failed: {e}");
+        // Drop senders: callers observe a closed channel.
+        return;
+    }
     // Record metrics BEFORE releasing responses: a client that returns
     // from `search` must observe its own query in the counters.
     let now = Instant::now();
@@ -335,7 +344,18 @@ fn run_batch(
         .map(|req| now.duration_since(req.enqueued).as_micros() as u64)
         .collect();
     metrics.record_batch(latencies.len(), &latencies);
-    for (req, (mut res, _stats)) in batch.into_iter().zip(results) {
+    let (lists, bytes) = pool
+        .results()
+        .iter()
+        .fold((0u64, 0u64), |(l, b), (_, stats)| {
+            (
+                l + stats.lists_scanned as u64,
+                b + stats.code_bytes_streamed as u64,
+            )
+        });
+    metrics.record_scan_work(lists, bytes);
+    for (req, (res, _stats)) in batch.into_iter().zip(pool.results()) {
+        let mut res = res.clone();
         if let Some(k) = req.k {
             res.truncate(k);
         }

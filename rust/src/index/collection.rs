@@ -50,7 +50,7 @@ use crate::index::builder::build_index_with_int8;
 use crate::index::mutable::{MutableIndex, MutableStats};
 use crate::index::serialize;
 use crate::index::wal::{ShardWal, WalOp};
-use crate::index::searcher::{Search, SearchScratch, SearchStats, SnapshotSearcher};
+use crate::index::searcher::{BatchPool, Search, SearchScratch, SearchStats, SnapshotSearcher};
 use crate::index::segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 use crate::index::SoarIndex;
 use crate::linalg::topk::{Scored, TopK};
@@ -146,22 +146,6 @@ impl<'a> CollectionSearcher<'a> {
             engine,
             fan_out_pool: Mutex::new(None),
         }
-    }
-
-    /// Merge per-shard `(results, stats)` into one global top-k.
-    fn merge_results(
-        per_shard: Vec<(Vec<Scored>, SearchStats)>,
-        k: usize,
-    ) -> (Vec<Scored>, SearchStats) {
-        let mut merged = TopK::new(k.max(1));
-        let mut stats = SearchStats::default();
-        for (results, st) in per_shard {
-            stats.accumulate(&st);
-            for r in results {
-                merged.push(r.id, r.score);
-            }
-        }
-        (merged.into_sorted(), stats)
     }
 
     /// Parallel fan-out across all shards (no caller scratch involved —
@@ -261,44 +245,80 @@ impl Search for CollectionSearcher<'_> {
         self.fan_out_into(q, params, out)
     }
 
-    fn search_batch(
+    fn search_batch_into(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
-    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        pool: &mut BatchPool,
+    ) -> Result<()> {
         let shards = &self.snapshot.shards;
-        if shards.len() == 1 {
-            return SnapshotSearcher::new(&shards[0], self.engine).search_batch(queries, params);
+        let ns = shards.len();
+        if ns == 1 {
+            return SnapshotSearcher::new(&shards[0], self.engine)
+                .search_batch_into(queries, params, pool);
         }
-        // One level of parallelism, never two: small batches run serially
-        // inside each shard's `search_batch` (its ≤ 8 cutoff), so the
-        // shard fan-out is the parallel axis; large batches parallelize
-        // across queries inside the shard, so the shards run in sequence
-        // — otherwise every batch would spawn shards × workers threads
-        // and oversubscribe the cores.
-        let mut per_shard: Vec<Vec<(Vec<Scored>, SearchStats)>> = if queries.rows() <= 8 {
-            par_map(shards.len(), |s| {
-                SnapshotSearcher::new(&shards[s], self.engine).search_batch(queries, params)
-            })
-            .into_iter()
-            .collect::<Result<_>>()?
-        } else {
-            let mut v = Vec::with_capacity(shards.len());
-            for shard in shards.iter() {
-                v.push(SnapshotSearcher::new(shard, self.engine).search_batch(queries, params)?);
-            }
-            v
-        };
         let nq = queries.rows();
-        let mut out = Vec::with_capacity(nq);
-        for qi in 0..nq {
-            let per_query: Vec<(Vec<Scored>, SearchStats)> = per_shard
-                .iter_mut()
-                .map(|shard_results| std::mem::take(&mut shard_results[qi]))
-                .collect();
-            out.push(Self::merge_results(per_query, params.k));
+        pool.arm(nq);
+        // One level of parallelism, never two: each shard's grouped
+        // executor parallelizes across scan groups and replay queries
+        // internally, so the shards run in sequence — otherwise every
+        // batch would spawn shards × workers threads and oversubscribe
+        // the cores. Each shard keeps its own execution unit so pooled
+        // plans and arenas stay shard-shaped; the `SearchScratch` lease
+        // pile is shared across shards (the replay scratches adapt).
+        pool.ensure_units(ns);
+        while pool.shard_results.len() < ns {
+            pool.shard_results.push(Vec::new());
         }
-        Ok(out)
+        {
+            let BatchPool {
+                units,
+                scratches,
+                shard_results,
+                force_f32_lut,
+                ..
+            } = pool;
+            for (si, shard) in shards.iter().enumerate() {
+                let staged = &mut shard_results[si];
+                while staged.len() < nq {
+                    staged.push((Vec::new(), SearchStats::default()));
+                }
+                units[si].force_f32_lut = *force_f32_lut;
+                SnapshotSearcher::new(shard, self.engine).search_batch_grouped(
+                    queries,
+                    params,
+                    &mut units[si],
+                    scratches,
+                    &mut staged[..nq],
+                )?;
+            }
+        }
+        // Global per-query top-k merge: shard ids are disjoint (no dedup
+        // needed); shards push in index order so exact-tie behavior at
+        // the k boundary matches the single-query fan-out.
+        let BatchPool {
+            merged,
+            results,
+            shard_results,
+            ..
+        } = pool;
+        // hot-path: no-alloc begin
+        for qi in 0..nq {
+            let (res, stats) = &mut results[qi];
+            *stats = SearchStats::default();
+            merged.reset(params.k.max(1));
+            for staged in shard_results[..ns].iter() {
+                let (shard_res, shard_stats) = &staged[qi];
+                stats.accumulate(shard_stats);
+                for r in shard_res {
+                    merged.push(r.id, r.score);
+                }
+            }
+            res.clear();
+            merged.sort_into(res);
+        }
+        // hot-path: no-alloc end
+        Ok(())
     }
 }
 

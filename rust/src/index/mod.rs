@@ -77,7 +77,9 @@ pub use collection::{
 };
 pub use ivf::PostingList;
 pub use mutable::{CompactionJob, ConvergeJob, MutableIndex, MutableStats, RetrainJob};
-pub use searcher::{Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher};
+pub use searcher::{
+    BatchPool, BatchScratch, Search, SearchScratch, SearchStats, Searcher, SnapshotSearcher,
+};
 pub use segment::{DeltaSegment, IndexSnapshot, SealedSegment, SnapshotCell};
 pub use wal::{ShardWal, WalOp, WalRecovery, WalStats};
 

@@ -41,7 +41,8 @@ use crate::linalg::topk::Scored;
 use crate::linalg::{dot, dot_i8, MatrixF32, TopK};
 use crate::quant::{lut16, BlockedCodes, ProductQuantizer, QuantModel, QueryLut};
 use crate::runtime::Engine;
-use crate::util::parallel::par_map;
+use crate::util::parallel::{num_threads, par_chunks_mut};
+use crate::util::sync::Mutex;
 
 /// Reusable per-thread scratch backing the whole query: LUT buffers, the
 /// score arena, the dedup set, both top-k heaps, and the per-model
@@ -167,6 +168,18 @@ pub struct SearchStats {
     /// Segments (delta counts as one) actually scanned (snapshot path;
     /// the monolithic path leaves this 0).
     pub segments_scanned: usize,
+    /// Non-empty posting lists this query's scan actually streamed
+    /// (empty probed partitions count in `partitions_probed` but not
+    /// here).
+    pub lists_scanned: usize,
+    /// Physical code bytes streamed for this query's scans: the blocked
+    /// LUT16 planes for quantized scans, the row-major packed codes for
+    /// exact-f32 scans. Under grouped batched execution a posting list
+    /// streams **once** for every query in its scan group, so the bytes
+    /// are charged to the group's first query and the batch aggregate
+    /// divided by batch size exposes the cross-query amortization
+    /// (`code_bytes_streamed_per_query` in the benches).
+    pub code_bytes_streamed: usize,
 }
 
 impl SearchStats {
@@ -180,6 +193,8 @@ impl SearchStats {
         self.candidates_reranked += other.candidates_reranked;
         self.tombstones_skipped += other.tombstones_skipped;
         self.segments_scanned += other.segments_scanned;
+        self.lists_scanned += other.lists_scanned;
+        self.code_bytes_streamed += other.code_bytes_streamed;
     }
 }
 
@@ -224,11 +239,17 @@ fn select_partitions_into(
     out.extend(tk.sorted().iter().map(|s| (s.id, s.score)));
 }
 
-/// Shared batched-scan driver for both searchers. One scratch per worker
-/// chunk (not per query): `DedupSet::new` is an O(n) zeroed allocation,
-/// which at small batch sizes would dominate the scan itself (perf pass:
-/// −28% batch latency vs per-query scratch). Small batches run serially —
-/// thread spawn costs more than the work they'd parallelize.
+/// Shared batched-scan driver for both searchers' per-query mode.
+/// Queries are claimed one at a time from the pool's shared chunk counter
+/// rather than split into `threads` contiguous ranges up front: with
+/// static chunking, a contiguous run of heavy queries (large probed
+/// lists) serializes on one worker while the rest idle — claim-based
+/// chunking spreads the skew. Output placement stays exactly serial:
+/// query `qi` writes slot `qi`. Scratches are leased from a shared pile
+/// (not built per query): `DedupSet::new` is an O(n) zeroed allocation,
+/// which at small batch sizes would dominate the scan itself, so each
+/// concurrent worker warms at most one scratch. Small batches run
+/// serially — thread handoff costs more than the work they'd parallelize.
 fn batched_search<MS, SO>(
     nq: usize,
     make_scratch: MS,
@@ -242,19 +263,438 @@ where
         let mut scratch = make_scratch();
         return (0..nq).map(|qi| search_one(qi, &mut scratch)).collect();
     }
-    let threads = crate::util::parallel::num_threads().min(nq);
-    let chunk = nq.div_ceil(threads);
-    par_map(threads, |t| {
-        let lo = t * chunk;
-        let hi = ((t + 1) * chunk).min(nq);
-        let mut scratch = make_scratch();
-        (lo..hi)
-            .map(|qi| search_one(qi, &mut scratch))
-            .collect::<Vec<_>>()
-    })
-    .into_iter()
-    .flatten()
-    .collect()
+    let mut out: Vec<(Vec<Scored>, SearchStats)> = (0..nq)
+        .map(|_| (Vec::new(), SearchStats::default()))
+        .collect();
+    let scratches: Mutex<Vec<SearchScratch>> = Mutex::new(Vec::with_capacity(num_threads()));
+    par_chunks_mut(&mut out, 1, |qi, slot| {
+        let mut scratch = scratches
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop()
+            .unwrap_or_else(&make_scratch);
+        slot[0] = search_one(qi, &mut scratch);
+        scratches
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(scratch);
+    });
+    out
+}
+
+// ---------------------------------------------------------------------
+// Segment-major grouped batched execution
+// ---------------------------------------------------------------------
+//
+// The per-query batch mode above runs stage 1 once per query (a scalar
+// centroid scan) and streams every probed posting list once per query
+// that probes it. The grouped executor inverts the batch to segment-major
+// order in two phases:
+//
+// * **Phase A (pure scoring)** — one GEMM-blocked engine call scores
+//   `queries × centroids` for partition selection, every query's LUT is
+//   built up front, and the batch's (query, probed-partition) pairs are
+//   counting-sorted by partition so each posting list streams **once**
+//   through the multi-query LUT16 kernel with all its queries' LUTs
+//   resident. Scores land in a pooled arena. Phase A computes exactly the
+//   numbers the per-query path would (same kernels, same reconstruction),
+//   just in a cache-coherent order.
+// * **Phase B (replay)** — each query replays its own scan order
+//   (partitions in selection-rank order, segments delta → sealed newest
+//   first) against the buffered arena scores, making every dedup,
+//   threshold, top-k, and rerank decision in exactly the per-query
+//   sequence. Order-sensitive state never crosses queries, so results
+//   are **bit-identical** to the per-query path by construction.
+
+/// One grouped scan task: all of a batch's probes of one posting list.
+/// Tuples `[tuple_lo, tuple_hi)` index the group-ordered tuple tables;
+/// the leading `n_quant` are quantized-LUT probes (scored by the
+/// multi-query kernel), the rest take the exact-f32 walk. The group owns
+/// arena rows `[arena_lo, arena_lo + n_tuples * list_len)`.
+#[derive(Clone, Copy, Debug, Default)]
+struct GroupTask {
+    p: u32,
+    tuple_lo: usize,
+    tuple_hi: usize,
+    n_quant: usize,
+    arena_lo: usize,
+}
+
+/// One planned segment of a grouped batch, in scan order. `sealed` is the
+/// index into `snapshot.sealed`, or `usize::MAX` for the delta segment
+/// (the monolithic executor uses a single entry with `sealed == MAX`).
+#[derive(Clone, Copy, Debug)]
+struct SegMeta {
+    slot: usize,
+    sealed: usize,
+}
+
+/// Raw-pointer carrier for the grouped scan's arena writes.
+struct ArenaPtr(*mut f32);
+// SAFETY: `scan_groups` writes only through pairwise-disjoint arena
+// regions — one `[arena_lo, arena_lo + n_tuples * list_len)` range per
+// group, laid out by the planner's prefix sums — and each group is
+// claimed by exactly one worker, while the arena borrow outlives the
+// parallel region. No location is written twice.
+unsafe impl Send for ArenaPtr {}
+// SAFETY: as above — workers share the base pointer but never a byte of
+// the regions they write through it.
+unsafe impl Sync for ArenaPtr {}
+
+/// Pooled state for one grouped batched execution. Everything is
+/// clear+resize reused: steady-state batches of a stable shape perform
+/// zero allocator calls (pinned by `rust/tests/alloc.rs`).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// Batched `queries × centroids` selection scores for one model.
+    cscores: MatrixF32,
+    /// Selection heap (replays `select_partitions_into`'s push order).
+    sel: TopK,
+    /// Flat ranked partitions: slot `s`'s block starts at `slot_off[s]`,
+    /// query `qi` owns `[qi * t_sel[s], (qi + 1) * t_sel[s])` within it.
+    parts: Vec<(u32, f32)>,
+    slot_off: Vec<usize>,
+    t_sel: Vec<usize>,
+    /// Per-(query, slot) LUTs, indexed `qi * slots + slot`.
+    luts: Vec<QueryLut>,
+    /// Per-(query, slot) f32-fallback flags, same indexing.
+    use_f32: Vec<bool>,
+    /// Per-(query, slot) int8-prescaled queries, `dim` floats each.
+    q_scaled: Vec<f32>,
+    /// Counting-sort state, one entry per partition of the segment being
+    /// planned: group start offsets (`np + 1` prefix sums), quantized
+    /// tuple counts, placement cursors, arena offsets.
+    gp_start: Vec<usize>,
+    gp_quant: Vec<usize>,
+    gp_cursor_q: Vec<usize>,
+    gp_cursor_f: Vec<usize>,
+    gp_arena: Vec<usize>,
+    /// Group-ordered tuple tables (all segments back to back): LUT index
+    /// (`qi * slots + slot`) and per-probe centroid score.
+    tuple_lut: Vec<u32>,
+    tuple_cs: Vec<f32>,
+    /// Per-(query, rank) replay tables, indexed
+    /// `seg_qr_base[seg] + qi * t_eff + r`: each probe's arena offset and
+    /// its streamed-bytes charge.
+    qr_arena: Vec<usize>,
+    qr_bytes: Vec<usize>,
+    /// Scan tasks, grouped per segment via `seg_groups` ranges.
+    groups: Vec<GroupTask>,
+    seg_groups: Vec<(usize, usize)>,
+    seg_qr_base: Vec<usize>,
+    seg_meta: Vec<SegMeta>,
+    /// Buffered scores: group `g`'s member `i` owns
+    /// `[g.arena_lo + i * len, g.arena_lo + (i + 1) * len)`.
+    arena: Vec<f32>,
+    /// Force the exact f32 LUT path (propagated from the pool).
+    force_f32_lut: bool,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch {
+            sel: TopK::new(1),
+            ..Default::default()
+        }
+    }
+
+    /// Re-arm the pooled state for a batch of `nq` queries over `slots`
+    /// model slots of dimension `dim`. Capacity is retained everywhere.
+    fn begin(&mut self, nq: usize, slots: usize, dim: usize) {
+        self.parts.clear();
+        self.slot_off.clear();
+        self.t_sel.clear();
+        let need = nq * slots;
+        while self.luts.len() < need {
+            self.luts.push(QueryLut::new());
+        }
+        self.use_f32.clear();
+        self.use_f32.resize(need, false);
+        self.q_scaled.clear();
+        self.q_scaled.resize(need * dim, 0.0);
+        self.tuple_lut.clear();
+        self.tuple_cs.clear();
+        self.qr_arena.clear();
+        self.qr_bytes.clear();
+        self.groups.clear();
+        self.seg_groups.clear();
+        self.seg_qr_base.clear();
+        self.seg_meta.clear();
+    }
+
+    /// Plan one segment's grouped scan: counting-sort the batch's
+    /// (query, rank) probe tuples by partition (quantized-LUT probes
+    /// leading each group so the multi-query kernel sees one contiguous
+    /// run), assign each group a contiguous arena region, and record
+    /// every probe's arena offset and streamed-bytes charge for Phase B.
+    /// Probes of empty posting lists get no group, no arena region, and a
+    /// zero byte charge — the replay skips them exactly like the
+    /// per-query path does.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_segment(
+        &mut self,
+        nq: usize,
+        slots: usize,
+        slot: usize,
+        top_t: usize,
+        postings: &[PostingList],
+        blocked: &[BlockedCodes],
+        code_bytes: usize,
+        arena_total: &mut usize,
+    ) {
+        let t_sel = self.t_sel[slot];
+        let t_eff = t_sel.min(top_t);
+        let parts_base = self.slot_off[slot];
+        let np = postings.len();
+        // Pass 1: per-partition tuple counts (prefix-summed into group
+        // start offsets) and quantized-member counts.
+        self.gp_start.clear();
+        self.gp_start.resize(np + 1, 0);
+        self.gp_quant.clear();
+        self.gp_quant.resize(np, 0);
+        for qi in 0..nq {
+            let quant = !self.use_f32[qi * slots + slot];
+            for r in 0..t_eff {
+                let p = self.parts[parts_base + qi * t_sel + r].0 as usize;
+                self.gp_start[p + 1] += 1;
+                if quant {
+                    self.gp_quant[p] += 1;
+                }
+            }
+        }
+        for p in 0..np {
+            self.gp_start[p + 1] += self.gp_start[p];
+        }
+        let tuple_base = self.tuple_lut.len();
+        let n_tuples = self.gp_start[np];
+        self.tuple_lut.resize(tuple_base + n_tuples, 0);
+        self.tuple_cs.resize(tuple_base + n_tuples, 0.0);
+        // Pass 2: arena layout + one scan task per non-empty probed list.
+        let group_lo = self.groups.len();
+        self.gp_arena.clear();
+        self.gp_arena.resize(np, 0);
+        for p in 0..np {
+            let lo = self.gp_start[p];
+            let hi = self.gp_start[p + 1];
+            let len = postings[p].len();
+            if lo == hi || len == 0 {
+                continue;
+            }
+            self.gp_arena[p] = *arena_total;
+            *arena_total += (hi - lo) * len;
+            self.groups.push(GroupTask {
+                p: p as u32,
+                tuple_lo: tuple_base + lo,
+                tuple_hi: tuple_base + hi,
+                n_quant: self.gp_quant[p],
+                arena_lo: self.gp_arena[p],
+            });
+        }
+        self.seg_groups.push((group_lo, self.groups.len()));
+        // Pass 3: place every tuple (quantized first within its group,
+        // query order preserved within each class) and record the replay
+        // tables. The blocked planes are charged once per group — to the
+        // group's first quantized probe; f32 probes stream the row-major
+        // codes individually.
+        let qr_base = self.qr_arena.len();
+        self.seg_qr_base.push(qr_base);
+        self.qr_arena.resize(qr_base + nq * t_eff, 0);
+        self.qr_bytes.resize(qr_base + nq * t_eff, 0);
+        self.gp_cursor_q.clear();
+        self.gp_cursor_q.resize(np, 0);
+        self.gp_cursor_f.clear();
+        self.gp_cursor_f.resize(np, 0);
+        for qi in 0..nq {
+            let li = (qi * slots + slot) as u32;
+            let quant = !self.use_f32[li as usize];
+            for r in 0..t_eff {
+                let (p_u, cs) = self.parts[parts_base + qi * t_sel + r];
+                let p = p_u as usize;
+                let len = postings[p].len();
+                let qr = qr_base + qi * t_eff + r;
+                if len == 0 {
+                    continue;
+                }
+                let pos = if quant {
+                    let c = self.gp_cursor_q[p];
+                    self.gp_cursor_q[p] += 1;
+                    c
+                } else {
+                    let c = self.gp_cursor_f[p];
+                    self.gp_cursor_f[p] += 1;
+                    self.gp_quant[p] + c
+                };
+                let ti = tuple_base + self.gp_start[p] + pos;
+                self.tuple_lut[ti] = li;
+                self.tuple_cs[ti] = cs;
+                self.qr_arena[qr] = self.gp_arena[p] + pos * len;
+                self.qr_bytes[qr] = if !quant {
+                    len * code_bytes
+                } else if pos == 0 {
+                    blocked[p].memory_bytes()
+                } else {
+                    0
+                };
+            }
+        }
+    }
+}
+
+/// Pooled state for [`Search::search_batch_into`]: one [`BatchScratch`]
+/// execution unit per shard (single-index searchers use unit 0), a shared
+/// pile of leased [`SearchScratch`]es for the replay workers, the
+/// cross-shard merge heap, and the per-batch result storage. Construct
+/// once per serving thread and reuse — steady-state batches of a stable
+/// shape perform zero allocator calls (pinned by `rust/tests/alloc.rs`).
+#[derive(Debug)]
+pub struct BatchPool {
+    pub(crate) units: Vec<BatchScratch>,
+    pub(crate) scratches: Mutex<Vec<SearchScratch>>,
+    pub(crate) merged: TopK,
+    pub(crate) results: Vec<(Vec<Scored>, SearchStats)>,
+    /// Per-shard result staging (collection executor only).
+    pub(crate) shard_results: Vec<Vec<(Vec<Scored>, SearchStats)>>,
+    pub(crate) active: usize,
+    /// Force the exact f32 LUT path for the whole batch (recall-parity
+    /// tests / debugging), like [`SearchScratch::force_f32_lut`].
+    pub force_f32_lut: bool,
+}
+
+impl BatchPool {
+    pub fn new() -> BatchPool {
+        BatchPool {
+            units: Vec::new(),
+            scratches: Mutex::new(Vec::new()),
+            merged: TopK::new(1),
+            results: Vec::new(),
+            shard_results: Vec::new(),
+            active: 0,
+            force_f32_lut: false,
+        }
+    }
+
+    /// This batch's results, one `(ranked hits, stats)` entry per query
+    /// row, valid until the next `search_batch_into` call.
+    pub fn results(&self) -> &[(Vec<Scored>, SearchStats)] {
+        &self.results[..self.active]
+    }
+
+    /// Size the result storage for `nq` queries without shedding the
+    /// pooled capacity of previous (possibly larger) batches.
+    pub(crate) fn arm(&mut self, nq: usize) {
+        while self.results.len() < nq {
+            self.results.push((Vec::new(), SearchStats::default()));
+        }
+        self.active = nq;
+    }
+
+    pub(crate) fn ensure_units(&mut self, n: usize) {
+        while self.units.len() < n {
+            self.units.push(BatchScratch::new());
+        }
+    }
+
+    pub(crate) fn lease(&self) -> Option<SearchScratch> {
+        self.scratches
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop()
+    }
+
+    pub(crate) fn give_back(&self, scratch: SearchScratch) {
+        self.scratches
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(scratch);
+    }
+}
+
+impl Default for BatchPool {
+    fn default() -> Self {
+        BatchPool::new()
+    }
+}
+
+/// GEMM-blocked partition selection for one model: the engine scores the
+/// whole batch against the centroids in one call (the CPU path is the
+/// blocked [`crate::linalg::matmul_nt`] kernel — bit-identical per
+/// element to the scalar `dot` loop), then a per-query top-k replays
+/// [`select_partitions_into`]'s exact push order over each score row.
+/// Appends each query's `t_sel` ranked `(partition, score)` pairs to
+/// `parts` and returns `t_sel`.
+fn select_slot_grouped(
+    engine: &Engine,
+    queries: &MatrixF32,
+    centroids: &MatrixF32,
+    top_t: usize,
+    cscores: &mut MatrixF32,
+    sel: &mut TopK,
+    parts: &mut Vec<(u32, f32)>,
+) -> Result<usize> {
+    let t_sel = top_t.min(centroids.rows()).max(1);
+    engine.centroid_scores_into(queries, centroids, cscores)?;
+    for qi in 0..queries.rows() {
+        sel.reset(t_sel);
+        for (j, &s) in cscores.row(qi).iter().enumerate() {
+            sel.push(j as u32, s);
+        }
+        sel.sort_into_pairs(parts);
+    }
+    Ok(t_sel)
+}
+
+/// Phase A scan of one segment's groups: workers claim scan tasks one at
+/// a time; each streams its posting list **once**, scoring every query of
+/// the group — the quantized run through the multi-query LUT16 kernel
+/// ([`lut16::score_all_group`]), f32-fallback probes through the exact
+/// per-candidate walk — into the group's disjoint arena region.
+#[allow(clippy::too_many_arguments)]
+fn scan_groups(
+    groups: &mut [GroupTask],
+    postings: &[PostingList],
+    blocked: &[BlockedCodes],
+    pq: &ProductQuantizer,
+    luts: &[QueryLut],
+    tuple_lut: &[u32],
+    tuple_cs: &[f32],
+    arena: &mut [f32],
+) {
+    let arena_len = arena.len();
+    let base = ArenaPtr(arena.as_mut_ptr());
+    let base = &base;
+    // hot-path: no-alloc begin (grouped scans write pre-sized arena
+    // regions; nothing below may touch the allocator)
+    par_chunks_mut(groups, 1, |_, task| {
+        let g = task[0];
+        let list = &postings[g.p as usize];
+        let len = list.len();
+        let n = g.tuple_hi - g.tuple_lo;
+        debug_assert!(g.arena_lo + n * len <= arena_len);
+        // SAFETY: the planner's prefix sums give every group a disjoint
+        // `[arena_lo, arena_lo + n * len)` region of the arena (whose
+        // borrow outlives this parallel region), and each group is
+        // claimed by exactly one worker — no byte is aliased.
+        let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(g.arena_lo), n * len) };
+        if g.n_quant > 0 {
+            lut16::score_all_group(
+                &blocked[g.p as usize],
+                luts,
+                &tuple_lut[g.tuple_lo..g.tuple_lo + g.n_quant],
+                &tuple_cs[g.tuple_lo..g.tuple_lo + g.n_quant],
+                &mut out[..g.n_quant * len],
+            );
+        }
+        let cb = pq.code_bytes();
+        for i in g.n_quant..n {
+            let lut = &luts[tuple_lut[g.tuple_lo + i] as usize];
+            let cs = tuple_cs[g.tuple_lo + i];
+            let row = &mut out[i * len..(i + 1) * len];
+            for (e, v) in row.iter_mut().enumerate() {
+                *v = cs + pq.adc_score(&lut.f32_lut, list.code(e, cb));
+            }
+        }
+    });
+    // hot-path: no-alloc end
 }
 
 /// The capability every searcher exposes: scratch construction, a
@@ -293,13 +733,34 @@ pub trait Search: Sync {
         (out, stats)
     }
 
-    /// Batched search: engine-batched partition selection + parallel
-    /// per-query scans.
+    /// Batched search into a reusable [`BatchPool`] — the allocation-free
+    /// batched primitive. `nq ≥ 2` runs the segment-major grouped
+    /// executor (GEMM-blocked selection, posting lists streamed once per
+    /// scan group); smaller batches run the single-query path on a
+    /// leased scratch. Results are bit-identical to looping
+    /// [`Search::search_into`] over the rows and land in
+    /// [`BatchPool::results`].
+    fn search_batch_into(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+        pool: &mut BatchPool,
+    ) -> Result<()>;
+
+    /// Batched search with owned results (a fresh pool per call; serving
+    /// paths that care about steady-state allocation call
+    /// [`Search::search_batch_into`] with a persistent pool).
     fn search_batch(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
-    ) -> Result<Vec<(Vec<Scored>, SearchStats)>>;
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let mut pool = BatchPool::new();
+        self.search_batch_into(queries, params, &mut pool)?;
+        let mut results = std::mem::take(&mut pool.results);
+        results.truncate(pool.active);
+        Ok(results)
+    }
 }
 
 /// Read-only searcher over an index; cheap to construct, `Sync`.
@@ -352,9 +813,26 @@ impl<'a> Searcher<'a> {
         stats
     }
 
-    /// Batched search: one engine call selects partitions for the whole
-    /// batch (the PJRT hot path), then per-query scans run in parallel.
+    /// Batched search with owned results; see [`Search::search_batch`].
     pub fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let mut pool = BatchPool::new();
+        self.search_batch_into(queries, params, &mut pool)?;
+        let mut results = std::mem::take(&mut pool.results);
+        results.truncate(pool.active);
+        Ok(results)
+    }
+
+    /// The pre-grouping batch mode: one engine top-k call selects
+    /// partitions for the whole batch, then fully independent per-query
+    /// scans run in parallel (each probed posting list streams once *per
+    /// query*). Kept as the A/B baseline the grouped executor's speedup
+    /// benches measure against and as the oracle the equivalence
+    /// proptests compare with.
+    pub fn search_batch_per_query(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
@@ -368,6 +846,205 @@ impl<'a> Searcher<'a> {
             || SearchScratch::new(self.index),
             |qi, scratch| self.search_partitions(queries.row(qi), &partitions[qi], params, scratch),
         ))
+    }
+
+    /// Batched search into a reusable [`BatchPool`]; see
+    /// [`Search::search_batch_into`].
+    pub fn search_batch_into(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+        pool: &mut BatchPool,
+    ) -> Result<()> {
+        debug_assert_eq!(queries.cols(), self.index.dim);
+        let nq = queries.rows();
+        pool.arm(nq);
+        if nq <= 1 {
+            let mut scratch = pool
+                .lease()
+                .unwrap_or_else(|| SearchScratch::new(self.index));
+            scratch.force_f32_lut = pool.force_f32_lut;
+            for qi in 0..nq {
+                let (res, stats) = &mut pool.results[qi];
+                *stats = self.search_into(queries.row(qi), params, &mut scratch, res);
+            }
+            pool.give_back(scratch);
+            return Ok(());
+        }
+        pool.ensure_units(1);
+        let BatchPool {
+            units,
+            scratches,
+            results,
+            force_f32_lut,
+            ..
+        } = pool;
+        units[0].force_f32_lut = *force_f32_lut;
+        self.search_batch_grouped(queries, params, &mut units[0], scratches, &mut results[..nq])
+    }
+
+    /// Segment-major grouped batched search (stages 1–3 for the whole
+    /// batch): GEMM-blocked selection, up-front LUT builds, counting-
+    /// sorted grouped scans through the multi-query LUT16 kernel, then a
+    /// per-query replay of the buffered scores. Bit-identical to the
+    /// per-query path by construction (see the grouped-execution module
+    /// comment above).
+    pub(crate) fn search_batch_grouped(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+        bs: &mut BatchScratch,
+        scratches: &Mutex<Vec<SearchScratch>>,
+        out: &mut [(Vec<Scored>, SearchStats)],
+    ) -> Result<()> {
+        let index = self.index;
+        let nq = queries.rows();
+        let dim = index.dim;
+        debug_assert!(out.len() >= nq);
+        bs.begin(nq, 1, dim);
+
+        // Phase 0: GEMM-blocked partition selection for the whole batch.
+        bs.slot_off.push(bs.parts.len());
+        let t_sel = select_slot_grouped(
+            self.engine,
+            queries,
+            index.centroids(),
+            params.top_t,
+            &mut bs.cscores,
+            &mut bs.sel,
+            &mut bs.parts,
+        )?;
+        bs.t_sel.push(t_sel);
+
+        // Phase 1: every query's LUT + int8 prescaling, built up front.
+        let force = bs.force_f32_lut;
+        par_chunks_mut(&mut bs.luts[..nq], 1, |qi, lut| {
+            index.pq().build_query_lut(queries.row(qi), &mut lut[0]);
+        });
+        for qi in 0..nq {
+            bs.use_f32[qi] = force || !bs.luts[qi].quantized;
+        }
+        if let Some(q8) = index.int8() {
+            for qi in 0..nq {
+                let dst = &mut bs.q_scaled[qi * dim..(qi + 1) * dim];
+                for ((d, &v), &s) in dst.iter_mut().zip(queries.row(qi)).zip(&q8.scales) {
+                    *d = v * s;
+                }
+            }
+        }
+
+        // Phase 2: counting-sort the batch's probes by partition and lay
+        // out the score arena.
+        let mut arena_total = 0usize;
+        bs.seg_meta.push(SegMeta {
+            slot: 0,
+            sealed: usize::MAX,
+        });
+        bs.plan_segment(
+            nq,
+            1,
+            0,
+            params.top_t,
+            &index.postings,
+            &index.blocked,
+            index.pq().code_bytes(),
+            &mut arena_total,
+        );
+        bs.arena.clear();
+        bs.arena.resize(arena_total, 0.0);
+
+        // Phase 3: grouped scans — each probed posting list streams once.
+        {
+            let BatchScratch {
+                groups,
+                luts,
+                tuple_lut,
+                tuple_cs,
+                arena,
+                seg_groups,
+                ..
+            } = &mut *bs;
+            let (glo, ghi) = seg_groups[0];
+            scan_groups(
+                &mut groups[glo..ghi],
+                &index.postings,
+                &index.blocked,
+                index.pq(),
+                luts,
+                tuple_lut,
+                tuple_cs,
+                arena,
+            );
+        }
+
+        // Phase 4: per-query replay — every dedup, threshold, top-k, and
+        // rerank decision in exactly the per-query order, against the
+        // buffered arena scores.
+        let bs_ref = &*bs;
+        let t_eff = t_sel.min(params.top_t);
+        // hot-path: no-alloc begin (replay reads the arena and pooled
+        // replay tables; per-worker scratches come from the lease pile)
+        par_chunks_mut(&mut out[..nq], 1, |qi, slot_out| {
+            let mut scratch = scratches
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .pop()
+                .unwrap_or_else(|| SearchScratch::new(index));
+            let (res, stats) = &mut slot_out[0];
+            *stats = SearchStats::default();
+            scratch.visited.ensure_capacity(index.n);
+            scratch.visited.reset();
+            scratch.approx.reset(params.rerank_budget.max(params.k));
+            for r in 0..t_eff {
+                let (p, _) = bs_ref.parts[qi * t_sel + r];
+                let list = &index.postings[p as usize];
+                stats.partitions_probed += 1;
+                stats.points_scanned += list.len();
+                if list.is_empty() {
+                    continue;
+                }
+                stats.lists_scanned += 1;
+                stats.code_bytes_streamed += bs_ref.qr_bytes[qi * t_eff + r];
+                let a0 = bs_ref.qr_arena[qi * t_eff + r];
+                let scores = &bs_ref.arena[a0..a0 + list.len()];
+                let mut thresh = scratch.approx.threshold();
+                for (i, &id) in list.ids.iter().enumerate() {
+                    if !scratch.visited.insert(id) {
+                        stats.duplicates_skipped += 1;
+                        continue;
+                    }
+                    let score = scores[i];
+                    if score > thresh {
+                        scratch.approx.push(id, score);
+                        thresh = scratch.approx.threshold();
+                    }
+                }
+            }
+            res.clear();
+            match index.int8() {
+                Some(_) => {
+                    let q_scaled = &bs_ref.q_scaled[qi * dim..(qi + 1) * dim];
+                    scratch.merged.reset(params.k);
+                    for &cand in scratch.approx.sorted() {
+                        stats.candidates_reranked += 1;
+                        scratch
+                            .merged
+                            .push(cand.id, dot_i8(q_scaled, index.int8_record(cand.id)));
+                    }
+                    scratch.merged.sort_into(res);
+                }
+                None => {
+                    res.extend_from_slice(scratch.approx.sorted());
+                    res.truncate(params.k);
+                }
+            }
+            scratches
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(scratch);
+        });
+        // hot-path: no-alloc end
+        Ok(())
     }
 
     /// Stages 2+3 given an already-selected partition list.
@@ -413,6 +1090,12 @@ impl<'a> Searcher<'a> {
             if list.is_empty() {
                 continue;
             }
+            stats.lists_scanned += 1;
+            stats.code_bytes_streamed += if use_f32 {
+                list.len() * index.pq().code_bytes()
+            } else {
+                index.blocked[p as usize].memory_bytes()
+            };
             score_list(
                 index.pq(),
                 list,
@@ -481,12 +1164,13 @@ impl Search for Searcher<'_> {
         Searcher::search_into(self, q, params, scratch, out)
     }
 
-    fn search_batch(
+    fn search_batch_into(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
-    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
-        Searcher::search_batch(self, queries, params)
+        pool: &mut BatchPool,
+    ) -> Result<()> {
+        Searcher::search_batch_into(self, queries, params, pool)
     }
 }
 
@@ -541,10 +1225,25 @@ impl<'a> SnapshotSearcher<'a> {
         stats
     }
 
-    /// Batched search: one engine call per distinct model selects
-    /// partitions for the whole batch, then per-query scans run in
-    /// parallel (shares [`Searcher::search_batch`]'s driver).
+    /// Batched search with owned results; see [`Search::search_batch`].
     pub fn search_batch(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
+        let mut pool = BatchPool::new();
+        self.search_batch_into(queries, params, &mut pool)?;
+        let mut results = std::mem::take(&mut pool.results);
+        results.truncate(pool.active);
+        Ok(results)
+    }
+
+    /// The pre-grouping batch mode: one engine top-k call per distinct
+    /// model, then fully independent per-query scans (shares
+    /// [`Searcher::search_batch_per_query`]'s driver). Kept as the A/B
+    /// baseline for the grouped executor's speedup benches and as the
+    /// oracle the equivalence proptests compare with.
+    pub fn search_batch_per_query(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
@@ -571,6 +1270,322 @@ impl<'a> SnapshotSearcher<'a> {
             || SearchScratch::for_snapshot(self.snapshot),
             |qi, scratch| self.search_partitions(queries.row(qi), &by_query[qi], params, scratch),
         ))
+    }
+
+    /// Batched search into a reusable [`BatchPool`]; see
+    /// [`Search::search_batch_into`].
+    pub fn search_batch_into(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+        pool: &mut BatchPool,
+    ) -> Result<()> {
+        debug_assert_eq!(queries.cols(), self.snapshot.dim());
+        let nq = queries.rows();
+        pool.arm(nq);
+        if nq <= 1 {
+            let mut scratch = pool
+                .lease()
+                .unwrap_or_else(|| SearchScratch::for_snapshot(self.snapshot));
+            scratch.force_f32_lut = pool.force_f32_lut;
+            for qi in 0..nq {
+                let (res, stats) = &mut pool.results[qi];
+                *stats = self.search_into(queries.row(qi), params, &mut scratch, res);
+            }
+            pool.give_back(scratch);
+            return Ok(());
+        }
+        pool.ensure_units(1);
+        let BatchPool {
+            units,
+            scratches,
+            results,
+            force_f32_lut,
+            ..
+        } = pool;
+        units[0].force_f32_lut = *force_f32_lut;
+        self.search_batch_grouped(queries, params, &mut units[0], scratches, &mut results[..nq])
+    }
+
+    /// Segment-major grouped batched search over the snapshot: per-model
+    /// GEMM-blocked selection and LUT builds up front, then every scanned
+    /// segment's posting lists stream once through the multi-query
+    /// kernel, then a per-query replay walks segments delta → sealed
+    /// newest-first making every dedup / tombstone / threshold / rerank
+    /// decision in exactly the single-query order. Bit-identical to the
+    /// per-query path by construction.
+    pub(crate) fn search_batch_grouped(
+        &self,
+        queries: &MatrixF32,
+        params: &SearchParams,
+        bs: &mut BatchScratch,
+        scratches: &Mutex<Vec<SearchScratch>>,
+        out: &mut [(Vec<Scored>, SearchStats)],
+    ) -> Result<()> {
+        let snap = self.snapshot;
+        let models = snap.models();
+        let slots = models.len();
+        let nq = queries.rows();
+        let dim = snap.dim();
+        debug_assert!(out.len() >= nq);
+        bs.begin(nq, slots, dim);
+
+        // Phase 0: GEMM-blocked partition selection per distinct model.
+        for model in models {
+            bs.slot_off.push(bs.parts.len());
+            let t = select_slot_grouped(
+                self.engine,
+                queries,
+                &model.centroids,
+                params.top_t,
+                &mut bs.cscores,
+                &mut bs.sel,
+                &mut bs.parts,
+            )?;
+            bs.t_sel.push(t);
+        }
+
+        // Phase 1: per-(query, slot) LUTs + int8 prescaling, up front.
+        let force = bs.force_f32_lut;
+        par_chunks_mut(&mut bs.luts[..nq * slots], slots, |qi, lut_row| {
+            for (slot, model) in models.iter().enumerate() {
+                model.pq.build_query_lut(queries.row(qi), &mut lut_row[slot]);
+            }
+        });
+        for li in 0..nq * slots {
+            bs.use_f32[li] = force || !bs.luts[li].quantized;
+        }
+        // Models must agree on int8-ness (snapshot invariant).
+        let use_int8 = models[0].int8.is_some();
+        for (slot, model) in models.iter().enumerate() {
+            if let Some(q8) = &model.int8 {
+                for qi in 0..nq {
+                    let li = qi * slots + slot;
+                    let dst = &mut bs.q_scaled[li * dim..(li + 1) * dim];
+                    for ((d, &v), &s) in dst.iter_mut().zip(queries.row(qi)).zip(&q8.scales) {
+                        *d = v * s;
+                    }
+                }
+            }
+        }
+
+        // Phase 2: plan every scanned segment in scan order (delta first,
+        // then sealed newest → oldest), laying out one shared arena.
+        let delta = &*snap.delta;
+        let mut arena_total = 0usize;
+        if !delta.is_empty() {
+            let slot = snap.delta_model_slot();
+            bs.seg_meta.push(SegMeta {
+                slot,
+                sealed: usize::MAX,
+            });
+            bs.plan_segment(
+                nq,
+                slots,
+                slot,
+                params.top_t,
+                &delta.postings,
+                &delta.blocked,
+                delta.model.pq.code_bytes(),
+                &mut arena_total,
+            );
+        }
+        for (si, seg) in snap.sealed.iter().enumerate().rev() {
+            let idx = &*seg.index;
+            if idx.n == 0 {
+                continue;
+            }
+            let slot = snap.sealed_model_slot(si);
+            bs.seg_meta.push(SegMeta { slot, sealed: si });
+            bs.plan_segment(
+                nq,
+                slots,
+                slot,
+                params.top_t,
+                &idx.postings,
+                &idx.blocked,
+                idx.pq().code_bytes(),
+                &mut arena_total,
+            );
+        }
+        bs.arena.clear();
+        bs.arena.resize(arena_total, 0.0);
+
+        // Phase 3: per-segment grouped scans — every probed posting list
+        // streams once for all the queries probing it.
+        {
+            let BatchScratch {
+                groups,
+                seg_groups,
+                seg_meta,
+                luts,
+                tuple_lut,
+                tuple_cs,
+                arena,
+                ..
+            } = &mut *bs;
+            for (mi, meta) in seg_meta.iter().enumerate() {
+                let (glo, ghi) = seg_groups[mi];
+                if glo == ghi {
+                    continue;
+                }
+                let (postings, blocked, pq) = if meta.sealed == usize::MAX {
+                    (&delta.postings[..], &delta.blocked[..], &delta.model.pq)
+                } else {
+                    let idx = &*snap.sealed[meta.sealed].index;
+                    (&idx.postings[..], &idx.blocked[..], idx.pq())
+                };
+                scan_groups(
+                    &mut groups[glo..ghi],
+                    postings,
+                    blocked,
+                    pq,
+                    luts,
+                    tuple_lut,
+                    tuple_cs,
+                    arena,
+                );
+            }
+        }
+
+        // Phase 4: per-query replay in exact single-query order.
+        let bs_ref = &*bs;
+        let tombs = &*snap.tombstones;
+        let budget = params.rerank_budget.max(params.k).max(1);
+        // hot-path: no-alloc begin (replay reads the arena and pooled
+        // replay tables; per-worker scratches come from the lease pile)
+        par_chunks_mut(&mut out[..nq], 1, |qi, slot_out| {
+            let mut scratch = scratches
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .pop()
+                .unwrap_or_else(|| SearchScratch::for_snapshot(snap));
+            let (res, stats) = &mut slot_out[0];
+            *stats = SearchStats::default();
+            scratch.ensure_slots(slots);
+            scratch.slot_scanned.clear();
+            scratch.slot_scanned.resize(slots, false);
+            scratch.visited.ensure_capacity(snap.id_space());
+            scratch.visited.reset();
+            scratch.merged.reset(params.k.max(1));
+            for (mi, meta) in bs_ref.seg_meta.iter().enumerate() {
+                let slot = meta.slot;
+                scratch.slot_scanned[slot] = true;
+                stats.segments_scanned += 1;
+                let t_sel = bs_ref.t_sel[slot];
+                let t_eff = t_sel.min(params.top_t);
+                let parts_base = bs_ref.slot_off[slot] + qi * t_sel;
+                let qr0 = bs_ref.seg_qr_base[mi] + qi * t_eff;
+                scratch.approx.reset(budget);
+                if meta.sealed == usize::MAX {
+                    // Delta segment: posting ids are global; per-id
+                    // records live in slots.
+                    for r in 0..t_eff {
+                        let (p, _) = bs_ref.parts[parts_base + r];
+                        let list = &delta.postings[p as usize];
+                        stats.points_scanned += list.len();
+                        if list.is_empty() {
+                            continue;
+                        }
+                        stats.lists_scanned += 1;
+                        stats.code_bytes_streamed += bs_ref.qr_bytes[qr0 + r];
+                        let a0 = bs_ref.qr_arena[qr0 + r];
+                        let scores = &bs_ref.arena[a0..a0 + list.len()];
+                        let mut thresh = scratch.approx.threshold();
+                        for (i, &gid) in list.ids.iter().enumerate() {
+                            if !scratch.visited.insert(gid) {
+                                stats.duplicates_skipped += 1;
+                                continue;
+                            }
+                            let score = scores[i];
+                            if score > thresh {
+                                scratch.approx.push(delta.slot_of[&gid] as u32, score);
+                                thresh = scratch.approx.threshold();
+                            }
+                        }
+                    }
+                    if use_int8 {
+                        let li = qi * slots + slot;
+                        let q_scaled = &bs_ref.q_scaled[li * dim..(li + 1) * dim];
+                        for &cand in scratch.approx.sorted() {
+                            stats.candidates_reranked += 1;
+                            let score = dot_i8(q_scaled, delta.int8_record(cand.id as usize));
+                            scratch.merged.push(delta.slot_ids[cand.id as usize], score);
+                        }
+                    } else {
+                        for &cand in scratch.approx.sorted().iter().take(params.k) {
+                            scratch.merged.push(delta.slot_ids[cand.id as usize], cand.score);
+                        }
+                    }
+                } else {
+                    // Sealed segment: posting ids are local.
+                    let seg = &snap.sealed[meta.sealed];
+                    let idx = &*seg.index;
+                    let filtered =
+                        !tombs.is_empty() || !seg.shadow.is_empty() || !delta.is_empty();
+                    for r in 0..t_eff {
+                        let (p, _) = bs_ref.parts[parts_base + r];
+                        let list = &idx.postings[p as usize];
+                        stats.points_scanned += list.len();
+                        if list.is_empty() {
+                            continue;
+                        }
+                        stats.lists_scanned += 1;
+                        stats.code_bytes_streamed += bs_ref.qr_bytes[qr0 + r];
+                        let a0 = bs_ref.qr_arena[qr0 + r];
+                        let scores = &bs_ref.arena[a0..a0 + list.len()];
+                        let mut thresh = scratch.approx.threshold();
+                        for (i, &local) in list.ids.iter().enumerate() {
+                            let gid = seg.global_ids[local as usize];
+                            if !scratch.visited.insert(gid) {
+                                stats.duplicates_skipped += 1;
+                                continue;
+                            }
+                            // One bit test per set (local shadow + global
+                            // dead) instead of three hash probes.
+                            if filtered
+                                && (seg.shadow_bits.get(local as usize)
+                                    || snap.dead.get(gid as usize))
+                            {
+                                stats.tombstones_skipped += 1;
+                                continue;
+                            }
+                            let score = scores[i];
+                            if score > thresh {
+                                scratch.approx.push(local, score);
+                                thresh = scratch.approx.threshold();
+                            }
+                        }
+                    }
+                    if use_int8 {
+                        let li = qi * slots + slot;
+                        let q_scaled = &bs_ref.q_scaled[li * dim..(li + 1) * dim];
+                        for &cand in scratch.approx.sorted() {
+                            stats.candidates_reranked += 1;
+                            let score = dot_i8(q_scaled, idx.int8_record(cand.id));
+                            scratch.merged.push(seg.global_ids[cand.id as usize], score);
+                        }
+                    } else {
+                        for &cand in scratch.approx.sorted().iter().take(params.k) {
+                            scratch.merged.push(seg.global_ids[cand.id as usize], cand.score);
+                        }
+                    }
+                }
+            }
+            for (slot, scanned) in scratch.slot_scanned.iter().enumerate() {
+                if *scanned {
+                    stats.partitions_probed += bs_ref.t_sel[slot].min(params.top_t);
+                }
+            }
+            res.clear();
+            scratch.merged.sort_into(res);
+            scratches
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(scratch);
+        });
+        // hot-path: no-alloc end
+        Ok(())
     }
 
     /// Stages 2+3 across all segments, given selected partitions per
@@ -642,6 +1657,12 @@ impl<'a> SnapshotSearcher<'a> {
                 if list.is_empty() {
                     continue;
                 }
+                stats.lists_scanned += 1;
+                stats.code_bytes_streamed += if scratch.use_f32[slot] {
+                    list.len() * delta.model.pq.code_bytes()
+                } else {
+                    delta.blocked[p as usize].memory_bytes()
+                };
                 score_list(
                     &delta.model.pq,
                     list,
@@ -697,6 +1718,12 @@ impl<'a> SnapshotSearcher<'a> {
                 if list.is_empty() {
                     continue;
                 }
+                stats.lists_scanned += 1;
+                stats.code_bytes_streamed += if scratch.use_f32[slot] {
+                    list.len() * idx.pq().code_bytes()
+                } else {
+                    idx.blocked[p as usize].memory_bytes()
+                };
                 score_list(
                     idx.pq(),
                     list,
@@ -773,12 +1800,13 @@ impl Search for SnapshotSearcher<'_> {
         SnapshotSearcher::search_into(self, q, params, scratch, out)
     }
 
-    fn search_batch(
+    fn search_batch_into(
         &self,
         queries: &MatrixF32,
         params: &SearchParams,
-    ) -> Result<Vec<(Vec<Scored>, SearchStats)>> {
-        SnapshotSearcher::search_batch(self, queries, params)
+        pool: &mut BatchPool,
+    ) -> Result<()> {
+        SnapshotSearcher::search_batch_into(self, queries, params, pool)
     }
 }
 
@@ -892,6 +1920,19 @@ mod tests {
             let ids: std::collections::HashSet<_> = res.iter().map(|s| s.id).collect();
             assert_eq!(ids.len(), res.len(), "duplicate ids in results");
         }
+    }
+
+    /// Grouped and per-query batch modes must agree on every counter
+    /// except `code_bytes_streamed` (grouped amortizes streaming across
+    /// the scan group, so only the byte charge differs).
+    fn assert_stats_match_except_bytes(a: &SearchStats, b: &SearchStats, qi: usize) {
+        assert_eq!(a.partitions_probed, b.partitions_probed, "query {qi}");
+        assert_eq!(a.points_scanned, b.points_scanned, "query {qi}");
+        assert_eq!(a.duplicates_skipped, b.duplicates_skipped, "query {qi}");
+        assert_eq!(a.candidates_reranked, b.candidates_reranked, "query {qi}");
+        assert_eq!(a.tombstones_skipped, b.tombstones_skipped, "query {qi}");
+        assert_eq!(a.segments_scanned, b.segments_scanned, "query {qi}");
+        assert_eq!(a.lists_scanned, b.lists_scanned, "query {qi}");
     }
 
     #[test]
@@ -1099,6 +2140,102 @@ mod tests {
         for qi in 0..ds.num_queries() {
             let (single, _) = searcher.search(ds.queries.row(qi), &params, &mut sc);
             assert_eq!(single, batch[qi].0, "query {qi}");
+        }
+        // ... and with the pre-grouping per-query batch mode, down to
+        // every counter the scan order determines.
+        let per_query = searcher.search_batch_per_query(&ds.queries, &params).unwrap();
+        for (qi, ((a, st_a), (b, st_b))) in batch.iter().zip(&per_query).enumerate() {
+            assert_eq!(a, b, "query {qi}");
+            assert_stats_match_except_bytes(st_a, st_b, qi);
+        }
+    }
+
+    #[test]
+    fn grouped_batch_matches_per_query_mode_bitwise() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 1500);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 5,
+            top_t: 6,
+            rerank_budget: 100,
+        };
+        let per_query = searcher
+            .search_batch_per_query(&ds.queries, &params)
+            .unwrap();
+        let mut pool = BatchPool::new();
+        searcher
+            .search_batch_into(&ds.queries, &params, &mut pool)
+            .unwrap();
+        let grouped = pool.results();
+        assert_eq!(grouped.len(), per_query.len());
+        let mut grouped_bytes = 0usize;
+        let mut per_query_bytes = 0usize;
+        for (qi, ((a, st_a), (b, st_b))) in grouped.iter().zip(&per_query).enumerate() {
+            // Scored compares score bits via f32 equality: this is the
+            // bit-identity contract, not an approximate match.
+            assert_eq!(a, b, "query {qi}");
+            assert_stats_match_except_bytes(st_a, st_b, qi);
+            grouped_bytes += st_a.code_bytes_streamed;
+            per_query_bytes += st_b.code_bytes_streamed;
+        }
+        // Each scan group streams its posting list once for the whole
+        // group, so the batch-aggregate byte count can only shrink.
+        assert!(grouped_bytes > 0);
+        assert!(
+            grouped_bytes <= per_query_bytes,
+            "grouped {grouped_bytes} > per-query {per_query_bytes}"
+        );
+    }
+
+    #[test]
+    fn grouped_batch_respects_force_f32_lut() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 800);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 8,
+            top_t: 5,
+            rerank_budget: 60,
+        };
+        let mut pool = BatchPool::new();
+        pool.force_f32_lut = true;
+        searcher
+            .search_batch_into(&ds.queries, &params, &mut pool)
+            .unwrap();
+        let mut scratch = SearchScratch::new(&idx);
+        scratch.force_f32_lut = true;
+        for qi in 0..ds.num_queries() {
+            let (single, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+            assert_eq!(single, pool.results()[qi].0, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn batch_pool_reuses_across_batch_shapes() {
+        let (ds, idx) = build(SpillMode::Soar { lambda: 1.0 }, 900);
+        let engine = Engine::cpu();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: 4,
+            top_t: 5,
+            rerank_budget: 50,
+        };
+        let mut pool = BatchPool::new();
+        let mut scratch = SearchScratch::new(&idx);
+        // Shrinking, single-query, and re-growing batches all reuse the
+        // same pool; `results()` always reflects the latest batch only.
+        for nq in [ds.num_queries(), 3, 1, ds.num_queries()] {
+            let mut sub = MatrixF32::zeros(nq, idx.dim);
+            for i in 0..nq {
+                sub.row_mut(i).copy_from_slice(ds.queries.row(i));
+            }
+            searcher.search_batch_into(&sub, &params, &mut pool).unwrap();
+            assert_eq!(pool.results().len(), nq);
+            for qi in 0..nq {
+                let (single, _) = searcher.search(sub.row(qi), &params, &mut scratch);
+                assert_eq!(single, pool.results()[qi].0, "nq {nq} query {qi}");
+            }
         }
     }
 }

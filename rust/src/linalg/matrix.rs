@@ -137,6 +137,66 @@ impl MatrixF32 {
     pub fn memory_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+
+    /// Reshape in place to `rows × cols`, zero-filled, reusing the backing
+    /// buffer's capacity. Steady-state reuse at a fixed (or shrinking)
+    /// shape never touches the allocator — this is what lets a pooled
+    /// score matrix run allocation-free across batches.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+}
+
+/// Tile of A rows held against one tile of B rows at a time.
+const GEMM_TILE_A: usize = 8;
+/// Tile of B rows kept hot in L1 while the A tile sweeps over it
+/// (32 rows × 128 dims × 4 B = 16 KiB worst case for our shapes).
+const GEMM_TILE_B: usize = 32;
+
+/// Blocked `A·Bᵀ` into `out` (resized to `a.rows() × b.rows()`).
+///
+/// Cache tiling only: every output element is still produced by the exact
+/// same [`dot`](super::dot) reduction as the naive two-loop form, so the
+/// result is bit-identical to `out[i][j] = dot(a.row(i), b.row(j))` — the
+/// blocking merely keeps a tile of B rows resident in L1 while a tile of
+/// A rows reuses them instead of streaming all of B once per A row.
+pub fn matmul_nt(a: &MatrixF32, b: &MatrixF32, out: &mut MatrixF32) {
+    assert_eq!(a.cols(), b.cols(), "dim mismatch");
+    out.resize(a.rows(), b.rows());
+    matmul_nt_rows(a, 0, a.rows(), b, out.as_mut_slice());
+}
+
+/// Serial blocked kernel over the A-row range `[i0, i1)`; `out_rows` is the
+/// row-major `(i1 - i0) × b.rows()` destination. Split out so callers can
+/// parallelize over disjoint row ranges of a shared output buffer.
+pub(crate) fn matmul_nt_rows(
+    a: &MatrixF32,
+    i0: usize,
+    i1: usize,
+    b: &MatrixF32,
+    out_rows: &mut [f32],
+) {
+    let nb = b.rows();
+    debug_assert_eq!(out_rows.len(), (i1 - i0) * nb);
+    // hot-path: no-alloc begin (GEMM tile loops; the output was sized by
+    // the caller, nothing below may touch the allocator)
+    for ib in (i0..i1).step_by(GEMM_TILE_A) {
+        let ie = (ib + GEMM_TILE_A).min(i1);
+        for jb in (0..nb).step_by(GEMM_TILE_B) {
+            let je = (jb + GEMM_TILE_B).min(nb);
+            for i in ib..ie {
+                let ai = a.row(i);
+                let row = &mut out_rows[(i - i0) * nb..(i - i0 + 1) * nb];
+                for j in jb..je {
+                    row[j] = super::dot(ai, b.row(j));
+                }
+            }
+        }
+    }
+    // hot-path: no-alloc end
 }
 
 #[cfg(test)]
@@ -187,5 +247,59 @@ mod tests {
         let m = MatrixF32::zeros(4, 2);
         assert_eq!(m.iter_rows().count(), 4);
         assert_eq!(m.memory_bytes(), 4 * 2 * 4);
+    }
+
+    #[test]
+    fn resize_reuses_capacity_and_zeroes() {
+        let mut m = MatrixF32::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        m.resize(3, 2);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.as_slice(), &[0.0; 6]);
+        let cap_ptr = m.as_slice().as_ptr();
+        m.resize(2, 3); // same element count: buffer must not move
+        assert_eq!(m.as_slice().as_ptr(), cap_ptr);
+        m.resize(1, 2); // shrink: buffer must not move either
+        assert_eq!(m.as_slice().as_ptr(), cap_ptr);
+    }
+
+    #[test]
+    fn matmul_nt_is_bitwise_naive() {
+        let mut rng = crate::linalg::Rng::new(17);
+        // Shapes straddling both tile sizes, plus ragged remainders.
+        for &(na, nb, d) in &[(1usize, 1usize, 3usize), (7, 33, 12), (9, 64, 5), (20, 100, 17)] {
+            let mut a = MatrixF32::zeros(na, d);
+            let mut b = MatrixF32::zeros(nb, d);
+            for i in 0..na {
+                rng.fill_gaussian(a.row_mut(i));
+            }
+            for j in 0..nb {
+                rng.fill_gaussian(b.row_mut(j));
+            }
+            let mut out = MatrixF32::zeros(0, 0);
+            matmul_nt(&a, &b, &mut out);
+            assert_eq!(out.rows(), na);
+            assert_eq!(out.cols(), nb);
+            for i in 0..na {
+                for j in 0..nb {
+                    assert_eq!(
+                        out.row(i)[j].to_bits(),
+                        crate::linalg::dot(a.row(i), b.row(j)).to_bits(),
+                        "({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_empty_shapes() {
+        let a = MatrixF32::zeros(0, 4);
+        let b = MatrixF32::zeros(5, 4);
+        let mut out = MatrixF32::zeros(3, 3);
+        matmul_nt(&a, &b, &mut out);
+        assert_eq!(out.rows(), 0);
+        matmul_nt(&b, &a, &mut out);
+        assert_eq!(out.rows(), 5);
+        assert_eq!(out.cols(), 0);
     }
 }

@@ -8,7 +8,7 @@ pub mod matrix;
 pub mod rng;
 pub mod topk;
 
-pub use matrix::MatrixF32;
+pub use matrix::{matmul_nt, MatrixF32};
 pub use rng::Rng;
 pub use topk::TopK;
 

@@ -123,6 +123,16 @@ impl TopK {
         self.heap.clear();
     }
 
+    /// Like [`TopK::sort_into`], but appends `(id, score)` pairs — the
+    /// element type of the batched executor's flat partition table.
+    pub fn sort_into_pairs(&mut self, out: &mut Vec<(u32, f32)>) {
+        Self::sort_desc(&mut self.heap);
+        for s in &self.heap {
+            out.push((s.id, s.score));
+        }
+        self.heap.clear();
+    }
+
     /// Drain into a `Vec` sorted by descending score (ties by ascending id
     /// for determinism).
     pub fn into_sorted(mut self) -> Vec<Scored> {
@@ -218,6 +228,27 @@ mod tests {
         tk.sort_into(&mut out);
         assert_eq!(out.len(), 2);
         assert!(tk.is_empty());
+    }
+
+    #[test]
+    fn sort_into_pairs_matches_sort_into() {
+        let mut rng = Rng::new(11);
+        let scores: Vec<(u32, f32)> = (0..40).map(|i| (i as u32, rng.next_gaussian())).collect();
+        let mut a = TopK::new(7);
+        let mut b = TopK::new(7);
+        for &(id, s) in &scores {
+            a.push(id, s);
+            b.push(id, s);
+        }
+        let mut want = Vec::new();
+        a.sort_into(&mut want);
+        let mut got = vec![(999u32, 0.0f32)]; // appends after existing content
+        b.sort_into_pairs(&mut got);
+        assert!(b.is_empty());
+        assert_eq!(got.len(), want.len() + 1);
+        for (i, s) in want.iter().enumerate() {
+            assert_eq!(got[i + 1], (s.id, s.score));
+        }
     }
 
     #[test]

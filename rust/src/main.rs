@@ -307,6 +307,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.p99_us,
         snap.mean_batch
     );
+    println!(
+        "scan work: {} lists, {:.1} KiB streamed per query (grouped batches amortize)",
+        snap.lists_scanned,
+        snap.code_bytes_streamed as f64 / snap.queries.max(1) as f64 / 1024.0
+    );
     server.shutdown();
     Ok(())
 }
@@ -475,12 +480,15 @@ fn cmd_churn(args: &Args) -> Result<()> {
         ops as f64 / churn_secs
     );
     println!(
-        "served {} queries in {elapsed_load:.2}s: {:.0} QPS | p50 {}µs p99 {}µs | mean batch {:.1}",
+        "served {} queries in {elapsed_load:.2}s: {:.0} QPS | p50 {}µs p99 {}µs | mean batch {:.1} \
+         | {} lists scanned, {:.1} KiB streamed/query",
         snap_metrics.queries,
         snap_metrics.queries as f64 / elapsed_load,
         snap_metrics.p50_us,
         snap_metrics.p99_us,
-        snap_metrics.mean_batch
+        snap_metrics.mean_batch,
+        snap_metrics.lists_scanned,
+        snap_metrics.code_bytes_streamed as f64 / snap_metrics.queries.max(1) as f64 / 1024.0
     );
     for (s, sh) in stats.shards.iter().enumerate() {
         println!(

@@ -273,6 +273,36 @@ fn accumulate_block_portable(planes: &[u8], lut: &[u8], m: usize, acc: &mut [u16
     }
 }
 
+/// Two-query scalar-blocked accumulation: each nibble is looked up in both
+/// queries' tables while the plane byte is hot. The sums are the same
+/// exact u16 sums as two [`accumulate_block_portable`] calls, so the
+/// fusion cannot change a single bit of either query's result.
+fn accumulate_block2_portable(
+    planes: &[u8],
+    lut_a: &[u8],
+    lut_b: &[u8],
+    m: usize,
+    acc_a: &mut [u16; BLOCK],
+    acc_b: &mut [u16; BLOCK],
+) {
+    acc_a.fill(0);
+    acc_b.fill(0);
+    for sub in 0..m {
+        let plane = &planes[sub * PLANE..(sub + 1) * PLANE];
+        let ta = &lut_a[sub * PLANE..(sub + 1) * PLANE];
+        let tb = &lut_b[sub * PLANE..(sub + 1) * PLANE];
+        for j in 0..PLANE {
+            let b = plane[j];
+            let lo = (b & 0x0f) as usize;
+            let hi = (b >> 4) as usize;
+            acc_a[j] += ta[lo] as u16;
+            acc_a[j + PLANE] += ta[hi] as u16;
+            acc_b[j] += tb[lo] as u16;
+            acc_b[j + PLANE] += tb[hi] as u16;
+        }
+    }
+}
+
 /// # Safety
 /// Requires SSSE3; `planes` and `lut` must hold at least `m * 16` bytes.
 #[cfg(target_arch = "x86_64")]
@@ -302,6 +332,65 @@ unsafe fn accumulate_block_ssse3(planes: &[u8], lut: &[u8], m: usize, acc: &mut 
     _mm_storeu_si128(out.add(1), a1);
     _mm_storeu_si128(out.add(2), a2);
     _mm_storeu_si128(out.add(3), a3);
+}
+
+/// Two-query SSSE3 accumulation: one plane load feeds `pshufb` lookups
+/// into both queries' table registers. Each query's four accumulators see
+/// exactly the sums [`accumulate_block_ssse3`] would produce.
+///
+/// # Safety
+/// Requires SSSE3; `planes`, `lut_a`, and `lut_b` must hold at least
+/// `m * 16` bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "ssse3")]
+unsafe fn accumulate_block2_ssse3(
+    planes: &[u8],
+    lut_a: &[u8],
+    lut_b: &[u8],
+    m: usize,
+    acc_a: &mut [u16; BLOCK],
+    acc_b: &mut [u16; BLOCK],
+) {
+    use core::arch::x86_64::*;
+    let zero = _mm_setzero_si128();
+    let low_mask = _mm_set1_epi8(0x0f);
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    let mut b0 = zero;
+    let mut b1 = zero;
+    let mut b2 = zero;
+    let mut b3 = zero;
+    for sub in 0..m {
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, low_mask);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), low_mask);
+        let ta = _mm_loadu_si128(lut_a.as_ptr().add(sub * PLANE) as *const __m128i);
+        let tb = _mm_loadu_si128(lut_b.as_ptr().add(sub * PLANE) as *const __m128i);
+        let alo = _mm_shuffle_epi8(ta, lo);
+        let ahi = _mm_shuffle_epi8(ta, hi);
+        let blo = _mm_shuffle_epi8(tb, lo);
+        let bhi = _mm_shuffle_epi8(tb, hi);
+        a0 = _mm_add_epi16(a0, _mm_unpacklo_epi8(alo, zero));
+        a1 = _mm_add_epi16(a1, _mm_unpackhi_epi8(alo, zero));
+        a2 = _mm_add_epi16(a2, _mm_unpacklo_epi8(ahi, zero));
+        a3 = _mm_add_epi16(a3, _mm_unpackhi_epi8(ahi, zero));
+        b0 = _mm_add_epi16(b0, _mm_unpacklo_epi8(blo, zero));
+        b1 = _mm_add_epi16(b1, _mm_unpackhi_epi8(blo, zero));
+        b2 = _mm_add_epi16(b2, _mm_unpacklo_epi8(bhi, zero));
+        b3 = _mm_add_epi16(b3, _mm_unpackhi_epi8(bhi, zero));
+    }
+    let out_a = acc_a.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_a, a0);
+    _mm_storeu_si128(out_a.add(1), a1);
+    _mm_storeu_si128(out_a.add(2), a2);
+    _mm_storeu_si128(out_a.add(3), a3);
+    let out_b = acc_b.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_b, b0);
+    _mm_storeu_si128(out_b.add(1), b1);
+    _mm_storeu_si128(out_b.add(2), b2);
+    _mm_storeu_si128(out_b.add(3), b3);
 }
 
 /// # Safety
@@ -354,6 +443,97 @@ unsafe fn accumulate_block_avx2(planes: &[u8], lut: &[u8], m: usize, acc: &mut [
     _mm_storeu_si128(out.add(1), s1);
     _mm_storeu_si128(out.add(2), s2);
     _mm_storeu_si128(out.add(3), s3);
+}
+
+/// Two-query AVX2 accumulation: the shared plane/nibble extraction of
+/// [`accumulate_block_avx2`] feeds `pshufb` lookups into both queries'
+/// table registers (two subspaces per iteration, lanes folded after the
+/// loop, 128-bit remainder for odd `m`). Exact u16 sums — bit-identical
+/// per query to the single-query kernel.
+///
+/// # Safety
+/// Requires AVX2; `planes`, `lut_a`, and `lut_b` must hold at least
+/// `m * 16` bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accumulate_block2_avx2(
+    planes: &[u8],
+    lut_a: &[u8],
+    lut_b: &[u8],
+    m: usize,
+    acc_a: &mut [u16; BLOCK],
+    acc_b: &mut [u16; BLOCK],
+) {
+    use core::arch::x86_64::*;
+    let zero = _mm256_setzero_si256();
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    let mut b0 = zero;
+    let mut b1 = zero;
+    let mut b2 = zero;
+    let mut b3 = zero;
+    for p in 0..m / 2 {
+        let plane = _mm256_loadu_si256(planes.as_ptr().add(p * 2 * PLANE) as *const __m256i);
+        let lo = _mm256_and_si256(plane, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(plane, 4), low_mask);
+        let ta = _mm256_loadu_si256(lut_a.as_ptr().add(p * 2 * PLANE) as *const __m256i);
+        let tb = _mm256_loadu_si256(lut_b.as_ptr().add(p * 2 * PLANE) as *const __m256i);
+        let alo = _mm256_shuffle_epi8(ta, lo);
+        let ahi = _mm256_shuffle_epi8(ta, hi);
+        let blo = _mm256_shuffle_epi8(tb, lo);
+        let bhi = _mm256_shuffle_epi8(tb, hi);
+        a0 = _mm256_add_epi16(a0, _mm256_unpacklo_epi8(alo, zero));
+        a1 = _mm256_add_epi16(a1, _mm256_unpackhi_epi8(alo, zero));
+        a2 = _mm256_add_epi16(a2, _mm256_unpacklo_epi8(ahi, zero));
+        a3 = _mm256_add_epi16(a3, _mm256_unpackhi_epi8(ahi, zero));
+        b0 = _mm256_add_epi16(b0, _mm256_unpacklo_epi8(blo, zero));
+        b1 = _mm256_add_epi16(b1, _mm256_unpackhi_epi8(blo, zero));
+        b2 = _mm256_add_epi16(b2, _mm256_unpacklo_epi8(bhi, zero));
+        b3 = _mm256_add_epi16(b3, _mm256_unpackhi_epi8(bhi, zero));
+    }
+    let mut sa0 = _mm_add_epi16(_mm256_castsi256_si128(a0), _mm256_extracti128_si256(a0, 1));
+    let mut sa1 = _mm_add_epi16(_mm256_castsi256_si128(a1), _mm256_extracti128_si256(a1, 1));
+    let mut sa2 = _mm_add_epi16(_mm256_castsi256_si128(a2), _mm256_extracti128_si256(a2, 1));
+    let mut sa3 = _mm_add_epi16(_mm256_castsi256_si128(a3), _mm256_extracti128_si256(a3, 1));
+    let mut sb0 = _mm_add_epi16(_mm256_castsi256_si128(b0), _mm256_extracti128_si256(b0, 1));
+    let mut sb1 = _mm_add_epi16(_mm256_castsi256_si128(b1), _mm256_extracti128_si256(b1, 1));
+    let mut sb2 = _mm_add_epi16(_mm256_castsi256_si128(b2), _mm256_extracti128_si256(b2, 1));
+    let mut sb3 = _mm_add_epi16(_mm256_castsi256_si128(b3), _mm256_extracti128_si256(b3, 1));
+    if m % 2 == 1 {
+        let sub = m - 1;
+        let zero128 = _mm_setzero_si128();
+        let mask128 = _mm_set1_epi8(0x0f);
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, mask128);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), mask128);
+        let ta = _mm_loadu_si128(lut_a.as_ptr().add(sub * PLANE) as *const __m128i);
+        let tb = _mm_loadu_si128(lut_b.as_ptr().add(sub * PLANE) as *const __m128i);
+        let alo = _mm_shuffle_epi8(ta, lo);
+        let ahi = _mm_shuffle_epi8(ta, hi);
+        let blo = _mm_shuffle_epi8(tb, lo);
+        let bhi = _mm_shuffle_epi8(tb, hi);
+        sa0 = _mm_add_epi16(sa0, _mm_unpacklo_epi8(alo, zero128));
+        sa1 = _mm_add_epi16(sa1, _mm_unpackhi_epi8(alo, zero128));
+        sa2 = _mm_add_epi16(sa2, _mm_unpacklo_epi8(ahi, zero128));
+        sa3 = _mm_add_epi16(sa3, _mm_unpackhi_epi8(ahi, zero128));
+        sb0 = _mm_add_epi16(sb0, _mm_unpacklo_epi8(blo, zero128));
+        sb1 = _mm_add_epi16(sb1, _mm_unpackhi_epi8(blo, zero128));
+        sb2 = _mm_add_epi16(sb2, _mm_unpacklo_epi8(bhi, zero128));
+        sb3 = _mm_add_epi16(sb3, _mm_unpackhi_epi8(bhi, zero128));
+    }
+    let out_a = acc_a.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_a, sa0);
+    _mm_storeu_si128(out_a.add(1), sa1);
+    _mm_storeu_si128(out_a.add(2), sa2);
+    _mm_storeu_si128(out_a.add(3), sa3);
+    let out_b = acc_b.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_b, sb0);
+    _mm_storeu_si128(out_b.add(1), sb1);
+    _mm_storeu_si128(out_b.add(2), sb2);
+    _mm_storeu_si128(out_b.add(3), sb3);
 }
 
 /// # Safety
@@ -465,6 +645,184 @@ unsafe fn accumulate_block_avx512(planes: &[u8], lut: &[u8], m: usize, acc: &mut
     _mm_storeu_si128(out.add(3), s3);
 }
 
+/// Two-query AVX-512 accumulation: the shared `vpermb` index vectors of
+/// [`accumulate_block_avx512`] (four subspaces per iteration, group-offset
+/// trick) gather from both queries' 64-byte table registers. Same lane
+/// folds, same SSE remainder — exact u16 sums, bit-identical per query to
+/// the single-query kernel.
+///
+/// # Safety
+/// Requires AVX-512 F+BW+VBMI; `planes`, `lut_a`, and `lut_b` must hold
+/// at least `m * 16` bytes.
+#[cfg(soar_avx512)]
+#[target_feature(enable = "avx512f,avx512bw,avx512vbmi,ssse3")]
+unsafe fn accumulate_block2_avx512(
+    planes: &[u8],
+    lut_a: &[u8],
+    lut_b: &[u8],
+    m: usize,
+    acc_a: &mut [u16; BLOCK],
+    acc_b: &mut [u16; BLOCK],
+) {
+    use core::arch::x86_64::*;
+    let zero = _mm512_setzero_si512();
+    let low_mask = _mm512_set1_epi8(0x0f);
+    let group_offsets = _mm512_set_epi64(
+        0x3030303030303030u64 as i64,
+        0x3030303030303030u64 as i64,
+        0x2020202020202020u64 as i64,
+        0x2020202020202020u64 as i64,
+        0x1010101010101010u64 as i64,
+        0x1010101010101010u64 as i64,
+        0,
+        0,
+    );
+    let mut a0 = zero;
+    let mut a1 = zero;
+    let mut a2 = zero;
+    let mut a3 = zero;
+    let mut b0 = zero;
+    let mut b1 = zero;
+    let mut b2 = zero;
+    let mut b3 = zero;
+    for p in 0..m / 4 {
+        let plane = _mm512_loadu_si512(planes.as_ptr().add(p * 4 * PLANE) as *const _);
+        let lo = _mm512_or_si512(_mm512_and_si512(plane, low_mask), group_offsets);
+        let hi = _mm512_or_si512(
+            _mm512_and_si512(_mm512_srli_epi16::<4>(plane), low_mask),
+            group_offsets,
+        );
+        let ta = _mm512_loadu_si512(lut_a.as_ptr().add(p * 4 * PLANE) as *const _);
+        let tb = _mm512_loadu_si512(lut_b.as_ptr().add(p * 4 * PLANE) as *const _);
+        let alo = _mm512_permutexvar_epi8(lo, ta);
+        let ahi = _mm512_permutexvar_epi8(hi, ta);
+        let blo = _mm512_permutexvar_epi8(lo, tb);
+        let bhi = _mm512_permutexvar_epi8(hi, tb);
+        a0 = _mm512_add_epi16(a0, _mm512_unpacklo_epi8(alo, zero));
+        a1 = _mm512_add_epi16(a1, _mm512_unpackhi_epi8(alo, zero));
+        a2 = _mm512_add_epi16(a2, _mm512_unpacklo_epi8(ahi, zero));
+        a3 = _mm512_add_epi16(a3, _mm512_unpackhi_epi8(ahi, zero));
+        b0 = _mm512_add_epi16(b0, _mm512_unpacklo_epi8(blo, zero));
+        b1 = _mm512_add_epi16(b1, _mm512_unpackhi_epi8(blo, zero));
+        b2 = _mm512_add_epi16(b2, _mm512_unpacklo_epi8(bhi, zero));
+        b3 = _mm512_add_epi16(b3, _mm512_unpackhi_epi8(bhi, zero));
+    }
+    // Fold the four 128-bit lanes of each accumulator (exact u16 sums, so
+    // fold order cannot change the result).
+    let mut sa0 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a0),
+            _mm512_extracti32x4_epi32::<1>(a0),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a0),
+            _mm512_extracti32x4_epi32::<3>(a0),
+        ),
+    );
+    let mut sa1 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a1),
+            _mm512_extracti32x4_epi32::<1>(a1),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a1),
+            _mm512_extracti32x4_epi32::<3>(a1),
+        ),
+    );
+    let mut sa2 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a2),
+            _mm512_extracti32x4_epi32::<1>(a2),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a2),
+            _mm512_extracti32x4_epi32::<3>(a2),
+        ),
+    );
+    let mut sa3 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(a3),
+            _mm512_extracti32x4_epi32::<1>(a3),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(a3),
+            _mm512_extracti32x4_epi32::<3>(a3),
+        ),
+    );
+    let mut sb0 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(b0),
+            _mm512_extracti32x4_epi32::<1>(b0),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(b0),
+            _mm512_extracti32x4_epi32::<3>(b0),
+        ),
+    );
+    let mut sb1 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(b1),
+            _mm512_extracti32x4_epi32::<1>(b1),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(b1),
+            _mm512_extracti32x4_epi32::<3>(b1),
+        ),
+    );
+    let mut sb2 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(b2),
+            _mm512_extracti32x4_epi32::<1>(b2),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(b2),
+            _mm512_extracti32x4_epi32::<3>(b2),
+        ),
+    );
+    let mut sb3 = _mm_add_epi16(
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<0>(b3),
+            _mm512_extracti32x4_epi32::<1>(b3),
+        ),
+        _mm_add_epi16(
+            _mm512_extracti32x4_epi32::<2>(b3),
+            _mm512_extracti32x4_epi32::<3>(b3),
+        ),
+    );
+    // SSE remainder for the last m % 4 subspaces, both tables per plane.
+    let zero128 = _mm_setzero_si128();
+    let mask128 = _mm_set1_epi8(0x0f);
+    for sub in (m - m % 4)..m {
+        let plane = _mm_loadu_si128(planes.as_ptr().add(sub * PLANE) as *const __m128i);
+        let lo = _mm_and_si128(plane, mask128);
+        let hi = _mm_and_si128(_mm_srli_epi16(plane, 4), mask128);
+        let ta = _mm_loadu_si128(lut_a.as_ptr().add(sub * PLANE) as *const __m128i);
+        let tb = _mm_loadu_si128(lut_b.as_ptr().add(sub * PLANE) as *const __m128i);
+        let alo = _mm_shuffle_epi8(ta, lo);
+        let ahi = _mm_shuffle_epi8(ta, hi);
+        let blo = _mm_shuffle_epi8(tb, lo);
+        let bhi = _mm_shuffle_epi8(tb, hi);
+        sa0 = _mm_add_epi16(sa0, _mm_unpacklo_epi8(alo, zero128));
+        sa1 = _mm_add_epi16(sa1, _mm_unpackhi_epi8(alo, zero128));
+        sa2 = _mm_add_epi16(sa2, _mm_unpacklo_epi8(ahi, zero128));
+        sa3 = _mm_add_epi16(sa3, _mm_unpackhi_epi8(ahi, zero128));
+        sb0 = _mm_add_epi16(sb0, _mm_unpacklo_epi8(blo, zero128));
+        sb1 = _mm_add_epi16(sb1, _mm_unpackhi_epi8(blo, zero128));
+        sb2 = _mm_add_epi16(sb2, _mm_unpacklo_epi8(bhi, zero128));
+        sb3 = _mm_add_epi16(sb3, _mm_unpackhi_epi8(bhi, zero128));
+    }
+    let out_a = acc_a.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_a, sa0);
+    _mm_storeu_si128(out_a.add(1), sa1);
+    _mm_storeu_si128(out_a.add(2), sa2);
+    _mm_storeu_si128(out_a.add(3), sa3);
+    let out_b = acc_b.as_mut_ptr() as *mut __m128i;
+    _mm_storeu_si128(out_b, sb0);
+    _mm_storeu_si128(out_b.add(1), sb1);
+    _mm_storeu_si128(out_b.add(2), sb2);
+    _mm_storeu_si128(out_b.add(3), sb3);
+}
+
 #[inline]
 fn accumulate_block(
     kind: KernelKind,
@@ -490,6 +848,46 @@ fn accumulate_block(
         KernelKind::Avx512 => unsafe { accumulate_block_avx512(planes, lut, m, acc) },
         #[cfg(not(target_arch = "x86_64"))]
         _ => accumulate_block_portable(planes, lut, m, acc),
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accumulate_block2(
+    kind: KernelKind,
+    planes: &[u8],
+    lut_a: &[u8],
+    lut_b: &[u8],
+    m: usize,
+    acc_a: &mut [u16; BLOCK],
+    acc_b: &mut [u16; BLOCK],
+) {
+    debug_assert!(
+        planes.len() >= m * PLANE && lut_a.len() >= m * PLANE && lut_b.len() >= m * PLANE
+    );
+    match kind {
+        KernelKind::Portable => accumulate_block2_portable(planes, lut_a, lut_b, m, acc_a, acc_b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: score_all_group_with asserts `kind.supported()` (runtime
+        // feature detection) and every LUT's slice bounds before
+        // dispatching here.
+        KernelKind::Ssse3 => unsafe {
+            accumulate_block2_ssse3(planes, lut_a, lut_b, m, acc_a, acc_b)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — AVX2 support and slice bounds are asserted by
+        // score_all_group_with before any dispatch reaches this arm.
+        KernelKind::Avx2 => unsafe {
+            accumulate_block2_avx2(planes, lut_a, lut_b, m, acc_a, acc_b)
+        },
+        #[cfg(soar_avx512)]
+        // SAFETY: as above — AVX-512 F+BW+VBMI support and slice bounds
+        // are asserted by score_all_group_with before dispatch.
+        KernelKind::Avx512 => unsafe {
+            accumulate_block2_avx512(planes, lut_a, lut_b, m, acc_a, acc_b)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => accumulate_block2_portable(planes, lut_a, lut_b, m, acc_a, acc_b),
     }
 }
 
@@ -559,6 +957,110 @@ pub fn score_all_with(
         // scalar reference `adc_score_quantized`) must match it bit-for-bit.
         for j in 0..lanes {
             out[base + j] = cscore + (lut.bias + lut.scale * acc[j] as f32);
+        }
+    }
+    // serve-path: no-panic end
+}
+
+/// Multi-query grouped scan: score every candidate of one blocked posting
+/// list against several queries' quantized LUTs in a **single pass** over
+/// the nibble planes. See [`score_all_group_with`].
+pub fn score_all_group(
+    blocked: &BlockedCodes,
+    luts: &[QueryLut],
+    lut_idx: &[u32],
+    cscores: &[f32],
+    out: &mut [f32],
+) {
+    score_all_group_with(detect_kernel(), blocked, luts, lut_idx, cscores, out);
+}
+
+/// [`score_all_group`] with an explicit kernel (parity tests and benches).
+///
+/// Group member `g` uses `luts[lut_idx[g]]` with per-query base score
+/// `cscores[g]` and writes its scores to `out[g * blocked.len() ..]` —
+/// `out` must be exactly `lut_idx.len() * blocked.len()` long. Blocks
+/// iterate outermost and queries innermost, so each block's planes are
+/// fetched from memory once and stay L1-resident while every query
+/// consumes them; adjacent query pairs are additionally fused into the
+/// two-table `accumulate_block2` kernels (one plane load feeding both
+/// LUT registers). Every member's output is bit-identical to a
+/// [`score_all`] call with the same LUT: the accumulators are the same
+/// exact u16 sums and the reconstruction expression is shared.
+pub fn score_all_group_with(
+    kind: KernelKind,
+    blocked: &BlockedCodes,
+    luts: &[QueryLut],
+    lut_idx: &[u32],
+    cscores: &[f32],
+    out: &mut [f32],
+) {
+    let n = lut_idx.len();
+    assert_eq!(cscores.len(), n, "cscores/lut_idx length mismatch");
+    assert_eq!(out.len(), n * blocked.len, "out/group shape mismatch");
+    if n == 0 || blocked.len == 0 {
+        return;
+    }
+    // Keep the unsafe SIMD entry points unreachable with an unsupported
+    // kind — executing them on a CPU without the feature is UB.
+    assert!(kind.supported(), "kernel {} unsupported on this CPU", kind.name());
+    let m = blocked.m;
+    for &li in lut_idx {
+        let lut = &luts[li as usize];
+        assert!(lut.quantized, "score_all_group requires quantized LUTs");
+        assert!(lut.u8_lut.len() >= m * PLANE, "LUT/{m}-subspace mismatch");
+    }
+    // The quantization guard in build_query_lut keeps m ≤ 257; enforce it
+    // here too so hand-built LUTs cannot overflow the u16 accumulators.
+    assert!(m * (u8::MAX as usize) <= u16::MAX as usize);
+    // serve-path: no-panic begin (input contracts asserted above; the scan
+    // below must not reach an unwrap/expect)
+    let mut acc_a = [0u16; BLOCK];
+    let mut acc_b = [0u16; BLOCK];
+    let len = blocked.len;
+    let num_blocks = blocked.num_blocks();
+    for b in 0..num_blocks {
+        // Same forward-streaming prefetch as score_all — issued once per
+        // block, not once per (block, query): the whole point of the
+        // grouped scan is that queries after the first hit L1.
+        #[cfg(target_arch = "x86_64")]
+        if b + 1 < num_blocks {
+            let next = blocked.block_planes(b + 1);
+            let mut off = 0;
+            while off < next.len() && off < 256 {
+                // SAFETY: prefetch has no semantic effect; the address is
+                // in bounds of `next`.
+                unsafe {
+                    core::arch::x86_64::_mm_prefetch(
+                        next.as_ptr().add(off) as *const i8,
+                        core::arch::x86_64::_MM_HINT_T0,
+                    );
+                }
+                off += 64;
+            }
+        }
+        let planes = blocked.block_planes(b);
+        let base = b * BLOCK;
+        let lanes = BLOCK.min(len - base);
+        let mut g = 0;
+        while g + 1 < n {
+            let la = &luts[lut_idx[g] as usize];
+            let lb = &luts[lut_idx[g + 1] as usize];
+            accumulate_block2(kind, planes, &la.u8_lut, &lb.u8_lut, m, &mut acc_a, &mut acc_b);
+            // The same canonical reconstruction expression as score_all.
+            for j in 0..lanes {
+                out[g * len + base + j] = cscores[g] + (la.bias + la.scale * acc_a[j] as f32);
+                out[(g + 1) * len + base + j] =
+                    cscores[g + 1] + (lb.bias + lb.scale * acc_b[j] as f32);
+            }
+            g += 2;
+        }
+        if g < n {
+            let la = &luts[lut_idx[g] as usize];
+            accumulate_block(kind, planes, &la.u8_lut, m, &mut acc_a);
+            for j in 0..lanes {
+                out[g * len + base + j] = cscores[g] + (la.bias + la.scale * acc_a[j] as f32);
+            }
         }
     }
     // serve-path: no-panic end
@@ -651,6 +1153,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn group_scan_matches_single_query_bitwise() {
+        let mut rng = Rng::new(9);
+        // Group sizes straddling the pair fusion (odd tail, singleton) and
+        // shapes straddling the block size / odd-m remainders.
+        for &(m, len) in &[(1usize, 5usize), (4, 31), (7, 64), (16, 95), (33, 200)] {
+            let cb = m.div_ceil(2);
+            let codes = random_codes(&mut rng, len, cb);
+            let blocked = BlockedCodes::from_codes(&codes, len, cb, m);
+            let luts: Vec<QueryLut> = (0..5).map(|_| random_lut(&mut rng, m)).collect();
+            let cscores = [0.5f32, -1.25, 0.0, 2.0, 0.75];
+            for group in [&[2u32][..], &[0, 3], &[4, 1, 2], &[0, 1, 2, 3, 4]] {
+                for kind in available_kernels() {
+                    let mut out = vec![0.0f32; group.len() * len];
+                    let gs: Vec<f32> = group.iter().map(|&g| cscores[g as usize]).collect();
+                    score_all_group_with(kind, &blocked, &luts, group, &gs, &mut out);
+                    for (g, &li) in group.iter().enumerate() {
+                        let mut want = Vec::new();
+                        score_all_with(
+                            kind,
+                            &blocked,
+                            &luts[li as usize],
+                            cscores[li as usize],
+                            &mut want,
+                        );
+                        for i in 0..len {
+                            assert_eq!(
+                                want[i].to_bits(),
+                                out[g * len + i].to_bits(),
+                                "kernel {} m={m} group={group:?} g={g} i={i}",
+                                kind.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_scan_empty_group_and_list() {
+        let mut rng = Rng::new(10);
+        let codes = random_codes(&mut rng, 10, 4);
+        let blocked = BlockedCodes::from_codes(&codes, 10, 4, 8);
+        let luts = [random_lut(&mut rng, 8)];
+        // Empty group: no members, zero-length out.
+        score_all_group(&blocked, &luts, &[], &[], &mut []);
+        // Empty list: members but nothing to score.
+        let empty = BlockedCodes::from_codes(&[], 0, 4, 8);
+        score_all_group(&empty, &luts, &[0], &[1.0], &mut []);
+    }
+
+    #[test]
+    #[should_panic(expected = "quantized")]
+    fn group_scan_rejects_unquantized_member() {
+        let blocked = BlockedCodes::from_codes(&[0u8; 4], 1, 4, 8);
+        let luts = [QueryLut::sized(8)];
+        let mut out = vec![0.0f32; 1];
+        score_all_group(&blocked, &luts, &[0], &[0.0], &mut out);
     }
 
     #[test]

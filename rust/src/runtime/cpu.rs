@@ -5,24 +5,40 @@
 //! or a request shape exceeds every bucket, and (b) as the reference the
 //! runtime integration tests compare the PJRT path against.
 
-use crate::linalg::{dot, MatrixF32};
+use crate::linalg::{dot, matrix, MatrixF32};
 use crate::util::parallel::par_chunks_mut;
+
+/// Query rows per parallel work unit of [`centroid_scores_into`]. Matches
+/// the GEMM A-tile so one claimed chunk is exactly one tile sweep.
+const SCORE_ROW_BLOCK: usize = 8;
 
 /// Full MIPS score matrix `q @ cᵀ` — CPU analog of the `centroid_score`
 /// Pallas kernel.
 pub fn centroid_scores(q: &MatrixF32, c: &MatrixF32) -> MatrixF32 {
+    let mut out = MatrixF32::zeros(0, 0);
+    centroid_scores_into(q, c, &mut out);
+    out
+}
+
+/// [`centroid_scores`] into a caller-pooled matrix: `out` is resized to
+/// `q.rows() × c.rows()` (allocation-free once warm) and filled by the
+/// blocked [`matmul_nt`](crate::linalg::matmul_nt) kernel, parallelized
+/// over claim-based blocks of query rows. Each output element is the same
+/// [`dot`] reduction as the scalar loop, so results are bit-identical to
+/// the per-query path.
+pub fn centroid_scores_into(q: &MatrixF32, c: &MatrixF32, out: &mut MatrixF32) {
     assert_eq!(q.cols(), c.cols(), "dim mismatch");
     let rows = q.rows();
     let cols = c.rows();
-    let mut out = MatrixF32::zeros(rows, cols);
-    // Parallelize over queries; each row is an independent scan over C.
-    par_chunks_mut(out.as_mut_slice(), cols.max(1), |i, row| {
-        let qi = q.row(i);
-        for (j, cj) in c.iter_rows().enumerate() {
-            row[j] = dot(qi, cj);
-        }
+    out.resize(rows, cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    par_chunks_mut(out.as_mut_slice(), SCORE_ROW_BLOCK * cols, |blk, rows_out| {
+        let i0 = blk * SCORE_ROW_BLOCK;
+        let i1 = i0 + rows_out.len() / cols;
+        matrix::matmul_nt_rows(q, i0, i1, c, rows_out);
     });
-    out
 }
 
 /// SOAR assignment loss matrix — CPU analog of the `soar_assign` kernel:
@@ -80,6 +96,23 @@ mod tests {
                 assert!((s.row(i)[j] - dot(q.row(i), c.row(j))).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn scores_into_is_bitwise_scalar_and_reuses_buffer() {
+        // Big enough that the parallel path engages (> one row block).
+        let q = random(37, 24, 10);
+        let c = random(65, 24, 11);
+        let mut out = MatrixF32::zeros(0, 0);
+        centroid_scores_into(&q, &c, &mut out);
+        for i in 0..q.rows() {
+            for j in 0..c.rows() {
+                assert_eq!(out.row(i)[j].to_bits(), dot(q.row(i), c.row(j)).to_bits());
+            }
+        }
+        let ptr = out.as_slice().as_ptr();
+        centroid_scores_into(&q, &c, &mut out); // steady state: no realloc
+        assert_eq!(out.as_slice().as_ptr(), ptr);
     }
 
     #[test]

@@ -188,6 +188,42 @@ impl Engine {
         Ok(cpu::centroid_scores(q, centroids))
     }
 
+    /// [`Engine::centroid_scores`] into a caller-pooled matrix. The CPU
+    /// path fills `out` in place (allocation-free once warm); the PJRT
+    /// path copies its freshly materialized result into `out` (device
+    /// transfers allocate regardless, so pooling buys nothing there).
+    pub fn centroid_scores_into(
+        &self,
+        q: &MatrixF32,
+        centroids: &MatrixF32,
+        out: &mut MatrixF32,
+    ) -> Result<()> {
+        if q.cols() != centroids.cols() {
+            return Err(Error::Shape(format!(
+                "query dim {} != centroid dim {}",
+                q.cols(),
+                centroids.cols()
+            )));
+        }
+        if let Some(loaded) = self.pick("centroid_score", centroids.rows(), centroids.cols(), 0)
+        {
+            match self.run_score(loaded, q, centroids) {
+                Ok(m) => {
+                    self.note(Backend::Pjrt);
+                    out.resize(m.rows(), m.cols());
+                    out.as_mut_slice().copy_from_slice(m.as_slice());
+                    return Ok(());
+                }
+                Err(e) => {
+                    eprintln!("warning: pjrt centroid_scores failed ({e}); falling back");
+                }
+            }
+        }
+        self.note(Backend::CpuFallback);
+        cpu::centroid_scores_into(q, centroids, out);
+        Ok(())
+    }
+
     /// Top-t partitions per query: `(ids, scores)`, descending score.
     ///
     /// Preferred path: full score matrix (PJRT matmul artifact when a

@@ -17,8 +17,8 @@ use soar_ann::config::{
 };
 use soar_ann::data::synthetic::SyntheticConfig;
 use soar_ann::index::{
-    build_index, Collection, CollectionSearcher, IndexSnapshot, Search, SearchScratch, Searcher,
-    SnapshotSearcher,
+    build_index, BatchPool, Collection, CollectionSearcher, IndexSnapshot, Search, SearchScratch,
+    Searcher, SnapshotSearcher,
 };
 use soar_ann::linalg::topk::Scored;
 use soar_ann::runtime::Engine;
@@ -47,6 +47,24 @@ fn measured_allocs<S: Search + ?Sized>(
     for qi in 0..queries.rows() {
         searcher.search_into(queries.row(qi), params, scratch, out);
     }
+    CountingAllocator::allocations() - before
+}
+
+/// Run one warm-up batch plus one measured batch through the grouped
+/// segment-major executor and return the allocator-call delta of the
+/// measured batch. The warm-up sizes every pooled buffer: grouping
+/// tables, the score arena, the LUT slab, leased rerank scratches, and
+/// the per-query result rows.
+fn measured_batch_allocs<S: Search + ?Sized>(
+    searcher: &S,
+    queries: &soar_ann::linalg::MatrixF32,
+    params: &SearchParams,
+    pool: &mut BatchPool,
+) -> u64 {
+    searcher.search_batch_into(queries, params, pool).unwrap();
+    assert!(!pool.results()[0].0.is_empty(), "fixture must return results");
+    let before = CountingAllocator::allocations();
+    searcher.search_batch_into(queries, params, pool).unwrap();
     CountingAllocator::allocations() - before
 }
 
@@ -83,6 +101,9 @@ fn steady_state_queries_do_not_allocate() {
         let mut out = Vec::new();
         let allocs = measured_allocs(&searcher, &ds.queries, &params, &mut scratch, &mut out);
         assert_eq!(allocs, 0, "monolithic Searcher allocated on a warm query");
+        let mut pool = BatchPool::new();
+        let allocs = measured_batch_allocs(&searcher, &ds.queries, &params, &mut pool);
+        assert_eq!(allocs, 0, "grouped batch on Searcher allocated when warm");
     }
 
     // 2. Segmented snapshot + SnapshotSearcher.
@@ -93,6 +114,12 @@ fn steady_state_queries_do_not_allocate() {
         let mut out = Vec::new();
         let allocs = measured_allocs(&searcher, &ds.queries, &params, &mut scratch, &mut out);
         assert_eq!(allocs, 0, "SnapshotSearcher allocated on a warm query");
+        let mut pool = BatchPool::new();
+        let allocs = measured_batch_allocs(&searcher, &ds.queries, &params, &mut pool);
+        assert_eq!(
+            allocs, 0,
+            "grouped batch on SnapshotSearcher allocated when warm"
+        );
     }
 
     // 3. Sharded collection fan-out (background maintenance off: worker
@@ -118,6 +145,12 @@ fn steady_state_queries_do_not_allocate() {
         assert_eq!(
             allocs, 0,
             "CollectionSearcher fan-out (S={shards}) allocated on a warm query"
+        );
+        let mut pool = BatchPool::new();
+        let allocs = measured_batch_allocs(&searcher, &ds.queries, &params, &mut pool);
+        assert_eq!(
+            allocs, 0,
+            "grouped batch on CollectionSearcher (S={shards}) allocated when warm"
         );
     }
 }

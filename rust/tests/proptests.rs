@@ -293,6 +293,223 @@ fn prop_kmr_recall_monotone_in_budget() {
     });
 }
 
+/// First `nq` query rows as a standalone batch matrix.
+fn take_rows(m: &MatrixF32, nq: usize) -> MatrixF32 {
+    let mut sub = MatrixF32::zeros(nq, m.cols());
+    for i in 0..nq {
+        sub.row_mut(i).copy_from_slice(m.row(i));
+    }
+    sub
+}
+
+/// Grouped and per-query batch execution must agree on everything the
+/// scan order determines; only `code_bytes_streamed` may differ (the
+/// grouped executor charges each streamed list once per scan group).
+fn assert_stats_eq_except_bytes(
+    a: &soar_ann::index::SearchStats,
+    b: &soar_ann::index::SearchStats,
+    ctx: &str,
+) {
+    assert_eq!(a.partitions_probed, b.partitions_probed, "{ctx}");
+    assert_eq!(a.points_scanned, b.points_scanned, "{ctx}");
+    assert_eq!(a.duplicates_skipped, b.duplicates_skipped, "{ctx}");
+    assert_eq!(a.candidates_reranked, b.candidates_reranked, "{ctx}");
+    assert_eq!(a.tombstones_skipped, b.tombstones_skipped, "{ctx}");
+    assert_eq!(a.segments_scanned, b.segments_scanned, "{ctx}");
+    assert_eq!(a.lists_scanned, b.lists_scanned, "{ctx}");
+}
+
+#[test]
+fn prop_grouped_batch_bit_identical_to_per_query() {
+    use soar_ann::index::BatchPool;
+    check("grouped batch == per-query batch", 6, |g| {
+        let n = g.usize_in(400..1200);
+        let ds = SyntheticConfig::glove_like(n, 16, 24, g.seed).generate();
+        let engine = Engine::cpu();
+        let spill = *g.choose(&[
+            SpillMode::None,
+            SpillMode::Nearest,
+            SpillMode::Soar { lambda: 1.0 },
+        ]);
+        let cfg = IndexConfig {
+            num_partitions: g.usize_in(4..20),
+            spill,
+            ..Default::default()
+        };
+        let idx = build_index(&engine, &ds.data, &cfg).unwrap();
+        let searcher = Searcher::new(&idx, &engine);
+        let params = SearchParams {
+            k: g.usize_in(1..12),
+            top_t: g.usize_in(1..25),
+            rerank_budget: g.usize_in(20..200),
+        };
+        // One pool across every batch shape: sizes straddle the serial
+        // cutoff (nq <= 1 takes the per-query route) and include ragged
+        // tails relative to the LUT16 block size.
+        let mut pool = BatchPool::new();
+        for &nq in &[1usize, 2, 7, 8, 9, ds.num_queries()] {
+            let sub = take_rows(&ds.queries, nq);
+            let per_query = searcher.search_batch_per_query(&sub, &params).unwrap();
+            searcher.search_batch_into(&sub, &params, &mut pool).unwrap();
+            let grouped = pool.results();
+            assert_eq!(grouped.len(), per_query.len());
+            for (qi, ((a, st_a), (b, st_b))) in grouped.iter().zip(&per_query).enumerate() {
+                assert_eq!(a, b, "nq {nq} query {qi} (spill {spill:?})");
+                assert_stats_eq_except_bytes(st_a, st_b, &format!("nq {nq} query {qi}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mixed_model_snapshot_grouped_matches_per_query() {
+    use soar_ann::index::{BatchPool, DeltaSegment, IndexSnapshot, SealedSegment, SnapshotSearcher};
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    check("mixed-model grouped batch == per-query", 4, |g| {
+        let n = 2 * g.usize_in(150..400);
+        let ds = SyntheticConfig::glove_like(n, 16, 20, g.seed).generate();
+        let engine = Engine::cpu();
+        let cfg = IndexConfig {
+            num_partitions: g.usize_in(4..12),
+            spill: *g.choose(&[SpillMode::None, SpillMode::Soar { lambda: 1.0 }]),
+            ..Default::default()
+        };
+        // Two sealed segments over disjoint halves, trained separately so
+        // the snapshot carries two distinct models (per-model selection +
+        // per-model LUTs in the planner).
+        let half = n / 2;
+        let lo: Vec<usize> = (0..half).collect();
+        let hi: Vec<usize> = (half..n).collect();
+        let idx_lo = build_index(&engine, &ds.data.gather_rows(&lo), &cfg).unwrap();
+        let mut cfg_hi = cfg.clone();
+        cfg_hi.seed = cfg.seed.wrapping_add(g.seed | 1);
+        let idx_hi = build_index(&engine, &ds.data.gather_rows(&hi), &cfg_hi).unwrap();
+        let model_hi = idx_hi.model.clone();
+        let seg_lo = Arc::new(SealedSegment::from_index(Arc::new(idx_lo)));
+        let seg_hi = Arc::new(
+            SealedSegment::new(
+                Arc::new(idx_hi),
+                (half as u32..n as u32).collect(),
+                Arc::new(HashSet::new()),
+            )
+            .unwrap(),
+        );
+        let snap = IndexSnapshot::new(
+            vec![seg_lo, seg_hi],
+            Arc::new(DeltaSegment::empty(model_hi)),
+            Arc::new(HashSet::new()),
+            0,
+        );
+        snap.check_invariants().unwrap();
+        let searcher = SnapshotSearcher::new(&snap, &engine);
+        let params = SearchParams {
+            k: g.usize_in(1..12),
+            top_t: g.usize_in(1..15),
+            rerank_budget: g.usize_in(20..200),
+        };
+        let mut pool = BatchPool::new();
+        for &nq in &[2usize, 7, 9, ds.num_queries()] {
+            let sub = take_rows(&ds.queries, nq);
+            let per_query = searcher.search_batch_per_query(&sub, &params).unwrap();
+            searcher.search_batch_into(&sub, &params, &mut pool).unwrap();
+            let grouped = pool.results();
+            assert_eq!(grouped.len(), per_query.len());
+            for (qi, ((a, st_a), (b, st_b))) in grouped.iter().zip(&per_query).enumerate() {
+                assert_eq!(a, b, "nq {nq} query {qi}");
+                assert_stats_eq_except_bytes(st_a, st_b, &format!("nq {nq} query {qi}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_collection_grouped_batch_size_invariant() {
+    use soar_ann::config::{CollectionConfig, MutableConfig, ShardRouting};
+    use soar_ann::index::{BatchPool, Collection, CollectionSearcher, Search};
+    use std::sync::Arc;
+    check("collection batch results invariant to batch size", 3, |g| {
+        let n = g.usize_in(400..900);
+        let ds = SyntheticConfig::glove_like(n, 16, 20, g.seed).generate();
+        let engine = Arc::new(Engine::cpu());
+        let shards = *g.choose(&[1usize, 2, 4]);
+        let ccfg = CollectionConfig {
+            num_shards: shards,
+            routing: ShardRouting::Hash,
+            mutable: MutableConfig {
+                auto_compact: false,
+                ..Default::default()
+            },
+            background_compact: false,
+            maintenance: Default::default(),
+            durability: Default::default(),
+        };
+        let icfg = IndexConfig {
+            num_partitions: g.usize_in(4..16),
+            spill: *g.choose(&[
+                SpillMode::None,
+                SpillMode::Nearest,
+                SpillMode::Soar { lambda: 1.0 },
+            ]),
+            ..Default::default()
+        };
+        let c = Collection::build(engine.clone(), &ds.data, &icfg, ccfg).unwrap();
+        // Upserts populate delta segments and deletes add tombstones, so
+        // the grouped executor's delta scan + filtered-candidate paths
+        // are both on the line.
+        for i in 0..g.usize_in(1..8) {
+            let mut v = vec![0.0f32; 16];
+            g.rng().fill_gaussian(&mut v);
+            soar_ann::linalg::normalize(&mut v);
+            c.upsert((n + i) as u32, &v).unwrap();
+        }
+        for _ in 0..g.usize_in(1..5) {
+            let id = g.usize_in(0..n) as u32;
+            let _ = c.delete(id);
+        }
+        let snap = c.snapshot();
+        let searcher = CollectionSearcher::new(&snap, &engine);
+        let params = SearchParams {
+            k: g.usize_in(1..12),
+            top_t: g.usize_in(1..15),
+            rerank_budget: g.usize_in(20..200),
+        };
+        // Reference: every query served as its own batch of one.
+        let mut singles = Vec::new();
+        let mut ref_pool = BatchPool::new();
+        for qi in 0..ds.num_queries() {
+            let mut one = MatrixF32::zeros(1, ds.queries.cols());
+            one.row_mut(0).copy_from_slice(ds.queries.row(qi));
+            searcher.search_batch_into(&one, &params, &mut ref_pool).unwrap();
+            singles.push(ref_pool.results()[0].clone());
+        }
+        let mut pool = BatchPool::new();
+        for &nq in &[2usize, 7, 9, ds.num_queries()] {
+            let sub = take_rows(&ds.queries, nq);
+            searcher.search_batch_into(&sub, &params, &mut pool).unwrap();
+            let grouped = pool.results();
+            assert_eq!(grouped.len(), nq);
+            for (qi, (res, stats)) in grouped.iter().enumerate() {
+                assert_eq!(res, &singles[qi].0, "shards {shards} nq {nq} query {qi}");
+                assert_stats_eq_except_bytes(
+                    stats,
+                    &singles[qi].1,
+                    &format!("shards {shards} nq {nq} query {qi}"),
+                );
+            }
+        }
+        // On a single shard the trait single-query path is the ground
+        // truth; batched execution must reproduce it bitwise.
+        if shards == 1 {
+            let mut scratch = searcher.new_scratch();
+            for qi in 0..ds.num_queries() {
+                let (res, _) = searcher.search(ds.queries.row(qi), &params, &mut scratch);
+                assert_eq!(res, singles[qi].0, "query {qi}");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_dedup_set_behaves_like_hashset() {
     use soar_ann::coordinator::DedupSet;

@@ -69,6 +69,12 @@ fn classify(key: &str) -> Option<MetricKind> {
     if k.contains("allocs") {
         return Some(MetricKind::Allocs);
     }
+    // Streamed-bytes volume: lower is better (the grouped executor's
+    // whole point is shrinking bytes/query). Checked before the generic
+    // rules so a future `bytes_streamed_per_sec` spelling can't flip it.
+    if k.contains("bytes_streamed") {
+        return Some(MetricKind::LowerBetter);
+    }
     if k.ends_with("_qps")
         || k == "qps"
         || k.starts_with("qps_")
@@ -100,6 +106,7 @@ const DISCRIMINATORS: &[&str] = &[
     "segments",
     "config",
     "publish_coalesce",
+    "batch",
     "bench",
 ];
 
@@ -471,7 +478,19 @@ mod tests {
         assert_eq!(classify("recall_after_retrain"), Some(MetricKind::Recall));
         assert_eq!(classify("auto_recall_recovered"), Some(MetricKind::Recall));
         assert_eq!(classify("allocs_per_query"), Some(MetricKind::Allocs));
+        assert_eq!(classify("allocs_per_batch"), Some(MetricKind::Allocs));
         assert_eq!(classify("single_query_p50_us"), Some(MetricKind::LowerBetter));
+        assert_eq!(
+            classify("speedup_batch_vs_serial"),
+            Some(MetricKind::HigherBetter)
+        );
+        assert_eq!(classify("serial_loop_qps"), Some(MetricKind::HigherBetter));
+        assert_eq!(
+            classify("code_bytes_streamed_per_query"),
+            Some(MetricKind::LowerBetter)
+        );
+        // `batch` itself is a discriminator, not a metric.
+        assert_eq!(classify("batch"), None);
         // Not gated: counts, shapes, config echoes.
         assert_eq!(classify("n"), None);
         assert_eq!(classify("dim"), None);

@@ -27,6 +27,13 @@
 //! * **D. `[hotpath-no-alloc]`** — no allocating construct inside a
 //!   `hot-path: no-alloc` region (the original hotpath_lint rule; the
 //!   runtime counterpart is `rust/tests/alloc.rs`).
+//! * **E. `[marker-coverage]`** — the batched-execution kernels must
+//!   keep their marker regions: every file in `REQUIRED_HOT_COVERAGE`
+//!   needs at least one `hot-path: no-alloc` region (grouped scans,
+//!   replay, shard merge, GEMM tile loops) and every file in
+//!   `REQUIRED_SERVE_COVERAGE` at least one `serve-path: no-panic`
+//!   region (LUT16 scan kernels, top-k admission). Deleting a marker
+//!   from a kernel must break CI, not quietly shrink rule B/D coverage.
 //!
 //! The lint fails when zero regions of either marker kind are found —
 //! renaming the markers must break CI, not silently disarm the rules.
@@ -85,12 +92,38 @@ const SYNC_EXEMPT: &[&str] = &["util/sync.rs", "util/loom.rs"];
 /// How far rule A scans upward (in lines) looking for a SAFETY comment.
 const SAFETY_SCAN_CAP: usize = 12;
 
+/// Rule E: files that must each carry at least one `hot-path: no-alloc`
+/// region — the zero-alloc kernels of the batched query path (grouped
+/// segment-major scans + per-query replay, the collection fan-out and
+/// batch merge, and the blocked GEMM feeding partition selection).
+const REQUIRED_HOT_COVERAGE: &[&str] = &[
+    "index/searcher.rs",
+    "index/collection.rs",
+    "linalg/matrix.rs",
+];
+
+/// Rule E: files that must each carry at least one `serve-path:
+/// no-panic` region — the per-candidate scan and admission kernels.
+const REQUIRED_SERVE_COVERAGE: &[&str] = &["quant/lut16.rs", "linalg/topk.rs"];
+
 #[derive(Default)]
 struct Report {
     violations: Vec<String>,
     hot_regions: usize,
     serve_regions: usize,
+    /// Files (normalized paths) containing ≥1 region of each kind.
+    hot_files: Vec<String>,
+    serve_files: Vec<String>,
     files: usize,
+}
+
+/// Rule E: which required suffixes have no region in `covered`?
+fn missing_coverage<'a>(required: &[&'a str], covered: &[String]) -> Vec<&'a str> {
+    required
+        .iter()
+        .filter(|suffix| !covered.iter().any(|f| f.ends_with(*suffix)))
+        .copied()
+        .collect()
 }
 
 fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -216,6 +249,9 @@ fn lint_file(path: &Path, text: &str, report: &mut Report) {
             }
             hot_open = Some(lineno);
             report.hot_regions += 1;
+            if !report.hot_files.contains(&rel) {
+                report.hot_files.push(rel.clone());
+            }
             continue;
         }
         if line.contains(HOT_END) {
@@ -235,6 +271,9 @@ fn lint_file(path: &Path, text: &str, report: &mut Report) {
             }
             serve_open = Some(lineno);
             report.serve_regions += 1;
+            if !report.serve_files.contains(&rel) {
+                report.serve_files.push(rel.clone());
+            }
             continue;
         }
         if line.contains(SERVE_END) {
@@ -404,6 +443,23 @@ fn self_test() -> Result<(), String> {
         if report.hot_regions == 0 || report.serve_regions == 0 {
             return Err("conforming tree did not count its regions".to_string());
         }
+        // Rule E plumbing: the scratch tree has none of the required
+        // kernel files, so every required suffix must be reported
+        // missing; a tree that does cover them must report none.
+        if missing_coverage(REQUIRED_HOT_COVERAGE, &report.hot_files).len()
+            != REQUIRED_HOT_COVERAGE.len()
+            || missing_coverage(REQUIRED_SERVE_COVERAGE, &report.serve_files).len()
+                != REQUIRED_SERVE_COVERAGE.len()
+        {
+            return Err("marker-coverage: scratch tree spuriously satisfied coverage".to_string());
+        }
+        let covered: Vec<String> = REQUIRED_HOT_COVERAGE
+            .iter()
+            .map(|s| format!("rust/src/{s}"))
+            .collect();
+        if !missing_coverage(REQUIRED_HOT_COVERAGE, &covered).is_empty() {
+            return Err("marker-coverage: suffix match failed on covered paths".to_string());
+        }
         // Now seed one violation per rule and require each tag to fire.
         for (name, _, contents) in seeded {
             std::fs::write(src.join(name), contents)
@@ -433,7 +489,10 @@ fn main() {
     if arg.as_deref() == Some("--self-test") {
         match self_test() {
             Ok(()) => {
-                println!("invariant_lint self-test passed: all 4 rules fire on seeded violations");
+                println!(
+                    "invariant_lint self-test passed: all rules fire on seeded violations \
+                     and the marker-coverage matcher behaves"
+                );
                 return;
             }
             Err(e) => {
@@ -459,6 +518,18 @@ fn main() {
         );
         std::process::exit(1);
     }
+    // Rule E: the batched-execution kernels must keep their regions.
+    let hot_missing = missing_coverage(REQUIRED_HOT_COVERAGE, &report.hot_files);
+    let serve_missing = missing_coverage(REQUIRED_SERVE_COVERAGE, &report.serve_files);
+    if !hot_missing.is_empty() || !serve_missing.is_empty() {
+        eprintln!(
+            "invariant_lint FAILED [marker-coverage]: kernel files lost their marker \
+             regions — no-alloc missing in {hot_missing:?}, no-panic missing in \
+             {serve_missing:?}. Restore the markers (or update the required-coverage \
+             lists deliberately)."
+        );
+        std::process::exit(1);
+    }
     if !report.violations.is_empty() {
         eprintln!("invariant_lint FAILED: {} violation(s):", report.violations.len());
         for v in &report.violations {
@@ -467,8 +538,12 @@ fn main() {
         std::process::exit(1);
     }
     println!(
-        "invariant_lint passed: {} files, {} no-alloc region(s), {} no-panic region(s), \
-         all unsafe blocks documented, facade clean",
-        report.files, report.hot_regions, report.serve_regions
+        "invariant_lint passed: {} files, {} no-alloc region(s) in {} file(s), \
+         {} no-panic region(s) in {} file(s), all unsafe blocks documented, facade clean",
+        report.files,
+        report.hot_regions,
+        report.hot_files.len(),
+        report.serve_regions,
+        report.serve_files.len()
     );
 }
